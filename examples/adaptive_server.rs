@@ -1,0 +1,45 @@
+//! END-TO-END DRIVER (DESIGN.md §E2E): the full adaptive-library loop on
+//! the real device, proving all three layers compose.
+//!
+//!   L1/L2  Pallas GEMM kernels, AOT-lowered to HLO text (build time)
+//!   L3     this binary: tune on real PJRT wall-clock, train the CART
+//!          tree, serve a batched request stream through the coordinator
+//!          under the model-driven policy vs the default policy.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example adaptive_server [N_REQUESTS]
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md §E2E.
+
+use std::path::Path;
+
+use adaptlib::experiments::e2e;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Path::new("artifacts");
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+
+    println!("== off-line phase: tuning the roster on CPU PJRT (real wall-clock) ==");
+    let t0 = std::time::Instant::now();
+    let report = e2e::run(artifacts, n, 3)?;
+    println!("{}", report.render());
+    println!(
+        "total experiment wall time: {:.1}s ({} requests per policy)",
+        t0.elapsed().as_secs_f64(),
+        n
+    );
+
+    // The point of the paper: the learned selector should not lose to the
+    // static default on its own training distribution.
+    let speedup = report.speedup();
+    if speedup >= 1.0 {
+        println!("model-driven >= default ({speedup:.2}x): adaptive selection pays off");
+    } else {
+        println!("WARNING: model-driven slower than default ({speedup:.2}x)");
+    }
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Domain example: the paper's motivating workload — the GEMM sequence of
+//! a deep network (AntonNet-style).  Profiles an AlexNet-like inference
+//! GEMM stream through the runtime, comparing the model-driven selection
+//! against the default policy per layer, on real PJRT measurements.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example deepnet_profile
+//! ```
+
+use std::path::Path;
+
+use adaptlib::config::Triple;
+use adaptlib::coordinator::{DefaultPolicy, ModelPolicy, SelectPolicy};
+use adaptlib::experiments::e2e;
+use adaptlib::runtime::{GemmInput, GemmRuntime, PjrtBackend};
+use adaptlib::util::prng::Rng;
+
+/// A toy convnet inference as a GEMM stream (im2col shapes scaled to the
+/// artifact roster's bucket range).
+fn network_layers() -> Vec<(&'static str, Triple)> {
+    vec![
+        ("conv1 (im2col)", Triple::new(96, 128, 128)),
+        ("conv2 (im2col)", Triple::new(128, 128, 128)),
+        ("conv3 (im2col)", Triple::new(200, 50, 100)),
+        ("conv4 (im2col)", Triple::new(50, 200, 75)),
+        ("fc6", Triple::new(128, 128, 128)),
+        ("fc7 bias-ish", Triple::new(100, 100, 1)),
+        ("classifier", Triple::new(100, 100, 100)),
+    ]
+}
+
+fn run_layer(
+    rt: &mut GemmRuntime,
+    policy: &dyn SelectPolicy,
+    t: Triple,
+    rng: &mut Rng,
+) -> anyhow::Result<(String, std::time::Duration)> {
+    let (m, n, k) = (t.m as usize, t.n as usize, t.k as usize);
+    let gen = |rng: &mut Rng, len: usize| -> Vec<f32> {
+        (0..len).map(|_| rng.f32() - 0.5).collect()
+    };
+    let (a, b, c) = (gen(rng, m * k), gen(rng, k * n), gen(rng, m * n));
+    let cfg = policy.select(t);
+    let artifact = rt
+        .manifest
+        .artifact_for_config(&cfg, t)
+        .or_else(|| rt.manifest.eligible(t).first().copied())
+        .ok_or_else(|| anyhow::anyhow!("no artifact for {t}"))?
+        .name
+        .clone();
+    let input = GemmInput { m, n, k, a: &a, b: &b, c: &c, alpha: 1.0, beta: 0.0 };
+    rt.gemm(&artifact, &input)?; // warm (compile)
+    let out = rt.gemm(&artifact, &input)?;
+    Ok((artifact, out.total_time()))
+}
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Path::new("artifacts");
+    println!("== off-line: tune + train on the real device ==");
+    let model = e2e::offline_train(artifacts, 2)?;
+    let model_policy = ModelPolicy::new(&model.tree, &model.classes);
+    let backend = PjrtBackend::open(artifacts)?;
+    let default_policy = DefaultPolicy::from_roster(&backend.roster_configs())
+        .expect("roster has both kernels");
+    drop(backend);
+
+    let mut rt = GemmRuntime::open(artifacts)?;
+    let mut rng = Rng::new(99);
+    println!("\n{:<18} {:>12} {:>12} {:>8}  artifacts", "layer", "model", "default", "speedup");
+    let mut total_model = 0.0f64;
+    let mut total_default = 0.0f64;
+    for (name, t) in network_layers() {
+        let (art_m, d_model) = run_layer(&mut rt, &model_policy, t, &mut rng)?;
+        let (art_d, d_default) = run_layer(&mut rt, &default_policy, t, &mut rng)?;
+        let s_m = d_model.as_secs_f64();
+        let s_d = d_default.as_secs_f64();
+        total_model += s_m;
+        total_default += s_d;
+        println!(
+            "{:<18} {:>10.2}ms {:>10.2}ms {:>7.2}x  {} | {}",
+            name,
+            s_m * 1e3,
+            s_d * 1e3,
+            s_d / s_m,
+            art_m,
+            art_d
+        );
+    }
+    println!(
+        "\nnetwork total: model {:.2}ms vs default {:.2}ms -> {:.2}x",
+        total_model * 1e3,
+        total_default * 1e3,
+        total_default / total_model
+    );
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! The full *off-line phase* of the paper on a simulated device:
+//! dataset -> exhaustive tuning -> 80/20 split -> decision-tree training
+//! -> evaluation (accuracy, DTPR, DTTR) -> code generation.
+//!
+//! ```bash
+//! cargo run --release --example offline_pipeline
+//! ```
+
+use adaptlib::codegen;
+use adaptlib::dataset::DatasetKind;
+use adaptlib::device::DeviceId;
+use adaptlib::experiments::Context;
+
+fn main() -> anyhow::Result<()> {
+    let mut ctx = Context::new();
+    ctx.verbose = true;
+
+    // Off-line phase for po2 @ P100 (the paper's smallest full pipeline).
+    let sweep = ctx.sweep(DeviceId::NvidiaP100, DatasetKind::Po2);
+    println!(
+        "dataset po2: {} triples, {} classes ({} xgemm / {} direct)",
+        sweep.labeled.len(),
+        sweep.labeled.classes.len(),
+        sweep.labeled.classes.unique_per_kernel().0,
+        sweep.labeled.classes.unique_per_kernel().1,
+    );
+
+    println!("\n(H, L) sweep — every model:");
+    for row in &sweep.models {
+        println!(
+            "  {:<12} acc {:>5.1}%  DTPR {:.3}  DTTR {:.3}  ({} leaves, depth {})",
+            row.scores.model,
+            row.scores.accuracy,
+            row.scores.dtpr,
+            row.scores.dttr,
+            row.stats.n_leaves,
+            row.stats.height,
+        );
+    }
+
+    let best = sweep.best_model();
+    println!("\nbest model (highest DTPR): {}", best.scores.model);
+
+    // Code generation: the artifact the paper compiles into CLBlast.
+    let rust_src = codegen::emit_rust(&best.tree, &sweep.labeled.classes);
+    let cpp_src = codegen::emit_cpp(&best.tree, &sweep.labeled.classes);
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/selector_po2_p100.rs", &rust_src)?;
+    std::fs::write("results/selector_po2_p100.cpp", &cpp_src)?;
+    println!(
+        "generated selectors: results/selector_po2_p100.rs ({} B), .cpp ({} B)",
+        rust_src.len(),
+        cpp_src.len()
+    );
+
+    // Sanity: the generated rust makes the same decisions as the tree.
+    let t = adaptlib::config::Triple::new(512, 512, 512);
+    let from_src = codegen::eval_generated_rust(&rust_src, t).unwrap();
+    assert_eq!(from_src, best.tree.predict(t));
+    println!("generated selector verified against the tree. done.");
+    Ok(())
+}

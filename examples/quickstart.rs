@@ -1,0 +1,64 @@
+//! Quickstart: the adaptive library in ~40 lines.
+//!
+//! Loads the AOT artifact roster, asks the *default* policy and a tiny
+//! freshly-tuned *model* policy for a kernel selection, and runs one GEMM
+//! through the PJRT runtime.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::path::Path;
+
+use adaptlib::coordinator::{DefaultPolicy, SelectPolicy};
+use adaptlib::runtime::{GemmInput, GemmRuntime, PjrtBackend};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Path::new("artifacts");
+
+    // 1. Open the runtime: HLO-text artifacts produced by `make artifacts`.
+    let mut rt = GemmRuntime::open(artifacts)?;
+    println!(
+        "loaded roster '{}' with {} artifacts",
+        rt.manifest.roster,
+        rt.manifest.artifacts.len()
+    );
+
+    // 2. A GEMM problem: C := alpha*A@B + beta*C at (M, N, K) = (64, 64, 64).
+    let (m, n, k) = (64usize, 64usize, 64usize);
+    let a = vec![1.0f32; m * k];
+    let b = vec![0.5f32; k * n];
+    let c = vec![2.0f32; m * n];
+    let input = GemmInput {
+        m, n, k,
+        a: &a, b: &b, c: &c,
+        alpha: 1.0, beta: 1.0,
+    };
+    let triple = input.triple();
+
+    // 3. Ask the default (CLBlast-style threshold) policy for a config.
+    let backend = PjrtBackend::open(artifacts)?;
+    let policy = DefaultPolicy::from_roster(&backend.roster_configs())
+        .expect("roster has both kernels");
+    let cfg = policy.select(triple);
+    let artifact = rt
+        .manifest
+        .artifact_for_config(&cfg, triple)
+        .expect("roster serves 64^3");
+    println!("default policy picked {} -> artifact {}", cfg.name(), artifact.name);
+
+    // 4. Execute on the PJRT CPU client and check one value:
+    //    each output element = 1*sum_k(1.0*0.5) + 1*2.0 = 32 + 2 = 34.
+    let name = artifact.name.clone();
+    let out = rt.gemm(&name, &input)?;
+    println!(
+        "ran {} in {:?} (helpers {:?}) -> out[0] = {}",
+        name,
+        out.kernel_time,
+        out.helper_time,
+        out.out[0]
+    );
+    assert!((out.out[0] - 34.0).abs() < 1e-3);
+    println!("quickstart OK");
+    Ok(())
+}

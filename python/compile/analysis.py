@@ -1,0 +1,143 @@
+"""L1 performance analysis: VMEM footprint and MXU-utilization estimates
+per kernel configuration — the structural profile backing DESIGN.md §Perf
+(interpret=True gives no TPU wallclock; tile shapes are what we can and
+do reason about).
+
+Usage (build-time tooling):
+
+    python -m compile.analysis            # report for the AOT roster
+    python -m compile.analysis --all      # include non-roster examples
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from .kernels.config import DirectConfig, GemmConfig
+
+#: TPU v4-ish structural constants the estimates are phrased against.
+MXU_DIM = 128          # systolic array edge (lanes)
+SUBLANE = 8            # f32 sublane granularity
+VMEM_BYTES = 16 * 2**20
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelProfile:
+    """Structural performance profile of one configuration."""
+
+    name: str
+    #: Bytes of VMEM live per grid step (blocks + scratch).
+    vmem_bytes: int
+    #: Fraction of the VMEM budget used.
+    vmem_fraction: float
+    #: Estimated MXU utilization of the inner dot(s), per dimension.
+    mxu_m: float
+    mxu_n: float
+    mxu_k: float
+    #: Geometric-mean utilization (the headline estimate).
+    mxu_overall: float
+    #: HBM bytes moved per useful FLOP (arithmetic intensity inverse),
+    #: for a reference bucket — lower is better.
+    bytes_per_flop: float
+
+    def row(self) -> list:
+        return [
+            self.name,
+            self.vmem_bytes,
+            f"{self.vmem_fraction:.3%}",
+            f"{self.mxu_overall:.2f}",
+            f"{self.bytes_per_flop:.4f}",
+        ]
+
+
+def _dim_utilization(tile: int) -> float:
+    """Utilization of one MXU dimension by a tile edge: full when the
+    edge covers the 128-lane array, proportional below."""
+    return min(1.0, tile / MXU_DIM)
+
+
+def profile_xgemm(cfg: GemmConfig, bucket=(256, 256, 256)) -> KernelProfile:
+    """Profile a tiled (indirect) configuration over a reference bucket."""
+    cfg.validate()
+    mb, nb, kb = bucket
+    vmem = cfg.vmem_bytes()
+    # Inner dot: (MWG x KWG) @ (KWG x NWG) feeding the MXU.
+    mxu_m = _dim_utilization(cfg.mwg)
+    mxu_n = _dim_utilization(cfg.nwg)
+    mxu_k = _dim_utilization(cfg.kwg)
+    overall = (mxu_m * mxu_n * mxu_k) ** (1 / 3)
+    # HBM traffic per CLBlast-style tile re-reads (see rust device::sim).
+    a = mb * kb * (nb // cfg.nwg)
+    b = kb * nb * (mb // cfg.mwg)
+    c = mb * nb
+    flops = 2 * mb * nb * kb
+    return KernelProfile(
+        name=cfg.name(),
+        vmem_bytes=vmem,
+        vmem_fraction=vmem / VMEM_BYTES,
+        mxu_m=mxu_m,
+        mxu_n=mxu_n,
+        mxu_k=mxu_k,
+        mxu_overall=overall,
+        bytes_per_flop=4 * (a + b + c) / flops,
+    )
+
+
+def profile_direct(cfg: DirectConfig, shape=(128, 128, 128)) -> KernelProfile:
+    """Profile a direct configuration over a reference logical shape."""
+    cfg.validate()
+    m, n, k = shape
+    t = cfg.wgd
+    mp = -(-m // t) * t
+    np_ = -(-n // t) * t
+    kp = -(-k // t) * t
+    vmem = cfg.vmem_bytes()
+    u = _dim_utilization(t)
+    a = mp * kp * (np_ // t)
+    b = kp * np_ * (mp // t)
+    c = mp * np_
+    flops = 2 * m * n * k  # useful flops only
+    return KernelProfile(
+        name=cfg.name(),
+        vmem_bytes=vmem,
+        vmem_fraction=vmem / VMEM_BYTES,
+        mxu_m=u,
+        mxu_n=u,
+        mxu_k=u,
+        mxu_overall=u,
+        bytes_per_flop=4 * (a + b + c) / flops,
+    )
+
+
+def roster_report(include_all: bool = False) -> list[KernelProfile]:
+    """Profiles for every configuration in the AOT roster."""
+    from . import aot
+
+    profiles = [profile_xgemm(cfg) for cfg in aot.XGEMM_CONFIGS]
+    profiles += [profile_direct(cfg) for cfg in aot.DIRECT_CONFIGS]
+    if include_all:
+        profiles.append(profile_xgemm(GemmConfig()))
+        profiles.append(profile_direct(DirectConfig()))
+    return profiles
+
+
+def render(profiles: list[KernelProfile]) -> str:
+    header = ["config", "vmem B", "vmem %", "MXU util", "bytes/flop"]
+    rows = [p.row() for p in profiles]
+    widths = [max(len(str(r[i])) for r in [header] + rows) for i in range(5)]
+    out = []
+    for r in [header] + rows:
+        out.append("  ".join(str(c).rjust(w) for c, w in zip(r, widths)))
+    return "\n".join(out)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--all", action="store_true")
+    args = p.parse_args()
+    print(render(roster_report(include_all=args.all)))
+
+
+if __name__ == "__main__":
+    main()

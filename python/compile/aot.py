@@ -1,0 +1,185 @@
+"""AOT driver: lower the GEMM artifact roster to HLO text + manifest.json.
+
+Run once at build time (``make artifacts``); the rust coordinator is
+self-contained afterwards.  Python is never on the request path.
+
+Roster layout (DESIGN.md §5):
+
+* ``xgemm_direct`` artifacts — exact logical (M, N, K) shapes used by the
+  examples/benches; arbitrary shapes work via fused in-graph padding.
+* ``xgemm`` (indirect) artifacts — power-of-two padded *buckets*; the
+  rust coordinator pads operands to the bucket on the host (the measured
+  O(n^2) helper cost mirroring CLBlast's pad/transpose kernels).
+
+``manifest.json`` records every artifact with its kernel, configuration,
+shapes and file, and is the single source of truth for the rust runtime.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from .kernels.config import DirectConfig, GemmConfig
+from .model import lower_direct, lower_indirect
+
+MANIFEST_VERSION = 1
+
+# --------------------------------------------------------------------------
+# Roster definition
+# --------------------------------------------------------------------------
+
+# Indirect (xgemm) tuning configurations: the algorithmic variants the
+# decision tree selects among on the real (CPU-PJRT measured) device.
+XGEMM_CONFIGS = [
+    GemmConfig(mwg=64, nwg=64, kwg=32, mdimc=16, ndimc=16,
+               vwm=4, vwn=4, sa=1, sb=1),
+    GemmConfig(mwg=128, nwg=64, kwg=32, mdimc=32, ndimc=16,
+               vwm=4, vwn=2, sa=0, sb=0),
+    GemmConfig(mwg=32, nwg=32, kwg=64, mdimc=8, ndimc=8,
+               vwm=2, vwn=2, sa=0, sb=1),
+]
+
+# Direct (xgemm_direct) configurations.
+DIRECT_CONFIGS = [
+    DirectConfig(wgd=32, mdimcd=8, ndimcd=8, vwmd=2, vwnd=2,
+                 kwid=2, pada=1, padb=1),
+    DirectConfig(wgd=16, mdimcd=8, ndimcd=8, vwmd=1, vwnd=1,
+                 kwid=2, pada=1, padb=0),
+]
+
+# Padded buckets for the indirect path (must divide every XGEMM config's
+# tiles: lcm(MWG)=128 on M, lcm(NWG)=64 on N, lcm(KWG)=64 on K).
+BUCKETS_SMALL = [
+    (128, 128, 128),
+    (256, 256, 256),
+    (256, 128, 256),
+    (128, 256, 128),
+]
+BUCKETS_FULL = BUCKETS_SMALL + [
+    (512, 512, 512),
+    (512, 256, 128),
+    (128, 128, 512),
+]
+
+# Exact logical shapes for the direct path (example/bench workloads,
+# including AntonNet-style rectangular and degenerate-K cases).
+DIRECT_SHAPES_SMALL = [
+    (64, 64, 64),
+    (128, 128, 128),
+    (200, 50, 100),
+    (50, 200, 75),
+    (31, 31, 31),
+    (100, 100, 1),
+]
+DIRECT_SHAPES_FULL = DIRECT_SHAPES_SMALL + [
+    (96, 96, 96),
+    (128, 64, 256),
+    (256, 256, 64),
+    (257, 129, 65),
+    (16, 1024, 512),
+]
+
+# Transpose-case coverage (direct kernel only; CLBlast handles transposes
+# in the indirect path with helper kernels, we fold them into the graph).
+TRANS_CASES = [
+    ((64, 64, 64), True, False),
+    ((64, 64, 64), False, True),
+]
+
+
+def direct_artifact_name(cfg: DirectConfig, m, n, k, ta=False, tb=False):
+    t = ("_ta" if ta else "") + ("_tb" if tb else "")
+    return f"direct_{cfg.name()}_{m}x{n}x{k}{t}"
+
+
+def indirect_artifact_name(cfg: GemmConfig, mb, nb, kb):
+    return f"indirect_{cfg.name()}_{mb}x{nb}x{kb}"
+
+
+def build_roster(roster: str):
+    """Yield (name, kind, config, shape, trans) artifact descriptors."""
+    buckets = BUCKETS_FULL if roster == "full" else BUCKETS_SMALL
+    dshapes = DIRECT_SHAPES_FULL if roster == "full" else DIRECT_SHAPES_SMALL
+    out = []
+    for cfg in DIRECT_CONFIGS:
+        for (m, n, k) in dshapes:
+            out.append((direct_artifact_name(cfg, m, n, k), "xgemm_direct",
+                        cfg, (m, n, k), (False, False)))
+    # Transpose cases: first direct config only (coverage, not a sweep).
+    cfg0 = DIRECT_CONFIGS[0]
+    for (shape, ta, tb) in TRANS_CASES:
+        m, n, k = shape
+        out.append((direct_artifact_name(cfg0, m, n, k, ta, tb),
+                    "xgemm_direct", cfg0, shape, (ta, tb)))
+    for cfg in XGEMM_CONFIGS:
+        for (mb, nb, kb) in buckets:
+            if mb % cfg.mwg or nb % cfg.nwg or kb % cfg.kwg:
+                continue  # config cannot tile this bucket
+            out.append((indirect_artifact_name(cfg, mb, nb, kb), "xgemm",
+                        cfg, (mb, nb, kb), (False, False)))
+    return out
+
+
+def emit(out_dir: str, roster: str, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    descriptors = build_roster(roster)
+    t_all = time.time()
+    for i, (name, kind, cfg, shape, (ta, tb)) in enumerate(descriptors):
+        t0 = time.time()
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        if kind == "xgemm_direct":
+            m, n, k = shape
+            text = lower_direct(cfg, m, n, k, trans_a=ta, trans_b=tb)
+            entry = {
+                "name": name, "kernel": kind, "file": fname,
+                "m": m, "n": n, "k": k,
+                "trans_a": ta, "trans_b": tb,
+                "config": cfg.to_dict(),
+            }
+        else:
+            mb, nb, kb = shape
+            text = lower_indirect(cfg, mb, nb, kb)
+            entry = {
+                "name": name, "kernel": kind, "file": fname,
+                "mb": mb, "nb": nb, "kb": kb,
+                "config": cfg.to_dict(),
+            }
+        with open(path, "w") as f:
+            f.write(text)
+        entry["hlo_bytes"] = len(text)
+        entries.append(entry)
+        if verbose:
+            print(f"[{i + 1}/{len(descriptors)}] {name} "
+                  f"({len(text)} chars, {time.time() - t0:.2f}s)",
+                  file=sys.stderr)
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "roster": roster,
+        "dtype": "f32",
+        "artifacts": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    if verbose:
+        print(f"wrote {len(entries)} artifacts + manifest.json to {out_dir} "
+              f"in {time.time() - t_all:.1f}s", file=sys.stderr)
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--roster", choices=("small", "full"), default="full")
+    p.add_argument("-q", "--quiet", action="store_true")
+    args = p.parse_args()
+    emit(args.out_dir, args.roster, verbose=not args.quiet)
+
+
+if __name__ == "__main__":
+    main()

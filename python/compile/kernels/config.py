@@ -1,0 +1,140 @@
+"""Tuning-parameter configurations for the Pallas GEMM kernel family.
+
+This is the Python half of the shared configuration vocabulary; the rust
+side (`rust/src/config/`) models the *full* CLBlast-style search space
+(14 parameters for xgemm, 9 for xgemm_direct — Table 1 of the paper).
+Only the subset that changes the generated HLO lives here:
+
+  MWG, NWG, KWG   -- BlockSpec tiles: the HBM<->VMEM schedule
+  MDIMC, NDIMC    -- "thread" decomposition; determines the inner
+                     register tile MWI = MWG/MDIMC, NWI = NWG/NDIMC
+  VWM, VWN        -- vector widths: legality/alignment only on TPU (the
+                     MXU replaces per-thread vectorization)
+  SA, SB          -- stage the A / B block through VMEM scratch
+
+The remaining CLBlast parameters (MDIMA, NDIMB, KWI, STRM, STRN) affect
+only the OpenCL thread layout, which has no analogue once the MXU owns
+the inner tile; they are carried by the rust search space for Table 1
+fidelity but are not part of the kernel's identity here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+class IllegalConfig(ValueError):
+    """Raised when a configuration violates a structural constraint."""
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmConfig:
+    """A single point in the xgemm tuning space (Pallas-relevant subset)."""
+
+    mwg: int = 64
+    nwg: int = 64
+    kwg: int = 32
+    mdimc: int = 16
+    ndimc: int = 16
+    vwm: int = 1
+    vwn: int = 1
+    sa: int = 0
+    sb: int = 0
+
+    @property
+    def mwi(self) -> int:
+        """Inner (register) tile rows, CLBlast's MWI = MWG / MDIMC."""
+        return self.mwg // self.mdimc
+
+    @property
+    def nwi(self) -> int:
+        """Inner (register) tile cols, CLBlast's NWI = NWG / NDIMC."""
+        return self.nwg // self.ndimc
+
+    def validate(self) -> None:
+        """Structural legality (device limits are checked on the rust side)."""
+        if self.mwg <= 0 or self.nwg <= 0 or self.kwg <= 0:
+            raise IllegalConfig(f"non-positive tile in {self}")
+        if self.mwg % self.mdimc != 0:
+            raise IllegalConfig(f"MWG {self.mwg} % MDIMC {self.mdimc} != 0")
+        if self.nwg % self.ndimc != 0:
+            raise IllegalConfig(f"NWG {self.nwg} % NDIMC {self.ndimc} != 0")
+        if self.mwi % self.vwm != 0:
+            raise IllegalConfig(f"MWI {self.mwi} % VWM {self.vwm} != 0")
+        if self.nwi % self.vwn != 0:
+            raise IllegalConfig(f"NWI {self.nwi} % VWN {self.vwn} != 0")
+        if self.sa not in (0, 1) or self.sb not in (0, 1):
+            raise IllegalConfig(f"SA/SB must be 0/1 in {self}")
+
+    def vmem_bytes(self, dtype_bytes: int = 4) -> int:
+        """VMEM footprint of one grid step: A block + B block + C block
+        (+ staged copies when SA/SB).  Mirrors CLBlast's local-memory
+        constraint `SA*KWG*MWG + SB*KWG*NWG <= local_mem`."""
+        a = self.mwg * self.kwg
+        b = self.kwg * self.nwg
+        c = self.mwg * self.nwg
+        staged = self.sa * a + self.sb * b
+        return (a + b + c + staged) * dtype_bytes
+
+    def name(self) -> str:
+        return (
+            f"x_m{self.mwg}n{self.nwg}k{self.kwg}"
+            f"_c{self.mdimc}x{self.ndimc}_v{self.vwm}x{self.vwn}"
+            f"_s{self.sa}{self.sb}"
+        )
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "GemmConfig":
+        return GemmConfig(**{k: int(v) for k, v in d.items()})
+
+
+@dataclasses.dataclass(frozen=True)
+class DirectConfig:
+    """A point in the xgemm_direct space (Pallas-relevant subset).
+
+    The direct kernel is the generic one-pass kernel: a single square
+    work-group tile WGD, arbitrary (M, N, K) handled by in-graph padding
+    to the tile multiple (the pad is fused by XLA and stays O(n^2)).
+    """
+
+    wgd: int = 32
+    mdimcd: int = 8
+    ndimcd: int = 8
+    vwmd: int = 1
+    vwnd: int = 1
+    kwid: int = 2
+    pada: int = 1
+    padb: int = 1
+
+    def validate(self) -> None:
+        if self.wgd <= 0:
+            raise IllegalConfig(f"non-positive WGD in {self}")
+        if self.wgd % self.mdimcd != 0:
+            raise IllegalConfig(f"WGD {self.wgd} % MDIMCD {self.mdimcd} != 0")
+        if self.wgd % self.ndimcd != 0:
+            raise IllegalConfig(f"WGD {self.wgd} % NDIMCD {self.ndimcd} != 0")
+        if self.wgd % self.kwid != 0:
+            raise IllegalConfig(f"WGD {self.wgd} % KWID {self.kwid} != 0")
+        if (self.wgd // self.mdimcd) % self.vwmd != 0:
+            raise IllegalConfig(f"MWID % VWMD != 0 in {self}")
+        if (self.wgd // self.ndimcd) % self.vwnd != 0:
+            raise IllegalConfig(f"NWID % VWND != 0 in {self}")
+
+    def vmem_bytes(self, dtype_bytes: int = 4) -> int:
+        return 3 * self.wgd * self.wgd * dtype_bytes
+
+    def name(self) -> str:
+        return (
+            f"d_w{self.wgd}_c{self.mdimcd}x{self.ndimcd}"
+            f"_v{self.vwmd}x{self.vwnd}_k{self.kwid}_p{self.pada}{self.padb}"
+        )
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "DirectConfig":
+        return DirectConfig(**{k: int(v) for k, v in d.items()})

@@ -1,0 +1,28 @@
+"""Pure-jnp correctness oracle for the GEMM kernel family.
+
+This is the ground truth every Pallas kernel variant is checked against
+(pytest + hypothesis in ``python/tests``).  It implements full BLAS GEMM
+semantics: C := alpha * op(A) @ op(B) + beta * C.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_matmul(a, b):
+    """Plain A @ B with f32 accumulation regardless of input dtype."""
+    return jnp.matmul(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def ref_gemm(a, b, c, alpha=1.0, beta=0.0, trans_a=False, trans_b=False):
+    """BLAS GEMM oracle: ``alpha * op(A) @ op(B) + beta * C`` in f32."""
+    if trans_a:
+        a = a.T
+    if trans_b:
+        b = b.T
+    prod = ref_matmul(a, b)
+    return alpha * prod + beta * c.astype(jnp.float32)

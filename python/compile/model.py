@@ -1,0 +1,113 @@
+"""L2: JAX GEMM computation graphs assembled from the L1 Pallas kernels.
+
+One graph per (kernel, configuration, shape) — the "implementations" the
+paper's decision tree selects among.  Each graph is a full BLAS GEMM:
+
+    out = alpha * op(A) @ op(B) + beta * C
+
+Two families:
+
+* ``gemm_direct_graph``  — exact logical shape baked in; arbitrary
+  (M, N, K) handled by fused in-graph padding.  Self-contained: the rust
+  side feeds the logical operands directly.
+* ``gemm_indirect_graph`` — a *padded bucket* shape baked in; the rust
+  coordinator pads operands to the bucket on the host (the measured
+  O(n^2) helper cost) and slices the result.
+
+Both take alpha/beta as shape-[1] tensor inputs so one artifact serves
+every scalar combination.  Everything lowers to HLO *text* (see
+``to_hlo_text``) — the interchange format the xla 0.1.6 crate accepts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.config import DirectConfig, GemmConfig
+from .kernels.gemm import direct_matmul, tiled_matmul
+
+
+def gemm_direct_graph(config: DirectConfig, trans_a: bool = False,
+                      trans_b: bool = False):
+    """Build fn(a, b, c, alpha[1], beta[1]) -> (out,) for the direct kernel."""
+
+    def fn(a, b, c, alpha, beta):
+        if trans_a:
+            a = a.T
+        if trans_b:
+            b = b.T
+        prod = direct_matmul(a, b, config)
+        out = alpha[0] * prod + beta[0] * c.astype(jnp.float32)
+        return (out,)
+
+    return fn
+
+
+def gemm_indirect_graph(config: GemmConfig):
+    """Build fn(a_p, b_p, c_p, alpha[1], beta[1]) -> (out_p,) over a padded
+    bucket.  beta*C is computed on the padded frame; the rust side slices
+    the logical region out, so padded garbage never escapes."""
+
+    def fn(a_p, b_p, c_p, alpha, beta):
+        prod = tiled_matmul(a_p, b_p, config)
+        out = alpha[0] * prod + beta[0] * c_p.astype(jnp.float32)
+        return (out,)
+
+    return fn
+
+
+def gemm_shapes(m: int, n: int, k: int, dtype=jnp.float32):
+    """ShapeDtypeStructs for fn(a, b, c, alpha, beta) at logical (m, n, k)."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((m, k), dtype),
+        jax.ShapeDtypeStruct((k, n), dtype),
+        jax.ShapeDtypeStruct((m, n), f32),
+        jax.ShapeDtypeStruct((1,), f32),
+        jax.ShapeDtypeStruct((1,), f32),
+    )
+
+
+def to_hlo_text(fn, arg_shapes) -> str:
+    """Lower a jitted fn to HLO text via stablehlo -> XlaComputation.
+
+    Text, NOT ``.serialize()``: jax >= 0.5 emits HloModuleProto with
+    64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+    parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+    ``return_tuple=True`` so the rust side unwraps with ``to_tuple1``.
+    """
+    lowered = jax.jit(fn).lower(*arg_shapes)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_direct(config: DirectConfig, m: int, n: int, k: int,
+                 trans_a: bool = False, trans_b: bool = False,
+                 dtype=jnp.float32) -> str:
+    """HLO text for the direct kernel at logical (m, n, k)."""
+    km, kn = (k, m) if trans_a else (m, k)
+    kk, nn = (n, k) if trans_b else (k, n)
+    f32 = jnp.float32
+    shapes = (
+        jax.ShapeDtypeStruct((km, kn), dtype),
+        jax.ShapeDtypeStruct((kk, nn), dtype),
+        jax.ShapeDtypeStruct((m, n), f32),
+        jax.ShapeDtypeStruct((1,), f32),
+        jax.ShapeDtypeStruct((1,), f32),
+    )
+    return to_hlo_text(gemm_direct_graph(config, trans_a, trans_b), shapes)
+
+
+def lower_indirect(config: GemmConfig, mb: int, nb: int, kb: int,
+                   dtype=jnp.float32) -> str:
+    """HLO text for the indirect kernel over bucket (mb, nb, kb)."""
+    if mb % config.mwg or nb % config.nwg or kb % config.kwg:
+        raise ValueError(
+            f"bucket ({mb},{nb},{kb}) not divisible by tiles of {config}"
+        )
+    return to_hlo_text(gemm_indirect_graph(config), gemm_shapes(mb, nb, kb, dtype))

@@ -1,0 +1,61 @@
+"""Tests for the L1 structural performance analysis (compile.analysis)."""
+
+import pytest
+
+from compile import analysis
+from compile.kernels.config import DirectConfig, GemmConfig
+
+
+def test_xgemm_profile_basic():
+    cfg = GemmConfig(mwg=128, nwg=128, kwg=64, mdimc=16, ndimc=16)
+    p = analysis.profile_xgemm(cfg, bucket=(256, 256, 256))
+    assert p.vmem_bytes == cfg.vmem_bytes()
+    assert 0 < p.vmem_fraction < 1
+    assert p.mxu_m == 1.0  # 128-wide tile fills the MXU
+    assert p.mxu_n == 1.0
+    assert p.mxu_k == 0.5  # 64 of 128
+    assert 0 < p.mxu_overall <= 1.0
+    assert p.bytes_per_flop > 0
+
+
+def test_small_tiles_lower_mxu_utilization():
+    big = analysis.profile_xgemm(
+        GemmConfig(mwg=128, nwg=128, kwg=64, mdimc=16, ndimc=16))
+    small = analysis.profile_xgemm(
+        GemmConfig(mwg=32, nwg=32, kwg=16, mdimc=8, ndimc=8))
+    assert big.mxu_overall > small.mxu_overall
+
+
+def test_bigger_tiles_better_intensity():
+    big = analysis.profile_xgemm(
+        GemmConfig(mwg=128, nwg=128, kwg=32, mdimc=16, ndimc=16))
+    small = analysis.profile_xgemm(
+        GemmConfig(mwg=32, nwg=32, kwg=32, mdimc=8, ndimc=8))
+    assert big.bytes_per_flop < small.bytes_per_flop
+
+
+def test_direct_profile_counts_padding_against_useful_flops():
+    cfg = DirectConfig(wgd=32, mdimcd=8, ndimcd=8)
+    aligned = analysis.profile_direct(cfg, shape=(128, 128, 128))
+    unaligned = analysis.profile_direct(cfg, shape=(97, 97, 97))
+    # Padding work is charged against useful flops only.
+    assert unaligned.bytes_per_flop > aligned.bytes_per_flop
+
+
+def test_roster_within_vmem_budget():
+    """Every roster config must fit the VMEM budget — the §Perf L1 gate."""
+    for p in analysis.roster_report():
+        assert p.vmem_fraction < 1.0, f"{p.name} exceeds VMEM"
+
+
+def test_render_contains_all_roster_configs():
+    profiles = analysis.roster_report(include_all=True)
+    text = analysis.render(profiles)
+    for p in profiles:
+        assert p.name in text
+    assert "MXU util" in text
+
+
+def test_invalid_config_rejected():
+    with pytest.raises(Exception):
+        analysis.profile_xgemm(GemmConfig(mwg=100, mdimc=16))

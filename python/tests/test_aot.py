@@ -1,0 +1,78 @@
+"""AOT pipeline: roster construction and manifest integrity."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile.kernels.config import DirectConfig, GemmConfig
+
+
+def test_roster_small_descriptors():
+    descs = aot.build_roster("small")
+    names = [d[0] for d in descs]
+    assert len(names) == len(set(names)), "artifact names must be unique"
+    kinds = {d[1] for d in descs}
+    assert kinds == {"xgemm", "xgemm_direct"}
+
+
+def test_roster_full_superset_of_small():
+    small = {d[0] for d in aot.build_roster("small")}
+    full = {d[0] for d in aot.build_roster("full")}
+    assert small <= full
+    assert len(full) > len(small)
+
+
+def test_roster_indirect_buckets_tile():
+    for (name, kind, cfg, shape, _) in aot.build_roster("full"):
+        if kind != "xgemm":
+            continue
+        mb, nb, kb = shape
+        assert mb % cfg.mwg == 0 and nb % cfg.nwg == 0 and kb % cfg.kwg == 0, name
+
+
+def test_roster_configs_valid():
+    for (_, _, cfg, _, _) in aot.build_roster("full"):
+        cfg.validate()
+
+
+def test_transpose_cases_present():
+    descs = aot.build_roster("small")
+    tas = [d for d in descs if d[4][0]]
+    tbs = [d for d in descs if d[4][1]]
+    assert tas and tbs
+
+
+@pytest.mark.slow
+def test_emit_smoke(tmp_path):
+    """End-to-end emit of a tiny roster (monkeypatched) and manifest check."""
+    orig = aot.build_roster
+    try:
+        aot.build_roster = lambda roster: [
+            ("direct_tiny_16x16x16", "xgemm_direct",
+             DirectConfig(wgd=16), (16, 16, 16), (False, False)),
+            ("indirect_tiny_64x64x64", "xgemm",
+             GemmConfig(mwg=32, nwg=32, kwg=32, mdimc=8, ndimc=8),
+             (64, 64, 64), (False, False)),
+        ]
+        manifest = aot.emit(str(tmp_path), "small", verbose=False)
+    finally:
+        aot.build_roster = orig
+
+    assert manifest["version"] == aot.MANIFEST_VERSION
+    assert len(manifest["artifacts"]) == 2
+    on_disk = json.loads((tmp_path / "manifest.json").read_text())
+    assert on_disk["artifacts"][0]["name"] == "direct_tiny_16x16x16"
+    for entry in on_disk["artifacts"]:
+        path = tmp_path / entry["file"]
+        assert path.exists()
+        text = path.read_text()
+        assert text.startswith("HloModule")
+        assert entry["hlo_bytes"] == len(text)
+    direct = on_disk["artifacts"][0]
+    assert direct["kernel"] == "xgemm_direct"
+    assert (direct["m"], direct["n"], direct["k"]) == (16, 16, 16)
+    indirect = on_disk["artifacts"][1]
+    assert (indirect["mb"], indirect["nb"], indirect["kb"]) == (64, 64, 64)
+    assert indirect["config"]["mwg"] == 32

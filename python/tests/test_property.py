@@ -1,0 +1,115 @@
+"""Hypothesis property sweeps: kernel == oracle over random shapes, dtypes,
+configs and scalars.  This is the L1 fuzzing gate required by DESIGN.md."""
+
+import numpy as np
+
+import jax.numpy as jnp
+from hypothesis import assume, given, settings, strategies as st
+
+from compile.kernels.config import DirectConfig, GemmConfig, IllegalConfig
+from compile.kernels.gemm import direct_matmul, tiled_matmul
+from compile.kernels.ref import ref_gemm, ref_matmul
+from compile.model import gemm_direct_graph
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(rng, m, n, dtype):
+    x = rng.standard_normal((m, n)).astype("float32")
+    return x.astype(dtype)
+
+
+direct_cfg_st = st.builds(
+    DirectConfig,
+    wgd=st.sampled_from([8, 16, 32]),
+    mdimcd=st.just(8),
+    ndimcd=st.just(8),
+    vwmd=st.sampled_from([1, 2]),
+    vwnd=st.sampled_from([1, 2]),
+    kwid=st.sampled_from([2]),
+    pada=st.sampled_from([0, 1]),
+    padb=st.sampled_from([0, 1]),
+)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 96),
+    n=st.integers(1, 96),
+    k=st.integers(1, 96),
+    cfg=direct_cfg_st,
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_direct_any_shape(m, n, k, cfg, seed):
+    try:
+        cfg.validate()
+    except IllegalConfig:
+        assume(False)  # skip illegal points of the raw grid
+    rng = np.random.default_rng(seed)
+    a, b = _rand(rng, m, k, "float32"), _rand(rng, k, n, "float32")
+    out = np.asarray(direct_matmul(a, b, cfg))
+    ref = np.asarray(ref_matmul(a, b))
+    np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    mt=st.integers(1, 4),
+    nt=st.integers(1, 4),
+    kt=st.integers(1, 4),
+    mwg=st.sampled_from([16, 32, 64]),
+    nwg=st.sampled_from([16, 32, 64]),
+    kwg=st.sampled_from([16, 32]),
+    sa=st.sampled_from([0, 1]),
+    sb=st.sampled_from([0, 1]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tiled_any_grid(mt, nt, kt, mwg, nwg, kwg, sa, sb, seed):
+    cfg = GemmConfig(mwg=mwg, nwg=nwg, kwg=kwg, mdimc=8, ndimc=8,
+                     sa=sa, sb=sb)
+    cfg.validate()
+    m, n, k = mt * mwg, nt * nwg, kt * kwg
+    rng = np.random.default_rng(seed)
+    a, b = _rand(rng, m, k, "float32"), _rand(rng, k, n, "float32")
+    out = np.asarray(tiled_matmul(a, b, cfg))
+    ref = np.asarray(ref_matmul(a, b))
+    np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 48),
+    n=st.integers(1, 48),
+    k=st.integers(1, 48),
+    alpha=st.floats(-3, 3, allow_nan=False, width=32),
+    beta=st.floats(-3, 3, allow_nan=False, width=32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_direct_graph_gemm_semantics(m, n, k, alpha, beta, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, m, k, "float32")
+    b = _rand(rng, k, n, "float32")
+    c = _rand(rng, m, n, "float32")
+    fn = gemm_direct_graph(DirectConfig(wgd=16))
+    (out,) = fn(a, b, c,
+                np.array([alpha], "float32"), np.array([beta], "float32"))
+    ref = np.asarray(ref_gemm(a, b, c, alpha, beta))
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dtype_sweep(dtype, seed):
+    rng = np.random.default_rng(seed)
+    m = n = k = 32
+    a32 = rng.standard_normal((m, k)).astype("float32")
+    b32 = rng.standard_normal((k, n)).astype("float32")
+    a = jnp.asarray(a32).astype(dtype)
+    b = jnp.asarray(b32).astype(dtype)
+    out = np.asarray(direct_matmul(a, b, DirectConfig(wgd=16)))
+    ref = np.asarray(ref_matmul(a, b))
+    tol = 1e-3 if dtype == "float32" else 8e-2
+    np.testing.assert_allclose(out, ref, rtol=tol, atol=tol)

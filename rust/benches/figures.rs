@@ -1,0 +1,26 @@
+//! `cargo bench --bench figures` — regenerates Figures 3-7 (accuracy,
+//! DTPR/DTTR, per-triple GFLOPS series) and prints the paper's headline
+//! comparisons (max speedup vs default per device).
+
+use adaptlib::device::DeviceId;
+use adaptlib::experiments::{figures, Context};
+
+fn main() {
+    let mut ctx = Context::new();
+    let out = std::path::Path::new("results");
+
+    for device in [DeviceId::NvidiaP100, DeviceId::MaliT860] {
+        let f3 = figures::fig3(&mut ctx, device);
+        println!("{}", f3.ascii);
+        f3.save(out).unwrap();
+
+        let f45 = figures::fig45(&mut ctx, device);
+        println!("{}", f45.ascii);
+        f45.save(out).unwrap();
+
+        let f67 = figures::fig67(&mut ctx, device);
+        println!("{}", f67.ascii);
+        f67.save(out).unwrap();
+    }
+    eprintln!("figures saved under results/");
+}

@@ -1,0 +1,108 @@
+//! `cargo bench --bench hotpath` — the on-line request path, measured on
+//! the real PJRT runtime: pad/unpad helpers, literal round-trips, direct
+//! vs indirect artifact execution, end-to-end server round trip.
+//! Feeds the §Perf optimization log in EXPERIMENTS.md.
+
+use std::path::Path;
+
+use adaptlib::coordinator::{DefaultPolicy, GemmRequest, GemmServer, ServerConfig};
+use adaptlib::harness::{black_box, Suite};
+use adaptlib::runtime::{pad, ArtifactKind, GemmInput, GemmRuntime, PjrtBackend};
+use adaptlib::util::prng::Rng;
+
+fn rand_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.f32() - 0.5).collect()
+}
+
+fn main() {
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("skipping hotpath bench: run `make artifacts` first");
+        return;
+    }
+    let mut suite = Suite::from_args();
+    let mut rng = Rng::new(1);
+
+    suite.section("helper (pad/unpad) cost — the O(n^2) indirect tax");
+    let src = rand_vec(&mut rng, 200 * 200);
+    suite.bench("pad:200x200->256x256", || {
+        black_box(pad::pad(&src, 200, 200, 256, 256))
+    });
+    let padded = pad::pad(&src, 200, 200, 256, 256);
+    suite.bench("unpad:256x256->200x200", || {
+        black_box(pad::unpad(&padded, 256, 200, 200))
+    });
+    let mut out = vec![0f32; 200 * 200];
+    suite.bench("unpad_into:256x256->200x200", || {
+        pad::unpad_into(&padded, 256, 200, 200, &mut out);
+        black_box(out[0])
+    });
+
+    suite.section("PJRT execution (real kernels)");
+    let mut rt = GemmRuntime::open(artifacts).expect("artifacts");
+    let direct = rt
+        .manifest
+        .artifacts
+        .iter()
+        .find(|a| matches!(a.kind, ArtifactKind::Direct { m: 128, n: 128, k: 128, trans_a: false, trans_b: false }))
+        .expect("128^3 direct artifact")
+        .clone();
+    let indirect = rt
+        .manifest
+        .artifacts
+        .iter()
+        .find(|a| matches!(a.kind, ArtifactKind::Indirect { mb: 128, nb: 128, kb: 128 }))
+        .expect("128^3 bucket")
+        .clone();
+    let (m, n, k) = (128usize, 128usize, 128usize);
+    let (a, b, c) = (
+        rand_vec(&mut rng, m * k),
+        rand_vec(&mut rng, k * n),
+        rand_vec(&mut rng, m * n),
+    );
+    let input = GemmInput { m, n, k, a: &a, b: &b, c: &c, alpha: 1.0, beta: 0.0 };
+    rt.gemm(&direct.name, &input).unwrap(); // compile outside timing
+    rt.gemm(&indirect.name, &input).unwrap();
+    suite.bench("gemm:direct:128^3", || {
+        black_box(rt.gemm(&direct.name, &input).unwrap().out[0])
+    });
+    suite.bench("gemm:indirect:128^3(no-pad-needed)", || {
+        black_box(rt.gemm(&indirect.name, &input).unwrap().out[0])
+    });
+    // In-bucket (pays padding).
+    let (m2, n2, k2) = (100usize, 100usize, 100usize);
+    let (a2, b2, c2) = (
+        rand_vec(&mut rng, m2 * k2),
+        rand_vec(&mut rng, k2 * n2),
+        rand_vec(&mut rng, m2 * n2),
+    );
+    let input2 = GemmInput {
+        m: m2, n: n2, k: k2, a: &a2, b: &b2, c: &c2, alpha: 1.0, beta: 0.0,
+    };
+    suite.bench("gemm:indirect:100^3(padded-into-128)", || {
+        black_box(rt.gemm(&indirect.name, &input2).unwrap().out[0])
+    });
+
+    suite.section("server round trip");
+    let backend = PjrtBackend::open(artifacts).unwrap();
+    let policy = DefaultPolicy::from_roster(&backend.roster_configs()).unwrap();
+    drop(backend);
+    let server =
+        GemmServer::start(artifacts, Box::new(policy), ServerConfig::default())
+            .expect("server");
+    let handle = server.handle();
+    // Warm the executable cache.
+    let mk_req = || GemmRequest {
+        m, n, k,
+        a: a.clone(), b: b.clone(), c: c.clone(),
+        alpha: 1.0, beta: 0.0,
+    };
+    handle.call(mk_req()).unwrap();
+    suite.bench("server:call:128^3", || {
+        black_box(handle.call(mk_req()).unwrap().service)
+    });
+    drop(handle);
+    if let Some(stats) = server.shutdown() {
+        println!("{}", stats.report());
+    }
+}

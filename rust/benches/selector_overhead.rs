@@ -1,0 +1,60 @@
+//! `cargo bench --bench selector_overhead` — the §5.4 microbenchmark:
+//! cost of the generated if-then-else selector (flattened decision tree)
+//! vs the GEMM it fronts.  The paper reports <2% on small matrices
+//! (deepest leaf) and <1% on average.
+
+use adaptlib::codegen::FlatTree;
+use adaptlib::dataset::DatasetKind;
+use adaptlib::device::DeviceId;
+use adaptlib::experiments::{microbench, Context};
+use adaptlib::harness::{black_box, Suite};
+
+fn main() {
+    let mut suite = Suite::from_args();
+    let mut ctx = Context::new();
+
+    // The paper's model: hMax-L1 on go2 @ P100 (~1200 leaves, depth ~19).
+    let sweep = ctx.sweep(DeviceId::NvidiaP100, DatasetKind::Go2);
+    let best = sweep.best_model();
+    let flat = FlatTree::from_tree(&best.tree);
+    println!(
+        "model {} | {} leaves | depth {}",
+        best.scores.model,
+        best.tree.n_leaves(),
+        best.tree.depth()
+    );
+
+    suite.section("selector traversal");
+    // Deepest-leaf path: small matrices (the paper's worst case).
+    suite.bench("flat:predict:small(64,64,64)", || {
+        black_box(flat.predict(64, 64, 64))
+    });
+    suite.bench("flat:predict:large(3840^3)", || {
+        black_box(flat.predict(3840, 3840, 3840))
+    });
+    // Pointer-tree traversal for comparison (the naive representation).
+    let tree = &best.tree;
+    suite.bench("tree:predict:small(64,64,64)", || {
+        black_box(tree.predict(adaptlib::config::Triple::new(64, 64, 64)))
+    });
+    // Mixed workload (test set).
+    let triples: Vec<(u32, u32, u32)> = sweep
+        .test_idx
+        .iter()
+        .map(|&i| {
+            let t = sweep.labeled.entries[i].0;
+            (t.m, t.n, t.k)
+        })
+        .collect();
+    let mut i = 0usize;
+    suite.bench("flat:predict:test-set-mix", || {
+        let (m, n, k) = triples[i % triples.len()];
+        i += 1;
+        black_box(flat.predict(m, n, k))
+    });
+
+    suite.section("overhead vs kernel time (paper §5.4 table)");
+    let r = microbench::selector_overhead(&mut ctx);
+    println!("{}", r.ascii);
+    r.save(std::path::Path::new("results")).unwrap();
+}

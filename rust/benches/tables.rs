@@ -1,0 +1,68 @@
+//! `cargo bench --bench tables` — regenerates the paper's Tables 1-6 and
+//! times each pipeline stage (tuning, training, evaluation) per table.
+//! The printed rows are the reproduction artifact; the timings are the
+//! harness's own cost accounting.
+
+use adaptlib::dataset::{Dataset, DatasetKind};
+use adaptlib::device::{DeviceId, DeviceProfile};
+use adaptlib::dtree::{train, TrainParams};
+use adaptlib::experiments::{tables, Context};
+use adaptlib::harness::Suite;
+use adaptlib::tuner::{Backend, SimBackend, Tuner, TuningDb};
+
+fn main() {
+    let mut suite = Suite::from_args();
+
+    suite.section("Table 1/2 (static)");
+    suite.bench("table1:render", tables::table1);
+    suite.bench("table2:render", tables::table2);
+    println!("{}", tables::table1().ascii);
+    println!("{}", tables::table2().ascii);
+
+    suite.section("pipeline stage costs");
+    // Tuning one po2 dataset exhaustively on each simulated device.
+    for device in [DeviceId::NvidiaP100, DeviceId::MaliT860] {
+        suite.bench(&format!("tune:po2:{device}"), || {
+            let mut backend = SimBackend::new(DeviceProfile::get(device));
+            let ds = Dataset::generate(DatasetKind::Po2);
+            let mut db = TuningDb::new(backend.device_name());
+            Tuner::default().label_dataset(&mut backend, &ds, &mut db).len()
+        });
+    }
+    // Training the paper's heaviest model shape.
+    {
+        let mut backend = SimBackend::new(DeviceProfile::nvidia_p100());
+        let ds = Dataset::generate(DatasetKind::Po2);
+        let mut db = TuningDb::new(backend.device_name());
+        let labeled = Tuner::default().label_dataset(&mut backend, &ds, &mut db);
+        let hmax_l1 = TrainParams::paper_sweep()
+            .into_iter()
+            .find(|p| p.name() == "hMax-L1")
+            .unwrap();
+        suite.bench("train:hMax-L1:po2", || {
+            train(&labeled.entries, labeled.classes.len(), hmax_l1).n_leaves()
+        });
+    }
+
+    suite.section("Tables 3-6 (full sweeps, cached between tables)");
+    let mut ctx = Context::new();
+    let t0 = std::time::Instant::now();
+    let t3 = tables::table3(&mut ctx);
+    println!("{}", t3.ascii);
+    println!(
+        "table3 computed in {:.1}s (3 datasets x 40 models)",
+        t0.elapsed().as_secs_f64()
+    );
+    let t4 = tables::table4(&mut ctx);
+    println!("{}", t4.ascii);
+    let t5 = tables::table5(&mut ctx);
+    println!("{}", t5.ascii);
+    let t6 = tables::table6(&mut ctx);
+    println!("{}", t6.ascii);
+
+    let out = std::path::Path::new("results");
+    for r in [&t3, &t4, &t5, &t6] {
+        r.save(out).expect("saving results");
+    }
+    eprintln!("tables saved under results/");
+}

@@ -1,0 +1,215 @@
+//! Hand-rolled CLI argument parser (no clap offline): subcommands,
+//! `--flag value` / `--flag=value` options, boolean switches, positional
+//! arguments, and generated usage text.
+
+use std::collections::BTreeMap;
+
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum CliError {
+    #[error("unknown option: {0}")]
+    UnknownOption(String),
+    #[error("option {0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for {0}: {1}")]
+    InvalidValue(String, String),
+    #[error("missing subcommand; expected one of: {0}")]
+    MissingCommand(String),
+}
+
+/// Declarative option spec.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Vec<String>,
+    opts: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+    ) -> Result<T, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| {
+                CliError::InvalidValue(name.to_string(), s.to_string())
+            }),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+/// Parse argv against a spec: `specs` lists value-taking options,
+/// `switches` boolean flags.  The first `n_command` non-option tokens are
+/// treated as the (sub)command path; the rest are positional.
+pub fn parse(
+    argv: &[String],
+    specs: &[OptSpec],
+    switches: &[&str],
+    n_command: usize,
+) -> Result<Args, CliError> {
+    let mut args = Args::default();
+    for s in specs {
+        if let (true, Some(d)) = (s.takes_value, s.default) {
+            args.opts.insert(s.name.to_string(), d.to_string());
+        }
+    }
+    let mut i = 0;
+    while i < argv.len() {
+        let tok = &argv[i];
+        if let Some(stripped) = tok.strip_prefix("--") {
+            let (name, inline_val) = match stripped.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (stripped, None),
+            };
+            if switches.contains(&name) {
+                if inline_val.is_some() {
+                    return Err(CliError::InvalidValue(
+                        name.to_string(),
+                        "switch takes no value".to_string(),
+                    ));
+                }
+                args.switches.push(name.to_string());
+            } else if let Some(spec) = specs.iter().find(|s| s.name == name) {
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i)
+                            .cloned()
+                            .ok_or_else(|| CliError::MissingValue(name.into()))?
+                    }
+                };
+                let _ = spec;
+                args.opts.insert(name.to_string(), val);
+            } else {
+                return Err(CliError::UnknownOption(tok.clone()));
+            }
+        } else if args.command.len() < n_command {
+            args.command.push(tok.clone());
+        } else {
+            args.positional.push(tok.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+/// Render usage text from specs.
+pub fn usage(program: &str, commands: &[(&str, &str)], specs: &[OptSpec]) -> String {
+    let mut out = format!("usage: {program} <command> [options]\n\ncommands:\n");
+    for (c, h) in commands {
+        out.push_str(&format!("  {c:<18} {h}\n"));
+    }
+    if !specs.is_empty() {
+        out.push_str("\noptions:\n");
+        for s in specs {
+            let val = if s.takes_value { " <value>" } else { "" };
+            let def = s
+                .default
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            out.push_str(&format!("  --{}{val:<10} {}{def}\n", s.name, s.help));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "device", help: "", takes_value: true, default: Some("p100") },
+            OptSpec { name: "out", help: "", takes_value: true, default: None },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_opts_positional() {
+        let a = parse(
+            &sv(&["exp", "table3", "--device", "mali", "extra"]),
+            &specs(),
+            &["quiet"],
+            2,
+        )
+        .unwrap();
+        assert_eq!(a.command, vec!["exp", "table3"]);
+        assert_eq!(a.get("device"), Some("mali"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_syntax_and_defaults() {
+        let a = parse(&sv(&["run", "--device=cpu"]), &specs(), &[], 1).unwrap();
+        assert_eq!(a.get("device"), Some("cpu"));
+        let b = parse(&sv(&["run"]), &specs(), &[], 1).unwrap();
+        assert_eq!(b.get("device"), Some("p100")); // default applied
+        assert_eq!(b.get("out"), None); // no default
+    }
+
+    #[test]
+    fn switches() {
+        let a = parse(&sv(&["x", "--quiet"]), &specs(), &["quiet"], 1).unwrap();
+        assert!(a.has("quiet"));
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn errors() {
+        assert_eq!(
+            parse(&sv(&["--bogus"]), &specs(), &[], 0).unwrap_err(),
+            CliError::UnknownOption("--bogus".into())
+        );
+        assert_eq!(
+            parse(&sv(&["--out"]), &specs(), &[], 0).unwrap_err(),
+            CliError::MissingValue("out".into())
+        );
+    }
+
+    #[test]
+    fn get_parse_types() {
+        let a = parse(&sv(&["x", "--device", "42"]), &specs(), &[], 1).unwrap();
+        let v: u32 = a.get_parse("device", 0).unwrap();
+        assert_eq!(v, 42);
+        let bad: Result<u32, _> = parse(&sv(&["x", "--device", "zz"]), &specs(), &[], 1)
+            .unwrap()
+            .get_parse("device", 0);
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn usage_lists_commands() {
+        let u = usage("adaptd", &[("tune", "run the tuner")], &specs());
+        assert!(u.contains("tune") && u.contains("--device"));
+    }
+}

@@ -1,0 +1,161 @@
+//! The `xgemm_direct` kernel's 9-parameter tuning space — CLBlast's
+//! generic one-pass GEMM kernel.  The grid reproduces Table 1: exactly
+//! 3888 = 3^5 · 2^4 raw points over 9 parameters.
+
+use crate::util::json::{Json, JsonError};
+
+/// Full xgemm_direct parameter assignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DirectParams {
+    /// Square work-group tile (the direct kernel tiles M, N and K by WGD).
+    pub wgd: u32,
+    /// Threads in M.
+    pub mdimcd: u32,
+    /// Threads in N.
+    pub ndimcd: u32,
+    /// Re-shaped tile for loading A.
+    pub mdimad: u32,
+    /// Vector width for A.
+    pub vwmd: u32,
+    /// Vector width for B.
+    pub vwnd: u32,
+    /// K-loop unroll.
+    pub kwid: u32,
+    /// Pad A accesses (bounds-check strategy).
+    pub pada: u32,
+    /// Pad B accesses.
+    pub padb: u32,
+}
+
+impl Default for DirectParams {
+    /// CLBlast's shipped default (tuned for M=N=K=256).
+    fn default() -> Self {
+        DirectParams {
+            wgd: 32,
+            mdimcd: 8,
+            ndimcd: 8,
+            mdimad: 8,
+            vwmd: 2,
+            vwnd: 2,
+            kwid: 2,
+            pada: 1,
+            padb: 1,
+        }
+    }
+}
+
+impl DirectParams {
+    pub fn mwid(&self) -> u32 {
+        self.wgd / self.mdimcd
+    }
+
+    pub fn nwid(&self) -> u32 {
+        self.wgd / self.ndimcd
+    }
+
+    pub fn is_structurally_legal(&self) -> bool {
+        self.wgd % self.mdimcd == 0
+            && self.wgd % self.ndimcd == 0
+            && self.wgd % self.kwid == 0
+            && self.wgd % self.mdimad == 0
+            && self.mwid() % self.vwmd == 0
+            && self.nwid() % self.vwnd == 0
+            && self.pada <= 1
+            && self.padb <= 1
+    }
+
+    /// VMEM bytes per grid step: three WGD x WGD f32 tiles.
+    pub fn scratch_bytes(&self) -> u64 {
+        3 * (self.wgd as u64 * self.wgd as u64) * 4
+    }
+
+    /// Local-memory analogue (the direct kernel always stages both tiles).
+    pub fn local_mem_bytes(&self) -> u64 {
+        2 * (self.wgd as u64 * self.wgd as u64) * 4
+    }
+
+    pub fn name(&self) -> String {
+        format!(
+            "d_w{}_c{}x{}_a{}_v{}x{}_k{}_p{}{}",
+            self.wgd,
+            self.mdimcd,
+            self.ndimcd,
+            self.mdimad,
+            self.vwmd,
+            self.vwnd,
+            self.kwid,
+            self.pada,
+            self.padb
+        )
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        let fields = [
+            self.wgd, self.mdimcd, self.ndimcd, self.mdimad, self.vwmd,
+            self.vwnd, self.kwid, self.pada, self.padb,
+        ];
+        fields
+            .iter()
+            .fold(0x8422_2325_cbf2_9ce4u64, |h, &f| {
+                (h ^ f as u64).wrapping_mul(0x100_0000_01b3)
+            })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("wgd", Json::num(self.wgd)),
+            ("mdimcd", Json::num(self.mdimcd)),
+            ("ndimcd", Json::num(self.ndimcd)),
+            ("mdimad", Json::num(self.mdimad)),
+            ("vwmd", Json::num(self.vwmd)),
+            ("vwnd", Json::num(self.vwnd)),
+            ("kwid", Json::num(self.kwid)),
+            ("pada", Json::num(self.pada)),
+            ("padb", Json::num(self.padb)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        let g = |k: &str| -> Result<u32, JsonError> { v.get(k)?.as_u32() };
+        Ok(DirectParams {
+            wgd: g("wgd")?,
+            mdimcd: g("mdimcd")?,
+            ndimcd: g("ndimcd")?,
+            mdimad: v.get_or("mdimad", &Json::Num(8.0)).as_u32()?,
+            vwmd: g("vwmd")?,
+            vwnd: g("vwnd")?,
+            kwid: g("kwid")?,
+            pada: g("pada")?,
+            padb: g("padb")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_legal() {
+        assert!(DirectParams::default().is_structurally_legal());
+    }
+
+    #[test]
+    fn illegal_vector_width() {
+        let p = DirectParams { wgd: 8, mdimcd: 8, vwmd: 2, ..Default::default() };
+        // mwid = 1, 1 % 2 != 0
+        assert!(!p.is_structurally_legal());
+    }
+
+    #[test]
+    fn scratch() {
+        assert_eq!(DirectParams { wgd: 16, ..Default::default() }.scratch_bytes(),
+                   3 * 16 * 16 * 4);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = DirectParams { wgd: 16, kwid: 8, pada: 0, ..Default::default() };
+        assert_eq!(DirectParams::from_json(&p.to_json()).unwrap(), p);
+    }
+}

@@ -1,0 +1,195 @@
+//! Tuning-configuration model: the two CLBlast GEMM kernels, their full
+//! parameter spaces (Table 1 of the paper: 14 parameters / 8748 points for
+//! `xgemm`, 9 parameters / 3888 points for `xgemm_direct`), structural and
+//! device legality, and the `(M, N, K)` input triples.
+
+mod direct;
+mod space;
+mod xgemm;
+
+pub use direct::DirectParams;
+pub use space::{direct_space, xgemm_space, ConfigSpace, ParamDef};
+pub use xgemm::XgemmParams;
+
+use crate::util::json::{Json, JsonError};
+
+/// A GEMM problem instance: the paper's input description `I`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Triple {
+    pub m: u32,
+    pub n: u32,
+    pub k: u32,
+}
+
+impl Triple {
+    pub const fn new(m: u32, n: u32, k: u32) -> Self {
+        Triple { m, n, k }
+    }
+
+    /// FLOPs of the multiply-accumulate: 2·M·N·K.
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+
+    /// Total operand+result elements (f32 words moved at least once).
+    pub fn footprint_elems(&self) -> u64 {
+        self.m as u64 * self.k as u64
+            + self.k as u64 * self.n as u64
+            + self.m as u64 * self.n as u64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(vec![
+            Json::num(self.m),
+            Json::num(self.n),
+            Json::num(self.k),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        let a = v.as_arr()?;
+        Ok(Triple::new(a[0].as_u32()?, a[1].as_u32()?, a[2].as_u32()?))
+    }
+}
+
+impl std::fmt::Display for Triple {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "({},{},{})", self.m, self.n, self.k)
+    }
+}
+
+/// Which GEMM kernel a configuration belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// The tiled "indirect" kernel (O(n^3) fast path + O(n^2) pad helpers).
+    Xgemm,
+    /// The generic one-pass "direct" kernel.
+    XgemmDirect,
+}
+
+impl KernelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Xgemm => "xgemm",
+            KernelKind::XgemmDirect => "xgemm_direct",
+        }
+    }
+}
+
+impl std::fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One point in the union search space: kernel + its parameter assignment.
+/// This is the paper's *class description* `C`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelConfig {
+    Xgemm(XgemmParams),
+    Direct(DirectParams),
+}
+
+impl KernelConfig {
+    pub fn kind(&self) -> KernelKind {
+        match self {
+            KernelConfig::Xgemm(_) => KernelKind::Xgemm,
+            KernelConfig::Direct(_) => KernelKind::XgemmDirect,
+        }
+    }
+
+    /// Stable unique name (doubles as the class label in datasets).
+    pub fn name(&self) -> String {
+        match self {
+            KernelConfig::Xgemm(p) => p.name(),
+            KernelConfig::Direct(p) => p.name(),
+        }
+    }
+
+    /// Structural legality (independent of device).
+    pub fn is_structurally_legal(&self) -> bool {
+        match self {
+            KernelConfig::Xgemm(p) => p.is_structurally_legal(),
+            KernelConfig::Direct(p) => p.is_structurally_legal(),
+        }
+    }
+
+    /// VMEM / local-memory footprint in bytes for one work-group/grid step.
+    pub fn scratch_bytes(&self) -> u64 {
+        match self {
+            KernelConfig::Xgemm(p) => p.scratch_bytes(),
+            KernelConfig::Direct(p) => p.scratch_bytes(),
+        }
+    }
+
+    /// "Work-group size" analogue (threads per group in CLBlast terms).
+    pub fn workgroup_size(&self) -> u32 {
+        match self {
+            KernelConfig::Xgemm(p) => p.mdimc * p.ndimc,
+            KernelConfig::Direct(p) => p.mdimcd * p.ndimcd,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            KernelConfig::Xgemm(p) => Json::obj(vec![
+                ("kernel", Json::str("xgemm")),
+                ("params", p.to_json()),
+            ]),
+            KernelConfig::Direct(p) => Json::obj(vec![
+                ("kernel", Json::str("xgemm_direct")),
+                ("params", p.to_json()),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        let kernel = v.get("kernel")?.as_str()?;
+        let params = v.get("params")?;
+        match kernel {
+            "xgemm" => Ok(KernelConfig::Xgemm(XgemmParams::from_json(params)?)),
+            "xgemm_direct" => {
+                Ok(KernelConfig::Direct(DirectParams::from_json(params)?))
+            }
+            other => Err(JsonError::Type("kernel name", Box::leak(other.to_string().into_boxed_str()))),
+        }
+    }
+}
+
+impl std::fmt::Display for KernelConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triple_flops() {
+        assert_eq!(Triple::new(2, 3, 4).flops(), 48.0);
+    }
+
+    #[test]
+    fn triple_json_roundtrip() {
+        let t = Triple::new(128, 64, 256);
+        assert_eq!(Triple::from_json(&t.to_json()).unwrap(), t);
+    }
+
+    #[test]
+    fn config_json_roundtrip() {
+        let c = KernelConfig::Xgemm(XgemmParams::default());
+        let back = KernelConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+        let d = KernelConfig::Direct(DirectParams::default());
+        assert_eq!(KernelConfig::from_json(&d.to_json()).unwrap(), d);
+    }
+
+    #[test]
+    fn config_names_unique_across_kernels() {
+        let a = KernelConfig::Xgemm(XgemmParams::default()).name();
+        let b = KernelConfig::Direct(DirectParams::default()).name();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,196 @@
+//! Search-space definition and enumeration — reproduces Table 1 of the
+//! paper exactly: the `xgemm` grid has 14 parameters and 8748 raw points
+//! (3^7 · 2^2), the `xgemm_direct` grid has 9 parameters and 3888 points
+//! (3^5 · 2^4).  Structural + device legality then filters the grid, as
+//! CLTune's constraint system does.
+
+use super::{DirectParams, KernelConfig, XgemmParams};
+
+/// One tunable parameter: name + the values the tuner may assign.
+#[derive(Debug, Clone)]
+pub struct ParamDef {
+    pub name: &'static str,
+    pub values: Vec<u32>,
+}
+
+impl ParamDef {
+    fn new(name: &'static str, values: &[u32]) -> Self {
+        ParamDef { name, values: values.to_vec() }
+    }
+}
+
+/// A kernel's full tuning space.
+#[derive(Debug, Clone)]
+pub struct ConfigSpace {
+    pub kernel: &'static str,
+    pub params: Vec<ParamDef>,
+    /// Materializes the config at a mixed-radix index of the raw grid.
+    builder: fn(&[u32]) -> KernelConfig,
+}
+
+impl ConfigSpace {
+    /// Raw grid size: the product of per-parameter value counts (Table 1's
+    /// "Search Space Size" column).
+    pub fn raw_size(&self) -> u64 {
+        self.params.iter().map(|p| p.values.len() as u64).product()
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Materialize the configuration at raw-grid index `idx` (mixed radix).
+    pub fn at(&self, idx: u64) -> KernelConfig {
+        let mut assignment = Vec::with_capacity(self.params.len());
+        let mut rem = idx;
+        for p in &self.params {
+            let radix = p.values.len() as u64;
+            assignment.push(p.values[(rem % radix) as usize]);
+            rem /= radix;
+        }
+        debug_assert_eq!(rem, 0, "index {idx} out of range");
+        (self.builder)(&assignment)
+    }
+
+    /// Iterate the entire raw grid.
+    pub fn iter(&self) -> impl Iterator<Item = KernelConfig> + '_ {
+        (0..self.raw_size()).map(move |i| self.at(i))
+    }
+
+    /// All structurally legal configurations.
+    pub fn structurally_legal(&self) -> Vec<KernelConfig> {
+        self.iter().filter(|c| c.is_structurally_legal()).collect()
+    }
+}
+
+/// The paper's xgemm tuning grid (Table 1 row 1: 14 params, 8748 points).
+pub fn xgemm_space() -> ConfigSpace {
+    ConfigSpace {
+        kernel: "xgemm",
+        params: vec![
+            ParamDef::new("MWG", &[32, 64, 128]),
+            ParamDef::new("NWG", &[32, 64, 128]),
+            ParamDef::new("KWG", &[16, 32, 64]),
+            ParamDef::new("MDIMC", &[8, 16, 32]),
+            ParamDef::new("NDIMC", &[8, 16, 32]),
+            ParamDef::new("MDIMA", &[16]),
+            ParamDef::new("NDIMB", &[16]),
+            ParamDef::new("KWI", &[2]),
+            ParamDef::new("VWM", &[1, 2, 4]),
+            ParamDef::new("VWN", &[1, 2, 4]),
+            ParamDef::new("STRM", &[0]),
+            ParamDef::new("STRN", &[0]),
+            ParamDef::new("SA", &[0, 1]),
+            ParamDef::new("SB", &[0, 1]),
+        ],
+        builder: |a| {
+            KernelConfig::Xgemm(XgemmParams {
+                mwg: a[0],
+                nwg: a[1],
+                kwg: a[2],
+                mdimc: a[3],
+                ndimc: a[4],
+                mdima: a[5],
+                ndimb: a[6],
+                kwi: a[7],
+                vwm: a[8],
+                vwn: a[9],
+                strm: a[10],
+                strn: a[11],
+                sa: a[12],
+                sb: a[13],
+            })
+        },
+    }
+}
+
+/// The paper's xgemm_direct grid (Table 1 row 2: 9 params, 3888 points).
+pub fn direct_space() -> ConfigSpace {
+    ConfigSpace {
+        kernel: "xgemm_direct",
+        params: vec![
+            ParamDef::new("WGD", &[8, 16, 32]),
+            ParamDef::new("MDIMCD", &[8, 16, 32]),
+            ParamDef::new("NDIMCD", &[8, 16, 32]),
+            ParamDef::new("MDIMAD", &[8, 16]),
+            ParamDef::new("VWMD", &[1, 2, 4]),
+            ParamDef::new("VWND", &[1, 2, 4]),
+            ParamDef::new("KWID", &[2, 8]),
+            ParamDef::new("PADA", &[0, 1]),
+            ParamDef::new("PADB", &[0, 1]),
+        ],
+        builder: |a| {
+            KernelConfig::Direct(DirectParams {
+                wgd: a[0],
+                mdimcd: a[1],
+                ndimcd: a[2],
+                mdimad: a[3],
+                vwmd: a[4],
+                vwnd: a[5],
+                kwid: a[6],
+                pada: a[7],
+                padb: a[8],
+            })
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn table1_raw_sizes_exact() {
+        // The paper's Table 1.
+        assert_eq!(xgemm_space().raw_size(), 8748);
+        assert_eq!(xgemm_space().num_params(), 14);
+        assert_eq!(direct_space().raw_size(), 3888);
+        assert_eq!(direct_space().num_params(), 9);
+    }
+
+    #[test]
+    fn enumeration_is_unique() {
+        let s = xgemm_space();
+        let all: HashSet<String> = s.iter().map(|c| c.name()).collect();
+        // Pinned params don't appear in the name; distinct names = distinct
+        // behavioural configs.
+        assert_eq!(all.len() as u64, s.raw_size());
+    }
+
+    #[test]
+    fn structurally_legal_subset_nonempty_and_smaller() {
+        let s = xgemm_space();
+        let legal = s.structurally_legal();
+        assert!(!legal.is_empty());
+        assert!((legal.len() as u64) < s.raw_size());
+        assert!(legal.iter().all(|c| c.is_structurally_legal()));
+
+        let d = direct_space();
+        let legal_d = d.structurally_legal();
+        assert!(!legal_d.is_empty());
+        assert!((legal_d.len() as u64) < d.raw_size());
+    }
+
+    #[test]
+    fn at_roundtrips_first_and_last() {
+        let s = direct_space();
+        let first = s.at(0);
+        let last = s.at(s.raw_size() - 1);
+        assert_ne!(first, last);
+        if let KernelConfig::Direct(p) = first {
+            assert_eq!(p.wgd, 8);
+        } else {
+            panic!("wrong kind");
+        }
+    }
+
+    #[test]
+    fn default_configs_inside_grid() {
+        // CLBlast's defaults must be reachable points of the search space.
+        let x = KernelConfig::Xgemm(XgemmParams::default());
+        assert!(xgemm_space().iter().any(|c| c == x));
+        let d = KernelConfig::Direct(DirectParams::default());
+        assert!(direct_space().iter().any(|c| c == d));
+    }
+}

@@ -1,0 +1,227 @@
+//! The `xgemm` (indirect) kernel's 14-parameter tuning space — CLBlast's
+//! tiled GEMM kernel.  The grid reproduces the paper's Table 1: exactly
+//! 8748 = 3^7 · 2^2 raw points over 14 parameters (five of which are
+//! pinned to a single value in the paper's CLTune setup, as here).
+
+use crate::util::json::{Json, JsonError};
+
+/// Full CLBlast xgemm parameter assignment.
+///
+/// Pallas mapping (DESIGN.md §Hardware-Adaptation): `mwg/nwg/kwg` are the
+/// BlockSpec tiles, `mdimc/ndimc` the inner sub-tile decomposition,
+/// `vwm/vwn` alignment legality, `sa/sb` VMEM staging.  `mdima/ndimb/kwi/
+/// strm/strn` shape only the OpenCL thread layout and survive as carried
+/// metadata (single-valued in this study, as in the paper's tuner setup).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct XgemmParams {
+    /// Work-group tile rows of C.
+    pub mwg: u32,
+    /// Work-group tile cols of C.
+    pub nwg: u32,
+    /// K-loop tile.
+    pub kwg: u32,
+    /// Threads in M within a work-group (register tile MWI = MWG/MDIMC).
+    pub mdimc: u32,
+    /// Threads in N within a work-group (register tile NWI = NWG/NDIMC).
+    pub ndimc: u32,
+    /// Re-shaped tile dimension for loading A (pinned).
+    pub mdima: u32,
+    /// Re-shaped tile dimension for loading B (pinned).
+    pub ndimb: u32,
+    /// K-loop unroll factor (pinned).
+    pub kwi: u32,
+    /// Vector width for loading A.
+    pub vwm: u32,
+    /// Vector width for loading B.
+    pub vwn: u32,
+    /// Stride for accessing A within a thread (pinned).
+    pub strm: u32,
+    /// Stride for accessing B within a thread (pinned).
+    pub strn: u32,
+    /// Stage A tile through local memory / VMEM scratch.
+    pub sa: u32,
+    /// Stage B tile through local memory / VMEM scratch.
+    pub sb: u32,
+}
+
+impl Default for XgemmParams {
+    /// CLBlast's shipped default configuration (tuned for M=N=K=1024).
+    fn default() -> Self {
+        XgemmParams {
+            mwg: 64,
+            nwg: 64,
+            kwg: 32,
+            mdimc: 16,
+            ndimc: 16,
+            mdima: 16,
+            ndimb: 16,
+            kwi: 2,
+            vwm: 2,
+            vwn: 2,
+            strm: 0,
+            strn: 0,
+            sa: 1,
+            sb: 1,
+        }
+    }
+}
+
+impl XgemmParams {
+    /// Inner register tile rows (CLBlast MWI).
+    pub fn mwi(&self) -> u32 {
+        self.mwg / self.mdimc
+    }
+
+    /// Inner register tile cols (CLBlast NWI).
+    pub fn nwi(&self) -> u32 {
+        self.nwg / self.ndimc
+    }
+
+    /// Structural legality — mirrors CLBlast's tuner constraints and the
+    /// python-side `GemmConfig.validate`.
+    pub fn is_structurally_legal(&self) -> bool {
+        self.mwg % self.mdimc == 0
+            && self.nwg % self.ndimc == 0
+            && self.mwi() % self.vwm == 0
+            && self.nwi() % self.vwn == 0
+            && self.kwg % self.kwi == 0
+            && self.mwg % self.mdima == 0
+            && self.nwg % self.ndimb == 0
+            && self.sa <= 1
+            && self.sb <= 1
+    }
+
+    /// Local-memory / VMEM bytes for one work-group step (f32).
+    /// A block + B block + C accumulator + staged copies.
+    pub fn scratch_bytes(&self) -> u64 {
+        let a = (self.mwg * self.kwg) as u64;
+        let b = (self.kwg * self.nwg) as u64;
+        let c = (self.mwg * self.nwg) as u64;
+        let staged = self.sa as u64 * a + self.sb as u64 * b;
+        (a + b + c + staged) * 4
+    }
+
+    /// CLBlast's local-memory usage (only the staged tiles count on GPU).
+    pub fn local_mem_bytes(&self) -> u64 {
+        (self.sa as u64 * (self.mwg * self.kwg) as u64
+            + self.sb as u64 * (self.kwg * self.nwg) as u64)
+            * 4
+    }
+
+    pub fn name(&self) -> String {
+        format!(
+            "x_m{}n{}k{}_c{}x{}_v{}x{}_s{}{}",
+            self.mwg,
+            self.nwg,
+            self.kwg,
+            self.mdimc,
+            self.ndimc,
+            self.vwm,
+            self.vwn,
+            self.sa,
+            self.sb
+        )
+    }
+
+    /// A compact stable u64 fingerprint (used for deterministic sim noise).
+    pub fn fingerprint(&self) -> u64 {
+        let fields = [
+            self.mwg, self.nwg, self.kwg, self.mdimc, self.ndimc, self.mdima,
+            self.ndimb, self.kwi, self.vwm, self.vwn, self.strm, self.strn,
+            self.sa, self.sb,
+        ];
+        fields
+            .iter()
+            .fold(0xcbf2_9ce4_8422_2325u64, |h, &f| {
+                (h ^ f as u64).wrapping_mul(0x100_0000_01b3)
+            })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mwg", Json::num(self.mwg)),
+            ("nwg", Json::num(self.nwg)),
+            ("kwg", Json::num(self.kwg)),
+            ("mdimc", Json::num(self.mdimc)),
+            ("ndimc", Json::num(self.ndimc)),
+            ("mdima", Json::num(self.mdima)),
+            ("ndimb", Json::num(self.ndimb)),
+            ("kwi", Json::num(self.kwi)),
+            ("vwm", Json::num(self.vwm)),
+            ("vwn", Json::num(self.vwn)),
+            ("strm", Json::num(self.strm)),
+            ("strn", Json::num(self.strn)),
+            ("sa", Json::num(self.sa)),
+            ("sb", Json::num(self.sb)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        let g = |k: &str| -> Result<u32, JsonError> { v.get(k)?.as_u32() };
+        Ok(XgemmParams {
+            mwg: g("mwg")?,
+            nwg: g("nwg")?,
+            kwg: g("kwg")?,
+            mdimc: g("mdimc")?,
+            ndimc: g("ndimc")?,
+            mdima: v.get_or("mdima", &Json::Num(16.0)).as_u32()?,
+            ndimb: v.get_or("ndimb", &Json::Num(16.0)).as_u32()?,
+            kwi: v.get_or("kwi", &Json::Num(2.0)).as_u32()?,
+            vwm: g("vwm")?,
+            vwn: g("vwn")?,
+            strm: v.get_or("strm", &Json::Num(0.0)).as_u32()?,
+            strn: v.get_or("strn", &Json::Num(0.0)).as_u32()?,
+            sa: g("sa")?,
+            sb: g("sb")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_legal() {
+        assert!(XgemmParams::default().is_structurally_legal());
+    }
+
+    #[test]
+    fn mwi_nwi() {
+        let p = XgemmParams { mwg: 128, mdimc: 32, ..Default::default() };
+        assert_eq!(p.mwi(), 4);
+    }
+
+    #[test]
+    fn illegal_when_not_divisible() {
+        let p = XgemmParams { mwg: 96, mdimc: 32, vwm: 1, ..Default::default() };
+        assert!(p.is_structurally_legal());
+        let p = XgemmParams { mwg: 100, mdimc: 32, ..Default::default() };
+        assert!(!p.is_structurally_legal());
+    }
+
+    #[test]
+    fn scratch_and_local_mem() {
+        let p = XgemmParams {
+            mwg: 64, nwg: 64, kwg: 32, sa: 1, sb: 0, ..Default::default()
+        };
+        assert_eq!(p.local_mem_bytes(), 64 * 32 * 4);
+        assert_eq!(
+            p.scratch_bytes(),
+            ((64 * 32) + (32 * 64) + (64 * 64) + (64 * 32)) as u64 * 4
+        );
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = XgemmParams { mwg: 128, vwm: 4, sa: 0, ..Default::default() };
+        assert_eq!(XgemmParams::from_json(&p.to_json()).unwrap(), p);
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_fields() {
+        let a = XgemmParams::default();
+        let b = XgemmParams { sb: 0, ..a };
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+}

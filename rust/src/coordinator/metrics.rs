@@ -1,0 +1,111 @@
+//! Serving metrics: per-request latency records and aggregate
+//! throughput/latency statistics for the coordinator.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::util::stats::Summary;
+
+/// One completed request's measurements.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub artifact: String,
+    pub queue: Duration,
+    pub service: Duration,
+    pub flops: f64,
+}
+
+/// Aggregated serving statistics.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    pub n_requests: usize,
+    pub wall: Duration,
+    pub latency: Summary,
+    pub queue: Summary,
+    pub total_gflop: f64,
+    pub per_artifact: BTreeMap<String, usize>,
+}
+
+impl ServeStats {
+    pub fn from_records(records: &[RequestRecord], wall: Duration) -> ServeStats {
+        assert!(!records.is_empty(), "no records");
+        let lat: Vec<f64> = records
+            .iter()
+            .map(|r| (r.queue + r.service).as_secs_f64())
+            .collect();
+        let q: Vec<f64> = records.iter().map(|r| r.queue.as_secs_f64()).collect();
+        let mut per_artifact = BTreeMap::new();
+        for r in records {
+            *per_artifact.entry(r.artifact.clone()).or_insert(0) += 1;
+        }
+        ServeStats {
+            n_requests: records.len(),
+            wall,
+            latency: Summary::of(&lat),
+            queue: Summary::of(&q),
+            total_gflop: records.iter().map(|r| r.flops).sum::<f64>() / 1e9,
+            per_artifact,
+        }
+    }
+
+    /// Requests per second.
+    pub fn rps(&self) -> f64 {
+        self.n_requests as f64 / self.wall.as_secs_f64()
+    }
+
+    /// Aggregate GFLOP/s.
+    pub fn gflops(&self) -> f64 {
+        self.total_gflop / self.wall.as_secs_f64()
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "requests: {}  wall: {:.3}s  throughput: {:.1} req/s, {:.2} GFLOP/s\n\
+             latency  p50 {:.3}ms  p95 {:.3}ms  max {:.3}ms (queue p50 {:.3}ms)\n",
+            self.n_requests,
+            self.wall.as_secs_f64(),
+            self.rps(),
+            self.gflops(),
+            self.latency.median * 1e3,
+            self.latency.p95 * 1e3,
+            self.latency.max * 1e3,
+            self.queue.median * 1e3,
+        );
+        s.push_str("per-artifact:\n");
+        for (a, n) in &self.per_artifact {
+            s.push_str(&format!("  {a:<52} {n}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(artifact: &str, ms: u64) -> RequestRecord {
+        RequestRecord {
+            artifact: artifact.into(),
+            queue: Duration::from_millis(1),
+            service: Duration::from_millis(ms),
+            flops: 1e9,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let records = vec![rec("a", 10), rec("a", 20), rec("b", 30)];
+        let stats = ServeStats::from_records(&records, Duration::from_secs(1));
+        assert_eq!(stats.n_requests, 3);
+        assert_eq!(stats.per_artifact["a"], 2);
+        assert!((stats.rps() - 3.0).abs() < 1e-9);
+        assert!((stats.gflops() - 3.0).abs() < 1e-9);
+        assert!(stats.report().contains("per-artifact"));
+    }
+
+    #[test]
+    #[should_panic(expected = "no records")]
+    fn empty_panics() {
+        ServeStats::from_records(&[], Duration::from_secs(1));
+    }
+}

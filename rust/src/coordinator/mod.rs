@@ -1,0 +1,11 @@
+//! The on-line coordinator (L3): request server with dynamic batching,
+//! selection policies (model-driven / default / oracle) and serving
+//! metrics.  See `server` for the threading topology.
+
+pub mod metrics;
+pub mod policy;
+pub mod server;
+
+pub use metrics::{RequestRecord, ServeStats};
+pub use policy::{DefaultPolicy, ModelPolicy, OraclePolicy, SelectPolicy};
+pub use server::{GemmRequest, GemmResponse, GemmServer, ServerConfig, ServerHandle};

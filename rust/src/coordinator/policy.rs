@@ -1,0 +1,173 @@
+//! Selection policies — the on-line half of the paper.
+//!
+//! * [`ModelPolicy`] — the paper's contribution: the trained decision
+//!   tree, executed as the flattened if-then-else selector.
+//! * [`DefaultPolicy`] — CLBlast's baseline: one configuration per kernel
+//!   tuned for the default size, chosen by a threshold cut.
+//! * [`OraclePolicy`] — the tuner peak: per-triple best from the tuning
+//!   database (an upper bound, not deployable without the database).
+
+use crate::codegen::FlatTree;
+use crate::config::{KernelConfig, KernelKind, Triple};
+use crate::dataset::ClassTable;
+use crate::dtree::DecisionTree;
+use crate::tuner::TuningDb;
+
+/// A run-time kernel-configuration selector.
+pub trait SelectPolicy: Send {
+    fn name(&self) -> &str;
+    fn select(&self, t: Triple) -> KernelConfig;
+}
+
+/// The model-driven selector (flattened decision tree).
+pub struct ModelPolicy {
+    name: String,
+    flat: FlatTree,
+    classes: Vec<KernelConfig>,
+}
+
+impl ModelPolicy {
+    pub fn new(tree: &DecisionTree, classes: &ClassTable) -> ModelPolicy {
+        ModelPolicy {
+            name: format!("model:{}", tree.name),
+            flat: FlatTree::from_tree(tree),
+            classes: classes.iter().map(|(_, c)| *c).collect(),
+        }
+    }
+}
+
+impl SelectPolicy for ModelPolicy {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn select(&self, t: Triple) -> KernelConfig {
+        let class = self.flat.predict(t.m, t.n, t.k) as usize;
+        self.classes[class.min(self.classes.len() - 1)]
+    }
+}
+
+/// CLBlast's default threshold heuristic, parameterized by the two
+/// default configurations (so the server can restrict to roster configs).
+pub struct DefaultPolicy {
+    pub direct: KernelConfig,
+    pub xgemm: KernelConfig,
+    /// Geometric-mean cut between the kernels.
+    pub threshold_geo: f64,
+}
+
+impl DefaultPolicy {
+    /// The paper's library defaults.
+    pub fn clblast() -> DefaultPolicy {
+        DefaultPolicy {
+            direct: KernelConfig::Direct(Default::default()),
+            xgemm: KernelConfig::Xgemm(Default::default()),
+            threshold_geo: 384.0,
+        }
+    }
+
+    /// Defaults restricted to a served roster: picks the first config of
+    /// each kind (the roster is ordered with the shipped defaults first).
+    pub fn from_roster(roster: &[KernelConfig]) -> Option<DefaultPolicy> {
+        let direct = *roster.iter().find(|c| c.kind() == KernelKind::XgemmDirect)?;
+        let xgemm = *roster.iter().find(|c| c.kind() == KernelKind::Xgemm)?;
+        Some(DefaultPolicy { direct, xgemm, threshold_geo: 384.0 })
+    }
+}
+
+impl SelectPolicy for DefaultPolicy {
+    fn name(&self) -> &str {
+        "default"
+    }
+
+    fn select(&self, t: Triple) -> KernelConfig {
+        let geo = (t.m as f64 * t.n as f64 * t.k as f64).cbrt();
+        if geo < self.threshold_geo {
+            self.direct
+        } else {
+            self.xgemm
+        }
+    }
+}
+
+/// Tuner-peak oracle with a default fallback for unseen triples.
+pub struct OraclePolicy {
+    pub db: TuningDb,
+    pub fallback: DefaultPolicy,
+}
+
+impl SelectPolicy for OraclePolicy {
+    fn name(&self) -> &str {
+        "peak-oracle"
+    }
+
+    fn select(&self, t: Triple) -> KernelConfig {
+        match self.db.best(t) {
+            Some((cfg, _)) => *cfg,
+            None => self.fallback.select(t),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DirectParams, XgemmParams};
+    use crate::dtree::{train, MinSamples, TrainParams};
+
+    #[test]
+    fn model_policy_matches_tree() {
+        let mut classes = ClassTable::new();
+        let c0 = classes.intern(KernelConfig::Direct(DirectParams::default()));
+        let c1 = classes.intern(KernelConfig::Xgemm(XgemmParams::default()));
+        let data: Vec<(Triple, u32)> = (1..100)
+            .map(|i| {
+                let t = Triple::new(i * 20, 64, 64);
+                (t, if t.m < 1000 { c0 } else { c1 })
+            })
+            .collect();
+        let tree = train(
+            &data,
+            2,
+            TrainParams { max_depth: None, min_samples_leaf: MinSamples::Count(1) },
+        );
+        let policy = ModelPolicy::new(&tree, &classes);
+        for (t, c) in &data {
+            assert_eq!(policy.select(*t), *classes.config(*c));
+        }
+        assert!(policy.name().starts_with("model:"));
+    }
+
+    #[test]
+    fn default_policy_threshold() {
+        let p = DefaultPolicy::clblast();
+        assert_eq!(p.select(Triple::new(16, 16, 16)).kind(), KernelKind::XgemmDirect);
+        assert_eq!(p.select(Triple::new(2048, 2048, 2048)).kind(), KernelKind::Xgemm);
+    }
+
+    #[test]
+    fn default_from_roster() {
+        let roster = vec![
+            KernelConfig::Xgemm(XgemmParams { mwg: 128, ..Default::default() }),
+            KernelConfig::Direct(DirectParams { wgd: 16, ..Default::default() }),
+        ];
+        let p = DefaultPolicy::from_roster(&roster).unwrap();
+        assert_eq!(p.xgemm, roster[0]);
+        assert_eq!(p.direct, roster[1]);
+        assert!(DefaultPolicy::from_roster(&roster[..1].to_vec()).is_none());
+    }
+
+    #[test]
+    fn oracle_uses_db_then_fallback() {
+        let mut db = TuningDb::new("x");
+        let best = KernelConfig::Xgemm(XgemmParams { mwg: 128, ..Default::default() });
+        db.insert(Triple::new(5, 5, 5), best, 1.0);
+        let p = OraclePolicy { db, fallback: DefaultPolicy::clblast() };
+        assert_eq!(p.select(Triple::new(5, 5, 5)), best);
+        // Unseen: falls back to the threshold heuristic.
+        assert_eq!(
+            p.select(Triple::new(4096, 4096, 4096)).kind(),
+            KernelKind::Xgemm
+        );
+    }
+}

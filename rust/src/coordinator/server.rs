@@ -1,0 +1,242 @@
+//! The adaptive GEMM server — the on-line coordinator.
+//!
+//! Topology: client threads submit [`GemmRequest`]s over a channel; the
+//! dispatcher thread selects a kernel configuration per request (via the
+//! active [`SelectPolicy`]), resolves it to an AOT artifact, groups the
+//! pending window by artifact (the dynamic batcher — consecutive
+//! executions of one executable amortize instruction/data cache misses
+//! and avoid executable switching), and runs them on the PJRT executor it
+//! exclusively owns.  Responses flow back over per-request channels.
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Triple;
+use crate::runtime::{GemmInput, GemmRuntime};
+
+use super::metrics::{RequestRecord, ServeStats};
+use super::policy::SelectPolicy;
+
+/// An owned GEMM request.
+#[derive(Debug, Clone)]
+pub struct GemmRequest {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+    pub c: Vec<f32>,
+    pub alpha: f32,
+    pub beta: f32,
+}
+
+impl GemmRequest {
+    pub fn triple(&self) -> Triple {
+        Triple::new(self.m as u32, self.n as u32, self.k as u32)
+    }
+}
+
+/// A served response.
+#[derive(Debug)]
+pub struct GemmResponse {
+    pub out: Result<Vec<f32>>,
+    pub artifact: String,
+    pub queue: Duration,
+    pub service: Duration,
+}
+
+/// Server tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    /// Max requests coalesced into one dispatch window.
+    pub max_batch: usize,
+    /// How long the dispatcher waits to fill a window.
+    pub batch_window: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 32,
+            batch_window: Duration::from_micros(200),
+        }
+    }
+}
+
+struct Envelope {
+    req: GemmRequest,
+    submitted: Instant,
+    reply: mpsc::Sender<GemmResponse>,
+}
+
+/// Handle for submitting work.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: mpsc::Sender<Envelope>,
+}
+
+impl ServerHandle {
+    /// Submit a request; returns the channel the response arrives on.
+    pub fn submit(&self, req: GemmRequest) -> mpsc::Receiver<GemmResponse> {
+        let (reply, rx) = mpsc::channel();
+        let _ = self.tx.send(Envelope { req, submitted: Instant::now(), reply });
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn call(&self, req: GemmRequest) -> Result<GemmResponse> {
+        self.submit(req)
+            .recv()
+            .map_err(|_| anyhow!("server shut down before responding"))
+    }
+}
+
+/// The running server.
+pub struct GemmServer {
+    handle: Option<ServerHandle>,
+    worker: Option<JoinHandle<Vec<RequestRecord>>>,
+    started: Instant,
+}
+
+impl GemmServer {
+    /// Start the server.  The PJRT runtime is *created on the dispatcher
+    /// thread* (PJRT handles are not `Send`); startup errors are reported
+    /// synchronously through a ready-channel.
+    pub fn start(
+        artifacts: &Path,
+        policy: Box<dyn SelectPolicy>,
+        cfg: ServerConfig,
+    ) -> Result<GemmServer> {
+        let dir = artifacts.to_path_buf();
+        let (tx, rx) = mpsc::channel::<Envelope>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let worker = std::thread::spawn(move || {
+            let mut runtime = match GemmRuntime::open(&dir) {
+                Ok(r) => {
+                    let _ = ready_tx.send(Ok(()));
+                    r
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                    return Vec::new();
+                }
+            };
+            let mut records = Vec::new();
+            let mut window: Vec<Envelope> = Vec::with_capacity(cfg.max_batch);
+            loop {
+                // Block for the first request of a window.
+                match rx.recv() {
+                    Err(_) => break, // all senders dropped: shutdown
+                    Ok(env) => window.push(env),
+                }
+                // Fill the window for up to `batch_window`.
+                let deadline = Instant::now() + cfg.batch_window;
+                while window.len() < cfg.max_batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(env) => window.push(env),
+                        Err(_) => break,
+                    }
+                }
+                // Resolve artifacts, then group the window by artifact
+                // (stable sort keeps FIFO order within a group).
+                let mut resolved: Vec<(String, Envelope)> = window
+                    .drain(..)
+                    .map(|env| {
+                        let t = env.req.triple();
+                        let cfg_sel = policy.select(t);
+                        let artifact = runtime
+                            .manifest
+                            .artifact_for_config(&cfg_sel, t)
+                            // Fallback: any artifact accepting t (least waste).
+                            .or_else(|| runtime.manifest.eligible(t).first().copied())
+                            .map(|a| a.name.clone())
+                            .unwrap_or_default();
+                        (artifact, env)
+                    })
+                    .collect();
+                resolved.sort_by(|a, b| a.0.cmp(&b.0));
+
+                for (artifact, env) in resolved {
+                    let queue = env.submitted.elapsed();
+                    let t0 = Instant::now();
+                    let result = if artifact.is_empty() {
+                        Err(anyhow!(
+                            "no artifact accepts {}",
+                            env.req.triple()
+                        ))
+                    } else {
+                        runtime
+                            .gemm(
+                                &artifact,
+                                &GemmInput {
+                                    m: env.req.m,
+                                    n: env.req.n,
+                                    k: env.req.k,
+                                    a: &env.req.a,
+                                    b: &env.req.b,
+                                    c: &env.req.c,
+                                    alpha: env.req.alpha,
+                                    beta: env.req.beta,
+                                },
+                            )
+                            .map(|o| o.out)
+                    };
+                    let service = t0.elapsed();
+                    if result.is_ok() {
+                        records.push(RequestRecord {
+                            artifact: artifact.clone(),
+                            queue,
+                            service,
+                            flops: env.req.triple().flops(),
+                        });
+                    }
+                    let _ = env.reply.send(GemmResponse {
+                        out: result,
+                        artifact,
+                        queue,
+                        service,
+                    });
+                }
+            }
+            records
+        });
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(GemmServer {
+                handle: Some(ServerHandle { tx }),
+                worker: Some(worker),
+                started: Instant::now(),
+            }),
+            Ok(Err(msg)) => {
+                let _ = worker.join();
+                Err(anyhow!("server startup failed: {msg}"))
+            }
+            Err(_) => Err(anyhow!("server thread died during startup")),
+        }
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.as_ref().expect("server running").clone()
+    }
+
+    /// Shut down and collect serving statistics (None if nothing served).
+    pub fn shutdown(mut self) -> Option<ServeStats> {
+        let wall = self.started.elapsed();
+        // Drop our sender so the worker's recv() errors out once all
+        // client handles are gone.
+        self.handle = None;
+        let records = self.worker.take()?.join().ok()?;
+        if records.is_empty() {
+            None
+        } else {
+            Some(ServeStats::from_records(&records, wall))
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! The `AntonNet` real-world dataset: GEMM operand shapes profiled from
+//! AlexNet, GoogLeNet and SqueezeNet inference, batch sizes 2..=128 step 2
+//! (paper §4.1: ~460 unique triples, ~35% with K = 1, mostly rectangular).
+//!
+//! The paper gathered these by instrumenting CLBlast under the three
+//! networks; we reconstruct the same population from the networks'
+//! published layer shapes (DESIGN.md §Substitutions):
+//!
+//! * convolution via im2col: M = C_out, N = H_out * W_out, K = C_in*KH*KW
+//!   (spatial N is batch-independent; CLBlast sees per-image GEMMs, the
+//!   batch enters through fully-connected layers and repeated calls);
+//! * fully-connected: M = features_out, N = batch, K = features_in;
+//! * bias / residual rank-1 updates: M = C_out, N = spatial or batch,
+//!   K = 1 — the source of the paper's 35% K=1 population.
+
+use crate::config::Triple;
+
+/// One conv layer: (c_out, c_in, kh, kw, h_out, w_out).
+struct Conv(u32, u32, u32, u32, u32, u32);
+
+/// One fully-connected layer: (features_out, features_in).
+struct Fc(u32, u32);
+
+/// AlexNet (Krizhevsky et al. 2012), 227x227 input.
+fn alexnet() -> (Vec<Conv>, Vec<Fc>) {
+    (
+        vec![
+            Conv(96, 3, 11, 11, 55, 55),
+            Conv(256, 96, 5, 5, 27, 27),
+            Conv(384, 256, 3, 3, 13, 13),
+            Conv(384, 384, 3, 3, 13, 13),
+            Conv(256, 384, 3, 3, 13, 13),
+        ],
+        vec![Fc(4096, 9216), Fc(4096, 4096), Fc(1000, 4096)],
+    )
+}
+
+/// GoogLeNet (Szegedy et al. 2015) — stem + the 9 inception modules'
+/// distinct GEMM shapes (1x1 / 3x3 / 5x5 branches and projections).
+fn googlenet() -> (Vec<Conv>, Vec<Fc>) {
+    let mut convs = vec![
+        Conv(64, 3, 7, 7, 112, 112),
+        Conv(64, 64, 1, 1, 56, 56),
+        Conv(192, 64, 3, 3, 56, 56),
+    ];
+    // (in_ch, spatial, branch channel sets) per inception module.
+    let modules: [(u32, u32, [u32; 6]); 9] = [
+        (192, 28, [64, 96, 128, 16, 32, 32]),
+        (256, 28, [128, 128, 192, 32, 96, 64]),
+        (480, 14, [192, 96, 208, 16, 48, 64]),
+        (512, 14, [160, 112, 224, 24, 64, 64]),
+        (512, 14, [128, 128, 256, 24, 64, 64]),
+        (512, 14, [112, 144, 288, 32, 64, 64]),
+        (528, 14, [256, 160, 320, 32, 128, 128]),
+        (832, 7, [256, 160, 320, 32, 128, 128]),
+        (832, 7, [384, 192, 384, 48, 128, 128]),
+    ];
+    for (c_in, s, [b1, b3r, b3, b5r, b5, pp]) in modules {
+        convs.push(Conv(b1, c_in, 1, 1, s, s)); // 1x1 branch
+        convs.push(Conv(b3r, c_in, 1, 1, s, s)); // 3x3 reduce
+        convs.push(Conv(b3, b3r, 3, 3, s, s)); // 3x3
+        convs.push(Conv(b5r, c_in, 1, 1, s, s)); // 5x5 reduce
+        convs.push(Conv(b5, b5r, 5, 5, s, s)); // 5x5
+        convs.push(Conv(pp, c_in, 1, 1, s, s)); // pool projection
+    }
+    (convs, vec![Fc(1000, 1024)])
+}
+
+/// SqueezeNet 1.0 (Iandola et al. 2016): conv1 + 8 fire modules + conv10.
+fn squeezenet() -> (Vec<Conv>, Vec<Fc>) {
+    let mut convs = vec![Conv(96, 3, 7, 7, 111, 111)];
+    // (squeeze, expand, in_ch, spatial) per fire module.
+    let fires: [(u32, u32, u32, u32); 8] = [
+        (16, 64, 96, 55),
+        (16, 64, 128, 55),
+        (32, 128, 128, 55),
+        (32, 128, 256, 27),
+        (48, 192, 256, 27),
+        (48, 192, 384, 27),
+        (64, 256, 384, 27),
+        (64, 256, 512, 13),
+    ];
+    for (s, e, c_in, sp) in fires {
+        convs.push(Conv(s, c_in, 1, 1, sp, sp)); // squeeze 1x1
+        convs.push(Conv(e, s, 1, 1, sp, sp)); // expand 1x1
+        convs.push(Conv(e, s, 3, 3, sp, sp)); // expand 3x3
+    }
+    convs.push(Conv(1000, 512, 1, 1, 13, 13)); // conv10
+    (convs, vec![])
+}
+
+/// Batch sizes profiled by the paper: 2..=128 step 2.
+pub fn batches() -> Vec<u32> {
+    (1..=64).map(|i| i * 2).collect()
+}
+
+/// Generate the full AntonNet triple population (deduplicated, sorted).
+pub fn triples() -> Vec<Triple> {
+    let mut set = std::collections::BTreeSet::new();
+    let nets = [alexnet(), googlenet(), squeezenet()];
+    for (convs, fcs) in &nets {
+        for Conv(c_out, c_in, kh, kw, h, w) in convs {
+            let m = *c_out;
+            let n = h * w;
+            let k = c_in * kh * kw;
+            // im2col GEMM (per image; CLBlast sees one call per image).
+            set.insert(Triple::new(m, n, k));
+            // bias broadcast as rank-1 GEMM: the K=1 population.
+            set.insert(Triple::new(m, n, 1));
+        }
+        for Fc(f_out, f_in) in fcs {
+            for b in batches() {
+                set.insert(Triple::new(*f_out, b, *f_in));
+                set.insert(Triple::new(*f_out, b, 1)); // bias
+            }
+        }
+    }
+    set.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn population_close_to_paper() {
+        // Paper: "roughly 460 different triples".
+        let t = triples();
+        assert!(
+            (380..=560).contains(&t.len()),
+            "AntonNet population {} outside the paper's ballpark",
+            t.len()
+        );
+    }
+
+    #[test]
+    fn k1_fraction_close_to_paper() {
+        // Paper: "35% of them having K = 1".
+        let t = triples();
+        let k1 = t.iter().filter(|t| t.k == 1).count() as f64 / t.len() as f64;
+        assert!(
+            (0.20..=0.50).contains(&k1),
+            "K=1 fraction {k1:.2} outside the paper's ballpark"
+        );
+    }
+
+    #[test]
+    fn mostly_rectangular() {
+        // Paper: "the other shapes are mostly rectangular".
+        let t = triples();
+        let square = t
+            .iter()
+            .filter(|t| t.m == t.n && t.n == t.k)
+            .count() as f64
+            / t.len() as f64;
+        assert!(square < 0.05, "square fraction {square:.2} too high");
+    }
+
+    #[test]
+    fn batch_range_matches_paper() {
+        let b = batches();
+        assert_eq!(b.first(), Some(&2));
+        assert_eq!(b.last(), Some(&128));
+        assert_eq!(b.len(), 64);
+    }
+
+    #[test]
+    fn contains_known_alexnet_fc_shape() {
+        // FC6 at batch 128: (4096, 128, 9216).
+        assert!(triples().contains(&Triple::new(4096, 128, 9216)));
+    }
+}

@@ -1,0 +1,231 @@
+//! Labeled datasets: the paper's `D = {(I, C)}` — triples paired with the
+//! best kernel configuration the tuner found, interned through a class
+//! table so the decision tree trains on compact integer labels.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::{KernelConfig, KernelKind, Triple};
+use crate::util::json::Json;
+
+use super::DatasetKind;
+
+/// Compact class label (index into the `ClassTable`).
+pub type ClassId = u32;
+
+/// Interns kernel configurations as dense class ids.
+#[derive(Debug, Clone, Default)]
+pub struct ClassTable {
+    configs: Vec<KernelConfig>,
+    index: HashMap<KernelConfig, ClassId>,
+}
+
+impl ClassTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn intern(&mut self, cfg: KernelConfig) -> ClassId {
+        if let Some(&id) = self.index.get(&cfg) {
+            return id;
+        }
+        let id = self.configs.len() as ClassId;
+        self.configs.push(cfg);
+        self.index.insert(cfg, id);
+        id
+    }
+
+    pub fn get(&self, id: ClassId) -> Option<&KernelConfig> {
+        self.configs.get(id as usize)
+    }
+
+    pub fn config(&self, id: ClassId) -> &KernelConfig {
+        &self.configs[id as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.configs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.configs.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (ClassId, &KernelConfig)> {
+        self.configs.iter().enumerate().map(|(i, c)| (i as ClassId, c))
+    }
+
+    /// Count of distinct configs per kernel (Tables 3/4 columns 3-4).
+    pub fn unique_per_kernel(&self) -> (usize, usize) {
+        let x = self
+            .configs
+            .iter()
+            .filter(|c| c.kind() == KernelKind::Xgemm)
+            .count();
+        (x, self.configs.len() - x)
+    }
+}
+
+/// A labeled dataset ready for training.
+#[derive(Debug, Clone)]
+pub struct LabeledDataset {
+    pub kind: DatasetKind,
+    pub device: String,
+    pub entries: Vec<(Triple, ClassId)>,
+    pub classes: ClassTable,
+}
+
+impl LabeledDataset {
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Subset by index list (train/test split views).
+    pub fn subset(&self, idx: &[usize]) -> Vec<(Triple, ClassId)> {
+        idx.iter().map(|&i| self.entries[i]).collect()
+    }
+
+    // ------------------------------------------------------- persistence
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(self.kind.name())),
+            ("device", Json::str(self.device.clone())),
+            (
+                "classes",
+                Json::Arr(self.classes.configs.iter().map(|c| c.to_json()).collect()),
+            ),
+            (
+                "entries",
+                Json::Arr(
+                    self.entries
+                        .iter()
+                        .map(|(t, c)| {
+                            Json::Arr(vec![
+                                Json::num(t.m),
+                                Json::num(t.n),
+                                Json::num(t.k),
+                                Json::num(*c),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let kind = DatasetKind::parse(v.get("kind")?.as_str()?)
+            .context("unknown dataset kind")?;
+        let device = v.get("device")?.as_str()?.to_string();
+        let mut classes = ClassTable::new();
+        for cj in v.get("classes")?.as_arr()? {
+            classes.intern(KernelConfig::from_json(cj)?);
+        }
+        let mut entries = Vec::new();
+        for ej in v.get("entries")?.as_arr()? {
+            let a = ej.as_arr()?;
+            let triple = Triple::new(a[0].as_u32()?, a[1].as_u32()?, a[2].as_u32()?);
+            let class = a[3].as_u32()?;
+            anyhow::ensure!(
+                (class as usize) < classes.len(),
+                "class id {class} out of range"
+            );
+            entries.push((triple, class));
+        }
+        Ok(LabeledDataset { kind, device, entries, classes })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DirectParams, XgemmParams};
+
+    fn sample() -> LabeledDataset {
+        let mut classes = ClassTable::new();
+        let a = classes.intern(KernelConfig::Xgemm(XgemmParams::default()));
+        let b = classes.intern(KernelConfig::Direct(DirectParams::default()));
+        LabeledDataset {
+            kind: DatasetKind::Po2,
+            device: "nvidia-p100".into(),
+            entries: vec![
+                (Triple::new(64, 64, 64), b),
+                (Triple::new(1024, 1024, 1024), a),
+            ],
+            classes,
+        }
+    }
+
+    #[test]
+    fn intern_dedups() {
+        let mut t = ClassTable::new();
+        let a = t.intern(KernelConfig::Xgemm(XgemmParams::default()));
+        let b = t.intern(KernelConfig::Xgemm(XgemmParams::default()));
+        assert_eq!(a, b);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn unique_per_kernel_counts() {
+        let d = sample();
+        assert_eq!(d.classes.unique_per_kernel(), (1, 1));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let d = sample();
+        let back = LabeledDataset::from_json(&d.to_json()).unwrap();
+        assert_eq!(back.entries, d.entries);
+        assert_eq!(back.classes.len(), d.classes.len());
+        assert_eq!(back.device, d.device);
+    }
+
+    #[test]
+    fn save_load(){
+        let d = sample();
+        let dir = std::env::temp_dir().join("adaptlib-test-ds");
+        let path = dir.join("ds.json");
+        d.save(&path).unwrap();
+        let back = LabeledDataset::load(&path).unwrap();
+        assert_eq!(back.entries, d.entries);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn from_json_rejects_bad_class_id() {
+        let mut j = sample().to_json();
+        if let Json::Obj(ref mut m) = j {
+            m.insert(
+                "entries".into(),
+                Json::Arr(vec![Json::Arr(vec![
+                    Json::num(1),
+                    Json::num(1),
+                    Json::num(1),
+                    Json::num(99),
+                ])]),
+            );
+        }
+        assert!(LabeledDataset::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,147 @@
+//! Dataset generation (paper §4.1): the two synthetic strategies (`po2`,
+//! `go2`), the real-world `AntonNet` collection (GEMM triples profiled
+//! from AlexNet / GoogLeNet / SqueezeNet), labeled datasets produced by
+//! the tuner, and the seeded 80/20 train/test split.
+
+pub mod antonnet;
+pub mod labeled;
+pub mod split;
+
+pub use labeled::{ClassId, ClassTable, LabeledDataset};
+pub use split::train_test_split;
+
+use crate::config::Triple;
+
+/// The three dataset-generation strategies of the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DatasetKind {
+    /// Powers of two, 64..=2048 (6^3 = 216 triples).
+    Po2,
+    /// Grid of 256, 256..=3840 step 256 (15^3 = 3375 triples).
+    Go2,
+    /// Real-world GEMM shapes from deep networks (~460 triples).
+    AntonNet,
+}
+
+impl DatasetKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetKind::Po2 => "po2",
+            DatasetKind::Go2 => "go2",
+            DatasetKind::AntonNet => "antonnet",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "po2" | "powerof2" => Some(DatasetKind::Po2),
+            "go2" | "gridof2" => Some(DatasetKind::Go2),
+            "antonnet" => Some(DatasetKind::AntonNet),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [DatasetKind; 3] {
+        [DatasetKind::AntonNet, DatasetKind::Po2, DatasetKind::Go2]
+    }
+}
+
+impl std::fmt::Display for DatasetKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// An unlabeled dataset: the input descriptions `I`.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub kind: DatasetKind,
+    pub triples: Vec<Triple>,
+}
+
+impl Dataset {
+    pub fn generate(kind: DatasetKind) -> Dataset {
+        let triples = match kind {
+            DatasetKind::Po2 => po2_triples(),
+            DatasetKind::Go2 => go2_triples(),
+            DatasetKind::AntonNet => antonnet::triples(),
+        };
+        Dataset { kind, triples }
+    }
+
+    pub fn len(&self) -> usize {
+        self.triples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.triples.is_empty()
+    }
+}
+
+/// `po2`: all (M, N, K) with every dim a power of two in [64, 2048].
+pub fn po2_triples() -> Vec<Triple> {
+    let vals: Vec<u32> = (6..=11).map(|e| 1u32 << e).collect(); // 64..2048
+    cube(&vals)
+}
+
+/// `go2`: all (M, N, K) with every dim in {256, 512, ..., 3840}.
+pub fn go2_triples() -> Vec<Triple> {
+    let vals: Vec<u32> = (1..=15).map(|i| i * 256).collect();
+    cube(&vals)
+}
+
+fn cube(vals: &[u32]) -> Vec<Triple> {
+    let mut out = Vec::with_capacity(vals.len().pow(3));
+    for &m in vals {
+        for &n in vals {
+            for &k in vals {
+                out.push(Triple::new(m, n, k));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn po2_matches_paper_size() {
+        let t = po2_triples();
+        assert_eq!(t.len(), 216); // paper Tables 3/4: 216
+        assert!(t.iter().all(|t| t.m.is_power_of_two()
+            && (64..=2048).contains(&t.m)));
+    }
+
+    #[test]
+    fn go2_matches_paper_size() {
+        let t = go2_triples();
+        assert_eq!(t.len(), 3375); // paper Table 3: 3375
+        assert!(t.iter().all(|t| t.m % 256 == 0 && t.m <= 3840));
+    }
+
+    #[test]
+    fn triples_unique() {
+        for kind in DatasetKind::all() {
+            let d = Dataset::generate(kind);
+            let set: HashSet<Triple> = d.triples.iter().copied().collect();
+            assert_eq!(set.len(), d.len(), "{kind} has duplicate triples");
+        }
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for kind in DatasetKind::all() {
+            assert_eq!(DatasetKind::parse(kind.name()), Some(kind));
+        }
+    }
+
+    #[test]
+    fn go2_denser_than_po2() {
+        // The paper's observation: go2 is ~8x larger than AntonNet and
+        // denser than po2.
+        assert!(go2_triples().len() > 8 * po2_triples().len());
+    }
+}

@@ -1,0 +1,47 @@
+//! Seeded train/test splitting (paper §3: 80/20 via random sampling).
+
+use crate::util::prng::Rng;
+
+/// Split `n` indices into (train, test) with `test_frac` of the data in
+/// the test set, shuffled deterministically by `seed`.
+pub fn train_test_split(n: usize, test_frac: f64, seed: u64) -> (Vec<usize>, Vec<usize>) {
+    assert!((0.0..1.0).contains(&test_frac), "bad test_frac {test_frac}");
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut idx);
+    let n_test = ((n as f64) * test_frac).round() as usize;
+    let test = idx.split_off(n.saturating_sub(n_test));
+    (idx, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn split_is_partition() {
+        let (tr, te) = train_test_split(100, 0.2, 42);
+        assert_eq!(tr.len(), 80);
+        assert_eq!(te.len(), 20);
+        let all: HashSet<usize> = tr.iter().chain(te.iter()).copied().collect();
+        assert_eq!(all.len(), 100);
+    }
+
+    #[test]
+    fn split_deterministic() {
+        assert_eq!(train_test_split(50, 0.2, 7), train_test_split(50, 0.2, 7));
+        assert_ne!(
+            train_test_split(50, 0.2, 7).1,
+            train_test_split(50, 0.2, 8).1
+        );
+    }
+
+    #[test]
+    fn split_empty_and_tiny() {
+        let (tr, te) = train_test_split(0, 0.2, 1);
+        assert!(tr.is_empty() && te.is_empty());
+        let (tr, te) = train_test_split(1, 0.2, 1);
+        assert_eq!(tr.len() + te.len(), 1);
+    }
+}

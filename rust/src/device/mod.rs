@@ -1,0 +1,237 @@
+//! Device models: profiles of the paper's two GPUs (Table 2) plus the
+//! host CPU, device-level legality of tuning configurations, and the
+//! analytical performance simulator that substitutes for the OpenCL
+//! hardware we do not have (DESIGN.md §Substitutions).
+
+pub mod sim;
+
+use crate::config::KernelConfig;
+
+/// Identifies a device profile (stable id used in datasets/results).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceId {
+    NvidiaP100,
+    MaliT860,
+    HostCpu,
+}
+
+impl DeviceId {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeviceId::NvidiaP100 => "nvidia-p100",
+            DeviceId::MaliT860 => "mali-t860",
+            DeviceId::HostCpu => "host-cpu",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DeviceId> {
+        match s {
+            "nvidia-p100" | "p100" => Some(DeviceId::NvidiaP100),
+            "mali-t860" | "mali" => Some(DeviceId::MaliT860),
+            "host-cpu" | "cpu" => Some(DeviceId::HostCpu),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for DeviceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A device profile: the Table 2 description plus the calibrated constants
+/// the analytical performance model needs.
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    pub id: DeviceId,
+    // ------------------------------------------------ Table 2 description
+    pub market_segment: &'static str,
+    pub microarchitecture: &'static str,
+    pub cores_desc: &'static str,
+    pub boost_mhz: u32,
+    pub peak_gflops: f64,
+    pub memory_gb: f64,
+    pub memory_type: &'static str,
+    // ------------------------------------------------ model constants
+    /// Sustained memory bandwidth, GB/s.
+    pub mem_bw_gbps: f64,
+    /// Number of parallel compute units (SMs / shader cores).
+    pub compute_units: u32,
+    /// Max work-group size (threads).
+    pub max_workgroup: u32,
+    /// Local-memory / VMEM budget per work-group, bytes.
+    pub local_mem_bytes: u64,
+    /// Kernel-launch overhead, microseconds.
+    pub launch_us: f64,
+    /// Preferred vector width (elements) — full-rate SIMD lanes.
+    pub preferred_vw: u32,
+    /// Preferred work-group tile edge (log-Gaussian efficiency peak).
+    pub preferred_tile: f64,
+    /// Peak fraction reachable by the *direct* kernel (bounds-checked
+    /// generic code path; <1 everywhere, much lower on Mali).
+    pub direct_eff_cap: f64,
+    /// Peak fraction reachable by the tiled xgemm kernel.
+    pub xgemm_eff_cap: f64,
+    /// Memory-traffic multiplier for unstaged (SA/SB=0) tile re-reads —
+    /// models cache quality; ~1.0 means the cache absorbs re-reads.
+    pub no_stage_penalty: f64,
+    /// Cost multiplier for staging through local memory where local memory
+    /// is emulated (Midgard has none: staging copies through DRAM).
+    pub stage_cost: f64,
+    /// Relative measurement-noise sigma of the simulated tuner runs.
+    pub noise_sigma: f64,
+}
+
+impl DeviceProfile {
+    pub fn nvidia_p100() -> Self {
+        DeviceProfile {
+            id: DeviceId::NvidiaP100,
+            market_segment: "Server",
+            microarchitecture: "Pascal",
+            cores_desc: "3584 CUDA cores (GP100)",
+            boost_mhz: 1353,
+            peak_gflops: 9700.0,
+            memory_gb: 16.0,
+            memory_type: "HBM2",
+            mem_bw_gbps: 732.0,
+            compute_units: 56,
+            max_workgroup: 1024,
+            local_mem_bytes: 48 * 1024,
+            launch_us: 5.0,
+            preferred_vw: 2,
+            // Pascal's register file + scheduler favour modest tiles: the
+            // direct kernel's 16-32 tiles sit near the sweet spot, which
+            // is why the P100 runs xgemm_direct almost everywhere
+            // (paper Table 3).
+            preferred_tile: 48.0,
+            direct_eff_cap: 0.88,
+            xgemm_eff_cap: 0.95,
+            no_stage_penalty: 1.35,
+            stage_cost: 1.0,
+            noise_sigma: 0.05,
+        }
+    }
+
+    pub fn mali_t860() -> Self {
+        DeviceProfile {
+            id: DeviceId::MaliT860,
+            market_segment: "System on Chip",
+            microarchitecture: "Midgard 4th gen",
+            cores_desc: "4 Mali cores",
+            boost_mhz: 2000,
+            peak_gflops: 23.8,
+            memory_gb: 4.0,
+            memory_type: "DDR3",
+            mem_bw_gbps: 10.6,
+            compute_units: 4,
+            max_workgroup: 256,
+            local_mem_bytes: 32 * 1024,
+            launch_us: 40.0,
+            preferred_vw: 4,
+            preferred_tile: 32.0,
+            direct_eff_cap: 0.55,
+            xgemm_eff_cap: 0.85,
+            // Midgard: no dedicated local memory — caches absorb re-reads
+            // (no penalty for SA/SB=0) and staging *costs* extra traffic.
+            no_stage_penalty: 1.0,
+            stage_cost: 1.18,
+            noise_sigma: 0.07,
+        }
+    }
+
+    /// The host CPU running the real PJRT path (used for legality only;
+    /// its performance is *measured*, never simulated).
+    pub fn host_cpu() -> Self {
+        DeviceProfile {
+            id: DeviceId::HostCpu,
+            market_segment: "Workstation",
+            microarchitecture: "x86-64",
+            cores_desc: "host cores (PJRT CPU client)",
+            boost_mhz: 0,
+            peak_gflops: 100.0,
+            memory_gb: 16.0,
+            memory_type: "DDR",
+            mem_bw_gbps: 20.0,
+            compute_units: 8,
+            max_workgroup: 1024,
+            // VMEM budget stands in for local memory on the Pallas path:
+            // 16 MiB, the TPU VMEM size the kernels are structured for.
+            local_mem_bytes: 16 * 1024 * 1024,
+            launch_us: 20.0,
+            preferred_vw: 4,
+            preferred_tile: 64.0,
+            direct_eff_cap: 0.7,
+            xgemm_eff_cap: 0.9,
+            no_stage_penalty: 1.1,
+            stage_cost: 1.0,
+            noise_sigma: 0.0,
+        }
+    }
+
+    pub fn get(id: DeviceId) -> Self {
+        match id {
+            DeviceId::NvidiaP100 => Self::nvidia_p100(),
+            DeviceId::MaliT860 => Self::mali_t860(),
+            DeviceId::HostCpu => Self::host_cpu(),
+        }
+    }
+
+    /// Device-level legality of a configuration (CLTune's constraint
+    /// filtering: work-group limits + local-memory capacity).
+    pub fn is_legal(&self, cfg: &KernelConfig) -> bool {
+        if !cfg.is_structurally_legal() {
+            return false;
+        }
+        if cfg.workgroup_size() > self.max_workgroup {
+            return false;
+        }
+        match cfg {
+            KernelConfig::Xgemm(p) => p.local_mem_bytes() <= self.local_mem_bytes,
+            KernelConfig::Direct(p) => p.local_mem_bytes() <= self.local_mem_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{direct_space, xgemm_space};
+
+    #[test]
+    fn profiles_match_table2() {
+        let p = DeviceProfile::nvidia_p100();
+        assert_eq!(p.peak_gflops, 9700.0);
+        assert_eq!(p.memory_type, "HBM2");
+        let m = DeviceProfile::mali_t860();
+        assert_eq!(m.peak_gflops, 23.8);
+        assert_eq!(m.boost_mhz, 2000);
+    }
+
+    #[test]
+    fn device_id_parse() {
+        assert_eq!(DeviceId::parse("p100"), Some(DeviceId::NvidiaP100));
+        assert_eq!(DeviceId::parse("mali-t860"), Some(DeviceId::MaliT860));
+        assert_eq!(DeviceId::parse("bogus"), None);
+    }
+
+    #[test]
+    fn legality_filters_more_on_mali() {
+        let p100 = DeviceProfile::nvidia_p100();
+        let mali = DeviceProfile::mali_t860();
+        let space = xgemm_space();
+        let n_p100 = space.iter().filter(|c| p100.is_legal(c)).count();
+        let n_mali = space.iter().filter(|c| mali.is_legal(c)).count();
+        assert!(n_mali < n_p100, "{n_mali} !< {n_p100}");
+        assert!(n_mali > 0);
+    }
+
+    #[test]
+    fn direct_space_legal_on_all_devices() {
+        for id in [DeviceId::NvidiaP100, DeviceId::MaliT860, DeviceId::HostCpu] {
+            let dev = DeviceProfile::get(id);
+            let n = direct_space().iter().filter(|c| dev.is_legal(c)).count();
+            assert!(n > 0, "no legal direct configs on {id}");
+        }
+    }
+}

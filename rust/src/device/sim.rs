@@ -1,0 +1,404 @@
+//! Analytical GPU performance model — the substitute for running CLTune
+//! on the paper's physical P100 / Mali-T860 (DESIGN.md §Substitutions).
+//!
+//! The model is a classic roofline with tile-level corrections:
+//!
+//! * compute time  = padded FLOPs / (peak · efficiency), where efficiency
+//!   composes the kernel's reachable cap, a log-Gaussian tile-size match,
+//!   a vector-width match and wave quantization over compute units;
+//! * memory time   = tile-level DRAM traffic / bandwidth, with staging
+//!   (SA/SB) either absorbing tile re-reads (devices with real local
+//!   memory) or adding copy traffic (Midgard);
+//! * the xgemm (indirect) kernel additionally pays the O(n^2) helper-pass
+//!   cost (pad/transpose kernels) plus their launches — the paper's
+//!   direct-vs-indirect trade-off;
+//! * a deterministic hash-noise term models tuner measurement noise, so
+//!   "re-running the tuner" reproduces identical tables.
+//!
+//! The constants are calibrated to reproduce the paper's *qualitative*
+//! landscape (see DESIGN.md): on the P100 the direct kernel wins most
+//! shapes (Table 3's class skew), on the Mali the indirect kernel wins
+//! regular shapes while irregular AntonNet shapes split between both
+//! (Table 4); dense datasets collapse to few unique best configs,
+//! irregular ones fan out.
+
+use super::DeviceProfile;
+use crate::config::{DirectParams, KernelConfig, Triple, XgemmParams};
+use crate::util::prng::hash_noise;
+
+/// Simulated tuner measurement: GFLOP/s of `cfg` on `triple`, or `None`
+/// if the configuration is illegal on this device.
+pub fn measure_gflops(
+    dev: &DeviceProfile,
+    cfg: &KernelConfig,
+    triple: Triple,
+) -> Option<f64> {
+    if !dev.is_legal(cfg) {
+        return None;
+    }
+    let seconds = match cfg {
+        KernelConfig::Xgemm(p) => xgemm_time_s(dev, p, triple),
+        KernelConfig::Direct(p) => direct_time_s(dev, p, triple),
+    };
+    let useful_flops = triple.flops();
+    let specialized = seconds / interaction(dev, cfg, triple);
+    let noisy = specialized * (1.0 + noise(dev, cfg, triple));
+    Some(useful_flops / noisy / 1e9)
+}
+
+/// Config-by-shape specialization: on a real GPU a configuration's
+/// occupancy / cache / scheduling behaviour varies strongly and
+/// non-monotonically with the problem region — the reason the paper's
+/// single-config baselines achieve only ~0.4 of the tuner peak on average
+/// (Table 5, h1 rows), while per-region winners sit near it.  Modeled as
+/// a deterministic hash over (device, config, coarse log2 shape bucket):
+/// regionally coherent (a CART split on M/N/K can learn the bucket
+/// boundaries) but strongly config-specific.
+fn interaction(dev: &DeviceProfile, cfg: &KernelConfig, t: Triple) -> f64 {
+    let fp = match cfg {
+        KernelConfig::Xgemm(p) => p.fingerprint(),
+        KernelConfig::Direct(p) => p.fingerprint(),
+    };
+    let dev_tag = dev.id.name().as_bytes().iter().map(|&b| b as u64).sum();
+    // Value noise over log2 shape space (1.5-octave lattice, trilinearly
+    // interpolated): nearby problem sizes behave similarly — which is why
+    // the paper sometimes found one triple's best config performing well
+    // on its neighbours (§5.2) — while distant regions decorrelate.
+    const SCALE: f64 = 1.5;
+    let coord = |x: u32| (x.max(1) as f64).log2() / SCALE;
+    let (fm, fn_, fk) = (coord(t.m), coord(t.n), coord(t.k));
+    let (im, in_, ik) = (fm.floor(), fn_.floor(), fk.floor());
+    let (wm, wn, wk) = (fm - im, fn_ - in_, fk - ik);
+    let mut u = 0.0;
+    for (dm, dn, dk) in [
+        (0u64, 0u64, 0u64), (0, 0, 1), (0, 1, 0), (0, 1, 1),
+        (1, 0, 0), (1, 0, 1), (1, 1, 0), (1, 1, 1),
+    ] {
+        let corner = hash_noise(&[
+            dev_tag,
+            fp,
+            im as u64 + dm,
+            in_ as u64 + dn,
+            ik as u64 + dk,
+        ]);
+        let w = (if dm == 1 { wm } else { 1.0 - wm })
+            * (if dn == 1 { wn } else { 1.0 - wn })
+            * (if dk == 1 { wk } else { 1.0 - wk });
+        u += w * corner;
+    }
+    // Cliff response: most of the space is benign (a handful of globally
+    // strong configs keep winning -> few unique classes, as in the dense
+    // go2 dataset), but ~30% of (config, region) pairs fall off an
+    // occupancy/cache cliff and crater — which is what makes
+    // mispredictions expensive (the paper's h1 stumps score DTPR ~0.4).
+    if u < 0.3 {
+        0.35 + 0.5 * u // cliff: 0.35 .. 0.50
+    } else {
+        0.80 + 0.2857 * (u - 0.3) // benign: 0.80 .. 1.00
+    }
+}
+
+/// Deterministic "measurement noise" in [-sigma, +sigma].
+///
+/// Two components: a *systematic* per-(device, config) bias (codegen /
+/// scheduling quirks a real tuner measures consistently — the dominant
+/// term, so the per-triple argmax stays regionally stable and datasets
+/// don't explode into one-class-per-triple), plus a small per-triple
+/// jitter (run-to-run variation).
+fn noise(dev: &DeviceProfile, cfg: &KernelConfig, t: Triple) -> f64 {
+    let fp = match cfg {
+        KernelConfig::Xgemm(p) => p.fingerprint(),
+        KernelConfig::Direct(p) => p.fingerprint(),
+    };
+    let dev_tag = dev.id.name().as_bytes().iter().map(|&b| b as u64).sum();
+    let u_cfg = hash_noise(&[dev_tag, fp]);
+    let u_triple = hash_noise(&[dev_tag, fp, t.m as u64, t.n as u64, t.k as u64]);
+    let bias = dev.noise_sigma * (2.0 * u_cfg - 1.0);
+    let jitter = 0.35 * dev.noise_sigma * (2.0 * u_triple - 1.0);
+    bias + jitter
+}
+
+fn ceil_to(x: u32, mult: u32) -> u64 {
+    (x as u64).div_ceil(mult as u64) * mult as u64
+}
+
+/// Log-Gaussian efficiency of a tile edge vs the device's sweet spot.
+/// Wide dynamic range: a badly mis-sized tile costs >2x (the paper's
+/// DTPR landscape bottoms out near 0.4 — wrong configs hurt a lot).
+fn tile_match(edge: f64, preferred: f64) -> f64 {
+    let d = (edge.ln() - preferred.ln()) / std::f64::consts::LN_2; // in octaves
+    (-0.5 * (d / 1.1) * (d / 1.1)).exp() * 0.62 + 0.38
+}
+
+/// Efficiency of a vector width vs the device's preferred width.
+fn vw_match(vw: u32, preferred: u32) -> f64 {
+    let d = (vw as f64).log2() - (preferred as f64).log2();
+    1.0 - 0.16 * d.abs()
+}
+
+/// Wave quantization: utilization of `units` compute units by `groups`
+/// independent work groups.
+fn wave_utilization(groups: u64, units: u32) -> f64 {
+    if groups == 0 {
+        return 1.0;
+    }
+    let waves = groups.div_ceil(units as u64);
+    let used = groups as f64 / (waves * units as u64) as f64;
+    // Even a partially-filled device retains some efficiency floor.
+    0.15 + 0.85 * used
+}
+
+/// Triple-independent compute-efficiency product of a configuration —
+/// the expensive exp/ln/powf factors, reusable across every triple and
+/// the basis of the tuner's admissible pruning bound (§Perf).
+pub fn static_eff(dev: &DeviceProfile, cfg: &KernelConfig) -> f64 {
+    match cfg {
+        KernelConfig::Xgemm(p) => {
+            let mut eff = dev.xgemm_eff_cap;
+            eff *= tile_match(((p.mwg * p.nwg) as f64).sqrt(), dev.preferred_tile);
+            eff *= vw_match(p.vwm, dev.preferred_vw) * vw_match(p.vwn, dev.preferred_vw);
+            let per_thread = (p.mwi() * p.nwi()) as f64;
+            if per_thread > 32.0 {
+                eff *= (32.0 / per_thread).powf(1.3);
+            }
+            eff
+        }
+        KernelConfig::Direct(p) => {
+            let mut eff = dev.direct_eff_cap;
+            eff *= tile_match(p.wgd as f64, dev.preferred_tile);
+            eff *= vw_match(p.vwmd, dev.preferred_vw) * vw_match(p.vwnd, dev.preferred_vw);
+            eff *= match p.kwid {
+                2 => 1.0,
+                8 => 0.97,
+                _ => 0.95,
+            };
+            eff
+        }
+    }
+}
+
+/// Admissible upper bound on `measure_gflops(dev, cfg, t)`: assumes the
+/// best possible interaction (1.0), wave utilization (1.0), zero memory
+/// and helper time, and maximal favourable noise.  Sound: the true
+/// measurement never exceeds it, so the tuner may skip any config whose
+/// bound falls below the best found so far without changing the argmax.
+pub fn upper_bound_gflops(
+    dev: &DeviceProfile,
+    cfg: &KernelConfig,
+    t: Triple,
+    static_eff: f64,
+) -> f64 {
+    let (tm, tn, tk) = match cfg {
+        KernelConfig::Xgemm(p) => (p.mwg, p.nwg, p.kwg),
+        KernelConfig::Direct(p) => (p.wgd, p.wgd, p.wgd),
+    };
+    let (mp, np, kp) = (
+        ceil_to(t.m, tm) as f64,
+        ceil_to(t.n, tn) as f64,
+        ceil_to(t.k, tk) as f64,
+    );
+    let padded = 2.0 * mp * np * kp;
+    let mut t_min = padded / (dev.peak_gflops * 1e9 * static_eff);
+    // Mandatory costs the real path always pays: kernel launch, and for
+    // the indirect kernel the O(n^2) helper passes + their launches.
+    t_min += dev.launch_us * 1e-6;
+    if matches!(cfg, KernelConfig::Xgemm(_)) {
+        let helper_bytes = 4.0 * 2.0 * (mp * kp + kp * np + 2.0 * mp * np);
+        t_min += helper_bytes / (dev.mem_bw_gbps * 1e9) + 3.0 * dev.launch_us * 1e-6;
+    }
+    // noise >= -(1 + 0.35) * sigma.
+    let noise_min = 1.0 - 1.35 * dev.noise_sigma;
+    t.flops() / (t_min * noise_min) / 1e9
+}
+
+/// Seconds for the tiled (indirect) xgemm kernel, including helper passes.
+fn xgemm_time_s(dev: &DeviceProfile, p: &XgemmParams, t: Triple) -> f64 {
+    // Padded problem (the helper kernels pad to tile multiples).
+    let mp = ceil_to(t.m, p.mwg);
+    let np = ceil_to(t.n, p.nwg);
+    let kp = ceil_to(t.k, p.kwg);
+    let padded_flops = 2.0 * mp as f64 * np as f64 * kp as f64;
+
+    // ---- compute ----  (static factors: cap, tile match, vector widths,
+    // register spill — see static_eff)
+    let mut eff = static_eff(dev, &KernelConfig::Xgemm(*p));
+    let groups = (mp / p.mwg as u64) * (np / p.nwg as u64);
+    eff *= wave_utilization(groups, dev.compute_units);
+    let t_compute = padded_flops / (dev.peak_gflops * 1e9 * eff);
+
+    // ---- memory ----
+    // Each A tile is re-read once per N-tile column, B per M-tile row.
+    let a_traffic = (mp * kp) as f64 * (np / p.nwg as u64) as f64;
+    let b_traffic = (kp * np) as f64 * (mp / p.mwg as u64) as f64;
+    let c_traffic = (mp * np) as f64;
+    let stage_a = if p.sa == 1 { dev.stage_cost } else { dev.no_stage_penalty };
+    let stage_b = if p.sb == 1 { dev.stage_cost } else { dev.no_stage_penalty };
+    let bytes = 4.0 * (a_traffic * stage_a + b_traffic * stage_b + c_traffic);
+    let t_mem = bytes / (dev.mem_bw_gbps * 1e9);
+
+    // ---- helper kernels: pad A, pad B, pad/unpad C (read + write each) ----
+    let helper_bytes =
+        4.0 * 2.0 * ((mp * kp) as f64 + (kp * np) as f64 + 2.0 * (mp * np) as f64);
+    let t_helpers =
+        helper_bytes / (dev.mem_bw_gbps * 1e9) + 3.0 * dev.launch_us * 1e-6;
+
+    t_compute.max(t_mem) + t_helpers + dev.launch_us * 1e-6
+}
+
+/// Seconds for the generic one-pass direct kernel.
+fn direct_time_s(dev: &DeviceProfile, p: &DirectParams, t: Triple) -> f64 {
+    let wgd = p.wgd;
+    let mp = ceil_to(t.m, wgd);
+    let np = ceil_to(t.n, wgd);
+    let kp = ceil_to(t.k, wgd);
+    let padded_flops = 2.0 * mp as f64 * np as f64 * kp as f64;
+
+    // ---- compute ----  (static factors: cap, tile match, vector widths,
+    // KWID unroll — see static_eff)
+    let mut eff = static_eff(dev, &KernelConfig::Direct(*p));
+    // PADA/PADB trade bounds checks for padded loads: unpadded access on an
+    // unaligned problem costs extra predication (triple-dependent).
+    let unaligned = t.m % wgd != 0 || t.n % wgd != 0 || t.k % wgd != 0;
+    if unaligned {
+        if p.pada == 0 {
+            eff *= 0.93;
+        }
+        if p.padb == 0 {
+            eff *= 0.93;
+        }
+    }
+    let groups = (mp / wgd as u64) * (np / wgd as u64);
+    eff *= wave_utilization(groups, dev.compute_units);
+    let t_compute = padded_flops / (dev.peak_gflops * 1e9 * eff);
+
+    // ---- memory ----  (small square tiles: re-reads scale with 1/wgd)
+    let a_traffic = (mp * kp) as f64 * (np / wgd as u64) as f64;
+    let b_traffic = (kp * np) as f64 * (mp / wgd as u64) as f64;
+    let c_traffic = (mp * np) as f64;
+    // The direct kernel always stages both operand tiles in local memory.
+    let bytes = 4.0 * ((a_traffic + b_traffic) * dev.stage_cost + c_traffic);
+    let t_mem = bytes / (dev.mem_bw_gbps * 1e9);
+
+    t_compute.max(t_mem) + dev.launch_us * 1e-6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{direct_space, xgemm_space};
+
+    fn p100() -> DeviceProfile {
+        DeviceProfile::nvidia_p100()
+    }
+
+    fn mali() -> DeviceProfile {
+        DeviceProfile::mali_t860()
+    }
+
+    #[test]
+    fn measurement_is_deterministic() {
+        let dev = p100();
+        let cfg = KernelConfig::Xgemm(XgemmParams::default());
+        let t = Triple::new(1024, 1024, 1024);
+        assert_eq!(
+            measure_gflops(&dev, &cfg, t),
+            measure_gflops(&dev, &cfg, t)
+        );
+    }
+
+    #[test]
+    fn illegal_config_measures_none() {
+        let dev = mali();
+        // workgroup 32*32 = 1024 > Mali's 256
+        let cfg = KernelConfig::Xgemm(XgemmParams {
+            mdimc: 32,
+            ndimc: 32,
+            mwg: 128,
+            nwg: 128,
+            ..Default::default()
+        });
+        assert!(measure_gflops(&dev, &cfg, Triple::new(256, 256, 256)).is_none());
+    }
+
+    #[test]
+    fn gflops_below_peak() {
+        for dev in [p100(), mali()] {
+            for cfg in [
+                KernelConfig::Xgemm(XgemmParams::default()),
+                KernelConfig::Direct(DirectParams::default()),
+            ] {
+                let g = measure_gflops(&dev, &cfg, Triple::new(1024, 1024, 1024))
+                    .unwrap();
+                assert!(g > 0.0 && g < dev.peak_gflops, "{g} vs {}", dev.peak_gflops);
+            }
+        }
+    }
+
+    #[test]
+    fn bigger_matrices_higher_throughput() {
+        let dev = p100();
+        let cfg = KernelConfig::Xgemm(XgemmParams::default());
+        let small = measure_gflops(&dev, &cfg, Triple::new(128, 128, 128)).unwrap();
+        let large = measure_gflops(&dev, &cfg, Triple::new(2048, 2048, 2048)).unwrap();
+        assert!(large > small * 2.0, "large {large} vs small {small}");
+    }
+
+    #[test]
+    fn direct_wins_small_irregular_on_p100() {
+        // The paper's Table 3: on the P100 nearly all best configs are
+        // xgemm_direct, driven by small/irregular AntonNet-style shapes.
+        let dev = p100();
+        let t = Triple::new(100, 50, 1); // K=1, 35% of AntonNet
+        let best_direct = direct_space()
+            .iter()
+            .filter_map(|c| measure_gflops(&dev, &c, t))
+            .fold(f64::MIN, f64::max);
+        let best_xgemm = xgemm_space()
+            .iter()
+            .filter_map(|c| measure_gflops(&dev, &c, t))
+            .fold(f64::MIN, f64::max);
+        assert!(
+            best_direct > best_xgemm,
+            "direct {best_direct} !> xgemm {best_xgemm}"
+        );
+    }
+
+    #[test]
+    fn xgemm_wins_regular_on_mali() {
+        // The paper's Table 4: on the Mali po2 dataset, 29 of 30 unique
+        // best configs are xgemm.
+        let dev = mali();
+        let t = Triple::new(512, 512, 512);
+        let best_direct = direct_space()
+            .iter()
+            .filter_map(|c| measure_gflops(&dev, &c, t))
+            .fold(f64::MIN, f64::max);
+        let best_xgemm = xgemm_space()
+            .iter()
+            .filter_map(|c| measure_gflops(&dev, &c, t))
+            .fold(f64::MIN, f64::max);
+        assert!(
+            best_xgemm > best_direct,
+            "xgemm {best_xgemm} !> direct {best_direct}"
+        );
+    }
+
+    #[test]
+    fn padding_waste_punishes_xgemm_on_tiny_k() {
+        let dev = mali();
+        let cfg = KernelConfig::Xgemm(XgemmParams::default()); // kwg = 32
+        let k1 = measure_gflops(&dev, &cfg, Triple::new(256, 256, 1)).unwrap();
+        let k32 = measure_gflops(&dev, &cfg, Triple::new(256, 256, 32)).unwrap();
+        // Throughput counts *useful* flops: K=1 wastes 31/32 of the tile.
+        assert!(k32 > 8.0 * k1, "k32 {k32} vs k1 {k1}");
+    }
+
+    #[test]
+    fn noise_is_bounded() {
+        let dev = mali();
+        let cfg = KernelConfig::Direct(DirectParams::default());
+        let t = Triple::new(777, 333, 111);
+        let n = noise(&dev, &cfg, t);
+        assert!(n.abs() <= dev.noise_sigma);
+    }
+}

@@ -1,0 +1,249 @@
+//! Alternative classifiers + cross-validation — the paper's §3 ("the
+//! [CART] model ... can be replaced with any other suitable technique";
+//! "traditional machine learning techniques, such as cross validation,
+//! can also be applied") and §7 future work ("investigating advanced ML
+//! techniques").  Used by the `adaptd exp ablation` study comparing
+//! CART against simpler baselines on accuracy *and* DTPR.
+
+use crate::config::Triple;
+use crate::dataset::ClassId;
+
+use super::{features_of, train, DecisionTree, TrainParams};
+
+/// A trained input->class model.
+pub trait Classifier {
+    fn name(&self) -> String;
+    fn predict(&self, t: Triple) -> ClassId;
+}
+
+impl Classifier for DecisionTree {
+    fn name(&self) -> String {
+        format!("cart:{}", self.name)
+    }
+
+    fn predict(&self, t: Triple) -> ClassId {
+        DecisionTree::predict(self, t)
+    }
+}
+
+/// Majority-class baseline: always predicts the most frequent label.
+/// Any useful model must beat this.
+pub struct MajorityClass {
+    class: ClassId,
+}
+
+impl MajorityClass {
+    pub fn fit(data: &[(Triple, ClassId)], n_classes: usize) -> MajorityClass {
+        let mut counts = vec![0u32; n_classes];
+        for (_, c) in data {
+            counts[*c as usize] += 1;
+        }
+        let class = counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &c)| c)
+            .map(|(i, _)| i as ClassId)
+            .unwrap_or(0);
+        MajorityClass { class }
+    }
+}
+
+impl Classifier for MajorityClass {
+    fn name(&self) -> String {
+        "majority".to_string()
+    }
+
+    fn predict(&self, _t: Triple) -> ClassId {
+        self.class
+    }
+}
+
+/// k-nearest-neighbours in log2 feature space: a natural competitor for
+/// this problem (nearby triples often share best configs — paper §5.2),
+/// but undeployable in a library (it must ship the training set), which
+/// is the paper's argument for tree->codegen.
+pub struct KNearest {
+    k: usize,
+    points: Vec<([f64; 3], ClassId)>,
+    n_classes: usize,
+}
+
+impl KNearest {
+    pub fn fit(data: &[(Triple, ClassId)], n_classes: usize, k: usize) -> KNearest {
+        KNearest {
+            k: k.max(1),
+            points: data.iter().map(|(t, c)| (log_features(*t), *c)).collect(),
+            n_classes,
+        }
+    }
+}
+
+fn log_features(t: Triple) -> [f64; 3] {
+    let f = features_of(t);
+    [f[0].max(1.0).log2(), f[1].max(1.0).log2(), f[2].max(1.0).log2()]
+}
+
+impl Classifier for KNearest {
+    fn name(&self) -> String {
+        format!("knn-{}", self.k)
+    }
+
+    fn predict(&self, t: Triple) -> ClassId {
+        let q = log_features(t);
+        // Partial selection of the k nearest (training sets are small
+        // enough that a full sort is fine; kept simple on purpose).
+        let mut dists: Vec<(f64, ClassId)> = self
+            .points
+            .iter()
+            .map(|(p, c)| {
+                let d = (p[0] - q[0]).powi(2)
+                    + (p[1] - q[1]).powi(2)
+                    + (p[2] - q[2]).powi(2);
+                (d, *c)
+            })
+            .collect();
+        dists.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut votes = vec![0u32; self.n_classes];
+        for (_, c) in dists.iter().take(self.k) {
+            votes[*c as usize] += 1;
+        }
+        votes
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &v)| v)
+            .map(|(i, _)| i as ClassId)
+            .unwrap_or(0)
+    }
+}
+
+/// Plain accuracy (%) of any classifier over a labeled set.
+pub fn classifier_accuracy(c: &dyn Classifier, test: &[(Triple, ClassId)]) -> f64 {
+    if test.is_empty() {
+        return 0.0;
+    }
+    let right = test.iter().filter(|(t, l)| c.predict(*t) == *l).count();
+    100.0 * right as f64 / test.len() as f64
+}
+
+/// k-fold cross-validation of a CART configuration: mean ± stddev of the
+/// fold accuracies (the paper's suggested model-selection refinement).
+pub fn cross_validate(
+    data: &[(Triple, ClassId)],
+    n_classes: usize,
+    params: TrainParams,
+    folds: usize,
+    seed: u64,
+) -> (f64, f64) {
+    assert!(folds >= 2, "need at least 2 folds");
+    let mut idx: Vec<usize> = (0..data.len()).collect();
+    crate::util::prng::Rng::new(seed).shuffle(&mut idx);
+    let fold_size = data.len().div_ceil(folds);
+    let mut accs = Vec::with_capacity(folds);
+    for f in 0..folds {
+        let lo = f * fold_size;
+        let hi = ((f + 1) * fold_size).min(data.len());
+        if lo >= hi {
+            continue;
+        }
+        let test: Vec<(Triple, ClassId)> = idx[lo..hi].iter().map(|&i| data[i]).collect();
+        let train_set: Vec<(Triple, ClassId)> = idx[..lo]
+            .iter()
+            .chain(idx[hi..].iter())
+            .map(|&i| data[i])
+            .collect();
+        if train_set.is_empty() {
+            continue;
+        }
+        let tree = train(&train_set, n_classes, params);
+        accs.push(classifier_accuracy(&tree, &test));
+    }
+    let mean = crate::util::stats::mean(&accs);
+    let var = accs.iter().map(|a| (a - mean).powi(2)).sum::<f64>()
+        / accs.len().max(1) as f64;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtree::MinSamples;
+
+    fn t(m: u32, n: u32, k: u32) -> Triple {
+        Triple::new(m, n, k)
+    }
+
+    fn region_data() -> Vec<(Triple, ClassId)> {
+        // class = 0 for small M, 1 for large M (clean regions).
+        (1..120u32)
+            .map(|i| {
+                let tr = t(i * 16, 64, 64);
+                (tr, u32::from(tr.m >= 1000))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn majority_predicts_mode() {
+        let data = vec![(t(1, 1, 1), 0), (t(2, 2, 2), 1), (t(3, 3, 3), 1)];
+        let m = MajorityClass::fit(&data, 2);
+        assert_eq!(m.predict(t(9, 9, 9)), 1);
+        assert_eq!(m.name(), "majority");
+    }
+
+    #[test]
+    fn knn_learns_regions() {
+        let data = region_data();
+        let knn = KNearest::fit(&data, 2, 3);
+        assert_eq!(knn.predict(t(32, 64, 64)), 0);
+        assert_eq!(knn.predict(t(1800, 64, 64)), 1);
+        let acc = classifier_accuracy(&knn, &data);
+        assert!(acc > 95.0, "knn acc {acc}");
+    }
+
+    #[test]
+    fn knn_beats_majority_on_structured_data() {
+        let data = region_data();
+        let knn = KNearest::fit(&data, 2, 3);
+        let maj = MajorityClass::fit(&data, 2);
+        assert!(
+            classifier_accuracy(&knn, &data) > classifier_accuracy(&maj, &data)
+        );
+    }
+
+    #[test]
+    fn cart_implements_classifier_trait() {
+        let data = region_data();
+        let tree = train(
+            &data,
+            2,
+            TrainParams { max_depth: None, min_samples_leaf: MinSamples::Count(1) },
+        );
+        let c: &dyn Classifier = &tree;
+        assert!(c.name().starts_with("cart:"));
+        assert!(classifier_accuracy(c, &data) > 99.0);
+    }
+
+    #[test]
+    fn cross_validation_high_on_separable_data() {
+        let data = region_data();
+        let (mean, sd) = cross_validate(
+            &data,
+            2,
+            TrainParams { max_depth: Some(4), min_samples_leaf: MinSamples::Count(1) },
+            5,
+            42,
+        );
+        assert!(mean > 90.0, "cv mean {mean}");
+        assert!(sd < 15.0, "cv sd {sd}");
+    }
+
+    #[test]
+    fn cross_validation_deterministic() {
+        let data = region_data();
+        let p = TrainParams { max_depth: Some(2), min_samples_leaf: MinSamples::Count(1) };
+        assert_eq!(
+            cross_validate(&data, 2, p, 4, 7),
+            cross_validate(&data, 2, p, 4, 7)
+        );
+    }
+}

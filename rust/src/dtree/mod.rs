@@ -1,0 +1,295 @@
+//! CART decision-tree classifier, from scratch (paper §2.1, §4.2).
+//!
+//! Implements exactly the knobs the paper sweeps: `H` (max height, `None`
+//! = unbounded, "hMax") and `L` (min samples per leaf, either an absolute
+//! count or a fraction of the training set, as in scikit-learn).  Gini
+//! impurity, binary splits on the three features (M, N, K).
+//!
+//! The trained model ships as data (flattened node array) *and* as
+//! generated source (see `codegen`); no ML framework exists on-line —
+//! which is the paper's deployment argument.
+
+pub mod classifiers;
+mod train;
+
+pub use classifiers::{classifier_accuracy, cross_validate, Classifier, KNearest, MajorityClass};
+pub use train::{train, TrainParams};
+
+use anyhow::{Context, Result};
+
+use crate::config::Triple;
+use crate::dataset::ClassId;
+use crate::util::json::Json;
+
+/// Minimum-samples-per-leaf policy (scikit-learn semantics: a fraction is
+/// interpreted as `ceil(frac * n_samples)`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MinSamples {
+    Count(usize),
+    Frac(f64),
+}
+
+impl MinSamples {
+    pub fn resolve(&self, n_samples: usize) -> usize {
+        match self {
+            MinSamples::Count(c) => (*c).max(1),
+            MinSamples::Frac(f) => ((f * n_samples as f64).ceil() as usize).max(1),
+        }
+    }
+
+    /// The paper's label for this setting ("L1", "L0.1", ...).
+    pub fn label(&self) -> String {
+        match self {
+            MinSamples::Count(c) => format!("L{c}"),
+            MinSamples::Frac(f) => format!("L{f}"),
+        }
+    }
+}
+
+/// One tree node, flattened into an array (cache-friendly traversal; the
+/// on-line selector uses this directly).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Node {
+    /// feature < threshold ? goto left : goto right
+    Split { feature: u8, threshold: f64, left: u32, right: u32 },
+    Leaf { class: ClassId, n_samples: u32 },
+}
+
+/// A trained decision tree over (M, N, K) features.
+#[derive(Debug, Clone)]
+pub struct DecisionTree {
+    pub nodes: Vec<Node>,
+    /// Model name in the paper's convention, e.g. "h8-L0.1".
+    pub name: String,
+}
+
+pub const FEATURE_NAMES: [&str; 3] = ["M", "N", "K"];
+
+pub fn features_of(t: Triple) -> [f64; 3] {
+    [t.m as f64, t.n as f64, t.k as f64]
+}
+
+impl DecisionTree {
+    /// Predict the class for a triple (iterative traversal, no allocation).
+    pub fn predict(&self, t: Triple) -> ClassId {
+        let f = features_of(t);
+        let mut i = 0usize;
+        loop {
+            match self.nodes[i] {
+                Node::Leaf { class, .. } => return class,
+                Node::Split { feature, threshold, left, right } => {
+                    i = if f[feature as usize] < threshold {
+                        left as usize
+                    } else {
+                        right as usize
+                    };
+                }
+            }
+        }
+    }
+
+    /// Depth of the tree (root-only tree has depth 0, as in the paper's
+    /// Table 5 where the single-leaf trees report height 0).
+    pub fn depth(&self) -> u32 {
+        fn rec(nodes: &[Node], i: usize) -> u32 {
+            match nodes[i] {
+                Node::Leaf { .. } => 0,
+                Node::Split { left, right, .. } => {
+                    1 + rec(nodes, left as usize).max(rec(nodes, right as usize))
+                }
+            }
+        }
+        rec(&self.nodes, 0)
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n, Node::Leaf { .. })).count()
+    }
+
+    /// All leaf classes (with multiplicity).
+    pub fn leaf_classes(&self) -> Vec<ClassId> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match n {
+                Node::Leaf { class, .. } => Some(*class),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Depth of the deepest leaf reachable for a given triple domain —
+    /// the §5.4 microbenchmark traverses to the deepest leaf.
+    pub fn deepest_leaf_path(&self) -> Vec<usize> {
+        fn rec(nodes: &[Node], i: usize, path: &mut Vec<usize>, best: &mut Vec<usize>) {
+            path.push(i);
+            match nodes[i] {
+                Node::Leaf { .. } => {
+                    if path.len() > best.len() {
+                        *best = path.clone();
+                    }
+                }
+                Node::Split { left, right, .. } => {
+                    rec(nodes, left as usize, path, best);
+                    rec(nodes, right as usize, path, best);
+                }
+            }
+            path.pop();
+        }
+        let mut best = Vec::new();
+        rec(&self.nodes, 0, &mut Vec::new(), &mut best);
+        best
+    }
+
+    // ------------------------------------------------------- persistence
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            (
+                "nodes",
+                Json::Arr(
+                    self.nodes
+                        .iter()
+                        .map(|n| match n {
+                            Node::Split { feature, threshold, left, right } => {
+                                Json::obj(vec![
+                                    ("f", Json::num(*feature as f64)),
+                                    ("t", Json::num(*threshold)),
+                                    ("l", Json::num(*left)),
+                                    ("r", Json::num(*right)),
+                                ])
+                            }
+                            Node::Leaf { class, n_samples } => Json::obj(vec![
+                                ("c", Json::num(*class)),
+                                ("n", Json::num(*n_samples)),
+                            ]),
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let name = v.get("name")?.as_str()?.to_string();
+        let mut nodes = Vec::new();
+        for nj in v.get("nodes")?.as_arr()? {
+            let obj = nj.as_obj()?;
+            if obj.contains_key("c") {
+                nodes.push(Node::Leaf {
+                    class: nj.get("c")?.as_u32()?,
+                    n_samples: nj.get("n")?.as_u32()?,
+                });
+            } else {
+                nodes.push(Node::Split {
+                    feature: nj.get("f")?.as_u32()? as u8,
+                    threshold: nj.get("t")?.as_f64()?,
+                    left: nj.get("l")?.as_u32()?,
+                    right: nj.get("r")?.as_u32()?,
+                });
+            }
+        }
+        anyhow::ensure!(!nodes.is_empty(), "empty tree");
+        // Validate child indices.
+        for n in &nodes {
+            if let Node::Split { left, right, .. } = n {
+                anyhow::ensure!(
+                    (*left as usize) < nodes.len() && (*right as usize) < nodes.len(),
+                    "child index out of range"
+                );
+            }
+        }
+        Ok(DecisionTree { nodes, name })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// The paper's model-name convention: "h4-L1", "hMax-L0.1", ...
+pub fn model_name(max_depth: Option<u32>, min_samples: MinSamples) -> String {
+    let h = match max_depth {
+        Some(h) => format!("h{h}"),
+        None => "hMax".to_string(),
+    };
+    format!("{h}-{}", min_samples.label())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn leaf(class: ClassId) -> Node {
+        Node::Leaf { class, n_samples: 1 }
+    }
+
+    #[test]
+    fn predict_traverses_splits() {
+        // if M < 100 then class 0 else (if K < 50 then 1 else 2)
+        let tree = DecisionTree {
+            nodes: vec![
+                Node::Split { feature: 0, threshold: 100.0, left: 1, right: 2 },
+                leaf(0),
+                Node::Split { feature: 2, threshold: 50.0, left: 3, right: 4 },
+                leaf(1),
+                leaf(2),
+            ],
+            name: "t".into(),
+        };
+        assert_eq!(tree.predict(Triple::new(64, 1, 1)), 0);
+        assert_eq!(tree.predict(Triple::new(128, 1, 10)), 1);
+        assert_eq!(tree.predict(Triple::new(128, 1, 99)), 2);
+        assert_eq!(tree.depth(), 2);
+        assert_eq!(tree.n_leaves(), 3);
+        assert_eq!(tree.deepest_leaf_path().len(), 3);
+    }
+
+    #[test]
+    fn min_samples_resolution() {
+        assert_eq!(MinSamples::Count(2).resolve(100), 2);
+        assert_eq!(MinSamples::Frac(0.1).resolve(100), 10);
+        assert_eq!(MinSamples::Frac(0.5).resolve(3), 2);
+        assert_eq!(MinSamples::Count(0).resolve(5), 1);
+    }
+
+    #[test]
+    fn model_names_match_paper() {
+        assert_eq!(model_name(Some(4), MinSamples::Count(1)), "h4-L1");
+        assert_eq!(model_name(None, MinSamples::Frac(0.1)), "hMax-L0.1");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let tree = DecisionTree {
+            nodes: vec![
+                Node::Split { feature: 1, threshold: 12.5, left: 1, right: 2 },
+                leaf(3),
+                leaf(4),
+            ],
+            name: "h1-L1".into(),
+        };
+        let back = DecisionTree::from_json(&tree.to_json()).unwrap();
+        assert_eq!(back.nodes, tree.nodes);
+        assert_eq!(back.name, tree.name);
+    }
+
+    #[test]
+    fn from_json_rejects_dangling_children() {
+        let j = Json::parse(
+            r#"{"name":"x","nodes":[{"f":0,"t":1,"l":5,"r":1},{"c":0,"n":1}]}"#,
+        )
+        .unwrap();
+        assert!(DecisionTree::from_json(&j).is_err());
+    }
+}

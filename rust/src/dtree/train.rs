@@ -1,0 +1,313 @@
+//! CART training: greedy binary splits minimizing weighted Gini impurity,
+//! bounded by the paper's H (max height) and L (min samples per leaf).
+
+use crate::config::Triple;
+use crate::dataset::ClassId;
+
+use super::{features_of, model_name, DecisionTree, MinSamples, Node};
+
+/// Training hyper-parameters — the paper's (H, L) sweep axes.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainParams {
+    /// Max height; `None` is the paper's "hMax" (grow until pure / L).
+    pub max_depth: Option<u32>,
+    pub min_samples_leaf: MinSamples,
+}
+
+impl TrainParams {
+    pub fn name(&self) -> String {
+        model_name(self.max_depth, self.min_samples_leaf)
+    }
+
+    /// The paper's full sweep: H in {1,2,4,8,Max} x L in
+    /// {1,2,4,0.1,0.2,0.3,0.4,0.5} (Tables 5/6: 40 models).
+    pub fn paper_sweep() -> Vec<TrainParams> {
+        let heights = [Some(1), Some(2), Some(4), Some(8), None];
+        let leaves = [
+            MinSamples::Count(1),
+            MinSamples::Count(2),
+            MinSamples::Count(4),
+            MinSamples::Frac(0.1),
+            MinSamples::Frac(0.2),
+            MinSamples::Frac(0.3),
+            MinSamples::Frac(0.4),
+            MinSamples::Frac(0.5),
+        ];
+        let mut out = Vec::new();
+        for h in heights {
+            for l in leaves {
+                out.push(TrainParams { max_depth: h, min_samples_leaf: l });
+            }
+        }
+        out
+    }
+}
+
+/// Gini impurity of a class histogram.
+fn gini(counts: &[u32], total: u32) -> f64 {
+    if total == 0 {
+        return 0.0;
+    }
+    let t = total as f64;
+    1.0 - counts
+        .iter()
+        .map(|&c| {
+            let p = c as f64 / t;
+            p * p
+        })
+        .sum::<f64>()
+}
+
+fn majority(counts: &[u32]) -> ClassId {
+    counts
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, &c)| c)
+        .map(|(i, _)| i as ClassId)
+        .unwrap_or(0)
+}
+
+struct Builder<'a> {
+    samples: &'a [([f64; 3], ClassId)],
+    n_classes: usize,
+    min_leaf: usize,
+    max_depth: Option<u32>,
+    nodes: Vec<Node>,
+}
+
+impl<'a> Builder<'a> {
+    fn counts(&self, idx: &[u32]) -> Vec<u32> {
+        let mut c = vec![0u32; self.n_classes];
+        for &i in idx {
+            c[self.samples[i as usize].1 as usize] += 1;
+        }
+        c
+    }
+
+    /// Find the best (feature, threshold) split of `idx`, or None.
+    fn best_split(&self, idx: &[u32], parent_gini: f64) -> Option<(u8, f64, f64)> {
+        let total = idx.len() as u32;
+        let mut best: Option<(u8, f64, f64)> = None; // (feature, thresh, gini)
+        for feature in 0..3u8 {
+            // Sort sample indices by this feature.
+            let mut order: Vec<u32> = idx.to_vec();
+            order.sort_by(|&a, &b| {
+                self.samples[a as usize].0[feature as usize]
+                    .partial_cmp(&self.samples[b as usize].0[feature as usize])
+                    .unwrap()
+            });
+            // Sweep split positions, maintaining left/right histograms.
+            let mut left = vec![0u32; self.n_classes];
+            let mut right = self.counts(idx);
+            for i in 0..order.len() - 1 {
+                let s = &self.samples[order[i] as usize];
+                left[s.1 as usize] += 1;
+                right[s.1 as usize] -= 1;
+                let v = s.0[feature as usize];
+                let v_next = self.samples[order[i + 1] as usize].0[feature as usize];
+                if v == v_next {
+                    continue; // can't split between equal values
+                }
+                let n_left = (i + 1) as u32;
+                let n_right = total - n_left;
+                if (n_left as usize) < self.min_leaf
+                    || (n_right as usize) < self.min_leaf
+                {
+                    continue;
+                }
+                let g = (n_left as f64 * gini(&left, n_left)
+                    + n_right as f64 * gini(&right, n_right))
+                    / total as f64;
+                // Like sklearn's CART, zero-improvement splits are
+                // allowed (g == parent): XOR-like label patterns need
+                // them to eventually purify.  Recursion still terminates
+                // because both children are strictly smaller.
+                if g < best.map_or(parent_gini + 1e-12, |(_, _, bg)| bg) {
+                    best = Some((feature, (v + v_next) / 2.0, g));
+                }
+            }
+        }
+        best
+    }
+
+    /// Recursively build the subtree over `idx`; returns the node index.
+    fn build(&mut self, idx: &[u32], depth: u32) -> u32 {
+        let counts = self.counts(idx);
+        let total = idx.len() as u32;
+        let parent_gini = gini(&counts, total);
+
+        let mut make_leaf = parent_gini == 0.0 || idx.len() < 2 * self.min_leaf;
+        if let Some(h) = self.max_depth {
+            if depth >= h {
+                make_leaf = true;
+            }
+        }
+        let split = if make_leaf { None } else { self.best_split(idx, parent_gini) };
+
+        let node_i = self.nodes.len() as u32;
+        match split {
+            None => {
+                self.nodes.push(Node::Leaf {
+                    class: majority(&counts),
+                    n_samples: total,
+                });
+            }
+            Some((feature, threshold, _)) => {
+                // Placeholder; fixed up after children are built.
+                self.nodes.push(Node::Split { feature, threshold, left: 0, right: 0 });
+                let (li, ri): (Vec<u32>, Vec<u32>) = idx.iter().partition(|&&i| {
+                    self.samples[i as usize].0[feature as usize] < threshold
+                });
+                let left = self.build(&li, depth + 1);
+                let right = self.build(&ri, depth + 1);
+                if let Node::Split { left: l, right: r, .. } = &mut self.nodes[node_i as usize] {
+                    *l = left;
+                    *r = right;
+                }
+            }
+        }
+        node_i
+    }
+}
+
+/// Train a CART tree on `(triple, class)` samples.
+pub fn train(
+    entries: &[(Triple, ClassId)],
+    n_classes: usize,
+    params: TrainParams,
+) -> DecisionTree {
+    assert!(!entries.is_empty(), "train on empty dataset");
+    let samples: Vec<([f64; 3], ClassId)> = entries
+        .iter()
+        .map(|(t, c)| (features_of(*t), *c))
+        .collect();
+    let min_leaf = params.min_samples_leaf.resolve(samples.len());
+    let mut b = Builder {
+        samples: &samples,
+        n_classes,
+        min_leaf,
+        max_depth: params.max_depth,
+        nodes: Vec::new(),
+    };
+    let idx: Vec<u32> = (0..samples.len() as u32).collect();
+    b.build(&idx, 0);
+    DecisionTree { nodes: b.nodes, name: params.name() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(m: u32, n: u32, k: u32) -> Triple {
+        Triple::new(m, n, k)
+    }
+
+    #[test]
+    fn learns_simple_cut() {
+        // class 0 iff M < 100.
+        let data: Vec<(Triple, ClassId)> = (1..50)
+            .map(|i| (t(i, 10, 10), 0))
+            .chain((100..150).map(|i| (t(i, 10, 10), 1)))
+            .collect();
+        let tree = train(
+            &data,
+            2,
+            TrainParams { max_depth: None, min_samples_leaf: MinSamples::Count(1) },
+        );
+        assert_eq!(tree.predict(t(5, 10, 10)), 0);
+        assert_eq!(tree.predict(t(120, 10, 10)), 1);
+        assert_eq!(tree.n_leaves(), 2);
+        assert_eq!(tree.depth(), 1);
+    }
+
+    #[test]
+    fn pure_node_stops() {
+        let data = vec![(t(1, 1, 1), 0), (t(2, 2, 2), 0), (t(3, 3, 3), 0)];
+        let tree = train(
+            &data,
+            1,
+            TrainParams { max_depth: None, min_samples_leaf: MinSamples::Count(1) },
+        );
+        assert_eq!(tree.n_leaves(), 1);
+        assert_eq!(tree.depth(), 0);
+    }
+
+    #[test]
+    fn max_depth_bounds_height() {
+        // Alternating classes along M force deep trees if unbounded.
+        let data: Vec<(Triple, ClassId)> =
+            (0..64).map(|i| (t(i + 1, 1, 1), (i % 2) as ClassId)).collect();
+        for h in [1u32, 2, 4] {
+            let tree = train(
+                &data,
+                2,
+                TrainParams {
+                    max_depth: Some(h),
+                    min_samples_leaf: MinSamples::Count(1),
+                },
+            );
+            assert!(tree.depth() <= h, "depth {} > h {h}", tree.depth());
+        }
+    }
+
+    #[test]
+    fn min_samples_leaf_enforced() {
+        let data: Vec<(Triple, ClassId)> =
+            (0..100).map(|i| (t(i + 1, 1, 1), (i % 2) as ClassId)).collect();
+        let tree = train(
+            &data,
+            2,
+            TrainParams {
+                max_depth: None,
+                min_samples_leaf: MinSamples::Frac(0.4), // 40 samples per leaf
+            },
+        );
+        for n in &tree.nodes {
+            if let Node::Leaf { n_samples, .. } = n {
+                assert!(*n_samples >= 40, "leaf with {n_samples} < 40");
+            }
+        }
+    }
+
+    #[test]
+    fn frac_half_yields_stump_or_single_leaf() {
+        // L = 0.5: every leaf needs half the data -> at most one split.
+        let data: Vec<(Triple, ClassId)> =
+            (0..40).map(|i| (t(i + 1, 1, 1), (i / 20) as ClassId)).collect();
+        let tree = train(
+            &data,
+            2,
+            TrainParams { max_depth: None, min_samples_leaf: MinSamples::Frac(0.5) },
+        );
+        assert!(tree.n_leaves() <= 2);
+    }
+
+    #[test]
+    fn training_accuracy_perfect_when_separable() {
+        // Separable in (M, K) — needs two levels.
+        let mut data = Vec::new();
+        for m in [10u32, 20, 200, 300] {
+            for k in [10u32, 500] {
+                let class = if m < 100 { 0 } else if k < 100 { 1 } else { 2 };
+                data.push((t(m, 7, k), class));
+            }
+        }
+        let tree = train(
+            &data,
+            3,
+            TrainParams { max_depth: None, min_samples_leaf: MinSamples::Count(1) },
+        );
+        for (tr, c) in &data {
+            assert_eq!(tree.predict(*tr), *c);
+        }
+    }
+
+    #[test]
+    fn paper_sweep_is_40_models() {
+        assert_eq!(TrainParams::paper_sweep().len(), 40);
+        let names: std::collections::HashSet<String> =
+            TrainParams::paper_sweep().iter().map(|p| p.name()).collect();
+        assert_eq!(names.len(), 40);
+        assert!(names.contains("hMax-L1") && names.contains("h8-L0.1"));
+    }
+}

@@ -1,0 +1,152 @@
+//! Ablation studies for the design choices DESIGN.md calls out:
+//!
+//! 1. **Tuner budget** (paper §4.1: "It is possible to trade off quality
+//!    versus time by sampling randomly"): exhaustive vs random-sample vs
+//!    simulated annealing at several budgets — peak fraction achieved.
+//! 2. **Classifier choice** (paper §3/§7): CART vs k-NN vs majority
+//!    baseline — accuracy on the same split.
+//! 3. **Cross-validation** of the paper's best CART settings.
+
+use crate::dataset::DatasetKind;
+use crate::device::{DeviceId, DeviceProfile};
+use crate::dtree::{
+    classifier_accuracy, cross_validate, KNearest, MajorityClass,
+};
+use crate::tuner::{anneal, AnnealParams, SearchStrategy, SimBackend, Tuner};
+use crate::util::csv::CsvWriter;
+use crate::util::stats::mean;
+use crate::util::table;
+
+use super::context::Context;
+use super::tables::Rendered;
+
+/// Ablation 1: search-budget quality on a sample of po2 triples.
+pub fn tuner_budget(device: DeviceId) -> Rendered {
+    let mut backend = SimBackend::new(DeviceProfile::get(device));
+    let triples: Vec<_> = crate::dataset::po2_triples()
+        .into_iter()
+        .step_by(9) // 24 representative triples
+        .collect();
+    let exhaustive = Tuner::default();
+    let peaks: Vec<f64> = triples
+        .iter()
+        .map(|&t| exhaustive.tune_triple(&mut backend, t).unwrap().1)
+        .collect();
+
+    let mut rows = Vec::new();
+    let mut csv = CsvWriter::new(&["strategy", "budget", "peak_fraction"]);
+    let push = |name: &str, budget: usize, frac: f64,
+                    rows: &mut Vec<Vec<String>>, csv: &mut CsvWriter| {
+        let row = vec![name.to_string(), budget.to_string(), table::f(frac, 3)];
+        csv.row(&row);
+        rows.push(row);
+    };
+    push("exhaustive", backend.legal_count(), 1.0, &mut rows, &mut csv);
+
+    for budget in [50usize, 200, 800] {
+        // Random sampling.
+        let sampler = Tuner::new(SearchStrategy::RandomSample { count: budget, seed: 1 });
+        let fracs: Vec<f64> = triples
+            .iter()
+            .zip(&peaks)
+            .map(|(&t, &p)| sampler.tune_triple(&mut backend, t).unwrap().1 / p)
+            .collect();
+        push("random", budget, mean(&fracs), &mut rows, &mut csv);
+        // Simulated annealing at the same budget.
+        let fracs: Vec<f64> = triples
+            .iter()
+            .zip(&peaks)
+            .map(|(&t, &p)| {
+                anneal(&mut backend, t, AnnealParams { evaluations: budget, ..Default::default() })
+                    .unwrap()
+                    .1
+                    / p
+            })
+            .collect();
+        push("anneal", budget, mean(&fracs), &mut rows, &mut csv);
+    }
+    let ascii = table::render(
+        &format!("Ablation: tuner budget vs peak fraction ({device}, po2 sample)"),
+        &["Strategy", "Budget (evals)", "Peak fraction"],
+        &rows,
+    );
+    Rendered { id: "ablation_tuner", ascii, csv }
+}
+
+/// Ablation 2+3: classifier comparison and CV on one sweep's split.
+pub fn classifiers(ctx: &mut Context, device: DeviceId, kind: DatasetKind) -> Rendered {
+    let sweep = ctx.sweep(device, kind);
+    let train_set = sweep.labeled.subset(&sweep.train_idx);
+    let test_set = sweep.labeled.subset(&sweep.test_idx);
+    let n_classes = sweep.labeled.classes.len();
+
+    let best = sweep.best_model();
+    let majority = MajorityClass::fit(&train_set, n_classes);
+    let knn1 = KNearest::fit(&train_set, n_classes, 1);
+    let knn5 = KNearest::fit(&train_set, n_classes, 5);
+
+    let mut rows = Vec::new();
+    let mut csv = CsvWriter::new(&["classifier", "test_accuracy_pct", "deployable"]);
+    let entries: Vec<(String, f64, &str)> = vec![
+        (
+            best.tree.name.clone(),
+            classifier_accuracy(&best.tree, &test_set),
+            "yes (codegen if-then-else)",
+        ),
+        (
+            "majority".into(),
+            classifier_accuracy(&majority, &test_set),
+            "yes (trivial)",
+        ),
+        ("knn-1".into(), classifier_accuracy(&knn1, &test_set), "no (needs training set)"),
+        ("knn-5".into(), classifier_accuracy(&knn5, &test_set), "no (needs training set)"),
+    ];
+    for (name, acc, deploy) in entries {
+        let row = vec![name, table::f(acc, 1), deploy.to_string()];
+        csv.row(&row);
+        rows.push(row);
+    }
+    let mut ascii = table::render(
+        &format!("Ablation: classifier comparison ({device}/{kind})"),
+        &["Classifier", "Test accuracy %", "Deployable in-library?"],
+        &rows,
+    );
+    // Cross-validation of the best model's hyper-parameters.
+    let (cv_mean, cv_sd) = cross_validate(
+        &sweep.labeled.entries,
+        n_classes,
+        best.params,
+        5,
+        0xCF,
+    );
+    ascii.push_str(&format!(
+        "\n5-fold CV of {} on the full dataset: {:.1}% ± {:.1}%\n",
+        best.params.name(),
+        cv_mean,
+        cv_sd
+    ));
+    Rendered { id: "ablation_classifiers", ascii, csv }
+}
+
+/// Run both ablations with default settings.
+pub fn run_all(ctx: &mut Context) -> Vec<Rendered> {
+    vec![
+        tuner_budget(DeviceId::NvidiaP100),
+        classifiers(ctx, DeviceId::NvidiaP100, DatasetKind::Po2),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classifier_ablation_renders() {
+        let mut ctx = Context::new();
+        ctx.model_limit = Some(3);
+        let r = classifiers(&mut ctx, DeviceId::MaliT860, DatasetKind::Po2);
+        assert!(r.ascii.contains("knn-5"));
+        assert!(r.ascii.contains("5-fold CV"));
+        assert_eq!(r.csv.len(), 4);
+    }
+}

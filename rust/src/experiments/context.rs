@@ -1,0 +1,221 @@
+//! Shared experiment pipeline: for a (device, dataset) pair, run the full
+//! off-line phase — generate triples, tune exhaustively (simulated
+//! device), split 80/20, train the paper's 40-model (H, L) sweep, and
+//! evaluate accuracy / DTPR / DTTR for each model.  Results are cached
+//! per pair so every table/figure can share one computation.
+
+use std::collections::HashMap;
+
+use crate::config::KernelKind;
+use crate::dataset::{train_test_split, ClassTable, Dataset, DatasetKind, LabeledDataset};
+use crate::device::{DeviceId, DeviceProfile};
+use crate::dtree::{train, DecisionTree, TrainParams};
+use crate::metrics::{evaluate, ModelScores, TripleRecord};
+use crate::tuner::{Backend, SimBackend, TunedDefault, Tuner, TuningDb};
+
+/// Split fraction and seed used across all experiments (paper: 80/20).
+pub const TEST_FRAC: f64 = 0.2;
+pub const SPLIT_SEED: u64 = 0x5EED_2018;
+
+/// Structural statistics of a trained tree (Tables 5/6 columns).
+#[derive(Debug, Clone)]
+pub struct TreeStats {
+    pub n_leaves: usize,
+    pub height: u32,
+    pub unique_configs_xgemm: usize,
+    pub unique_configs_direct: usize,
+    pub leaves_xgemm: usize,
+    pub leaves_direct: usize,
+}
+
+pub fn tree_stats(tree: &DecisionTree, classes: &ClassTable) -> TreeStats {
+    let leaf_classes = tree.leaf_classes();
+    let mut uniq_x = std::collections::HashSet::new();
+    let mut uniq_d = std::collections::HashSet::new();
+    let mut leaves_x = 0;
+    let mut leaves_d = 0;
+    for c in &leaf_classes {
+        match classes.config(*c).kind() {
+            KernelKind::Xgemm => {
+                uniq_x.insert(*c);
+                leaves_x += 1;
+            }
+            KernelKind::XgemmDirect => {
+                uniq_d.insert(*c);
+                leaves_d += 1;
+            }
+        }
+    }
+    TreeStats {
+        n_leaves: leaf_classes.len(),
+        height: tree.depth(),
+        unique_configs_xgemm: uniq_x.len(),
+        unique_configs_direct: uniq_d.len(),
+        leaves_xgemm: leaves_x,
+        leaves_direct: leaves_d,
+    }
+}
+
+/// One trained + evaluated model of the sweep.
+pub struct ModelRow {
+    pub params: TrainParams,
+    pub tree: DecisionTree,
+    pub scores: ModelScores,
+    pub stats: TreeStats,
+    pub records: Vec<TripleRecord>,
+}
+
+/// The full off-line result for one (device, dataset) pair.
+pub struct SweepResult {
+    pub device: DeviceId,
+    pub kind: DatasetKind,
+    /// The per-device CLBlast-style default (tuned at 1024^3 / 256^3).
+    pub default: TunedDefault,
+    pub labeled: LabeledDataset,
+    pub db: TuningDb,
+    pub train_idx: Vec<usize>,
+    pub test_idx: Vec<usize>,
+    pub models: Vec<ModelRow>,
+}
+
+impl SweepResult {
+    /// The paper's "Best Decision Tree": highest DTPR.
+    pub fn best_model(&self) -> &ModelRow {
+        self.models
+            .iter()
+            .max_by(|a, b| a.scores.dtpr.partial_cmp(&b.scores.dtpr).unwrap())
+            .expect("sweep has models")
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelRow> {
+        self.models.iter().find(|m| m.scores.model == name)
+    }
+}
+
+/// Experiment context: caches sweeps, controls sweep size.
+pub struct Context {
+    cache: HashMap<(DeviceId, DatasetKind), SweepResult>,
+    /// When set, only this many models are trained (test speed-up).
+    pub model_limit: Option<usize>,
+    pub verbose: bool,
+}
+
+impl Default for Context {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Context {
+    pub fn new() -> Context {
+        Context { cache: HashMap::new(), model_limit: None, verbose: false }
+    }
+
+    /// The paper's (device, dataset) grid: go2 was not generated on the
+    /// Mali ("due to the limited amount of hours available", §5.1).
+    pub fn paper_grid() -> Vec<(DeviceId, DatasetKind)> {
+        vec![
+            (DeviceId::NvidiaP100, DatasetKind::AntonNet),
+            (DeviceId::NvidiaP100, DatasetKind::Po2),
+            (DeviceId::NvidiaP100, DatasetKind::Go2),
+            (DeviceId::MaliT860, DatasetKind::AntonNet),
+            (DeviceId::MaliT860, DatasetKind::Po2),
+        ]
+    }
+
+    pub fn sweep(&mut self, device: DeviceId, kind: DatasetKind) -> &SweepResult {
+        if !self.cache.contains_key(&(device, kind)) {
+            let r = self.run_sweep(device, kind);
+            self.cache.insert((device, kind), r);
+        }
+        &self.cache[&(device, kind)]
+    }
+
+    fn run_sweep(&self, device: DeviceId, kind: DatasetKind) -> SweepResult {
+        let t0 = std::time::Instant::now();
+        let mut backend = SimBackend::new(DeviceProfile::get(device));
+        let dataset = Dataset::generate(kind);
+        let mut db = TuningDb::new(backend.device_name());
+        let labeled = Tuner::default().label_dataset(&mut backend, &dataset, &mut db);
+        if self.verbose {
+            eprintln!(
+                "[sweep] tuned {} {} triples on {} ({} classes) in {:.1}s",
+                labeled.len(),
+                kind,
+                device,
+                labeled.classes.len(),
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        let default = TunedDefault::tune(&mut backend);
+        let (train_idx, test_idx) =
+            train_test_split(labeled.len(), TEST_FRAC, SPLIT_SEED);
+        let train_set = labeled.subset(&train_idx);
+        let test_set = labeled.subset(&test_idx);
+
+        let mut params = TrainParams::paper_sweep();
+        if let Some(limit) = self.model_limit {
+            params.truncate(limit);
+        }
+        let models = params
+            .into_iter()
+            .map(|p| {
+                let tree = train(&train_set, labeled.classes.len(), p);
+                let (scores, records) =
+                    evaluate(&tree, &test_set, &labeled.classes, &mut backend, &db, &default);
+                let stats = tree_stats(&tree, &labeled.classes);
+                ModelRow { params: p, tree, scores, stats, records }
+            })
+            .collect();
+        if self.verbose {
+            eprintln!(
+                "[sweep] {}/{} done in {:.1}s",
+                device,
+                kind,
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        SweepResult {
+            device,
+            kind,
+            default,
+            labeled,
+            db,
+            train_idx,
+            test_idx,
+            models,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_po2_p100_pipeline() {
+        let mut ctx = Context::new();
+        ctx.model_limit = Some(4);
+        let r = ctx.sweep(DeviceId::NvidiaP100, DatasetKind::Po2);
+        assert_eq!(r.labeled.len(), 216);
+        assert_eq!(r.models.len(), 4);
+        assert_eq!(r.train_idx.len() + r.test_idx.len(), 216);
+        for m in &r.models {
+            assert!(m.scores.dtpr > 0.0 && m.scores.dtpr <= 1.0 + 1e-9);
+            assert!(m.stats.n_leaves >= 1);
+            assert_eq!(
+                m.stats.leaves_xgemm + m.stats.leaves_direct,
+                m.stats.n_leaves
+            );
+        }
+        // Cache hit: same pointer-equal result object.
+        let len_before = r.models.len();
+        let r2 = ctx.sweep(DeviceId::NvidiaP100, DatasetKind::Po2);
+        assert_eq!(r2.models.len(), len_before);
+    }
+
+    #[test]
+    fn paper_grid_is_five_pairs() {
+        assert_eq!(Context::paper_grid().len(), 5);
+    }
+}

@@ -1,0 +1,187 @@
+//! End-to-end experiment on the *real* device: the full adaptive-library
+//! loop over the CPU PJRT runtime and the AOT Pallas artifacts.
+//!
+//! Off-line: tune the artifact roster per workload triple (real
+//! wall-clock), train a decision tree, build the model policy.
+//! On-line: serve a batched request stream through the coordinator under
+//! (a) the model policy and (b) the CLBlast-default policy, and compare
+//! latency/throughput — the paper's Figure 6/7 experiment, measured.
+
+use std::path::Path;
+
+use anyhow::{Context as _, Result};
+
+use crate::config::Triple;
+use crate::coordinator::{
+    DefaultPolicy, GemmRequest, GemmServer, ModelPolicy, SelectPolicy, ServeStats,
+    ServerConfig,
+};
+use crate::dataset::ClassTable;
+use crate::dtree::{train, DecisionTree, MinSamples, TrainParams};
+use crate::metrics::accuracy;
+use crate::runtime::PjrtBackend;
+use crate::tuner::{Backend, Tuner, TuningDb};
+use crate::util::prng::Rng;
+
+/// Workload triples for the e2e run: shapes the roster serves exactly
+/// (direct artifacts) plus in-bucket shapes (indirect artifacts).
+pub fn workload_triples() -> Vec<Triple> {
+    vec![
+        Triple::new(64, 64, 64),
+        Triple::new(128, 128, 128),
+        Triple::new(200, 50, 100),
+        Triple::new(50, 200, 75),
+        Triple::new(31, 31, 31),
+        Triple::new(100, 100, 1),
+        // In-bucket shapes (served by padding into 128/256 buckets).
+        Triple::new(100, 100, 100),
+        Triple::new(120, 120, 64),
+        Triple::new(96, 128, 96),
+        Triple::new(250, 250, 250),
+        Triple::new(200, 200, 200),
+        Triple::new(128, 250, 128),
+    ]
+}
+
+/// Result of the off-line phase on the real device.
+pub struct E2eModel {
+    pub tree: DecisionTree,
+    pub classes: ClassTable,
+    pub db: TuningDb,
+    pub train_accuracy: f64,
+    pub tuned_triples: usize,
+}
+
+/// Off-line: tune every workload triple on the PJRT backend and train.
+pub fn offline_train(artifacts: &Path, reps: usize) -> Result<E2eModel> {
+    let mut backend = PjrtBackend::open(artifacts)?;
+    backend.reps = reps;
+    let tuner = Tuner::default();
+    let mut db = TuningDb::new(backend.device_name());
+    let mut classes = ClassTable::new();
+    let mut entries = Vec::new();
+    for t in workload_triples() {
+        let (cfg, g) = tuner
+            .tune_triple(&mut backend, t)
+            .with_context(|| format!("no artifact serves {t}"))?;
+        db.insert(t, cfg, g);
+        entries.push((t, classes.intern(cfg)));
+    }
+    let tree = train(
+        &entries,
+        classes.len(),
+        TrainParams { max_depth: None, min_samples_leaf: MinSamples::Count(1) },
+    );
+    let train_accuracy = accuracy(&tree, &entries);
+    Ok(E2eModel {
+        tree,
+        classes,
+        db,
+        train_accuracy,
+        tuned_triples: entries.len(),
+    })
+}
+
+/// Build a deterministic request stream over the workload triples.
+pub fn request_stream(n: usize, seed: u64) -> Vec<GemmRequest> {
+    let triples = workload_triples();
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let t = *rng.choose(&triples);
+            let (m, n_, k) = (t.m as usize, t.n as usize, t.k as usize);
+            let gen = |rng: &mut Rng, len: usize| -> Vec<f32> {
+                (0..len).map(|_| rng.f32() - 0.5).collect()
+            };
+            GemmRequest {
+                m,
+                n: n_,
+                k,
+                a: gen(&mut rng, m * k),
+                b: gen(&mut rng, k * n_),
+                c: gen(&mut rng, m * n_),
+                alpha: 1.0,
+                beta: 0.0,
+            }
+        })
+        .collect()
+}
+
+/// On-line: serve `requests` through a policy; returns serving stats.
+pub fn serve(
+    artifacts: &Path,
+    policy: Box<dyn SelectPolicy>,
+    requests: Vec<GemmRequest>,
+    cfg: ServerConfig,
+) -> Result<ServeStats> {
+    let server = GemmServer::start(artifacts, policy, cfg)?;
+    let handle = server.handle();
+    // Submit everything, then wait for all responses (closed-loop client
+    // with a submission window to exercise the batcher).
+    let mut pending = Vec::with_capacity(requests.len());
+    for req in requests {
+        pending.push(handle.submit(req));
+    }
+    let mut errors = 0usize;
+    for rx in pending {
+        match rx.recv() {
+            Ok(resp) if resp.out.is_ok() => {}
+            _ => errors += 1,
+        }
+    }
+    drop(handle);
+    let stats = server.shutdown().context("no requests served")?;
+    anyhow::ensure!(errors == 0, "{errors} requests failed");
+    Ok(stats)
+}
+
+/// Full e2e comparison: model-driven vs default policy.
+pub struct E2eReport {
+    pub model: E2eModel,
+    pub stats_model: ServeStats,
+    pub stats_default: ServeStats,
+}
+
+impl E2eReport {
+    pub fn speedup(&self) -> f64 {
+        self.stats_model.gflops() / self.stats_default.gflops()
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "=== E2E adaptive serving (CPU PJRT, real measurements) ===\n\
+             off-line: tuned {} triples, tree '{}' ({} leaves, depth {}), train accuracy {:.0}%\n\n\
+             --- model-driven policy ---\n{}\n\
+             --- default policy ---\n{}\n\
+             aggregate speedup (model vs default): {:.2}x\n",
+            self.model.tuned_triples,
+            self.model.tree.name,
+            self.model.tree.n_leaves(),
+            self.model.tree.depth(),
+            self.model.train_accuracy,
+            self.stats_model.report(),
+            self.stats_default.report(),
+            self.speedup(),
+        )
+    }
+}
+
+/// Run the whole experiment.
+pub fn run(artifacts: &Path, n_requests: usize, reps: usize) -> Result<E2eReport> {
+    let model = offline_train(artifacts, reps)?;
+    let requests = request_stream(n_requests, 0xE2E);
+    let cfg = ServerConfig::default();
+
+    let model_policy = Box::new(ModelPolicy::new(&model.tree, &model.classes));
+    let stats_model = serve(artifacts, model_policy, requests.clone(), cfg)?;
+
+    let mut backend = PjrtBackend::open(artifacts)?;
+    let roster = backend.roster_configs();
+    let _ = &mut backend;
+    let default_policy = Box::new(
+        DefaultPolicy::from_roster(&roster).context("roster lacks a kernel kind")?,
+    );
+    let stats_default = serve(artifacts, default_policy, requests, cfg)?;
+
+    Ok(E2eReport { model, stats_model, stats_default })
+}

@@ -1,0 +1,180 @@
+//! Regenerate the paper's figures (as CSV series + ASCII charts).
+//!
+//! * Figure 3 — accuracy of every (H, L) model per dataset, both devices
+//! * Figure 4 — DTPR / DTTR per model, Nvidia P100
+//! * Figure 5 — DTPR / DTTR per model, ARM Mali-T860
+//! * Figure 6 — per-triple GFLOPS: model vs default vs peak, P100
+//! * Figure 7 — per-triple GFLOPS: model vs default vs peak, Mali
+
+use crate::dataset::DatasetKind;
+use crate::device::DeviceId;
+use crate::util::csv::CsvWriter;
+use crate::util::table;
+
+use super::context::Context;
+use super::tables::Rendered;
+
+fn datasets_for(device: DeviceId) -> Vec<DatasetKind> {
+    match device {
+        DeviceId::MaliT860 => vec![DatasetKind::Po2, DatasetKind::AntonNet],
+        _ => vec![DatasetKind::Go2, DatasetKind::Po2, DatasetKind::AntonNet],
+    }
+}
+
+/// Figure 3: model accuracy across the sweep, one series per dataset.
+pub fn fig3(ctx: &mut Context, device: DeviceId) -> Rendered {
+    let id = match device {
+        DeviceId::NvidiaP100 => "fig3a_p100",
+        _ => "fig3b_mali",
+    };
+    let mut csv = CsvWriter::new(&["dataset", "model", "accuracy_pct"]);
+    let mut ascii = String::new();
+    for kind in datasets_for(device) {
+        let sweep = ctx.sweep(device, kind);
+        let series: Vec<(String, f64)> = sweep
+            .models
+            .iter()
+            .map(|m| (m.scores.model.clone(), m.scores.accuracy))
+            .collect();
+        for (model, acc) in &series {
+            csv.row(&[kind.name().into(), model.clone(), table::f(*acc, 1)]);
+        }
+        ascii.push_str(&table::bar_chart(
+            &format!("Figure 3 ({device}): accuracy — dataset {kind}"),
+            &series,
+            50,
+        ));
+        ascii.push('\n');
+    }
+    Rendered { id, ascii, csv }
+}
+
+/// Figures 4/5: DTPR and DTTR across the sweep per dataset.
+pub fn fig45(ctx: &mut Context, device: DeviceId) -> Rendered {
+    let id = match device {
+        DeviceId::NvidiaP100 => "fig4_p100",
+        _ => "fig5_mali",
+    };
+    let mut csv = CsvWriter::new(&["dataset", "model", "dtpr", "dttr"]);
+    let mut ascii = String::new();
+    for kind in datasets_for(device) {
+        let sweep = ctx.sweep(device, kind);
+        for metric in ["DTPR", "DTTR"] {
+            let series: Vec<(String, f64)> = sweep
+                .models
+                .iter()
+                .map(|m| {
+                    let v = if metric == "DTPR" { m.scores.dtpr } else { m.scores.dttr };
+                    (m.scores.model.clone(), v)
+                })
+                .collect();
+            ascii.push_str(&table::bar_chart(
+                &format!("Figure 4/5 ({device}): {metric} — dataset {kind}"),
+                &series,
+                50,
+            ));
+            ascii.push('\n');
+        }
+        for m in &sweep.models {
+            csv.row(&[
+                kind.name().into(),
+                m.scores.model.clone(),
+                table::f(m.scores.dtpr, 3),
+                table::f(m.scores.dttr, 3),
+            ]);
+        }
+    }
+    Rendered { id, ascii, csv }
+}
+
+/// Figures 6/7: per-triple GFLOPS of the best model vs default vs peak.
+/// One section per dataset the paper plots for that device.
+pub fn fig67(ctx: &mut Context, device: DeviceId) -> Rendered {
+    let (id, kinds) = match device {
+        DeviceId::NvidiaP100 => (
+            "fig6_p100",
+            vec![DatasetKind::Go2, DatasetKind::Po2, DatasetKind::AntonNet],
+        ),
+        _ => ("fig7_mali", vec![DatasetKind::Po2, DatasetKind::AntonNet]),
+    };
+    let mut csv = CsvWriter::new(&[
+        "dataset", "m", "n", "k", "gflops_model", "gflops_default",
+        "gflops_peak", "speedup_vs_default",
+    ]);
+    let mut ascii = String::new();
+    for &kind in &kinds {
+        let sweep = ctx.sweep(device, kind);
+        let best = sweep.best_model();
+        let mut records = best.records.clone();
+        records.sort_by_key(|r| (r.triple.m, r.triple.n, r.triple.k));
+        for r in &records {
+            csv.row(&[
+                kind.name().into(),
+                r.triple.m.to_string(),
+                r.triple.n.to_string(),
+                r.triple.k.to_string(),
+                table::f(r.gflops_model, 2),
+                table::f(r.gflops_default, 2),
+                table::f(r.gflops_peak, 2),
+                table::f(r.gflops_model / r.gflops_default.max(1e-12), 3),
+            ]);
+        }
+        // ASCII: subsample ~16 triples for readability.
+        let step = (records.len() / 16).max(1);
+        let sampled: Vec<_> = records.iter().step_by(step).collect();
+        let labels: Vec<String> =
+            sampled.iter().map(|r| r.triple.to_string()).collect();
+        let series = [
+            ("model", sampled.iter().map(|r| r.gflops_model).collect::<Vec<_>>()),
+            ("default", sampled.iter().map(|r| r.gflops_default).collect()),
+            ("peak", sampled.iter().map(|r| r.gflops_peak).collect()),
+        ];
+        ascii.push_str(&table::grouped_chart(
+            &format!(
+                "Figure 6/7 ({device}): GFLOPS over test triples — {} (best model {})",
+                kind, best.scores.model
+            ),
+            &labels,
+            &[
+                (series[0].0, series[0].1.clone()),
+                (series[1].0, series[1].1.clone()),
+                (series[2].0, series[2].1.clone()),
+            ],
+            40,
+        ));
+        // Headline numbers the paper quotes.
+        let max_speedup = records
+            .iter()
+            .map(|r| r.gflops_model / r.gflops_default.max(1e-12))
+            .fold(f64::MIN, f64::max);
+        ascii.push_str(&format!(
+            "max speedup vs default: {max_speedup:.2}x | DTTR (avg): {:.3}\n\n",
+            best.scores.dttr
+        ));
+    }
+    Rendered { id, ascii, csv }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_has_series_per_dataset() {
+        let mut ctx = Context::new();
+        ctx.model_limit = Some(2);
+        let r = fig3(&mut ctx, DeviceId::MaliT860);
+        // 2 datasets x 2 models
+        assert_eq!(r.csv.len(), 4);
+        assert!(r.ascii.contains("accuracy"));
+    }
+
+    #[test]
+    fn fig67_reports_speedups() {
+        let mut ctx = Context::new();
+        ctx.model_limit = Some(2);
+        let r = fig67(&mut ctx, DeviceId::MaliT860);
+        assert!(r.ascii.contains("max speedup vs default"));
+        assert!(r.csv.len() > 10);
+    }
+}

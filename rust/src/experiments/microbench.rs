@@ -1,0 +1,111 @@
+//! §5.4 microbenchmark: the overhead of the generated if-then-else
+//! selector relative to GEMM execution time.  The paper reports <2% on
+//! small matrices (deepest leaf) and <1% on average for the hMax-L1 model
+//! trained from go2 (1200 leaves, depth 19).
+
+use std::time::Instant;
+
+use crate::codegen::FlatTree;
+use crate::dataset::DatasetKind;
+use crate::device::{sim, DeviceId, DeviceProfile};
+use crate::util::csv::CsvWriter;
+use crate::util::table;
+
+use super::context::Context;
+use super::tables::Rendered;
+
+/// Measure the mean selector traversal time over the test triples.
+pub fn selector_ns(flat: &FlatTree, triples: &[(u32, u32, u32)]) -> f64 {
+    // Warm.
+    let mut acc = 0u64;
+    for &(m, n, k) in triples {
+        acc = acc.wrapping_add(flat.predict(m, n, k) as u64);
+    }
+    let reps = 2000usize;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for &(m, n, k) in triples {
+            acc = acc.wrapping_add(flat.predict(m, n, k) as u64);
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    std::hint::black_box(acc);
+    elapsed / (reps * triples.len()) as f64 * 1e9
+}
+
+/// The §5.4 experiment: selector overhead vs simulated kernel time at
+/// several matrix sizes, for the best go2 model on the P100.
+pub fn selector_overhead(ctx: &mut Context) -> Rendered {
+    let sweep = ctx.sweep(DeviceId::NvidiaP100, DatasetKind::Go2);
+    let best = sweep.best_model();
+    let flat = FlatTree::from_tree(&best.tree);
+    let dev = DeviceProfile::nvidia_p100();
+
+    // Traversal cost measured over the test set (mean) and the deepest
+    // leaf (the paper's worst case).
+    let test_triples: Vec<(u32, u32, u32)> = sweep
+        .test_idx
+        .iter()
+        .map(|&i| {
+            let t = sweep.labeled.entries[i].0;
+            (t.m, t.n, t.k)
+        })
+        .collect();
+    let avg_ns = selector_ns(&flat, &test_triples);
+    let depth = best.tree.depth();
+    let n_leaves = best.tree.n_leaves();
+
+    let mut rows = Vec::new();
+    let mut csv = CsvWriter::new(&[
+        "mnk", "selector_ns", "kernel_us_sim", "overhead_pct",
+    ]);
+    for &size in &[64u32, 128, 256, 512, 1024, 2048] {
+        let t = crate::config::Triple::new(size, size, size);
+        let cfg = sweep.db.best(t).map(|(c, _)| *c).unwrap_or_else(|| {
+            crate::tuner::clblast_default(t)
+        });
+        let gflops = sim::measure_gflops(&dev, &cfg, t).unwrap_or(1.0);
+        let kernel_us = t.flops() / (gflops * 1e9) * 1e6;
+        let overhead = avg_ns / 1e3 / kernel_us * 100.0;
+        let row = vec![
+            format!("{size}^3"),
+            table::f(avg_ns, 1),
+            table::f(kernel_us, 2),
+            table::f(overhead, 4),
+        ];
+        csv.row(&row);
+        rows.push(row);
+    }
+    let mut ascii = format!(
+        "Section 5.4 microbenchmark: selector overhead\n\
+         model {} | {} leaves | depth {} | mean traversal {:.1} ns\n\n",
+        best.scores.model, n_leaves, depth, avg_ns
+    );
+    ascii.push_str(&table::render(
+        "Selector overhead vs simulated P100 kernel time",
+        &["M=N=K", "selector ns", "kernel µs (sim)", "overhead %"],
+        &rows,
+    ));
+    Rendered { id: "micro_selector", ascii, csv }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtree::{DecisionTree, Node};
+
+    #[test]
+    fn selector_ns_is_nanoseconds() {
+        let tree = DecisionTree {
+            nodes: vec![
+                Node::Split { feature: 0, threshold: 100.0, left: 1, right: 2 },
+                Node::Leaf { class: 0, n_samples: 1 },
+                Node::Leaf { class: 1, n_samples: 1 },
+            ],
+            name: "t".into(),
+        };
+        let flat = FlatTree::from_tree(&tree);
+        let ns = selector_ns(&flat, &[(64, 64, 64), (128, 128, 128)]);
+        assert!(ns > 0.0 && ns < 10_000.0, "implausible traversal {ns} ns");
+    }
+}

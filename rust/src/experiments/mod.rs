@@ -1,0 +1,43 @@
+//! Experiment drivers: one per paper table/figure (DESIGN.md §4), shared
+//! by the `adaptd exp ...` CLI and the `cargo bench` targets.
+
+pub mod ablation;
+pub mod context;
+pub mod e2e;
+pub mod figures;
+pub mod microbench;
+pub mod tables;
+
+pub use context::{tree_stats, Context, ModelRow, SweepResult, TreeStats};
+pub use tables::Rendered;
+
+use anyhow::Result;
+use std::path::Path;
+
+use crate::device::DeviceId;
+
+/// Run every table/figure experiment and save outputs under `out`.
+/// Returns the rendered artifacts in order.
+pub fn run_all(ctx: &mut Context, out: &Path) -> Result<Vec<Rendered>> {
+    let renders = vec![
+        tables::table1(),
+        tables::table2(),
+        tables::table3(ctx),
+        tables::table4(ctx),
+        tables::table5(ctx),
+        tables::table6(ctx),
+        figures::fig3(ctx, DeviceId::NvidiaP100),
+        figures::fig3(ctx, DeviceId::MaliT860),
+        figures::fig45(ctx, DeviceId::NvidiaP100),
+        figures::fig45(ctx, DeviceId::MaliT860),
+        figures::fig67(ctx, DeviceId::NvidiaP100),
+        figures::fig67(ctx, DeviceId::MaliT860),
+        microbench::selector_overhead(ctx),
+        ablation::tuner_budget(DeviceId::NvidiaP100),
+        ablation::classifiers(ctx, DeviceId::NvidiaP100, crate::dataset::DatasetKind::Po2),
+    ];
+    for r in &renders {
+        r.save(out)?;
+    }
+    Ok(renders)
+}

@@ -1,0 +1,249 @@
+//! Regenerate the paper's tables.
+//!
+//! * Table 1 — tuning-space statistics (kernels, parameter counts, sizes)
+//! * Table 2 — hardware description of the two simulated devices
+//! * Table 3 — dataset statistics + best decision tree, Nvidia P100
+//! * Table 4 — dataset statistics + best decision tree, ARM Mali-T860
+//! * Table 5 — full (H, L) tree statistics, go2 @ P100
+//! * Table 6 — full (H, L) tree statistics, AntonNet @ Mali
+
+use crate::config::{direct_space, xgemm_space};
+use crate::dataset::DatasetKind;
+use crate::device::{DeviceId, DeviceProfile};
+use crate::util::csv::CsvWriter;
+use crate::util::table;
+
+use super::context::Context;
+
+/// Rendered experiment output: ASCII (for the terminal) + CSV (for plots).
+pub struct Rendered {
+    pub id: &'static str,
+    pub ascii: String,
+    pub csv: CsvWriter,
+}
+
+impl Rendered {
+    pub fn save(&self, dir: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{}.txt", self.id)), &self.ascii)?;
+        self.csv.save(&dir.join(format!("{}.csv", self.id)))?;
+        Ok(())
+    }
+}
+
+pub fn table1() -> Rendered {
+    let rows: Vec<Vec<String>> = [xgemm_space(), direct_space()]
+        .iter()
+        .map(|s| {
+            vec![
+                s.kernel.to_string(),
+                s.num_params().to_string(),
+                s.raw_size().to_string(),
+            ]
+        })
+        .collect();
+    let ascii = table::render(
+        "Table 1: Tuning size statistics as used for this case-study",
+        &["Kernel", "Tunable Parameters", "Search Space Size"],
+        &rows,
+    );
+    let mut csv = CsvWriter::new(&["kernel", "params", "space_size"]);
+    for r in &rows {
+        csv.row(r);
+    }
+    Rendered { id: "table1", ascii, csv }
+}
+
+pub fn table2() -> Rendered {
+    let devs = [DeviceProfile::nvidia_p100(), DeviceProfile::mali_t860()];
+    let mut rows = Vec::new();
+    let field = |f: &dyn Fn(&DeviceProfile) -> String, name: &str| {
+        let mut row = vec![name.to_string()];
+        for d in &devs {
+            row.push(f(d));
+        }
+        row
+    };
+    rows.push(field(&|d| d.market_segment.into(), "Market segment"));
+    rows.push(field(&|d| d.microarchitecture.into(), "Micro-architecture"));
+    rows.push(field(&|d| d.cores_desc.into(), "Number of available cores"));
+    rows.push(field(&|d| format!("{} MHz", d.boost_mhz), "Boost frequency"));
+    rows.push(field(
+        &|d| {
+            if d.peak_gflops >= 1000.0 {
+                format!("{:.1} TFLOPS", d.peak_gflops / 1000.0)
+            } else {
+                format!("{:.1} GFLOPS", d.peak_gflops)
+            }
+        },
+        "Processing power",
+    ));
+    rows.push(field(&|d| format!("{} GB", d.memory_gb), "Memory available"));
+    rows.push(field(&|d| d.memory_type.into(), "Memory type"));
+    let ascii = table::render(
+        "Table 2: Nvidia P100 and ARM Mali-T860 hardware description",
+        &["Device name", "Nvidia P100", "ARM Mali-T860"],
+        &rows,
+    );
+    let mut csv = CsvWriter::new(&["field", "p100", "mali"]);
+    for r in &rows {
+        csv.row(r);
+    }
+    Rendered { id: "table2", ascii, csv }
+}
+
+fn dataset_stats_table(
+    ctx: &mut Context,
+    device: DeviceId,
+    kinds: &[DatasetKind],
+    id: &'static str,
+    title: &str,
+) -> Rendered {
+    let mut rows = Vec::new();
+    let mut csv = CsvWriter::new(&[
+        "dataset", "size", "uniq_xgemm", "uniq_direct", "best_tree",
+        "accuracy_pct", "dtpr", "dttr",
+    ]);
+    for &kind in kinds {
+        let sweep = ctx.sweep(device, kind);
+        let (ux, ud) = sweep.labeled.classes.unique_per_kernel();
+        let best = sweep.best_model();
+        let row = vec![
+            kind.name().to_string(),
+            sweep.labeled.len().to_string(),
+            ux.to_string(),
+            ud.to_string(),
+            best.scores.model.clone(),
+            table::f(best.scores.accuracy, 1),
+            table::f(best.scores.dtpr, 3),
+            table::f(best.scores.dttr, 3),
+        ];
+        csv.row(&row);
+        rows.push(row);
+    }
+    let ascii = table::render(
+        title,
+        &[
+            "Dataset", "Size", "Uniq Xgemm", "Uniq XgemmDirect",
+            "Best Tree", "Accuracy %", "DTPR", "DTTR",
+        ],
+        &rows,
+    );
+    Rendered { id, ascii, csv }
+}
+
+pub fn table3(ctx: &mut Context) -> Rendered {
+    dataset_stats_table(
+        ctx,
+        DeviceId::NvidiaP100,
+        &[DatasetKind::AntonNet, DatasetKind::Po2, DatasetKind::Go2],
+        "table3",
+        "Table 3: Dataset statistics - Nvidia P100 (best tree = highest DTPR)",
+    )
+}
+
+pub fn table4(ctx: &mut Context) -> Rendered {
+    dataset_stats_table(
+        ctx,
+        DeviceId::MaliT860,
+        &[DatasetKind::AntonNet, DatasetKind::Po2],
+        "table4",
+        "Table 4: Dataset statistics - ARM Mali-T860 (best tree = highest DTPR)",
+    )
+}
+
+fn model_sweep_table(
+    ctx: &mut Context,
+    device: DeviceId,
+    kind: DatasetKind,
+    id: &'static str,
+    title: &str,
+) -> Rendered {
+    let sweep = ctx.sweep(device, kind);
+    let mut rows = Vec::new();
+    let mut csv = CsvWriter::new(&[
+        "model", "accuracy_pct", "dtpr", "dttr", "leaves", "height",
+        "min_samples", "uniq_xgemm", "uniq_direct", "leaves_xgemm",
+        "leaves_direct",
+    ]);
+    for m in &sweep.models {
+        let row = vec![
+            m.scores.model.clone(),
+            table::f(m.scores.accuracy, 1),
+            table::f(m.scores.dtpr, 3),
+            table::f(m.scores.dttr, 3),
+            m.stats.n_leaves.to_string(),
+            m.stats.height.to_string(),
+            m.params.min_samples_leaf.label(),
+            m.stats.unique_configs_xgemm.to_string(),
+            m.stats.unique_configs_direct.to_string(),
+            m.stats.leaves_xgemm.to_string(),
+            m.stats.leaves_direct.to_string(),
+        ];
+        csv.row(&row);
+        rows.push(row);
+    }
+    let ascii = table::render(
+        title,
+        &[
+            "Model", "Acc %", "DTPR", "DTTR", "Leaves", "Height", "MinLeaf",
+            "UniqX", "UniqD", "LeafX", "LeafD",
+        ],
+        &rows,
+    );
+    Rendered { id, ascii, csv }
+}
+
+pub fn table5(ctx: &mut Context) -> Rendered {
+    model_sweep_table(
+        ctx,
+        DeviceId::NvidiaP100,
+        DatasetKind::Go2,
+        "table5",
+        "Table 5: Decision trees trained from go2 by varying H and L - Nvidia P100",
+    )
+}
+
+pub fn table6(ctx: &mut Context) -> Rendered {
+    model_sweep_table(
+        ctx,
+        DeviceId::MaliT860,
+        DatasetKind::AntonNet,
+        "table6",
+        "Table 6: Decision trees trained from AntonNet by varying H and L - ARM Mali-T860",
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper_exactly() {
+        let r = table1();
+        assert!(r.ascii.contains("8748"));
+        assert!(r.ascii.contains("3888"));
+        assert!(r.ascii.contains("14"));
+        assert!(r.ascii.contains("9"));
+        assert_eq!(r.csv.len(), 2);
+    }
+
+    #[test]
+    fn table2_contains_profiles() {
+        let r = table2();
+        assert!(r.ascii.contains("Pascal"));
+        assert!(r.ascii.contains("Midgard 4th gen"));
+        assert!(r.ascii.contains("9.7 TFLOPS"));
+        assert!(r.ascii.contains("23.8 GFLOPS"));
+    }
+
+    #[test]
+    fn table4_shape() {
+        let mut ctx = Context::new();
+        ctx.model_limit = Some(3);
+        let r = table4(&mut ctx);
+        assert!(r.ascii.contains("antonnet"));
+        assert!(r.ascii.contains("po2"));
+        assert_eq!(r.csv.len(), 2);
+    }
+}

@@ -1,0 +1,207 @@
+//! Criterion-lite benchmark harness (no criterion crate in the offline
+//! image): warmup, calibrated iteration counts, MAD outlier filtering and
+//! a compact report.  Used by every `cargo bench` target (`harness =
+//! false` in Cargo.toml).
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{filter_outliers, Summary};
+
+/// Configuration for one benchmark run.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    /// Minimum timed samples regardless of duration budget.
+    pub min_samples: usize,
+    /// Maximum timed samples (caps very fast benchmarks).
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_samples: 10,
+            max_samples: 10_000,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Fast settings for CI / smoke runs.
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(20),
+            measure: Duration::from_millis(100),
+            min_samples: 5,
+            max_samples: 1_000,
+        }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Seconds per iteration (outlier-filtered).
+    pub summary: Summary,
+    pub iterations: usize,
+}
+
+impl BenchResult {
+    pub fn per_iter(&self) -> Duration {
+        Duration::from_secs_f64(self.summary.median)
+    }
+
+    pub fn report_line(&self) -> String {
+        let med = self.summary.median;
+        let (val, unit) = humanize(med);
+        format!(
+            "{:<44} {:>9.3} {}  (mean {:.3} ±{:.3} {u2}, n={})",
+            self.name,
+            val,
+            unit,
+            humanize(self.summary.mean).0,
+            humanize(self.summary.ci95_half()).0,
+            self.iterations,
+            u2 = humanize(self.summary.mean).1,
+        )
+    }
+}
+
+fn humanize(seconds: f64) -> (f64, &'static str) {
+    if seconds >= 1.0 {
+        (seconds, "s ")
+    } else if seconds >= 1e-3 {
+        (seconds * 1e3, "ms")
+    } else if seconds >= 1e-6 {
+        (seconds * 1e6, "µs")
+    } else {
+        (seconds * 1e9, "ns")
+    }
+}
+
+/// Run one benchmark: `f` is called once per sample; its return value is
+/// black-boxed so the computation cannot be optimized away.
+pub fn bench<T>(name: &str, cfg: &BenchConfig, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warmup.
+    let t0 = Instant::now();
+    let mut warm_iters = 0u64;
+    while t0.elapsed() < cfg.warmup || warm_iters < 3 {
+        black_box(f());
+        warm_iters += 1;
+    }
+    // Measure.
+    let mut samples = Vec::new();
+    let t1 = Instant::now();
+    while (t1.elapsed() < cfg.measure || samples.len() < cfg.min_samples)
+        && samples.len() < cfg.max_samples
+    {
+        let s = Instant::now();
+        black_box(f());
+        samples.push(s.elapsed().as_secs_f64());
+    }
+    let filtered = filter_outliers(&samples, 8.0);
+    BenchResult {
+        name: name.to_string(),
+        summary: Summary::of(&filtered),
+        iterations: samples.len(),
+    }
+}
+
+/// Opaque value barrier (stable-rust black box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Simple suite runner for `harness = false` bench binaries: respects
+/// the substring filter argv convention of `cargo bench -- <filter>` and
+/// the `ADAPTLIB_BENCH_QUICK` env var.
+pub struct Suite {
+    cfg: BenchConfig,
+    filter: Option<String>,
+    pub results: Vec<BenchResult>,
+}
+
+impl Suite {
+    pub fn from_args() -> Suite {
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-'));
+        let cfg = if std::env::var("ADAPTLIB_BENCH_QUICK").is_ok() {
+            BenchConfig::quick()
+        } else {
+            BenchConfig::default()
+        };
+        Suite { cfg, filter, results: Vec::new() }
+    }
+
+    pub fn with_config(cfg: BenchConfig) -> Suite {
+        Suite { cfg, filter: None, results: Vec::new() }
+    }
+
+    /// Run a benchmark if it passes the filter; prints the report line.
+    pub fn bench<T>(&mut self, name: &str, f: impl FnMut() -> T) {
+        if let Some(ref flt) = self.filter {
+            if !name.contains(flt.as_str()) {
+                return;
+            }
+        }
+        let r = bench(name, &self.cfg, f);
+        println!("{}", r.report_line());
+        self.results.push(r);
+    }
+
+    /// Print a section header.
+    pub fn section(&self, title: &str) {
+        println!("\n== {title} ==");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let cfg = BenchConfig::quick();
+        let r = bench("noop-sum", &cfg, || (0..100u64).sum::<u64>());
+        assert!(r.summary.median > 0.0);
+        assert!(r.iterations >= cfg.min_samples);
+    }
+
+    #[test]
+    fn bench_ordering_sane() {
+        let cfg = BenchConfig::quick();
+        let fast = bench("fast", &cfg, || (0..10u64).sum::<u64>());
+        let slow = bench("slow", &cfg, || {
+            let mut v: Vec<u64> = (0..20_000).collect();
+            v.reverse();
+            v.iter().sum::<u64>()
+        });
+        assert!(
+            slow.summary.median > fast.summary.median,
+            "slow {} !> fast {}",
+            slow.summary.median,
+            fast.summary.median
+        );
+    }
+
+    #[test]
+    fn humanize_units() {
+        assert_eq!(humanize(2.0).1, "s ");
+        assert_eq!(humanize(2e-3).1, "ms");
+        assert_eq!(humanize(2e-6).1, "µs");
+        assert_eq!(humanize(2e-9).1, "ns");
+    }
+
+    #[test]
+    fn report_line_contains_name() {
+        let cfg = BenchConfig::quick();
+        let r = bench("xyzzy", &cfg, || 1 + 1);
+        assert!(r.report_line().contains("xyzzy"));
+    }
+}

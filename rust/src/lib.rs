@@ -1,0 +1,43 @@
+//! # adaptlib — model-driven adaptive GEMM library
+//!
+//! A production-shaped reproduction of *"A model-driven approach for a new
+//! generation of adaptive libraries"* (Cianfriglia, Vella, Nugteren,
+//! Lokhmotov, Fursin — 2018): an adaptive BLAS-GEMM library that selects the
+//! best kernel + tuning configuration per input `(M, N, K)` with a trained
+//! decision tree, code-generated into the library as an if-then-else
+//! selector.
+//!
+//! The stack has three layers (see `DESIGN.md`):
+//!
+//! * **L1** — parametric Pallas GEMM kernels (`python/compile/kernels/`),
+//!   AOT-lowered to HLO text artifacts;
+//! * **L2** — JAX GEMM graphs per (kernel, config, shape) (`python/compile/`);
+//! * **L3** — this crate: the whole off-line framework (search-space model,
+//!   device performance simulator, CLTune-equivalent tuner, dataset
+//!   generators, CART decision-tree trainer, code generator, metrics) plus
+//!   the on-line adaptive library (PJRT runtime, model-driven dispatcher,
+//!   batching request coordinator).
+//!
+//! Python never runs on the request path: artifacts are produced once by
+//! `make artifacts`, after which the `adaptd` binary is self-contained.
+
+pub mod cli;
+pub mod codegen;
+pub mod config;
+pub mod coordinator;
+pub mod dataset;
+pub mod device;
+pub mod dtree;
+pub mod experiments;
+pub mod harness;
+pub mod metrics;
+pub mod runtime;
+pub mod testing;
+pub mod tuner;
+pub mod util;
+
+pub use config::{DirectParams, KernelConfig, KernelKind, Triple, XgemmParams};
+pub use dataset::{Dataset, DatasetKind};
+pub use device::DeviceProfile;
+pub use dtree::DecisionTree;
+pub use metrics::ModelScores;

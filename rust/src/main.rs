@@ -1,0 +1,281 @@
+//! `adaptd` — the adaptive-GEMM library daemon / CLI.
+//!
+//! Subcommands drive the whole paper pipeline:
+//!
+//! ```text
+//! adaptd exp <table1|table2|table3|table4|table5|table6|fig3|fig4|fig5|fig6|fig7|micro|all>
+//! adaptd tune      --device <p100|mali> --dataset <po2|go2|antonnet> --out tuned.json
+//! adaptd train     --device ... --dataset ... --model h8-L1 --out model.json
+//! adaptd codegen   --device ... --dataset ... --model hMax-L1 --lang <rust|cpp>
+//! adaptd e2e       --artifacts artifacts --requests 400
+//! adaptd serve-demo --artifacts artifacts --requests 200 --policy <model|default>
+//! adaptd info      --artifacts artifacts
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context as _, Result};
+
+use adaptlib::cli::{self, OptSpec};
+use adaptlib::codegen;
+use adaptlib::dataset::{Dataset, DatasetKind};
+use adaptlib::device::DeviceId;
+use adaptlib::dtree::{MinSamples, TrainParams};
+use adaptlib::experiments::{self, Context};
+use adaptlib::runtime::GemmRuntime;
+use adaptlib::tuner::{Backend, SimBackend, Tuner, TuningDb};
+use adaptlib::device::DeviceProfile;
+
+fn opt_specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "device", help: "device profile (p100|mali|cpu)", takes_value: true, default: Some("p100") },
+        OptSpec { name: "dataset", help: "dataset (po2|go2|antonnet)", takes_value: true, default: Some("po2") },
+        OptSpec { name: "model", help: "model name, e.g. hMax-L1", takes_value: true, default: Some("hMax-L1") },
+        OptSpec { name: "lang", help: "codegen language (rust|cpp)", takes_value: true, default: Some("rust") },
+        OptSpec { name: "out", help: "output file/directory", takes_value: true, default: None },
+        OptSpec { name: "artifacts", help: "artifact directory", takes_value: true, default: Some("artifacts") },
+        OptSpec { name: "requests", help: "number of requests to serve", takes_value: true, default: Some("200") },
+        OptSpec { name: "reps", help: "tuner measurement repetitions", takes_value: true, default: Some("3") },
+        OptSpec { name: "policy", help: "serving policy (model|default)", takes_value: true, default: Some("model") },
+    ]
+}
+
+fn commands() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("exp <id|all>", "regenerate a paper table/figure (or all)"),
+        ("tune", "run the exhaustive tuner on a simulated device"),
+        ("train", "train one decision-tree model and print its stats"),
+        ("codegen", "emit the if-then-else selector source for a model"),
+        ("e2e", "end-to-end adaptive serving on the CPU PJRT runtime"),
+        ("serve-demo", "serve a request stream under one policy"),
+        ("info", "describe the artifact roster"),
+    ]
+}
+
+fn parse_model_name(s: &str) -> Result<TrainParams> {
+    // "h8-L0.1" | "hMax-L2"
+    let (h, l) = s.split_once("-L").context("model name must be h<H>-L<L>")?;
+    let max_depth = match h {
+        "hMax" => None,
+        _ => Some(
+            h.strip_prefix('h')
+                .context("model name must start with h")?
+                .parse::<u32>()?,
+        ),
+    };
+    let min_samples_leaf = if l.contains('.') {
+        MinSamples::Frac(l.parse::<f64>()?)
+    } else {
+        MinSamples::Count(l.parse::<usize>()?)
+    };
+    Ok(TrainParams { max_depth, min_samples_leaf })
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        print!("{}", cli::usage("adaptd", &commands(), &opt_specs()));
+        return;
+    }
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = cli::parse(argv, &opt_specs(), &["quiet", "verbose"], 2)?;
+    let cmd = args.command.first().map(String::as_str).unwrap_or("");
+    match cmd {
+        "exp" => cmd_exp(&args),
+        "tune" => cmd_tune(&args),
+        "train" => cmd_train(&args),
+        "codegen" => cmd_codegen(&args),
+        "e2e" => cmd_e2e(&args),
+        "serve-demo" => cmd_serve_demo(&args),
+        "info" => cmd_info(&args),
+        other => bail!("unknown command '{other}'\n{}",
+                       cli::usage("adaptd", &commands(), &opt_specs())),
+    }
+}
+
+fn device_of(args: &cli::Args) -> Result<DeviceId> {
+    DeviceId::parse(args.get_or("device", "p100"))
+        .context("unknown device; use p100|mali|cpu")
+}
+
+fn dataset_of(args: &cli::Args) -> Result<DatasetKind> {
+    DatasetKind::parse(args.get_or("dataset", "po2"))
+        .context("unknown dataset; use po2|go2|antonnet")
+}
+
+fn cmd_exp(args: &cli::Args) -> Result<()> {
+    let which = args
+        .command
+        .get(1)
+        .map(String::as_str)
+        .context("exp requires an experiment id (or 'all')")?;
+    let out = PathBuf::from(args.get_or("out", "results"));
+    let mut ctx = Context::new();
+    ctx.verbose = args.has("verbose");
+
+    let mut renders = Vec::new();
+    match which {
+        "all" => {
+            renders = experiments::run_all(&mut ctx, &out)?;
+        }
+        "table1" => renders.push(experiments::tables::table1()),
+        "table2" => renders.push(experiments::tables::table2()),
+        "table3" => renders.push(experiments::tables::table3(&mut ctx)),
+        "table4" => renders.push(experiments::tables::table4(&mut ctx)),
+        "table5" => renders.push(experiments::tables::table5(&mut ctx)),
+        "table6" => renders.push(experiments::tables::table6(&mut ctx)),
+        "fig3" => {
+            renders.push(experiments::figures::fig3(&mut ctx, DeviceId::NvidiaP100));
+            renders.push(experiments::figures::fig3(&mut ctx, DeviceId::MaliT860));
+        }
+        "fig4" => renders.push(experiments::figures::fig45(&mut ctx, DeviceId::NvidiaP100)),
+        "fig5" => renders.push(experiments::figures::fig45(&mut ctx, DeviceId::MaliT860)),
+        "fig6" => renders.push(experiments::figures::fig67(&mut ctx, DeviceId::NvidiaP100)),
+        "fig7" => renders.push(experiments::figures::fig67(&mut ctx, DeviceId::MaliT860)),
+        "micro" => renders.push(experiments::microbench::selector_overhead(&mut ctx)),
+        "ablation" => renders.extend(experiments::ablation::run_all(&mut ctx)),
+        other => bail!("unknown experiment '{other}'"),
+    }
+    for r in &renders {
+        println!("{}", r.ascii);
+        r.save(&out)?;
+    }
+    eprintln!("saved {} experiment artifact(s) under {}", renders.len(), out.display());
+    Ok(())
+}
+
+fn cmd_tune(args: &cli::Args) -> Result<()> {
+    let device = device_of(args)?;
+    let kind = dataset_of(args)?;
+    let mut backend = SimBackend::new(DeviceProfile::get(device));
+    let dataset = Dataset::generate(kind);
+    let mut db = TuningDb::new(backend.device_name());
+    let t0 = std::time::Instant::now();
+    let labeled = Tuner::default().label_dataset(&mut backend, &dataset, &mut db);
+    let (ux, ud) = labeled.classes.unique_per_kernel();
+    println!(
+        "tuned {} triples on {device} in {:.1}s: {} classes ({ux} xgemm, {ud} direct)",
+        labeled.len(),
+        t0.elapsed().as_secs_f64(),
+        labeled.classes.len(),
+    );
+    if let Some(out) = args.get("out") {
+        labeled.save(Path::new(out))?;
+        db.save(Path::new(&format!("{out}.db.json")))?;
+        println!("saved labeled dataset to {out} (+ .db.json)");
+    }
+    Ok(())
+}
+
+fn offline(args: &cli::Args) -> Result<(Context, DeviceId, DatasetKind)> {
+    let device = device_of(args)?;
+    let kind = dataset_of(args)?;
+    let mut ctx = Context::new();
+    ctx.verbose = args.has("verbose");
+    ctx.sweep(device, kind);
+    Ok((ctx, device, kind))
+}
+
+fn cmd_train(args: &cli::Args) -> Result<()> {
+    let params = parse_model_name(args.get_or("model", "hMax-L1"))?;
+    let (mut ctx, device, kind) = offline(args)?;
+    let sweep = ctx.sweep(device, kind);
+    let row = sweep
+        .model(&params.name())
+        .context("model not in the paper sweep")?;
+    println!(
+        "model {} on {device}/{kind}: accuracy {:.1}% DTPR {:.3} DTTR {:.3} | {} leaves, depth {}",
+        row.scores.model,
+        row.scores.accuracy,
+        row.scores.dtpr,
+        row.scores.dttr,
+        row.stats.n_leaves,
+        row.stats.height,
+    );
+    if let Some(out) = args.get("out") {
+        row.tree.save(Path::new(out))?;
+        println!("saved model to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_codegen(args: &cli::Args) -> Result<()> {
+    let params = parse_model_name(args.get_or("model", "hMax-L1"))?;
+    let (mut ctx, device, kind) = offline(args)?;
+    let sweep = ctx.sweep(device, kind);
+    let row = sweep
+        .model(&params.name())
+        .context("model not in the paper sweep")?;
+    let src = match args.get_or("lang", "rust") {
+        "rust" => codegen::emit_rust(&row.tree, &sweep.labeled.classes),
+        "cpp" => codegen::emit_cpp(&row.tree, &sweep.labeled.classes),
+        other => bail!("unknown language '{other}'"),
+    };
+    match args.get("out") {
+        Some(out) => {
+            std::fs::write(out, &src)?;
+            eprintln!("wrote {} bytes to {out}", src.len());
+        }
+        None => print!("{src}"),
+    }
+    Ok(())
+}
+
+fn cmd_e2e(args: &cli::Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let n: usize = args.get_parse("requests", 200)?;
+    let reps: usize = args.get_parse("reps", 3)?;
+    let report = experiments::e2e::run(&artifacts, n, reps)?;
+    println!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_serve_demo(args: &cli::Args) -> Result<()> {
+    use adaptlib::coordinator::{DefaultPolicy, ModelPolicy, SelectPolicy, ServerConfig};
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let n: usize = args.get_parse("requests", 200)?;
+    let reps: usize = args.get_parse("reps", 1)?;
+    let policy: Box<dyn SelectPolicy> = match args.get_or("policy", "model") {
+        "model" => {
+            let m = experiments::e2e::offline_train(&artifacts, reps)?;
+            Box::new(ModelPolicy::new(&m.tree, &m.classes))
+        }
+        "default" => {
+            let backend = adaptlib::runtime::PjrtBackend::open(&artifacts)?;
+            Box::new(
+                DefaultPolicy::from_roster(&backend.roster_configs())
+                    .context("roster lacks a kernel kind")?,
+            )
+        }
+        other => bail!("unknown policy '{other}'"),
+    };
+    let requests = experiments::e2e::request_stream(n, 42);
+    let stats = experiments::e2e::serve(
+        &artifacts,
+        policy,
+        requests,
+        ServerConfig::default(),
+    )?;
+    println!("{}", stats.report());
+    Ok(())
+}
+
+fn cmd_info(args: &cli::Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let rt = GemmRuntime::open(&artifacts)?;
+    println!(
+        "artifact roster '{}': {} artifacts",
+        rt.manifest.roster,
+        rt.manifest.artifacts.len()
+    );
+    for a in &rt.manifest.artifacts {
+        println!("  {:<56} {:<12} {}", a.name, a.config.kind().name(), a.file);
+    }
+    Ok(())
+}

@@ -1,0 +1,208 @@
+//! Model-quality metrics (paper §5.2): classification accuracy plus the
+//! two misclassification-aware performance ratios the paper defines —
+//! **DTPR** (decision tree / peak of the tuner) and **DTTR** (decision
+//! tree / default-tuned library).
+
+use crate::config::Triple;
+use crate::dataset::{ClassId, ClassTable};
+use crate::dtree::DecisionTree;
+use crate::tuner::{Backend, TunedDefault, TuningDb};
+use crate::util::stats::mean;
+
+/// Per-model evaluation scores over a test set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelScores {
+    pub model: String,
+    /// Fraction of exactly-right class predictions (paper's accuracy, %).
+    pub accuracy: f64,
+    /// mean( f_model(i) / f_peak(i) ).
+    pub dtpr: f64,
+    /// mean( f_model(i) / f_default(i) ).
+    pub dttr: f64,
+    pub n_test: usize,
+}
+
+/// One per-triple record (figure 6/7 series).
+#[derive(Debug, Clone)]
+pub struct TripleRecord {
+    pub triple: Triple,
+    pub gflops_model: f64,
+    pub gflops_default: f64,
+    pub gflops_peak: f64,
+}
+
+/// Evaluate a trained tree over a labeled test set.
+///
+/// `backend` supplies f_a(i) for the predicted and default configs;
+/// `db` supplies the tuner peak.  Misclassified predictions are *scored
+/// by their actual performance* — the whole point of DTPR/DTTR.
+pub fn evaluate<B: Backend + ?Sized>(
+    tree: &DecisionTree,
+    test: &[(Triple, ClassId)],
+    classes: &ClassTable,
+    backend: &mut B,
+    db: &TuningDb,
+    default: &TunedDefault,
+) -> (ModelScores, Vec<TripleRecord>) {
+    let mut right = 0usize;
+    let mut peak_ratios = Vec::with_capacity(test.len());
+    let mut default_ratios = Vec::with_capacity(test.len());
+    let mut records = Vec::with_capacity(test.len());
+
+    for &(t, label) in test {
+        let pred = tree.predict(t);
+        if pred == label {
+            right += 1;
+        }
+        let pred_cfg = classes.config(pred);
+        // An illegal/missing measurement scores zero — the model picked a
+        // config that cannot run, the worst misclassification.
+        let g_model = backend.measure(pred_cfg, t).unwrap_or(0.0);
+        let g_default = backend
+            .measure(&default.select(t), t)
+            .unwrap_or(f64::MIN_POSITIVE);
+        let g_peak = db.peak(t).unwrap_or_else(|| {
+            // Peak must dominate whatever we just measured.
+            g_model.max(g_default)
+        });
+        peak_ratios.push(g_model / g_peak.max(f64::MIN_POSITIVE));
+        default_ratios.push(g_model / g_default.max(f64::MIN_POSITIVE));
+        records.push(TripleRecord {
+            triple: t,
+            gflops_model: g_model,
+            gflops_default: g_default,
+            gflops_peak: g_peak,
+        });
+    }
+
+    let scores = ModelScores {
+        model: tree.name.clone(),
+        accuracy: if test.is_empty() {
+            0.0
+        } else {
+            100.0 * right as f64 / test.len() as f64
+        },
+        dtpr: mean(&peak_ratios),
+        dttr: mean(&default_ratios),
+        n_test: test.len(),
+    };
+    (scores, records)
+}
+
+/// Plain classification accuracy (%) without performance scoring.
+pub fn accuracy(tree: &DecisionTree, test: &[(Triple, ClassId)]) -> f64 {
+    if test.is_empty() {
+        return 0.0;
+    }
+    let right = test.iter().filter(|(t, c)| tree.predict(*t) == *c).count();
+    100.0 * right as f64 / test.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::KernelConfig;
+    use crate::dataset::DatasetKind;
+    use crate::dataset::{Dataset, LabeledDataset};
+    use crate::device::DeviceProfile;
+    use crate::dtree::{train, MinSamples, TrainParams};
+    use crate::tuner::{SimBackend, Tuner};
+
+    fn pipeline() -> (LabeledDataset, SimBackend, TuningDb, TunedDefault) {
+        let mut backend = SimBackend::new(DeviceProfile::nvidia_p100());
+        let ds = Dataset::generate(DatasetKind::Po2);
+        let mut db = TuningDb::new(backend.device_name());
+        let labeled = Tuner::default().label_dataset(&mut backend, &ds, &mut db);
+        let default = TunedDefault::tune(&mut backend);
+        (labeled, backend, db, default)
+    }
+
+    #[test]
+    fn perfect_model_scores_dtpr_one() {
+        let (labeled, mut backend, db, default) = pipeline();
+        // Memorizing tree: train & test on the same data, unbounded depth.
+        let tree = train(
+            &labeled.entries,
+            labeled.classes.len(),
+            TrainParams { max_depth: None, min_samples_leaf: MinSamples::Count(1) },
+        );
+        let (scores, recs) =
+            evaluate(&tree, &labeled.entries, &labeled.classes, &mut backend, &db, &default);
+        // The memorizing tree may still alias triples with equal features,
+        // but on po2 every triple is unique, so accuracy is 100%.
+        assert!(scores.accuracy > 99.0, "accuracy {}", scores.accuracy);
+        assert!((scores.dtpr - 1.0).abs() < 1e-9, "dtpr {}", scores.dtpr);
+        // Model == peak >= default ⇒ DTTR >= 1.
+        assert!(scores.dttr >= 1.0, "dttr {}", scores.dttr);
+        assert_eq!(recs.len(), labeled.len());
+        for r in &recs {
+            assert!(r.gflops_model <= r.gflops_peak + 1e-9);
+        }
+    }
+
+    #[test]
+    fn stump_scores_below_perfect() {
+        let (labeled, mut backend, db, default) = pipeline();
+        let stump = train(
+            &labeled.entries,
+            labeled.classes.len(),
+            TrainParams {
+                max_depth: Some(1),
+                min_samples_leaf: MinSamples::Count(1),
+            },
+        );
+        let (scores, _) =
+            evaluate(&stump, &labeled.entries, &labeled.classes, &mut backend, &db, &default);
+        assert!(scores.dtpr < 1.0, "stump dtpr {}", scores.dtpr);
+        assert!(scores.accuracy < 100.0);
+        // Misclassification-aware: DTPR must exceed raw accuracy/100
+        // (wrong-but-close configs still deliver performance).
+        assert!(
+            scores.dtpr > scores.accuracy / 100.0 * 0.5,
+            "dtpr {} vs accuracy {}",
+            scores.dtpr,
+            scores.accuracy,
+        );
+    }
+
+    #[test]
+    fn accuracy_helper_agrees_with_evaluate() {
+        let (labeled, mut backend, db, default) = pipeline();
+        let tree = train(
+            &labeled.entries,
+            labeled.classes.len(),
+            TrainParams {
+                max_depth: Some(4),
+                min_samples_leaf: MinSamples::Count(2),
+            },
+        );
+        let (scores, _) =
+            evaluate(&tree, &labeled.entries, &labeled.classes, &mut backend, &db, &default);
+        let acc = accuracy(&tree, &labeled.entries);
+        assert!((scores.accuracy - acc).abs() < 1e-9);
+    }
+
+    #[test]
+    fn oracle_labels_are_best_configs() {
+        // Sanity: for each entry, the labeled class measures >= default.
+        let (labeled, mut backend, db, default) = pipeline();
+        for &(t, c) in labeled.entries.iter().take(20) {
+            let g_label = backend.measure(labeled.classes.config(c), t).unwrap();
+            assert!((g_label - db.peak(t).unwrap()).abs() < 1e-9);
+            let g_def = backend
+                .measure(&default.select(t), t)
+                .unwrap_or(0.0);
+            assert!(g_label >= g_def - 1e-9);
+        }
+    }
+
+    #[test]
+    fn unused_kernel_config_variant() {
+        // Ensure KernelConfig methods used by metrics work for both kinds.
+        let (labeled, _, _, _) = pipeline();
+        let (x, d) = labeled.classes.unique_per_kernel();
+        assert_eq!(x + d, labeled.classes.len());
+        let _names: Vec<String> =
+            labeled.classes.iter().map(|(_, c)| KernelConfig::name(c)).collect();
+    }
+}

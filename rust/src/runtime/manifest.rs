@@ -1,0 +1,258 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes `artifacts/manifest.json`) and the rust runtime (which loads,
+//! compiles and executes the HLO-text artifacts it describes).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{DirectParams, KernelConfig, Triple, XgemmParams};
+use crate::util::json::Json;
+
+/// Shape role of an artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Exact logical shape; arbitrary (M,N,K) supported via in-graph pad.
+    Direct { m: u32, n: u32, k: u32, trans_a: bool, trans_b: bool },
+    /// Padded bucket; the host pads operands to (mb, nb, kb).
+    Indirect { mb: u32, nb: u32, kb: u32 },
+}
+
+/// One AOT-compiled GEMM computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: ArtifactKind,
+    pub config: KernelConfig,
+    pub hlo_bytes: usize,
+}
+
+impl ArtifactMeta {
+    /// Can this artifact compute the given (untransposed) triple?
+    pub fn accepts(&self, t: Triple) -> bool {
+        match self.kind {
+            ArtifactKind::Direct { m, n, k, trans_a, trans_b } => {
+                !trans_a && !trans_b && m == t.m && n == t.n && k == t.k
+            }
+            ArtifactKind::Indirect { mb, nb, kb } => {
+                t.m <= mb && t.n <= nb && t.k <= kb
+            }
+        }
+    }
+
+    /// Padding waste ratio when running `t` on this artifact (1.0 = none).
+    pub fn waste(&self, t: Triple) -> f64 {
+        match self.kind {
+            ArtifactKind::Direct { .. } => 1.0,
+            ArtifactKind::Indirect { mb, nb, kb } => {
+                (mb as f64 * nb as f64 * kb as f64)
+                    / (t.m as f64 * t.n as f64 * t.k as f64)
+            }
+        }
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub roster: String,
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = Json::parse(text)?;
+        let version = v.get("version")?.as_u32()?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let roster = v.get("roster")?.as_str()?.to_string();
+        let mut artifacts = Vec::new();
+        for a in v.get("artifacts")?.as_arr()? {
+            artifacts.push(parse_artifact(a)?);
+        }
+        if artifacts.is_empty() {
+            bail!("manifest lists no artifacts");
+        }
+        Ok(Manifest { version, roster, dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Artifacts able to run triple `t`, best (least padding waste) first.
+    pub fn eligible(&self, t: Triple) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<&ArtifactMeta> =
+            self.artifacts.iter().filter(|a| a.accepts(t)).collect();
+        v.sort_by(|a, b| a.waste(t).partial_cmp(&b.waste(t)).unwrap());
+        v
+    }
+
+    pub fn hlo_path(&self, a: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+
+    /// Artifacts grouped by the kernel configuration they implement.
+    pub fn config_index(&self) -> std::collections::HashMap<KernelConfig, Vec<&ArtifactMeta>> {
+        let mut map: std::collections::HashMap<KernelConfig, Vec<&ArtifactMeta>> =
+            std::collections::HashMap::new();
+        for a in &self.artifacts {
+            map.entry(a.config).or_default().push(a);
+        }
+        map
+    }
+
+    /// Best (least padding waste) artifact implementing `cfg` for `t`.
+    pub fn artifact_for_config(&self, cfg: &KernelConfig, t: Triple) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.config == *cfg && a.accepts(t))
+            .min_by(|a, b| a.waste(t).partial_cmp(&b.waste(t)).unwrap())
+    }
+}
+
+fn parse_artifact(a: &Json) -> Result<ArtifactMeta> {
+    let name = a.get("name")?.as_str()?.to_string();
+    let file = a.get("file")?.as_str()?.to_string();
+    let kernel = a.get("kernel")?.as_str()?;
+    let cfg_json = a.get("config")?;
+    let hlo_bytes = a.get_or("hlo_bytes", &Json::Num(0.0)).as_usize()?;
+    let (kind, config) = match kernel {
+        "xgemm_direct" => {
+            let kind = ArtifactKind::Direct {
+                m: a.get("m")?.as_u32()?,
+                n: a.get("n")?.as_u32()?,
+                k: a.get("k")?.as_u32()?,
+                trans_a: a.get_or("trans_a", &Json::Bool(false)).as_bool()?,
+                trans_b: a.get_or("trans_b", &Json::Bool(false)).as_bool()?,
+            };
+            // python DirectConfig -> rust DirectParams (mdimad pinned).
+            let g = |k: &str| -> Result<u32> { Ok(cfg_json.get(k)?.as_u32()?) };
+            let config = KernelConfig::Direct(DirectParams {
+                wgd: g("wgd")?,
+                mdimcd: g("mdimcd")?,
+                ndimcd: g("ndimcd")?,
+                mdimad: 8,
+                vwmd: g("vwmd")?,
+                vwnd: g("vwnd")?,
+                kwid: g("kwid")?,
+                pada: g("pada")?,
+                padb: g("padb")?,
+            });
+            (kind, config)
+        }
+        "xgemm" => {
+            let kind = ArtifactKind::Indirect {
+                mb: a.get("mb")?.as_u32()?,
+                nb: a.get("nb")?.as_u32()?,
+                kb: a.get("kb")?.as_u32()?,
+            };
+            let g = |k: &str| -> Result<u32> { Ok(cfg_json.get(k)?.as_u32()?) };
+            let config = KernelConfig::Xgemm(XgemmParams {
+                mwg: g("mwg")?,
+                nwg: g("nwg")?,
+                kwg: g("kwg")?,
+                mdimc: g("mdimc")?,
+                ndimc: g("ndimc")?,
+                mdima: 16,
+                ndimb: 16,
+                kwi: 2,
+                vwm: g("vwm")?,
+                vwn: g("vwn")?,
+                strm: 0,
+                strn: 0,
+                sa: g("sa")?,
+                sb: g("sb")?,
+            });
+            (kind, config)
+        }
+        other => bail!("unknown kernel kind '{other}' in manifest"),
+    };
+    Ok(ArtifactMeta { name, file, kind, config, hlo_bytes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+ "version": 1, "roster": "small", "dtype": "f32",
+ "artifacts": [
+  {"name": "d1", "kernel": "xgemm_direct", "file": "d1.hlo.txt",
+   "m": 64, "n": 64, "k": 64, "trans_a": false, "trans_b": false,
+   "hlo_bytes": 10,
+   "config": {"wgd": 32, "mdimcd": 8, "ndimcd": 8, "vwmd": 2, "vwnd": 2,
+              "kwid": 2, "pada": 1, "padb": 1}},
+  {"name": "i1", "kernel": "xgemm", "file": "i1.hlo.txt",
+   "mb": 128, "nb": 128, "kb": 128, "hlo_bytes": 11,
+   "config": {"mwg": 64, "nwg": 64, "kwg": 32, "mdimc": 16, "ndimc": 16,
+              "vwm": 4, "vwn": 4, "sa": 1, "sb": 1}}
+ ]
+}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.find("d1").unwrap().hlo_bytes, 10);
+        assert!(matches!(
+            m.find("i1").unwrap().kind,
+            ArtifactKind::Indirect { mb: 128, .. }
+        ));
+    }
+
+    #[test]
+    fn accepts_and_waste() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let d = m.find("d1").unwrap();
+        assert!(d.accepts(Triple::new(64, 64, 64)));
+        assert!(!d.accepts(Triple::new(64, 64, 63)));
+        let i = m.find("i1").unwrap();
+        assert!(i.accepts(Triple::new(100, 90, 110)));
+        assert!(!i.accepts(Triple::new(200, 90, 110)));
+        assert!(i.waste(Triple::new(128, 128, 128)) == 1.0);
+        assert!(i.waste(Triple::new(64, 128, 128)) == 2.0);
+    }
+
+    #[test]
+    fn eligible_sorted_by_waste() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let e = m.eligible(Triple::new(64, 64, 64));
+        assert_eq!(e.len(), 2);
+        assert_eq!(e[0].name, "d1"); // exact shape: waste 1.0
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifacts.len() >= 10);
+            // Every artifact's HLO file must exist.
+            for a in &m.artifacts {
+                assert!(m.hlo_path(a).exists(), "missing {}", a.file);
+            }
+        }
+    }
+}

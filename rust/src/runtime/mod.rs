@@ -1,0 +1,124 @@
+//! The on-line runtime: PJRT CPU client wrapper that loads the AOT HLO
+//! artifacts and executes GEMMs (`executor`), the artifact manifest
+//! (`manifest`), host-side pad helpers (`pad`), and the real-measurement
+//! tuner backend (`PjrtBackend`).
+
+pub mod executor;
+pub mod manifest;
+pub mod pad;
+
+pub use executor::{host_gemm, GemmInput, GemmOutput, GemmRuntime};
+pub use manifest::{ArtifactKind, ArtifactMeta, Manifest};
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::{KernelConfig, Triple};
+use crate::tuner::Backend;
+use crate::util::prng::Rng;
+
+/// Real-measurement backend: the tuner's objective function measured on
+/// the CPU PJRT client over the AOT'd Pallas kernel variants.  This is
+/// the third "device" of the study — the one we physically have.
+pub struct PjrtBackend {
+    pub runtime: GemmRuntime,
+    /// config -> artifact names implementing it (possibly several buckets).
+    by_config: HashMap<KernelConfig, Vec<String>>,
+    /// Deterministic operand cache per triple.
+    data: HashMap<Triple, (Vec<f32>, Vec<f32>, Vec<f32>)>,
+    /// Timed repetitions per measurement (median taken).
+    pub reps: usize,
+}
+
+impl PjrtBackend {
+    pub fn open(dir: &Path) -> Result<PjrtBackend> {
+        let runtime = GemmRuntime::open(dir)?;
+        let mut by_config: HashMap<KernelConfig, Vec<String>> = HashMap::new();
+        for a in &runtime.manifest.artifacts {
+            by_config.entry(a.config).or_default().push(a.name.clone());
+        }
+        Ok(PjrtBackend { runtime, by_config, data: HashMap::new(), reps: 3 })
+    }
+
+    /// The configurations implemented by the artifact roster.
+    pub fn roster_configs(&self) -> Vec<KernelConfig> {
+        let mut v: Vec<KernelConfig> = self.by_config.keys().copied().collect();
+        v.sort_by_key(|c| c.name());
+        v
+    }
+
+    fn operands(&mut self, t: Triple) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        self.data
+            .entry(t)
+            .or_insert_with(|| {
+                let mut rng = Rng::new(
+                    0x5EED ^ ((t.m as u64) << 40) ^ ((t.n as u64) << 20) ^ t.k as u64,
+                );
+                let gen = |rng: &mut Rng, len: usize| -> Vec<f32> {
+                    (0..len).map(|_| rng.f32() * 2.0 - 1.0).collect()
+                };
+                let a = gen(&mut rng, (t.m * t.k) as usize);
+                let b = gen(&mut rng, (t.k * t.n) as usize);
+                let c = gen(&mut rng, (t.m * t.n) as usize);
+                (a, b, c)
+            })
+            .clone()
+    }
+
+    /// Best artifact (least padding waste) for (config, triple).
+    pub fn artifact_for(&self, cfg: &KernelConfig, t: Triple) -> Option<String> {
+        let names = self.by_config.get(cfg)?;
+        names
+            .iter()
+            .filter_map(|n| {
+                let meta = self.runtime.manifest.find(n)?;
+                meta.accepts(t).then(|| (n.clone(), meta.waste(t)))
+            })
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(n, _)| n)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn device_name(&self) -> String {
+        "host-cpu".to_string()
+    }
+
+    fn measure(&mut self, cfg: &KernelConfig, t: Triple) -> Option<f64> {
+        let artifact = self.artifact_for(cfg, t)?;
+        let (a, b, c) = self.operands(t);
+        let input = GemmInput {
+            m: t.m as usize,
+            n: t.n as usize,
+            k: t.k as usize,
+            a: &a,
+            b: &b,
+            c: &c,
+            alpha: 1.0,
+            beta: 0.0,
+        };
+        // Warmup (compilation + caches), then median of reps.
+        self.runtime.gemm(&artifact, &input).ok()?;
+        let mut times = Vec::with_capacity(self.reps);
+        for _ in 0..self.reps {
+            let out = self.runtime.gemm(&artifact, &input).ok()?;
+            times.push(out.total_time().as_secs_f64());
+        }
+        times.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        let median = times[times.len() / 2];
+        Some(t.flops() / median / 1e9)
+    }
+
+    fn candidates(&self, t: Triple) -> Vec<KernelConfig> {
+        let mut v: Vec<KernelConfig> = self
+            .by_config
+            .iter()
+            .filter(|(cfg, _)| self.artifact_for(cfg, t).is_some())
+            .map(|(cfg, _)| *cfg)
+            .collect();
+        v.sort_by_key(|c| c.name());
+        v
+    }
+}

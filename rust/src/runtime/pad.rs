@@ -1,0 +1,86 @@
+//! Host-side padding helpers for the indirect (bucketed) GEMM path — the
+//! measured O(n^2) cost mirroring CLBlast's pad/transpose helper kernels.
+
+/// Zero-pad a row-major `rows x cols` matrix into `rows_to x cols_to`.
+pub fn pad(src: &[f32], rows: usize, cols: usize, rows_to: usize, cols_to: usize) -> Vec<f32> {
+    assert_eq!(src.len(), rows * cols, "src size mismatch");
+    assert!(rows_to >= rows && cols_to >= cols, "pad must grow");
+    let mut out = vec![0f32; rows_to * cols_to];
+    copy_into(src, cols, &mut out, cols_to, rows);
+    out
+}
+
+/// Copy `rows` rows of width `src_cols` into a `dst_cols`-wide buffer.
+#[inline]
+pub fn copy_into(src: &[f32], src_cols: usize, dst: &mut [f32], dst_cols: usize, rows: usize) {
+    debug_assert!(dst_cols >= src_cols);
+    for r in 0..rows {
+        dst[r * dst_cols..r * dst_cols + src_cols]
+            .copy_from_slice(&src[r * src_cols..(r + 1) * src_cols]);
+    }
+}
+
+/// Slice the logical `rows x cols` region out of a padded row-major
+/// `_ x padded_cols` buffer.
+pub fn unpad(src: &[f32], padded_cols: usize, rows: usize, cols: usize) -> Vec<f32> {
+    assert!(padded_cols >= cols);
+    assert!(src.len() >= rows * padded_cols, "src too small");
+    let mut out = Vec::with_capacity(rows * cols);
+    for r in 0..rows {
+        out.extend_from_slice(&src[r * padded_cols..r * padded_cols + cols]);
+    }
+    out
+}
+
+/// Unpad into a caller-provided buffer (allocation-free hot path).
+pub fn unpad_into(src: &[f32], padded_cols: usize, rows: usize, cols: usize, out: &mut [f32]) {
+    assert!(out.len() >= rows * cols);
+    for r in 0..rows {
+        out[r * cols..(r + 1) * cols]
+            .copy_from_slice(&src[r * padded_cols..r * padded_cols + cols]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_places_and_zeroes() {
+        let src = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        let out = pad(&src, 2, 3, 4, 5);
+        assert_eq!(out.len(), 20);
+        assert_eq!(&out[0..3], &[1.0, 2.0, 3.0]);
+        assert_eq!(out[3], 0.0);
+        assert_eq!(&out[5..8], &[4.0, 5.0, 6.0]);
+        assert!(out[10..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn pad_noop_dimensions() {
+        let src = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(pad(&src, 2, 2, 2, 2), src.to_vec());
+    }
+
+    #[test]
+    fn unpad_inverts_pad() {
+        let src: Vec<f32> = (0..12).map(|x| x as f32).collect(); // 3x4
+        let padded = pad(&src, 3, 4, 8, 8);
+        assert_eq!(unpad(&padded, 8, 3, 4), src);
+    }
+
+    #[test]
+    fn unpad_into_matches_unpad() {
+        let src: Vec<f32> = (0..15).map(|x| x as f32).collect(); // 3x5
+        let padded = pad(&src, 3, 5, 4, 8);
+        let mut buf = vec![0f32; 15];
+        unpad_into(&padded, 8, 3, 5, &mut buf);
+        assert_eq!(buf, unpad(&padded, 8, 3, 5));
+    }
+
+    #[test]
+    #[should_panic(expected = "src size mismatch")]
+    fn pad_checks_input() {
+        pad(&[1.0], 2, 3, 4, 4);
+    }
+}

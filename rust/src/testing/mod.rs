@@ -1,0 +1,186 @@
+//! proptest-lite: a minimal property-based testing framework (no proptest
+//! crate offline).  Deterministic generation from a seeded PRNG plus
+//! greedy shrinking of failing u64 tuples.
+
+use crate::util::prng::Rng;
+
+/// A generated-value strategy.
+pub trait Strategy {
+    type Value;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate shrinks, most aggressive first (default: none).
+    fn shrink(&self, _value: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Uniform integer in an inclusive range.
+pub struct RangeU32 {
+    pub lo: u32,
+    pub hi: u32,
+}
+
+impl Strategy for RangeU32 {
+    type Value = u32;
+
+    fn generate(&self, rng: &mut Rng) -> u32 {
+        self.lo + rng.below((self.hi - self.lo + 1) as u64) as u32
+    }
+
+    fn shrink(&self, value: &u32) -> Vec<u32> {
+        let mut out = Vec::new();
+        if *value > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*value - self.lo) / 2);
+            out.push(*value - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Uniform choice from a fixed slice.
+pub struct OneOf<T: Clone>(pub Vec<T>);
+
+impl<T: Clone> Strategy for OneOf<T> {
+    type Value = T;
+
+    fn generate(&self, rng: &mut Rng) -> T {
+        self.0[rng.below(self.0.len() as u64) as usize].clone()
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum PropResult<V> {
+    Ok { cases: usize },
+    Failed { minimal: V, cases: usize, message: String },
+}
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 100, seed: 0xADA9_71B5, max_shrink_steps: 200 }
+    }
+}
+
+/// Check `prop` over `cases` generated values; on failure, greedily
+/// shrink.  Returns the (possibly shrunk) counterexample.
+pub fn check<S: Strategy>(
+    cfg: &PropConfig,
+    strategy: &S,
+    prop: impl Fn(&S::Value) -> Result<(), String>,
+) -> PropResult<S::Value> {
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let value = strategy.generate(&mut rng);
+        if let Err(msg) = prop(&value) {
+            // Shrink.
+            let mut best = value;
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: while steps < cfg.max_shrink_steps {
+                for cand in strategy.shrink(&best) {
+                    steps += 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            return PropResult::Failed {
+                minimal: best,
+                cases: case + 1,
+                message: best_msg,
+            };
+        }
+    }
+    PropResult::Ok { cases: cfg.cases }
+}
+
+/// Assert helper: panics with the minimal counterexample.
+pub fn assert_prop<S: Strategy>(
+    cfg: &PropConfig,
+    strategy: &S,
+    prop: impl Fn(&S::Value) -> Result<(), String>,
+) where
+    S::Value: std::fmt::Debug,
+{
+    match check(cfg, strategy, prop) {
+        PropResult::Ok { .. } => {}
+        PropResult::Failed { minimal, cases, message } => {
+            panic!("property failed after {cases} cases; minimal counterexample: {minimal:?}: {message}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let cfg = PropConfig::default();
+        let s = RangeU32 { lo: 1, hi: 1000 };
+        match check(&cfg, &s, |&x| {
+            if x >= 1 {
+                Ok(())
+            } else {
+                Err("x < 1".into())
+            }
+        }) {
+            PropResult::Ok { cases } => assert_eq!(cases, cfg.cases),
+            PropResult::Failed { .. } => panic!("should pass"),
+        }
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_boundary() {
+        let cfg = PropConfig::default();
+        let s = RangeU32 { lo: 0, hi: 10_000 };
+        // Fails for x >= 500; minimal counterexample should shrink near 500.
+        match check(&cfg, &s, |&x| {
+            if x < 500 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 500"))
+            }
+        }) {
+            PropResult::Failed { minimal, .. } => {
+                assert!(minimal >= 500, "shrunk past the boundary: {minimal}");
+                assert!(minimal <= 1000, "did not shrink: {minimal}");
+            }
+            PropResult::Ok { .. } => panic!("should fail"),
+        }
+    }
+
+    #[test]
+    fn one_of_generates_members() {
+        let s = OneOf(vec!["a", "b", "c"]);
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let v = s.generate(&mut rng);
+            assert!(["a", "b", "c"].contains(&v));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let s = RangeU32 { lo: 0, hi: 1 << 30 };
+        let gen = |seed| {
+            let mut rng = Rng::new(seed);
+            (0..10).map(|_| s.generate(&mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(gen(9), gen(9));
+        assert_ne!(gen(9), gen(10));
+    }
+}

@@ -1,0 +1,145 @@
+//! Simulated-annealing search — the meta-heuristic CLTune itself offers
+//! and the paper cites as the standard huge-search-space mitigation
+//! (§6, [39][49]).  Used by the quality-vs-cost ablation
+//! (`adaptd exp ablation`): how close does a budgeted search get to the
+//! exhaustive tuner's peak?
+
+use crate::config::{KernelConfig, Triple};
+use crate::util::prng::Rng;
+
+use super::Backend;
+
+/// Annealing-schedule parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct AnnealParams {
+    /// Total measurements (the budget).
+    pub evaluations: usize,
+    /// Initial acceptance temperature as a fraction of the first value.
+    pub t0_frac: f64,
+    pub seed: u64,
+}
+
+impl Default for AnnealParams {
+    fn default() -> Self {
+        AnnealParams { evaluations: 200, t0_frac: 0.3, seed: 0xA11EA1 }
+    }
+}
+
+/// Search `backend`'s candidate space for `triple` with simulated
+/// annealing over the *index space* of the candidate list (neighbours =
+/// nearby indices; the list is static-efficiency-ordered on SimBackend,
+/// so index distance approximates config similarity).
+pub fn anneal<B: Backend + ?Sized>(
+    backend: &mut B,
+    triple: Triple,
+    params: AnnealParams,
+) -> Option<(KernelConfig, f64)> {
+    let candidates = backend.candidates_shared(triple);
+    if candidates.is_empty() {
+        return None;
+    }
+    let n = candidates.len();
+    let mut rng = Rng::new(
+        params.seed ^ ((triple.m as u64) << 40) ^ ((triple.n as u64) << 20)
+            ^ triple.k as u64,
+    );
+
+    // Start from a random measurable point.
+    let mut cur_idx = rng.below(n as u64) as usize;
+    let mut cur_g = f64::MIN;
+    for _ in 0..n {
+        if let Some(g) = backend.measure(&candidates[cur_idx], triple) {
+            cur_g = g;
+            break;
+        }
+        cur_idx = rng.below(n as u64) as usize;
+    }
+    if cur_g == f64::MIN {
+        return None;
+    }
+    let mut best = (candidates[cur_idx], cur_g);
+
+    let evals = params.evaluations.max(2);
+    let t0 = params.t0_frac * cur_g.abs().max(1e-9);
+    for step in 0..evals {
+        // Geometric cooling to ~1% of t0.
+        let temp = t0 * (0.01f64).powf(step as f64 / evals as f64);
+        // Neighbour: jump within a window that shrinks as we cool.
+        let window = ((n as f64) * 0.25 * (temp / t0).max(0.02)) as i64 + 1;
+        let delta = rng.below(2 * window as u64 + 1) as i64 - window;
+        let next_idx = (cur_idx as i64 + delta).rem_euclid(n as i64) as usize;
+        let Some(next_g) = backend.measure(&candidates[next_idx], triple) else {
+            continue;
+        };
+        if next_g > best.1 {
+            best = (candidates[next_idx], next_g);
+        }
+        let accept = next_g >= cur_g || {
+            let p = ((next_g - cur_g) / temp).exp();
+            rng.f64() < p
+        };
+        if accept {
+            cur_idx = next_idx;
+            cur_g = next_g;
+        }
+    }
+    Some(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceProfile;
+    use crate::tuner::{SimBackend, Tuner};
+
+    #[test]
+    fn anneal_finds_near_peak_with_small_budget() {
+        let mut backend = SimBackend::new(DeviceProfile::nvidia_p100());
+        let t = Triple::new(512, 512, 512);
+        let (_, exhaustive) = Tuner::default().tune_triple(&mut backend, t).unwrap();
+        let (_, annealed) = anneal(
+            &mut backend,
+            t,
+            AnnealParams { evaluations: 300, ..Default::default() },
+        )
+        .unwrap();
+        // 300 evals over a ~4-6k space should land within 25% of peak.
+        assert!(
+            annealed >= 0.75 * exhaustive,
+            "anneal {annealed:.1} vs exhaustive {exhaustive:.1}"
+        );
+        assert!(annealed <= exhaustive + 1e-9, "anneal cannot beat exhaustive");
+    }
+
+    #[test]
+    fn anneal_deterministic_per_seed() {
+        let mut backend = SimBackend::new(DeviceProfile::mali_t860());
+        let t = Triple::new(256, 128, 256);
+        let p = AnnealParams { evaluations: 60, ..Default::default() };
+        let a = anneal(&mut backend, t, p).unwrap();
+        let b = anneal(&mut backend, t, p).unwrap();
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+    }
+
+    #[test]
+    fn bigger_budget_does_not_hurt() {
+        let mut backend = SimBackend::new(DeviceProfile::mali_t860());
+        let t = Triple::new(1024, 256, 512);
+        let small = anneal(
+            &mut backend,
+            t,
+            AnnealParams { evaluations: 30, ..Default::default() },
+        )
+        .unwrap()
+        .1;
+        let large = anneal(
+            &mut backend,
+            t,
+            AnnealParams { evaluations: 500, ..Default::default() },
+        )
+        .unwrap()
+        .1;
+        assert!(large >= small * 0.999, "large {large} < small {small}");
+    }
+}

@@ -1,0 +1,135 @@
+//! Measurement backends for the tuner.
+//!
+//! `Backend` abstracts "run configuration c on input i, report GFLOP/s" —
+//! the paper's objective function `f_a(i)`.  Two implementations:
+//!
+//! * [`SimBackend`] — the analytical device model (P100 / Mali), used to
+//!   regenerate the paper's tables and figures;
+//! * `runtime::PjrtBackend` — real wall-clock measurements of the AOT'd
+//!   Pallas artifacts on the CPU PJRT client (the end-to-end path).
+
+use crate::config::{direct_space, xgemm_space, KernelConfig, Triple};
+use crate::device::{sim, DeviceProfile};
+
+use std::sync::Arc;
+
+/// Stable per-config fingerprint (shared with the simulator's noise).
+fn fingerprint(cfg: &KernelConfig) -> u64 {
+    match cfg {
+        KernelConfig::Xgemm(p) => p.fingerprint(),
+        KernelConfig::Direct(p) => p.fingerprint(),
+    }
+}
+
+/// The tuner's measurement interface: the objective function f_a(i).
+pub trait Backend {
+    /// Human-readable device name (goes into datasets / results).
+    fn device_name(&self) -> String;
+
+    /// GFLOP/s of `cfg` on `triple`; `None` when the config is illegal or
+    /// unavailable on this backend.
+    fn measure(&mut self, cfg: &KernelConfig, triple: Triple) -> Option<f64>;
+
+    /// Candidate configurations for `triple` (the searchable space).
+    fn candidates(&self, triple: Triple) -> Vec<KernelConfig>;
+
+    /// Shared candidate list for the exhaustive hot path (§Perf: avoids
+    /// cloning a multi-thousand-entry Vec once per triple).  Backends
+    /// with a triple-independent space override this with an Arc clone.
+    /// Backends may order this list best-first to maximize pruning.
+    fn candidates_shared(&self, triple: Triple) -> Arc<Vec<KernelConfig>> {
+        Arc::new(self.candidates(triple))
+    }
+
+    /// Admissible upper bound on `measure(cfg, triple)` when one can be
+    /// computed cheaply: the tuner skips a candidate whose bound falls
+    /// below the best measurement so far without changing the argmax.
+    /// `None` disables pruning (default, and for real-hardware backends).
+    fn measure_upper_bound(&self, _cfg: &KernelConfig, _triple: Triple) -> Option<f64> {
+        None
+    }
+}
+
+/// Simulated backend over an analytical device model.
+pub struct SimBackend {
+    pub profile: DeviceProfile,
+    /// Legal configs sorted by descending static efficiency so the
+    /// pruning bound kicks in as early as possible (§Perf).
+    legal: Arc<Vec<KernelConfig>>,
+    /// static_eff keyed by config fingerprint (cheaper to hash than the
+    /// full 14-field struct on the pruning hot path).
+    static_eff: std::collections::HashMap<u64, f64>,
+}
+
+impl SimBackend {
+    pub fn new(profile: DeviceProfile) -> Self {
+        // Pre-filter device legality once: CLTune does the same with its
+        // constraint system before launching any kernel.
+        let mut legal: Vec<KernelConfig> = xgemm_space()
+            .iter()
+            .chain(direct_space().iter())
+            .filter(|c| profile.is_legal(c))
+            .collect();
+        let static_eff: std::collections::HashMap<u64, f64> = legal
+            .iter()
+            .map(|c| (fingerprint(c), sim::static_eff(&profile, c)))
+            .collect();
+        legal.sort_by(|a, b| {
+            static_eff[&fingerprint(b)]
+                .partial_cmp(&static_eff[&fingerprint(a)])
+                .unwrap()
+        });
+        SimBackend { profile, legal: Arc::new(legal), static_eff }
+    }
+
+    pub fn legal_count(&self) -> usize {
+        self.legal.len()
+    }
+}
+
+impl Backend for SimBackend {
+    fn device_name(&self) -> String {
+        self.profile.id.name().to_string()
+    }
+
+    fn measure(&mut self, cfg: &KernelConfig, triple: Triple) -> Option<f64> {
+        sim::measure_gflops(&self.profile, cfg, triple)
+    }
+
+    fn candidates(&self, _triple: Triple) -> Vec<KernelConfig> {
+        (*self.legal).clone()
+    }
+
+    fn candidates_shared(&self, _triple: Triple) -> Arc<Vec<KernelConfig>> {
+        Arc::clone(&self.legal)
+    }
+
+    fn measure_upper_bound(&self, cfg: &KernelConfig, triple: Triple) -> Option<f64> {
+        let eff = *self.static_eff.get(&fingerprint(cfg))?;
+        Some(sim::upper_bound_gflops(&self.profile, cfg, triple, eff))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_backend_precomputes_legal_space() {
+        let b = SimBackend::new(DeviceProfile::nvidia_p100());
+        assert!(b.legal_count() > 100);
+        let total = xgemm_space().raw_size() + direct_space().raw_size();
+        assert!((b.legal_count() as u64) < total);
+    }
+
+    #[test]
+    fn measure_matches_sim() {
+        let mut b = SimBackend::new(DeviceProfile::mali_t860());
+        let t = Triple::new(256, 256, 256);
+        let cfg = b.candidates(t)[0];
+        assert_eq!(
+            b.measure(&cfg, t),
+            sim::measure_gflops(&b.profile, &cfg, t)
+        );
+    }
+}

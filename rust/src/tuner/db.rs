@@ -1,0 +1,134 @@
+//! Tuning database: the per-triple best configuration + its GFLOP/s —
+//! the paper's "peak of the tuner" oracle, persisted as JSON.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::{KernelConfig, Triple};
+use crate::util::json::Json;
+
+/// Best-known tuning result per triple on one device.
+#[derive(Debug, Clone, Default)]
+pub struct TuningDb {
+    pub device: String,
+    entries: HashMap<Triple, (KernelConfig, f64)>,
+}
+
+impl TuningDb {
+    pub fn new(device: impl Into<String>) -> Self {
+        TuningDb { device: device.into(), entries: HashMap::new() }
+    }
+
+    pub fn insert(&mut self, t: Triple, cfg: KernelConfig, gflops: f64) {
+        match self.entries.get(&t) {
+            Some((_, old)) if *old >= gflops => {}
+            _ => {
+                self.entries.insert(t, (cfg, gflops));
+            }
+        }
+    }
+
+    pub fn best(&self, t: Triple) -> Option<&(KernelConfig, f64)> {
+        self.entries.get(&t)
+    }
+
+    /// Peak GFLOP/s (the tuner upper bound) for a triple.
+    pub fn peak(&self, t: Triple) -> Option<f64> {
+        self.entries.get(&t).map(|(_, g)| *g)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&Triple, &(KernelConfig, f64))> {
+        self.entries.iter()
+    }
+
+    // ------------------------------------------------------- persistence
+
+    pub fn to_json(&self) -> Json {
+        let mut rows: Vec<(&Triple, &(KernelConfig, f64))> =
+            self.entries.iter().collect();
+        rows.sort_by_key(|(t, _)| **t);
+        Json::obj(vec![
+            ("device", Json::str(self.device.clone())),
+            (
+                "entries",
+                Json::Arr(
+                    rows.into_iter()
+                        .map(|(t, (cfg, g))| {
+                            Json::obj(vec![
+                                ("triple", t.to_json()),
+                                ("config", cfg.to_json()),
+                                ("gflops", Json::num(*g)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut db = TuningDb::new(v.get("device")?.as_str()?);
+        for e in v.get("entries")?.as_arr()? {
+            let t = Triple::from_json(e.get("triple")?)?;
+            let cfg = KernelConfig::from_json(e.get("config")?)?;
+            let g = e.get("gflops")?.as_f64()?;
+            db.insert(t, cfg, g);
+        }
+        Ok(db)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::XgemmParams;
+
+    #[test]
+    fn insert_keeps_best() {
+        let mut db = TuningDb::new("test");
+        let t = Triple::new(1, 2, 3);
+        let cfg = KernelConfig::Xgemm(XgemmParams::default());
+        db.insert(t, cfg, 10.0);
+        db.insert(t, cfg, 5.0); // worse: ignored
+        assert_eq!(db.peak(t), Some(10.0));
+        db.insert(t, cfg, 20.0); // better: replaces
+        assert_eq!(db.peak(t), Some(20.0));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut db = TuningDb::new("p100");
+        db.insert(
+            Triple::new(64, 64, 64),
+            KernelConfig::Xgemm(XgemmParams::default()),
+            42.5,
+        );
+        let back = TuningDb::from_json(&db.to_json()).unwrap();
+        assert_eq!(back.device, "p100");
+        assert_eq!(back.peak(Triple::new(64, 64, 64)), Some(42.5));
+    }
+}

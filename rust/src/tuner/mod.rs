@@ -1,0 +1,240 @@
+//! The tuner — CLTune's role in the paper: search the configuration space
+//! per input triple, record the best, and label datasets for training.
+
+pub mod anneal;
+mod backend;
+mod db;
+
+pub use anneal::{anneal, AnnealParams};
+pub use backend::{Backend, SimBackend};
+pub use db::TuningDb;
+
+use crate::config::{DirectParams, KernelConfig, Triple, XgemmParams};
+use crate::dataset::{ClassTable, Dataset, LabeledDataset};
+use crate::util::prng::Rng;
+
+/// Search strategy over the candidate space.
+#[derive(Debug, Clone, Copy)]
+pub enum SearchStrategy {
+    /// Evaluate every legal candidate (the paper's choice: "we explore the
+    /// entire search space ... avoiding perturbations due to sampling").
+    Exhaustive,
+    /// Evaluate a random subset of the candidates (the paper's suggested
+    /// quality/time trade-off; used by the ablation bench).
+    RandomSample { count: usize, seed: u64 },
+}
+
+/// The tuner: searches a backend's candidate space per triple.
+#[derive(Debug, Clone, Copy)]
+pub struct Tuner {
+    pub strategy: SearchStrategy,
+}
+
+impl Default for Tuner {
+    fn default() -> Self {
+        Tuner { strategy: SearchStrategy::Exhaustive }
+    }
+}
+
+impl Tuner {
+    pub fn new(strategy: SearchStrategy) -> Self {
+        Tuner { strategy }
+    }
+
+    /// Best (config, GFLOP/s) for one triple, or `None` if nothing is
+    /// measurable (empty candidate set).
+    pub fn tune_triple<B: Backend + ?Sized>(
+        &self,
+        backend: &mut B,
+        triple: Triple,
+    ) -> Option<(KernelConfig, f64)> {
+        // Exhaustive search iterates the shared (Arc) candidate list —
+        // no per-triple clone of a multi-thousand-entry Vec (§Perf).
+        let shared = backend.candidates_shared(triple);
+        let sampled: Option<Vec<KernelConfig>> =
+            if let SearchStrategy::RandomSample { count, seed } = self.strategy {
+                let mut candidates = (*shared).clone();
+                let mut rng = Rng::new(
+                    seed ^ (triple.m as u64) << 32
+                        ^ (triple.n as u64) << 16
+                        ^ triple.k as u64,
+                );
+                rng.shuffle(&mut candidates);
+                candidates.truncate(count.max(1));
+                Some(candidates)
+            } else {
+                None
+            };
+        let iter: &[KernelConfig] = sampled.as_deref().unwrap_or(&shared);
+        let mut best: Option<(KernelConfig, f64)> = None;
+        for cfg in iter {
+            // Sound pruning: skip candidates whose admissible upper bound
+            // cannot beat the best measurement so far (§Perf).
+            if let (Some((_, bg)), Some(ub)) =
+                (best, backend.measure_upper_bound(cfg, triple))
+            {
+                if ub <= bg {
+                    continue;
+                }
+            }
+            if let Some(g) = backend.measure(cfg, triple) {
+                match best {
+                    Some((_, bg)) if bg >= g => {}
+                    _ => best = Some((*cfg, g)),
+                }
+            }
+        }
+        best
+    }
+
+    /// Tune every triple of a dataset, producing the labeled dataset
+    /// D = {(I, C)} and filling the tuning database (the peak oracle).
+    pub fn label_dataset<B: Backend + ?Sized>(
+        &self,
+        backend: &mut B,
+        dataset: &Dataset,
+        db: &mut TuningDb,
+    ) -> LabeledDataset {
+        let mut classes = ClassTable::new();
+        let mut entries = Vec::with_capacity(dataset.len());
+        for &t in &dataset.triples {
+            if let Some((cfg, g)) = self.tune_triple(backend, t) {
+                db.insert(t, cfg, g);
+                entries.push((t, classes.intern(cfg)));
+            }
+        }
+        LabeledDataset {
+            kind: dataset.kind,
+            device: backend.device_name(),
+            entries,
+            classes,
+        }
+    }
+}
+
+/// CLBlast's *default* (non-adaptive) behaviour — the paper's baseline:
+/// one configuration per kernel, tuned for the default matrix size
+/// (M=N=K=1024 for xgemm, 256 for xgemm_direct), then selected at run
+/// time by a threshold ("linear cut") on the operand sizes.
+#[derive(Debug, Clone, Copy)]
+pub struct TunedDefault {
+    pub xgemm: KernelConfig,
+    pub direct: KernelConfig,
+    pub threshold_geo: f64,
+}
+
+impl TunedDefault {
+    /// Tune the two default configurations on a backend, exactly as
+    /// CLBlast ships: per-device, at the default sizes.
+    pub fn tune<B: Backend + ?Sized>(backend: &mut B) -> TunedDefault {
+        let tuner = Tuner::default();
+        let at = |backend: &mut B, t: Triple, kind: crate::config::KernelKind| {
+            let mut best: Option<(KernelConfig, f64)> = None;
+            for cfg in backend.candidates(t) {
+                if cfg.kind() != kind {
+                    continue;
+                }
+                if let Some(g) = backend.measure(&cfg, t) {
+                    match best {
+                        Some((_, bg)) if bg >= g => {}
+                        _ => best = Some((cfg, g)),
+                    }
+                }
+            }
+            best.map(|(c, _)| c)
+        };
+        let _ = &tuner;
+        let xgemm = at(
+            backend,
+            Triple::new(1024, 1024, 1024),
+            crate::config::KernelKind::Xgemm,
+        )
+        .unwrap_or(KernelConfig::Xgemm(XgemmParams::default()));
+        let direct = at(
+            backend,
+            Triple::new(256, 256, 256),
+            crate::config::KernelKind::XgemmDirect,
+        )
+        .unwrap_or(KernelConfig::Direct(DirectParams::default()));
+        TunedDefault { xgemm, direct, threshold_geo: 384.0 }
+    }
+
+    /// The run-time threshold selection.
+    pub fn select(&self, triple: Triple) -> KernelConfig {
+        let geo = (triple.m as f64 * triple.n as f64 * triple.k as f64).cbrt();
+        if geo < self.threshold_geo {
+            self.direct
+        } else {
+            self.xgemm
+        }
+    }
+}
+
+/// Shorthand: the untuned fallback default (used where no backend exists).
+pub fn clblast_default(triple: Triple) -> KernelConfig {
+    TunedDefault {
+        xgemm: KernelConfig::Xgemm(XgemmParams::default()),
+        direct: KernelConfig::Direct(DirectParams::default()),
+        threshold_geo: 384.0,
+    }
+    .select(triple)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::DatasetKind;
+    use crate::device::DeviceProfile;
+
+    #[test]
+    fn tune_triple_finds_positive_best() {
+        let mut b = SimBackend::new(DeviceProfile::nvidia_p100());
+        let (cfg, g) = Tuner::default()
+            .tune_triple(&mut b, Triple::new(256, 256, 256))
+            .unwrap();
+        assert!(g > 0.0);
+        assert!(b.profile.is_legal(&cfg));
+    }
+
+    #[test]
+    fn random_sample_no_better_than_exhaustive() {
+        let mut b = SimBackend::new(DeviceProfile::mali_t860());
+        let t = Triple::new(512, 512, 512);
+        let (_, g_ex) = Tuner::default().tune_triple(&mut b, t).unwrap();
+        let (_, g_rs) = Tuner::new(SearchStrategy::RandomSample {
+            count: 50,
+            seed: 1,
+        })
+        .tune_triple(&mut b, t)
+        .unwrap();
+        assert!(g_rs <= g_ex + 1e-9, "sampled {g_rs} > exhaustive {g_ex}");
+    }
+
+    #[test]
+    fn label_dataset_covers_all_triples() {
+        let mut b = SimBackend::new(DeviceProfile::nvidia_p100());
+        let ds = Dataset::generate(DatasetKind::Po2);
+        let mut db = TuningDb::new(b.device_name());
+        let labeled = Tuner::default().label_dataset(&mut b, &ds, &mut db);
+        assert_eq!(labeled.len(), ds.len());
+        assert_eq!(db.len(), ds.len());
+        assert!(labeled.classes.len() > 1, "po2 should need >1 config");
+        // Every label points at a valid class.
+        assert!(labeled
+            .entries
+            .iter()
+            .all(|(_, c)| (*c as usize) < labeled.classes.len()));
+    }
+
+    #[test]
+    fn default_policy_switches_on_size() {
+        assert!(matches!(
+            clblast_default(Triple::new(64, 64, 64)),
+            KernelConfig::Direct(_)
+        ));
+        assert!(matches!(
+            clblast_default(Triple::new(1024, 1024, 1024)),
+            KernelConfig::Xgemm(_)
+        ));
+    }
+}

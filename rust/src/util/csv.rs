@@ -1,0 +1,153 @@
+//! Tiny CSV writer/reader for experiment outputs (figures are emitted as
+//! CSV series next to their ASCII rendering so they can be re-plotted).
+
+use std::fmt::Write as _;
+
+/// A CSV document under construction.
+#[derive(Debug, Default, Clone)]
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new(header: &[&str]) -> Self {
+        CsvWriter {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_display(&mut self, cells: &[&dyn std::fmt::Display]) {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        writeln_row(&mut out, &self.header);
+        for r in &self.rows {
+            writeln_row(&mut out, r);
+        }
+        out
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_string())
+    }
+}
+
+fn writeln_row(out: &mut String, cells: &[String]) {
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if c.contains(',') || c.contains('"') || c.contains('\n') {
+            let escaped = c.replace('"', "\"\"");
+            let _ = write!(out, "\"{escaped}\"");
+        } else {
+            out.push_str(c);
+        }
+    }
+    out.push('\n');
+}
+
+/// Parse CSV text into (header, rows).  Handles quoted cells.
+pub fn parse(text: &str) -> (Vec<String>, Vec<Vec<String>>) {
+    let mut lines = Vec::new();
+    let mut cur = Vec::new();
+    let mut cell = String::new();
+    let mut in_quotes = false;
+    let mut chars = text.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes => {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    cell.push('"');
+                } else {
+                    in_quotes = false;
+                }
+            }
+            '"' => in_quotes = true,
+            ',' if !in_quotes => {
+                cur.push(std::mem::take(&mut cell));
+            }
+            '\n' if !in_quotes => {
+                cur.push(std::mem::take(&mut cell));
+                lines.push(std::mem::take(&mut cur));
+            }
+            '\r' if !in_quotes => {}
+            c => cell.push(c),
+        }
+    }
+    if !cell.is_empty() || !cur.is_empty() {
+        cur.push(cell);
+        lines.push(cur);
+    }
+    if lines.is_empty() {
+        return (Vec::new(), Vec::new());
+    }
+    let header = lines.remove(0);
+    (header, lines)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_and_parse_roundtrip() {
+        let mut w = CsvWriter::new(&["m", "n", "gflops"]);
+        w.row(&["128".into(), "64".into(), "2.5".into()]);
+        w.row(&["has,comma".into(), "has\"quote".into(), "x".into()]);
+        let text = w.to_string();
+        let (hdr, rows) = parse(&text);
+        assert_eq!(hdr, vec!["m", "n", "gflops"]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1][0], "has,comma");
+        assert_eq!(rows[1][1], "has\"quote");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn width_mismatch_panics() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["1".into()]);
+    }
+
+    #[test]
+    fn parse_empty() {
+        let (h, r) = parse("");
+        assert!(h.is_empty() && r.is_empty());
+    }
+
+    #[test]
+    fn row_display_formats() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row_display(&[&1.5f64, &"x"]);
+        assert!(w.to_string().contains("1.5,x"));
+    }
+}

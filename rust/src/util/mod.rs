@@ -1,0 +1,9 @@
+//! Substrate utilities built from scratch for the offline image
+//! (no serde / rand / csv crates available): deterministic PRNG, JSON,
+//! CSV, statistics and ASCII table/chart rendering.
+
+pub mod csv;
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,151 @@
+//! Statistics helpers for the benchmark harness and the metrics module:
+//! summary statistics, percentiles, confidence intervals.
+
+/// Summary statistics of a sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    pub p05: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of(empty)");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            stddev: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            median: percentile_sorted(&sorted, 50.0),
+            p05: percentile_sorted(&sorted, 5.0),
+            p95: percentile_sorted(&sorted, 95.0),
+        }
+    }
+
+    /// Half-width of the ~95% CI on the mean (normal approximation).
+    pub fn ci95_half(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        1.96 * self.stddev / (self.n as f64).sqrt()
+    }
+}
+
+/// Linear-interpolation percentile over a pre-sorted slice, `p` in [0,100].
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, p)
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Median-absolute-deviation outlier filter: keeps values within
+/// `k` MADs of the median (criterion-style robust filtering).
+pub fn filter_outliers(xs: &[f64], k: f64) -> Vec<f64> {
+    if xs.len() < 4 {
+        return xs.to_vec();
+    }
+    let med = percentile(xs, 50.0);
+    let devs: Vec<f64> = xs.iter().map(|x| (x - med).abs()).collect();
+    let mad = percentile(&devs, 50.0);
+    if mad == 0.0 {
+        return xs.to_vec();
+    }
+    xs.iter().copied().filter(|x| (x - med).abs() <= k * mad).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.median - 3.0).abs() < 1e-12);
+        assert!((s.stddev - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_single() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.mean, 7.0);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.ci95_half(), 0.0);
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert!((percentile(&xs, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_of_ratios() {
+        let g = geomean(&[2.0, 0.5]);
+        assert!((g - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn outlier_filter_removes_spike() {
+        let mut xs = vec![10.0; 20];
+        xs.push(1000.0);
+        // Perturb so MAD > 0.
+        for (i, x) in xs.iter_mut().enumerate() {
+            *x += (i as f64) * 0.01;
+        }
+        let kept = filter_outliers(&xs, 5.0);
+        assert!(kept.len() >= 19 && !kept.contains(&1000.2));
+    }
+
+    #[test]
+    fn mean_empty_is_nan() {
+        assert!(mean(&[]).is_nan());
+    }
+}

@@ -1,0 +1,141 @@
+//! ASCII table and chart rendering — every paper table/figure is
+//! regenerated as an ASCII artifact (plus CSV) so `adaptd exp ...` output
+//! is directly comparable with the paper.
+
+/// Render a boxed ASCII table.
+pub fn render(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncols = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        assert_eq!(row.len(), ncols, "row width mismatch in table '{title}'");
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let total: usize = widths.iter().sum::<usize>() + 3 * ncols + 1;
+    out.push_str(&format!("{title}\n"));
+    out.push_str(&"=".repeat(total.min(120)));
+    out.push('\n');
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("|");
+        for (c, w) in cells.iter().zip(widths) {
+            line.push_str(&format!(" {c:>w$} |", w = w));
+        }
+        line.push('\n');
+        line
+    };
+    let header_cells: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&header_cells, &widths));
+    out.push_str(&format!(
+        "|{}\n",
+        widths
+            .iter()
+            .map(|w| format!("{}-|", "-".repeat(w + 2)))
+            .collect::<String>()
+            .trim_end_matches('|')
+    ));
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+    }
+    out
+}
+
+/// Render a horizontal ASCII bar chart: one labelled bar per (label, value).
+pub fn bar_chart(title: &str, series: &[(String, f64)], width: usize) -> String {
+    let mut out = format!("{title}\n");
+    let max = series.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max);
+    let label_w = series.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    for (label, v) in series {
+        let frac = if max > 0.0 { (v / max).clamp(0.0, 1.0) } else { 0.0 };
+        let bars = (frac * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{label:<label_w$} |{} {v:.3}\n",
+            "#".repeat(bars),
+        ));
+    }
+    out
+}
+
+/// Render multiple aligned series as grouped lines (for figure 6/7-style
+/// per-triple GFLOPS comparisons): each x-label gets one row per series.
+pub fn grouped_chart(
+    title: &str,
+    x_labels: &[String],
+    series: &[(&str, Vec<f64>)],
+    width: usize,
+) -> String {
+    let mut out = format!("{title}\n");
+    let max = series
+        .iter()
+        .flat_map(|(_, v)| v.iter().copied())
+        .fold(f64::MIN, f64::max);
+    let name_w = series.iter().map(|(n, _)| n.len()).max().unwrap_or(0);
+    for (i, x) in x_labels.iter().enumerate() {
+        out.push_str(&format!("{x}\n"));
+        for (name, vals) in series {
+            let v = vals.get(i).copied().unwrap_or(0.0);
+            let frac = if max > 0.0 { (v / max).clamp(0.0, 1.0) } else { 0.0 };
+            let bars = (frac * width as f64).round() as usize;
+            out.push_str(&format!(
+                "  {name:<name_w$} |{} {v:.2}\n",
+                "#".repeat(bars),
+            ));
+        }
+    }
+    out
+}
+
+/// Format a float with fixed decimals, trimming to a compact cell.
+pub fn f(x: f64, decimals: usize) -> String {
+    format!("{x:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let s = render(
+            "T",
+            &["name", "v"],
+            &[
+                vec!["a".into(), "1".into()],
+                vec!["longer".into(), "22".into()],
+            ],
+        );
+        assert!(s.contains("| longer | 22 |"));
+        assert!(s.contains("|      a |  1 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_checks_width() {
+        render("T", &["a", "b"], &[vec!["1".into()]]);
+    }
+
+    #[test]
+    fn bar_chart_scales_to_max() {
+        let s = bar_chart(
+            "B",
+            &[("x".into(), 1.0), ("y".into(), 2.0)],
+            10,
+        );
+        let lines: Vec<&str> = s.lines().collect();
+        let count = |l: &str| l.matches('#').count();
+        assert_eq!(count(lines[1]), 5);
+        assert_eq!(count(lines[2]), 10);
+    }
+
+    #[test]
+    fn grouped_chart_has_all_series() {
+        let s = grouped_chart(
+            "G",
+            &["(1,1,1)".into()],
+            &[("model", vec![2.0]), ("default", vec![1.0])],
+            8,
+        );
+        assert!(s.contains("model") && s.contains("default"));
+    }
+}

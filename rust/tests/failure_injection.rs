@@ -1,0 +1,192 @@
+//! Failure injection: corrupt manifests, missing/corrupt HLO files,
+//! malformed persisted models/datasets, and hostile request inputs.
+//! The library must fail loudly and gracefully — never panic, never
+//! return wrong numbers silently.
+
+use std::path::{Path, PathBuf};
+
+use adaptlib::dataset::LabeledDataset;
+use adaptlib::dtree::DecisionTree;
+use adaptlib::runtime::{GemmInput, GemmRuntime, Manifest};
+use adaptlib::tuner::TuningDb;
+use adaptlib::util::json::Json;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("adaptlib-failinj-{name}"));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn runtime_rejects_missing_manifest() {
+    let dir = scratch("nomanifest");
+    let Err(err) = GemmRuntime::open(&dir) else {
+        panic!("open should fail without a manifest");
+    };
+    assert!(format!("{err:#}").contains("make artifacts"), "err: {err:#}");
+}
+
+#[test]
+fn runtime_rejects_truncated_manifest() {
+    let dir = scratch("truncated");
+    std::fs::write(dir.join("manifest.json"), r#"{"version": 1, "artifa"#).unwrap();
+    assert!(GemmRuntime::open(&dir).is_err());
+}
+
+#[test]
+fn runtime_rejects_wrong_version() {
+    let dir = scratch("version");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 99, "roster": "x", "artifacts": []}"#,
+    )
+    .unwrap();
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(format!("{err:#}").contains("version"));
+}
+
+#[test]
+fn runtime_rejects_empty_artifact_list() {
+    let dir = scratch("empty");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 1, "roster": "x", "artifacts": []}"#,
+    )
+    .unwrap();
+    assert!(Manifest::load(&dir).is_err());
+}
+
+#[test]
+fn runtime_errors_on_missing_hlo_file() {
+    let dir = scratch("missinghlo");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 1, "roster": "x", "artifacts": [
+            {"name": "ghost", "kernel": "xgemm_direct", "file": "ghost.hlo.txt",
+             "m": 8, "n": 8, "k": 8, "trans_a": false, "trans_b": false,
+             "config": {"wgd": 8, "mdimcd": 8, "ndimcd": 8, "vwmd": 1,
+                        "vwnd": 1, "kwid": 2, "pada": 1, "padb": 1}}
+        ]}"#,
+    )
+    .unwrap();
+    let mut rt = GemmRuntime::open(&dir).unwrap(); // manifest parses fine
+    let a = vec![0f32; 64];
+    let input = GemmInput { m: 8, n: 8, k: 8, a: &a, b: &a, c: &a, alpha: 1.0, beta: 0.0 };
+    assert!(rt.gemm("ghost", &input).is_err(), "missing HLO must error");
+}
+
+#[test]
+fn runtime_errors_on_corrupt_hlo_text() {
+    let Some(real) = artifacts_dir() else { return };
+    let dir = scratch("corrupthlo");
+    // Copy the real manifest but truncate one artifact's HLO mid-file.
+    let manifest_text = std::fs::read_to_string(real.join("manifest.json")).unwrap();
+    std::fs::write(dir.join("manifest.json"), &manifest_text).unwrap();
+    let m = Manifest::load(&real).unwrap();
+    for a in &m.artifacts {
+        let text = std::fs::read_to_string(m.hlo_path(a)).unwrap();
+        std::fs::write(dir.join(&a.file), &text[..text.len() / 3]).unwrap();
+    }
+    let mut rt = GemmRuntime::open(&dir).unwrap();
+    let name = rt.manifest.artifacts[0].name.clone();
+    assert!(rt.ensure_compiled(&name).is_err(), "corrupt HLO must not compile");
+}
+
+#[test]
+fn unknown_artifact_name_errors() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = GemmRuntime::open(&dir).unwrap();
+    let a = vec![0f32; 4];
+    let input = GemmInput { m: 2, n: 2, k: 2, a: &a, b: &a, c: &a, alpha: 1.0, beta: 0.0 };
+    let err = rt.gemm("no-such-artifact", &input).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown artifact"));
+}
+
+#[test]
+fn decision_tree_load_rejects_garbage() {
+    let dir = scratch("badtree");
+    for (name, body) in [
+        ("empty.json", ""),
+        ("notjson.json", "hello world"),
+        ("emptytree.json", r#"{"name":"x","nodes":[]}"#),
+        ("dangling.json", r#"{"name":"x","nodes":[{"f":0,"t":1,"l":7,"r":1},{"c":0,"n":1}]}"#),
+    ] {
+        let p = dir.join(name);
+        std::fs::write(&p, body).unwrap();
+        assert!(DecisionTree::load(&p).is_err(), "{name} should fail");
+    }
+    assert!(DecisionTree::load(Path::new("/nonexistent/tree.json")).is_err());
+}
+
+#[test]
+fn labeled_dataset_load_rejects_garbage() {
+    let dir = scratch("badds");
+    for (name, body) in [
+        ("notjson.json", "[[["),
+        ("missingkeys.json", r#"{"kind": "po2"}"#),
+        ("badkind.json", r#"{"kind":"zzz","device":"d","classes":[],"entries":[]}"#),
+        (
+            "badclassid.json",
+            r#"{"kind":"po2","device":"d","classes":[],"entries":[[1,1,1,0]]}"#,
+        ),
+    ] {
+        let p = dir.join(name);
+        std::fs::write(&p, body).unwrap();
+        assert!(LabeledDataset::load(&p).is_err(), "{name} should fail");
+    }
+}
+
+#[test]
+fn tuning_db_load_rejects_garbage() {
+    let dir = scratch("baddb");
+    let p = dir.join("db.json");
+    std::fs::write(&p, r#"{"entries": [{"triple": [1,2]}]}"#).unwrap();
+    assert!(TuningDb::load(&p).is_err());
+}
+
+#[test]
+fn json_parser_survives_adversarial_inputs() {
+    // Deeply nested, unterminated, control chars, huge numbers.
+    for bad in [
+        "{\"a\":", "[1,", "\"\\", "{\"k\": 1e999999}", "nullx", "tru",
+        "[\"\\u12\"]",
+    ] {
+        let _ = Json::parse(bad); // must not panic
+    }
+    let deep = "[".repeat(5000) + &"]".repeat(5000);
+    let _ = Json::parse(&deep); // recursion depth: must not smash the stack
+}
+
+#[test]
+fn gemm_input_validation_catches_all_mismatches() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = GemmRuntime::open(&dir).unwrap();
+    let name = rt
+        .manifest
+        .artifacts
+        .iter()
+        .find(|a| matches!(a.kind, adaptlib::runtime::ArtifactKind::Direct { m: 64, .. }))
+        .unwrap()
+        .name
+        .clone();
+    let good = vec![1f32; 64 * 64];
+    // Wrong a / b / c lengths each rejected.
+    for (la, lb, lc) in [(10, 4096, 4096), (4096, 10, 4096), (4096, 4096, 10)] {
+        let (a, b, c) = (vec![0f32; la], vec![0f32; lb], vec![0f32; lc]);
+        let input = GemmInput { m: 64, n: 64, k: 64, a: &a, b: &b, c: &c, alpha: 1.0, beta: 0.0 };
+        assert!(rt.gemm(&name, &input).is_err());
+    }
+    // Shape not served by this artifact.
+    let input = GemmInput {
+        m: 63, n: 64, k: 64,
+        a: &good[..63 * 64], b: &good, c: &good[..63 * 64],
+        alpha: 1.0, beta: 0.0,
+    };
+    assert!(rt.gemm(&name, &input).is_err());
+}

@@ -1,0 +1,170 @@
+//! Integration: the full off-line pipeline (dataset → tuner → split →
+//! CART → metrics → codegen) on simulated devices, plus persistence
+//! round-trips and paper-shape assertions.
+
+use adaptlib::codegen::{emit_cpp, emit_rust, eval_generated_rust, FlatTree};
+use adaptlib::config::{KernelKind, Triple};
+use adaptlib::dataset::{Dataset, DatasetKind};
+use adaptlib::device::DeviceId;
+use adaptlib::dtree::DecisionTree;
+use adaptlib::experiments::{figures, microbench, tables, Context};
+use adaptlib::tuner::TuningDb;
+
+fn quick_ctx() -> Context {
+    let mut ctx = Context::new();
+    ctx.model_limit = Some(6); // h1 row + start of h2 row
+    ctx
+}
+
+#[test]
+fn paper_shape_p100_prefers_direct_on_antonnet() {
+    let mut ctx = quick_ctx();
+    let sweep = ctx.sweep(DeviceId::NvidiaP100, DatasetKind::AntonNet);
+    let (ux, ud) = sweep.labeled.classes.unique_per_kernel();
+    // Paper Table 3: 1 xgemm vs 81 direct — direct dominates massively.
+    assert!(ud > 5 * ux.max(1), "direct {ud} should dominate xgemm {ux}");
+}
+
+#[test]
+fn paper_shape_mali_prefers_xgemm_on_po2() {
+    let mut ctx = quick_ctx();
+    let sweep = ctx.sweep(DeviceId::MaliT860, DatasetKind::Po2);
+    let (ux, ud) = sweep.labeled.classes.unique_per_kernel();
+    // Paper Table 4: 29 xgemm vs 1 direct.
+    assert!(ux > ud, "xgemm {ux} should dominate direct {ud} on mali/po2");
+}
+
+#[test]
+fn model_beats_default_on_average() {
+    // The paper's core claim: the model-driven library outperforms the
+    // default-tuned library (DTTR > 1 for the best model).
+    let mut ctx = Context::new();
+    for (device, kind) in [
+        (DeviceId::NvidiaP100, DatasetKind::Po2),
+        (DeviceId::MaliT860, DatasetKind::Po2),
+    ] {
+        let sweep = ctx.sweep(device, kind);
+        let best = sweep.best_model();
+        assert!(
+            best.scores.dttr > 1.0,
+            "{device}/{kind}: best model DTTR {} <= 1",
+            best.scores.dttr
+        );
+        assert!(best.scores.dtpr <= 1.0 + 1e-9);
+    }
+}
+
+#[test]
+fn deeper_trees_do_not_lose_dtpr_badly() {
+    // Paper Table 5: hMax-L1 beats h1-L1 on DTPR even when accuracy says
+    // otherwise.  Weak form: the best unbounded model >= the h1 stump.
+    let mut ctx = Context::new();
+    let sweep = ctx.sweep(DeviceId::NvidiaP100, DatasetKind::Po2);
+    let stump = sweep.model("h1-L1").unwrap();
+    let deep = sweep.model("hMax-L1").unwrap();
+    assert!(
+        deep.scores.dtpr >= stump.scores.dtpr - 0.02,
+        "hMax-L1 {} much worse than h1-L1 {}",
+        deep.scores.dtpr,
+        stump.scores.dtpr
+    );
+}
+
+#[test]
+fn speedup_over_default_exists_somewhere() {
+    // Figures 6/7: "speed-ups of up to 3x / 2.5x" — some test triple must
+    // show a large model-vs-default win.
+    let mut ctx = Context::new();
+    let sweep = ctx.sweep(DeviceId::NvidiaP100, DatasetKind::Po2);
+    let best = sweep.best_model();
+    let max_speedup = best
+        .records
+        .iter()
+        .map(|r| r.gflops_model / r.gflops_default.max(1e-12))
+        .fold(f64::MIN, f64::max);
+    assert!(max_speedup > 1.5, "max speedup only {max_speedup:.2}x");
+}
+
+#[test]
+fn labeled_dataset_roundtrip_through_disk() {
+    let mut ctx = quick_ctx();
+    let sweep = ctx.sweep(DeviceId::MaliT860, DatasetKind::Po2);
+    let dir = std::env::temp_dir().join("adaptlib-pipeline-test");
+    let path = dir.join("labeled.json");
+    sweep.labeled.save(&path).unwrap();
+    let back = adaptlib::dataset::LabeledDataset::load(&path).unwrap();
+    assert_eq!(back.entries, sweep.labeled.entries);
+    assert_eq!(back.classes.len(), sweep.labeled.classes.len());
+
+    let db_path = dir.join("db.json");
+    sweep.db.save(&db_path).unwrap();
+    let db_back = TuningDb::load(&db_path).unwrap();
+    assert_eq!(db_back.len(), sweep.db.len());
+    for (t, (cfg, g)) in sweep.db.iter() {
+        let (bcfg, bg) = db_back.best(*t).unwrap();
+        assert_eq!(bcfg, cfg);
+        assert!((bg - g).abs() < 1e-9);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn tree_roundtrip_and_codegen_agree_everywhere() {
+    let mut ctx = quick_ctx();
+    let sweep = ctx.sweep(DeviceId::MaliT860, DatasetKind::Po2);
+    let best = sweep.best_model();
+
+    // JSON round-trip.
+    let json = best.tree.to_json();
+    let back = DecisionTree::from_json(&json).unwrap();
+    // Flat + generated-source forms agree with the original on every
+    // dataset triple.
+    let flat = FlatTree::from_tree(&best.tree);
+    let rust_src = emit_rust(&best.tree, &sweep.labeled.classes);
+    for &(t, _) in &sweep.labeled.entries {
+        let want = best.tree.predict(t);
+        assert_eq!(back.predict(t), want);
+        assert_eq!(flat.predict(t.m, t.n, t.k), want);
+        assert_eq!(eval_generated_rust(&rust_src, t), Some(want), "at {t}");
+    }
+
+    // C++ output is structurally sound.
+    let cpp = emit_cpp(&best.tree, &sweep.labeled.classes);
+    assert_eq!(cpp.matches('{').count(), cpp.matches('}').count());
+    assert!(cpp.matches("return").count() >= best.tree.n_leaves());
+}
+
+#[test]
+fn experiments_render_and_save() {
+    let mut ctx = quick_ctx();
+    let dir = std::env::temp_dir().join("adaptlib-exp-test");
+    let t1 = tables::table1();
+    t1.save(&dir).unwrap();
+    assert!(dir.join("table1.txt").exists());
+    assert!(dir.join("table1.csv").exists());
+    let f3 = figures::fig3(&mut ctx, DeviceId::MaliT860);
+    f3.save(&dir).unwrap();
+    assert!(dir.join("fig3b_mali.txt").exists());
+    let micro = microbench::selector_overhead(&mut ctx);
+    assert!(micro.ascii.contains("overhead"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn kernel_kind_threshold_behaviour_of_default() {
+    // The per-device tuned default still obeys the threshold cut.
+    let mut ctx = quick_ctx();
+    let sweep = ctx.sweep(DeviceId::NvidiaP100, DatasetKind::Po2);
+    let small = sweep.default.select(Triple::new(64, 64, 64));
+    let large = sweep.default.select(Triple::new(2048, 2048, 2048));
+    assert_eq!(small.kind(), KernelKind::XgemmDirect);
+    assert_eq!(large.kind(), KernelKind::Xgemm);
+}
+
+#[test]
+fn dataset_sizes_match_paper() {
+    assert_eq!(Dataset::generate(DatasetKind::Po2).len(), 216);
+    assert_eq!(Dataset::generate(DatasetKind::Go2).len(), 3375);
+    let a = Dataset::generate(DatasetKind::AntonNet).len();
+    assert!((380..=560).contains(&a), "antonnet size {a}");
+}

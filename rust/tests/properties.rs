@@ -1,0 +1,262 @@
+//! Property-based tests (proptest-lite) over the core invariants:
+//! search-space enumeration, device simulator, CART trees, codegen
+//! equivalence, padding, JSON, and the selection policies.
+
+use adaptlib::codegen::{eval_generated_rust, emit_rust, FlatTree};
+use adaptlib::config::{direct_space, xgemm_space, KernelConfig, Triple};
+use adaptlib::dataset::ClassTable;
+use adaptlib::device::{sim, DeviceProfile};
+use adaptlib::dtree::{train, MinSamples, Node, TrainParams};
+use adaptlib::runtime::pad;
+use adaptlib::testing::{assert_prop, PropConfig, RangeU32, Strategy};
+use adaptlib::util::json::Json;
+use adaptlib::util::prng::Rng;
+
+struct TripleStrategy;
+
+impl Strategy for TripleStrategy {
+    type Value = Triple;
+
+    fn generate(&self, rng: &mut Rng) -> Triple {
+        Triple::new(
+            1 + rng.below(4096) as u32,
+            1 + rng.below(4096) as u32,
+            1 + rng.below(4096) as u32,
+        )
+    }
+
+    fn shrink(&self, v: &Triple) -> Vec<Triple> {
+        let mut out = Vec::new();
+        if v.m > 1 {
+            out.push(Triple::new(v.m / 2, v.n, v.k));
+        }
+        if v.n > 1 {
+            out.push(Triple::new(v.m, v.n / 2, v.k));
+        }
+        if v.k > 1 {
+            out.push(Triple::new(v.m, v.n, v.k / 2));
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_space_index_materialization_total() {
+    // Every raw-grid index materializes, and re-materializes identically.
+    let cfg = PropConfig { cases: 300, ..Default::default() };
+    let space = xgemm_space();
+    let idx = RangeU32 { lo: 0, hi: (space.raw_size() - 1) as u32 };
+    assert_prop(&cfg, &idx, |&i| {
+        let a = space.at(i as u64);
+        let b = space.at(i as u64);
+        if a == b { Ok(()) } else { Err("non-deterministic".into()) }
+    });
+}
+
+#[test]
+fn prop_sim_gflops_positive_and_below_peak() {
+    let cfg = PropConfig { cases: 150, ..Default::default() };
+    let devices = [DeviceProfile::nvidia_p100(), DeviceProfile::mali_t860()];
+    let space = direct_space();
+    assert_prop(&cfg, &TripleStrategy, |&t| {
+        for dev in &devices {
+            for i in [0u64, 100, 2000] {
+                let c = space.at(i % space.raw_size());
+                if let Some(g) = sim::measure_gflops(dev, &c, t) {
+                    if !(g > 0.0) {
+                        return Err(format!("non-positive gflops {g}"));
+                    }
+                    if g >= dev.peak_gflops {
+                        return Err(format!("{g} >= peak {}", dev.peak_gflops));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_deterministic() {
+    let cfg = PropConfig { cases: 100, ..Default::default() };
+    let dev = DeviceProfile::mali_t860();
+    let space = xgemm_space();
+    assert_prop(&cfg, &TripleStrategy, |&t| {
+        let c = space.at((t.m as u64 * 31 + t.k as u64) % space.raw_size());
+        if sim::measure_gflops(&dev, &c, t) == sim::measure_gflops(&dev, &c, t) {
+            Ok(())
+        } else {
+            Err("sim not deterministic".into())
+        }
+    });
+}
+
+fn random_labeled(seed: u64, n: usize, n_classes: u32) -> Vec<(Triple, u32)> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let t = Triple::new(
+                1 + rng.below(2048) as u32,
+                1 + rng.below(2048) as u32,
+                1 + rng.below(2048) as u32,
+            );
+            // Deterministic region-structured labels.
+            let c = ((t.m / 512) + (t.k / 1024)) % n_classes;
+            (t, c)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_cart_invariants_hold_for_random_data() {
+    let cfg = PropConfig { cases: 30, ..Default::default() };
+    let seeds = RangeU32 { lo: 0, hi: 10_000 };
+    assert_prop(&cfg, &seeds, |&seed| {
+        let data = random_labeled(seed as u64, 120, 4);
+        for (h, l) in [
+            (Some(2), MinSamples::Count(1)),
+            (Some(8), MinSamples::Count(4)),
+            (None, MinSamples::Frac(0.2)),
+        ] {
+            let tree = train(&data, 4, TrainParams { max_depth: h, min_samples_leaf: l });
+            // depth bound
+            if let Some(h) = h {
+                if tree.depth() > h {
+                    return Err(format!("depth {} > {h}", tree.depth()));
+                }
+            }
+            // min-samples bound
+            let min = l.resolve(data.len());
+            for n in &tree.nodes {
+                if let Node::Leaf { n_samples, .. } = n {
+                    if (*n_samples as usize) < min {
+                        return Err(format!("leaf {} < {min}", n_samples));
+                    }
+                }
+            }
+            // prediction is total and in-range
+            for (t, _) in &data {
+                if tree.predict(*t) >= 4 {
+                    return Err("class out of range".into());
+                }
+            }
+            // leaf-sample counts sum to the training-set size
+            let total: u32 = tree
+                .nodes
+                .iter()
+                .filter_map(|n| match n {
+                    Node::Leaf { n_samples, .. } => Some(*n_samples),
+                    _ => None,
+                })
+                .sum();
+            if total as usize != data.len() {
+                return Err(format!("leaf sum {total} != {}", data.len()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_codegen_equivalence() {
+    // Tree, flat tree and generated Rust source agree on random triples.
+    let data = random_labeled(42, 200, 4);
+    let mut classes = ClassTable::new();
+    for i in 0..4u64 {
+        classes.intern(KernelConfig::Xgemm(adaptlib::config::XgemmParams {
+            mwg: 32 << (i % 3),
+            ..Default::default()
+        }));
+    }
+    let tree = train(
+        &data,
+        4,
+        TrainParams { max_depth: None, min_samples_leaf: MinSamples::Count(2) },
+    );
+    let flat = FlatTree::from_tree(&tree);
+    let src = emit_rust(&tree, &classes);
+    let cfg = PropConfig { cases: 200, ..Default::default() };
+    assert_prop(&cfg, &TripleStrategy, |&t| {
+        let a = tree.predict(t);
+        let b = flat.predict(t.m, t.n, t.k);
+        let c = eval_generated_rust(&src, t);
+        if b != a {
+            return Err(format!("flat {b} != tree {a} at {t}"));
+        }
+        if c != Some(a) {
+            return Err(format!("src {c:?} != tree {a} at {t}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pad_unpad_roundtrip() {
+    let cfg = PropConfig { cases: 100, ..Default::default() };
+    let seeds = RangeU32 { lo: 0, hi: 1 << 30 };
+    assert_prop(&cfg, &seeds, |&seed| {
+        let mut rng = Rng::new(seed as u64);
+        let rows = 1 + rng.below(64) as usize;
+        let cols = 1 + rng.below(64) as usize;
+        let rows_to = rows + rng.below(64) as usize;
+        let cols_to = cols + rng.below(64) as usize;
+        let src: Vec<f32> = (0..rows * cols).map(|i| i as f32).collect();
+        let padded = pad::pad(&src, rows, cols, rows_to, cols_to);
+        // Padded region is zero.
+        let logical: f32 = src.iter().sum();
+        let total: f32 = padded.iter().sum();
+        if (logical - total).abs() > 1e-3 {
+            return Err("padding introduced nonzero data".into());
+        }
+        let back = pad::unpad(&padded, cols_to, rows, cols);
+        if back != src {
+            return Err("unpad(pad(x)) != x".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_for_configs_and_triples() {
+    let cfg = PropConfig { cases: 200, ..Default::default() };
+    let space = xgemm_space();
+    let idx = RangeU32 { lo: 0, hi: (space.raw_size() - 1) as u32 };
+    assert_prop(&cfg, &idx, |&i| {
+        let c = space.at(i as u64);
+        let json_text = c.to_json().to_string();
+        let back = KernelConfig::from_json(&Json::parse(&json_text).unwrap())
+            .map_err(|e| e.to_string())?;
+        if back == c { Ok(()) } else { Err("config roundtrip mismatch".into()) }
+    });
+    assert_prop(&cfg, &TripleStrategy, |&t| {
+        let back = Triple::from_json(&Json::parse(&t.to_json().to_string()).unwrap())
+            .map_err(|e| e.to_string())?;
+        if back == t { Ok(()) } else { Err("triple roundtrip mismatch".into()) }
+    });
+}
+
+#[test]
+fn prop_tuner_best_dominates_all_candidates() {
+    use adaptlib::tuner::{Backend, SimBackend, Tuner};
+    let backend = std::cell::RefCell::new(SimBackend::new(DeviceProfile::mali_t860()));
+    let tuner = Tuner::default();
+    let cfg = PropConfig { cases: 12, ..Default::default() };
+    assert_prop(&cfg, &TripleStrategy, |&t| {
+        let mut backend = backend.borrow_mut();
+        let (best_cfg, best_g) = tuner.tune_triple(&mut *backend, t).unwrap();
+        // Spot-check domination against a sample of candidates.
+        let cands = backend.candidates(t);
+        for c in cands.iter().step_by(97) {
+            if let Some(g) = backend.measure(c, t) {
+                if g > best_g + 1e-9 {
+                    return Err(format!(
+                        "{} beats tuner best {} ({g} > {best_g})",
+                        c.name(),
+                        best_cfg.name()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}

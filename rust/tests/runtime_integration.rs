@@ -1,0 +1,186 @@
+//! Integration: the AOT artifacts (python/jax/pallas) loaded and executed
+//! through the rust PJRT runtime, verified against a host-side oracle.
+//! Requires `make artifacts` to have run (skips otherwise).
+
+use std::path::PathBuf;
+
+use adaptlib::config::Triple;
+use adaptlib::runtime::{host_gemm, ArtifactKind, GemmInput, GemmRuntime, PjrtBackend};
+use adaptlib::tuner::Backend;
+use adaptlib::util::prng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn rand_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.f32() * 2.0 - 1.0).collect()
+}
+
+fn assert_close(actual: &[f32], expected: &[f32], tol: f32) {
+    assert_eq!(actual.len(), expected.len());
+    for (i, (a, e)) in actual.iter().zip(expected).enumerate() {
+        let scale = e.abs().max(1.0);
+        assert!(
+            (a - e).abs() <= tol * scale,
+            "mismatch at {i}: {a} vs {e}"
+        );
+    }
+}
+
+#[test]
+fn direct_artifact_matches_host_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = GemmRuntime::open(&dir).unwrap();
+    // Pick a direct artifact for (64, 64, 64) without transposes.
+    let meta = rt
+        .manifest
+        .artifacts
+        .iter()
+        .find(|a| matches!(a.kind,
+            ArtifactKind::Direct { m: 64, n: 64, k: 64, trans_a: false, trans_b: false }))
+        .expect("64^3 direct artifact in roster")
+        .clone();
+    let mut rng = Rng::new(42);
+    let (a, b, c) = (
+        rand_vec(&mut rng, 64 * 64),
+        rand_vec(&mut rng, 64 * 64),
+        rand_vec(&mut rng, 64 * 64),
+    );
+    let input = GemmInput {
+        m: 64, n: 64, k: 64,
+        a: &a, b: &b, c: &c,
+        alpha: 1.5, beta: -0.5,
+    };
+    let out = rt.gemm(&meta.name, &input).unwrap();
+    assert_close(&out.out, &host_gemm(&input), 1e-3);
+    assert_eq!(out.helper_time.as_nanos(), 0, "direct path has no helpers");
+}
+
+#[test]
+fn indirect_artifact_pads_and_matches_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = GemmRuntime::open(&dir).unwrap();
+    let meta = rt
+        .manifest
+        .artifacts
+        .iter()
+        .find(|a| matches!(a.kind, ArtifactKind::Indirect { mb: 128, nb: 128, kb: 128 }))
+        .expect("128^3 bucket artifact in roster")
+        .clone();
+    // A logical shape strictly inside the bucket exercises pad + unpad.
+    let (m, n, k) = (100usize, 90usize, 110usize);
+    let mut rng = Rng::new(7);
+    let (a, b, c) = (
+        rand_vec(&mut rng, m * k),
+        rand_vec(&mut rng, k * n),
+        rand_vec(&mut rng, m * n),
+    );
+    let input = GemmInput { m, n, k, a: &a, b: &b, c: &c, alpha: 1.0, beta: 2.0 };
+    let out = rt.gemm(&meta.name, &input).unwrap();
+    assert_eq!(out.out.len(), m * n);
+    assert_close(&out.out, &host_gemm(&input), 1e-3);
+    assert!(out.helper_time.as_nanos() > 0, "indirect path pays helpers");
+}
+
+#[test]
+fn transpose_artifacts_match_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = GemmRuntime::open(&dir).unwrap();
+    let metas: Vec<_> = rt
+        .manifest
+        .artifacts
+        .iter()
+        .filter(|a| matches!(a.kind,
+            ArtifactKind::Direct { trans_a: true, .. } | ArtifactKind::Direct { trans_b: true, .. }))
+        .cloned()
+        .collect();
+    assert!(!metas.is_empty(), "roster contains transpose artifacts");
+    for meta in metas {
+        let ArtifactKind::Direct { m, n, k, trans_a, trans_b } = meta.kind else {
+            unreachable!()
+        };
+        let (m, n, k) = (m as usize, n as usize, k as usize);
+        let mut rng = Rng::new(3);
+        // Operand layouts as the artifact expects them.
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let c = rand_vec(&mut rng, m * n);
+        // Oracle: untranspose on the host.
+        let (at, bt);
+        let a_ref: &[f32] = if trans_a {
+            at = transpose(&a, k, m);
+            &at
+        } else {
+            &a
+        };
+        let b_ref: &[f32] = if trans_b {
+            bt = transpose(&b, n, k);
+            &bt
+        } else {
+            &b
+        };
+        let expected = host_gemm(&GemmInput {
+            m, n, k, a: a_ref, b: b_ref, c: &c, alpha: 1.0, beta: 0.0,
+        });
+        // Feed the artifact its native layout via raw execution: the
+        // GemmInput validation uses (m,k)/(k,n) extents, which match the
+        // transposed operand sizes too (m*k elements either way).
+        let input = GemmInput { m, n, k, a: &a, b: &b, c: &c, alpha: 1.0, beta: 0.0 };
+        let out = rt.gemm(&meta.name, &input).unwrap();
+        assert_close(&out.out, &expected, 1e-3);
+    }
+}
+
+fn transpose(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0f32; x.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = x[r * cols + c];
+        }
+    }
+    out
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = GemmRuntime::open(&dir).unwrap();
+    let name = rt.manifest.artifacts[0].name.clone();
+    rt.ensure_compiled(&name).unwrap();
+    let t_after_first = rt.compile_time;
+    rt.ensure_compiled(&name).unwrap();
+    assert_eq!(rt.compile_time, t_after_first, "second compile was not cached");
+    assert_eq!(rt.compiled_count(), 1);
+}
+
+#[test]
+fn pjrt_backend_tunes_a_small_triple() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut backend = PjrtBackend::open(&dir).unwrap();
+    backend.reps = 1;
+    let t = Triple::new(64, 64, 64);
+    let candidates = backend.candidates(t);
+    assert!(candidates.len() >= 2, "need several roster configs for 64^3");
+    let g = backend.measure(&candidates[0], t).unwrap();
+    assert!(g > 0.0, "non-positive gflops {g}");
+}
+
+#[test]
+fn gemm_rejects_wrong_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = GemmRuntime::open(&dir).unwrap();
+    let name = rt.manifest.artifacts[0].name.clone();
+    let a = vec![0f32; 4];
+    let input = GemmInput {
+        m: 2, n: 2, k: 2,
+        a: &a, b: &a, c: &a,
+        alpha: 1.0, beta: 0.0,
+    };
+    // 2x2x2 matches no roster artifact's accepted shapes... unless a
+    // bucket accepts it; then sizes are still valid.  Use a mismatched
+    // operand length instead to test validation.
+    let bad = GemmInput { a: &a[..3], ..input };
+    assert!(rt.gemm(&name, &bad).is_err());
+}

@@ -1,0 +1,154 @@
+//! Integration: the on-line coordinator (server, batcher, policies) over
+//! the real PJRT runtime and AOT artifacts.  Skips when `make artifacts`
+//! has not run.
+
+use std::path::PathBuf;
+
+use adaptlib::coordinator::{
+    DefaultPolicy, GemmRequest, GemmServer, ModelPolicy, ServerConfig,
+};
+use adaptlib::experiments::e2e;
+use adaptlib::runtime::{host_gemm, GemmInput, PjrtBackend};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn req(m: usize, n: usize, k: usize, fill: f32) -> GemmRequest {
+    GemmRequest {
+        m,
+        n,
+        k,
+        a: vec![fill; m * k],
+        b: vec![1.0; k * n],
+        c: vec![0.0; m * n],
+        alpha: 1.0,
+        beta: 0.0,
+    }
+}
+
+#[test]
+fn server_serves_correct_results() {
+    let Some(dir) = artifacts_dir() else { return };
+    let backend = PjrtBackend::open(&dir).unwrap();
+    let policy = DefaultPolicy::from_roster(&backend.roster_configs()).unwrap();
+    drop(backend);
+    let server =
+        GemmServer::start(&dir, Box::new(policy), ServerConfig::default()).unwrap();
+    let handle = server.handle();
+
+    // 64^3 all-0.5 x all-1.0: every output element = 0.5 * 64 = 32.
+    let resp = handle.call(req(64, 64, 64, 0.5)).unwrap();
+    let out = resp.out.unwrap();
+    assert_eq!(out.len(), 64 * 64);
+    assert!((out[0] - 32.0).abs() < 1e-3, "got {}", out[0]);
+    assert!(!resp.artifact.is_empty());
+
+    drop(handle);
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.n_requests, 1);
+}
+
+#[test]
+fn server_batches_mixed_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let backend = PjrtBackend::open(&dir).unwrap();
+    let policy = DefaultPolicy::from_roster(&backend.roster_configs()).unwrap();
+    drop(backend);
+    let server =
+        GemmServer::start(&dir, Box::new(policy), ServerConfig::default()).unwrap();
+    let handle = server.handle();
+
+    // Burst of mixed-shape requests: exercises the artifact-grouping
+    // batcher, in-bucket padding, and per-request reply routing.
+    let shapes = [(64, 64, 64), (100, 100, 100), (128, 128, 128), (31, 31, 31)];
+    let mut pending = Vec::new();
+    for (i, &(m, n, k)) in shapes.iter().cycle().take(24).enumerate() {
+        pending.push((i, m, n, k, handle.submit(req(m, n, k, 1.0))));
+    }
+    for (_, m, _, k, rx) in pending {
+        let resp = rx.recv().unwrap();
+        let out = resp.out.unwrap();
+        // all-ones GEMM: every element = k
+        assert!((out[0] - k as f32).abs() < 1e-2, "m={m} k={k}: {}", out[0]);
+    }
+    drop(handle);
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.n_requests, 24);
+    assert!(stats.per_artifact.len() >= 2, "batcher saw multiple artifacts");
+}
+
+#[test]
+fn server_reports_error_for_unservable_shape() {
+    let Some(dir) = artifacts_dir() else { return };
+    let backend = PjrtBackend::open(&dir).unwrap();
+    let policy = DefaultPolicy::from_roster(&backend.roster_configs()).unwrap();
+    drop(backend);
+    let server =
+        GemmServer::start(&dir, Box::new(policy), ServerConfig::default()).unwrap();
+    let handle = server.handle();
+    // Way beyond every bucket in the roster.
+    let resp = handle.call(req(4096, 4096, 4096, 1.0)).unwrap();
+    assert!(resp.out.is_err(), "oversized request must fail gracefully");
+    drop(handle);
+    // Failed requests are excluded from stats; server may have none.
+    let _ = server.shutdown();
+}
+
+#[test]
+fn server_startup_fails_on_missing_artifacts() {
+    let bogus = PathBuf::from("/nonexistent/adaptlib-artifacts");
+    let err = GemmServer::start(
+        &bogus,
+        Box::new(DefaultPolicy::clblast()),
+        ServerConfig::default(),
+    );
+    assert!(err.is_err());
+}
+
+#[test]
+fn e2e_offline_train_and_model_policy_roundtrip() {
+    let Some(dir) = artifacts_dir() else { return };
+    let model = e2e::offline_train(&dir, 1).unwrap();
+    assert!(model.tuned_triples >= 10);
+    assert!(model.train_accuracy > 50.0, "acc {}", model.train_accuracy);
+    assert!(model.classes.len() >= 2);
+
+    // Serve a small stream under the trained model policy.
+    let policy = Box::new(ModelPolicy::new(&model.tree, &model.classes));
+    let requests = e2e::request_stream(16, 7);
+    let stats =
+        e2e::serve(&dir, policy, requests, ServerConfig::default()).unwrap();
+    assert_eq!(stats.n_requests, 16);
+    assert!(stats.gflops() > 0.0);
+}
+
+#[test]
+fn served_results_match_host_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let model = e2e::offline_train(&dir, 1).unwrap();
+    let policy = Box::new(ModelPolicy::new(&model.tree, &model.classes));
+    let server = GemmServer::start(&dir, policy, ServerConfig::default()).unwrap();
+    let handle = server.handle();
+    for &(m, n, k) in &[(200usize, 50usize, 100usize), (100, 100, 100)] {
+        let r = req(m, n, k, 0.25);
+        let expect = host_gemm(&GemmInput {
+            m,
+            n,
+            k,
+            a: &r.a,
+            b: &r.b,
+            c: &r.c,
+            alpha: r.alpha,
+            beta: r.beta,
+        });
+        let out = handle.call(r).unwrap().out.unwrap();
+        for (i, (a, e)) in out.iter().zip(&expect).enumerate() {
+            assert!(
+                (a - e).abs() <= 1e-3 * e.abs().max(1.0),
+                "({m},{n},{k}) idx {i}: {a} vs {e}"
+            );
+        }
+    }
+}
