@@ -1,0 +1,20 @@
+# Build-time entry points.  `make artifacts` runs the python AOT pipeline
+# (L1/L2) once; everything else is pure rust (L3).
+
+ARTIFACTS := rust/artifacts
+ROSTER    := full
+
+.PHONY: artifacts test bench clean-artifacts
+
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../$(ARTIFACTS) --roster $(ROSTER)
+
+test:
+	cd rust && cargo test -q
+
+bench:
+	cd rust && cargo bench --bench hotpath
+	cd rust && cargo bench --bench selector_overhead
+
+clean-artifacts:
+	rm -rf $(ARTIFACTS)

@@ -7,13 +7,14 @@
 //!          under the model-driven policy vs the default policy.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example adaptive_server [N_REQUESTS]
+//! make artifacts && cargo run --release --example adaptive_server [N_REQUESTS] [SHARDS]
 //! ```
 //!
 //! The run is recorded in EXPERIMENTS.md §E2E.
 
 use std::path::Path;
 
+use adaptlib::coordinator::ServerConfig;
 use adaptlib::experiments::e2e;
 
 fn main() -> anyhow::Result<()> {
@@ -22,15 +23,20 @@ fn main() -> anyhow::Result<()> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(300);
+    let shards: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
 
     println!("== off-line phase: tuning the roster on CPU PJRT (real wall-clock) ==");
     let t0 = std::time::Instant::now();
-    let report = e2e::run(artifacts, n, 3)?;
+    let report = e2e::run_with(artifacts, n, 3, ServerConfig::with_shards(shards))?;
     println!("{}", report.render());
     println!(
-        "total experiment wall time: {:.1}s ({} requests per policy)",
+        "total experiment wall time: {:.1}s ({} requests per policy, {} shard(s))",
         t0.elapsed().as_secs_f64(),
-        n
+        n,
+        shards
     );
 
     // The point of the paper: the learned selector should not lose to the

@@ -1,32 +1,143 @@
-//! `cargo bench --bench hotpath` — the on-line request path, measured on
-//! the real PJRT runtime: pad/unpad helpers, literal round-trips, direct
-//! vs indirect artifact execution, end-to-end server round trip.
-//! Feeds the §Perf optimization log in EXPERIMENTS.md.
+//! `cargo bench --bench hotpath [-- --quick]` — the on-line request path,
+//! measured on the real PJRT runtime: pad/unpad helpers, allocating vs
+//! pooled (zero-allocation) GEMM execution, heap-allocation counts on the
+//! steady-state indirect path, and aggregate server throughput at 1/2/4
+//! dispatcher shards over the mixed test-set workload.
+//!
+//! Emits machine-readable `BENCH_hotpath.json` next to the working
+//! directory so subsequent PRs have a perf trajectory to regress against.
 
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
 
 use adaptlib::coordinator::{DefaultPolicy, GemmRequest, GemmServer, ServerConfig};
-use adaptlib::harness::{black_box, Suite};
-use adaptlib::runtime::{pad, ArtifactKind, GemmInput, GemmRuntime, PjrtBackend};
+use adaptlib::experiments::e2e;
+use adaptlib::harness::{black_box, BenchConfig, Suite};
+use adaptlib::runtime::{
+    pad, ArtifactKind, GemmInput, GemmRuntime, PjrtBackend, ScratchBuffers,
+};
+use adaptlib::util::json::Json;
 use adaptlib::util::prng::Rng;
+
+// ----------------------------------------------------- counting allocator
+
+/// Global allocator wrapper counting every allocation — the instrument
+/// behind the "zero heap allocations at steady state" acceptance check.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Total allocations across `iters` steady-state calls of `f`.  The raw
+/// delta (not a truncated mean) so even one allocation over the whole run
+/// is visible to the zero-allocation gate.
+fn allocs_total(iters: u64, mut f: impl FnMut()) -> u64 {
+    for _ in 0..5 {
+        f(); // warm: let every pool reach its steady-state capacity
+    }
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..iters {
+        f();
+    }
+    ALLOCS.load(Ordering::Relaxed) - before
+}
 
 fn rand_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
     (0..len).map(|_| rng.f32() - 0.5).collect()
 }
 
-fn main() {
-    let artifacts = Path::new("artifacts");
-    if !artifacts.join("manifest.json").exists() {
-        eprintln!("skipping hotpath bench: run `make artifacts` first");
-        return;
+/// Aggregate throughput of the sharded server over a fixed mixed-shape
+/// request stream (the e2e test-set workload).
+fn shard_throughput(dir: &Path, shards: usize, n_requests: usize) -> (f64, f64) {
+    let backend = PjrtBackend::open(dir).expect("artifacts");
+    let policy = DefaultPolicy::from_roster(&backend.roster_configs())
+        .expect("roster has both kernel kinds");
+    drop(backend);
+    let server = GemmServer::start(dir, Box::new(policy), ServerConfig::with_shards(shards))
+        .expect("server");
+    let handle = server.handle();
+
+    // Warm every shard's compile cache: each distinct triple is sent once
+    // per shard (round-robin routing spreads consecutive submissions).
+    let mut warm = Vec::new();
+    for t in e2e::workload_triples() {
+        for _ in 0..shards {
+            let (m, n, k) = (t.m as usize, t.n as usize, t.k as usize);
+            warm.push(GemmRequest {
+                m,
+                n,
+                k,
+                a: vec![0.5; m * k],
+                b: vec![0.5; k * n],
+                c: vec![0.0; m * n],
+                alpha: 1.0,
+                beta: 0.0,
+            });
+        }
     }
-    let mut suite = Suite::from_args();
+    let pending: Vec<_> = warm.into_iter().map(|r| handle.submit(r)).collect();
+    for rx in pending {
+        let _ = rx.recv();
+    }
+
+    let requests = e2e::request_stream(n_requests, 0xBEEF);
+    let total_flops: f64 = requests.iter().map(|r| r.triple().flops()).sum();
+    let t0 = Instant::now();
+    let pending: Vec<_> = requests.into_iter().map(|r| handle.submit(r)).collect();
+    for rx in pending {
+        rx.recv().expect("response").out.expect("request served");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    drop(handle);
+    let _ = server.shutdown();
+    (n_requests as f64 / wall, total_flops / wall / 1e9)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("ADAPTLIB_BENCH_QUICK").is_ok();
+    let mut suite = if quick {
+        Suite::with_config(BenchConfig::quick())
+    } else {
+        Suite::from_args()
+    };
     let mut rng = Rng::new(1);
+    let mut extra: Vec<(&str, Json)> = Vec::new();
 
     suite.section("helper (pad/unpad) cost — the O(n^2) indirect tax");
     let src = rand_vec(&mut rng, 200 * 200);
     suite.bench("pad:200x200->256x256", || {
         black_box(pad::pad(&src, 200, 200, 256, 256))
+    });
+    let mut pad_buf = Vec::new();
+    suite.bench("pad_into:200x200->256x256", || {
+        pad::pad_into(&src, 200, 200, 256, 256, &mut pad_buf);
+        black_box(pad_buf[0])
     });
     let padded = pad::pad(&src, 200, 200, 256, 256);
     suite.bench("unpad:256x256->200x200", || {
@@ -38,6 +149,23 @@ fn main() {
         black_box(out[0])
     });
 
+    let artifacts = Path::new("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        bench_pjrt(&mut suite, artifacts, quick, &mut extra, &mut rng);
+    } else {
+        eprintln!("skipping PJRT sections: run `make artifacts` first");
+    }
+
+    write_json(&suite, &extra, quick);
+}
+
+fn bench_pjrt(
+    suite: &mut Suite,
+    artifacts: &Path,
+    quick: bool,
+    extra: &mut Vec<(&'static str, Json)>,
+    rng: &mut Rng,
+) {
     suite.section("PJRT execution (real kernels)");
     let mut rt = GemmRuntime::open(artifacts).expect("artifacts");
     let direct = rt
@@ -54,11 +182,13 @@ fn main() {
         .find(|a| matches!(a.kind, ArtifactKind::Indirect { mb: 128, nb: 128, kb: 128 }))
         .expect("128^3 bucket")
         .clone();
+    let direct_id = rt.manifest.id_of(&direct.name).unwrap();
+    let indirect_id = rt.manifest.id_of(&indirect.name).unwrap();
     let (m, n, k) = (128usize, 128usize, 128usize);
     let (a, b, c) = (
-        rand_vec(&mut rng, m * k),
-        rand_vec(&mut rng, k * n),
-        rand_vec(&mut rng, m * n),
+        rand_vec(rng, m * k),
+        rand_vec(rng, k * n),
+        rand_vec(rng, m * n),
     );
     let input = GemmInput { m, n, k, a: &a, b: &b, c: &c, alpha: 1.0, beta: 0.0 };
     rt.gemm(&direct.name, &input).unwrap(); // compile outside timing
@@ -72,9 +202,9 @@ fn main() {
     // In-bucket (pays padding).
     let (m2, n2, k2) = (100usize, 100usize, 100usize);
     let (a2, b2, c2) = (
-        rand_vec(&mut rng, m2 * k2),
-        rand_vec(&mut rng, k2 * n2),
-        rand_vec(&mut rng, m2 * n2),
+        rand_vec(rng, m2 * k2),
+        rand_vec(rng, k2 * n2),
+        rand_vec(rng, m2 * n2),
     );
     let input2 = GemmInput {
         m: m2, n: n2, k: k2, a: &a2, b: &b2, c: &c2, alpha: 1.0, beta: 0.0,
@@ -83,26 +213,96 @@ fn main() {
         black_box(rt.gemm(&indirect.name, &input2).unwrap().out[0])
     });
 
-    suite.section("server round trip");
-    let backend = PjrtBackend::open(artifacts).unwrap();
-    let policy = DefaultPolicy::from_roster(&backend.roster_configs()).unwrap();
-    drop(backend);
-    let server =
-        GemmServer::start(artifacts, Box::new(policy), ServerConfig::default())
-            .expect("server");
-    let handle = server.handle();
-    // Warm the executable cache.
-    let mk_req = || GemmRequest {
-        m, n, k,
-        a: a.clone(), b: b.clone(), c: c.clone(),
-        alpha: 1.0, beta: 0.0,
-    };
-    handle.call(mk_req()).unwrap();
-    suite.bench("server:call:128^3", || {
-        black_box(handle.call(mk_req()).unwrap().service)
+    suite.section("pooled (zero-allocation) path");
+    let mut scratch = ScratchBuffers::new();
+    suite.bench("gemm_pooled:direct:128^3", || {
+        rt.gemm_pooled(direct_id, &input, &mut scratch).unwrap();
+        black_box(scratch.out[0])
     });
-    drop(handle);
-    if let Some(stats) = server.shutdown() {
-        println!("{}", stats.report());
+    suite.bench("gemm_pooled:indirect:100^3(padded-into-128)", || {
+        rt.gemm_pooled(indirect_id, &input2, &mut scratch).unwrap();
+        black_box(scratch.out[0])
+    });
+
+    // Heap allocations per steady-state indirect request: the allocating
+    // literal path pays per-call Vecs + literal copies; the pooled path
+    // must pay exactly zero.
+    let iters = if quick { 20 } else { 200 };
+    let alloc_allocating = allocs_total(iters, || {
+        black_box(rt.gemm(&indirect.name, &input2).unwrap().out[0]);
+    });
+    let alloc_pooled = allocs_total(iters, || {
+        rt.gemm_pooled(indirect_id, &input2, &mut scratch).unwrap();
+        black_box(scratch.out[0]);
+    });
+    println!(
+        "allocs/request indirect 100^3 over {iters} requests: allocating path {:.1}, pooled path {:.1}",
+        alloc_allocating as f64 / iters as f64,
+        alloc_pooled as f64 / iters as f64,
+    );
+    assert_eq!(
+        alloc_pooled, 0,
+        "pooled indirect path must not allocate at steady state \
+         ({alloc_pooled} allocations over {iters} requests)"
+    );
+    extra.push((
+        "allocs_per_request",
+        Json::obj(vec![
+            ("allocating", Json::num(alloc_allocating as f64 / iters as f64)),
+            ("pooled", Json::num(alloc_pooled as f64 / iters as f64)),
+            ("iters", Json::num(iters as f64)),
+        ]),
+    ));
+    drop(rt);
+
+    suite.section("server shard scaling (mixed test-set workload)");
+    let n_requests = if quick { 48 } else { 240 };
+    let mut scaling = Vec::new();
+    let mut rps1 = 0.0;
+    for shards in [1usize, 2, 4] {
+        let (rps, gflops) = shard_throughput(artifacts, shards, n_requests);
+        if shards == 1 {
+            rps1 = rps;
+        }
+        let speedup = if rps1 > 0.0 { rps / rps1 } else { 0.0 };
+        println!(
+            "shards={shards}: {rps:.1} req/s, {gflops:.2} GFLOP/s, {speedup:.2}x vs 1 shard"
+        );
+        scaling.push(Json::obj(vec![
+            ("shards", Json::num(shards as f64)),
+            ("rps", Json::num(rps)),
+            ("gflops", Json::num(gflops)),
+            ("speedup_vs_1", Json::num(speedup)),
+        ]));
+    }
+    extra.push(("shard_scaling", Json::Arr(scaling)));
+}
+
+fn write_json(suite: &Suite, extra: &[(&str, Json)], quick: bool) {
+    let results: Vec<Json> = suite
+        .results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::str(r.name.clone())),
+                ("median_s", Json::num(r.summary.median)),
+                ("mean_s", Json::num(r.summary.mean)),
+                ("iterations", Json::num(r.iterations as f64)),
+            ])
+        })
+        .collect();
+    let mut fields = vec![
+        ("bench", Json::str("hotpath")),
+        ("quick", Json::Bool(quick)),
+        ("results", Json::Arr(results)),
+    ];
+    for (k, v) in extra {
+        fields.push((*k, v.clone()));
+    }
+    let json = Json::obj(fields);
+    let path = "BENCH_hotpath.json";
+    match std::fs::write(path, json.to_string()) {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

@@ -32,12 +32,17 @@ fn main() {
     suite.bench("flat:predict:large(3840^3)", || {
         black_box(flat.predict(3840, 3840, 3840))
     });
-    // Pointer-tree traversal for comparison (the naive representation).
+    // Pointer-tree traversal for comparison (the naive representation the
+    // serving path no longer uses — ModelPolicy always executes the
+    // flattened chain).
     let tree = &best.tree;
     suite.bench("tree:predict:small(64,64,64)", || {
         black_box(tree.predict(adaptlib::config::Triple::new(64, 64, 64)))
     });
-    // Mixed workload (test set).
+    suite.bench("tree:predict:large(3840^3)", || {
+        black_box(tree.predict(adaptlib::config::Triple::new(3840, 3840, 3840)))
+    });
+    // Mixed workload (test set), both representations.
     let triples: Vec<(u32, u32, u32)> = sweep
         .test_idx
         .iter()
@@ -51,6 +56,12 @@ fn main() {
         let (m, n, k) = triples[i % triples.len()];
         i += 1;
         black_box(flat.predict(m, n, k))
+    });
+    let mut j = 0usize;
+    suite.bench("tree:predict:test-set-mix", || {
+        let (m, n, k) = triples[j % triples.len()];
+        j += 1;
+        black_box(tree.predict(adaptlib::config::Triple::new(m, n, k)))
     });
 
     suite.section("overhead vs kernel time (paper §5.4 table)");

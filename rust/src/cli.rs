@@ -4,19 +4,28 @@
 
 use std::collections::BTreeMap;
 
-use thiserror::Error;
-
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum CliError {
-    #[error("unknown option: {0}")]
     UnknownOption(String),
-    #[error("option {0} requires a value")]
     MissingValue(String),
-    #[error("invalid value for {0}: {1}")]
     InvalidValue(String, String),
-    #[error("missing subcommand; expected one of: {0}")]
     MissingCommand(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownOption(o) => write!(f, "unknown option: {o}"),
+            CliError::MissingValue(o) => write!(f, "option {o} requires a value"),
+            CliError::InvalidValue(o, v) => write!(f, "invalid value for {o}: {v}"),
+            CliError::MissingCommand(c) => {
+                write!(f, "missing subcommand; expected one of: {c}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Declarative option spec.
 #[derive(Debug, Clone)]

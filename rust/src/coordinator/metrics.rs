@@ -10,6 +10,8 @@ use crate::util::stats::Summary;
 #[derive(Debug, Clone)]
 pub struct RequestRecord {
     pub artifact: String,
+    /// Dispatcher shard that served the request.
+    pub shard: usize,
     pub queue: Duration,
     pub service: Duration,
     pub flops: f64,
@@ -24,6 +26,8 @@ pub struct ServeStats {
     pub queue: Summary,
     pub total_gflop: f64,
     pub per_artifact: BTreeMap<String, usize>,
+    /// Requests served per dispatcher shard.
+    pub per_shard: BTreeMap<usize, usize>,
 }
 
 impl ServeStats {
@@ -35,8 +39,10 @@ impl ServeStats {
             .collect();
         let q: Vec<f64> = records.iter().map(|r| r.queue.as_secs_f64()).collect();
         let mut per_artifact = BTreeMap::new();
+        let mut per_shard = BTreeMap::new();
         for r in records {
             *per_artifact.entry(r.artifact.clone()).or_insert(0) += 1;
+            *per_shard.entry(r.shard).or_insert(0) += 1;
         }
         ServeStats {
             n_requests: records.len(),
@@ -45,6 +51,7 @@ impl ServeStats {
             queue: Summary::of(&q),
             total_gflop: records.iter().map(|r| r.flops).sum::<f64>() / 1e9,
             per_artifact,
+            per_shard,
         }
     }
 
@@ -71,6 +78,13 @@ impl ServeStats {
             self.latency.max * 1e3,
             self.queue.median * 1e3,
         );
+        if self.per_shard.len() > 1 {
+            s.push_str("per-shard:");
+            for (shard, n) in &self.per_shard {
+                s.push_str(&format!("  s{shard}={n}"));
+            }
+            s.push('\n');
+        }
         s.push_str("per-artifact:\n");
         for (a, n) in &self.per_artifact {
             s.push_str(&format!("  {a:<52} {n}\n"));
@@ -83,9 +97,10 @@ impl ServeStats {
 mod tests {
     use super::*;
 
-    fn rec(artifact: &str, ms: u64) -> RequestRecord {
+    fn rec(artifact: &str, shard: usize, ms: u64) -> RequestRecord {
         RequestRecord {
             artifact: artifact.into(),
+            shard,
             queue: Duration::from_millis(1),
             service: Duration::from_millis(ms),
             flops: 1e9,
@@ -94,13 +109,17 @@ mod tests {
 
     #[test]
     fn aggregates() {
-        let records = vec![rec("a", 10), rec("a", 20), rec("b", 30)];
+        let records = vec![rec("a", 0, 10), rec("a", 1, 20), rec("b", 0, 30)];
         let stats = ServeStats::from_records(&records, Duration::from_secs(1));
         assert_eq!(stats.n_requests, 3);
         assert_eq!(stats.per_artifact["a"], 2);
+        assert_eq!(stats.per_shard[&0], 2);
+        assert_eq!(stats.per_shard[&1], 1);
         assert!((stats.rps() - 3.0).abs() < 1e-9);
         assert!((stats.gflops() - 3.0).abs() < 1e-9);
-        assert!(stats.report().contains("per-artifact"));
+        let report = stats.report();
+        assert!(report.contains("per-artifact"));
+        assert!(report.contains("per-shard"));
     }
 
     #[test]

@@ -1,6 +1,7 @@
-//! The on-line coordinator (L3): request server with dynamic batching,
-//! selection policies (model-driven / default / oracle) and serving
-//! metrics.  See `server` for the threading topology.
+//! The on-line coordinator (L3): sharded request server with per-artifact
+//! dynamic batching, selection policies (model-driven / default / oracle)
+//! and serving metrics.  See `server` and ARCHITECTURE.md for the
+//! threading topology.
 
 pub mod metrics;
 pub mod policy;

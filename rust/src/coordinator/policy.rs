@@ -13,13 +13,17 @@ use crate::dataset::ClassTable;
 use crate::dtree::DecisionTree;
 use crate::tuner::TuningDb;
 
-/// A run-time kernel-configuration selector.
-pub trait SelectPolicy: Send {
+/// A run-time kernel-configuration selector.  `Send + Sync` so one policy
+/// instance can be shared read-only across all dispatcher shards.
+pub trait SelectPolicy: Send + Sync {
     fn name(&self) -> &str;
     fn select(&self, t: Triple) -> KernelConfig;
 }
 
-/// The model-driven selector (flattened decision tree).
+/// The model-driven selector.  The trained pointer tree is flattened into
+/// a [`FlatTree`] at construction: selection on the serving path is always
+/// the flattened if-then-else chain the paper's §5.4 bench measures,
+/// never a pointer-tree traversal.
 pub struct ModelPolicy {
     name: String,
     flat: FlatTree,
@@ -28,11 +32,23 @@ pub struct ModelPolicy {
 
 impl ModelPolicy {
     pub fn new(tree: &DecisionTree, classes: &ClassTable) -> ModelPolicy {
-        ModelPolicy {
-            name: format!("model:{}", tree.name),
-            flat: FlatTree::from_tree(tree),
-            classes: classes.iter().map(|(_, c)| *c).collect(),
-        }
+        Self::from_flat(
+            FlatTree::from_tree(tree),
+            classes.iter().map(|(_, c)| *c).collect(),
+            format!("model:{}", tree.name),
+        )
+    }
+
+    /// Build directly from the flattened representation (e.g. one loaded
+    /// from generated source metadata).
+    pub fn from_flat(flat: FlatTree, classes: Vec<KernelConfig>, name: String) -> ModelPolicy {
+        assert!(!classes.is_empty(), "model policy needs at least one class");
+        ModelPolicy { name, flat, classes }
+    }
+
+    /// The flattened selector this policy executes.
+    pub fn flat(&self) -> &FlatTree {
+        &self.flat
     }
 }
 

@@ -1,22 +1,27 @@
 //! The adaptive GEMM server — the on-line coordinator.
 //!
-//! Topology: client threads submit [`GemmRequest`]s over a channel; the
-//! dispatcher thread selects a kernel configuration per request (via the
-//! active [`SelectPolicy`]), resolves it to an AOT artifact, groups the
-//! pending window by artifact (the dynamic batcher — consecutive
-//! executions of one executable amortize instruction/data cache misses
-//! and avoid executable switching), and runs them on the PJRT executor it
-//! exclusively owns.  Responses flow back over per-request channels.
+//! Topology (see ARCHITECTURE.md): client threads submit [`GemmRequest`]s
+//! through a [`ServerHandle`], which routes them round-robin across N
+//! dispatcher *shards*.  Each shard is one worker thread that exclusively
+//! owns a `GemmRuntime` (its own PJRT client and compile cache — PJRT
+//! handles never cross threads) plus a [`ScratchBuffers`] pool, shares the
+//! read-only [`SelectPolicy`], and runs the per-artifact dynamic batcher:
+//! the pending window is resolved to dense [`ArtifactId`]s and grouped by
+//! id (consecutive executions of one executable amortize instruction/data
+//! cache misses and avoid executable switching).  Requests execute on the
+//! pooled, allocation-free runtime path; responses flow back over
+//! per-request channels.
 
-use std::path::Path;
-use std::sync::mpsc;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::config::Triple;
-use crate::runtime::{GemmInput, GemmRuntime};
+use crate::runtime::{ArtifactId, GemmInput, GemmRuntime, ScratchBuffers};
 
 use super::metrics::{RequestRecord, ServeStats};
 use super::policy::SelectPolicy;
@@ -54,8 +59,11 @@ pub struct GemmResponse {
 pub struct ServerConfig {
     /// Max requests coalesced into one dispatch window.
     pub max_batch: usize,
-    /// How long the dispatcher waits to fill a window.
+    /// How long a shard waits to fill a window.
     pub batch_window: Duration,
+    /// Dispatcher shards, each exclusively owning a runtime + compile
+    /// cache.  Requests are routed round-robin across shards.
+    pub shards: usize,
 }
 
 impl Default for ServerConfig {
@@ -63,7 +71,15 @@ impl Default for ServerConfig {
         ServerConfig {
             max_batch: 32,
             batch_window: Duration::from_micros(200),
+            shards: 1,
         }
+    }
+}
+
+impl ServerConfig {
+    /// Default configuration at a given shard count.
+    pub fn with_shards(shards: usize) -> ServerConfig {
+        ServerConfig { shards, ..ServerConfig::default() }
     }
 }
 
@@ -73,17 +89,24 @@ struct Envelope {
     reply: mpsc::Sender<GemmResponse>,
 }
 
-/// Handle for submitting work.
+/// Handle for submitting work.  Clones share the round-robin cursor, so
+/// traffic from any number of client threads spreads across all shards.
 #[derive(Clone)]
 pub struct ServerHandle {
-    tx: mpsc::Sender<Envelope>,
+    txs: Arc<Vec<mpsc::Sender<Envelope>>>,
+    next: Arc<AtomicUsize>,
 }
 
 impl ServerHandle {
     /// Submit a request; returns the channel the response arrives on.
     pub fn submit(&self, req: GemmRequest) -> mpsc::Receiver<GemmResponse> {
         let (reply, rx) = mpsc::channel();
-        let _ = self.tx.send(Envelope { req, submitted: Instant::now(), reply });
+        let shard = self.next.fetch_add(1, Ordering::Relaxed) % self.txs.len();
+        let _ = self.txs[shard].send(Envelope {
+            req,
+            submitted: Instant::now(),
+            reply,
+        });
         rx
     }
 
@@ -93,133 +116,71 @@ impl ServerHandle {
             .recv()
             .map_err(|_| anyhow!("server shut down before responding"))
     }
+
+    /// Number of dispatcher shards behind this handle.
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
 }
 
 /// The running server.
 pub struct GemmServer {
     handle: Option<ServerHandle>,
-    worker: Option<JoinHandle<Vec<RequestRecord>>>,
+    workers: Vec<JoinHandle<Vec<RequestRecord>>>,
     started: Instant,
 }
 
 impl GemmServer {
-    /// Start the server.  The PJRT runtime is *created on the dispatcher
-    /// thread* (PJRT handles are not `Send`); startup errors are reported
-    /// synchronously through a ready-channel.
+    /// Start the server with `cfg.shards` dispatcher shards.  Each PJRT
+    /// runtime is *created on its shard's thread* (PJRT handles are not
+    /// `Send`); startup errors are reported synchronously through a
+    /// ready-channel once every shard has checked in.
     pub fn start(
         artifacts: &Path,
         policy: Box<dyn SelectPolicy>,
         cfg: ServerConfig,
     ) -> Result<GemmServer> {
-        let dir = artifacts.to_path_buf();
-        let (tx, rx) = mpsc::channel::<Envelope>();
+        let policy: Arc<dyn SelectPolicy> = Arc::from(policy);
+        let n_shards = cfg.shards.max(1);
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
-        let worker = std::thread::spawn(move || {
-            let mut runtime = match GemmRuntime::open(&dir) {
-                Ok(r) => {
-                    let _ = ready_tx.send(Ok(()));
-                    r
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(format!("{e:#}")));
-                    return Vec::new();
-                }
-            };
-            let mut records = Vec::new();
-            let mut window: Vec<Envelope> = Vec::with_capacity(cfg.max_batch);
-            loop {
-                // Block for the first request of a window.
-                match rx.recv() {
-                    Err(_) => break, // all senders dropped: shutdown
-                    Ok(env) => window.push(env),
-                }
-                // Fill the window for up to `batch_window`.
-                let deadline = Instant::now() + cfg.batch_window;
-                while window.len() < cfg.max_batch {
-                    let now = Instant::now();
-                    if now >= deadline {
-                        break;
-                    }
-                    match rx.recv_timeout(deadline - now) {
-                        Ok(env) => window.push(env),
-                        Err(_) => break,
-                    }
-                }
-                // Resolve artifacts, then group the window by artifact
-                // (stable sort keeps FIFO order within a group).
-                let mut resolved: Vec<(String, Envelope)> = window
-                    .drain(..)
-                    .map(|env| {
-                        let t = env.req.triple();
-                        let cfg_sel = policy.select(t);
-                        let artifact = runtime
-                            .manifest
-                            .artifact_for_config(&cfg_sel, t)
-                            // Fallback: any artifact accepting t (least waste).
-                            .or_else(|| runtime.manifest.eligible(t).first().copied())
-                            .map(|a| a.name.clone())
-                            .unwrap_or_default();
-                        (artifact, env)
-                    })
-                    .collect();
-                resolved.sort_by(|a, b| a.0.cmp(&b.0));
-
-                for (artifact, env) in resolved {
-                    let queue = env.submitted.elapsed();
-                    let t0 = Instant::now();
-                    let result = if artifact.is_empty() {
-                        Err(anyhow!(
-                            "no artifact accepts {}",
-                            env.req.triple()
-                        ))
-                    } else {
-                        runtime
-                            .gemm(
-                                &artifact,
-                                &GemmInput {
-                                    m: env.req.m,
-                                    n: env.req.n,
-                                    k: env.req.k,
-                                    a: &env.req.a,
-                                    b: &env.req.b,
-                                    c: &env.req.c,
-                                    alpha: env.req.alpha,
-                                    beta: env.req.beta,
-                                },
-                            )
-                            .map(|o| o.out)
-                    };
-                    let service = t0.elapsed();
-                    if result.is_ok() {
-                        records.push(RequestRecord {
-                            artifact: artifact.clone(),
-                            queue,
-                            service,
-                            flops: env.req.triple().flops(),
-                        });
-                    }
-                    let _ = env.reply.send(GemmResponse {
-                        out: result,
-                        artifact,
-                        queue,
-                        service,
-                    });
-                }
-            }
-            records
-        });
-        match ready_rx.recv() {
-            Ok(Ok(())) => Ok(GemmServer {
-                handle: Some(ServerHandle { tx }),
-                worker: Some(worker),
-                started: Instant::now(),
-            }),
-            Ok(Err(msg)) => {
-                let _ = worker.join();
-                Err(anyhow!("server startup failed: {msg}"))
-            }
-            Err(_) => Err(anyhow!("server thread died during startup")),
+        let mut txs = Vec::with_capacity(n_shards);
+        let mut workers = Vec::with_capacity(n_shards);
+        for shard in 0..n_shards {
+            let (tx, rx) = mpsc::channel::<Envelope>();
+            txs.push(tx);
+            let dir = artifacts.to_path_buf();
+            let policy = Arc::clone(&policy);
+            let ready_tx = ready_tx.clone();
+            workers.push(std::thread::spawn(move || {
+                worker_loop(shard, dir, policy, cfg, rx, ready_tx)
+            }));
         }
+        drop(ready_tx);
+        let handle = ServerHandle {
+            txs: Arc::new(txs),
+            next: Arc::new(AtomicUsize::new(0)),
+        };
+        let mut failures = Vec::new();
+        for _ in 0..n_shards {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(msg)) => failures.push(msg),
+                Err(_) => failures.push("server thread died during startup".to_string()),
+            }
+        }
+        if !failures.is_empty() {
+            // Drop the senders so healthy shards exit, then reap.
+            drop(handle);
+            for w in workers {
+                let _ = w.join();
+            }
+            return Err(anyhow!("server startup failed: {}", failures.join("; ")));
+        }
+        Ok(GemmServer {
+            handle: Some(handle),
+            workers,
+            started: Instant::now(),
+        })
     }
 
     pub fn handle(&self) -> ServerHandle {
@@ -229,14 +190,132 @@ impl GemmServer {
     /// Shut down and collect serving statistics (None if nothing served).
     pub fn shutdown(mut self) -> Option<ServeStats> {
         let wall = self.started.elapsed();
-        // Drop our sender so the worker's recv() errors out once all
-        // client handles are gone.
+        // Drop our sender references so each shard's recv() errors out
+        // once all client handles are gone.
         self.handle = None;
-        let records = self.worker.take()?.join().ok()?;
+        let mut records = Vec::new();
+        for w in self.workers.drain(..) {
+            if let Ok(mut r) = w.join() {
+                records.append(&mut r);
+            }
+        }
         if records.is_empty() {
             None
         } else {
             Some(ServeStats::from_records(&records, wall))
         }
     }
+}
+
+/// One dispatcher shard: batches, selects, executes on the pooled path.
+fn worker_loop(
+    shard: usize,
+    dir: PathBuf,
+    policy: Arc<dyn SelectPolicy>,
+    cfg: ServerConfig,
+    rx: mpsc::Receiver<Envelope>,
+    ready_tx: mpsc::Sender<Result<(), String>>,
+) -> Vec<RequestRecord> {
+    let mut runtime = match GemmRuntime::open(&dir) {
+        Ok(r) => {
+            let _ = ready_tx.send(Ok(()));
+            r
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(format!("{e:#}")));
+            return Vec::new();
+        }
+    };
+    drop(ready_tx);
+    let mut scratch = ScratchBuffers::new();
+    // Records keep the dense id while serving; names are resolved once at
+    // shard exit so the hot path does not allocate per-request Strings
+    // beyond the response boundary.
+    let mut raw_records: Vec<(ArtifactId, Duration, Duration, f64)> = Vec::new();
+    let mut window: Vec<Envelope> = Vec::with_capacity(cfg.max_batch);
+    loop {
+        // Block for the first request of a window.
+        match rx.recv() {
+            Err(_) => break, // all senders dropped: shutdown
+            Ok(env) => window.push(env),
+        }
+        // Fill the window for up to `batch_window`.
+        let deadline = Instant::now() + cfg.batch_window;
+        while window.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(env) => window.push(env),
+                Err(_) => break,
+            }
+        }
+        // Resolve each request to a dense artifact id, then group the
+        // window by id (stable sort keeps FIFO order within a group) —
+        // the dynamic batcher, with no string keys on the hot path.
+        let mut resolved: Vec<(Option<ArtifactId>, Envelope)> = window
+            .drain(..)
+            .map(|env| {
+                let t = env.req.triple();
+                let cfg_sel = policy.select(t);
+                let id = runtime
+                    .manifest
+                    .artifact_id_for_config(&cfg_sel, t)
+                    // Fallback: any artifact accepting t (least waste).
+                    .or_else(|| runtime.manifest.eligible_id(t));
+                (id, env)
+            })
+            .collect();
+        resolved.sort_by_key(|(id, _)| *id);
+
+        for (id, env) in resolved {
+            let queue = env.submitted.elapsed();
+            let t0 = Instant::now();
+            let result = match id {
+                None => Err(anyhow!("no artifact accepts {}", env.req.triple())),
+                Some(id) => {
+                    let input = GemmInput {
+                        m: env.req.m,
+                        n: env.req.n,
+                        k: env.req.k,
+                        a: &env.req.a,
+                        b: &env.req.b,
+                        c: &env.req.c,
+                        alpha: env.req.alpha,
+                        beta: env.req.beta,
+                    };
+                    runtime
+                        .gemm_pooled(id, &input, &mut scratch)
+                        // The response must outlive the scratch pool: the
+                        // copy-out is the one boundary allocation.
+                        .map(|_times| scratch.out.clone())
+                }
+            };
+            let service = t0.elapsed();
+            let artifact = match id {
+                Some(id) => runtime.manifest.name_of(id).to_string(),
+                None => String::new(),
+            };
+            if let (true, Some(id)) = (result.is_ok(), id) {
+                raw_records.push((id, queue, service, env.req.triple().flops()));
+            }
+            let _ = env.reply.send(GemmResponse {
+                out: result,
+                artifact,
+                queue,
+                service,
+            });
+        }
+    }
+    raw_records
+        .into_iter()
+        .map(|(id, queue, service, flops)| RequestRecord {
+            artifact: runtime.manifest.name_of(id).to_string(),
+            shard,
+            queue,
+            service,
+            flops,
+        })
+        .collect()
 }

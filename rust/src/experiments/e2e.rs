@@ -166,11 +166,21 @@ impl E2eReport {
     }
 }
 
-/// Run the whole experiment.
+/// Run the whole experiment with the default (single-shard) coordinator.
 pub fn run(artifacts: &Path, n_requests: usize, reps: usize) -> Result<E2eReport> {
+    run_with(artifacts, n_requests, reps, ServerConfig::default())
+}
+
+/// Run the whole experiment under an explicit coordinator configuration
+/// (e.g. a sharded dispatcher).
+pub fn run_with(
+    artifacts: &Path,
+    n_requests: usize,
+    reps: usize,
+    cfg: ServerConfig,
+) -> Result<E2eReport> {
     let model = offline_train(artifacts, reps)?;
     let requests = request_stream(n_requests, 0xE2E);
-    let cfg = ServerConfig::default();
 
     let model_policy = Box::new(ModelPolicy::new(&model.tree, &model.classes));
     let stats_model = serve(artifacts, model_policy, requests.clone(), cfg)?;

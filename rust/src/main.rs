@@ -37,6 +37,7 @@ fn opt_specs() -> Vec<OptSpec> {
         OptSpec { name: "requests", help: "number of requests to serve", takes_value: true, default: Some("200") },
         OptSpec { name: "reps", help: "tuner measurement repetitions", takes_value: true, default: Some("3") },
         OptSpec { name: "policy", help: "serving policy (model|default)", takes_value: true, default: Some("model") },
+        OptSpec { name: "shards", help: "dispatcher shards for serving", takes_value: true, default: Some("1") },
     ]
 }
 
@@ -228,10 +229,17 @@ fn cmd_codegen(args: &cli::Args) -> Result<()> {
 }
 
 fn cmd_e2e(args: &cli::Args) -> Result<()> {
+    use adaptlib::coordinator::ServerConfig;
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let n: usize = args.get_parse("requests", 200)?;
     let reps: usize = args.get_parse("reps", 3)?;
-    let report = experiments::e2e::run(&artifacts, n, reps)?;
+    let shards: usize = args.get_parse("shards", 1)?;
+    let report = experiments::e2e::run_with(
+        &artifacts,
+        n,
+        reps,
+        ServerConfig::with_shards(shards),
+    )?;
     println!("{}", report.render());
     Ok(())
 }
@@ -255,12 +263,13 @@ fn cmd_serve_demo(args: &cli::Args) -> Result<()> {
         }
         other => bail!("unknown policy '{other}'"),
     };
+    let shards: usize = args.get_parse("shards", 1)?;
     let requests = experiments::e2e::request_stream(n, 42);
     let stats = experiments::e2e::serve(
         &artifacts,
         policy,
         requests,
-        ServerConfig::default(),
+        ServerConfig::with_shards(shards),
     )?;
     println!("{}", stats.report());
     Ok(())

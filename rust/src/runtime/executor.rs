@@ -1,8 +1,18 @@
 //! The PJRT executor: loads HLO-text artifacts, compiles them once on the
-//! CPU PJRT client (cached), and runs full BLAS GEMMs — the on-line hot
-//! path of the adaptive library.  Python is never involved here.
+//! CPU PJRT client (cached densely by [`ArtifactId`]), and runs full BLAS
+//! GEMMs — the on-line hot path of the adaptive library.  Python is never
+//! involved here.
+//!
+//! Two execution paths:
+//!
+//! * [`GemmRuntime::gemm`] — by-name, literal-based (allocating; mirrors
+//!   the xla-rs API and real host->device transfers).  Convenient for
+//!   tools, tests and the off-line tuner.
+//! * [`GemmRuntime::gemm_pooled`] — by-id into caller-held
+//!   [`ScratchBuffers`]: no string hashing, no metadata clones, and zero
+//!   heap allocations at steady state.  This is what the sharded
+//!   coordinator serves requests through.
 
-use std::collections::HashMap;
 use std::path::Path;
 use std::time::{Duration, Instant};
 
@@ -10,7 +20,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::Triple;
 
-use super::manifest::{ArtifactKind, ArtifactMeta, Manifest};
+use super::manifest::{ArtifactId, ArtifactKind, Manifest};
 use super::pad;
 
 /// A GEMM request: row-major operands, full BLAS semantics.
@@ -54,7 +64,8 @@ impl<'a> GemmInput<'a> {
 #[derive(Debug, Clone)]
 pub struct GemmOutput {
     pub out: Vec<f32>,
-    /// Host-side padding/unpadding time (the indirect "helper" cost).
+    /// Host-side helper time: pad/unpad plus literal staging (the §5.4
+    /// cost model charges only device execute+transfer to kernel_time).
     pub helper_time: Duration,
     /// PJRT execute + transfer time.
     pub kernel_time: Duration,
@@ -70,11 +81,55 @@ impl GemmOutput {
     }
 }
 
+/// Timing of a pooled GEMM (the result lives in [`ScratchBuffers::out`]).
+#[derive(Debug, Clone, Copy)]
+pub struct GemmTimes {
+    pub helper_time: Duration,
+    pub kernel_time: Duration,
+}
+
+impl GemmTimes {
+    pub fn total_time(&self) -> Duration {
+        self.helper_time + self.kernel_time
+    }
+}
+
+/// Reusable buffers for the pooled (allocation-free) serving path.
+///
+/// Ownership rules (see ARCHITECTURE.md): each worker thread owns exactly
+/// one `ScratchBuffers`; the runtime only borrows it for the duration of a
+/// `gemm_pooled` call; `out` holds the logical row-major result of the
+/// *last* call and is valid until the next one.  At steady state (same
+/// bucket sizes) every buffer reuses its capacity, so the indirect path
+/// performs no heap allocation.
+#[derive(Debug, Default)]
+pub struct ScratchBuffers {
+    a: Vec<f32>,
+    b: Vec<f32>,
+    c: Vec<f32>,
+    padded_out: Vec<f32>,
+    /// Logical `m x n` result of the last pooled call.
+    pub out: Vec<f32>,
+}
+
+impl ScratchBuffers {
+    pub fn new() -> ScratchBuffers {
+        ScratchBuffers::default()
+    }
+
+    /// Move the result out (leaves an empty buffer; the next pooled call
+    /// re-grows it).  Use when the result must outlive the scratch.
+    pub fn take_out(&mut self) -> Vec<f32> {
+        std::mem::take(&mut self.out)
+    }
+}
+
 /// Loads and executes the AOT artifact roster.
 pub struct GemmRuntime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Compiled executables, indexed densely by `ArtifactId`.
+    cache: Vec<Option<xla::PjRtLoadedExecutable>>,
     /// Cumulative compile time (reported by `adaptd` diagnostics).
     pub compile_time: Duration,
 }
@@ -85,10 +140,12 @@ impl GemmRuntime {
         let manifest = Manifest::load(dir)?;
         let client = xla::PjRtClient::cpu()
             .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        let mut cache = Vec::new();
+        cache.resize_with(manifest.len(), || None);
         Ok(GemmRuntime {
             client,
             manifest,
-            cache: HashMap::new(),
+            cache,
             compile_time: Duration::ZERO,
         })
     }
@@ -99,13 +156,34 @@ impl GemmRuntime {
 
     /// Compile (or fetch from cache) the executable for an artifact.
     pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
-        if self.cache.contains_key(name) {
+        let id = self.resolve(name)?;
+        self.ensure_compiled_id(id)
+    }
+
+    /// Reject ids that do not belong to this runtime's manifest (e.g. an
+    /// id interned against a different or reloaded roster) — a graceful
+    /// error instead of an index panic that would kill a shard thread.
+    fn check_id(&self, id: ArtifactId) -> Result<()> {
+        if (id.0 as usize) < self.manifest.len() {
+            Ok(())
+        } else {
+            Err(anyhow!(
+                "artifact id {} out of range for this roster ({} artifacts)",
+                id.0,
+                self.manifest.len()
+            ))
+        }
+    }
+
+    /// Compile (or fetch from cache) by dense id.
+    pub fn ensure_compiled_id(&mut self, id: ArtifactId) -> Result<()> {
+        self.check_id(id)?;
+        let idx = id.0 as usize;
+        if self.cache[idx].is_some() {
             return Ok(());
         }
-        let meta = self
-            .manifest
-            .find(name)
-            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let meta = self.manifest.meta(id);
+        let name = meta.name.clone();
         let path = self.manifest.hlo_path(meta);
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(
@@ -118,53 +196,166 @@ impl GemmRuntime {
             .compile(&comp)
             .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
         self.compile_time += t0.elapsed();
-        self.cache.insert(name.to_string(), exe);
+        self.cache[idx] = Some(exe);
         Ok(())
     }
 
     pub fn compiled_count(&self) -> usize {
-        self.cache.len()
+        self.cache.iter().filter(|e| e.is_some()).count()
     }
 
-    /// Execute a GEMM on a named artifact.
-    pub fn gemm(&mut self, name: &str, input: &GemmInput) -> Result<GemmOutput> {
-        input.validate()?;
-        self.ensure_compiled(name)?;
-        let meta = self.manifest.find(name).unwrap().clone();
-        // Direct artifacts with transposed operands are addressed by name
-        // (the serving router only routes untransposed requests), so shape
-        // eligibility here ignores the transpose flags.
-        let shape_ok = match meta.kind {
+    fn resolve(&self, name: &str) -> Result<ArtifactId> {
+        self.manifest
+            .id_of(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))
+    }
+
+    /// Shape eligibility.  Direct artifacts with transposed operands are
+    /// addressed by name/id (the serving router only routes untransposed
+    /// requests), so the check here ignores the transpose flags.
+    fn check_shape(&self, id: ArtifactId, input: &GemmInput) -> Result<()> {
+        let meta = self.manifest.meta(id);
+        let ok = match meta.kind {
             ArtifactKind::Direct { m, n, k, .. } => {
                 (m, n, k) == (input.m as u32, input.n as u32, input.k as u32)
             }
             ArtifactKind::Indirect { .. } => meta.accepts(input.triple()),
         };
-        if !shape_ok {
-            bail!("artifact '{name}' does not accept {}", input.triple());
+        if !ok {
+            bail!("artifact '{}' does not accept {}", meta.name, input.triple());
         }
-        match meta.kind {
-            ArtifactKind::Direct { .. } => self.run_direct(&meta, input),
+        Ok(())
+    }
+
+    fn exe(&self, id: ArtifactId) -> &xla::PjRtLoadedExecutable {
+        self.cache[id.0 as usize]
+            .as_ref()
+            .expect("ensure_compiled_id preceded execution")
+    }
+
+    /// Execute a GEMM on a named artifact (allocating literal path).
+    pub fn gemm(&mut self, name: &str, input: &GemmInput) -> Result<GemmOutput> {
+        input.validate()?;
+        let id = self.resolve(name)?;
+        self.check_shape(id, input)?;
+        self.ensure_compiled_id(id)?;
+        let kind = self.manifest.meta(id).kind;
+        match kind {
+            ArtifactKind::Direct { trans_a, trans_b, .. } => {
+                self.run_direct(id, trans_a, trans_b, input)
+            }
             ArtifactKind::Indirect { mb, nb, kb } => {
-                self.run_indirect(&meta, input, mb as usize, nb as usize, kb as usize)
+                self.run_indirect(id, input, mb as usize, nb as usize, kb as usize)
             }
         }
     }
 
-    fn exe(&self, name: &str) -> &xla::PjRtLoadedExecutable {
-        &self.cache[name]
+    /// Execute a GEMM by dense id into caller-held scratch — the serving
+    /// hot path: no string hashing, no metadata clone, zero steady-state
+    /// heap allocations.  The result is left in `scratch.out`.
+    pub fn gemm_pooled(
+        &mut self,
+        id: ArtifactId,
+        input: &GemmInput,
+        scratch: &mut ScratchBuffers,
+    ) -> Result<GemmTimes> {
+        input.validate()?;
+        self.check_id(id)?;
+        self.check_shape(id, input)?;
+        self.ensure_compiled_id(id)?;
+        let scalar_dims = [1i64];
+        let kind = self.manifest.meta(id).kind;
+        match kind {
+            ArtifactKind::Direct { trans_a, trans_b, .. } => {
+                let t0 = Instant::now();
+                let (m, n, k) = (input.m as i64, input.n as i64, input.k as i64);
+                let a_dims: [i64; 2] = if trans_a { [k, m] } else { [m, k] };
+                let b_dims: [i64; 2] = if trans_b { [n, k] } else { [k, n] };
+                let c_dims: [i64; 2] = [m, n];
+                let ops = [
+                    xla::RawOperand { data: input.a, dims: &a_dims },
+                    xla::RawOperand { data: input.b, dims: &b_dims },
+                    xla::RawOperand { data: input.c, dims: &c_dims },
+                    xla::RawOperand {
+                        data: std::slice::from_ref(&input.alpha),
+                        dims: &scalar_dims,
+                    },
+                    xla::RawOperand {
+                        data: std::slice::from_ref(&input.beta),
+                        dims: &scalar_dims,
+                    },
+                ];
+                self.exe(id)
+                    .execute_into(&ops, &mut scratch.out)
+                    .map_err(|e| {
+                        anyhow!("executing {}: {e:?}", self.manifest.name_of(id))
+                    })?;
+                Ok(GemmTimes {
+                    helper_time: Duration::ZERO,
+                    kernel_time: t0.elapsed(),
+                })
+            }
+            ArtifactKind::Indirect { mb, nb, kb } => {
+                let (mb, nb, kb) = (mb as usize, nb as usize, kb as usize);
+                let th = Instant::now();
+                pad::pad_into(input.a, input.m, input.k, mb, kb, &mut scratch.a);
+                pad::pad_into(input.b, input.k, input.n, kb, nb, &mut scratch.b);
+                pad::pad_into(input.c, input.m, input.n, mb, nb, &mut scratch.c);
+                let helper_pad = th.elapsed();
+
+                let t0 = Instant::now();
+                let a_dims = [mb as i64, kb as i64];
+                let b_dims = [kb as i64, nb as i64];
+                let c_dims = [mb as i64, nb as i64];
+                let ops = [
+                    xla::RawOperand { data: &scratch.a, dims: &a_dims },
+                    xla::RawOperand { data: &scratch.b, dims: &b_dims },
+                    xla::RawOperand { data: &scratch.c, dims: &c_dims },
+                    xla::RawOperand {
+                        data: std::slice::from_ref(&input.alpha),
+                        dims: &scalar_dims,
+                    },
+                    xla::RawOperand {
+                        data: std::slice::from_ref(&input.beta),
+                        dims: &scalar_dims,
+                    },
+                ];
+                self.exe(id)
+                    .execute_into(&ops, &mut scratch.padded_out)
+                    .map_err(|e| {
+                        anyhow!("executing {}: {e:?}", self.manifest.name_of(id))
+                    })?;
+                let kernel_time = t0.elapsed();
+
+                let tu = Instant::now();
+                pad::unpad_into_vec(
+                    &scratch.padded_out,
+                    nb,
+                    input.m,
+                    input.n,
+                    &mut scratch.out,
+                );
+                Ok(GemmTimes {
+                    helper_time: helper_pad + tu.elapsed(),
+                    kernel_time,
+                })
+            }
+        }
     }
 
-    fn run_direct(&mut self, meta: &ArtifactMeta, input: &GemmInput) -> Result<GemmOutput> {
-        let t0 = Instant::now();
+    fn run_direct(
+        &mut self,
+        id: ArtifactId,
+        trans_a: bool,
+        trans_b: bool,
+        input: &GemmInput,
+    ) -> Result<GemmOutput> {
+        // Literal staging is host-side helper work, not kernel time.
+        let th = Instant::now();
         let (m, n, k) = (input.m as i64, input.n as i64, input.k as i64);
         // Transposed artifacts expect operands in their transposed layout.
-        let (ta, tb) = match meta.kind {
-            ArtifactKind::Direct { trans_a, trans_b, .. } => (trans_a, trans_b),
-            _ => (false, false),
-        };
-        let a_dims: [i64; 2] = if ta { [k, m] } else { [m, k] };
-        let b_dims: [i64; 2] = if tb { [n, k] } else { [k, n] };
+        let a_dims: [i64; 2] = if trans_a { [k, m] } else { [m, k] };
+        let b_dims: [i64; 2] = if trans_b { [n, k] } else { [k, n] };
         let lits = [
             xla::Literal::vec1(input.a).reshape(&a_dims)?,
             xla::Literal::vec1(input.b).reshape(&b_dims)?,
@@ -172,31 +363,32 @@ impl GemmRuntime {
             xla::Literal::vec1(&[input.alpha]),
             xla::Literal::vec1(&[input.beta]),
         ];
-        let out = self.execute_tuple1(&meta.name, &lits)?;
+        let helper_time = th.elapsed();
+
+        let t0 = Instant::now();
+        let out = self.execute_tuple1(id, &lits)?;
         Ok(GemmOutput {
             out,
-            helper_time: Duration::ZERO,
+            helper_time,
             kernel_time: t0.elapsed(),
         })
     }
 
     fn run_indirect(
         &mut self,
-        meta: &ArtifactMeta,
+        id: ArtifactId,
         input: &GemmInput,
         mb: usize,
         nb: usize,
         kb: usize,
     ) -> Result<GemmOutput> {
         // Helper phase: pad operands to the bucket (the measured O(n^2)
-        // cost that CLBlast pays in its pad/transpose kernels).
+        // cost that CLBlast pays in its pad/transpose kernels) and stage
+        // the literals.
         let th = Instant::now();
         let a_p = pad::pad(input.a, input.m, input.k, mb, kb);
         let b_p = pad::pad(input.b, input.k, input.n, kb, nb);
         let c_p = pad::pad(input.c, input.m, input.n, mb, nb);
-        let helper_pad = th.elapsed();
-
-        let t0 = Instant::now();
         let lits = [
             xla::Literal::vec1(&a_p).reshape(&[mb as i64, kb as i64])?,
             xla::Literal::vec1(&b_p).reshape(&[kb as i64, nb as i64])?,
@@ -204,7 +396,10 @@ impl GemmRuntime {
             xla::Literal::vec1(&[input.alpha]),
             xla::Literal::vec1(&[input.beta]),
         ];
-        let padded = self.execute_tuple1(&meta.name, &lits)?;
+        let helper_pad = th.elapsed();
+
+        let t0 = Instant::now();
+        let padded = self.execute_tuple1(id, &lits)?;
         let kernel_time = t0.elapsed();
 
         // Unpad (second helper pass).
@@ -214,9 +409,10 @@ impl GemmRuntime {
         Ok(GemmOutput { out, helper_time, kernel_time })
     }
 
-    fn execute_tuple1(&mut self, name: &str, lits: &[xla::Literal]) -> Result<Vec<f32>> {
+    fn execute_tuple1(&self, id: ArtifactId, lits: &[xla::Literal]) -> Result<Vec<f32>> {
+        let name = self.manifest.name_of(id);
         let bufs = self
-            .exe(name)
+            .exe(id)
             .execute::<xla::Literal>(lits)
             .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
         let lit = bufs[0][0]
@@ -231,21 +427,64 @@ impl GemmRuntime {
 }
 
 /// Reference row-major GEMM on the host — the rust-side oracle used by
-/// runtime tests and failure injection (independent of JAX).
+/// runtime tests and failure injection (independent of JAX).  Allocates
+/// the output; see [`host_gemm_into`] for the in-place variant.
 pub fn host_gemm(input: &GemmInput) -> Vec<f32> {
+    let mut out = vec![0f32; input.m * input.n];
+    host_gemm_into(input, &mut out);
+    out
+}
+
+/// Past this operation count the oracle fans out over row bands.
+const PAR_THRESHOLD: usize = 1 << 20;
+
+/// Reference GEMM into a caller-provided buffer.  Blocked i/k/j loop
+/// order (streams B row-wise with a per-row f64 accumulator) and, for
+/// large problems, parallelized over row bands with scoped threads — so
+/// the oracle no longer dominates verification runs.  Per-element results
+/// are bit-identical to the naive triple loop (same f64 summation order)
+/// regardless of thread count.
+pub fn host_gemm_into(input: &GemmInput, out: &mut [f32]) {
     let (m, n, k) = (input.m, input.n, input.k);
-    let mut out = vec![0f32; m * n];
-    for i in 0..m {
-        for j in 0..n {
-            let mut acc = 0f64;
-            for l in 0..k {
-                acc += input.a[i * k + l] as f64 * input.b[l * n + j] as f64;
+    assert_eq!(out.len(), m * n, "output buffer size mismatch");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let threads = if m * n * k < PAR_THRESHOLD { 1 } else { hw.min(m).min(16) };
+    if threads <= 1 {
+        gemm_band(input, 0, out);
+        return;
+    }
+    let band = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (ti, chunk) in out.chunks_mut(band * n).enumerate() {
+            s.spawn(move || gemm_band(input, ti * band, chunk));
+        }
+    });
+}
+
+/// Compute rows `[row0, row0 + out.len()/n)` of the result into `out`.
+fn gemm_band(input: &GemmInput, row0: usize, out: &mut [f32]) {
+    let (n, k) = (input.n, input.k);
+    let rows = out.len() / n;
+    let mut acc = vec![0f64; n];
+    for r in 0..rows {
+        let i = row0 + r;
+        acc.iter_mut().for_each(|x| *x = 0.0);
+        for l in 0..k {
+            let av = input.a[i * k + l] as f64;
+            let brow = &input.b[l * n..(l + 1) * n];
+            for (s, &bv) in acc.iter_mut().zip(brow) {
+                *s += av * bv as f64;
             }
-            out[i * n + j] =
-                input.alpha * acc as f32 + input.beta * input.c[i * n + j];
+        }
+        let crow = &input.c[i * n..(i + 1) * n];
+        let orow = &mut out[r * n..(r + 1) * n];
+        for ((o, &s), &cv) in orow.iter_mut().zip(acc.iter()).zip(crow) {
+            *o = input.alpha * s as f32 + input.beta * cv;
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -287,6 +526,47 @@ mod tests {
             beta: 0.5,
         });
         assert_eq!(out, vec![2.0 * 11.0 + 5.0]);
+    }
+
+    #[test]
+    fn host_gemm_parallel_bands_match_serial() {
+        // Big enough to cross PAR_THRESHOLD (128*128*128 = 2^21): the
+        // banded parallel path must agree bit-for-bit with a serial
+        // single-band run.
+        let (m, n, k) = (128usize, 128usize, 128usize);
+        let mut rng = crate::util::prng::Rng::new(11);
+        let gen = |rng: &mut crate::util::prng::Rng, len: usize| -> Vec<f32> {
+            (0..len).map(|_| rng.f32() * 2.0 - 1.0).collect()
+        };
+        let a = gen(&mut rng, m * k);
+        let b = gen(&mut rng, k * n);
+        let c = gen(&mut rng, m * n);
+        let input = GemmInput {
+            m, n, k,
+            a: &a, b: &b, c: &c,
+            alpha: 1.25, beta: -0.5,
+        };
+        let parallel = host_gemm(&input);
+        let mut serial = vec![0f32; m * n];
+        gemm_band(&input, 0, &mut serial);
+        assert_eq!(parallel, serial);
+    }
+
+    #[test]
+    fn host_gemm_degenerate_dims() {
+        // k = 0: out = beta * C only.
+        let c = [2.0, 4.0];
+        let out = host_gemm(&GemmInput {
+            m: 1,
+            n: 2,
+            k: 0,
+            a: &[],
+            b: &[],
+            c: &c,
+            alpha: 3.0,
+            beta: 0.5,
+        });
+        assert_eq!(out, vec![1.0, 2.0]);
     }
 
     #[test]

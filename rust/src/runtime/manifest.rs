@@ -53,6 +53,12 @@ impl ArtifactMeta {
     }
 }
 
+/// Dense artifact index, interned from the artifact name at manifest
+/// load.  The on-line hot path resolves and dispatches by `ArtifactId`
+/// only — no string hashing, no metadata clones.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ArtifactId(pub u32);
+
 /// The parsed manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
@@ -60,6 +66,8 @@ pub struct Manifest {
     pub roster: String,
     pub dir: PathBuf,
     pub artifacts: Vec<ArtifactMeta>,
+    /// Name -> dense index interner (built once at parse).
+    index: std::collections::HashMap<String, u32>,
 }
 
 impl Manifest {
@@ -88,11 +96,61 @@ impl Manifest {
         if artifacts.is_empty() {
             bail!("manifest lists no artifacts");
         }
-        Ok(Manifest { version, roster, dir: dir.to_path_buf(), artifacts })
+        let mut index = std::collections::HashMap::with_capacity(artifacts.len());
+        for (i, a) in artifacts.iter().enumerate() {
+            if index.insert(a.name.clone(), i as u32).is_some() {
+                bail!("duplicate artifact name '{}' in manifest", a.name);
+            }
+        }
+        Ok(Manifest { version, roster, dir: dir.to_path_buf(), artifacts, index })
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    /// Resolve a name to its interned dense id (one hash, load time only;
+    /// the serving path holds on to the id).
+    pub fn id_of(&self, name: &str) -> Option<ArtifactId> {
+        self.index.get(name).copied().map(ArtifactId)
+    }
+
+    /// Metadata by dense id (no hashing, no clone).
+    pub fn meta(&self, id: ArtifactId) -> &ArtifactMeta {
+        &self.artifacts[id.0 as usize]
+    }
+
+    /// Artifact name by dense id.
+    pub fn name_of(&self, id: ArtifactId) -> &str {
+        &self.artifacts[id.0 as usize].name
     }
 
     pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
-        self.artifacts.iter().find(|a| a.name == name)
+        self.id_of(name).map(|id| self.meta(id))
+    }
+
+    /// Least-waste artifact able to run `t`, as a dense id.
+    pub fn eligible_id(&self, t: Triple) -> Option<ArtifactId> {
+        self.artifacts
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.accepts(t))
+            .min_by(|(_, a), (_, b)| a.waste(t).partial_cmp(&b.waste(t)).unwrap())
+            .map(|(i, _)| ArtifactId(i as u32))
+    }
+
+    /// Least-waste artifact implementing `cfg` for `t`, as a dense id.
+    pub fn artifact_id_for_config(&self, cfg: &KernelConfig, t: Triple) -> Option<ArtifactId> {
+        self.artifacts
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.config == *cfg && a.accepts(t))
+            .min_by(|(_, a), (_, b)| a.waste(t).partial_cmp(&b.waste(t)).unwrap())
+            .map(|(i, _)| ArtifactId(i as u32))
     }
 
     /// Artifacts able to run triple `t`, best (least padding waste) first.
@@ -235,6 +293,33 @@ mod tests {
         let e = m.eligible(Triple::new(64, 64, 64));
         assert_eq!(e.len(), 2);
         assert_eq!(e[0].name, "d1"); // exact shape: waste 1.0
+    }
+
+    #[test]
+    fn interned_ids_are_dense_and_stable() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let d = m.id_of("d1").unwrap();
+        let i = m.id_of("i1").unwrap();
+        assert_eq!((d.0, i.0), (0, 1));
+        assert_eq!(m.name_of(d), "d1");
+        assert_eq!(m.meta(i).name, "i1");
+        assert_eq!(m.len(), 2);
+        assert!(m.id_of("nope").is_none());
+        // eligible_id picks the least-waste artifact; config resolution
+        // by id agrees with the by-reference variant.
+        assert_eq!(m.eligible_id(Triple::new(64, 64, 64)), Some(d));
+        let cfg = m.meta(i).config;
+        assert_eq!(
+            m.artifact_id_for_config(&cfg, Triple::new(100, 100, 100)),
+            Some(i)
+        );
+        assert_eq!(m.artifact_id_for_config(&cfg, Triple::new(200, 1, 1)), None);
+    }
+
+    #[test]
+    fn rejects_duplicate_artifact_names() {
+        let dup = SAMPLE.replace("\"name\": \"i1\"", "\"name\": \"d1\"");
+        assert!(Manifest::parse(&dup, Path::new("/tmp")).is_err());
     }
 
     #[test]

@@ -7,8 +7,11 @@ pub mod executor;
 pub mod manifest;
 pub mod pad;
 
-pub use executor::{host_gemm, GemmInput, GemmOutput, GemmRuntime};
-pub use manifest::{ArtifactKind, ArtifactMeta, Manifest};
+pub use executor::{
+    host_gemm, host_gemm_into, GemmInput, GemmOutput, GemmRuntime, GemmTimes,
+    ScratchBuffers,
+};
+pub use manifest::{ArtifactId, ArtifactKind, ArtifactMeta, Manifest};
 
 use std::collections::HashMap;
 use std::path::Path;

@@ -3,11 +3,27 @@
 
 /// Zero-pad a row-major `rows x cols` matrix into `rows_to x cols_to`.
 pub fn pad(src: &[f32], rows: usize, cols: usize, rows_to: usize, cols_to: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    pad_into(src, rows, cols, rows_to, cols_to, &mut out);
+    out
+}
+
+/// [`pad`] into a caller-owned buffer: the buffer is cleared, resized to
+/// `rows_to * cols_to` (reusing its capacity — the allocation-free hot
+/// path at steady state) and filled exactly like `pad` would.
+pub fn pad_into(
+    src: &[f32],
+    rows: usize,
+    cols: usize,
+    rows_to: usize,
+    cols_to: usize,
+    dst: &mut Vec<f32>,
+) {
     assert_eq!(src.len(), rows * cols, "src size mismatch");
     assert!(rows_to >= rows && cols_to >= cols, "pad must grow");
-    let mut out = vec![0f32; rows_to * cols_to];
-    copy_into(src, cols, &mut out, cols_to, rows);
-    out
+    dst.clear();
+    dst.resize(rows_to * cols_to, 0f32);
+    copy_into(src, cols, dst, cols_to, rows);
 }
 
 /// Copy `rows` rows of width `src_cols` into a `dst_cols`-wide buffer.
@@ -38,6 +54,25 @@ pub fn unpad_into(src: &[f32], padded_cols: usize, rows: usize, cols: usize, out
     for r in 0..rows {
         out[r * cols..(r + 1) * cols]
             .copy_from_slice(&src[r * padded_cols..r * padded_cols + cols]);
+    }
+}
+
+/// [`unpad`] into a caller-owned `Vec`, reusing its capacity.  Unlike
+/// `unpad_into` this needs no pre-sized (and thus pre-zeroed) buffer, so
+/// the pooled serving path writes each output element exactly once.
+pub fn unpad_into_vec(
+    src: &[f32],
+    padded_cols: usize,
+    rows: usize,
+    cols: usize,
+    out: &mut Vec<f32>,
+) {
+    assert!(padded_cols >= cols);
+    assert!(src.len() >= rows * padded_cols, "src too small");
+    out.clear();
+    out.reserve(rows * cols);
+    for r in 0..rows {
+        out.extend_from_slice(&src[r * padded_cols..r * padded_cols + cols]);
     }
 }
 
@@ -76,6 +111,33 @@ mod tests {
         let mut buf = vec![0f32; 15];
         unpad_into(&padded, 8, 3, 5, &mut buf);
         assert_eq!(buf, unpad(&padded, 8, 3, 5));
+    }
+
+    #[test]
+    fn unpad_into_vec_matches_unpad_and_reuses_capacity() {
+        let src: Vec<f32> = (0..15).map(|x| x as f32).collect(); // 3x5
+        let padded = pad(&src, 3, 5, 4, 8);
+        let mut buf = vec![f32::NAN; 40]; // dirty, oversized pool buffer
+        unpad_into_vec(&padded, 8, 3, 5, &mut buf);
+        assert_eq!(buf, unpad(&padded, 8, 3, 5));
+        let cap = buf.capacity();
+        unpad_into_vec(&padded, 8, 3, 5, &mut buf);
+        assert_eq!(buf, src);
+        assert_eq!(buf.capacity(), cap);
+    }
+
+    #[test]
+    fn pad_into_reuses_capacity_and_matches_pad() {
+        let src: Vec<f32> = (0..12).map(|x| x as f32 + 0.25).collect(); // 3x4
+        let mut buf = Vec::new();
+        pad_into(&src, 3, 4, 8, 8, &mut buf);
+        assert_eq!(buf, pad(&src, 3, 4, 8, 8));
+        // Steady state: same bucket, dirty buffer, no reallocation.
+        let cap = buf.capacity();
+        buf.iter_mut().for_each(|x| *x = f32::NAN);
+        pad_into(&src, 3, 4, 8, 8, &mut buf);
+        assert_eq!(buf, pad(&src, 3, 4, 8, 8));
+        assert_eq!(buf.capacity(), cap);
     }
 
     #[test]

@@ -7,8 +7,6 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
-use thiserror::Error;
-
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
     Null,
@@ -19,15 +17,28 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("json parse error at byte {0}: {1}")]
     Parse(usize, String),
-    #[error("json type error: expected {0}, found {1}")]
     Type(&'static str, &'static str),
-    #[error("json missing key: {0}")]
     Missing(String),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Parse(at, msg) => {
+                write!(f, "json parse error at byte {at}: {msg}")
+            }
+            JsonError::Type(want, got) => {
+                write!(f, "json type error: expected {want}, found {got}")
+            }
+            JsonError::Missing(key) => write!(f, "json missing key: {key}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // ---------------------------------------------------------------- access

@@ -7,7 +7,7 @@ use std::path::{Path, PathBuf};
 
 use adaptlib::dataset::LabeledDataset;
 use adaptlib::dtree::DecisionTree;
-use adaptlib::runtime::{GemmInput, GemmRuntime, Manifest};
+use adaptlib::runtime::{ArtifactId, GemmInput, GemmRuntime, Manifest, ScratchBuffers};
 use adaptlib::tuner::TuningDb;
 use adaptlib::util::json::Json;
 
@@ -96,6 +96,30 @@ fn runtime_errors_on_corrupt_hlo_text() {
     let mut rt = GemmRuntime::open(&dir).unwrap();
     let name = rt.manifest.artifacts[0].name.clone();
     assert!(rt.ensure_compiled(&name).is_err(), "corrupt HLO must not compile");
+}
+
+#[test]
+fn out_of_range_artifact_id_errors_gracefully() {
+    // A stale id (interned against a bigger/reloaded roster) must produce
+    // an error, not an index panic that would kill a dispatcher shard.
+    let dir = scratch("staleid");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 1, "roster": "x", "artifacts": [
+            {"name": "only", "kernel": "xgemm_direct", "file": "only.hlo.txt",
+             "m": 8, "n": 8, "k": 8, "trans_a": false, "trans_b": false,
+             "config": {"wgd": 8, "mdimcd": 8, "ndimcd": 8, "vwmd": 1,
+                        "vwnd": 1, "kwid": 2, "pada": 1, "padb": 1}}
+        ]}"#,
+    )
+    .unwrap();
+    let mut rt = GemmRuntime::open(&dir).unwrap();
+    let a = vec![0f32; 64];
+    let input = GemmInput { m: 8, n: 8, k: 8, a: &a, b: &a, c: &a, alpha: 1.0, beta: 0.0 };
+    let mut pool = ScratchBuffers::new();
+    let err = rt.gemm_pooled(ArtifactId(7), &input, &mut pool).unwrap_err();
+    assert!(format!("{err:#}").contains("out of range"), "err: {err:#}");
+    assert!(rt.ensure_compiled_id(ArtifactId(7)).is_err());
 }
 
 #[test]

@@ -1,0 +1,56 @@
+//! Exhaustive selector equivalence: the flattened if-then-else chain the
+//! on-line dispatcher executes ([`FlatTree`]) must make exactly the
+//! pointer-tree's decisions on *every* labeled triple, for *every* model
+//! of the paper's (H, L) sweep.  Guards the FlatTree-by-default serving
+//! representation.
+
+use adaptlib::codegen::FlatTree;
+use adaptlib::dataset::DatasetKind;
+use adaptlib::device::DeviceId;
+use adaptlib::experiments::Context;
+
+#[test]
+fn flat_tree_matches_pointer_tree_for_all_swept_models() {
+    let mut ctx = Context::new();
+    let sweep = ctx.sweep(DeviceId::NvidiaP100, DatasetKind::Po2);
+    assert!(
+        sweep.models.len() >= 20,
+        "expected the full paper sweep, got {} models",
+        sweep.models.len()
+    );
+    for row in &sweep.models {
+        let flat = FlatTree::from_tree(&row.tree);
+        assert_eq!(flat.len(), row.tree.nodes.len());
+        for (t, _) in &sweep.labeled.entries {
+            assert_eq!(
+                flat.predict(t.m, t.n, t.k),
+                row.tree.predict(*t),
+                "model {} diverges at {t}",
+                row.scores.model
+            );
+        }
+    }
+}
+
+#[test]
+fn flat_tree_matches_on_out_of_distribution_probes() {
+    // Equivalence must also hold away from the training grid (threshold
+    // boundaries fall between grid points).
+    let mut ctx = Context::new();
+    ctx.model_limit = Some(6);
+    let sweep = ctx.sweep(DeviceId::NvidiaP100, DatasetKind::Po2);
+    for row in &sweep.models {
+        let flat = FlatTree::from_tree(&row.tree);
+        for m in (1..2000u32).step_by(97) {
+            for k in [1u32, 3, 63, 64, 65, 511, 513, 4096] {
+                let t = adaptlib::config::Triple::new(m, (m % 700) + 1, k);
+                assert_eq!(
+                    flat.predict(t.m, t.n, t.k),
+                    row.tree.predict(t),
+                    "model {} diverges at {t}",
+                    row.scores.model
+                );
+            }
+        }
+    }
+}

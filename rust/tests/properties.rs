@@ -217,6 +217,66 @@ fn prop_pad_unpad_roundtrip() {
 }
 
 #[test]
+fn prop_pooled_pad_path_bit_identical_to_allocating() {
+    // The pooled (buffer-reusing) pad/unpad path must produce exactly the
+    // bytes the allocating path does, across arbitrary logical shapes vs
+    // bucket sizes — including the m == mb exact-fit edge — while reusing
+    // one dirty long-lived pool like a dispatcher shard would.
+    let cfg = PropConfig { cases: 150, ..Default::default() };
+    let seeds = RangeU32 { lo: 0, hi: 1 << 30 };
+    let pool: std::cell::RefCell<(Vec<f32>, Vec<f32>)> = Default::default();
+    assert_prop(&cfg, &seeds, |&seed| {
+        let mut rng = Rng::new(seed as u64 ^ 0xF00D);
+        let rows = 1 + rng.below(48) as usize;
+        let cols = 1 + rng.below(48) as usize;
+        // below(48) may be 0: exercises rows_to == rows / cols_to == cols.
+        let rows_to = rows + rng.below(48) as usize;
+        let cols_to = cols + rng.below(48) as usize;
+        let src: Vec<f32> =
+            (0..rows * cols).map(|i| i as f32 * 0.31 - 3.0).collect();
+
+        let mut pool = pool.borrow_mut();
+        let (pbuf, ubuf) = &mut *pool;
+        let expect = pad::pad(&src, rows, cols, rows_to, cols_to);
+        pad::pad_into(&src, rows, cols, rows_to, cols_to, pbuf);
+        if *pbuf != expect {
+            return Err(format!(
+                "pad_into != pad for {rows}x{cols} -> {rows_to}x{cols_to}"
+            ));
+        }
+        let expect_un = pad::unpad(&expect, cols_to, rows, cols);
+        ubuf.clear();
+        ubuf.resize(rows * cols, 0f32);
+        pad::unpad_into(pbuf, cols_to, rows, cols, ubuf);
+        if *ubuf != expect_un {
+            return Err("unpad_into != unpad".into());
+        }
+        pad::unpad_into_vec(pbuf, cols_to, rows, cols, ubuf);
+        if *ubuf != expect_un {
+            return Err("unpad_into_vec != unpad".into());
+        }
+        if *ubuf != src {
+            return Err("pooled roundtrip broke the data".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pad_unpad_exact_fit_edge() {
+    // m == mb, n == nb: pad is the identity, unpad slices everything.
+    let src: Vec<f32> = (0..20).map(|x| x as f32).collect(); // 4x5
+    assert_eq!(pad::pad(&src, 4, 5, 4, 5), src);
+    let mut buf = vec![9.0f32; 3];
+    pad::pad_into(&src, 4, 5, 4, 5, &mut buf);
+    assert_eq!(buf, src);
+    assert_eq!(pad::unpad(&src, 5, 4, 5), src);
+    let mut out = vec![0f32; 20];
+    pad::unpad_into(&src, 5, 4, 5, &mut out);
+    assert_eq!(out, src);
+}
+
+#[test]
 fn prop_json_roundtrip_for_configs_and_triples() {
     let cfg = PropConfig { cases: 200, ..Default::default() };
     let space = xgemm_space();

@@ -80,6 +80,53 @@ fn server_batches_mixed_shapes() {
 }
 
 #[test]
+fn sharded_server_serves_correct_results_across_all_shards() {
+    let Some(dir) = artifacts_dir() else { return };
+    let backend = PjrtBackend::open(&dir).unwrap();
+    let policy = DefaultPolicy::from_roster(&backend.roster_configs()).unwrap();
+    drop(backend);
+    let server =
+        GemmServer::start(&dir, Box::new(policy), ServerConfig::with_shards(4))
+            .unwrap();
+    let handle = server.handle();
+    assert_eq!(handle.shards(), 4);
+
+    // 32 mixed-shape requests round-robin across 4 shards: every shard
+    // compiles its own executables and serves exactly 8 requests.
+    let shapes = [(64, 64, 64), (100, 100, 100), (128, 128, 128), (31, 31, 31)];
+    let mut pending = Vec::new();
+    for &(m, n, k) in shapes.iter().cycle().take(32) {
+        pending.push((k, handle.submit(req(m, n, k, 1.0))));
+    }
+    for (k, rx) in pending {
+        let resp = rx.recv().unwrap();
+        let out = resp.out.unwrap();
+        // all-ones GEMM: every element = k
+        assert!((out[0] - k as f32).abs() < 1e-2, "k={k}: {}", out[0]);
+    }
+    drop(handle);
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.n_requests, 32);
+    assert_eq!(stats.per_shard.len(), 4, "all shards must serve");
+    assert!(
+        stats.per_shard.values().all(|&n| n == 8),
+        "round-robin must balance: {:?}",
+        stats.per_shard
+    );
+}
+
+#[test]
+fn sharded_server_startup_fails_on_missing_artifacts() {
+    let bogus = PathBuf::from("/nonexistent/adaptlib-artifacts");
+    let err = GemmServer::start(
+        &bogus,
+        Box::new(DefaultPolicy::clblast()),
+        ServerConfig::with_shards(3),
+    );
+    assert!(err.is_err(), "every shard failing must fail startup");
+}
+
+#[test]
 fn server_reports_error_for_unservable_shape() {
     let Some(dir) = artifacts_dir() else { return };
     let backend = PjrtBackend::open(&dir).unwrap();

@@ -1,0 +1,218 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! Implements exactly the API surface adaptlib uses: [`Error`] with a
+//! context chain, [`Result`], the [`Context`] extension trait for
+//! `Result` and `Option`, and the `anyhow!` / `bail!` / `ensure!`
+//! macros.  Display follows anyhow's convention: `{e}` prints the
+//! outermost message, `{e:#}` prints the whole chain separated by `: `.
+
+use std::fmt;
+
+/// An error with an optional chain of underlying causes.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct from a displayable message (the `anyhow!` entry point).
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string(), cause: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context(self, msg: impl fmt::Display) -> Error {
+        Error { msg: msg.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    /// Iterate the chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut msgs = vec![self.msg.as_str()];
+        let mut cur = self.cause.as_deref();
+        while let Some(e) = cur {
+            msgs.push(e.msg.as_str());
+            cur = e.cause.as_deref();
+        }
+        msgs.into_iter()
+    }
+
+    /// The outermost message (anyhow's `root_cause` analogue is the last).
+    pub fn root_cause_msg(&self) -> &str {
+        self.chain().last().unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            for (i, m) in self.chain().enumerate() {
+                if i > 0 {
+                    f.write_str(": ")?;
+                }
+                f.write_str(m)?;
+            }
+            Ok(())
+        } else {
+            f.write_str(&self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut cur = self.cause.as_deref();
+        if cur.is_some() {
+            f.write_str("\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.cause.as_deref();
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`;
+// that keeps the blanket `From` below coherent, exactly like anyhow.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for msg in msgs.into_iter().rev() {
+            err = Some(Error { msg, cause: err.map(Box::new) });
+        }
+        err.expect("at least one message")
+    }
+}
+
+/// `anyhow::Result<T>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attaching extension trait for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!($($arg)*)));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e = Error::from(io_err()).context("reading manifest");
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: gone");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        assert!(format!("{e:#}").contains("outer"));
+        assert!(format!("{e:#}").contains("gone"));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "missing 7");
+        assert_eq!(Some(1).context("x").unwrap(), 1);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn inner(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(inner(3).unwrap(), 3);
+        assert_eq!(format!("{}", inner(12).unwrap_err()), "x too big: 12");
+        assert_eq!(format!("{}", inner(5).unwrap_err()), "five is right out");
+        let e = anyhow!("code {}", 42);
+        assert_eq!(format!("{e}"), "code 42");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert_eq!(parse("17").unwrap(), 17);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let e = Error::from(io_err()).context("ctx");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("ctx"));
+        assert!(dbg.contains("Caused by"));
+        assert!(dbg.contains("gone"));
+    }
+}

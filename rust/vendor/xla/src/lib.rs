@@ -1,0 +1,604 @@
+//! Offline PJRT shim, API-compatible with the subset of the `xla` crate
+//! (v0.1.6) that adaptlib's runtime uses.
+//!
+//! The real deployment links the PJRT CPU client and executes the
+//! jax-lowered HLO artifacts natively.  This vendor crate keeps the repo
+//! self-contained: it parses the *entry computation* of the HLO text the
+//! AOT pipeline emits (`python/compile/model.py::to_hlo_text`) — five
+//! parameters `(A, B, C, alpha[1], beta[1])`, optional operand
+//! transposes, one tupled `f32[m,n]` result — and executes the BLAS GEMM
+//! semantics `out = alpha * op(A) @ op(B) + beta * C` on the host.
+//!
+//! Two execution surfaces:
+//!
+//! * [`PjRtLoadedExecutable::execute`] — the xla-rs-shaped literal path
+//!   (allocates per call, mirroring real host->device transfers);
+//! * [`PjRtLoadedExecutable::execute_into`] — the shim-only extension the
+//!   pooled runtime hot path uses: borrowed operands in, result written
+//!   into a caller-owned buffer, zero heap allocations at steady state.
+//!
+//! Both drive the same kernel loop, so their outputs are bit-identical.
+
+use std::borrow::Borrow;
+use std::sync::Mutex;
+
+/// Error type; adaptlib only formats it with `{:?}`.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T, XlaError> {
+    Err(XlaError(msg.into()))
+}
+
+// --------------------------------------------------------------- literals
+
+/// A dense f32 literal (or a tuple of them).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Vec<f32>,
+    /// Non-empty => this literal is a tuple of the elements.
+    elements: Vec<Literal>,
+}
+
+/// Element types `Literal::to_vec` can produce (f32 only in the shim).
+pub trait NativeType: Copy {
+    fn from_f32(x: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(x: f32) -> f32 {
+        x
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal copying the slice (mirrors a host->device transfer).
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            data: data.to_vec(),
+            elements: Vec::new(),
+        }
+    }
+
+    /// Tuple literal.
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal { dims: Vec::new(), data: Vec::new(), elements }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(self, dims: &[i64]) -> Result<Literal, XlaError> {
+        let count: i64 = dims.iter().product();
+        if !self.elements.is_empty() {
+            return err("cannot reshape a tuple literal");
+        }
+        if count < 0 || count as usize != self.data.len() {
+            return err(format!(
+                "reshape {:?} -> {:?}: element count mismatch ({})",
+                self.dims,
+                dims,
+                self.data.len()
+            ));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data, elements: Vec::new() })
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Unwrap a 1-element tuple literal.
+    pub fn to_tuple1(self) -> Result<Literal, XlaError> {
+        let mut elements = self.elements;
+        if elements.len() != 1 {
+            return err(format!("expected 1-tuple, got {} elements", elements.len()));
+        }
+        Ok(elements.remove(0))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
+        if !self.elements.is_empty() {
+            return err("cannot convert a tuple literal to a vec");
+        }
+        Ok(self.data.iter().map(|&x| T::from_f32(x)).collect())
+    }
+}
+
+/// A borrowed operand for the zero-allocation execution path.
+#[derive(Debug, Clone, Copy)]
+pub struct RawOperand<'a> {
+    pub data: &'a [f32],
+    pub dims: &'a [i64],
+}
+
+// ------------------------------------------------------------ HLO parsing
+
+/// Raw HLO-module text, as read from an artifact file.
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, XlaError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| XlaError(format!("reading {path}: {e}")))?;
+        if !text.contains("HloModule") {
+            return err(format!("{path} is not HLO text"));
+        }
+        Ok(HloModuleProto { text })
+    }
+
+    pub fn from_text(text: impl Into<String>) -> HloModuleProto {
+        HloModuleProto { text: text.into() }
+    }
+}
+
+/// An unverified computation; semantic extraction happens at compile.
+pub struct XlaComputation {
+    text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { text: proto.text.clone() }
+    }
+}
+
+/// GEMM semantics extracted from the entry computation.
+#[derive(Debug, Clone, PartialEq)]
+struct GemmSemantics {
+    /// Dims of the five entry parameters, by parameter index.
+    param_dims: [Vec<usize>; 5],
+    trans_a: bool,
+    trans_b: bool,
+    m: usize,
+    n: usize,
+    k: usize,
+}
+
+/// Parse `f32[R,C]{...}` (or `f32[N]{0}`) immediately before `parameter(i)`.
+fn parse_shape(ty: &str) -> Option<Vec<usize>> {
+    let rest = ty.strip_prefix("f32[")?;
+    let close = rest.find(']')?;
+    let inner = &rest[..close];
+    if inner.is_empty() {
+        return Some(Vec::new());
+    }
+    inner
+        .split(',')
+        .map(|d| d.trim().parse::<usize>().ok())
+        .collect::<Option<Vec<usize>>>()
+}
+
+fn parse_entry(text: &str) -> Result<GemmSemantics, XlaError> {
+    // Locate the ENTRY block (jax prints sub-computations first).
+    let start = match text.find("\nENTRY ") {
+        Some(i) => i + 1,
+        None => {
+            if text.starts_with("ENTRY ") {
+                0
+            } else {
+                return err("no ENTRY computation in HLO text");
+            }
+        }
+    };
+    let body = &text[start..];
+    let open = body.find('{').ok_or_else(|| XlaError("ENTRY has no body".into()))?;
+    let close = body.find("\n}").ok_or_else(|| XlaError("unterminated ENTRY body".into()))?;
+    if close < open {
+        return err("malformed ENTRY body");
+    }
+    let entry = &body[open + 1..close];
+
+    // Pass 1: parameters.  Lines look like
+    //   `  Arg_0.1 = f32[64,64]{1,0} parameter(0)`
+    let mut param_dims: [Option<Vec<usize>>; 5] = Default::default();
+    let mut param_names: Vec<(String, usize)> = Vec::new();
+    let mut saw_root = false;
+    for line in entry.lines() {
+        let line = line.trim();
+        if line.starts_with("ROOT ") {
+            saw_root = true;
+        }
+        let Some((lhs, rhs)) = line.split_once(" = ") else { continue };
+        let Some(paren) = rhs.find("parameter(") else { continue };
+        let idx_text = &rhs[paren + "parameter(".len()..];
+        let Some(close_paren) = idx_text.find(')') else { continue };
+        let Ok(idx) = idx_text[..close_paren].parse::<usize>() else { continue };
+        if idx >= 5 {
+            return err(format!("unexpected parameter index {idx} in entry"));
+        }
+        let dims = parse_shape(rhs.trim_start())
+            .ok_or_else(|| XlaError(format!("unparseable parameter type in '{line}'")))?;
+        if param_dims[idx].is_some() {
+            return err(format!("duplicate parameter({idx}) in entry"));
+        }
+        param_dims[idx] = Some(dims);
+        param_names.push((lhs.trim_start_matches("ROOT ").trim().to_string(), idx));
+    }
+    if !saw_root {
+        return err("entry computation has no ROOT instruction");
+    }
+    let param_dims: [Vec<usize>; 5] = {
+        let mut out: [Vec<usize>; 5] = Default::default();
+        for (i, d) in param_dims.into_iter().enumerate() {
+            out[i] = d.ok_or_else(|| {
+                XlaError(format!("entry computation lacks parameter({i})"))
+            })?;
+        }
+        out
+    };
+    if param_dims[0].len() != 2 || param_dims[1].len() != 2 || param_dims[2].len() != 2 {
+        return err("operand parameters must be rank 2");
+    }
+    if param_dims[3].as_slice() != [1] || param_dims[4].as_slice() != [1] {
+        return err("alpha/beta parameters must be f32[1]");
+    }
+
+    // Pass 2: operand transposes.  jax lowers `a.T` to
+    //   `  transpose.9 = ... transpose(Arg_0.1), dimensions={1,0}`
+    let mut trans = [false; 2];
+    for line in entry.lines() {
+        let Some(pos) = line.find(" transpose(") else { continue };
+        if !line.contains("dimensions={1,0}") {
+            continue;
+        }
+        let args = &line[pos + " transpose(".len()..];
+        let Some(close_paren) = args.find(')') else { continue };
+        let operand = args[..close_paren].trim();
+        for (name, idx) in &param_names {
+            if operand == name && *idx < 2 {
+                trans[*idx] = true;
+            }
+        }
+    }
+    let (trans_a, trans_b) = (trans[0], trans[1]);
+
+    let (m, n) = (param_dims[2][0], param_dims[2][1]);
+    let k = if trans_a { param_dims[0][0] } else { param_dims[0][1] };
+
+    // Cross-check operand shapes against (m, n, k).
+    let expect_a = if trans_a { vec![k, m] } else { vec![m, k] };
+    let expect_b = if trans_b { vec![n, k] } else { vec![k, n] };
+    if param_dims[0] != expect_a || param_dims[1] != expect_b {
+        return err(format!(
+            "inconsistent GEMM operand shapes: a={:?} b={:?} c={:?} (trans_a={trans_a}, trans_b={trans_b})",
+            param_dims[0], param_dims[1], param_dims[2]
+        ));
+    }
+    Ok(GemmSemantics { param_dims, trans_a, trans_b, m, n, k })
+}
+
+// -------------------------------------------------------------- execution
+
+/// A result buffer handle.
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Ok(self.lit.clone())
+    }
+}
+
+/// A compiled executable: validated GEMM semantics + a reusable f64
+/// accumulator row so the steady-state pooled path never allocates.
+pub struct PjRtLoadedExecutable {
+    sem: GemmSemantics,
+    acc: Mutex<Vec<f64>>,
+}
+
+impl PjRtLoadedExecutable {
+    /// Allocation-free on the success path (the pooled runtime hot path
+    /// calls this every request).
+    fn check_operand(&self, idx: usize, data_len: usize, dims: &[i64]) -> Result<(), XlaError> {
+        let expect = &self.sem.param_dims[idx];
+        let shape_ok = dims.len() == expect.len()
+            && dims.iter().zip(expect).all(|(&d, &e)| d >= 0 && d as usize == e);
+        let count: usize = expect.iter().product();
+        if !shape_ok || data_len != count {
+            return err(format!(
+                "operand {idx}: expected f32{expect:?}, got f32{dims:?} ({data_len} elements)"
+            ));
+        }
+        Ok(())
+    }
+
+    /// The shared kernel loop: `out = alpha * op(A) @ op(B) + beta * C`,
+    /// writing into `out` (cleared + resized, capacity reused).
+    fn run_gemm(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        c: &[f32],
+        alpha: f32,
+        beta: f32,
+        out: &mut Vec<f32>,
+    ) {
+        let GemmSemantics { trans_a, trans_b, m, n, k, .. } = self.sem;
+        out.clear();
+        out.resize(m * n, 0.0);
+        let mut acc = self.acc.lock().unwrap();
+        acc.clear();
+        acc.resize(n, 0.0);
+        for i in 0..m {
+            acc.iter_mut().for_each(|x| *x = 0.0);
+            for l in 0..k {
+                let av = if trans_a { a[l * m + i] } else { a[i * k + l] } as f64;
+                if trans_b {
+                    for j in 0..n {
+                        acc[j] += av * b[j * k + l] as f64;
+                    }
+                } else {
+                    let brow = &b[l * n..(l + 1) * n];
+                    for (j, &bv) in brow.iter().enumerate() {
+                        acc[j] += av * bv as f64;
+                    }
+                }
+            }
+            let crow = &c[i * n..(i + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for ((o, &s), &cv) in orow.iter_mut().zip(acc.iter()).zip(crow) {
+                *o = alpha * s as f32 + beta * cv;
+            }
+        }
+    }
+
+    /// xla-rs-shaped execution: literals in, buffers out (allocating).
+    pub fn execute<T: Borrow<Literal>>(
+        &self,
+        args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        if args.len() != 5 {
+            return err(format!("expected 5 operands, got {}", args.len()));
+        }
+        for (i, arg) in args.iter().enumerate() {
+            let lit = arg.borrow();
+            self.check_operand(i, lit.data.len(), &lit.dims)?;
+        }
+        let (a, b, c) = (args[0].borrow(), args[1].borrow(), args[2].borrow());
+        let alpha = args[3].borrow().data[0];
+        let beta = args[4].borrow().data[0];
+        let mut out = Vec::new();
+        self.run_gemm(&a.data, &b.data, &c.data, alpha, beta, &mut out);
+        let (m, n) = (self.sem.m, self.sem.n);
+        let lit = Literal {
+            dims: vec![m as i64, n as i64],
+            data: out,
+            elements: Vec::new(),
+        };
+        Ok(vec![vec![PjRtBuffer { lit: Literal::tuple(vec![lit]) }]])
+    }
+
+    /// Shim-only zero-allocation execution: borrowed operands, result
+    /// written into `out` (the single tupled f32 output, row-major).
+    /// At steady state (same artifact, same shapes) no heap allocation
+    /// occurs — `out` and the internal accumulator reuse their capacity.
+    pub fn execute_into(
+        &self,
+        operands: &[RawOperand<'_>],
+        out: &mut Vec<f32>,
+    ) -> Result<(), XlaError> {
+        if operands.len() != 5 {
+            return err(format!("expected 5 operands, got {}", operands.len()));
+        }
+        for (i, op) in operands.iter().enumerate() {
+            self.check_operand(i, op.data.len(), op.dims)?;
+        }
+        let alpha = operands[3].data[0];
+        let beta = operands[4].data[0];
+        self.run_gemm(
+            operands[0].data,
+            operands[1].data,
+            operands[2].data,
+            alpha,
+            beta,
+            out,
+        );
+        Ok(())
+    }
+}
+
+// ----------------------------------------------------------------- client
+
+/// The CPU PJRT client.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        let sem = parse_entry(&comp.text)?;
+        Ok(PjRtLoadedExecutable { sem, acc: Mutex::new(Vec::new()) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-written entry mirroring `to_hlo_text` output for a 2x3x4 GEMM
+    /// (m=2, n=3, k=4), no transposes.
+    const PLAIN: &str = "HloModule jit_fn, entry_computation_layout={(f32[2,4]{1,0}, f32[4,3]{1,0}, f32[2,3]{1,0}, f32[1]{0}, f32[1]{0})->(f32[2,3]{1,0})}
+
+helper.1 {
+  Arg_0.2 = f32[2,3]{1,0} parameter(0)
+  ROOT neg.3 = f32[2,3]{1,0} negate(Arg_0.2)
+}
+
+ENTRY main.10 {
+  Arg_0.1 = f32[2,4]{1,0} parameter(0)
+  Arg_1.2 = f32[4,3]{1,0} parameter(1)
+  Arg_2.3 = f32[2,3]{1,0} parameter(2)
+  Arg_3.4 = f32[1]{0} parameter(3)
+  Arg_4.5 = f32[1]{0} parameter(4)
+  dot.6 = f32[2,3]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT tuple.9 = (f32[2,3]{1,0}) tuple(dot.6)
+}
+";
+
+    /// Transposed-A variant: A arrives as f32[4,2] (k x m).
+    const TRANS_A: &str = "HloModule jit_fn
+
+ENTRY main.10 {
+  Arg_0.1 = f32[4,2]{1,0} parameter(0)
+  transpose.6 = f32[2,4]{0,1} transpose(Arg_0.1), dimensions={1,0}
+  Arg_1.2 = f32[4,3]{1,0} parameter(1)
+  Arg_2.3 = f32[2,3]{1,0} parameter(2)
+  Arg_3.4 = f32[1]{0} parameter(3)
+  Arg_4.5 = f32[1]{0} parameter(4)
+  dot.7 = f32[2,3]{1,0} dot(transpose.6, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT tuple.9 = (f32[2,3]{1,0}) tuple(dot.7)
+}
+";
+
+    fn compile(text: &str) -> PjRtLoadedExecutable {
+        PjRtClient::cpu()
+            .unwrap()
+            .compile(&XlaComputation::from_proto(&HloModuleProto::from_text(text)))
+            .unwrap()
+    }
+
+    fn lits(a: &[f32], ad: [i64; 2], b: &[f32], bd: [i64; 2], c: &[f32], cd: [i64; 2], alpha: f32, beta: f32) -> Vec<Literal> {
+        vec![
+            Literal::vec1(a).reshape(&ad).unwrap(),
+            Literal::vec1(b).reshape(&bd).unwrap(),
+            Literal::vec1(c).reshape(&cd).unwrap(),
+            Literal::vec1(&[alpha]),
+            Literal::vec1(&[beta]),
+        ]
+    }
+
+    #[test]
+    fn parses_plain_gemm() {
+        let exe = compile(PLAIN);
+        assert_eq!((exe.sem.m, exe.sem.n, exe.sem.k), (2, 3, 4));
+        assert!(!exe.sem.trans_a && !exe.sem.trans_b);
+    }
+
+    #[test]
+    fn executes_gemm_with_alpha_beta() {
+        let exe = compile(PLAIN);
+        // A = row-major 2x4 of ones; B = 4x3 of twos; C = 2x3 of threes.
+        let a = [1.0f32; 8];
+        let b = [2.0f32; 12];
+        let c = [3.0f32; 6];
+        let bufs = exe
+            .execute::<Literal>(&lits(&a, [2, 4], &b, [4, 3], &c, [2, 3], 0.5, 2.0))
+            .unwrap();
+        let out = bufs[0][0]
+            .to_literal_sync()
+            .unwrap()
+            .to_tuple1()
+            .unwrap()
+            .to_vec::<f32>()
+            .unwrap();
+        // 0.5 * (1*2*4) + 2.0 * 3 = 4 + 6 = 10 everywhere.
+        assert_eq!(out, vec![10.0; 6]);
+    }
+
+    #[test]
+    fn transpose_a_detected_and_applied() {
+        let exe = compile(TRANS_A);
+        assert!(exe.sem.trans_a && !exe.sem.trans_b);
+        assert_eq!((exe.sem.m, exe.sem.n, exe.sem.k), (2, 3, 4));
+        // A^T stored as 4x2: column i of storage is row i of op(A).
+        // op(A) = [[1,2,3,4],[5,6,7,8]] => stored a[l*2 + i].
+        let a = [1.0, 5.0, 2.0, 6.0, 3.0, 7.0, 4.0, 8.0];
+        let b = [1.0f32; 12]; // 4x3 ones
+        let c = [0.0f32; 6];
+        let bufs = exe
+            .execute::<Literal>(&lits(&a, [4, 2], &b, [4, 3], &c, [2, 3], 1.0, 0.0))
+            .unwrap();
+        let out = bufs[0][0]
+            .to_literal_sync()
+            .unwrap()
+            .to_tuple1()
+            .unwrap()
+            .to_vec::<f32>()
+            .unwrap();
+        assert_eq!(out, vec![10.0, 10.0, 10.0, 26.0, 26.0, 26.0]);
+    }
+
+    #[test]
+    fn execute_into_matches_execute_bit_identically() {
+        let exe = compile(PLAIN);
+        let a: Vec<f32> = (0..8).map(|i| i as f32 * 0.37 - 1.0).collect();
+        let b: Vec<f32> = (0..12).map(|i| i as f32 * -0.21 + 0.5).collect();
+        let c: Vec<f32> = (0..6).map(|i| i as f32 * 0.11).collect();
+        let bufs = exe
+            .execute::<Literal>(&lits(&a, [2, 4], &b, [4, 3], &c, [2, 3], 1.25, -0.75))
+            .unwrap();
+        let via_literals = bufs[0][0]
+            .to_literal_sync()
+            .unwrap()
+            .to_tuple1()
+            .unwrap()
+            .to_vec::<f32>()
+            .unwrap();
+        let (ad, bd, cd, sd) = ([2i64, 4], [4i64, 3], [2i64, 3], [1i64]);
+        let alpha = [1.25f32];
+        let beta = [-0.75f32];
+        let ops = [
+            RawOperand { data: &a, dims: &ad },
+            RawOperand { data: &b, dims: &bd },
+            RawOperand { data: &c, dims: &cd },
+            RawOperand { data: &alpha, dims: &sd },
+            RawOperand { data: &beta, dims: &sd },
+        ];
+        let mut out = Vec::new();
+        exe.execute_into(&ops, &mut out).unwrap();
+        assert_eq!(out, via_literals);
+        // Steady state: capacity reused, output identical.
+        let cap = out.capacity();
+        exe.execute_into(&ops, &mut out).unwrap();
+        assert_eq!(out, via_literals);
+        assert_eq!(out.capacity(), cap);
+    }
+
+    #[test]
+    fn rejects_wrong_operand_shapes() {
+        let exe = compile(PLAIN);
+        let a = [0.0f32; 8];
+        let bad = lits(&a, [2, 4], &a, [2, 4], &a[..6], [2, 3], 1.0, 0.0);
+        assert!(exe.execute::<Literal>(&bad).is_err());
+        assert!(exe.execute::<Literal>(&bad[..3]).is_err());
+    }
+
+    #[test]
+    fn rejects_corrupt_hlo() {
+        let client = PjRtClient::cpu().unwrap();
+        for bad in [
+            "",
+            "HloModule x\n\nENTRY main {\n  Arg_0.1 = f32[2,4]{1,0} parameter(0)\n", // truncated
+            &PLAIN[..PLAIN.len() / 3],
+        ] {
+            let comp = XlaComputation::from_proto(&HloModuleProto::from_text(bad));
+            assert!(client.compile(&comp).is_err(), "should reject: {bad:.40}");
+        }
+    }
+
+    #[test]
+    fn literal_reshape_checks_counts() {
+        assert!(Literal::vec1(&[1.0, 2.0]).reshape(&[3, 1]).is_err());
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.dims(), &[2, 2]);
+    }
+
+    #[test]
+    fn from_text_file_errors_on_missing() {
+        assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo.txt").is_err());
+    }
+}
