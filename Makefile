@@ -4,7 +4,7 @@
 ARTIFACTS := rust/artifacts
 ROSTER    := full
 
-.PHONY: artifacts test bench clean-artifacts
+.PHONY: artifacts test bench drift baseline clean-artifacts
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../$(ARTIFACTS) --roster $(ROSTER)
@@ -15,6 +15,17 @@ test:
 bench:
 	cd rust && cargo bench --bench hotpath
 	cd rust && cargo bench --bench selector_overhead
+
+drift:
+	cd rust && cargo run --release --bin adaptd -- drift --requests 48 --waves 3 --reps 1
+
+# Refresh the committed bench-gate baseline from a fresh full run on the
+# reference machine, then remove the "provisional" marker by hand (see
+# README.md) to arm the CI regression gate.
+baseline:
+	cd rust && cargo bench --bench hotpath
+	cp rust/BENCH_hotpath.json rust/BENCH_baseline.json
+	@echo "BENCH_baseline.json refreshed — delete the 'provisional' key if present"
 
 clean-artifacts:
 	rm -rf $(ARTIFACTS)

@@ -12,7 +12,10 @@ use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
-use adaptlib::coordinator::{DefaultPolicy, GemmRequest, GemmServer, ServerConfig};
+use adaptlib::config::KernelConfig;
+use adaptlib::coordinator::{
+    DefaultPolicy, GemmRequest, GemmServer, PolicyHandle, ServerConfig,
+};
 use adaptlib::experiments::e2e;
 use adaptlib::harness::{black_box, BenchConfig, Suite};
 use adaptlib::runtime::{
@@ -168,11 +171,17 @@ fn bench_pjrt(
 ) {
     suite.section("PJRT execution (real kernels)");
     let mut rt = GemmRuntime::open(artifacts).expect("artifacts");
+    let is_direct_128 = |k: &ArtifactKind| {
+        matches!(
+            k,
+            ArtifactKind::Direct { m: 128, n: 128, k: 128, trans_a: false, trans_b: false }
+        )
+    };
     let direct = rt
         .manifest
         .artifacts
         .iter()
-        .find(|a| matches!(a.kind, ArtifactKind::Direct { m: 128, n: 128, k: 128, trans_a: false, trans_b: false }))
+        .find(|a| is_direct_128(&a.kind))
         .expect("128^3 direct artifact")
         .clone();
     let indirect = rt
@@ -236,7 +245,8 @@ fn bench_pjrt(
         black_box(scratch.out[0]);
     });
     println!(
-        "allocs/request indirect 100^3 over {iters} requests: allocating path {:.1}, pooled path {:.1}",
+        "allocs/request indirect 100^3 over {iters} requests: \
+         allocating path {:.1}, pooled path {:.1}",
         alloc_allocating as f64 / iters as f64,
         alloc_pooled as f64 / iters as f64,
     );
@@ -245,11 +255,49 @@ fn bench_pjrt(
         "pooled indirect path must not allocate at steady state \
          ({alloc_pooled} allocations over {iters} requests)"
     );
+
+    // The adaptation loop puts a PolicyHandle in front of every select:
+    // refresh (epoch check) + select + id resolution + pooled execute
+    // must still be allocation-free at steady state, or the hot-swap
+    // machinery would tax every request.  The roster configs come from
+    // the already-open runtime's manifest (no second artifact load).
+    let mut roster: Vec<KernelConfig> =
+        rt.manifest.artifacts.iter().map(|a| a.config).collect();
+    roster.sort_by_key(|c| c.name());
+    roster.dedup();
+    let policy =
+        DefaultPolicy::from_roster(&roster).expect("roster has both kernel kinds");
+    let handle = PolicyHandle::new(std::sync::Arc::new(policy));
+    let mut cached = handle.snapshot();
+    let triple2 = input2.triple();
+    let alloc_pooled_handle = allocs_total(iters, || {
+        handle.refresh(&mut cached);
+        let cfg = cached.select(triple2);
+        let id = rt
+            .manifest
+            .artifact_id_for_config(&cfg, triple2)
+            .or_else(|| rt.manifest.eligible_id(triple2))
+            .expect("triple servable");
+        rt.gemm_pooled(id, &input2, &mut scratch).unwrap();
+        black_box(scratch.out[0]);
+    });
+    println!(
+        "allocs/request with policy handle in place: {:.1}",
+        alloc_pooled_handle as f64 / iters as f64,
+    );
+    assert_eq!(
+        alloc_pooled_handle, 0,
+        "select-through-PolicyHandle must not allocate at steady state"
+    );
     extra.push((
         "allocs_per_request",
         Json::obj(vec![
             ("allocating", Json::num(alloc_allocating as f64 / iters as f64)),
             ("pooled", Json::num(alloc_pooled as f64 / iters as f64)),
+            (
+                "pooled_with_policy_handle",
+                Json::num(alloc_pooled_handle as f64 / iters as f64),
+            ),
             ("iters", Json::num(iters as f64)),
         ]),
     ));

@@ -128,8 +128,14 @@ pub fn parse(
     Ok(args)
 }
 
-/// Render usage text from specs.
-pub fn usage(program: &str, commands: &[(&str, &str)], specs: &[OptSpec]) -> String {
+/// Render usage text from specs.  `switches` are the boolean flags
+/// accepted alongside the value-taking options, with their help text.
+pub fn usage(
+    program: &str,
+    commands: &[(&str, &str)],
+    specs: &[OptSpec],
+    switches: &[(&str, &str)],
+) -> String {
     let mut out = format!("usage: {program} <command> [options]\n\ncommands:\n");
     for (c, h) in commands {
         out.push_str(&format!("  {c:<18} {h}\n"));
@@ -143,6 +149,12 @@ pub fn usage(program: &str, commands: &[(&str, &str)], specs: &[OptSpec]) -> Str
                 .map(|d| format!(" (default: {d})"))
                 .unwrap_or_default();
             out.push_str(&format!("  --{}{val:<10} {}{def}\n", s.name, s.help));
+        }
+    }
+    if !switches.is_empty() {
+        out.push_str("\nswitches:\n");
+        for (name, help) in switches {
+            out.push_str(&format!("  --{name:<16} {help}\n"));
         }
     }
     out
@@ -217,8 +229,17 @@ mod tests {
     }
 
     #[test]
-    fn usage_lists_commands() {
-        let u = usage("adaptd", &[("tune", "run the tuner")], &specs());
+    fn usage_lists_commands_options_and_switches() {
+        let u = usage(
+            "adaptd",
+            &[("tune", "run the tuner")],
+            &specs(),
+            &[("quiet", "suppress progress output")],
+        );
         assert!(u.contains("tune") && u.contains("--device"));
+        assert!(u.contains("switches:") && u.contains("--quiet"));
+        // No switches: the section is omitted entirely.
+        let u = usage("adaptd", &[], &specs(), &[]);
+        assert!(!u.contains("switches:"));
     }
 }

@@ -151,7 +151,10 @@ impl KernelConfig {
             "xgemm_direct" => {
                 Ok(KernelConfig::Direct(DirectParams::from_json(params)?))
             }
-            other => Err(JsonError::Type("kernel name", Box::leak(other.to_string().into_boxed_str()))),
+            other => Err(JsonError::Type(
+                "kernel name",
+                Box::leak(other.to_string().into_boxed_str()),
+            )),
         }
     }
 }

@@ -1,0 +1,361 @@
+//! The coordinator side of the online adaptation loop (ARCHITECTURE.md
+//! §"Online adaptation loop"):
+//!
+//! ```text
+//! shards ──sample──► TelemetryRing ──drain──► OnlineTrainer (dtree::online)
+//!    ▲                                             │ retrain trigger
+//!    └────────── PolicyHandle::swap ◄──────────────┘
+//! ```
+//!
+//! Shards push sampled [`TelemetryRecord`]s into a bounded ring (dropping
+//! the oldest under pressure — telemetry must never backpressure the
+//! serving path).  A background [`AdaptationLoop`] thread periodically
+//! drains the ring, folds the records into the trainer's labeled dataset,
+//! and — when the misprediction-rate trigger fires — retrains the CART
+//! and atomically publishes the new [`ModelPolicy`] through the shared
+//! [`PolicyHandle`].  [`adapt_step`] is the single synchronous iteration,
+//! also driven directly by the drift experiment for determinism.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::config::{KernelConfig, Triple};
+use crate::dtree::{OnlineObservation, OnlineTrainer};
+
+use super::policy::{ModelPolicy, PolicyHandle};
+
+/// One sampled request, as captured on a shard.
+#[derive(Debug, Clone, Copy)]
+pub struct TelemetryRecord {
+    pub triple: Triple,
+    /// Configuration of the artifact that actually served the request
+    /// (after any eligibility fallback), not the raw policy pick.
+    pub served: KernelConfig,
+    /// Measured service seconds (pad + execute; compile excluded).
+    pub service_secs: f64,
+    /// Shadow-measured alternative config, if shadow budget was spent.
+    pub shadow: Option<(KernelConfig, f64)>,
+    /// Policy epoch the request was resolved under.
+    pub epoch: u64,
+    pub shard: usize,
+}
+
+impl TelemetryRecord {
+    pub fn to_observation(&self) -> OnlineObservation {
+        OnlineObservation {
+            triple: self.triple,
+            served: self.served,
+            served_secs: self.service_secs,
+            shadow: self.shadow,
+        }
+    }
+}
+
+/// Bounded MPSC telemetry buffer between the shards and the trainer.
+///
+/// Push takes the mutex only when a request was actually sampled (the
+/// sampling decision itself is shard-local arithmetic), and the ring is
+/// bounded: under pressure the *oldest* record is dropped and counted,
+/// so a stalled trainer can never grow memory or slow a shard.
+pub struct TelemetryRing {
+    inner: Mutex<VecDeque<TelemetryRecord>>,
+    capacity: usize,
+    dropped: AtomicU64,
+    pushed: AtomicU64,
+}
+
+impl TelemetryRing {
+    pub fn new(capacity: usize) -> TelemetryRing {
+        TelemetryRing {
+            inner: Mutex::new(VecDeque::with_capacity(capacity.max(1))),
+            capacity: capacity.max(1),
+            dropped: AtomicU64::new(0),
+            pushed: AtomicU64::new(0),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, VecDeque<TelemetryRecord>> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn push(&self, record: TelemetryRecord) {
+        let mut q = self.lock();
+        if q.len() == self.capacity {
+            q.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        q.push_back(record);
+        self.pushed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Take everything currently buffered.
+    pub fn drain(&self) -> Vec<TelemetryRecord> {
+        self.lock().drain(..).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock().is_empty()
+    }
+
+    /// Records evicted unread because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Records ever pushed (sampled), including later-dropped ones.
+    pub fn pushed(&self) -> u64 {
+        self.pushed.load(Ordering::Relaxed)
+    }
+}
+
+/// Outcome of one synchronous adaptation step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepOutcome {
+    pub drained: usize,
+    pub folded: usize,
+    pub relabeled: usize,
+    pub mispredicted: usize,
+    /// Misprediction rate of the trigger window *before* any reset.
+    pub mispredict_rate: f64,
+    /// Set when the trigger fired: the epoch the retrained policy was
+    /// published under.
+    pub swapped_epoch: Option<u64>,
+}
+
+/// One iteration of the adaptation loop: drain → fold → maybe retrain →
+/// maybe hot-swap.  Synchronous so the drift experiment (and tests) can
+/// interleave it deterministically with request waves; the background
+/// [`AdaptationLoop`] calls exactly this.
+pub fn adapt_step(
+    trainer: &mut OnlineTrainer,
+    ring: &TelemetryRing,
+    handle: &PolicyHandle,
+) -> StepOutcome {
+    let records = ring.drain();
+    let observations: Vec<OnlineObservation> =
+        records.iter().map(|r| r.to_observation()).collect();
+    let fold = trainer.fold(&observations);
+    let mut outcome = StepOutcome {
+        drained: records.len(),
+        folded: fold.folded,
+        relabeled: fold.relabeled,
+        mispredicted: fold.mispredicted,
+        mispredict_rate: trainer.mispredict_rate(),
+        swapped_epoch: None,
+    };
+    if trainer.should_retrain() {
+        trainer.retrain();
+        let policy = ModelPolicy::new(trainer.tree(), &trainer.dataset().classes);
+        outcome.swapped_epoch = Some(handle.swap(Arc::new(policy)));
+    }
+    outcome
+}
+
+/// Aggregate statistics of a running adaptation loop.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AdaptStats {
+    pub steps: u64,
+    pub folded: u64,
+    pub relabeled: u64,
+    pub retrains: u64,
+    pub last_epoch: u64,
+    pub last_mispredict_rate: f64,
+}
+
+impl AdaptStats {
+    fn absorb(&mut self, o: &StepOutcome) {
+        self.steps += 1;
+        self.folded += o.folded as u64;
+        self.relabeled += o.relabeled as u64;
+        if let Some(e) = o.swapped_epoch {
+            self.retrains += 1;
+            self.last_epoch = e;
+        }
+        self.last_mispredict_rate = o.mispredict_rate;
+    }
+}
+
+/// Background trainer thread: wakes every `interval`, runs [`adapt_step`],
+/// and exits (after one final step, so nothing sampled is lost) when the
+/// loop is stopped or the server side drops.
+pub struct AdaptationLoop {
+    stop_tx: mpsc::Sender<()>,
+    thread: JoinHandle<OnlineTrainer>,
+    stats: Arc<Mutex<AdaptStats>>,
+}
+
+impl AdaptationLoop {
+    pub fn spawn(
+        mut trainer: OnlineTrainer,
+        ring: Arc<TelemetryRing>,
+        handle: Arc<PolicyHandle>,
+        interval: Duration,
+    ) -> AdaptationLoop {
+        let (stop_tx, stop_rx) = mpsc::channel::<()>();
+        let stats = Arc::new(Mutex::new(AdaptStats::default()));
+        let stats_thread = Arc::clone(&stats);
+        let thread = std::thread::spawn(move || {
+            loop {
+                let stop = !matches!(
+                    stop_rx.recv_timeout(interval),
+                    Err(mpsc::RecvTimeoutError::Timeout)
+                );
+                let outcome = adapt_step(&mut trainer, &ring, &handle);
+                if let Ok(mut s) = stats_thread.lock() {
+                    s.absorb(&outcome);
+                }
+                if stop {
+                    return trainer;
+                }
+            }
+        });
+        AdaptationLoop { stop_tx, thread, stats }
+    }
+
+    pub fn stats(&self) -> AdaptStats {
+        self.stats
+            .lock()
+            .map(|s| *s)
+            .unwrap_or_default()
+    }
+
+    /// Stop the loop (running one final drain+fold) and recover the
+    /// trainer with its accumulated dataset.
+    pub fn stop(self) -> (OnlineTrainer, AdaptStats) {
+        let _ = self.stop_tx.send(());
+        let trainer = self.thread.join().expect("adaptation thread panicked");
+        let stats = self
+            .stats
+            .lock()
+            .map(|s| *s)
+            .unwrap_or_default();
+        (trainer, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DirectParams, XgemmParams};
+    use crate::dataset::{ClassTable, DatasetKind, LabeledDataset};
+    use crate::dtree::{MinSamples, TrainParams};
+
+    use super::super::policy::SelectPolicy;
+    use super::super::DefaultPolicy;
+
+    fn direct() -> KernelConfig {
+        KernelConfig::Direct(DirectParams::default())
+    }
+
+    fn xgemm() -> KernelConfig {
+        KernelConfig::Xgemm(XgemmParams::default())
+    }
+
+    fn seed_dataset() -> LabeledDataset {
+        let mut classes = ClassTable::new();
+        let c = classes.intern(direct());
+        LabeledDataset {
+            kind: DatasetKind::Po2,
+            device: "sim".into(),
+            entries: (1..=8).map(|i| (Triple::new(i * 32, 32, 32), c)).collect(),
+            classes,
+        }
+    }
+
+    fn trainer() -> OnlineTrainer {
+        let params =
+            TrainParams { max_depth: None, min_samples_leaf: MinSamples::Count(1) };
+        let mut t = OnlineTrainer::new(seed_dataset(), params);
+        t.min_observations = 4;
+        t
+    }
+
+    fn correction(i: u32) -> TelemetryRecord {
+        TelemetryRecord {
+            triple: Triple::new(512 + i * 32, 32, 32),
+            served: direct(),
+            service_secs: 1.0,
+            shadow: Some((xgemm(), 0.2)),
+            epoch: 0,
+            shard: (i % 2) as usize,
+        }
+    }
+
+    #[test]
+    fn ring_bounds_and_counts() {
+        let ring = TelemetryRing::new(2);
+        assert!(ring.is_empty());
+        for i in 0..3 {
+            ring.push(correction(i));
+        }
+        assert_eq!(ring.len(), 2);
+        assert_eq!(ring.dropped(), 1);
+        assert_eq!(ring.pushed(), 3);
+        let drained = ring.drain();
+        assert_eq!(drained.len(), 2);
+        // Oldest was evicted: the survivors are records 1 and 2.
+        assert_eq!(drained[0].triple, Triple::new(512 + 32, 32, 32));
+        assert!(ring.is_empty());
+    }
+
+    #[test]
+    fn adapt_step_retrains_and_swaps_on_sustained_misprediction() {
+        let handle = PolicyHandle::new(Arc::new(DefaultPolicy::clblast()));
+        let ring = TelemetryRing::new(64);
+        let mut tr = trainer();
+        // First step: only two corrections — below min_observations.
+        ring.push(correction(0));
+        ring.push(correction(1));
+        let o = adapt_step(&mut tr, &ring, &handle);
+        assert_eq!((o.drained, o.folded), (2, 2));
+        assert!(o.swapped_epoch.is_none());
+        assert_eq!(handle.epoch(), 0);
+        // Second step crosses the threshold: retrain + hot swap.
+        ring.push(correction(2));
+        ring.push(correction(3));
+        let o = adapt_step(&mut tr, &ring, &handle);
+        assert_eq!(o.swapped_epoch, Some(1));
+        assert_eq!(handle.epoch(), 1);
+        assert!(o.mispredict_rate >= tr.mispredict_threshold);
+        // The published policy is the retrained model and routes the
+        // corrected region to xgemm.
+        let snap = handle.snapshot();
+        assert!(snap.policy.name().starts_with("model:"));
+        assert_eq!(snap.select(Triple::new(600, 32, 32)).kind(), xgemm().kind());
+        // Empty step: nothing drained, no swap.
+        let o = adapt_step(&mut tr, &ring, &handle);
+        assert_eq!((o.drained, o.swapped_epoch), (0, None));
+    }
+
+    #[test]
+    fn adaptation_loop_runs_in_background_and_stops_clean() {
+        let handle = Arc::new(PolicyHandle::new(Arc::new(DefaultPolicy::clblast())));
+        let ring = Arc::new(TelemetryRing::new(64));
+        for i in 0..8 {
+            ring.push(correction(i));
+        }
+        let lp = AdaptationLoop::spawn(
+            trainer(),
+            Arc::clone(&ring),
+            Arc::clone(&handle),
+            Duration::from_millis(5),
+        );
+        // The final step on stop() folds everything even if the interval
+        // never elapsed; spin briefly to let at least one timed step run.
+        std::thread::sleep(Duration::from_millis(30));
+        let (tr, stats) = lp.stop();
+        assert_eq!(stats.folded, 8);
+        assert!(stats.retrains >= 1);
+        assert_eq!(stats.last_epoch, handle.epoch());
+        assert!(handle.epoch() >= 1);
+        assert_eq!(tr.retrains() as u64, stats.retrains);
+        assert!(ring.is_empty());
+    }
+}

@@ -1,12 +1,19 @@
 //! The on-line coordinator (L3): sharded request server with per-artifact
-//! dynamic batching, selection policies (model-driven / default / oracle)
-//! and serving metrics.  See `server` and ARCHITECTURE.md for the
-//! threading topology.
+//! dynamic batching, selection policies (model-driven / default / oracle),
+//! serving metrics, and the online adaptation loop (telemetry tap →
+//! background retrain → atomic policy hot-swap).  See `server`, `adapt`
+//! and ARCHITECTURE.md for the threading topology.
 
+pub mod adapt;
 pub mod metrics;
 pub mod policy;
 pub mod server;
 
+pub use adapt::{
+    adapt_step, AdaptStats, AdaptationLoop, StepOutcome, TelemetryRecord, TelemetryRing,
+};
 pub use metrics::{RequestRecord, ServeStats};
-pub use policy::{DefaultPolicy, ModelPolicy, OraclePolicy, SelectPolicy};
+pub use policy::{
+    CachedPolicy, DefaultPolicy, ModelPolicy, OraclePolicy, PolicyHandle, SelectPolicy,
+};
 pub use server::{GemmRequest, GemmResponse, GemmServer, ServerConfig, ServerHandle};

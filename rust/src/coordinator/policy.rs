@@ -6,6 +6,11 @@
 //!   tuned for the default size, chosen by a threshold cut.
 //! * [`OraclePolicy`] — the tuner peak: per-triple best from the tuning
 //!   database (an upper bound, not deployable without the database).
+//! * [`PolicyHandle`] — the epoch-counted atomic slot the online
+//!   adaptation loop hot-swaps retrained policies through.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::codegen::FlatTree;
 use crate::config::{KernelConfig, KernelKind, Triple};
@@ -125,6 +130,92 @@ impl SelectPolicy for OraclePolicy {
     }
 }
 
+/// A shard-local view of the policy slot: the policy `Arc` plus the epoch
+/// it was published under.  Shards keep one of these and [`refresh`] it at
+/// window boundaries, so every request is resolved against exactly one
+/// policy generation — a swap can never mix configurations within a
+/// request.
+///
+/// [`refresh`]: PolicyHandle::refresh
+#[derive(Clone)]
+pub struct CachedPolicy {
+    /// Epoch the cached policy was published under (monotonic).
+    pub epoch: u64,
+    pub policy: Arc<dyn SelectPolicy>,
+}
+
+impl CachedPolicy {
+    pub fn select(&self, t: Triple) -> KernelConfig {
+        self.policy.select(t)
+    }
+}
+
+/// Epoch-counted atomic policy slot — the `ArcSwap` of the adaptation
+/// loop, built on std only.
+///
+/// The select path stays lock- and allocation-free: a reader holds a
+/// [`CachedPolicy`] and calls [`refresh`](Self::refresh), which is a
+/// single `Acquire` load of the epoch counter.  Only when the epoch has
+/// actually advanced (a retrain published a new policy — rare) does the
+/// reader take the slot mutex to clone the new `Arc`.  Writers
+/// ([`swap`](Self::swap)) bump the epoch strictly monotonically, so
+/// every shard observes a non-decreasing epoch sequence.
+pub struct PolicyHandle {
+    /// Mirror of the slot's epoch for the lock-free fast check.
+    epoch: AtomicU64,
+    /// (epoch, policy), updated together under the lock.
+    slot: Mutex<(u64, Arc<dyn SelectPolicy>)>,
+}
+
+impl PolicyHandle {
+    pub fn new(policy: Arc<dyn SelectPolicy>) -> PolicyHandle {
+        PolicyHandle {
+            epoch: AtomicU64::new(0),
+            slot: Mutex::new((0, policy)),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, (u64, Arc<dyn SelectPolicy>)> {
+        // A panic while holding the lock cannot leave the pair torn (both
+        // fields are written before release), so poisoning is recoverable.
+        self.slot.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Current epoch (0 until the first swap).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Clone the current (epoch, policy) pair.
+    pub fn snapshot(&self) -> CachedPolicy {
+        let g = self.lock();
+        CachedPolicy { epoch: g.0, policy: Arc::clone(&g.1) }
+    }
+
+    /// Bring a shard's cached policy up to date.  Returns `true` if the
+    /// cache was replaced.  Cost when nothing changed (the overwhelmingly
+    /// common case): one atomic load, no lock, no allocation.
+    pub fn refresh(&self, cached: &mut CachedPolicy) -> bool {
+        if self.epoch.load(Ordering::Acquire) == cached.epoch {
+            return false;
+        }
+        let g = self.lock();
+        cached.epoch = g.0;
+        cached.policy = Arc::clone(&g.1);
+        true
+    }
+
+    /// Publish a new policy; returns the new epoch.  Epochs increase by
+    /// exactly one per swap, so they double as a swap counter.
+    pub fn swap(&self, policy: Arc<dyn SelectPolicy>) -> u64 {
+        let mut g = self.lock();
+        g.0 += 1;
+        g.1 = policy;
+        self.epoch.store(g.0, Ordering::Release);
+        g.0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -171,6 +262,45 @@ mod tests {
         assert_eq!(p.xgemm, roster[0]);
         assert_eq!(p.direct, roster[1]);
         assert!(DefaultPolicy::from_roster(&roster[..1].to_vec()).is_none());
+    }
+
+    #[test]
+    fn policy_handle_swap_bumps_epoch_and_refresh_updates() {
+        let handle = PolicyHandle::new(Arc::new(DefaultPolicy::clblast()));
+        assert_eq!(handle.epoch(), 0);
+        let mut cached = handle.snapshot();
+        assert_eq!(cached.epoch, 0);
+        assert_eq!(cached.policy.name(), "default");
+        // No swap: refresh is a no-op.
+        assert!(!handle.refresh(&mut cached));
+
+        let mut db = TuningDb::new("x");
+        db.insert(
+            Triple::new(1, 1, 1),
+            KernelConfig::Direct(DirectParams::default()),
+            1.0,
+        );
+        let oracle = OraclePolicy { db, fallback: DefaultPolicy::clblast() };
+        assert_eq!(handle.swap(Arc::new(oracle)), 1);
+        assert_eq!(handle.epoch(), 1);
+        assert!(handle.refresh(&mut cached));
+        assert_eq!(cached.epoch, 1);
+        assert_eq!(cached.policy.name(), "peak-oracle");
+        // Selection goes through the cached snapshot.
+        let cfg = cached.select(Triple::new(1, 1, 1));
+        assert_eq!(cfg.kind(), KernelKind::XgemmDirect);
+    }
+
+    #[test]
+    fn policy_handle_epochs_strictly_increase() {
+        let handle = PolicyHandle::new(Arc::new(DefaultPolicy::clblast()));
+        let mut last = 0;
+        for _ in 0..5 {
+            let e = handle.swap(Arc::new(DefaultPolicy::clblast()));
+            assert_eq!(e, last + 1);
+            last = e;
+        }
+        assert_eq!(handle.snapshot().epoch, 5);
     }
 
     #[test]

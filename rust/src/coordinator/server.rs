@@ -23,8 +23,9 @@ use anyhow::{anyhow, Result};
 use crate::config::Triple;
 use crate::runtime::{ArtifactId, GemmInput, GemmRuntime, ScratchBuffers};
 
+use super::adapt::{TelemetryRecord, TelemetryRing};
 use super::metrics::{RequestRecord, ServeStats};
-use super::policy::SelectPolicy;
+use super::policy::{CachedPolicy, PolicyHandle, SelectPolicy};
 
 /// An owned GEMM request.
 #[derive(Debug, Clone)]
@@ -52,6 +53,9 @@ pub struct GemmResponse {
     pub artifact: String,
     pub queue: Duration,
     pub service: Duration,
+    /// Policy epoch the request was resolved under (bumped by every
+    /// adaptation hot-swap; 0 until the first swap).
+    pub epoch: u64,
 }
 
 /// Server tuning knobs.
@@ -64,6 +68,15 @@ pub struct ServerConfig {
     /// Dispatcher shards, each exclusively owning a runtime + compile
     /// cache.  Requests are routed round-robin across shards.
     pub shards: usize,
+    /// Fraction of successfully served requests sampled into the
+    /// telemetry ring (0.0 disables the tap entirely).
+    pub telemetry_fraction: f64,
+    /// Shadow-execution budget: fraction of *sampled* requests that also
+    /// execute one alternative artifact (off the response path, after the
+    /// reply is sent) so the trainer can compare configs on live traffic.
+    pub shadow_fraction: f64,
+    /// Telemetry ring capacity (oldest records drop under pressure).
+    pub telemetry_capacity: usize,
 }
 
 impl Default for ServerConfig {
@@ -72,6 +85,9 @@ impl Default for ServerConfig {
             max_batch: 32,
             batch_window: Duration::from_micros(200),
             shards: 1,
+            telemetry_fraction: 0.0,
+            shadow_fraction: 0.0,
+            telemetry_capacity: 4096,
         }
     }
 }
@@ -80,6 +96,17 @@ impl ServerConfig {
     /// Default configuration at a given shard count.
     pub fn with_shards(shards: usize) -> ServerConfig {
         ServerConfig { shards, ..ServerConfig::default() }
+    }
+
+    /// Sharded configuration with the telemetry tap and shadow budget
+    /// enabled — what the adaptation loop serves under.
+    pub fn adaptive(shards: usize, telemetry_fraction: f64, shadow_fraction: f64) -> ServerConfig {
+        ServerConfig {
+            shards,
+            telemetry_fraction,
+            shadow_fraction,
+            ..ServerConfig::default()
+        }
     }
 }
 
@@ -128,6 +155,8 @@ pub struct GemmServer {
     handle: Option<ServerHandle>,
     workers: Vec<JoinHandle<Vec<RequestRecord>>>,
     started: Instant,
+    policy: Arc<PolicyHandle>,
+    telemetry: Arc<TelemetryRing>,
 }
 
 impl GemmServer {
@@ -135,12 +164,17 @@ impl GemmServer {
     /// runtime is *created on its shard's thread* (PJRT handles are not
     /// `Send`); startup errors are reported synchronously through a
     /// ready-channel once every shard has checked in.
+    ///
+    /// The policy is installed into a fresh epoch-counted [`PolicyHandle`]
+    /// ([`policy_handle`](Self::policy_handle)); the adaptation loop
+    /// hot-swaps retrained policies through it while the server runs.
     pub fn start(
         artifacts: &Path,
         policy: Box<dyn SelectPolicy>,
         cfg: ServerConfig,
     ) -> Result<GemmServer> {
-        let policy: Arc<dyn SelectPolicy> = Arc::from(policy);
+        let policy = Arc::new(PolicyHandle::new(Arc::from(policy)));
+        let telemetry = Arc::new(TelemetryRing::new(cfg.telemetry_capacity));
         let n_shards = cfg.shards.max(1);
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
         let mut txs = Vec::with_capacity(n_shards);
@@ -148,12 +182,15 @@ impl GemmServer {
         for shard in 0..n_shards {
             let (tx, rx) = mpsc::channel::<Envelope>();
             txs.push(tx);
-            let dir = artifacts.to_path_buf();
-            let policy = Arc::clone(&policy);
+            let ctx = ShardCtx {
+                shard,
+                dir: artifacts.to_path_buf(),
+                policy: Arc::clone(&policy),
+                telemetry: Arc::clone(&telemetry),
+                cfg,
+            };
             let ready_tx = ready_tx.clone();
-            workers.push(std::thread::spawn(move || {
-                worker_loop(shard, dir, policy, cfg, rx, ready_tx)
-            }));
+            workers.push(std::thread::spawn(move || worker_loop(ctx, rx, ready_tx)));
         }
         drop(ready_tx);
         let handle = ServerHandle {
@@ -180,11 +217,26 @@ impl GemmServer {
             handle: Some(handle),
             workers,
             started: Instant::now(),
+            policy,
+            telemetry,
         })
     }
 
     pub fn handle(&self) -> ServerHandle {
         self.handle.as_ref().expect("server running").clone()
+    }
+
+    /// The epoch-counted policy slot every shard selects through.  Swap
+    /// a retrained policy in via [`PolicyHandle::swap`]; shards pick it
+    /// up at their next window boundary.
+    pub fn policy_handle(&self) -> Arc<PolicyHandle> {
+        Arc::clone(&self.policy)
+    }
+
+    /// The telemetry ring shards sample served requests into (empty
+    /// unless `cfg.telemetry_fraction > 0`).
+    pub fn telemetry(&self) -> Arc<TelemetryRing> {
+        Arc::clone(&self.telemetry)
     }
 
     /// Shut down and collect serving statistics (None if nothing served).
@@ -207,15 +259,49 @@ impl GemmServer {
     }
 }
 
-/// One dispatcher shard: batches, selects, executes on the pooled path.
-fn worker_loop(
+/// Everything a dispatcher shard needs, bundled for the thread spawn.
+struct ShardCtx {
     shard: usize,
     dir: PathBuf,
-    policy: Arc<dyn SelectPolicy>,
+    policy: Arc<PolicyHandle>,
+    telemetry: Arc<TelemetryRing>,
     cfg: ServerConfig,
+}
+
+/// Deterministic fraction sampler: accumulate the fraction per event and
+/// fire on whole-number crossings (no RNG, no state beyond one f64).
+struct FractionSampler {
+    fraction: f64,
+    acc: f64,
+}
+
+impl FractionSampler {
+    fn new(fraction: f64) -> FractionSampler {
+        FractionSampler { fraction: fraction.clamp(0.0, 1.0), acc: 0.0 }
+    }
+
+    fn fire(&mut self) -> bool {
+        if self.fraction <= 0.0 {
+            return false;
+        }
+        self.acc += self.fraction;
+        if self.acc >= 1.0 {
+            self.acc -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// One dispatcher shard: batches, selects, executes on the pooled path,
+/// and feeds the telemetry tap.
+fn worker_loop(
+    ctx: ShardCtx,
     rx: mpsc::Receiver<Envelope>,
     ready_tx: mpsc::Sender<Result<(), String>>,
 ) -> Vec<RequestRecord> {
+    let ShardCtx { shard, dir, policy, telemetry, cfg } = ctx;
     let mut runtime = match GemmRuntime::open(&dir) {
         Ok(r) => {
             let _ = ready_tx.send(Ok(()));
@@ -228,6 +314,16 @@ fn worker_loop(
     };
     drop(ready_tx);
     let mut scratch = ScratchBuffers::new();
+    // Shard-local policy snapshot, refreshed once per window: every
+    // request inside a window is resolved under exactly one policy
+    // epoch, so a concurrent hot-swap can never mix configurations
+    // within a request (or a window).
+    let mut cached: CachedPolicy = policy.snapshot();
+    let mut tele_sampler = FractionSampler::new(cfg.telemetry_fraction);
+    let mut shadow_sampler = FractionSampler::new(cfg.shadow_fraction);
+    // Rotates through the alternative artifacts so repeated shadow runs
+    // on one triple eventually cover every candidate.
+    let mut shadow_rotation = shard; // offset per shard for coverage
     // Records keep the dense id while serving; names are resolved once at
     // shard exit so the hot path does not allocate per-request Strings
     // beyond the response boundary.
@@ -251,6 +347,9 @@ fn worker_loop(
                 Err(_) => break,
             }
         }
+        // Window boundary: pick up a hot-swapped policy if one was
+        // published.  One atomic load when nothing changed.
+        policy.refresh(&mut cached);
         // Resolve each request to a dense artifact id, then group the
         // window by id (stable sort keeps FIFO order within a group) —
         // the dynamic batcher, with no string keys on the hot path.
@@ -258,7 +357,7 @@ fn worker_loop(
             .drain(..)
             .map(|env| {
                 let t = env.req.triple();
-                let cfg_sel = policy.select(t);
+                let cfg_sel = cached.select(t);
                 let id = runtime
                     .manifest
                     .artifact_id_for_config(&cfg_sel, t)
@@ -272,24 +371,19 @@ fn worker_loop(
         for (id, env) in resolved {
             let queue = env.submitted.elapsed();
             let t0 = Instant::now();
+            let mut times = None;
             let result = match id {
                 None => Err(anyhow!("no artifact accepts {}", env.req.triple())),
                 Some(id) => {
-                    let input = GemmInput {
-                        m: env.req.m,
-                        n: env.req.n,
-                        k: env.req.k,
-                        a: &env.req.a,
-                        b: &env.req.b,
-                        c: &env.req.c,
-                        alpha: env.req.alpha,
-                        beta: env.req.beta,
-                    };
+                    let input = gemm_input(&env.req);
                     runtime
                         .gemm_pooled(id, &input, &mut scratch)
                         // The response must outlive the scratch pool: the
                         // copy-out is the one boundary allocation.
-                        .map(|_times| scratch.out.clone())
+                        .map(|t| {
+                            times = Some(t);
+                            scratch.out.clone()
+                        })
                 }
             };
             let service = t0.elapsed();
@@ -297,7 +391,8 @@ fn worker_loop(
                 Some(id) => runtime.manifest.name_of(id).to_string(),
                 None => String::new(),
             };
-            if let (true, Some(id)) = (result.is_ok(), id) {
+            let served_ok = result.is_ok();
+            if let (true, Some(id)) = (served_ok, id) {
                 raw_records.push((id, queue, service, env.req.triple().flops()));
             }
             let _ = env.reply.send(GemmResponse {
@@ -305,7 +400,34 @@ fn worker_loop(
                 artifact,
                 queue,
                 service,
+                epoch: cached.epoch,
             });
+            // Telemetry tap — after the reply, entirely off the response
+            // path.  `times` excludes compile, so the sample is
+            // comparable to the shadow measurement below.
+            if let (true, Some(id), Some(times)) = (served_ok, id, times) {
+                if tele_sampler.fire() {
+                    let shadow = if shadow_sampler.fire() {
+                        shadow_execute(
+                            &mut runtime,
+                            &mut scratch,
+                            id,
+                            &env.req,
+                            &mut shadow_rotation,
+                        )
+                    } else {
+                        None
+                    };
+                    telemetry.push(TelemetryRecord {
+                        triple: env.req.triple(),
+                        served: runtime.manifest.meta(id).config,
+                        service_secs: times.total_time().as_secs_f64(),
+                        shadow,
+                        epoch: cached.epoch,
+                        shard,
+                    });
+                }
+            }
         }
     }
     raw_records
@@ -318,4 +440,54 @@ fn worker_loop(
             flops,
         })
         .collect()
+}
+
+fn gemm_input(req: &GemmRequest) -> GemmInput<'_> {
+    GemmInput {
+        m: req.m,
+        n: req.n,
+        k: req.k,
+        a: &req.a,
+        b: &req.b,
+        c: &req.c,
+        alpha: req.alpha,
+        beta: req.beta,
+    }
+}
+
+/// Spend shadow budget on one request: re-execute it on an *alternative*
+/// eligible artifact (rotating through the candidates) and measure it
+/// under identical operands.  Runs after the reply is sent, so the cost
+/// is shard throughput — the request that was shadowed never waits, but
+/// later requests queued on this shard do; that is exactly the budget
+/// `shadow_fraction` caps.  The candidate scan is allocation-free (two
+/// passes over the small immutable manifest) and the scratch pool is
+/// reused — the response already copied its result out.
+fn shadow_execute(
+    runtime: &mut GemmRuntime,
+    scratch: &mut ScratchBuffers,
+    served: ArtifactId,
+    req: &GemmRequest,
+    rotation: &mut usize,
+) -> Option<(crate::config::KernelConfig, f64)> {
+    let t = req.triple();
+    let n = runtime.manifest.len() as u32;
+    let eligible = |id: &ArtifactId| *id != served && runtime.manifest.meta(*id).accepts(t);
+    let count = (0..n).map(ArtifactId).filter(eligible).count();
+    if count == 0 {
+        return None;
+    }
+    let alt = (0..n)
+        .map(ArtifactId)
+        .filter(eligible)
+        .nth(*rotation % count)
+        .expect("count > rotation index");
+    *rotation = rotation.wrapping_add(1);
+    // Compile outside the measurement, like the served path.
+    runtime.ensure_compiled_id(alt).ok()?;
+    let times = runtime.gemm_pooled(alt, &gemm_input(req), scratch).ok()?;
+    Some((
+        runtime.manifest.meta(alt).config,
+        times.total_time().as_secs_f64(),
+    ))
 }

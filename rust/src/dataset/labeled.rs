@@ -68,6 +68,17 @@ impl ClassTable {
     }
 }
 
+/// What [`LabeledDataset::upsert`] did with the observation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UpsertOutcome {
+    /// New triple appended.
+    Inserted,
+    /// Known triple, label changed.
+    Relabeled,
+    /// Known triple, label already matched.
+    Unchanged,
+}
+
 /// A labeled dataset ready for training.
 #[derive(Debug, Clone)]
 pub struct LabeledDataset {
@@ -89,6 +100,48 @@ impl LabeledDataset {
     /// Subset by index list (train/test split views).
     pub fn subset(&self, idx: &[usize]) -> Vec<(Triple, ClassId)> {
         idx.iter().map(|&i| self.entries[i]).collect()
+    }
+
+    // ------------------------------------------------- online maintenance
+
+    /// Insert or relabel one entry — the telemetry fold-in primitive of
+    /// the online adaptation loop.  A triple appears at most once; folding
+    /// a fresher observation for a known triple *replaces* its label.
+    /// Linear scan: labeled datasets are small (hundreds of triples), and
+    /// this runs on the background trainer thread, never the hot path.
+    ///
+    /// Panics if `class` is not interned in `self.classes`.
+    pub fn upsert(&mut self, t: Triple, class: ClassId) -> UpsertOutcome {
+        assert!(
+            (class as usize) < self.classes.len(),
+            "upsert with un-interned class {class}"
+        );
+        for e in &mut self.entries {
+            if e.0 == t {
+                if e.1 == class {
+                    return UpsertOutcome::Unchanged;
+                }
+                e.1 = class;
+                return UpsertOutcome::Relabeled;
+            }
+        }
+        self.entries.push((t, class));
+        UpsertOutcome::Inserted
+    }
+
+    /// Merge another labeled dataset into this one, re-interning its
+    /// classes (the two tables need not agree on ids).  Entries from
+    /// `other` win on triple collisions — "other" is the fresher data.
+    /// Returns how many entries were inserted or relabeled.
+    pub fn merge_from(&mut self, other: &LabeledDataset) -> usize {
+        let mut changed = 0;
+        for &(t, c) in &other.entries {
+            let class = self.classes.intern(*other.classes.config(c));
+            if self.upsert(t, class) != UpsertOutcome::Unchanged {
+                changed += 1;
+            }
+        }
+        changed
     }
 
     // ------------------------------------------------------- persistence
@@ -210,6 +263,79 @@ mod tests {
         let back = LabeledDataset::load(&path).unwrap();
         assert_eq!(back.entries, d.entries);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn upsert_inserts_relabels_and_dedups() {
+        let mut d = sample();
+        let n0 = d.len();
+        let direct = d
+            .classes
+            .iter()
+            .find(|(_, c)| c.kind() == KernelKind::XgemmDirect)
+            .map(|(id, _)| id)
+            .unwrap();
+        let xgemm = d
+            .classes
+            .iter()
+            .find(|(_, c)| c.kind() == KernelKind::Xgemm)
+            .map(|(id, _)| id)
+            .unwrap();
+        // New triple.
+        let t = Triple::new(7, 7, 7);
+        assert_eq!(d.upsert(t, direct), UpsertOutcome::Inserted);
+        assert_eq!(d.len(), n0 + 1);
+        // Same label again: no change.
+        assert_eq!(d.upsert(t, direct), UpsertOutcome::Unchanged);
+        assert_eq!(d.len(), n0 + 1);
+        // Fresher observation flips the label in place.
+        assert_eq!(d.upsert(t, xgemm), UpsertOutcome::Relabeled);
+        assert_eq!(d.len(), n0 + 1);
+        assert!(d.entries.iter().any(|&(tt, c)| tt == t && c == xgemm));
+    }
+
+    #[test]
+    #[should_panic(expected = "un-interned class")]
+    fn upsert_rejects_unknown_class() {
+        let mut d = sample();
+        d.upsert(Triple::new(1, 1, 1), 99);
+    }
+
+    #[test]
+    fn merge_from_reinterns_classes() {
+        let mut a = sample();
+        // `b` uses its own class table with ids in the opposite order.
+        let mut classes = ClassTable::new();
+        let d = classes.intern(KernelConfig::Direct(DirectParams::default()));
+        let x = classes.intern(KernelConfig::Xgemm(XgemmParams {
+            mwg: 128,
+            ..Default::default()
+        }));
+        let b = LabeledDataset {
+            kind: DatasetKind::Po2,
+            device: "nvidia-p100".into(),
+            entries: vec![
+                // Collides with a's (64,64,64) entry, same config family.
+                (Triple::new(64, 64, 64), d),
+                // New triple with a config unknown to a.
+                (Triple::new(512, 512, 512), x),
+            ],
+            classes,
+        };
+        let n_classes_before = a.classes.len();
+        let changed = a.merge_from(&b);
+        assert_eq!(changed, 1, "only the new triple changes anything");
+        assert_eq!(a.classes.len(), n_classes_before + 1);
+        // The merged entry's class resolves to the same config.
+        let (_, c) = *a
+            .entries
+            .iter()
+            .find(|(t, _)| *t == Triple::new(512, 512, 512))
+            .unwrap();
+        assert_eq!(
+            *a.classes.config(c),
+            KernelConfig::Xgemm(XgemmParams { mwg: 128, ..Default::default() })
+        );
     }
 
     #[test]

@@ -7,7 +7,7 @@ pub mod antonnet;
 pub mod labeled;
 pub mod split;
 
-pub use labeled::{ClassId, ClassTable, LabeledDataset};
+pub use labeled::{ClassId, ClassTable, LabeledDataset, UpsertOutcome};
 pub use split::train_test_split;
 
 use crate::config::Triple;

@@ -10,10 +10,12 @@
 //! which is the paper's deployment argument.
 
 pub mod classifiers;
+pub mod online;
 mod train;
 
 pub use classifiers::{classifier_accuracy, cross_validate, Classifier, KNearest, MajorityClass};
-pub use train::{train, TrainParams};
+pub use online::{FoldReport, OnlineObservation, OnlineTrainer};
+pub use train::{train, train_dataset, TrainParams};
 
 use anyhow::{Context, Result};
 

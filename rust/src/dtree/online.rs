@@ -1,0 +1,271 @@
+//! Online adaptation of the trained model — the closed loop the frozen
+//! paper pipeline lacks: live telemetry (served triple, measured service
+//! time, optional shadow-measured alternative) is folded back into the
+//! labeled dataset, a misprediction-rate trigger decides when the CART is
+//! retrained, and the coordinator hot-swaps the resulting policy (see
+//! `coordinator::adapt`).
+//!
+//! This module is pure model/dataset logic: it knows nothing about
+//! threads, rings, or policies, which keeps it unit-testable without a
+//! runtime and keeps the dependency direction `coordinator -> dtree`.
+
+use crate::config::{KernelConfig, Triple};
+use crate::dataset::{LabeledDataset, UpsertOutcome};
+
+use super::train::{train_dataset, TrainParams};
+use super::DecisionTree;
+
+/// One live observation, distilled from the coordinator's telemetry tap.
+#[derive(Debug, Clone, Copy)]
+pub struct OnlineObservation {
+    pub triple: Triple,
+    /// Configuration that actually served the request.
+    pub served: KernelConfig,
+    /// Measured service seconds of the served configuration (pad + execute,
+    /// compile excluded).
+    pub served_secs: f64,
+    /// Shadow-measured alternative, if the shard spent shadow budget on
+    /// this request: (config, seconds) under identical operands.
+    pub shadow: Option<(KernelConfig, f64)>,
+}
+
+impl OnlineObservation {
+    /// The winning configuration of this observation: the shadow
+    /// alternative if it beat the served config by more than `margin`
+    /// (relative), otherwise the served config.  The margin absorbs
+    /// single-measurement noise so near-ties never flap labels.
+    pub fn winner(&self, margin: f64) -> KernelConfig {
+        match self.shadow {
+            Some((cfg, secs)) if secs * (1.0 + margin) < self.served_secs => cfg,
+            _ => self.served,
+        }
+    }
+}
+
+/// What one [`OnlineTrainer::fold`] call did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FoldReport {
+    /// Observations folded into the dataset.
+    pub folded: usize,
+    /// Entries whose stored label changed (new triples included).
+    pub relabeled: usize,
+    /// Observations where the current tree disagreed with the folded
+    /// label — the numerator of the retrain trigger.
+    pub mispredicted: usize,
+}
+
+/// Incremental dataset maintenance + retrain trigger.
+///
+/// The trainer owns the *living* labeled dataset and the current tree.
+/// [`fold`](Self::fold) merges telemetry (relabeling a triple when a
+/// shadow-measured alternative beat the served config);
+/// [`should_retrain`](Self::should_retrain) fires once the observed
+/// misprediction rate since the last retrain crosses the threshold;
+/// [`retrain`](Self::retrain) rebuilds the CART from the merged dataset.
+pub struct OnlineTrainer {
+    dataset: LabeledDataset,
+    tree: DecisionTree,
+    params: TrainParams,
+    /// Retrain once `mispredicted / seen >= threshold` (default 0.2).
+    pub mispredict_threshold: f64,
+    /// Relative margin a shadow measurement must win by to relabel
+    /// (default 0.05 = 5%).
+    pub shadow_margin: f64,
+    /// Minimum observations since the last retrain before the trigger may
+    /// fire (default 16) — keeps one noisy record from forcing a retrain.
+    pub min_observations: usize,
+    seen: usize,
+    mispredicted: usize,
+    retrains: usize,
+}
+
+impl OnlineTrainer {
+    /// Build from an initial dataset; trains the initial tree eagerly.
+    /// Panics if the dataset is empty (nothing to train on).
+    pub fn new(dataset: LabeledDataset, params: TrainParams) -> OnlineTrainer {
+        assert!(!dataset.is_empty(), "online trainer needs a seed dataset");
+        let tree = train_dataset(&dataset, params);
+        OnlineTrainer {
+            dataset,
+            tree,
+            params,
+            mispredict_threshold: 0.2,
+            shadow_margin: 0.05,
+            min_observations: 16,
+            seen: 0,
+            mispredicted: 0,
+            retrains: 0,
+        }
+    }
+
+    pub fn tree(&self) -> &DecisionTree {
+        &self.tree
+    }
+
+    pub fn dataset(&self) -> &LabeledDataset {
+        &self.dataset
+    }
+
+    /// Observations folded since the last retrain.
+    pub fn observed(&self) -> usize {
+        self.seen
+    }
+
+    pub fn retrains(&self) -> usize {
+        self.retrains
+    }
+
+    /// Misprediction rate since the last retrain (0.0 when nothing seen).
+    pub fn mispredict_rate(&self) -> f64 {
+        if self.seen == 0 {
+            0.0
+        } else {
+            self.mispredicted as f64 / self.seen as f64
+        }
+    }
+
+    /// Fold telemetry into the dataset: each observation's winning config
+    /// becomes (or confirms) the label for its triple.
+    pub fn fold(&mut self, observations: &[OnlineObservation]) -> FoldReport {
+        let mut report = FoldReport::default();
+        for obs in observations {
+            let label = self.dataset.classes.intern(obs.winner(self.shadow_margin));
+            if self.tree.predict(obs.triple) != label {
+                report.mispredicted += 1;
+            }
+            if self.dataset.upsert(obs.triple, label) != UpsertOutcome::Unchanged {
+                report.relabeled += 1;
+            }
+            report.folded += 1;
+        }
+        self.seen += report.folded;
+        self.mispredicted += report.mispredicted;
+        report
+    }
+
+    /// Has the misprediction rate crossed the retrain threshold?
+    pub fn should_retrain(&self) -> bool {
+        self.seen >= self.min_observations
+            && self.mispredict_rate() >= self.mispredict_threshold
+    }
+
+    /// Rebuild the tree from the merged dataset and reset the trigger
+    /// window.  Returns the new tree (also readable via [`tree`](Self::tree)).
+    pub fn retrain(&mut self) -> &DecisionTree {
+        self.tree = train_dataset(&self.dataset, self.params);
+        self.seen = 0;
+        self.mispredicted = 0;
+        self.retrains += 1;
+        &self.tree
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DirectParams, XgemmParams};
+    use crate::dataset::{ClassTable, DatasetKind};
+    use crate::dtree::MinSamples;
+
+    fn direct() -> KernelConfig {
+        KernelConfig::Direct(DirectParams::default())
+    }
+
+    fn xgemm() -> KernelConfig {
+        KernelConfig::Xgemm(XgemmParams::default())
+    }
+
+    /// Seed dataset: everything labeled `direct` — deliberately wrong for
+    /// large triples, so telemetry has something to correct.
+    fn seed() -> LabeledDataset {
+        let mut classes = ClassTable::new();
+        let c = classes.intern(direct());
+        LabeledDataset {
+            kind: DatasetKind::Po2,
+            device: "sim".into(),
+            entries: (1..=8).map(|i| (Triple::new(i * 32, 32, 32), c)).collect(),
+            classes,
+        }
+    }
+
+    fn obs(t: Triple, served: KernelConfig, secs: f64) -> OnlineObservation {
+        OnlineObservation { triple: t, served, served_secs: secs, shadow: None }
+    }
+
+    #[test]
+    fn winner_prefers_shadow_only_beyond_margin() {
+        let t = Triple::new(64, 64, 64);
+        let mut o = obs(t, direct(), 1.0);
+        o.shadow = Some((xgemm(), 0.98)); // within 5% margin: served wins
+        assert_eq!(o.winner(0.05), direct());
+        o.shadow = Some((xgemm(), 0.5)); // clearly faster: shadow wins
+        assert_eq!(o.winner(0.05), xgemm());
+    }
+
+    #[test]
+    fn fold_counts_and_relabels() {
+        let mut tr = OnlineTrainer::new(seed(), TrainParams {
+            max_depth: None,
+            min_samples_leaf: MinSamples::Count(1),
+        });
+        // Confirming observation: served config == current label.
+        let confirm = obs(Triple::new(32, 32, 32), direct(), 1.0);
+        // Correcting observation: big triple actually ran xgemm faster.
+        let mut correct = obs(Triple::new(256, 32, 32), direct(), 1.0);
+        correct.shadow = Some((xgemm(), 0.4));
+        let report = tr.fold(&[confirm, correct]);
+        assert_eq!(report.folded, 2);
+        assert_eq!(report.relabeled, 1);
+        assert_eq!(report.mispredicted, 1);
+        assert!((tr.mispredict_rate() - 0.5).abs() < 1e-12);
+        // The dataset now holds the corrected label.
+        let c_x = tr.dataset().classes.len() - 1;
+        assert!(tr
+            .dataset()
+            .entries
+            .iter()
+            .any(|&(t, c)| t == Triple::new(256, 32, 32) && c as usize == c_x));
+    }
+
+    #[test]
+    fn retrain_trigger_fires_then_resets() {
+        let mut tr = OnlineTrainer::new(seed(), TrainParams {
+            max_depth: None,
+            min_samples_leaf: MinSamples::Count(1),
+        });
+        tr.min_observations = 4;
+        // Four corrections on large triples: 100% misprediction rate.
+        let corrections: Vec<OnlineObservation> = (1..=4)
+            .map(|i| {
+                let mut o = obs(Triple::new(512 + i * 32, 32, 32), direct(), 1.0);
+                o.shadow = Some((xgemm(), 0.2));
+                o
+            })
+            .collect();
+        tr.fold(&corrections);
+        assert!(tr.should_retrain());
+        let before = tr.tree().n_leaves();
+        tr.retrain();
+        assert_eq!(tr.retrains(), 1);
+        assert_eq!(tr.observed(), 0);
+        assert!(!tr.should_retrain());
+        // The retrained tree now routes large triples to xgemm.
+        let c_x = tr.dataset().classes.len() as u32 - 1;
+        assert_eq!(tr.tree().predict(Triple::new(600, 32, 32)), c_x);
+        assert!(tr.tree().n_leaves() >= before);
+    }
+
+    #[test]
+    fn below_min_observations_never_retrains() {
+        let mut tr = OnlineTrainer::new(seed(), TrainParams {
+            max_depth: None,
+            min_samples_leaf: MinSamples::Count(1),
+        });
+        tr.min_observations = 16;
+        let mut o = obs(Triple::new(999, 32, 32), direct(), 1.0);
+        o.shadow = Some((xgemm(), 0.1));
+        tr.fold(&[o]);
+        assert!((tr.mispredict_rate() - 1.0).abs() < 1e-12);
+        assert!(!tr.should_retrain(), "one record must not force a retrain");
+    }
+}

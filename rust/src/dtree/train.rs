@@ -194,6 +194,17 @@ pub fn train(
     DecisionTree { nodes: b.nodes, name: params.name() }
 }
 
+/// Train directly from a labeled dataset — the retrain entry point of the
+/// online adaptation loop (`dtree::online`), which folds telemetry into a
+/// [`LabeledDataset`](crate::dataset::LabeledDataset) and rebuilds the
+/// tree from the merged data.
+pub fn train_dataset(
+    dataset: &crate::dataset::LabeledDataset,
+    params: TrainParams,
+) -> DecisionTree {
+    train(&dataset.entries, dataset.classes.len(), params)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -300,6 +311,28 @@ mod tests {
         for (tr, c) in &data {
             assert_eq!(tree.predict(*tr), *c);
         }
+    }
+
+    #[test]
+    fn train_dataset_matches_train_on_entries() {
+        use crate::config::{DirectParams, KernelConfig, XgemmParams};
+        use crate::dataset::{ClassTable, DatasetKind, LabeledDataset};
+        let mut classes = ClassTable::new();
+        let c0 = classes.intern(KernelConfig::Direct(DirectParams::default()));
+        let c1 = classes.intern(KernelConfig::Xgemm(XgemmParams::default()));
+        let ds = LabeledDataset {
+            kind: DatasetKind::Po2,
+            device: "sim".into(),
+            entries: (1..40)
+                .map(|i| (t(i * 16, 8, 8), if i < 20 { c0 } else { c1 }))
+                .collect(),
+            classes,
+        };
+        let params =
+            TrainParams { max_depth: None, min_samples_leaf: MinSamples::Count(1) };
+        let a = train_dataset(&ds, params);
+        let b = train(&ds.entries, ds.classes.len(), params);
+        assert_eq!(a.nodes, b.nodes);
     }
 
     #[test]

@@ -1,0 +1,496 @@
+//! Drift experiment: does the online adaptation loop recover from a
+//! workload shift the frozen model never saw?
+//!
+//! Phase 0 (offline): measure *every* candidate configuration of both
+//! workload mixes on the real PJRT backend — the resulting per-(triple,
+//! config) performance map is the oracle that selections are scored
+//! against.  The initial model is trained on the **base mix only**,
+//! simulating a deployment whose traffic later shifts.
+//!
+//! Phase 1 (frozen baseline): serve the shifted mix under the frozen
+//! initial model; every selection is scored against the oracle.
+//!
+//! Phase 2 (adaptive): serve the shifted mix in waves through a server
+//! with the telemetry tap and shadow budget enabled, running one
+//! deterministic [`adapt_step`] between waves.  The misprediction trigger
+//! retrains the CART on the folded telemetry and hot-swaps the policy;
+//! later waves are served by the adapted model.
+//!
+//! Scoring is performance-aware (the paper's DTPR idea, §5.2): a served
+//! config's *quality* is its measured GFLOP/s over the triple's peak, and
+//! the selection accuracy is the fraction of requests served within 10%
+//! of peak — robust to near-tie configs that plain label-matching would
+//! score as coin flips.
+//!
+//! The run is summarized in `BENCH_drift.json` (machine-readable, the
+//! CI bench-regression gate input) with `recovered` = the adapted model
+//! beat the frozen baseline on the shifted workload.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context as _, Result};
+
+use crate::config::{KernelConfig, Triple};
+use crate::coordinator::{
+    adapt_step, GemmRequest, GemmServer, ModelPolicy, ServerConfig, ServerHandle,
+    TelemetryRing,
+};
+use crate::dataset::{DatasetKind, LabeledDataset};
+use crate::dtree::{MinSamples, OnlineTrainer, TrainParams};
+use crate::metrics::accuracy;
+use crate::runtime::{Manifest, PjrtBackend};
+use crate::tuner::Backend;
+use crate::util::json::Json;
+
+use super::e2e::request_stream_from;
+
+/// A selection within this factor of peak counts as "good".
+const GOOD_QUALITY: f64 = 0.9;
+
+/// The "deployment era" mix: small shapes, all served exactly by direct
+/// artifacts — the distribution the initial model is trained on.
+pub fn base_mix() -> Vec<Triple> {
+    vec![
+        Triple::new(64, 64, 64),
+        Triple::new(31, 31, 31),
+        Triple::new(100, 100, 1),
+        Triple::new(200, 50, 100),
+        Triple::new(50, 200, 75),
+    ]
+}
+
+/// The post-shift mix: large bucketed shapes the initial model never saw
+/// — best served by configs its class table cannot even name.
+pub fn shifted_mix() -> Vec<Triple> {
+    vec![
+        Triple::new(250, 250, 250),
+        Triple::new(200, 200, 200),
+        Triple::new(256, 256, 256),
+        Triple::new(128, 250, 128),
+        Triple::new(220, 180, 200),
+        Triple::new(256, 128, 256),
+    ]
+}
+
+/// Knobs of the drift run.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftConfig {
+    /// Requests per wave (one adaptation step runs between waves).
+    pub requests_per_wave: usize,
+    /// Waves served on the shifted mix.
+    pub waves: usize,
+    /// Measurement repetitions for the ground-truth oracle.
+    pub reps: usize,
+    pub shards: usize,
+    /// Telemetry sampling fraction during the adaptive phase.
+    pub telemetry_fraction: f64,
+    /// Shadow-execution budget (fraction of sampled requests).
+    pub shadow_fraction: f64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig {
+            requests_per_wave: 32,
+            waves: 3,
+            reps: 1,
+            shards: 1,
+            telemetry_fraction: 1.0,
+            shadow_fraction: 1.0,
+        }
+    }
+}
+
+/// Ground truth: measured GFLOP/s of every candidate config per triple.
+struct Oracle {
+    perf: HashMap<(Triple, KernelConfig), f64>,
+    peak: HashMap<Triple, (KernelConfig, f64)>,
+}
+
+impl Oracle {
+    fn measure_mix(&mut self, backend: &mut PjrtBackend, mix: &[Triple]) -> Result<()> {
+        for &t in mix {
+            for cfg in backend.candidates(t) {
+                let Some(g) = backend.measure(&cfg, t) else { continue };
+                self.perf.insert((t, cfg), g);
+                if self.peak.get(&t).is_none_or(|(_, bg)| g > *bg) {
+                    self.peak.insert(t, (cfg, g));
+                }
+            }
+            anyhow::ensure!(self.peak.contains_key(&t), "no artifact serves {t}");
+        }
+        Ok(())
+    }
+
+    /// Quality of serving `t` with `cfg`: measured GFLOP/s over peak
+    /// (0.0 for a config the oracle never saw run).
+    fn quality(&self, t: Triple, cfg: KernelConfig) -> f64 {
+        let peak = self.peak.get(&t).map(|(_, g)| *g).unwrap_or(f64::INFINITY);
+        self.perf.get(&(t, cfg)).map(|g| g / peak).unwrap_or(0.0)
+    }
+}
+
+/// Serving statistics of one phase or wave, scored against the oracle.
+#[derive(Debug, Clone)]
+pub struct PhaseStats {
+    pub n: usize,
+    /// Fraction of requests served within [`GOOD_QUALITY`] of peak — the
+    /// drift run's selection accuracy.
+    pub accuracy: f64,
+    /// Mean quality (served GFLOP/s / peak GFLOP/s): the DTPR analogue.
+    pub dtpr: f64,
+    pub gflops: f64,
+    pub rps: f64,
+    /// Highest policy epoch observed in the responses.
+    pub epoch_max: u64,
+}
+
+/// One adaptive wave: serving stats plus what the adaptation step did.
+#[derive(Debug, Clone)]
+pub struct WaveStats {
+    pub serve: PhaseStats,
+    pub mispredict_rate: f64,
+    pub relabeled: usize,
+    pub swapped_epoch: Option<u64>,
+}
+
+/// The full drift run.
+pub struct DriftReport {
+    pub cfg: DriftConfig,
+    /// Training accuracy of the initial (base-mix-only) model, as a 0-1
+    /// fraction like every other accuracy in this report.
+    pub initial_train_accuracy: f64,
+    pub frozen: PhaseStats,
+    pub waves: Vec<WaveStats>,
+    pub swaps: u64,
+}
+
+impl DriftReport {
+    /// The post-swap phase: the last wave (served by the adapted model
+    /// once any swap happened).
+    pub fn adapted(&self) -> &PhaseStats {
+        &self.waves.last().expect("at least one wave").serve
+    }
+
+    /// Did adaptation beat the frozen baseline on the shifted workload?
+    /// Requires an actual hot-swap plus a strictly better selection
+    /// accuracy (mean quality breaks ties).
+    pub fn recovered(&self) -> bool {
+        let (a, f) = (self.adapted(), &self.frozen);
+        self.swaps > 0
+            && (a.accuracy > f.accuracy
+                || (a.accuracy == f.accuracy && a.dtpr > f.dtpr))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mix = |ts: &[Triple]| {
+            Json::Arr(
+                ts.iter()
+                    .map(|t| {
+                        Json::Arr(vec![Json::num(t.m), Json::num(t.n), Json::num(t.k)])
+                    })
+                    .collect(),
+            )
+        };
+        let phase = |p: &PhaseStats| {
+            Json::obj(vec![
+                ("n", Json::num(p.n as f64)),
+                ("accuracy", Json::num(p.accuracy)),
+                ("dtpr", Json::num(p.dtpr)),
+                ("gflops", Json::num(p.gflops)),
+                ("rps", Json::num(p.rps)),
+                ("epoch_max", Json::num(p.epoch_max as f64)),
+            ])
+        };
+        Json::obj(vec![
+            ("bench", Json::str("drift")),
+            ("requests_per_wave", Json::num(self.cfg.requests_per_wave as f64)),
+            ("waves", Json::num(self.cfg.waves as f64)),
+            ("shards", Json::num(self.cfg.shards as f64)),
+            ("base_mix", mix(&base_mix())),
+            ("shifted_mix", mix(&shifted_mix())),
+            ("initial_train_accuracy", Json::num(self.initial_train_accuracy)),
+            ("frozen", phase(&self.frozen)),
+            (
+                "adapted_waves",
+                Json::Arr(
+                    self.waves
+                        .iter()
+                        .map(|w| {
+                            Json::obj(vec![
+                                ("serve", phase(&w.serve)),
+                                ("mispredict_rate", Json::num(w.mispredict_rate)),
+                                ("relabeled", Json::num(w.relabeled as f64)),
+                                (
+                                    "swapped_epoch",
+                                    match w.swapped_epoch {
+                                        Some(e) => Json::num(e as f64),
+                                        None => Json::Null,
+                                    },
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("adapted", phase(self.adapted())),
+            ("swaps", Json::num(self.swaps as f64)),
+            ("recovered", Json::Bool(self.recovered())),
+        ])
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "=== Drift experiment: live-telemetry adaptation vs frozen model ===\n\
+             initial model: trained on base mix only, train accuracy {:.0}%\n\
+             shifted mix, frozen policy:  accuracy {:5.1}%  quality {:.3}  {:.2} GFLOP/s\n",
+            100.0 * self.initial_train_accuracy,
+            100.0 * self.frozen.accuracy,
+            self.frozen.dtpr,
+            self.frozen.gflops,
+        );
+        for (i, w) in self.waves.iter().enumerate() {
+            s.push_str(&format!(
+                "wave {i}: accuracy {:5.1}%  quality {:.3}  {:.2} GFLOP/s  \
+                 epoch<={}  mispredict {:.0}%  relabeled {}{}\n",
+                100.0 * w.serve.accuracy,
+                w.serve.dtpr,
+                w.serve.gflops,
+                w.serve.epoch_max,
+                100.0 * w.mispredict_rate,
+                w.relabeled,
+                match w.swapped_epoch {
+                    Some(e) => format!("  -> HOT-SWAP (epoch {e})"),
+                    None => String::new(),
+                },
+            ));
+        }
+        s.push_str(&format!(
+            "adapted (last wave) vs frozen: accuracy {:5.1}% vs {:5.1}%, \
+             quality {:.3} vs {:.3} — {}\n",
+            100.0 * self.adapted().accuracy,
+            100.0 * self.frozen.accuracy,
+            self.adapted().dtpr,
+            self.frozen.dtpr,
+            if self.recovered() { "RECOVERED" } else { "NOT RECOVERED" },
+        ));
+        s
+    }
+
+    /// Write the machine-readable summary (the CI gate input).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+/// Submit a warm request for every mix triple on every shard so compile
+/// time never pollutes a measured wave.
+fn warm(handle: &ServerHandle, mix: &[Triple], shards: usize) {
+    let mut pending = Vec::new();
+    for &t in mix {
+        for _ in 0..shards.max(1) {
+            let (m, n, k) = (t.m as usize, t.n as usize, t.k as usize);
+            pending.push(handle.submit(GemmRequest {
+                m,
+                n,
+                k,
+                a: vec![0.5; m * k],
+                b: vec![0.5; k * n],
+                c: vec![0.0; m * n],
+                alpha: 1.0,
+                beta: 0.0,
+            }));
+        }
+    }
+    for rx in pending {
+        let _ = rx.recv();
+    }
+}
+
+/// Shards push telemetry *after* replying (and after any shadow GEMM),
+/// so the tap lags the last response.  Wait for it so every adapt step
+/// folds the complete wave — `expected` is exact when the sampling
+/// fraction is 1.0; otherwise fall back to waiting for the tap to go
+/// quiet.
+fn await_tap(telemetry: &TelemetryRing, expected: Option<u64>) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    match expected {
+        Some(target) => {
+            while telemetry.pushed() < target && Instant::now() < deadline {
+                std::thread::yield_now();
+            }
+        }
+        None => {
+            let mut last = telemetry.pushed();
+            let mut quiet = Instant::now();
+            while Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(5));
+                let now = telemetry.pushed();
+                if now != last {
+                    last = now;
+                    quiet = Instant::now();
+                } else if quiet.elapsed() >= Duration::from_millis(100) {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Expected pushed() total after `n` more sampled requests, exact only
+/// at full sampling.
+fn expected_after(telemetry: &TelemetryRing, fraction: f64, n: usize) -> Option<u64> {
+    (fraction >= 1.0).then(|| telemetry.pushed() + n as u64)
+}
+
+/// Serve one wave and score every response against the oracle.
+fn serve_wave(
+    handle: &ServerHandle,
+    manifest: &Manifest,
+    oracle: &Oracle,
+    requests: Vec<GemmRequest>,
+) -> Result<PhaseStats> {
+    let n = requests.len();
+    let total_flops: f64 = requests.iter().map(|r| r.triple().flops()).sum();
+    let t0 = Instant::now();
+    let pending: Vec<_> = requests
+        .into_iter()
+        .map(|r| {
+            let t = r.triple();
+            (t, handle.submit(r))
+        })
+        .collect();
+    let mut good = 0usize;
+    let mut quality_sum = 0.0;
+    let mut epoch_max = 0u64;
+    for (t, rx) in pending {
+        let resp = rx.recv().map_err(|_| anyhow::anyhow!("server dropped"))?;
+        resp.out.context("request failed")?;
+        epoch_max = epoch_max.max(resp.epoch);
+        let served = manifest
+            .find(&resp.artifact)
+            .map(|a| a.config)
+            .context("response names unknown artifact")?;
+        let q = oracle.quality(t, served);
+        quality_sum += q;
+        if q >= GOOD_QUALITY {
+            good += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(PhaseStats {
+        n,
+        accuracy: if n == 0 { 0.0 } else { good as f64 / n as f64 },
+        dtpr: if n == 0 { 0.0 } else { quality_sum / n as f64 },
+        gflops: total_flops / wall / 1e9,
+        rps: n as f64 / wall,
+        epoch_max,
+    })
+}
+
+/// Run the full drift experiment.  Returns the report; the caller decides
+/// where to persist it.
+pub fn run(artifacts: &Path, cfg: DriftConfig) -> Result<DriftReport> {
+    // ------------------------------------------------ phase 0: offline
+    let mut backend = PjrtBackend::open(artifacts)?;
+    backend.reps = cfg.reps.max(1);
+    let mut oracle = Oracle { perf: HashMap::new(), peak: HashMap::new() };
+    oracle.measure_mix(&mut backend, &base_mix())?;
+    // The shifted mix is measured into the oracle for scoring only — the
+    // initial model and its dataset never see it.
+    oracle.measure_mix(&mut backend, &shifted_mix())?;
+    drop(backend);
+
+    let mut initial = LabeledDataset {
+        kind: DatasetKind::Po2,
+        device: "host-cpu".into(),
+        entries: Vec::new(),
+        classes: Default::default(),
+    };
+    for t in base_mix() {
+        let (best, _) = oracle.peak[&t];
+        let class = initial.classes.intern(best);
+        initial.entries.push((t, class));
+    }
+    let params =
+        TrainParams { max_depth: None, min_samples_leaf: MinSamples::Count(1) };
+    let mut trainer = OnlineTrainer::new(initial, params);
+    trainer.min_observations = (cfg.requests_per_wave / 2).clamp(4, 64);
+    // As a 0-1 fraction, like every other accuracy in the drift report
+    // (metrics::accuracy reports percent).
+    let initial_train_accuracy =
+        accuracy(trainer.tree(), &trainer.dataset().entries) / 100.0;
+
+    let manifest = Manifest::load(artifacts)?;
+    let shifted = shifted_mix();
+
+    // ------------------------------------------- phase 1: frozen model
+    let frozen = {
+        let server = GemmServer::start(
+            artifacts,
+            Box::new(ModelPolicy::new(trainer.tree(), &trainer.dataset().classes)),
+            ServerConfig::with_shards(cfg.shards),
+        )?;
+        let handle = server.handle();
+        warm(&handle, &shifted, cfg.shards);
+        let n = cfg.requests_per_wave * cfg.waves.max(1);
+        let stats = serve_wave(
+            &handle,
+            &manifest,
+            &oracle,
+            request_stream_from(&shifted, n, 0xD21F7),
+        )?;
+        drop(handle);
+        let _ = server.shutdown();
+        stats
+    };
+
+    // ---------------------------------------- phase 2: adaptation loop
+    let server = GemmServer::start(
+        artifacts,
+        Box::new(ModelPolicy::new(trainer.tree(), &trainer.dataset().classes)),
+        ServerConfig::adaptive(cfg.shards, cfg.telemetry_fraction, cfg.shadow_fraction),
+    )?;
+    let handle = server.handle();
+    let policy_handle = server.policy_handle();
+    let telemetry = server.telemetry();
+    let warm_expected =
+        expected_after(&telemetry, cfg.telemetry_fraction, shifted.len() * cfg.shards.max(1));
+    warm(&handle, &shifted, cfg.shards);
+    // Warm-up traffic is not training signal: wait for its tail pushes,
+    // then drop everything it sampled.
+    await_tap(&telemetry, warm_expected);
+    let _ = telemetry.drain();
+
+    let mut waves = Vec::with_capacity(cfg.waves);
+    let mut swaps = 0u64;
+    for wave in 0..cfg.waves.max(1) {
+        let requests =
+            request_stream_from(&shifted, cfg.requests_per_wave, 0xADA7 + wave as u64);
+        let expected =
+            expected_after(&telemetry, cfg.telemetry_fraction, cfg.requests_per_wave);
+        let serve = serve_wave(&handle, &manifest, &oracle, requests)?;
+        // Deterministic adaptation step between waves (the background
+        // AdaptationLoop drives the same function on a timer in a
+        // long-running deployment).  Wait for the wave's trailing
+        // telemetry pushes first so the fold sees the complete wave.
+        await_tap(&telemetry, expected);
+        let outcome = adapt_step(&mut trainer, &telemetry, &policy_handle);
+        if outcome.swapped_epoch.is_some() {
+            swaps += 1;
+        }
+        waves.push(WaveStats {
+            serve,
+            mispredict_rate: outcome.mispredict_rate,
+            relabeled: outcome.relabeled,
+            swapped_epoch: outcome.swapped_epoch,
+        });
+    }
+    drop(handle);
+    let _ = server.shutdown();
+
+    Ok(DriftReport { cfg, initial_train_accuracy, frozen, waves, swaps })
+}

@@ -84,11 +84,17 @@ pub fn offline_train(artifacts: &Path, reps: usize) -> Result<E2eModel> {
 
 /// Build a deterministic request stream over the workload triples.
 pub fn request_stream(n: usize, seed: u64) -> Vec<GemmRequest> {
-    let triples = workload_triples();
+    request_stream_from(&workload_triples(), n, seed)
+}
+
+/// Build a deterministic request stream over an explicit triple mix —
+/// the drift experiment switches mixes mid-run through this.
+pub fn request_stream_from(triples: &[Triple], n: usize, seed: u64) -> Vec<GemmRequest> {
+    assert!(!triples.is_empty(), "request stream needs a triple mix");
     let mut rng = Rng::new(seed);
     (0..n)
         .map(|_| {
-            let t = *rng.choose(&triples);
+            let t = *rng.choose(triples);
             let (m, n_, k) = (t.m as usize, t.n as usize, t.k as usize);
             let gen = |rng: &mut Rng, len: usize| -> Vec<f32> {
                 (0..len).map(|_| rng.f32() - 0.5).collect()

@@ -3,6 +3,7 @@
 
 pub mod ablation;
 pub mod context;
+pub mod drift;
 pub mod e2e;
 pub mod figures;
 pub mod microbench;

@@ -9,6 +9,8 @@
 //! adaptd codegen   --device ... --dataset ... --model hMax-L1 --lang <rust|cpp>
 //! adaptd e2e       --artifacts artifacts --requests 400
 //! adaptd serve-demo --artifacts artifacts --requests 200 --policy <model|default>
+//! adaptd drift     --artifacts artifacts --requests 32 --waves 3
+//! adaptd bench-compare --baseline BENCH_baseline.json --current BENCH_hotpath.json
 //! adaptd info      --artifacts artifacts
 //! ```
 
@@ -26,18 +28,40 @@ use adaptlib::runtime::GemmRuntime;
 use adaptlib::tuner::{Backend, SimBackend, Tuner, TuningDb};
 use adaptlib::device::DeviceProfile;
 
+fn opt(
+    name: &'static str,
+    help: &'static str,
+    default: Option<&'static str>,
+) -> OptSpec {
+    OptSpec { name, help, takes_value: true, default }
+}
+
 fn opt_specs() -> Vec<OptSpec> {
     vec![
-        OptSpec { name: "device", help: "device profile (p100|mali|cpu)", takes_value: true, default: Some("p100") },
-        OptSpec { name: "dataset", help: "dataset (po2|go2|antonnet)", takes_value: true, default: Some("po2") },
-        OptSpec { name: "model", help: "model name, e.g. hMax-L1", takes_value: true, default: Some("hMax-L1") },
-        OptSpec { name: "lang", help: "codegen language (rust|cpp)", takes_value: true, default: Some("rust") },
-        OptSpec { name: "out", help: "output file/directory", takes_value: true, default: None },
-        OptSpec { name: "artifacts", help: "artifact directory", takes_value: true, default: Some("artifacts") },
-        OptSpec { name: "requests", help: "number of requests to serve", takes_value: true, default: Some("200") },
-        OptSpec { name: "reps", help: "tuner measurement repetitions", takes_value: true, default: Some("3") },
-        OptSpec { name: "policy", help: "serving policy (model|default)", takes_value: true, default: Some("model") },
-        OptSpec { name: "shards", help: "dispatcher shards for serving", takes_value: true, default: Some("1") },
+        opt("device", "device profile (p100|mali|cpu)", Some("p100")),
+        opt("dataset", "dataset (po2|go2|antonnet)", Some("po2")),
+        opt("model", "model name, e.g. hMax-L1", Some("hMax-L1")),
+        opt("lang", "codegen language (rust|cpp)", Some("rust")),
+        opt("out", "output file/directory", None),
+        opt("artifacts", "artifact directory", Some("artifacts")),
+        opt("requests", "number of requests to serve (per wave for drift)", Some("200")),
+        opt("reps", "tuner measurement repetitions", Some("3")),
+        opt("policy", "serving policy (model|default)", Some("model")),
+        opt("shards", "dispatcher shards for serving", Some("1")),
+        opt("waves", "drift: adaptation waves on the shifted mix", Some("3")),
+        opt("sample", "drift: telemetry sampling fraction", Some("1.0")),
+        opt("shadow", "drift: shadow-execution budget fraction", Some("1.0")),
+        opt("baseline", "bench-compare: committed baseline JSON", None),
+        opt("current", "bench-compare: freshly produced bench JSON", None),
+        opt("tolerance", "bench-compare: relative regression tolerance", Some("0.15")),
+    ]
+}
+
+fn switch_specs() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("quiet", "suppress progress output"),
+        ("verbose", "print per-step progress"),
+        ("require-recovered", "bench-compare: fail unless current reports recovered=true"),
     ]
 }
 
@@ -49,6 +73,8 @@ fn commands() -> Vec<(&'static str, &'static str)> {
         ("codegen", "emit the if-then-else selector source for a model"),
         ("e2e", "end-to-end adaptive serving on the CPU PJRT runtime"),
         ("serve-demo", "serve a request stream under one policy"),
+        ("drift", "workload-shift experiment: online adaptation vs frozen model"),
+        ("bench-compare", "diff bench JSONs and fail on perf regressions"),
         ("info", "describe the artifact roster"),
     ]
 }
@@ -75,7 +101,7 @@ fn parse_model_name(s: &str) -> Result<TrainParams> {
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
-        print!("{}", cli::usage("adaptd", &commands(), &opt_specs()));
+        print!("{}", cli::usage("adaptd", &commands(), &opt_specs(), &switch_specs()));
         return;
     }
     if let Err(e) = run(&argv) {
@@ -85,7 +111,8 @@ fn main() {
 }
 
 fn run(argv: &[String]) -> Result<()> {
-    let args = cli::parse(argv, &opt_specs(), &["quiet", "verbose"], 2)?;
+    let switches: Vec<&str> = switch_specs().iter().map(|(n, _)| *n).collect();
+    let args = cli::parse(argv, &opt_specs(), &switches, 2)?;
     let cmd = args.command.first().map(String::as_str).unwrap_or("");
     match cmd {
         "exp" => cmd_exp(&args),
@@ -94,9 +121,13 @@ fn run(argv: &[String]) -> Result<()> {
         "codegen" => cmd_codegen(&args),
         "e2e" => cmd_e2e(&args),
         "serve-demo" => cmd_serve_demo(&args),
+        "drift" => cmd_drift(&args),
+        "bench-compare" => cmd_bench_compare(&args),
         "info" => cmd_info(&args),
-        other => bail!("unknown command '{other}'\n{}",
-                       cli::usage("adaptd", &commands(), &opt_specs())),
+        other => bail!(
+            "unknown command '{other}'\n{}",
+            cli::usage("adaptd", &commands(), &opt_specs(), &switch_specs())
+        ),
     }
 }
 
@@ -272,6 +303,91 @@ fn cmd_serve_demo(args: &cli::Args) -> Result<()> {
         ServerConfig::with_shards(shards),
     )?;
     println!("{}", stats.report());
+    Ok(())
+}
+
+/// Workload-shift experiment: frozen model vs the online adaptation loop
+/// on the same shifted traffic; writes the machine-readable summary the
+/// CI bench gate consumes.
+fn cmd_drift(args: &cli::Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    // The in-code fallbacks mirror the OptSpec defaults (cli::parse
+    // pre-populates those, so these only document the effective values).
+    let cfg = experiments::drift::DriftConfig {
+        requests_per_wave: args.get_parse("requests", 200)?,
+        waves: args.get_parse("waves", 3)?,
+        reps: args.get_parse("reps", 3)?,
+        shards: args.get_parse("shards", 1)?,
+        telemetry_fraction: args.get_parse("sample", 1.0)?,
+        shadow_fraction: args.get_parse("shadow", 1.0)?,
+    };
+    let report = experiments::drift::run(&artifacts, cfg)?;
+    println!("{}", report.render());
+    let out = PathBuf::from(args.get_or("out", "BENCH_drift.json"));
+    report.save(&out)?;
+    eprintln!("wrote {}", out.display());
+    Ok(())
+}
+
+/// The CI bench-regression gate: diff a fresh bench summary against the
+/// committed baseline and exit non-zero on regressions beyond tolerance.
+fn cmd_bench_compare(args: &cli::Args) -> Result<()> {
+    use adaptlib::util::benchcmp;
+    use adaptlib::util::json::Json;
+    let current = args
+        .get("current")
+        .context("bench-compare requires --current <fresh bench JSON>")?;
+    let tolerance: f64 = args.get_parse("tolerance", 0.15)?;
+    let require_recovered = args.has("require-recovered");
+
+    if require_recovered {
+        let text = std::fs::read_to_string(current)
+            .with_context(|| format!("reading {current}"))?;
+        let json = Json::parse(&text)?;
+        let recovered = json
+            .get("recovered")
+            .ok()
+            .and_then(|r| r.as_bool().ok())
+            .context("--require-recovered: current file has no 'recovered' bool")?;
+        if !recovered {
+            bail!("{current}: drift experiment did not recover (recovered=false)");
+        }
+        println!("{current}: recovered=true");
+    }
+
+    let Some(baseline) = args.get("baseline") else {
+        // Recovery-only invocation (drift files have no baseline).
+        anyhow::ensure!(
+            require_recovered,
+            "bench-compare requires --baseline (or --require-recovered)"
+        );
+        return Ok(());
+    };
+    let diff = benchcmp::compare_files(baseline, current, tolerance)?;
+    for line in &diff.lines {
+        println!("  {line}");
+    }
+    println!(
+        "compared {} metric(s) against {baseline} (tolerance {:.0}%)",
+        diff.compared,
+        tolerance * 100.0
+    );
+    if diff.regressions.is_empty() {
+        println!("no regressions beyond tolerance");
+    } else {
+        let verdict = if diff.provisional {
+            "WARNING (provisional baseline — not failing; see README to refresh)"
+        } else {
+            "REGRESSION"
+        };
+        for r in &diff.regressions {
+            eprintln!("{verdict}: {r}");
+        }
+    }
+    // The verdict itself lives (and is unit-tested) in BenchDiff.
+    if !diff.passes() {
+        bail!("{} bench regression(s) beyond tolerance", diff.regressions.len());
+    }
     Ok(())
 }
 

@@ -118,7 +118,10 @@ pub fn assert_prop<S: Strategy>(
     match check(cfg, strategy, prop) {
         PropResult::Ok { .. } => {}
         PropResult::Failed { minimal, cases, message } => {
-            panic!("property failed after {cases} cases; minimal counterexample: {minimal:?}: {message}");
+            panic!(
+                "property failed after {cases} cases; \
+                 minimal counterexample: {minimal:?}: {message}"
+            );
         }
     }
 }

@@ -1,0 +1,290 @@
+//! Bench-regression comparison: diff a committed baseline
+//! (`BENCH_baseline.json`) against a freshly produced bench summary
+//! (`BENCH_hotpath.json`, `BENCH_drift.json`) and flag regressions beyond
+//! a tolerance — the core of the `adaptd bench-compare` CI gate.
+//!
+//! Comparable metrics (anything absent from either side is skipped, and
+//! the comparison fails if *nothing* was comparable — a silent no-op gate
+//! is worse than none):
+//!
+//! * `results[].median_s` by result name — regression when the fresh
+//!   median is more than `tolerance` slower;
+//! * `shard_scaling[].{rps,gflops}` by shard count — regression when the
+//!   fresh throughput is more than `tolerance` lower;
+//! * `allocs_per_request.pooled` — regression on *any* increase (the
+//!   zero-allocation gate: 0 must stay 0);
+//! * `recovered` (drift runs) — regression when the fresh run says
+//!   `false`.
+//!
+//! A baseline marked `"provisional": true` (committed before real runner
+//! numbers exist) reports regressions as warnings instead of failures;
+//! see README.md for how to refresh it.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Outcome of one baseline/current comparison.
+#[derive(Debug, Clone)]
+pub struct BenchDiff {
+    /// Human-readable comparison rows (one per compared metric).
+    pub lines: Vec<String>,
+    /// Regressions beyond tolerance (empty = gate passes).
+    pub regressions: Vec<String>,
+    /// Number of metrics compared.
+    pub compared: usize,
+    /// Baseline was marked provisional: report, don't fail.
+    pub provisional: bool,
+}
+
+impl BenchDiff {
+    /// Gate verdict: fail on real (non-provisional) regressions — and
+    /// *always* fail when nothing was comparable: a provisional marker
+    /// must not turn a structurally broken comparison into a green gate.
+    pub fn passes(&self) -> bool {
+        self.compared > 0 && (self.provisional || self.regressions.is_empty())
+    }
+}
+
+fn num_at(v: &Json, key: &str) -> Option<f64> {
+    v.get(key).ok().and_then(|j| j.as_f64().ok())
+}
+
+/// results[] -> name -> median_s
+fn results_map(v: &Json) -> BTreeMap<String, f64> {
+    let mut map = BTreeMap::new();
+    if let Ok(arr) = v.get("results").and_then(|r| r.as_arr()) {
+        for r in arr {
+            if let (Ok(name), Some(med)) =
+                (r.get("name").and_then(|n| n.as_str()), num_at(r, "median_s"))
+            {
+                map.insert(name.to_string(), med);
+            }
+        }
+    }
+    map
+}
+
+/// shard_scaling[] -> shards -> (rps, gflops)
+fn scaling_map(v: &Json) -> BTreeMap<u64, (f64, f64)> {
+    let mut map = BTreeMap::new();
+    if let Ok(arr) = v.get("shard_scaling").and_then(|r| r.as_arr()) {
+        for r in arr {
+            if let (Some(s), Some(rps), Some(g)) =
+                (num_at(r, "shards"), num_at(r, "rps"), num_at(r, "gflops"))
+            {
+                map.insert(s as u64, (rps, g));
+            }
+        }
+    }
+    map
+}
+
+/// Compare `current` against `baseline` with a relative `tolerance`
+/// (0.15 = fail beyond 15%).
+pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> BenchDiff {
+    let provisional = baseline
+        .get("provisional")
+        .ok()
+        .and_then(|p| p.as_bool().ok())
+        .unwrap_or(false);
+    let mut diff = BenchDiff {
+        lines: Vec::new(),
+        regressions: Vec::new(),
+        compared: 0,
+        provisional,
+    };
+
+    // Timed results: lower is better.
+    let base_results = results_map(baseline);
+    let cur_results = results_map(current);
+    for (name, base) in &base_results {
+        let Some(cur) = cur_results.get(name) else { continue };
+        diff.compared += 1;
+        let ratio = cur / base;
+        let delta = 100.0 * (ratio - 1.0);
+        diff.lines.push(format!(
+            "{name}: {base:.3e}s -> {cur:.3e}s ({delta:+.1}%)"
+        ));
+        if ratio > 1.0 + tolerance {
+            diff.regressions.push(format!(
+                "{name}: median {delta:+.1}% slower (tolerance {:.0}%)",
+                tolerance * 100.0
+            ));
+        }
+    }
+
+    // Shard scaling: higher is better.
+    let base_scaling = scaling_map(baseline);
+    let cur_scaling = scaling_map(current);
+    for (shards, (base_rps, base_gflops)) in &base_scaling {
+        let Some((cur_rps, cur_gflops)) = cur_scaling.get(shards) else { continue };
+        for (metric, base, cur) in [
+            ("rps", base_rps, cur_rps),
+            ("gflops", base_gflops, cur_gflops),
+        ] {
+            diff.compared += 1;
+            let delta = 100.0 * (cur / base - 1.0);
+            diff.lines.push(format!(
+                "shards={shards} {metric}: {base:.1} -> {cur:.1} ({delta:+.1}%)"
+            ));
+            if *cur < *base * (1.0 - tolerance) {
+                diff.regressions.push(format!(
+                    "shards={shards} {metric}: throughput {delta:+.1}% \
+                     (tolerance -{:.0}%)",
+                    tolerance * 100.0
+                ));
+            }
+        }
+    }
+
+    // Zero-allocation gates: any increase is a regression, on both the
+    // bare pooled path and the pooled-behind-a-PolicyHandle path.
+    for key in ["pooled", "pooled_with_policy_handle"] {
+        let base = baseline
+            .get("allocs_per_request")
+            .ok()
+            .and_then(|a| num_at(a, key));
+        let cur = current
+            .get("allocs_per_request")
+            .ok()
+            .and_then(|a| num_at(a, key));
+        let (Some(base), Some(cur)) = (base, cur) else { continue };
+        diff.compared += 1;
+        diff.lines
+            .push(format!("allocs/request {key}: {base:.1} -> {cur:.1}"));
+        if cur > base + 1e-9 {
+            diff.regressions.push(format!(
+                "{key} path allocates again: {base:.1} -> {cur:.1} allocs/request"
+            ));
+        }
+    }
+
+    // Drift recovery: the fresh run must not report a lost recovery.
+    if let Ok(rec) = current.get("recovered").and_then(|r| r.as_bool()) {
+        diff.compared += 1;
+        diff.lines.push(format!("drift recovered: {rec}"));
+        if !rec {
+            diff.regressions
+                .push("drift experiment did not recover post-swap".to_string());
+        }
+    }
+
+    if diff.compared == 0 {
+        diff.regressions.push(
+            "no comparable metrics between baseline and current — \
+             refusing to pass an empty gate"
+                .to_string(),
+        );
+    }
+    diff
+}
+
+/// Load + compare two bench JSON files.
+pub fn compare_files(baseline: &str, current: &str, tolerance: f64) -> Result<BenchDiff> {
+    let read = |p: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?;
+        Json::parse(&text).with_context(|| format!("parsing {p}"))
+    };
+    Ok(compare(&read(baseline)?, &read(current)?, tolerance))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bench_json(median: f64, gflops: f64, pooled: f64) -> Json {
+        Json::parse(&format!(
+            r#"{{"bench":"hotpath",
+                 "results":[{{"name":"gemm:direct:128^3","median_s":{median}}}],
+                 "shard_scaling":[{{"shards":1,"rps":100.0,"gflops":{gflops}}}],
+                 "allocs_per_request":{{"allocating":60.0,"pooled":{pooled},
+                                        "pooled_with_policy_handle":{pooled}}}}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn identical_runs_pass() {
+        let base = bench_json(1e-4, 5.0, 0.0);
+        let diff = compare(&base, &base, 0.15);
+        assert!(diff.passes());
+        assert!(diff.regressions.is_empty());
+        // 1 result + 2 scaling + 2 alloc gates.
+        assert_eq!(diff.compared, 5);
+    }
+
+    #[test]
+    fn slower_median_beyond_tolerance_fails() {
+        let base = bench_json(1e-4, 5.0, 0.0);
+        let cur = bench_json(1.2e-4, 5.0, 0.0); // +20% > 15%
+        let diff = compare(&base, &cur, 0.15);
+        assert!(!diff.passes());
+        assert!(diff.regressions[0].contains("gemm:direct:128^3"));
+        // Within tolerance: passes.
+        let cur = bench_json(1.1e-4, 5.0, 0.0); // +10%
+        assert!(compare(&base, &cur, 0.15).passes());
+    }
+
+    #[test]
+    fn throughput_drop_fails_gain_passes() {
+        let base = bench_json(1e-4, 5.0, 0.0);
+        let cur = bench_json(1e-4, 4.0, 0.0); // -20%
+        assert!(!compare(&base, &cur, 0.15).passes());
+        let cur = bench_json(1e-4, 6.0, 0.0); // faster is fine
+        assert!(compare(&base, &cur, 0.15).passes());
+    }
+
+    #[test]
+    fn any_pooled_allocation_fails() {
+        let base = bench_json(1e-4, 5.0, 0.0);
+        let cur = bench_json(1e-4, 5.0, 0.5); // half an alloc per request
+        let diff = compare(&base, &cur, 0.15);
+        assert!(!diff.passes());
+        // Both zero-alloc gates fire: bare pooled and behind the handle.
+        assert_eq!(diff.regressions.len(), 2);
+        assert!(diff.regressions.iter().any(|r| r.contains("policy_handle")));
+    }
+
+    #[test]
+    fn provisional_baseline_reports_but_passes() {
+        let mut base = bench_json(1e-4, 5.0, 0.0);
+        if let Json::Obj(ref mut m) = base {
+            m.insert("provisional".into(), Json::Bool(true));
+        }
+        let cur = bench_json(9e-4, 1.0, 0.0); // terrible, but provisional
+        let diff = compare(&base, &cur, 0.15);
+        assert!(diff.provisional);
+        assert!(!diff.regressions.is_empty());
+        assert!(diff.passes());
+    }
+
+    #[test]
+    fn drift_recovered_gate() {
+        let cur = Json::parse(r#"{"bench":"drift","recovered":false}"#).unwrap();
+        let base = Json::parse(r#"{"bench":"drift","recovered":true}"#).unwrap();
+        let diff = compare(&base, &cur, 0.15);
+        assert!(!diff.passes());
+        let cur = Json::parse(r#"{"bench":"drift","recovered":true}"#).unwrap();
+        assert!(compare(&base, &cur, 0.15).passes());
+    }
+
+    #[test]
+    fn disjoint_files_refuse_to_pass() {
+        let a = Json::parse(r#"{"results":[{"name":"x","median_s":1.0}]}"#).unwrap();
+        let b = Json::parse(r#"{"results":[{"name":"y","median_s":1.0}]}"#).unwrap();
+        let diff = compare(&a, &b, 0.15);
+        assert!(!diff.passes());
+        assert_eq!(diff.compared, 0);
+        // A provisional marker must not rescue an empty comparison.
+        let a = Json::parse(
+            r#"{"provisional":true,"results":[{"name":"x","median_s":1.0}]}"#,
+        )
+        .unwrap();
+        let diff = compare(&a, &b, 0.15);
+        assert!(diff.provisional);
+        assert!(!diff.passes());
+    }
+}

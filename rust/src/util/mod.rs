@@ -2,6 +2,7 @@
 //! (no serde / rand / csv crates available): deterministic PRNG, JSON,
 //! CSV, statistics and ASCII table/chart rendering.
 
+pub mod benchcmp;
 pub mod csv;
 pub mod json;
 pub mod prng;

@@ -15,6 +15,21 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// All-zero summary of an empty sample — for aggregations that must
+    /// stay total when nothing was measured (e.g. an idle server shard).
+    pub fn empty() -> Summary {
+        Summary {
+            n: 0,
+            mean: 0.0,
+            stddev: 0.0,
+            min: 0.0,
+            max: 0.0,
+            median: 0.0,
+            p05: 0.0,
+            p95: 0.0,
+        }
+    }
+
     pub fn of(xs: &[f64]) -> Summary {
         assert!(!xs.is_empty(), "Summary::of(empty)");
         let n = xs.len();
@@ -108,6 +123,15 @@ mod tests {
         assert_eq!(s.max, 5.0);
         assert!((s.median - 3.0).abs() < 1e-12);
         assert!((s.stddev - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty_is_zeroed() {
+        let s = Summary::empty();
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+        assert_eq!(s.max, 0.0);
+        assert_eq!(s.ci95_half(), 0.0);
     }
 
     #[test]

@@ -1,0 +1,174 @@
+//! Property tests for the adaptation loop's hot-swap mechanism: a policy
+//! swap must never mix configurations within one request, and the epoch
+//! counter must be monotonic from every shard's point of view — under
+//! real concurrency, with a swapper thread racing many reader threads.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use adaptlib::config::{DirectParams, KernelConfig, Triple, XgemmParams};
+use adaptlib::coordinator::{PolicyHandle, SelectPolicy};
+
+/// A policy whose every selection carries its identity: generation `g`
+/// always selects `Direct(wgd = g)` for even triples and
+/// `Xgemm(mwg = 1000 + g)` for odd ones.  Any cross-generation mixing
+/// inside one request is therefore detectable from the selections alone.
+struct GenerationPolicy {
+    generation: u32,
+    name: String,
+}
+
+impl GenerationPolicy {
+    fn new(generation: u32) -> GenerationPolicy {
+        GenerationPolicy { generation, name: format!("gen-{generation}") }
+    }
+
+    fn generation_of(cfg: KernelConfig) -> u32 {
+        match cfg {
+            KernelConfig::Direct(p) => p.wgd,
+            KernelConfig::Xgemm(p) => p.mwg - 1000,
+        }
+    }
+}
+
+impl SelectPolicy for GenerationPolicy {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn select(&self, t: Triple) -> KernelConfig {
+        if t.m % 2 == 0 {
+            KernelConfig::Direct(DirectParams { wgd: self.generation, ..Default::default() })
+        } else {
+            KernelConfig::Xgemm(XgemmParams {
+                mwg: 1000 + self.generation,
+                ..Default::default()
+            })
+        }
+    }
+}
+
+/// Simulates how a dispatcher shard serves one request: the policy is
+/// snapshotted once (at the window boundary), then *all* selections of
+/// the request resolve through that snapshot — exactly the server's
+/// worker-loop discipline.
+fn serve_one_request(
+    handle: &PolicyHandle,
+    cached: &mut adaptlib::coordinator::CachedPolicy,
+    request_triples: &[Triple],
+) -> (u64, Vec<KernelConfig>) {
+    handle.refresh(cached);
+    let configs = request_triples.iter().map(|&t| cached.select(t)).collect();
+    (cached.epoch, configs)
+}
+
+#[test]
+fn hot_swap_never_mixes_configs_within_one_request() {
+    const SHARDS: usize = 4;
+    const REQUESTS_PER_SHARD: usize = 400;
+    const SWAPS: u32 = 200;
+
+    let handle = Arc::new(PolicyHandle::new(Arc::new(GenerationPolicy::new(0))));
+    let done = Arc::new(AtomicBool::new(false));
+
+    // Swapper: publishes generations 1..=SWAPS as fast as it can.
+    let swapper = {
+        let handle = Arc::clone(&handle);
+        let done = Arc::clone(&done);
+        std::thread::spawn(move || {
+            for g in 1..=SWAPS {
+                let epoch = handle.swap(Arc::new(GenerationPolicy::new(g)));
+                assert_eq!(epoch as u32, g, "swap epochs must be sequential");
+                std::thread::yield_now();
+            }
+            done.store(true, Ordering::Release);
+        })
+    };
+
+    // Readers: each simulates a dispatcher shard serving multi-selection
+    // requests while swaps race.
+    let readers: Vec<_> = (0..SHARDS)
+        .map(|shard| {
+            let handle = Arc::clone(&handle);
+            std::thread::spawn(move || {
+                let mut cached = handle.snapshot();
+                let mut last_epoch = cached.epoch;
+                let mut generations_seen = Vec::new();
+                for req in 0..REQUESTS_PER_SHARD {
+                    // A "request" that needs several selections (batched
+                    // ops of one logical request).
+                    let triples: Vec<Triple> = (0..8)
+                        .map(|i| Triple::new((shard + req + i) as u32 + 1, 7, 9))
+                        .collect();
+                    let (epoch, configs) =
+                        serve_one_request(&handle, &mut cached, &triples);
+                    // (1) No mixing: every selection of this request must
+                    // come from one policy generation.
+                    let gens: Vec<u32> = configs
+                        .into_iter()
+                        .map(GenerationPolicy::generation_of)
+                        .collect();
+                    assert!(
+                        gens.windows(2).all(|w| w[0] == w[1]),
+                        "request mixed policy generations: {gens:?}"
+                    );
+                    // (2) The generation is the one published under the
+                    // epoch the request was resolved at.
+                    assert_eq!(u64::from(gens[0]), epoch, "generation/epoch desync");
+                    // (3) Epoch is monotonic per shard.
+                    assert!(epoch >= last_epoch, "epoch went backwards");
+                    last_epoch = epoch;
+                    generations_seen.push(gens[0]);
+                    std::thread::yield_now();
+                }
+                (last_epoch, generations_seen)
+            })
+        })
+        .collect();
+
+    let mut finals = Vec::new();
+    for r in readers {
+        let (last, gens) = r.join().expect("reader panicked");
+        // Per-shard generations are non-decreasing (monotonic swaps).
+        assert!(gens.windows(2).all(|w| w[0] <= w[1]));
+        finals.push(last);
+    }
+    swapper.join().expect("swapper panicked");
+    assert!(done.load(Ordering::Acquire));
+    // Every shard converges to the final epoch after one more refresh.
+    assert_eq!(handle.epoch(), u64::from(SWAPS));
+    let mut cached = handle.snapshot();
+    assert!(!handle.refresh(&mut cached), "snapshot already current");
+    assert_eq!(cached.epoch, u64::from(SWAPS));
+}
+
+#[test]
+fn epoch_observed_across_shards_is_bounded_by_swaps() {
+    const SWAPS: u32 = 64;
+    let handle = Arc::new(PolicyHandle::new(Arc::new(GenerationPolicy::new(0))));
+
+    let readers: Vec<_> = (0..3)
+        .map(|_| {
+            let handle = Arc::clone(&handle);
+            std::thread::spawn(move || {
+                let mut cached = handle.snapshot();
+                let mut max_seen = cached.epoch;
+                while max_seen < u64::from(SWAPS) {
+                    handle.refresh(&mut cached);
+                    assert!(cached.epoch >= max_seen);
+                    assert!(cached.epoch <= u64::from(SWAPS), "epoch beyond swap count");
+                    max_seen = cached.epoch;
+                    std::thread::yield_now();
+                }
+                max_seen
+            })
+        })
+        .collect();
+
+    for g in 1..=SWAPS {
+        handle.swap(Arc::new(GenerationPolicy::new(g)));
+    }
+    for r in readers {
+        assert_eq!(r.join().expect("reader panicked"), u64::from(SWAPS));
+    }
+}

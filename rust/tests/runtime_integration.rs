@@ -96,8 +96,13 @@ fn transpose_artifacts_match_oracle() {
         .manifest
         .artifacts
         .iter()
-        .filter(|a| matches!(a.kind,
-            ArtifactKind::Direct { trans_a: true, .. } | ArtifactKind::Direct { trans_b: true, .. }))
+        .filter(|a| {
+            matches!(
+                a.kind,
+                ArtifactKind::Direct { trans_a: true, .. }
+                    | ArtifactKind::Direct { trans_b: true, .. }
+            )
+        })
         .cloned()
         .collect();
     assert!(!metas.is_empty(), "roster contains transpose artifacts");

@@ -4,9 +4,12 @@
 
 use std::path::PathBuf;
 
+use adaptlib::config::{DirectParams, KernelConfig};
 use adaptlib::coordinator::{
-    DefaultPolicy, GemmRequest, GemmServer, ModelPolicy, ServerConfig,
+    adapt_step, DefaultPolicy, GemmRequest, GemmServer, ModelPolicy, ServerConfig,
 };
+use adaptlib::dataset::{ClassTable, DatasetKind, LabeledDataset};
+use adaptlib::dtree::{MinSamples, OnlineTrainer, TrainParams};
 use adaptlib::experiments::e2e;
 use adaptlib::runtime::{host_gemm, GemmInput, PjrtBackend};
 
@@ -169,6 +172,102 @@ fn e2e_offline_train_and_model_policy_roundtrip() {
         e2e::serve(&dir, policy, requests, ServerConfig::default()).unwrap();
     assert_eq!(stats.n_requests, 16);
     assert!(stats.gflops() > 0.0);
+}
+
+/// The full adaptation loop over the real runtime: a deliberately wrong
+/// initial model (everything routed to one direct config) serves live
+/// traffic with the telemetry tap + shadow budget on; one adapt step
+/// relabels from measurements, retrains, and hot-swaps — and the server
+/// keeps serving correct results under the new policy.
+#[test]
+fn telemetry_fold_retrain_and_hot_swap_under_live_traffic() {
+    let Some(dir) = artifacts_dir() else { return };
+    // Seed dataset: every workload triple labeled with one direct config
+    // — wrong for every bucketed shape.
+    let mut classes = ClassTable::new();
+    let wrong = classes.intern(KernelConfig::Direct(DirectParams::default()));
+    let dataset = LabeledDataset {
+        kind: DatasetKind::Po2,
+        device: "host-cpu".into(),
+        entries: e2e::workload_triples().into_iter().map(|t| (t, wrong)).collect(),
+        classes,
+    };
+    let params =
+        TrainParams { max_depth: None, min_samples_leaf: MinSamples::Count(1) };
+    let mut trainer = OnlineTrainer::new(dataset, params);
+    trainer.min_observations = 8;
+    let policy = ModelPolicy::new(trainer.tree(), &trainer.dataset().classes);
+
+    // Two shards, sample everything, shadow everything.
+    let cfg = ServerConfig::adaptive(2, 1.0, 1.0);
+    let server = GemmServer::start(&dir, Box::new(policy), cfg).unwrap();
+    let handle = server.handle();
+    let telemetry = server.telemetry();
+    let policy_handle = server.policy_handle();
+
+    // Live traffic: mixed shapes, all served (pre-swap responses carry
+    // epoch 0).
+    for resp in e2e::request_stream(24, 3)
+        .into_iter()
+        .map(|r| handle.call(r).unwrap())
+    {
+        resp.out.unwrap();
+        assert_eq!(resp.epoch, 0);
+    }
+    // The tap pushes *after* the reply is sent, so a shard may still be
+    // mid-push when the last call() returns — wait for it.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    while telemetry.pushed() < 24 && std::time::Instant::now() < deadline {
+        std::thread::yield_now();
+    }
+    assert!(telemetry.pushed() >= 24, "tap must sample every request");
+
+    // One adaptation step: fold, retrain (the seed model mispredicts
+    // nearly everything), hot-swap.
+    let outcome = adapt_step(&mut trainer, &telemetry, &policy_handle);
+    assert_eq!(outcome.folded, outcome.drained);
+    assert!(outcome.folded >= 24);
+    assert!(
+        outcome.mispredict_rate >= trainer.mispredict_threshold,
+        "seed model must mispredict the bucketed shapes"
+    );
+    assert_eq!(outcome.swapped_epoch, Some(1), "retrain must publish epoch 1");
+    assert_eq!(policy_handle.epoch(), 1);
+
+    // Post-swap: the server serves under the adapted policy (epoch 1 in
+    // every response) and results still match the host oracle.
+    let (m, n, k) = (100usize, 100usize, 100usize);
+    let r = req(m, n, k, 0.25);
+    let expect = host_gemm(&GemmInput {
+        m,
+        n,
+        k,
+        a: &r.a,
+        b: &r.b,
+        c: &r.c,
+        alpha: r.alpha,
+        beta: r.beta,
+    });
+    let resp = handle.call(r).unwrap();
+    assert_eq!(resp.epoch, 1);
+    let out = resp.out.unwrap();
+    for (i, (a, e)) in out.iter().zip(&expect).enumerate() {
+        assert!(
+            (a - e).abs() <= 1e-3 * e.abs().max(1.0),
+            "post-swap ({m},{n},{k}) idx {i}: {a} vs {e}"
+        );
+    }
+    // The adapted model now routes at least one triple away from the
+    // seed class.
+    let adapted = trainer.tree();
+    let moved = e2e::workload_triples()
+        .iter()
+        .any(|&t| adapted.predict(t) != wrong);
+    assert!(moved, "retrained tree still predicts the seed class everywhere");
+
+    drop(handle);
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.n_requests, 25);
 }
 
 #[test]

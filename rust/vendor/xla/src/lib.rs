@@ -471,7 +471,17 @@ ENTRY main.10 {
             .unwrap()
     }
 
-    fn lits(a: &[f32], ad: [i64; 2], b: &[f32], bd: [i64; 2], c: &[f32], cd: [i64; 2], alpha: f32, beta: f32) -> Vec<Literal> {
+    #[allow(clippy::too_many_arguments)]
+    fn lits(
+        a: &[f32],
+        ad: [i64; 2],
+        b: &[f32],
+        bd: [i64; 2],
+        c: &[f32],
+        cd: [i64; 2],
+        alpha: f32,
+        beta: f32,
+    ) -> Vec<Literal> {
         vec![
             Literal::vec1(a).reshape(&ad).unwrap(),
             Literal::vec1(b).reshape(&bd).unwrap(),
