@@ -4,7 +4,7 @@
 ARTIFACTS := rust/artifacts
 ROSTER    := full
 
-.PHONY: artifacts test bench drift baseline clean-artifacts
+.PHONY: artifacts test bench drift hetero baseline clean-artifacts
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../$(ARTIFACTS) --roster $(ROSTER)
@@ -19,13 +19,26 @@ bench:
 drift:
 	cd rust && cargo run --release --bin adaptd -- drift --requests 48 --waves 3 --reps 1
 
+hetero:
+	cd rust && cargo run --release --bin adaptd -- hetero --requests 64 --waves 3 --reps 1
+
 # Refresh the committed bench-gate baseline from a fresh full run on the
 # reference machine, then remove the "provisional" marker by hand (see
-# README.md) to arm the CI regression gate.
+# README.md) to arm the CI regression gate.  The hetero accuracy floors
+# are refreshed from a fresh BENCH_hetero.json when one exists, otherwise
+# carried over from the old baseline — a raw copy of the hotpath JSON
+# would drop them and hard-fail the hetero gate (no comparable metrics).
 baseline:
 	cd rust && cargo bench --bench hotpath
-	cp rust/BENCH_hotpath.json rust/BENCH_baseline.json
-	@echo "BENCH_baseline.json refreshed — delete the 'provisional' key if present"
+	python3 -c "import json, os; \
+new = json.load(open('rust/BENCH_hotpath.json')); \
+old = json.load(open('rust/BENCH_baseline.json')) if os.path.exists('rust/BENCH_baseline.json') else {}; \
+het = json.load(open('rust/BENCH_hetero.json')) if os.path.exists('rust/BENCH_hetero.json') else {}; \
+floors = {d['device']: d['accuracy'] for d in (old.get('hetero') or {}).get('devices', [])}; \
+floors.update({d['device']: d['accuracy'] for d in het.get('devices', []) if d.get('accuracy') is not None}); \
+floors and new.update(hetero={'devices': [{'device': k, 'accuracy': v} for k, v in sorted(floors.items())]}); \
+json.dump(new, open('rust/BENCH_baseline.json', 'w'), separators=(',', ':'))"
+	@echo "BENCH_baseline.json refreshed (hetero floors carried over) — delete the 'provisional' key if present"
 
 clean-artifacts:
 	rm -rf $(ARTIFACTS)

@@ -16,6 +16,7 @@ use adaptlib::config::KernelConfig;
 use adaptlib::coordinator::{
     DefaultPolicy, GemmRequest, GemmServer, PolicyHandle, ServerConfig,
 };
+use adaptlib::engine::{ExecutionEngine, RuntimeEngine};
 use adaptlib::experiments::e2e;
 use adaptlib::harness::{black_box, BenchConfig, Suite};
 use adaptlib::runtime::{
@@ -289,6 +290,32 @@ fn bench_pjrt(
         alloc_pooled_handle, 0,
         "select-through-PolicyHandle must not allocate at steady state"
     );
+
+    // The coordinator now executes through the ExecutionEngine trait
+    // (refresh + select + engine.resolve + engine.execute_pooled): the
+    // abstraction seam must not reintroduce allocations — the real-engine
+    // path is required to stay bit-identical and alloc-free.
+    let mut engine: Box<dyn ExecutionEngine> =
+        Box::new(RuntimeEngine::open(artifacts).expect("artifacts"));
+    let warm_id = engine
+        .resolve(&cached.select(triple2), triple2)
+        .expect("triple servable");
+    engine.ensure_ready(warm_id).expect("compile");
+    let alloc_engine = allocs_total(iters, || {
+        handle.refresh(&mut cached);
+        let cfg = cached.select(triple2);
+        let id = engine.resolve(&cfg, triple2).expect("triple servable");
+        engine.execute_pooled(id, &input2, &mut scratch).unwrap();
+        black_box(scratch.out[0]);
+    });
+    println!(
+        "allocs/request through the ExecutionEngine trait: {:.1}",
+        alloc_engine as f64 / iters as f64,
+    );
+    assert_eq!(
+        alloc_engine, 0,
+        "engine-trait pooled path must not allocate at steady state"
+    );
     extra.push((
         "allocs_per_request",
         Json::obj(vec![
@@ -298,9 +325,11 @@ fn bench_pjrt(
                 "pooled_with_policy_handle",
                 Json::num(alloc_pooled_handle as f64 / iters as f64),
             ),
+            ("engine_pooled", Json::num(alloc_engine as f64 / iters as f64)),
             ("iters", Json::num(iters as f64)),
         ]),
     ));
+    drop(engine);
     drop(rt);
 
     suite.section("server shard scaling (mixed test-set workload)");

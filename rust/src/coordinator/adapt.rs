@@ -20,9 +20,10 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::config::{KernelConfig, Triple};
+use crate::device::DeviceId;
 use crate::dtree::{OnlineObservation, OnlineTrainer};
 
 use super::policy::{ModelPolicy, PolicyHandle};
@@ -40,6 +41,11 @@ pub struct TelemetryRecord {
     pub shadow: Option<(KernelConfig, f64)>,
     /// Policy epoch the request was resolved under.
     pub epoch: u64,
+    /// Device class of the serving shard.  Each device class has its own
+    /// ring, so every record in a ring carries that ring's device — the
+    /// field exists to make cross-contamination *detectable* (tests
+    /// assert it) rather than silently absorbed.
+    pub device: DeviceId,
     pub shard: usize,
 }
 
@@ -112,6 +118,38 @@ impl TelemetryRing {
     /// Records ever pushed (sampled), including later-dropped ones.
     pub fn pushed(&self) -> u64 {
         self.pushed.load(Ordering::Relaxed)
+    }
+}
+
+/// Wait for the trailing telemetry pushes of `expected_total` sampled
+/// requests across `rings` (exact at full sampling; pass `None` to fall
+/// back to a quiet-period wait) — shards push *after* replying, so the
+/// tap lags the last response.  Shared by the drift (one ring) and
+/// hetero (one ring per device class) experiments, which run their
+/// deterministic adapt steps only once the waves' samples have landed.
+pub fn await_taps(rings: &[&TelemetryRing], expected_total: Option<u64>) {
+    let pushed = |rings: &[&TelemetryRing]| rings.iter().map(|r| r.pushed()).sum::<u64>();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    match expected_total {
+        Some(target) => {
+            while pushed(rings) < target && Instant::now() < deadline {
+                std::thread::yield_now();
+            }
+        }
+        None => {
+            let mut last = pushed(rings);
+            let mut quiet = Instant::now();
+            while Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(5));
+                let now = pushed(rings);
+                if now != last {
+                    last = now;
+                    quiet = Instant::now();
+                } else if quiet.elapsed() >= Duration::from_millis(100) {
+                    break;
+                }
+            }
+        }
     }
 }
 
@@ -284,6 +322,7 @@ mod tests {
             service_secs: 1.0,
             shadow: Some((xgemm(), 0.2)),
             epoch: 0,
+            device: crate::device::DeviceId::HostCpu,
             shard: (i % 2) as usize,
         }
     }

@@ -4,13 +4,16 @@
 use std::collections::BTreeMap;
 use std::time::Duration;
 
+use crate::device::DeviceId;
 use crate::util::stats::Summary;
 
 /// One completed request's measurements.
 #[derive(Debug, Clone)]
 pub struct RequestRecord {
     pub artifact: String,
-    /// Dispatcher shard that served the request.
+    /// Device class the serving shard is pinned to.
+    pub device: DeviceId,
+    /// Dispatcher shard that served the request (fleet-global index).
     pub shard: usize,
     pub queue: Duration,
     pub service: Duration,
@@ -26,8 +29,10 @@ pub struct ServeStats {
     pub queue: Summary,
     pub total_gflop: f64,
     pub per_artifact: BTreeMap<String, usize>,
-    /// Requests served per dispatcher shard.
+    /// Requests served per dispatcher shard (fleet-global index).
     pub per_shard: BTreeMap<usize, usize>,
+    /// Requests served per device class (heterogeneous fleets).
+    pub per_device: BTreeMap<String, usize>,
 }
 
 impl ServeStats {
@@ -43,6 +48,7 @@ impl ServeStats {
             total_gflop: 0.0,
             per_artifact: BTreeMap::new(),
             per_shard: BTreeMap::new(),
+            per_device: BTreeMap::new(),
         }
     }
 
@@ -57,9 +63,11 @@ impl ServeStats {
         let q: Vec<f64> = records.iter().map(|r| r.queue.as_secs_f64()).collect();
         let mut per_artifact = BTreeMap::new();
         let mut per_shard = BTreeMap::new();
+        let mut per_device = BTreeMap::new();
         for r in records {
             *per_artifact.entry(r.artifact.clone()).or_insert(0) += 1;
             *per_shard.entry(r.shard).or_insert(0) += 1;
+            *per_device.entry(r.device.name().to_string()).or_insert(0) += 1;
         }
         ServeStats {
             n_requests: records.len(),
@@ -69,6 +77,7 @@ impl ServeStats {
             total_gflop: records.iter().map(|r| r.flops).sum::<f64>() / 1e9,
             per_artifact,
             per_shard,
+            per_device,
         }
     }
 
@@ -95,6 +104,13 @@ impl ServeStats {
             self.latency.max * 1e3,
             self.queue.median * 1e3,
         );
+        if self.per_device.len() > 1 {
+            s.push_str("per-device:");
+            for (dev, n) in &self.per_device {
+                s.push_str(&format!("  {dev}={n}"));
+            }
+            s.push('\n');
+        }
         if self.per_shard.len() > 1 {
             s.push_str("per-shard:");
             for (shard, n) in &self.per_shard {
@@ -115,8 +131,14 @@ mod tests {
     use super::*;
 
     fn rec(artifact: &str, shard: usize, ms: u64) -> RequestRecord {
+        let device = if shard % 2 == 0 {
+            DeviceId::HostCpu
+        } else {
+            DeviceId::NvidiaP100
+        };
         RequestRecord {
             artifact: artifact.into(),
+            device,
             shard,
             queue: Duration::from_millis(1),
             service: Duration::from_millis(ms),
@@ -132,11 +154,14 @@ mod tests {
         assert_eq!(stats.per_artifact["a"], 2);
         assert_eq!(stats.per_shard[&0], 2);
         assert_eq!(stats.per_shard[&1], 1);
+        assert_eq!(stats.per_device["host-cpu"], 2);
+        assert_eq!(stats.per_device["nvidia-p100"], 1);
         assert!((stats.rps() - 3.0).abs() < 1e-9);
         assert!((stats.gflops() - 3.0).abs() < 1e-9);
         let report = stats.report();
         assert!(report.contains("per-artifact"));
         assert!(report.contains("per-shard"));
+        assert!(report.contains("per-device"));
     }
 
     #[test]
@@ -149,6 +174,7 @@ mod tests {
         assert_eq!(stats.latency.max, 0.0);
         assert!(stats.per_artifact.is_empty());
         assert!(stats.per_shard.is_empty());
+        assert!(stats.per_device.is_empty());
         // The report renders without panicking.
         assert!(stats.report().contains("requests: 0"));
     }

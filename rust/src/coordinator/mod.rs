@@ -1,8 +1,10 @@
-//! The on-line coordinator (L3): sharded request server with per-artifact
-//! dynamic batching, selection policies (model-driven / default / oracle),
-//! serving metrics, and the online adaptation loop (telemetry tap →
-//! background retrain → atomic policy hot-swap).  See `server`, `adapt`
-//! and ARCHITECTURE.md for the threading topology.
+//! The on-line coordinator (L3): a heterogeneous device fleet — request
+//! server with device-aware routing and per-artifact dynamic batching,
+//! selection policies (model-driven / default / oracle), serving metrics,
+//! and the per-device online adaptation loop (telemetry tap → background
+//! retrain → atomic policy hot-swap, isolated per device class).  See
+//! `server`, `adapt`, the `engine` module and ARCHITECTURE.md for the
+//! threading topology.
 
 pub mod adapt;
 pub mod metrics;
@@ -10,10 +12,13 @@ pub mod policy;
 pub mod server;
 
 pub use adapt::{
-    adapt_step, AdaptStats, AdaptationLoop, StepOutcome, TelemetryRecord, TelemetryRing,
+    adapt_step, await_taps, AdaptStats, AdaptationLoop, StepOutcome, TelemetryRecord,
+    TelemetryRing,
 };
 pub use metrics::{RequestRecord, ServeStats};
 pub use policy::{
     CachedPolicy, DefaultPolicy, ModelPolicy, OraclePolicy, PolicyHandle, SelectPolicy,
 };
-pub use server::{GemmRequest, GemmResponse, GemmServer, ServerConfig, ServerHandle};
+pub use server::{
+    DeviceClass, GemmRequest, GemmResponse, GemmServer, ServerConfig, ServerHandle,
+};

@@ -1,27 +1,34 @@
-//! The adaptive GEMM server — the on-line coordinator.
+//! The adaptive GEMM server — the on-line coordinator, now a
+//! *heterogeneous fleet*.
 //!
 //! Topology (see ARCHITECTURE.md): client threads submit [`GemmRequest`]s
-//! through a [`ServerHandle`], which routes them round-robin across N
-//! dispatcher *shards*.  Each shard is one worker thread that exclusively
-//! owns a `GemmRuntime` (its own PJRT client and compile cache — PJRT
-//! handles never cross threads) plus a [`ScratchBuffers`] pool, shares the
-//! read-only [`SelectPolicy`], and runs the per-artifact dynamic batcher:
-//! the pending window is resolved to dense [`ArtifactId`]s and grouped by
-//! id (consecutive executions of one executable amortize instruction/data
-//! cache misses and avoid executable switching).  Requests execute on the
-//! pooled, allocation-free runtime path; responses flow back over
-//! per-request channels.
+//! through a [`ServerHandle`], whose device-aware router picks a device
+//! class per request (policy-predicted service time on each class, scaled
+//! by that class's queue depth) and then round-robins across the class's
+//! dispatcher *shards*.  Each shard is one worker thread pinned to a
+//! device class: it exclusively owns an [`ExecutionEngine`] built from
+//! the class's [`EngineSpec`] (the real PJRT runtime for the host CPU,
+//! analytical engines for the simulated devices — engines are created on
+//! the shard's thread, PJRT handles never cross threads) plus a
+//! [`ScratchBuffers`] pool, shares its *class's* [`PolicyHandle`] and
+//! [`TelemetryRing`] (never another class's — per-device telemetry must
+//! not cross-contaminate), and runs the per-artifact dynamic batcher.
+//! Requests execute on the pooled, allocation-free engine path; responses
+//! flow back over per-request channels carrying the serving device, the
+//! routed device and the policy epoch.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::config::Triple;
-use crate::runtime::{ArtifactId, GemmInput, GemmRuntime, ScratchBuffers};
+use crate::device::{sim, DeviceId, DeviceProfile};
+use crate::engine::{EngineSpec, ExecutionEngine};
+use crate::runtime::{ArtifactId, GemmInput, ScratchBuffers};
 
 use super::adapt::{TelemetryRecord, TelemetryRing};
 use super::metrics::{RequestRecord, ServeStats};
@@ -54,8 +61,20 @@ pub struct GemmResponse {
     pub queue: Duration,
     pub service: Duration,
     /// Policy epoch the request was resolved under (bumped by every
-    /// adaptation hot-swap; 0 until the first swap).
+    /// adaptation hot-swap of *this device's* policy; 0 until the first
+    /// swap).  Epochs are per device class — a swap on one device never
+    /// moves another's.
     pub epoch: u64,
+    /// Device class of the shard that served the request (stamped by the
+    /// worker from its pinned class).
+    pub device: DeviceId,
+    /// Device class the router chose at submit time (stamped by the
+    /// handle).  Always equals `device` — the two independent stamps
+    /// exist so routing bugs are detectable, and the router property
+    /// test pins them equal under racing submitters.
+    pub routed: DeviceId,
+    /// Serving shard (fleet-global index).
+    pub shard: usize,
 }
 
 /// Server tuning knobs.
@@ -65,15 +84,16 @@ pub struct ServerConfig {
     pub max_batch: usize,
     /// How long a shard waits to fill a window.
     pub batch_window: Duration,
-    /// Dispatcher shards, each exclusively owning a runtime + compile
-    /// cache.  Requests are routed round-robin across shards.
+    /// Dispatcher shards for the homogeneous [`GemmServer::start`] path
+    /// (heterogeneous fleets size each class via [`DeviceClass::shards`]).
     pub shards: usize,
     /// Fraction of successfully served requests sampled into the
     /// telemetry ring (0.0 disables the tap entirely).
     pub telemetry_fraction: f64,
     /// Shadow-execution budget: fraction of *sampled* requests that also
-    /// execute one alternative artifact (off the response path, after the
-    /// reply is sent) so the trainer can compare configs on live traffic.
+    /// execute one alternative eligible artifact (off the response path,
+    /// after the reply is sent) so the trainer can compare configs on
+    /// live traffic.
     pub shadow_fraction: f64,
     /// Telemetry ring capacity (oldest records drop under pressure).
     pub telemetry_capacity: usize,
@@ -108,33 +128,166 @@ impl ServerConfig {
             ..ServerConfig::default()
         }
     }
+
+    /// Validate at server start: zero shards or a zero-sized batch window
+    /// are configuration bugs, rejected loudly instead of silently
+    /// "fixed"; the sampling fractions are *rates* and are clamped into
+    /// [0, 1] (out-of-range values have an obvious intent).
+    pub fn validated(self) -> Result<ServerConfig> {
+        ensure!(self.shards > 0, "ServerConfig.shards must be > 0");
+        ensure!(self.max_batch > 0, "ServerConfig.max_batch must be > 0");
+        Ok(ServerConfig {
+            telemetry_fraction: self.telemetry_fraction.clamp(0.0, 1.0),
+            shadow_fraction: self.shadow_fraction.clamp(0.0, 1.0),
+            ..self
+        })
+    }
+}
+
+/// One device class of a heterogeneous fleet: a device, its shard count,
+/// and the class's *own* selection policy (installed into a per-class
+/// [`PolicyHandle`], so per-device adaptation retrains and hot-swaps each
+/// class independently).
+pub struct DeviceClass {
+    pub device: DeviceId,
+    pub shards: usize,
+    pub policy: Box<dyn SelectPolicy>,
+}
+
+impl DeviceClass {
+    pub fn new(device: DeviceId, shards: usize, policy: Box<dyn SelectPolicy>) -> DeviceClass {
+        DeviceClass { device, shards, policy }
+    }
+}
+
+/// When the class policy picks a config the device model cannot run at
+/// all, the router charges this pessimistic service time — the class is
+/// effectively avoided unless every other queue is badly backed up.
+const ROUTE_FALLBACK_SECS: f64 = 1.0;
+
+/// Router-side state of one device class.
+struct ClassState {
+    device: DeviceId,
+    profile: DeviceProfile,
+    /// The class's policy slot (shared with its shards and its
+    /// adaptation loop): the router predicts with the *live* policy.
+    policy: Arc<PolicyHandle>,
+    /// Router-local cache of the class policy, brought up to date with
+    /// one atomic epoch check per use ([`PolicyHandle::refresh`]) — so
+    /// routing shares no lock with the adaptation hot-swap path except
+    /// in the instant after a swap, and never clones the policy `Arc`
+    /// per submit the way `snapshot()` would.
+    cached: Mutex<CachedPolicy>,
+    txs: Vec<mpsc::Sender<Envelope>>,
+    /// Per-shard depth gauges: outstanding (submitted, not yet replied)
+    /// requests.  Incremented by the handle at submit, decremented by the
+    /// shard after the reply is sent.
+    depths: Vec<Arc<AtomicUsize>>,
+    /// Round-robin cursor within the class.
+    next: AtomicUsize,
+}
+
+impl ClassState {
+    fn depth(&self) -> usize {
+        self.depths.iter().map(|d| d.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Predicted completion time of serving `t` on this class now: the
+    /// analytical model's service time for the class policy's selection,
+    /// scaled by how many requests are already queued per shard.  The
+    /// depth term is both the load balancer and the tie-break — two
+    /// classes with similar predicted service times split traffic by
+    /// queue pressure.
+    fn predicted_wait(&self, t: Triple) -> f64 {
+        let cfg = {
+            let mut cached = self.cached.lock().unwrap_or_else(|e| e.into_inner());
+            self.policy.refresh(&mut cached);
+            cached.select(t)
+        };
+        let secs =
+            sim::modeled_secs(&self.profile, &cfg, t).unwrap_or(ROUTE_FALLBACK_SECS);
+        secs * (1.0 + self.depth() as f64 / self.txs.len() as f64)
+    }
 }
 
 struct Envelope {
     req: GemmRequest,
     submitted: Instant,
     reply: mpsc::Sender<GemmResponse>,
+    /// Device class the router chose (echoed into the response).
+    routed: DeviceId,
 }
 
-/// Handle for submitting work.  Clones share the round-robin cursor, so
-/// traffic from any number of client threads spreads across all shards.
+/// Handle for submitting work.  Clones share the per-class round-robin
+/// cursors and depth gauges, so traffic from any number of client threads
+/// spreads across the fleet consistently.
 #[derive(Clone)]
 pub struct ServerHandle {
-    txs: Arc<Vec<mpsc::Sender<Envelope>>>,
-    next: Arc<AtomicUsize>,
+    classes: Arc<Vec<ClassState>>,
 }
 
 impl ServerHandle {
-    /// Submit a request; returns the channel the response arrives on.
-    pub fn submit(&self, req: GemmRequest) -> mpsc::Receiver<GemmResponse> {
+    /// Pick the device class for a request.  Single-class fleets skip
+    /// prediction entirely — the homogeneous hot path is unchanged.
+    fn route(&self, t: Triple) -> usize {
+        if self.classes.len() == 1 {
+            return 0;
+        }
+        let mut best = 0usize;
+        let mut best_score = f64::INFINITY;
+        for (i, class) in self.classes.iter().enumerate() {
+            let score = class.predicted_wait(t);
+            if score < best_score {
+                best_score = score;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// The device the router would choose for `t` right now (advisory:
+    /// depth gauges move under live traffic).
+    pub fn route_preview(&self, t: Triple) -> DeviceId {
+        self.classes[self.route(t)].device
+    }
+
+    fn send_to(&self, class: &ClassState, req: GemmRequest) -> mpsc::Receiver<GemmResponse> {
         let (reply, rx) = mpsc::channel();
-        let shard = self.next.fetch_add(1, Ordering::Relaxed) % self.txs.len();
-        let _ = self.txs[shard].send(Envelope {
+        let shard = class.next.fetch_add(1, Ordering::Relaxed) % class.txs.len();
+        class.depths[shard].fetch_add(1, Ordering::Relaxed);
+        let sent = class.txs[shard].send(Envelope {
             req,
             submitted: Instant::now(),
             reply,
+            routed: class.device,
         });
+        if sent.is_err() {
+            // Shard gone (shutdown): roll the gauge back so the router
+            // does not see a phantom queue.
+            class.depths[shard].fetch_sub(1, Ordering::Relaxed);
+        }
         rx
+    }
+
+    /// Submit a request; returns the channel the response arrives on.
+    pub fn submit(&self, req: GemmRequest) -> mpsc::Receiver<GemmResponse> {
+        self.send_to(&self.classes[self.route(req.triple())], req)
+    }
+
+    /// Submit a request *pinned* to a device class, bypassing the router
+    /// (still round-robined within the class, depth gauges maintained).
+    /// Coverage/diagnostic traffic: the hetero experiment scores every
+    /// device's policy on identical pinned sweeps, so a device the
+    /// router would rarely pick still gets measured (and its adaptation
+    /// loop still gets telemetry).  `None` if the fleet has no such
+    /// class.
+    pub fn submit_to(
+        &self,
+        device: DeviceId,
+        req: GemmRequest,
+    ) -> Option<mpsc::Receiver<GemmResponse>> {
+        let class = self.classes.iter().find(|c| c.device == device)?;
+        Some(self.send_to(class, req))
     }
 
     /// Submit and wait.
@@ -144,10 +297,22 @@ impl ServerHandle {
             .map_err(|_| anyhow!("server shut down before responding"))
     }
 
-    /// Number of dispatcher shards behind this handle.
+    /// Total dispatcher shards across every device class.
     pub fn shards(&self) -> usize {
-        self.txs.len()
+        self.classes.iter().map(|c| c.txs.len()).sum()
     }
+
+    /// Device classes behind this handle, in class order.
+    pub fn devices(&self) -> Vec<DeviceId> {
+        self.classes.iter().map(|c| c.device).collect()
+    }
+}
+
+/// Per-class coordination state the server keeps after startup.
+struct ClassInfo {
+    device: DeviceId,
+    policy: Arc<PolicyHandle>,
+    telemetry: Arc<TelemetryRing>,
 }
 
 /// The running server.
@@ -155,50 +320,91 @@ pub struct GemmServer {
     handle: Option<ServerHandle>,
     workers: Vec<JoinHandle<Vec<RequestRecord>>>,
     started: Instant,
-    policy: Arc<PolicyHandle>,
-    telemetry: Arc<TelemetryRing>,
+    classes: Vec<ClassInfo>,
 }
 
 impl GemmServer {
-    /// Start the server with `cfg.shards` dispatcher shards.  Each PJRT
-    /// runtime is *created on its shard's thread* (PJRT handles are not
-    /// `Send`); startup errors are reported synchronously through a
-    /// ready-channel once every shard has checked in.
-    ///
-    /// The policy is installed into a fresh epoch-counted [`PolicyHandle`]
-    /// ([`policy_handle`](Self::policy_handle)); the adaptation loop
-    /// hot-swaps retrained policies through it while the server runs.
+    /// Start a homogeneous (host-CPU-only) server with `cfg.shards`
+    /// dispatcher shards — the classic single-device path, now one
+    /// degenerate fleet.  The policy is installed into a fresh
+    /// epoch-counted [`PolicyHandle`] ([`policy_handle`]
+    /// (Self::policy_handle)); the adaptation loop hot-swaps retrained
+    /// policies through it while the server runs.
     pub fn start(
         artifacts: &Path,
         policy: Box<dyn SelectPolicy>,
         cfg: ServerConfig,
     ) -> Result<GemmServer> {
-        let policy = Arc::new(PolicyHandle::new(Arc::from(policy)));
-        let telemetry = Arc::new(TelemetryRing::new(cfg.telemetry_capacity));
-        let n_shards = cfg.shards.max(1);
+        let cfg = cfg.validated()?;
+        let classes = vec![DeviceClass::new(DeviceId::HostCpu, cfg.shards, policy)];
+        Self::start_fleet(artifacts, classes, cfg)
+    }
+
+    /// Start a heterogeneous fleet: one engine-backed shard group per
+    /// device class, each with its own policy slot and telemetry ring.
+    /// Engines are created on their shards' threads; startup errors are
+    /// reported synchronously through a ready-channel once every shard
+    /// has checked in (all-or-nothing).
+    pub fn start_fleet(
+        artifacts: &Path,
+        classes: Vec<DeviceClass>,
+        cfg: ServerConfig,
+    ) -> Result<GemmServer> {
+        let cfg = cfg.validated()?;
+        ensure!(!classes.is_empty(), "fleet needs at least one device class");
+        for (i, c) in classes.iter().enumerate() {
+            ensure!(c.shards > 0, "device class {} needs shards > 0", c.device);
+            ensure!(
+                classes[..i].iter().all(|p| p.device != c.device),
+                "device class {} listed twice",
+                c.device
+            );
+        }
+        let n_workers: usize = classes.iter().map(|c| c.shards).sum();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
-        let mut txs = Vec::with_capacity(n_shards);
-        let mut workers = Vec::with_capacity(n_shards);
-        for shard in 0..n_shards {
-            let (tx, rx) = mpsc::channel::<Envelope>();
-            txs.push(tx);
-            let ctx = ShardCtx {
-                shard,
-                dir: artifacts.to_path_buf(),
+        let mut states = Vec::with_capacity(classes.len());
+        let mut infos = Vec::with_capacity(classes.len());
+        let mut workers = Vec::with_capacity(n_workers);
+        let mut shard = 0usize; // fleet-global shard index
+        for class in classes {
+            let spec = EngineSpec::for_device(class.device);
+            let policy = Arc::new(PolicyHandle::new(Arc::from(class.policy)));
+            let telemetry = Arc::new(TelemetryRing::new(cfg.telemetry_capacity));
+            let mut txs = Vec::with_capacity(class.shards);
+            let mut depths = Vec::with_capacity(class.shards);
+            for _ in 0..class.shards {
+                let (tx, rx) = mpsc::channel::<Envelope>();
+                let depth = Arc::new(AtomicUsize::new(0));
+                txs.push(tx);
+                depths.push(Arc::clone(&depth));
+                let ctx = ShardCtx {
+                    shard,
+                    spec,
+                    dir: artifacts.to_path_buf(),
+                    policy: Arc::clone(&policy),
+                    telemetry: Arc::clone(&telemetry),
+                    depth,
+                    cfg,
+                };
+                let ready_tx = ready_tx.clone();
+                workers.push(std::thread::spawn(move || worker_loop(ctx, rx, ready_tx)));
+                shard += 1;
+            }
+            states.push(ClassState {
+                device: class.device,
+                profile: DeviceProfile::get(class.device),
                 policy: Arc::clone(&policy),
-                telemetry: Arc::clone(&telemetry),
-                cfg,
-            };
-            let ready_tx = ready_tx.clone();
-            workers.push(std::thread::spawn(move || worker_loop(ctx, rx, ready_tx)));
+                cached: Mutex::new(policy.snapshot()),
+                txs,
+                depths,
+                next: AtomicUsize::new(0),
+            });
+            infos.push(ClassInfo { device: class.device, policy, telemetry });
         }
         drop(ready_tx);
-        let handle = ServerHandle {
-            txs: Arc::new(txs),
-            next: Arc::new(AtomicUsize::new(0)),
-        };
+        let handle = ServerHandle { classes: Arc::new(states) };
         let mut failures = Vec::new();
-        for _ in 0..n_shards {
+        for _ in 0..n_workers {
             match ready_rx.recv() {
                 Ok(Ok(())) => {}
                 Ok(Err(msg)) => failures.push(msg),
@@ -217,8 +423,7 @@ impl GemmServer {
             handle: Some(handle),
             workers,
             started: Instant::now(),
-            policy,
-            telemetry,
+            classes: infos,
         })
     }
 
@@ -226,17 +431,41 @@ impl GemmServer {
         self.handle.as_ref().expect("server running").clone()
     }
 
-    /// The epoch-counted policy slot every shard selects through.  Swap
-    /// a retrained policy in via [`PolicyHandle::swap`]; shards pick it
-    /// up at their next window boundary.
-    pub fn policy_handle(&self) -> Arc<PolicyHandle> {
-        Arc::clone(&self.policy)
+    /// Device classes of this fleet, in class order.
+    pub fn devices(&self) -> Vec<DeviceId> {
+        self.classes.iter().map(|c| c.device).collect()
     }
 
-    /// The telemetry ring shards sample served requests into (empty
-    /// unless `cfg.telemetry_fraction > 0`).
+    /// The epoch-counted policy slot of the *first* device class — the
+    /// whole fleet for homogeneous servers.  Swap a retrained policy in
+    /// via [`PolicyHandle::swap`]; the class's shards pick it up at their
+    /// next window boundary.
+    pub fn policy_handle(&self) -> Arc<PolicyHandle> {
+        Arc::clone(&self.classes[0].policy)
+    }
+
+    /// The telemetry ring of the first device class (empty unless
+    /// `cfg.telemetry_fraction > 0`).
     pub fn telemetry(&self) -> Arc<TelemetryRing> {
-        Arc::clone(&self.telemetry)
+        Arc::clone(&self.classes[0].telemetry)
+    }
+
+    /// A specific device class's policy slot.
+    pub fn policy_handle_for(&self, device: DeviceId) -> Option<Arc<PolicyHandle>> {
+        self.classes
+            .iter()
+            .find(|c| c.device == device)
+            .map(|c| Arc::clone(&c.policy))
+    }
+
+    /// A specific device class's telemetry ring.  Shards only ever push
+    /// to their own class's ring, so per-device training data never
+    /// cross-contaminates.
+    pub fn telemetry_for(&self, device: DeviceId) -> Option<Arc<TelemetryRing>> {
+        self.classes
+            .iter()
+            .find(|c| c.device == device)
+            .map(|c| Arc::clone(&c.telemetry))
     }
 
     /// Shut down and collect serving statistics (None if nothing served).
@@ -262,9 +491,11 @@ impl GemmServer {
 /// Everything a dispatcher shard needs, bundled for the thread spawn.
 struct ShardCtx {
     shard: usize,
+    spec: EngineSpec,
     dir: PathBuf,
     policy: Arc<PolicyHandle>,
     telemetry: Arc<TelemetryRing>,
+    depth: Arc<AtomicUsize>,
     cfg: ServerConfig,
 }
 
@@ -294,21 +525,22 @@ impl FractionSampler {
     }
 }
 
-/// One dispatcher shard: batches, selects, executes on the pooled path,
-/// and feeds the telemetry tap.
+/// One dispatcher shard: batches, selects, executes on its device
+/// engine's pooled path, and feeds its class's telemetry tap.
 fn worker_loop(
     ctx: ShardCtx,
     rx: mpsc::Receiver<Envelope>,
     ready_tx: mpsc::Sender<Result<(), String>>,
 ) -> Vec<RequestRecord> {
-    let ShardCtx { shard, dir, policy, telemetry, cfg } = ctx;
-    let mut runtime = match GemmRuntime::open(&dir) {
-        Ok(r) => {
+    let ShardCtx { shard, spec, dir, policy, telemetry, depth, cfg } = ctx;
+    let device = spec.device();
+    let mut engine: Box<dyn ExecutionEngine> = match spec.build(&dir) {
+        Ok(e) => {
             let _ = ready_tx.send(Ok(()));
-            r
+            e
         }
         Err(e) => {
-            let _ = ready_tx.send(Err(format!("{e:#}")));
+            let _ = ready_tx.send(Err(format!("{device}: {e:#}")));
             return Vec::new();
         }
     };
@@ -358,11 +590,7 @@ fn worker_loop(
             .map(|env| {
                 let t = env.req.triple();
                 let cfg_sel = cached.select(t);
-                let id = runtime
-                    .manifest
-                    .artifact_id_for_config(&cfg_sel, t)
-                    // Fallback: any artifact accepting t (least waste).
-                    .or_else(|| runtime.manifest.eligible_id(t));
+                let id = engine.resolve(&cfg_sel, t);
                 (id, env)
             })
             .collect();
@@ -373,11 +601,14 @@ fn worker_loop(
             let t0 = Instant::now();
             let mut times = None;
             let result = match id {
-                None => Err(anyhow!("no artifact accepts {}", env.req.triple())),
+                None => Err(anyhow!(
+                    "no artifact accepts {} on {device}",
+                    env.req.triple()
+                )),
                 Some(id) => {
                     let input = gemm_input(&env.req);
-                    runtime
-                        .gemm_pooled(id, &input, &mut scratch)
+                    engine
+                        .execute_pooled(id, &input, &mut scratch)
                         // The response must outlive the scratch pool: the
                         // copy-out is the one boundary allocation.
                         .map(|t| {
@@ -388,7 +619,7 @@ fn worker_loop(
             };
             let service = t0.elapsed();
             let artifact = match id {
-                Some(id) => runtime.manifest.name_of(id).to_string(),
+                Some(id) => engine.manifest().name_of(id).to_string(),
                 None => String::new(),
             };
             let served_ok = result.is_ok();
@@ -401,7 +632,13 @@ fn worker_loop(
                 queue,
                 service,
                 epoch: cached.epoch,
+                device,
+                routed: env.routed,
+                shard,
             });
+            // The request is answered: release its depth-gauge slot so
+            // the router sees this shard's real backlog.
+            depth.fetch_sub(1, Ordering::Relaxed);
             // Telemetry tap — after the reply, entirely off the response
             // path.  `times` excludes compile, so the sample is
             // comparable to the shadow measurement below.
@@ -409,7 +646,7 @@ fn worker_loop(
                 if tele_sampler.fire() {
                     let shadow = if shadow_sampler.fire() {
                         shadow_execute(
-                            &mut runtime,
+                            &mut *engine,
                             &mut scratch,
                             id,
                             &env.req,
@@ -420,10 +657,11 @@ fn worker_loop(
                     };
                     telemetry.push(TelemetryRecord {
                         triple: env.req.triple(),
-                        served: runtime.manifest.meta(id).config,
+                        served: engine.manifest().meta(id).config,
                         service_secs: times.total_time().as_secs_f64(),
                         shadow,
                         epoch: cached.epoch,
+                        device,
                         shard,
                     });
                 }
@@ -433,7 +671,8 @@ fn worker_loop(
     raw_records
         .into_iter()
         .map(|(id, queue, service, flops)| RequestRecord {
-            artifact: runtime.manifest.name_of(id).to_string(),
+            artifact: engine.manifest().name_of(id).to_string(),
+            device,
             shard,
             queue,
             service,
@@ -455,6 +694,32 @@ fn gemm_input(req: &GemmRequest) -> GemmInput<'_> {
     }
 }
 
+/// Pick the `rotation`-th alternative (wrapping) among the artifacts that
+/// are shape-eligible, device-servable, and not the one that already
+/// served the request.  Gracefully returns `None` — never panics — even
+/// if the eligible set shrinks between the counting pass and the
+/// selection pass (e.g. an engine whose servability answer changes),
+/// where the old `expect("count > rotation index")` would have killed the
+/// shard thread.
+fn select_shadow_alternative(
+    engine: &dyn ExecutionEngine,
+    served: ArtifactId,
+    t: Triple,
+    rotation: usize,
+) -> Option<ArtifactId> {
+    let n = engine.manifest().len() as u32;
+    let eligible = |id: &ArtifactId| {
+        *id != served
+            && engine.is_servable(*id)
+            && engine.manifest().meta(*id).accepts(t)
+    };
+    let count = (0..n).map(ArtifactId).filter(&eligible).count();
+    if count == 0 {
+        return None;
+    }
+    (0..n).map(ArtifactId).filter(&eligible).nth(rotation % count)
+}
+
 /// Spend shadow budget on one request: re-execute it on an *alternative*
 /// eligible artifact (rotating through the candidates) and measure it
 /// under identical operands.  Runs after the reply is sent, so the cost
@@ -464,30 +729,168 @@ fn gemm_input(req: &GemmRequest) -> GemmInput<'_> {
 /// passes over the small immutable manifest) and the scratch pool is
 /// reused — the response already copied its result out.
 fn shadow_execute(
-    runtime: &mut GemmRuntime,
+    engine: &mut dyn ExecutionEngine,
     scratch: &mut ScratchBuffers,
     served: ArtifactId,
     req: &GemmRequest,
     rotation: &mut usize,
 ) -> Option<(crate::config::KernelConfig, f64)> {
-    let t = req.triple();
-    let n = runtime.manifest.len() as u32;
-    let eligible = |id: &ArtifactId| *id != served && runtime.manifest.meta(*id).accepts(t);
-    let count = (0..n).map(ArtifactId).filter(eligible).count();
-    if count == 0 {
-        return None;
-    }
-    let alt = (0..n)
-        .map(ArtifactId)
-        .filter(eligible)
-        .nth(*rotation % count)
-        .expect("count > rotation index");
+    let alt = select_shadow_alternative(engine, served, req.triple(), *rotation)?;
     *rotation = rotation.wrapping_add(1);
     // Compile outside the measurement, like the served path.
-    runtime.ensure_compiled_id(alt).ok()?;
-    let times = runtime.gemm_pooled(alt, &gemm_input(req), scratch).ok()?;
+    engine.ensure_ready(alt).ok()?;
+    let times = engine.execute_pooled(alt, &gemm_input(req), scratch).ok()?;
     Some((
-        runtime.manifest.meta(alt).config,
+        engine.manifest().meta(alt).config,
         times.total_time().as_secs_f64(),
     ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::SimEngine;
+    use crate::runtime::{GemmTimes, Manifest};
+
+    #[test]
+    fn server_config_validation_edges() {
+        assert!(ServerConfig::with_shards(0).validated().is_err());
+        let err = ServerConfig::with_shards(0).validated().unwrap_err();
+        assert!(err.to_string().contains("shards"), "{err}");
+        let bad_batch = ServerConfig { max_batch: 0, ..ServerConfig::default() };
+        let err = bad_batch.validated().unwrap_err();
+        assert!(err.to_string().contains("max_batch"), "{err}");
+        // Out-of-range fractions clamp instead of erroring.
+        let cfg = ServerConfig::adaptive(2, 1.5, -0.25).validated().unwrap();
+        assert_eq!(cfg.telemetry_fraction, 1.0);
+        assert_eq!(cfg.shadow_fraction, 0.0);
+        // A sane config passes through unchanged.
+        let cfg = ServerConfig::adaptive(4, 0.5, 0.25).validated().unwrap();
+        assert_eq!((cfg.shards, cfg.max_batch), (4, 32));
+        assert_eq!((cfg.telemetry_fraction, cfg.shadow_fraction), (0.5, 0.25));
+    }
+
+    #[test]
+    fn start_rejects_invalid_config_before_spawning() {
+        // Validation fires before any artifact IO: the path is bogus but
+        // the error must be about the config.
+        let err = GemmServer::start(
+            Path::new("/nonexistent"),
+            Box::new(super::super::DefaultPolicy::clblast()),
+            ServerConfig::with_shards(0),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("shards"), "{err}");
+    }
+
+    #[test]
+    fn fleet_rejects_empty_and_duplicate_classes() {
+        let cfg = ServerConfig::default();
+        let err = GemmServer::start_fleet(Path::new("/nonexistent"), Vec::new(), cfg)
+            .unwrap_err();
+        assert!(err.to_string().contains("at least one"), "{err}");
+        let classes = vec![
+            DeviceClass::new(
+                DeviceId::NvidiaP100,
+                1,
+                Box::new(super::super::DefaultPolicy::clblast()),
+            ),
+            DeviceClass::new(
+                DeviceId::NvidiaP100,
+                1,
+                Box::new(super::super::DefaultPolicy::clblast()),
+            ),
+        ];
+        let err = GemmServer::start_fleet(Path::new("/nonexistent"), classes, cfg)
+            .unwrap_err();
+        assert!(err.to_string().contains("twice"), "{err}");
+    }
+
+    fn sim_engine() -> SimEngine {
+        SimEngine::new(DeviceProfile::nvidia_p100(), crate::testing::sample_manifest())
+    }
+
+    #[test]
+    fn shadow_rotation_wraps_and_excludes_served() {
+        let engine = sim_engine();
+        let t = Triple::new(64, 64, 64); // all three artifacts accept it
+        let served = engine.manifest().id_of("d1").unwrap();
+        // Two alternatives (i1, i2): any rotation index wraps onto them
+        // and never returns the served artifact.
+        let mut seen = std::collections::HashSet::new();
+        for rotation in 0..7 {
+            let alt = select_shadow_alternative(&engine, served, t, rotation)
+                .expect("two alternatives exist");
+            assert_ne!(alt, served);
+            seen.insert(alt);
+            // Wrap: rotation and rotation + 2 pick the same alternative.
+            assert_eq!(
+                select_shadow_alternative(&engine, served, t, rotation + 2),
+                Some(alt)
+            );
+        }
+        assert_eq!(seen.len(), 2, "rotation must cover every alternative");
+        // No alternative at all: the only artifact accepting 200^3 is i2.
+        let served = engine.manifest().id_of("i2").unwrap();
+        let none = select_shadow_alternative(&engine, served, Triple::new(200, 200, 200), 3);
+        assert_eq!(none, None);
+    }
+
+    /// Engine double whose servability answer *shrinks* between the
+    /// counting pass and the selection pass — the race the old
+    /// `expect("count > rotation index")` would have turned into a shard
+    /// panic.  The hardened selection must return None instead.
+    struct ShrinkingEngine {
+        inner: SimEngine,
+        calls: std::cell::Cell<usize>,
+    }
+
+    impl ExecutionEngine for ShrinkingEngine {
+        fn device(&self) -> DeviceId {
+            self.inner.device()
+        }
+
+        fn manifest(&self) -> &Manifest {
+            self.inner.manifest()
+        }
+
+        fn is_servable(&self, id: ArtifactId) -> bool {
+            // First pass (counting) says yes to everything; later passes
+            // deny every indirect artifact, shrinking the set under the
+            // selector's feet.
+            let call = self.calls.get();
+            self.calls.set(call + 1);
+            if call < self.manifest().len() {
+                self.inner.is_servable(id)
+            } else {
+                id == self.manifest().id_of("d1").unwrap()
+            }
+        }
+
+        fn ensure_ready(&mut self, _id: ArtifactId) -> Result<()> {
+            Ok(())
+        }
+
+        fn execute_pooled(
+            &mut self,
+            _id: ArtifactId,
+            _input: &GemmInput,
+            _scratch: &mut ScratchBuffers,
+        ) -> Result<GemmTimes> {
+            unreachable!("selection-only test double")
+        }
+    }
+
+    #[test]
+    fn shadow_selection_survives_shrinking_eligible_set() {
+        let engine = ShrinkingEngine {
+            inner: sim_engine(),
+            calls: std::cell::Cell::new(0),
+        };
+        let served = engine.manifest().id_of("d1").unwrap();
+        // Counting pass sees 2 alternatives; the selection pass sees 0.
+        // Regression: this used to be an expect() panic path.
+        let got = select_shadow_alternative(&engine, served, Triple::new(64, 64, 64), 1);
+        assert_eq!(got, None);
+    }
 }

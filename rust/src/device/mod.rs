@@ -8,7 +8,7 @@ pub mod sim;
 use crate::config::KernelConfig;
 
 /// Identifies a device profile (stable id used in datasets/results).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum DeviceId {
     NvidiaP100,
     MaliT860,
@@ -27,10 +27,47 @@ impl DeviceId {
     pub fn parse(s: &str) -> Option<DeviceId> {
         match s {
             "nvidia-p100" | "p100" => Some(DeviceId::NvidiaP100),
-            "mali-t860" | "mali" => Some(DeviceId::MaliT860),
+            "mali-t860" | "mali" | "t860" => Some(DeviceId::MaliT860),
             "host-cpu" | "cpu" => Some(DeviceId::HostCpu),
             _ => None,
         }
+    }
+
+    /// Every device class, in fleet-default order (host first: it is the
+    /// one real backend; the sim devices follow).
+    pub fn all() -> [DeviceId; 3] {
+        [DeviceId::HostCpu, DeviceId::NvidiaP100, DeviceId::MaliT860]
+    }
+
+    /// The accepted spellings, for flag help and parse errors.
+    pub const VALID_NAMES: &'static str =
+        "host-cpu|cpu, nvidia-p100|p100, mali-t860|mali|t860";
+
+    /// Parse a CLI device flag — the single shared parse+error path: every
+    /// `--device`/`--devices` flag goes through here so an unknown name
+    /// always reports the full list of valid spellings.
+    pub fn parse_flag(s: &str) -> anyhow::Result<DeviceId> {
+        DeviceId::parse(s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown device '{s}' (valid: {})",
+                DeviceId::VALID_NAMES
+            )
+        })
+    }
+
+    /// Parse a comma-separated device list (`host-cpu,p100,mali`),
+    /// rejecting duplicates — the `--devices` fleet flag.
+    pub fn parse_list(s: &str) -> anyhow::Result<Vec<DeviceId>> {
+        let mut out = Vec::new();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let d = DeviceId::parse_flag(part)?;
+            if out.contains(&d) {
+                anyhow::bail!("device '{d}' listed twice");
+            }
+            out.push(d);
+        }
+        anyhow::ensure!(!out.is_empty(), "empty device list");
+        Ok(out)
     }
 }
 
@@ -212,7 +249,30 @@ mod tests {
     fn device_id_parse() {
         assert_eq!(DeviceId::parse("p100"), Some(DeviceId::NvidiaP100));
         assert_eq!(DeviceId::parse("mali-t860"), Some(DeviceId::MaliT860));
+        assert_eq!(DeviceId::parse("t860"), Some(DeviceId::MaliT860));
         assert_eq!(DeviceId::parse("bogus"), None);
+    }
+
+    #[test]
+    fn parse_flag_lists_valid_names_on_error() {
+        assert_eq!(DeviceId::parse_flag("t860").unwrap(), DeviceId::MaliT860);
+        let err = DeviceId::parse_flag("gtx480").unwrap_err().to_string();
+        assert!(err.contains("gtx480"), "{err}");
+        for name in ["host-cpu", "p100", "mali-t860", "t860"] {
+            assert!(err.contains(name), "error must list '{name}': {err}");
+        }
+    }
+
+    #[test]
+    fn parse_list_rejects_duplicates_and_empties() {
+        assert_eq!(
+            DeviceId::parse_list("host-cpu, p100,mali").unwrap(),
+            vec![DeviceId::HostCpu, DeviceId::NvidiaP100, DeviceId::MaliT860]
+        );
+        // Aliases of one device are duplicates.
+        assert!(DeviceId::parse_list("mali,t860").is_err());
+        assert!(DeviceId::parse_list("").is_err());
+        assert!(DeviceId::parse_list("cpu,bogus").is_err());
     }
 
     #[test]

@@ -46,6 +46,19 @@ pub fn measure_gflops(
     Some(useful_flops / noisy / 1e9)
 }
 
+/// Modeled wall-seconds of serving `triple` with `cfg` on `dev` — the
+/// inverse view of [`measure_gflops`], shared by the `SimEngine` (which
+/// charges this as the request's kernel time) and the fleet router's
+/// device-choice prediction.  `None` when the config is illegal on the
+/// device.
+pub fn modeled_secs(
+    dev: &DeviceProfile,
+    cfg: &KernelConfig,
+    triple: Triple,
+) -> Option<f64> {
+    measure_gflops(dev, cfg, triple).map(|g| triple.flops() / (g * 1e9))
+}
+
 /// Config-by-shape specialization: on a real GPU a configuration's
 /// occupancy / cache / scheduling behaviour varies strongly and
 /// non-monotonically with the problem region — the reason the paper's
@@ -391,6 +404,25 @@ mod tests {
         let k32 = measure_gflops(&dev, &cfg, Triple::new(256, 256, 32)).unwrap();
         // Throughput counts *useful* flops: K=1 wastes 31/32 of the tile.
         assert!(k32 > 8.0 * k1, "k32 {k32} vs k1 {k1}");
+    }
+
+    #[test]
+    fn modeled_secs_inverts_gflops() {
+        let dev = p100();
+        let cfg = KernelConfig::Xgemm(XgemmParams::default());
+        let t = Triple::new(512, 384, 256);
+        let g = measure_gflops(&dev, &cfg, t).unwrap();
+        let s = modeled_secs(&dev, &cfg, t).unwrap();
+        assert!((s * g * 1e9 - t.flops()).abs() < 1e-3 * t.flops());
+        // Illegal on mali (workgroup too large) -> None on both views.
+        let big = KernelConfig::Xgemm(XgemmParams {
+            mdimc: 32,
+            ndimc: 32,
+            mwg: 128,
+            nwg: 128,
+            ..Default::default()
+        });
+        assert!(modeled_secs(&mali(), &big, t).is_none());
     }
 
     #[test]

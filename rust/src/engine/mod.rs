@@ -1,0 +1,378 @@
+//! Execution engines: the device-abstraction seam between the coordinator
+//! and whatever actually computes a GEMM.
+//!
+//! The paper's central claim is that one adaptive library must select
+//! *different* kernels on different architectures (3x on Pascal, 2.5x on
+//! Mali).  Serving-side, that requires the coordinator to speak to more
+//! than one device — so execution hides behind [`ExecutionEngine`]:
+//!
+//! * [`RuntimeEngine`] — the real path: wraps [`GemmRuntime`] (CPU PJRT
+//!   client + AOT artifacts).  A pure delegation layer with **zero
+//!   behavior change**: the pooled path stays allocation-free and
+//!   bit-identical to calling `gemm_pooled` directly.
+//! * [`SimEngine`] — makes the paper's P100 / Mali-T860 first-class
+//!   *serveable* devices: results are computed with the host reference
+//!   kernel (so correctness is exact), while the reported [`GemmTimes`]
+//!   charge the wall-time of the analytical device model in
+//!   [`device::sim`] — the same model the offline tuner measures against,
+//!   so online telemetry and offline oracles agree by construction.
+//!
+//! Engines are built *on the shard thread that owns them* (PJRT handles
+//! never cross threads), so the coordinator passes a cloneable
+//! [`EngineSpec`] to each shard instead of a live engine.
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{KernelConfig, Triple};
+use crate::device::{sim, DeviceId, DeviceProfile};
+use crate::runtime::{
+    host_gemm_into, ArtifactId, GemmInput, GemmRuntime, GemmTimes, Manifest,
+    ScratchBuffers,
+};
+
+/// A device-class execution backend for the serving coordinator.
+///
+/// The contract mirrors the pooled hot path: selection resolves a policy
+/// config to a dense [`ArtifactId`] ([`resolve`](Self::resolve)), shadow
+/// runs pre-compile outside the measurement
+/// ([`ensure_ready`](Self::ensure_ready)), and execution lands the result
+/// in caller-held [`ScratchBuffers`] with zero steady-state allocations
+/// ([`execute_pooled`](Self::execute_pooled)).
+pub trait ExecutionEngine {
+    /// The device class this engine executes on.
+    fn device(&self) -> DeviceId;
+
+    /// The artifact/config roster this engine serves from.
+    fn manifest(&self) -> &Manifest;
+
+    /// Device-level legality of an artifact beyond shape eligibility
+    /// (e.g. a config whose work-group exceeds the device's limit).
+    fn is_servable(&self, id: ArtifactId) -> bool;
+
+    /// Prepare an artifact for execution (compile on the real path; no-op
+    /// for the analytical engines).  Shadow execution calls this outside
+    /// its measurement, like the served path does.
+    fn ensure_ready(&mut self, id: ArtifactId) -> Result<()>;
+
+    /// Execute into the caller's scratch pool (result in `scratch.out`),
+    /// reporting the §5.4-attributed timing.  The real serving path
+    /// ([`RuntimeEngine`]) performs zero steady-state heap allocations
+    /// through this method — the `hotpath` bench gates that through the
+    /// trait; [`SimEngine`] trades that for exactness (the host
+    /// reference kernel allocates its accumulator).
+    fn execute_pooled(
+        &mut self,
+        id: ArtifactId,
+        input: &GemmInput,
+        scratch: &mut ScratchBuffers,
+    ) -> Result<GemmTimes>;
+
+    /// Resolve a policy-selected config to the least-waste *servable*
+    /// artifact for `t`, falling back to any servable artifact accepting
+    /// `t` (least waste) when the config has none — the dispatcher's
+    /// selection → artifact step, now device-legality-aware.
+    /// Allocation-free: two passes over the small immutable manifest.
+    fn resolve(&self, cfg: &KernelConfig, t: Triple) -> Option<ArtifactId> {
+        let m = self.manifest();
+        m.artifact_id_for_config(cfg, t)
+            .filter(|id| self.is_servable(*id))
+            .or_else(|| {
+                (0..m.len() as u32)
+                    .map(ArtifactId)
+                    .filter(|id| self.is_servable(*id) && m.meta(*id).accepts(t))
+                    .min_by(|a, b| {
+                        m.meta(*a)
+                            .waste(t)
+                            .partial_cmp(&m.meta(*b).waste(t))
+                            .unwrap()
+                    })
+            })
+    }
+}
+
+/// The real execution path: the CPU PJRT runtime over the AOT artifacts,
+/// behind the engine trait.  Every method delegates; the pooled path is
+/// bit-identical to `GemmRuntime::gemm_pooled` and allocation-free at
+/// steady state (the `hotpath` bench gates this through the trait).
+pub struct RuntimeEngine {
+    runtime: GemmRuntime,
+}
+
+impl RuntimeEngine {
+    pub fn open(dir: &Path) -> Result<RuntimeEngine> {
+        Ok(RuntimeEngine { runtime: GemmRuntime::open(dir)? })
+    }
+
+    /// The wrapped runtime (diagnostics: compile time, cache stats).
+    pub fn runtime(&self) -> &GemmRuntime {
+        &self.runtime
+    }
+}
+
+impl ExecutionEngine for RuntimeEngine {
+    fn device(&self) -> DeviceId {
+        DeviceId::HostCpu
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.runtime.manifest
+    }
+
+    fn is_servable(&self, id: ArtifactId) -> bool {
+        // Every roster artifact was AOT-compiled for this host.
+        (id.0 as usize) < self.runtime.manifest.len()
+    }
+
+    fn ensure_ready(&mut self, id: ArtifactId) -> Result<()> {
+        self.runtime.ensure_compiled_id(id)
+    }
+
+    fn execute_pooled(
+        &mut self,
+        id: ArtifactId,
+        input: &GemmInput,
+        scratch: &mut ScratchBuffers,
+    ) -> Result<GemmTimes> {
+        self.runtime.gemm_pooled(id, input, scratch)
+    }
+}
+
+/// Analytical device engine: serves a [`DeviceProfile`] (P100 / Mali) by
+/// computing the *result* with the host reference kernel — so served
+/// outputs are exact — while charging the *time* of the analytical model
+/// (`device::sim`), the substitute for the OpenCL hardware we do not have.
+/// Telemetry sampled from this engine therefore carries the same timing
+/// landscape the offline tuner sweeps, and per-device adaptation
+/// converges against the same oracle.
+pub struct SimEngine {
+    profile: DeviceProfile,
+    manifest: Manifest,
+    /// Device legality per artifact, precomputed at open.
+    servable: Vec<bool>,
+}
+
+impl SimEngine {
+    pub fn open(dir: &Path, device: DeviceId) -> Result<SimEngine> {
+        Ok(SimEngine::new(DeviceProfile::get(device), Manifest::load(dir)?))
+    }
+
+    /// Build from already-loaded parts (tests, tools).
+    pub fn new(profile: DeviceProfile, manifest: Manifest) -> SimEngine {
+        let servable = manifest
+            .artifacts
+            .iter()
+            .map(|a| profile.is_legal(&a.config))
+            .collect();
+        SimEngine { profile, manifest, servable }
+    }
+
+    pub fn profile(&self) -> &DeviceProfile {
+        &self.profile
+    }
+}
+
+impl ExecutionEngine for SimEngine {
+    fn device(&self) -> DeviceId {
+        self.profile.id
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn is_servable(&self, id: ArtifactId) -> bool {
+        self.servable.get(id.0 as usize).copied().unwrap_or(false)
+    }
+
+    fn ensure_ready(&mut self, id: ArtifactId) -> Result<()> {
+        if (id.0 as usize) >= self.manifest.len() {
+            bail!(
+                "artifact id {} out of range for this roster ({} artifacts)",
+                id.0,
+                self.manifest.len()
+            );
+        }
+        Ok(())
+    }
+
+    fn execute_pooled(
+        &mut self,
+        id: ArtifactId,
+        input: &GemmInput,
+        scratch: &mut ScratchBuffers,
+    ) -> Result<GemmTimes> {
+        input.validate()?;
+        self.ensure_ready(id)?;
+        let meta = self.manifest.meta(id);
+        let t = input.triple();
+        if !meta.accepts(t) {
+            bail!("artifact '{}' does not accept {t}", meta.name);
+        }
+        if !self.is_servable(id) {
+            bail!(
+                "config {} is illegal on {} (work-group/local-memory limits)",
+                meta.config.name(),
+                self.profile.id
+            );
+        }
+        // Modeled wall-time of the device running this config on this
+        // triple; the model already folds the helper passes and launch
+        // overhead in, so everything lands in kernel_time.
+        let secs = sim::modeled_secs(&self.profile, &meta.config, t)
+            .ok_or_else(|| anyhow!("config not measurable on {}", self.profile.id))?;
+        // Exact result via the host reference kernel.  The output buffer
+        // reuses its capacity at steady state; the kernel itself keeps a
+        // per-call f64 accumulator (and fans out over row bands for big
+        // problems), so unlike the real engine this path is *not*
+        // allocation-free — exactness over the zero-alloc contract.
+        scratch.out.clear();
+        scratch.out.resize(input.m * input.n, 0.0);
+        host_gemm_into(input, &mut scratch.out);
+        Ok(GemmTimes {
+            helper_time: Duration::ZERO,
+            kernel_time: Duration::from_secs_f64(secs),
+        })
+    }
+}
+
+/// How to build an engine — `Clone + Send`, so the coordinator can hand
+/// one to each shard thread and let the shard construct its engine
+/// locally (PJRT clients are created on, and never leave, their thread).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineSpec {
+    /// The real CPU PJRT runtime.
+    Runtime,
+    /// Analytical engine for a simulated device profile.
+    Sim(DeviceId),
+}
+
+impl EngineSpec {
+    /// The natural engine for a device class: the host CPU is the one
+    /// device we physically have; everything else is simulated.
+    pub fn for_device(device: DeviceId) -> EngineSpec {
+        match device {
+            DeviceId::HostCpu => EngineSpec::Runtime,
+            other => EngineSpec::Sim(other),
+        }
+    }
+
+    pub fn device(&self) -> DeviceId {
+        match self {
+            EngineSpec::Runtime => DeviceId::HostCpu,
+            EngineSpec::Sim(d) => *d,
+        }
+    }
+
+    /// Build the engine (call on the owning shard thread).
+    pub fn build(&self, artifacts: &Path) -> Result<Box<dyn ExecutionEngine>> {
+        Ok(match self {
+            EngineSpec::Runtime => Box::new(RuntimeEngine::open(artifacts)?),
+            EngineSpec::Sim(d) => Box::new(SimEngine::open(artifacts, *d)?),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::sample_manifest;
+
+    fn sim(device: DeviceId) -> SimEngine {
+        SimEngine::new(DeviceProfile::get(device), sample_manifest())
+    }
+
+    #[test]
+    fn sim_engine_serves_exact_host_results_and_charges_modeled_time() {
+        let mut eng = sim(DeviceId::NvidiaP100);
+        let (m, n, k) = (64usize, 64usize, 64usize);
+        let a = vec![0.5f32; m * k];
+        let b = vec![1.0f32; k * n];
+        let c = vec![0.0f32; m * n];
+        let input = GemmInput { m, n, k, a: &a, b: &b, c: &c, alpha: 1.0, beta: 0.0 };
+        let id = eng.manifest().id_of("d1").unwrap();
+        let mut scratch = ScratchBuffers::new();
+        let times = eng.execute_pooled(id, &input, &mut scratch).unwrap();
+        assert_eq!(scratch.out.len(), m * n);
+        assert!((scratch.out[0] - 32.0).abs() < 1e-4, "{}", scratch.out[0]);
+        // The charged time is the analytical model's, exactly.
+        let cfg = eng.manifest().meta(id).config;
+        let expect = sim::modeled_secs(eng.profile(), &cfg, input.triple()).unwrap();
+        let got = times.total_time().as_secs_f64();
+        assert!((got - expect).abs() < 1e-12, "{got} vs {expect}");
+    }
+
+    #[test]
+    fn sim_engine_rejects_illegal_config_on_device() {
+        // i2's 32x32 work-group (1024) exceeds Mali's 256 limit.
+        let mut eng = sim(DeviceId::MaliT860);
+        let id = eng.manifest().id_of("i2").unwrap();
+        assert!(!eng.is_servable(id));
+        let a = vec![0.0f32; 4];
+        let input = GemmInput {
+            m: 2, n: 2, k: 2,
+            a: &a, b: &a, c: &a,
+            alpha: 1.0, beta: 0.0,
+        };
+        let mut scratch = ScratchBuffers::new();
+        let err = eng.execute_pooled(id, &input, &mut scratch);
+        assert!(err.is_err());
+        // On the P100 the same artifact is fine.
+        assert!(sim(DeviceId::NvidiaP100).is_servable(id));
+    }
+
+    #[test]
+    fn resolve_falls_back_to_device_legal_artifacts() {
+        let eng = sim(DeviceId::MaliT860);
+        let t = Triple::new(200, 200, 200);
+        // The policy asks for i2's config (illegal on Mali); the only
+        // artifact accepting 200^3 is i2, so resolution must fail rather
+        // than hand the device an illegal artifact.
+        let cfg = eng.manifest().find("i2").unwrap().config;
+        assert_eq!(eng.resolve(&cfg, t), None);
+        // In-bucket shape: falls back to the legal 128-bucket artifact.
+        let t = Triple::new(100, 100, 100);
+        let id = eng.resolve(&cfg, t).unwrap();
+        assert_eq!(eng.manifest().name_of(id), "i1");
+        // On the P100, the same request resolves to the asked config.
+        let p100 = sim(DeviceId::NvidiaP100);
+        let id = p100.resolve(&cfg, Triple::new(200, 200, 200)).unwrap();
+        assert_eq!(p100.manifest().name_of(id), "i2");
+    }
+
+    #[test]
+    fn engine_spec_maps_devices() {
+        assert_eq!(EngineSpec::for_device(DeviceId::HostCpu), EngineSpec::Runtime);
+        assert_eq!(
+            EngineSpec::for_device(DeviceId::MaliT860),
+            EngineSpec::Sim(DeviceId::MaliT860)
+        );
+        for d in DeviceId::all() {
+            assert_eq!(EngineSpec::for_device(d).device(), d);
+        }
+    }
+
+    #[test]
+    fn sim_engine_validates_operands_and_shape() {
+        let mut eng = sim(DeviceId::NvidiaP100);
+        let id = eng.manifest().id_of("d1").unwrap();
+        let a = vec![0.0f32; 3];
+        let bad = GemmInput {
+            m: 2, n: 2, k: 2,
+            a: &a, b: &a, c: &a,
+            alpha: 1.0, beta: 0.0,
+        };
+        let mut scratch = ScratchBuffers::new();
+        assert!(eng.execute_pooled(id, &bad, &mut scratch).is_err());
+        // Exact-shape direct artifact rejects other triples.
+        let a = vec![0.0f32; 9];
+        let wrong = GemmInput {
+            m: 3, n: 3, k: 3,
+            a: &a, b: &a, c: &a,
+            alpha: 1.0, beta: 0.0,
+        };
+        assert!(eng.execute_pooled(id, &wrong, &mut scratch).is_err());
+    }
+}

@@ -28,7 +28,7 @@
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use anyhow::{Context as _, Result};
 
@@ -314,30 +314,9 @@ fn warm(handle: &ServerHandle, mix: &[Triple], shards: usize) {
 /// so the tap lags the last response.  Wait for it so every adapt step
 /// folds the complete wave — `expected` is exact when the sampling
 /// fraction is 1.0; otherwise fall back to waiting for the tap to go
-/// quiet.
+/// quiet.  One ring here; the hetero experiment passes one per device.
 fn await_tap(telemetry: &TelemetryRing, expected: Option<u64>) {
-    let deadline = Instant::now() + Duration::from_secs(10);
-    match expected {
-        Some(target) => {
-            while telemetry.pushed() < target && Instant::now() < deadline {
-                std::thread::yield_now();
-            }
-        }
-        None => {
-            let mut last = telemetry.pushed();
-            let mut quiet = Instant::now();
-            while Instant::now() < deadline {
-                std::thread::sleep(Duration::from_millis(5));
-                let now = telemetry.pushed();
-                if now != last {
-                    last = now;
-                    quiet = Instant::now();
-                } else if quiet.elapsed() >= Duration::from_millis(100) {
-                    break;
-                }
-            }
-        }
-    }
+    crate::coordinator::await_taps(&[telemetry], expected);
 }
 
 /// Expected pushed() total after `n` more sampled requests, exact only

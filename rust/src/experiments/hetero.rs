@@ -1,0 +1,668 @@
+//! Heterogeneous-fleet experiment: the paper's central claim, served.
+//!
+//! The same adaptive library must select *different* kernels on different
+//! architectures (3x on Pascal, 2.5x on Mali — §1).  This experiment
+//! serves one mixed AntonNet workload through a fleet of {host-cpu,
+//! nvidia-p100, mali-t860} device classes: the host CPU runs the real
+//! PJRT runtime, the two GPUs run analytical engines charging the
+//! device-model wall-time (`engine::SimEngine`).  Each class starts from
+//! its own default policy and adapts independently — per-device telemetry
+//! rings, per-device trainers, per-device hot-swaps — while the
+//! device-aware router spreads traffic by predicted service time and
+//! queue depth.
+//!
+//! Scoring is per device, against that device's own oracle (measured on
+//! the real backend for the host, the analytical model for the GPUs):
+//! a request served on device D with config c scores c's GFLOP/s over
+//! D's per-triple peak, and the *selection accuracy* is the fraction of
+//! requests served within 10% of peak (the drift experiment's
+//! performance-aware metric).  Each wave combines the router's free
+//! burst (whose split is reported as traffic share) with a *pinned
+//! coverage sweep* — one request per (device, mix triple), bypassing
+//! the router — so every device's accuracy is measurable even when the
+//! router concentrates free traffic on the predicted-fastest class.
+//! The machine-readable summary lands in `BENCH_hetero.json`; CI gates
+//! per-device accuracy against the committed baseline.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context as _, Result};
+
+use crate::config::{KernelConfig, Triple};
+use crate::coordinator::{
+    adapt_step, await_taps, DeviceClass, GemmServer, PolicyHandle, SelectPolicy,
+    ServerConfig, TelemetryRing,
+};
+use crate::dataset::{antonnet, DatasetKind, LabeledDataset};
+use crate::device::{sim, DeviceId, DeviceProfile};
+use crate::dtree::{MinSamples, OnlineTrainer, TrainParams};
+use crate::runtime::{Manifest, PjrtBackend};
+use crate::tuner::Backend;
+use crate::util::json::Json;
+
+use super::e2e::request_stream_from;
+
+/// A selection within this factor of its device's peak counts as "good".
+const GOOD_QUALITY: f64 = 0.9;
+
+/// Knobs of the hetero run.
+#[derive(Debug, Clone)]
+pub struct HeteroConfig {
+    /// Requests per wave (per-device adaptation steps run between waves).
+    pub requests_per_wave: usize,
+    pub waves: usize,
+    /// Dispatcher shards per device class.
+    pub shards_per_class: usize,
+    /// Measurement repetitions for the host-CPU oracle.
+    pub reps: usize,
+    pub telemetry_fraction: f64,
+    pub shadow_fraction: f64,
+    /// Device classes of the fleet.
+    pub devices: Vec<DeviceId>,
+}
+
+impl Default for HeteroConfig {
+    fn default() -> Self {
+        HeteroConfig {
+            requests_per_wave: 48,
+            waves: 2,
+            shards_per_class: 1,
+            reps: 1,
+            telemetry_fraction: 1.0,
+            shadow_fraction: 1.0,
+            devices: DeviceId::all().to_vec(),
+        }
+    }
+}
+
+/// Distinct roster configurations legal on a device.
+pub fn legal_roster(manifest: &Manifest, device: DeviceId) -> Vec<KernelConfig> {
+    let profile = DeviceProfile::get(device);
+    let mut v: Vec<KernelConfig> = manifest
+        .artifacts
+        .iter()
+        .map(|a| a.config)
+        .filter(|c| profile.is_legal(c))
+        .collect();
+    v.sort_by_key(|c| c.name());
+    v.dedup();
+    v
+}
+
+/// The initial per-device policy: CLBlast-style defaults restricted to
+/// the device-legal roster subset.  A device whose legal subset lacks one
+/// kernel kind degenerates to a single-config policy.
+pub fn device_policy(
+    manifest: &Manifest,
+    device: DeviceId,
+) -> Result<Box<dyn SelectPolicy>> {
+    use crate::coordinator::DefaultPolicy;
+    let roster = legal_roster(manifest, device);
+    anyhow::ensure!(!roster.is_empty(), "no roster config is legal on {device}");
+    Ok(match DefaultPolicy::from_roster(&roster) {
+        Some(p) => Box::new(p),
+        None => {
+            let only = roster[0];
+            Box::new(DefaultPolicy { direct: only, xgemm: only, threshold_geo: 384.0 })
+        }
+    })
+}
+
+/// The mixed AntonNet workload: real-network GEMM shapes every fleet
+/// device can serve (shape-eligible in the roster *and* at least one
+/// device-legal artifact per device), spread deterministically across the
+/// population and capped.  Falls back to the e2e workload triples when
+/// the roster is too small for any AntonNet shape.
+pub fn hetero_mix(manifest: &Manifest, devices: &[DeviceId]) -> Vec<Triple> {
+    const CAP: usize = 12;
+    let servable_everywhere = |t: Triple| {
+        devices.iter().all(|&d| {
+            let profile = DeviceProfile::get(d);
+            manifest
+                .artifacts
+                .iter()
+                .any(|a| a.accepts(t) && profile.is_legal(&a.config))
+        })
+    };
+    let pool: Vec<Triple> = antonnet::triples()
+        .into_iter()
+        .filter(|&t| servable_everywhere(t))
+        .collect();
+    let mut mix: Vec<Triple> = if pool.is_empty() {
+        super::e2e::workload_triples()
+            .into_iter()
+            .filter(|&t| servable_everywhere(t))
+            .collect()
+    } else {
+        let stride = (pool.len() / CAP).max(1);
+        pool.into_iter().step_by(stride).take(CAP).collect()
+    };
+    mix.dedup();
+    mix
+}
+
+/// Ground truth for one device: GFLOP/s of every candidate config per
+/// mix triple, from the device's *own* measurement source.
+struct DeviceOracle {
+    perf: HashMap<(Triple, KernelConfig), f64>,
+    peak: HashMap<Triple, f64>,
+}
+
+impl DeviceOracle {
+    fn insert(&mut self, t: Triple, cfg: KernelConfig, g: f64) {
+        self.perf.insert((t, cfg), g);
+        let peak = self.peak.entry(t).or_insert(g);
+        if g > *peak {
+            *peak = g;
+        }
+    }
+
+    /// Served quality: GFLOP/s over the triple's peak on this device
+    /// (0.0 for a config this oracle never saw run).
+    fn quality(&self, t: Triple, cfg: KernelConfig) -> f64 {
+        match (self.perf.get(&(t, cfg)), self.peak.get(&t)) {
+            (Some(g), Some(peak)) if *peak > 0.0 => g / peak,
+            _ => 0.0,
+        }
+    }
+}
+
+/// Build a device's oracle over the mix: real measurements for the host
+/// CPU, the analytical model for the simulated GPUs — each device is
+/// scored against what *it* would actually observe.
+fn build_oracle(
+    artifacts: &Path,
+    manifest: &Manifest,
+    device: DeviceId,
+    mix: &[Triple],
+    reps: usize,
+) -> Result<DeviceOracle> {
+    let mut oracle = DeviceOracle { perf: HashMap::new(), peak: HashMap::new() };
+    match device {
+        DeviceId::HostCpu => {
+            let mut backend = PjrtBackend::open(artifacts)?;
+            backend.reps = reps.max(1);
+            for &t in mix {
+                for cfg in backend.candidates(t) {
+                    if let Some(g) = backend.measure(&cfg, t) {
+                        oracle.insert(t, cfg, g);
+                    }
+                }
+            }
+        }
+        sim_dev => {
+            let profile = DeviceProfile::get(sim_dev);
+            let roster = legal_roster(manifest, sim_dev);
+            for &t in mix {
+                for &cfg in &roster {
+                    let has_artifact = manifest
+                        .artifacts
+                        .iter()
+                        .any(|a| a.config == cfg && a.accepts(t));
+                    if !has_artifact {
+                        continue;
+                    }
+                    if let Some(g) = sim::measure_gflops(&profile, &cfg, t) {
+                        oracle.insert(t, cfg, g);
+                    }
+                }
+            }
+        }
+    }
+    for &t in mix {
+        anyhow::ensure!(
+            oracle.peak.contains_key(&t),
+            "no measurable config for {t} on {device}"
+        );
+    }
+    Ok(oracle)
+}
+
+/// Cumulative per-device scorecard of the run.
+#[derive(Debug, Clone)]
+pub struct DeviceScore {
+    pub device: DeviceId,
+    /// Scored requests served on this device across all waves — the
+    /// router's free traffic plus the pinned coverage sweeps (one per
+    /// mix triple per wave), so every device's selection accuracy is
+    /// measurable even when the router rarely picks it.
+    pub served: usize,
+    /// Free-burst requests the router chose this device for (the
+    /// traffic-share numerator; pinned coverage excluded).
+    pub routed: usize,
+    good: usize,
+    quality_sum: f64,
+    /// Requests served on this device in the final (post-adaptation) wave.
+    pub served_final: usize,
+    good_final: usize,
+    quality_final: f64,
+    pub epoch_max: u64,
+    /// Policy hot-swaps this device's adaptation performed.
+    pub swaps: u64,
+}
+
+impl DeviceScore {
+    fn new(device: DeviceId) -> DeviceScore {
+        DeviceScore {
+            device,
+            served: 0,
+            routed: 0,
+            good: 0,
+            quality_sum: 0.0,
+            served_final: 0,
+            good_final: 0,
+            quality_final: 0.0,
+            epoch_max: 0,
+            swaps: 0,
+        }
+    }
+
+    /// Selection accuracy over the whole run (None if never served).
+    pub fn accuracy(&self) -> Option<f64> {
+        (self.served > 0).then(|| self.good as f64 / self.served as f64)
+    }
+
+    /// Mean served quality over the whole run (DTPR analogue).
+    pub fn dtpr(&self) -> Option<f64> {
+        (self.served > 0).then(|| self.quality_sum / self.served as f64)
+    }
+
+    /// Selection accuracy of the final wave only.
+    pub fn accuracy_final(&self) -> Option<f64> {
+        (self.served_final > 0)
+            .then(|| self.good_final as f64 / self.served_final as f64)
+    }
+
+    /// Mean served quality of the final wave only.
+    pub fn dtpr_final(&self) -> Option<f64> {
+        (self.served_final > 0)
+            .then(|| self.quality_final / self.served_final as f64)
+    }
+}
+
+/// The full hetero run.
+pub struct HeteroReport {
+    pub cfg: HeteroConfig,
+    pub mix: Vec<Triple>,
+    pub devices: Vec<DeviceScore>,
+    /// Total scored requests (all waves, all devices, free + pinned).
+    pub requests: usize,
+    /// Router-routed (free-burst) requests — the traffic-share
+    /// denominator.
+    pub free_requests: usize,
+    pub wall: Duration,
+    total_flops: f64,
+    overall_good: usize,
+    overall_quality: f64,
+}
+
+impl HeteroReport {
+    pub fn overall_accuracy(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.overall_good as f64 / self.requests as f64
+        }
+    }
+
+    pub fn overall_dtpr(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.overall_quality / self.requests as f64
+        }
+    }
+
+    pub fn rps(&self) -> f64 {
+        self.requests as f64 / self.wall.as_secs_f64()
+    }
+
+    pub fn gflops(&self) -> f64 {
+        self.total_flops / self.wall.as_secs_f64() / 1e9
+    }
+
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(Json::num).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("bench", Json::str("hetero")),
+            ("requests_per_wave", Json::num(self.cfg.requests_per_wave as f64)),
+            ("waves", Json::num(self.cfg.waves as f64)),
+            ("shards_per_class", Json::num(self.cfg.shards_per_class as f64)),
+            (
+                "mix",
+                Json::Arr(
+                    self.mix
+                        .iter()
+                        .map(|t| {
+                            Json::Arr(vec![Json::num(t.m), Json::num(t.n), Json::num(t.k)])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "devices",
+                Json::Arr(
+                    self.devices
+                        .iter()
+                        .map(|d| {
+                            Json::obj(vec![
+                                ("device", Json::str(d.device.name())),
+                                ("served", Json::num(d.served as f64)),
+                                ("routed", Json::num(d.routed as f64)),
+                                (
+                                    "share",
+                                    Json::num(if self.free_requests == 0 {
+                                        0.0
+                                    } else {
+                                        d.routed as f64 / self.free_requests as f64
+                                    }),
+                                ),
+                                ("accuracy", opt(d.accuracy())),
+                                ("dtpr", opt(d.dtpr())),
+                                ("accuracy_final", opt(d.accuracy_final())),
+                                ("dtpr_final", opt(d.dtpr_final())),
+                                ("swaps", Json::num(d.swaps as f64)),
+                                ("epoch_max", Json::num(d.epoch_max as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("overall_accuracy", Json::num(self.overall_accuracy())),
+            ("overall_dtpr", Json::num(self.overall_dtpr())),
+            ("rps", Json::num(self.rps())),
+            ("gflops", Json::num(self.gflops())),
+        ])
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "=== Hetero fleet: {} devices, {} waves x {} requests, mix of {} \
+             AntonNet shapes ===\n",
+            self.devices.len(),
+            self.cfg.waves,
+            self.cfg.requests_per_wave,
+            self.mix.len(),
+        );
+        for d in &self.devices {
+            let pct = |v: Option<f64>| match v {
+                Some(v) => format!("{:5.1}%", 100.0 * v),
+                None => "    —".to_string(),
+            };
+            s.push_str(&format!(
+                "{:<12} served {:4} (routed share {:4.0}%)  accuracy {}  quality {}  \
+                 final {}  swaps {} (epoch {})\n",
+                d.device.name(),
+                d.served,
+                if self.free_requests == 0 {
+                    0.0
+                } else {
+                    100.0 * d.routed as f64 / self.free_requests as f64
+                },
+                pct(d.accuracy()),
+                match d.dtpr() {
+                    Some(v) => format!("{v:.3}"),
+                    None => "—".to_string(),
+                },
+                pct(d.accuracy_final()),
+                d.swaps,
+                d.epoch_max,
+            ));
+        }
+        s.push_str(&format!(
+            "overall: accuracy {:5.1}%  quality {:.3}  {:.1} req/s  {:.2} GFLOP/s\n",
+            100.0 * self.overall_accuracy(),
+            self.overall_dtpr(),
+            self.rps(),
+            self.gflops(),
+        ));
+        s
+    }
+
+    /// Write the machine-readable summary (the CI gate input).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+/// Run the full hetero experiment.
+pub fn run(artifacts: &Path, cfg: HeteroConfig) -> Result<HeteroReport> {
+    anyhow::ensure!(!cfg.devices.is_empty(), "hetero fleet needs devices");
+    let manifest = Manifest::load(artifacts)?;
+    let mix = hetero_mix(&manifest, &cfg.devices);
+    anyhow::ensure!(!mix.is_empty(), "no mix triple is servable on every device");
+
+    // ---------------------------------------- phase 0: per-device oracles
+    let mut oracles: HashMap<DeviceId, DeviceOracle> = HashMap::new();
+    for &d in &cfg.devices {
+        oracles.insert(d, build_oracle(artifacts, &manifest, d, &mix, cfg.reps)?);
+    }
+
+    // Per-device initial policies + trainers seeded with the initial
+    // policy's own labels (so the first mispredictions are honest).
+    let mut classes = Vec::new();
+    let mut trainers: HashMap<DeviceId, OnlineTrainer> = HashMap::new();
+    for &d in &cfg.devices {
+        let policy = device_policy(&manifest, d)?;
+        let mut seed = LabeledDataset {
+            kind: DatasetKind::AntonNet,
+            device: d.name().into(),
+            entries: Vec::new(),
+            classes: Default::default(),
+        };
+        for &t in &mix {
+            let label = seed.classes.intern(policy.select(t));
+            seed.entries.push((t, label));
+        }
+        let params =
+            TrainParams { max_depth: None, min_samples_leaf: MinSamples::Count(1) };
+        let mut trainer = OnlineTrainer::new(seed, params);
+        trainer.min_observations = (cfg.requests_per_wave / 8).clamp(4, 32);
+        trainers.insert(d, trainer);
+        classes.push(DeviceClass::new(d, cfg.shards_per_class, policy));
+    }
+
+    // ------------------------------------------------ serve the fleet
+    let server = GemmServer::start_fleet(
+        artifacts,
+        classes,
+        ServerConfig::adaptive(
+            cfg.shards_per_class,
+            cfg.telemetry_fraction,
+            cfg.shadow_fraction,
+        ),
+    )?;
+    let handle = server.handle();
+    let rings: Vec<std::sync::Arc<TelemetryRing>> = cfg
+        .devices
+        .iter()
+        .map(|&d| server.telemetry_for(d).expect("fleet device"))
+        .collect();
+    let handles: Vec<std::sync::Arc<PolicyHandle>> = cfg
+        .devices
+        .iter()
+        .map(|&d| server.policy_handle_for(d).expect("fleet device"))
+        .collect();
+
+    let mut scores: Vec<DeviceScore> =
+        cfg.devices.iter().map(|&d| DeviceScore::new(d)).collect();
+    let mut requests_total = 0usize;
+    let mut free_requests = 0usize;
+    let mut total_flops = 0.0f64;
+    let mut overall_good = 0usize;
+    let mut overall_quality = 0.0f64;
+    let mut wall = Duration::ZERO;
+    let mut sampled_total = 0u64;
+
+    for wave in 0..cfg.waves.max(1) {
+        let final_wave = wave + 1 == cfg.waves.max(1);
+        let requests =
+            request_stream_from(&mix, cfg.requests_per_wave, 0x4E7E20 + wave as u64);
+        total_flops += requests.iter().map(|r| r.triple().flops()).sum::<f64>();
+        let t0 = Instant::now();
+        // Free burst: the router sees real queue depth, so the fleet
+        // spreads by predicted-service-time x backlog.  Pinned coverage
+        // sweep on top: one request per (device, mix triple), bypassing
+        // the router — every device's selection accuracy is measured on
+        // identical traffic (and every device's adaptation loop gets
+        // telemetry) even when the router would rarely pick it.
+        let mut pending: Vec<(Triple, Option<DeviceId>, _)> = requests
+            .into_iter()
+            .map(|r| {
+                let t = r.triple();
+                (t, None, handle.submit(r))
+            })
+            .collect();
+        for &d in &cfg.devices {
+            for (i, &t) in mix.iter().enumerate() {
+                let seed = 0xC07E4 + wave as u64 * 1000 + i as u64;
+                let req = request_stream_from(&[t], 1, seed).pop().expect("one request");
+                total_flops += t.flops();
+                let rx = handle.submit_to(d, req).context("fleet device missing")?;
+                pending.push((t, Some(d), rx));
+            }
+        }
+        for (t, pinned, rx) in pending {
+            let resp = rx.recv().map_err(|_| anyhow::anyhow!("server dropped"))?;
+            resp.out.with_context(|| format!("request {t} failed"))?;
+            if let Some(d) = pinned {
+                anyhow::ensure!(
+                    resp.device == d,
+                    "pinned request for {d} served by {}",
+                    resp.device
+                );
+            }
+            let served = manifest
+                .find(&resp.artifact)
+                .map(|a| a.config)
+                .context("response names unknown artifact")?;
+            let q = oracles[&resp.device].quality(t, served);
+            let score = scores
+                .iter_mut()
+                .find(|s| s.device == resp.device)
+                .context("response from unknown device")?;
+            score.served += 1;
+            if pinned.is_none() {
+                score.routed += 1;
+                free_requests += 1;
+            }
+            score.quality_sum += q;
+            score.epoch_max = score.epoch_max.max(resp.epoch);
+            let good = q >= GOOD_QUALITY;
+            if good {
+                score.good += 1;
+            }
+            if final_wave {
+                score.served_final += 1;
+                score.quality_final += q;
+                if good {
+                    score.good_final += 1;
+                }
+            }
+            requests_total += 1;
+            overall_quality += q;
+            if good {
+                overall_good += 1;
+            }
+        }
+        wall += t0.elapsed();
+        // Per-device adaptation between waves, each on its own ring and
+        // policy slot — the fleet-wide analogue of the drift experiment's
+        // deterministic adapt step.
+        sampled_total +=
+            (cfg.requests_per_wave + cfg.devices.len() * mix.len()) as u64;
+        let expected = (cfg.telemetry_fraction >= 1.0).then_some(sampled_total);
+        let ring_refs: Vec<&TelemetryRing> = rings.iter().map(|r| r.as_ref()).collect();
+        await_taps(&ring_refs, expected);
+        for (i, &d) in cfg.devices.iter().enumerate() {
+            let trainer = trainers.get_mut(&d).expect("trainer per device");
+            let outcome = adapt_step(trainer, &rings[i], &handles[i]);
+            if outcome.swapped_epoch.is_some() {
+                scores[i].swaps += 1;
+            }
+        }
+    }
+    drop(handle);
+    let _ = server.shutdown();
+
+    Ok(HeteroReport {
+        cfg,
+        mix,
+        devices: scores,
+        requests: requests_total,
+        free_requests,
+        wall,
+        total_flops,
+        overall_good,
+        overall_quality,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        crate::testing::sample_manifest()
+    }
+
+    #[test]
+    fn legal_roster_filters_per_device() {
+        let m = manifest();
+        let p100 = legal_roster(&m, DeviceId::NvidiaP100);
+        let mali = legal_roster(&m, DeviceId::MaliT860);
+        // i2's 1024-thread work-group is illegal on Mali only.
+        assert_eq!(p100.len(), 3);
+        assert_eq!(mali.len(), 2);
+    }
+
+    #[test]
+    fn mix_only_contains_universally_servable_triples() {
+        let m = manifest();
+        let devices = DeviceId::all();
+        let mix = hetero_mix(&m, &devices);
+        assert!(!mix.is_empty());
+        for &t in &mix {
+            // Mali's only legal bucket is 128^3 here, so every mix triple
+            // must fit it (or the exact 64^3 direct artifact).
+            assert!(
+                t.m <= 128 && t.n <= 128 && t.k <= 128,
+                "{t} not servable on mali"
+            );
+        }
+    }
+
+    #[test]
+    fn device_policy_selects_only_device_legal_configs() {
+        let m = manifest();
+        for d in DeviceId::all() {
+            let profile = DeviceProfile::get(d);
+            let policy = device_policy(&m, d).unwrap();
+            for t in [Triple::new(8, 8, 8), Triple::new(2000, 2000, 2000)] {
+                assert!(
+                    profile.is_legal(&policy.select(t)),
+                    "{d}: illegal initial selection for {t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn oracle_quality_is_peak_relative() {
+        let mut o = DeviceOracle { perf: HashMap::new(), peak: HashMap::new() };
+        let t = Triple::new(64, 64, 64);
+        let m = manifest();
+        let a = m.artifacts[0].config;
+        let b = m.artifacts[1].config;
+        o.insert(t, a, 10.0);
+        o.insert(t, b, 8.0);
+        assert_eq!(o.quality(t, a), 1.0);
+        assert!((o.quality(t, b) - 0.8).abs() < 1e-12);
+        // Unknown config / triple scores zero.
+        assert_eq!(o.quality(t, m.artifacts[2].config), 0.0);
+        assert_eq!(o.quality(Triple::new(1, 1, 1), a), 0.0);
+    }
+}

@@ -6,6 +6,7 @@ pub mod context;
 pub mod drift;
 pub mod e2e;
 pub mod figures;
+pub mod hetero;
 pub mod microbench;
 pub mod tables;
 

@@ -28,6 +28,7 @@ pub mod coordinator;
 pub mod dataset;
 pub mod device;
 pub mod dtree;
+pub mod engine;
 pub mod experiments;
 pub mod harness;
 pub mod metrics;
@@ -38,6 +39,7 @@ pub mod util;
 
 pub use config::{DirectParams, KernelConfig, KernelKind, Triple, XgemmParams};
 pub use dataset::{Dataset, DatasetKind};
-pub use device::DeviceProfile;
+pub use device::{DeviceId, DeviceProfile};
+pub use engine::{EngineSpec, ExecutionEngine, RuntimeEngine, SimEngine};
 pub use dtree::DecisionTree;
 pub use metrics::ModelScores;

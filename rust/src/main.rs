@@ -10,6 +10,7 @@
 //! adaptd e2e       --artifacts artifacts --requests 400
 //! adaptd serve-demo --artifacts artifacts --requests 200 --policy <model|default>
 //! adaptd drift     --artifacts artifacts --requests 32 --waves 3
+//! adaptd hetero    --artifacts artifacts --devices host-cpu,p100,mali --waves 2
 //! adaptd bench-compare --baseline BENCH_baseline.json --current BENCH_hotpath.json
 //! adaptd info      --artifacts artifacts
 //! ```
@@ -38,7 +39,8 @@ fn opt(
 
 fn opt_specs() -> Vec<OptSpec> {
     vec![
-        opt("device", "device profile (p100|mali|cpu)", Some("p100")),
+        opt("device", "device profile (host-cpu|p100|mali|t860)", Some("p100")),
+        opt("devices", "hetero: fleet device classes (csv)", Some("host-cpu,p100,mali")),
         opt("dataset", "dataset (po2|go2|antonnet)", Some("po2")),
         opt("model", "model name, e.g. hMax-L1", Some("hMax-L1")),
         opt("lang", "codegen language (rust|cpp)", Some("rust")),
@@ -74,6 +76,7 @@ fn commands() -> Vec<(&'static str, &'static str)> {
         ("e2e", "end-to-end adaptive serving on the CPU PJRT runtime"),
         ("serve-demo", "serve a request stream under one policy"),
         ("drift", "workload-shift experiment: online adaptation vs frozen model"),
+        ("hetero", "heterogeneous fleet: mixed workload across device classes"),
         ("bench-compare", "diff bench JSONs and fail on perf regressions"),
         ("info", "describe the artifact roster"),
     ]
@@ -122,6 +125,7 @@ fn run(argv: &[String]) -> Result<()> {
         "e2e" => cmd_e2e(&args),
         "serve-demo" => cmd_serve_demo(&args),
         "drift" => cmd_drift(&args),
+        "hetero" => cmd_hetero(&args),
         "bench-compare" => cmd_bench_compare(&args),
         "info" => cmd_info(&args),
         other => bail!(
@@ -131,9 +135,14 @@ fn run(argv: &[String]) -> Result<()> {
     }
 }
 
+// Every device flag goes through DeviceId::parse_flag / parse_list — the
+// one parse+error path, which lists the valid spellings on a bad value.
 fn device_of(args: &cli::Args) -> Result<DeviceId> {
-    DeviceId::parse(args.get_or("device", "p100"))
-        .context("unknown device; use p100|mali|cpu")
+    DeviceId::parse_flag(args.get_or("device", "p100"))
+}
+
+fn devices_of(args: &cli::Args) -> Result<Vec<DeviceId>> {
+    DeviceId::parse_list(args.get_or("devices", "host-cpu,p100,mali"))
 }
 
 fn dataset_of(args: &cli::Args) -> Result<DatasetKind> {
@@ -324,6 +333,32 @@ fn cmd_drift(args: &cli::Args) -> Result<()> {
     let report = experiments::drift::run(&artifacts, cfg)?;
     println!("{}", report.render());
     let out = PathBuf::from(args.get_or("out", "BENCH_drift.json"));
+    report.save(&out)?;
+    eprintln!("wrote {}", out.display());
+    Ok(())
+}
+
+/// Heterogeneous-fleet experiment: serve a mixed AntonNet workload across
+/// {host-cpu, p100, mali} with per-device policies and adaptation; score
+/// per-device selection accuracy against each device's oracle and write
+/// the machine-readable summary the CI hetero gate consumes.
+fn cmd_hetero(args: &cli::Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    // The in-code fallbacks mirror the OptSpec defaults (cli::parse
+    // pre-populates those, so these only document the effective values);
+    // CI and `make hetero` pass the quick presets explicitly.
+    let cfg = experiments::hetero::HeteroConfig {
+        requests_per_wave: args.get_parse("requests", 200)?,
+        waves: args.get_parse("waves", 3)?,
+        shards_per_class: args.get_parse("shards", 1)?,
+        reps: args.get_parse("reps", 3)?,
+        telemetry_fraction: args.get_parse("sample", 1.0)?,
+        shadow_fraction: args.get_parse("shadow", 1.0)?,
+        devices: devices_of(args)?,
+    };
+    let report = experiments::hetero::run(&artifacts, cfg)?;
+    println!("{}", report.render());
+    let out = PathBuf::from(args.get_or("out", "BENCH_hetero.json"));
     report.save(&out)?;
     eprintln!("wrote {}", out.display());
     Ok(())

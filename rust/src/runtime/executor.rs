@@ -41,7 +41,9 @@ impl<'a> GemmInput<'a> {
         Triple::new(self.m as u32, self.n as u32, self.k as u32)
     }
 
-    fn validate(&self) -> Result<()> {
+    /// Operand-size validation (public so alternative execution engines
+    /// can reuse the exact same contract the PJRT runtime enforces).
+    pub fn validate(&self) -> Result<()> {
         if self.a.len() != self.m * self.k
             || self.b.len() != self.k * self.n
             || self.c.len() != self.m * self.n

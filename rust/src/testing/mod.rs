@@ -1,8 +1,41 @@
-//! proptest-lite: a minimal property-based testing framework (no proptest
-//! crate offline).  Deterministic generation from a seeded PRNG plus
-//! greedy shrinking of failing u64 tuples.
+//! Testing utilities: proptest-lite (a minimal property-based testing
+//! framework — no proptest crate offline: deterministic generation from
+//! a seeded PRNG plus greedy shrinking) and shared test fixtures.
 
 use crate::util::prng::Rng;
+
+/// Shared three-artifact manifest fixture for engine / coordinator /
+/// hetero test modules (one definition, so the legal/illegal split stays
+/// consistent everywhere):
+///
+/// * `d1` — exact 64^3 direct artifact, legal on every device profile;
+/// * `i1` — 128^3 bucket, 16x16 work-group (256 threads): legal
+///   everywhere, exactly at the Mali-T860's work-group limit;
+/// * `i2` — 256^3 bucket, 32x32 work-group (1024 threads): legal on the
+///   host CPU and P100, **illegal on the Mali-T860** — the split the
+///   fleet's device-legality tests exercise.
+pub fn sample_manifest() -> crate::runtime::Manifest {
+    const SAMPLE: &str = r#"{
+ "version": 1, "roster": "small", "dtype": "f32",
+ "artifacts": [
+  {"name": "d1", "kernel": "xgemm_direct", "file": "d1.hlo.txt",
+   "m": 64, "n": 64, "k": 64, "trans_a": false, "trans_b": false,
+   "hlo_bytes": 10,
+   "config": {"wgd": 32, "mdimcd": 8, "ndimcd": 8, "vwmd": 2, "vwnd": 2,
+              "kwid": 2, "pada": 1, "padb": 1}},
+  {"name": "i1", "kernel": "xgemm", "file": "i1.hlo.txt",
+   "mb": 128, "nb": 128, "kb": 128, "hlo_bytes": 11,
+   "config": {"mwg": 64, "nwg": 64, "kwg": 32, "mdimc": 16, "ndimc": 16,
+              "vwm": 4, "vwn": 4, "sa": 1, "sb": 1}},
+  {"name": "i2", "kernel": "xgemm", "file": "i2.hlo.txt",
+   "mb": 256, "nb": 256, "kb": 256, "hlo_bytes": 12,
+   "config": {"mwg": 128, "nwg": 128, "kwg": 32, "mdimc": 32, "ndimc": 32,
+              "vwm": 2, "vwn": 2, "sa": 1, "sb": 1}}
+ ]
+}"#;
+    crate::runtime::Manifest::parse(SAMPLE, std::path::Path::new("/tmp/fixture"))
+        .expect("fixture manifest parses")
+}
 
 /// A generated-value strategy.
 pub trait Strategy {

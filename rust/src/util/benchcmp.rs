@@ -14,7 +14,11 @@
 //! * `allocs_per_request.pooled` — regression on *any* increase (the
 //!   zero-allocation gate: 0 must stay 0);
 //! * `recovered` (drift runs) — regression when the fresh run says
-//!   `false`.
+//!   `false`;
+//! * per-device `accuracy` (hetero runs: top-level `devices[]` in
+//!   `BENCH_hetero.json`, nested under `"hetero"` in the baseline) —
+//!   accuracies are 0-1 fractions, so the regression test is an
+//!   *absolute* drop beyond `tolerance`.
 //!
 //! A baseline marked `"provisional": true` (committed before real runner
 //! numbers exist) reports regressions as warnings instead of failures;
@@ -82,6 +86,25 @@ fn scaling_map(v: &Json) -> BTreeMap<u64, (f64, f64)> {
     map
 }
 
+/// Per-device hetero selection accuracy: device -> accuracy (None when
+/// the device is listed but its accuracy is null — it served nothing).
+/// Reads the top-level `devices[]` of a hetero bench file, or the
+/// `hetero.devices` object a merged baseline carries; `None` overall
+/// when the file has no device list at all (not a hetero comparison).
+fn hetero_map(v: &Json) -> Option<BTreeMap<String, Option<f64>>> {
+    let devices = v
+        .get("devices")
+        .or_else(|_| v.get("hetero").and_then(|h| h.get("devices")));
+    let arr = devices.and_then(|d| d.as_arr()).ok()?;
+    let mut map = BTreeMap::new();
+    for d in arr {
+        if let Ok(name) = d.get("device").and_then(|n| n.as_str()) {
+            map.insert(name.to_string(), num_at(d, "accuracy"));
+        }
+    }
+    Some(map)
+}
+
 /// Compare `current` against `baseline` with a relative `tolerance`
 /// (0.15 = fail beyond 15%).
 pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> BenchDiff {
@@ -140,9 +163,53 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> BenchDiff {
         }
     }
 
-    // Zero-allocation gates: any increase is a regression, on both the
-    // bare pooled path and the pooled-behind-a-PolicyHandle path.
-    for key in ["pooled", "pooled_with_policy_handle"] {
+    // Hetero per-device selection accuracy: higher is better, compared
+    // absolutely (accuracies are 0-1 fractions; a relative test would be
+    // hypersensitive near zero).  A device the baseline gates that is
+    // missing from the fresh device list — or listed with a null
+    // accuracy because it served no traffic — is the worst possible
+    // outcome (the router starved a whole class), not a skip.
+    if let (Some(base_hetero), Some(cur_hetero)) =
+        (hetero_map(baseline), hetero_map(current))
+    {
+        for (device, base) in &base_hetero {
+            let Some(base) = *base else { continue }; // no baseline floor set
+            diff.compared += 1;
+            match cur_hetero.get(device).copied().flatten() {
+                Some(cur) => {
+                    diff.lines.push(format!(
+                        "hetero {device} accuracy: {:.1}% -> {:.1}%",
+                        100.0 * base,
+                        100.0 * cur
+                    ));
+                    if cur < base - tolerance {
+                        diff.regressions.push(format!(
+                            "hetero {device}: selection accuracy fell \
+                             {:.1}% -> {:.1}% (tolerance -{:.0} points)",
+                            100.0 * base,
+                            100.0 * cur,
+                            tolerance * 100.0
+                        ));
+                    }
+                }
+                None => {
+                    diff.lines.push(format!(
+                        "hetero {device} accuracy: {:.1}% -> (no traffic)",
+                        100.0 * base
+                    ));
+                    diff.regressions.push(format!(
+                        "hetero {device}: served no traffic (device missing \
+                         or starved in the fresh run)"
+                    ));
+                }
+            }
+        }
+    }
+
+    // Zero-allocation gates: any increase is a regression — the bare
+    // pooled path, the pooled-behind-a-PolicyHandle path, and the pooled
+    // path behind the ExecutionEngine trait.
+    for key in ["pooled", "pooled_with_policy_handle", "engine_pooled"] {
         let base = baseline
             .get("allocs_per_request")
             .ok()
@@ -269,6 +336,75 @@ mod tests {
         assert!(!diff.passes());
         let cur = Json::parse(r#"{"bench":"drift","recovered":true}"#).unwrap();
         assert!(compare(&base, &cur, 0.15).passes());
+    }
+
+    #[test]
+    fn hetero_accuracy_gate_is_absolute_and_reads_both_shapes() {
+        // Baseline carries the merged form ("hetero":{"devices":[...]}),
+        // the current file is a raw hetero report (top-level "devices").
+        let base = Json::parse(
+            r#"{"bench":"hotpath",
+                "hetero":{"devices":[
+                  {"device":"host-cpu","accuracy":0.8},
+                  {"device":"mali-t860","accuracy":0.6}]}}"#,
+        )
+        .unwrap();
+        let cur = |cpu: f64, mali: f64| {
+            Json::parse(&format!(
+                r#"{{"bench":"hetero","devices":[
+                     {{"device":"host-cpu","accuracy":{cpu}}},
+                     {{"device":"mali-t860","accuracy":{mali}}}]}}"#
+            ))
+            .unwrap()
+        };
+        // Within tolerance (absolute 0.15): passes.
+        let diff = compare(&base, &cur(0.70, 0.55), 0.15);
+        assert_eq!(diff.compared, 2);
+        assert!(diff.passes(), "{:?}", diff.regressions);
+        // One device falls beyond tolerance: fails and names the device.
+        let diff = compare(&base, &cur(0.60, 0.58), 0.15);
+        assert!(!diff.passes());
+        assert!(diff.regressions[0].contains("host-cpu"));
+        // A gated device absent from the fresh device list is a
+        // regression (the router starved a whole class), not a skip —
+        // and so is one listed with a null accuracy (served nothing).
+        for cur_bad in [
+            r#"{"bench":"hetero","devices":[{"device":"host-cpu","accuracy":0.8}]}"#,
+            r#"{"bench":"hetero","devices":[
+                 {"device":"host-cpu","accuracy":0.8},
+                 {"device":"mali-t860","accuracy":null}]}"#,
+        ] {
+            let diff = compare(&base, &Json::parse(cur_bad).unwrap(), 0.15);
+            assert_eq!(diff.compared, 2);
+            assert!(!diff.passes());
+            assert!(
+                diff.regressions.iter().any(|r| r.contains("mali-t860")
+                    && r.contains("no traffic")),
+                "{:?}",
+                diff.regressions
+            );
+        }
+        // No device list at all on one side (e.g. a hotpath file): the
+        // hetero section is skipped entirely.
+        let hotpath = Json::parse(r#"{"bench":"hotpath"}"#).unwrap();
+        let diff = compare(&base, &hotpath, 0.15);
+        assert!(!diff.lines.iter().any(|l| l.contains("hetero")));
+    }
+
+    #[test]
+    fn engine_pooled_allocation_gate() {
+        let with_engine = |engine: f64| {
+            Json::parse(&format!(
+                r#"{{"allocs_per_request":{{"pooled":0.0,
+                     "pooled_with_policy_handle":0.0,"engine_pooled":{engine}}}}}"#
+            ))
+            .unwrap()
+        };
+        let base = with_engine(0.0);
+        assert!(compare(&base, &with_engine(0.0), 0.15).passes());
+        let diff = compare(&base, &with_engine(1.0), 0.15);
+        assert!(!diff.passes());
+        assert!(diff.regressions.iter().any(|r| r.contains("engine_pooled")));
     }
 
     #[test]
