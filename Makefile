@@ -4,7 +4,7 @@
 ARTIFACTS := rust/artifacts
 ROSTER    := full
 
-.PHONY: artifacts test bench drift hetero baseline clean-artifacts
+.PHONY: artifacts test bench drift hetero overload baseline clean-artifacts
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../$(ARTIFACTS) --roster $(ROSTER)
@@ -22,23 +22,31 @@ drift:
 hetero:
 	cd rust && cargo run --release --bin adaptd -- hetero --requests 64 --waves 3 --reps 1
 
+overload:
+	cd rust && cargo run --release --bin adaptd -- overload --requests 120 --capacity 24 --load 1,2,4 --reps 1
+
 # Refresh the committed bench-gate baseline from a fresh full run on the
 # reference machine, then remove the "provisional" marker by hand (see
 # README.md) to arm the CI regression gate.  The hetero accuracy floors
-# are refreshed from a fresh BENCH_hetero.json when one exists, otherwise
-# carried over from the old baseline — a raw copy of the hotpath JSON
-# would drop them and hard-fail the hetero gate (no comparable metrics).
+# and the overload p99 floor are refreshed from fresh
+# BENCH_hetero.json / BENCH_overload.json files when they exist,
+# otherwise carried over from the old baseline — a raw copy of the
+# hotpath JSON would drop them and hard-fail those gates (no comparable
+# metrics).
 baseline:
 	cd rust && cargo bench --bench hotpath
 	python3 -c "import json, os; \
 new = json.load(open('rust/BENCH_hotpath.json')); \
 old = json.load(open('rust/BENCH_baseline.json')) if os.path.exists('rust/BENCH_baseline.json') else {}; \
 het = json.load(open('rust/BENCH_hetero.json')) if os.path.exists('rust/BENCH_hetero.json') else {}; \
+ov = json.load(open('rust/BENCH_overload.json')) if os.path.exists('rust/BENCH_overload.json') else {}; \
 floors = {d['device']: d['accuracy'] for d in (old.get('hetero') or {}).get('devices', [])}; \
 floors.update({d['device']: d['accuracy'] for d in het.get('devices', []) if d.get('accuracy') is not None}); \
 floors and new.update(hetero={'devices': [{'device': k, 'accuracy': v} for k, v in sorted(floors.items())]}); \
+p99 = ov.get('p99_1x_ms') or (old.get('overload') or {}).get('p99_1x_ms'); \
+p99 and new.update(overload={'p99_1x_ms': p99}); \
 json.dump(new, open('rust/BENCH_baseline.json', 'w'), separators=(',', ':'))"
-	@echo "BENCH_baseline.json refreshed (hetero floors carried over) — delete the 'provisional' key if present"
+	@echo "BENCH_baseline.json refreshed (hetero + overload floors carried over) — delete the 'provisional' key if present"
 
 clean-artifacts:
 	rm -rf $(ARTIFACTS)

@@ -1,5 +1,10 @@
 //! Serving metrics: per-request latency records and aggregate
-//! throughput/latency statistics for the coordinator.
+//! throughput/latency statistics for the coordinator — including the
+//! *unhappy* outcomes.  Error, deadline-expired and drained responses
+//! are first-class records (the old stats only counted successes, so a
+//! failing triple vanished from every summary), and admission-side
+//! counters (shed requests, pressure picks, peak queue depth) merge in
+//! per device class at shutdown.
 
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -7,9 +12,26 @@ use std::time::Duration;
 use crate::device::DeviceId;
 use crate::util::stats::Summary;
 
-/// One completed request's measurements.
+/// How a request left the server.  Shed requests never enter a queue and
+/// therefore never produce a record — they are counted at admission and
+/// merged into [`DeviceStats::shed`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestOutcome {
+    /// Served successfully.
+    Ok,
+    /// Answered with an execution/selection error.
+    Error,
+    /// Deadline expired in the queue; dropped at window-resolve time.
+    Expired,
+    /// Answered with a shutdown error during graceful drain.
+    Drained,
+}
+
+/// One completed (answered) request's measurements.
 #[derive(Debug, Clone)]
 pub struct RequestRecord {
+    /// Artifact that served the request (empty when nothing executed —
+    /// errors before resolution, expired and drained envelopes).
     pub artifact: String,
     /// Device class the serving shard is pinned to.
     pub device: DeviceId,
@@ -18,21 +40,51 @@ pub struct RequestRecord {
     pub queue: Duration,
     pub service: Duration,
     pub flops: f64,
+    pub outcome: RequestOutcome,
+}
+
+/// Per-device-class outcome counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DeviceStats {
+    /// Requests served successfully.
+    pub served: usize,
+    /// Requests answered with an execution/selection error.
+    pub errors: usize,
+    /// Requests whose deadline expired in the queue.
+    pub expired: usize,
+    /// Requests answered with a shutdown error during drain.
+    pub drained: usize,
+    /// Requests refused at admission (queue at capacity).
+    pub shed: u64,
+    /// Requests whose selection was overridden by the pressure pick.
+    pub pressure_picks: u64,
+    /// Peak outstanding (admitted, unanswered) requests observed.
+    pub peak_depth: usize,
+}
+
+impl DeviceStats {
+    /// Requests that entered a queue and were answered.
+    pub fn answered(&self) -> usize {
+        self.served + self.errors + self.expired + self.drained
+    }
 }
 
 /// Aggregated serving statistics.
 #[derive(Debug, Clone)]
 pub struct ServeStats {
+    /// Answered requests of any outcome (sheds excluded: they never
+    /// entered a queue — see [`ServeStats::shed`]).
     pub n_requests: usize,
     pub wall: Duration,
+    /// Latency/queue summaries over *successfully served* requests only.
     pub latency: Summary,
     pub queue: Summary,
     pub total_gflop: f64,
     pub per_artifact: BTreeMap<String, usize>,
-    /// Requests served per dispatcher shard (fleet-global index).
+    /// Requests answered per dispatcher shard (fleet-global index).
     pub per_shard: BTreeMap<usize, usize>,
-    /// Requests served per device class (heterogeneous fleets).
-    pub per_device: BTreeMap<String, usize>,
+    /// Outcome counters per device class (heterogeneous fleets).
+    pub per_device: BTreeMap<String, DeviceStats>,
 }
 
 impl ServeStats {
@@ -56,32 +108,101 @@ impl ServeStats {
         if records.is_empty() {
             return ServeStats::empty(wall);
         }
-        let lat: Vec<f64> = records
+        let ok: Vec<&RequestRecord> = records
+            .iter()
+            .filter(|r| r.outcome == RequestOutcome::Ok)
+            .collect();
+        let lat: Vec<f64> = ok
             .iter()
             .map(|r| (r.queue + r.service).as_secs_f64())
             .collect();
-        let q: Vec<f64> = records.iter().map(|r| r.queue.as_secs_f64()).collect();
+        let q: Vec<f64> = ok.iter().map(|r| r.queue.as_secs_f64()).collect();
         let mut per_artifact = BTreeMap::new();
         let mut per_shard = BTreeMap::new();
-        let mut per_device = BTreeMap::new();
+        let mut per_device: BTreeMap<String, DeviceStats> = BTreeMap::new();
         for r in records {
-            *per_artifact.entry(r.artifact.clone()).or_insert(0) += 1;
             *per_shard.entry(r.shard).or_insert(0) += 1;
-            *per_device.entry(r.device.name().to_string()).or_insert(0) += 1;
+            let dev = per_device.entry(r.device.name().to_string()).or_default();
+            match r.outcome {
+                RequestOutcome::Ok => {
+                    *per_artifact.entry(r.artifact.clone()).or_insert(0) += 1;
+                    dev.served += 1;
+                }
+                RequestOutcome::Error => dev.errors += 1,
+                RequestOutcome::Expired => dev.expired += 1,
+                RequestOutcome::Drained => dev.drained += 1,
+            }
         }
+        let summary = |xs: &[f64]| {
+            if xs.is_empty() {
+                Summary::empty()
+            } else {
+                Summary::of(xs)
+            }
+        };
         ServeStats {
             n_requests: records.len(),
             wall,
-            latency: Summary::of(&lat),
-            queue: Summary::of(&q),
-            total_gflop: records.iter().map(|r| r.flops).sum::<f64>() / 1e9,
+            latency: summary(&lat),
+            queue: summary(&q),
+            total_gflop: ok.iter().map(|r| r.flops).sum::<f64>() / 1e9,
             per_artifact,
             per_shard,
             per_device,
         }
     }
 
-    /// Requests per second.
+    /// Merge one device class's admission-side counters (maintained on
+    /// the submit path, so they never appear in shard records).
+    pub fn record_admission(
+        &mut self,
+        device: DeviceId,
+        shed: u64,
+        pressure_picks: u64,
+        peak_depth: usize,
+    ) {
+        let dev = self.per_device.entry(device.name().to_string()).or_default();
+        dev.shed += shed;
+        dev.pressure_picks += pressure_picks;
+        dev.peak_depth = dev.peak_depth.max(peak_depth);
+    }
+
+    /// Successfully served requests across every device.
+    pub fn n_ok(&self) -> usize {
+        self.per_device.values().map(|d| d.served).sum()
+    }
+
+    /// Error responses across every device.
+    pub fn errors(&self) -> usize {
+        self.per_device.values().map(|d| d.errors).sum()
+    }
+
+    /// Deadline-expired responses across every device.
+    pub fn expired(&self) -> usize {
+        self.per_device.values().map(|d| d.expired).sum()
+    }
+
+    /// Drained (answered-at-shutdown) responses across every device.
+    pub fn drained(&self) -> usize {
+        self.per_device.values().map(|d| d.drained).sum()
+    }
+
+    /// Requests refused at admission across every device.
+    pub fn shed(&self) -> u64 {
+        self.per_device.values().map(|d| d.shed).sum()
+    }
+
+    /// Pressure-pick selection overrides across every device.
+    pub fn pressure_picks(&self) -> u64 {
+        self.per_device.values().map(|d| d.pressure_picks).sum()
+    }
+
+    /// Highest per-class peak queue depth observed.
+    pub fn peak_depth(&self) -> usize {
+        self.per_device.values().map(|d| d.peak_depth).max().unwrap_or(0)
+    }
+
+    /// Requests per second (answered requests over wall time).
     pub fn rps(&self) -> f64 {
         self.n_requests as f64 / self.wall.as_secs_f64()
     }
@@ -104,10 +225,28 @@ impl ServeStats {
             self.latency.max * 1e3,
             self.queue.median * 1e3,
         );
+        let (errors, expired, drained, shed) =
+            (self.errors(), self.expired(), self.drained(), self.shed());
+        if errors + expired + drained > 0 || shed > 0 {
+            s.push_str(&format!(
+                "outcomes: ok {}  errors {errors}  expired {expired}  \
+                 drained {drained}  shed {shed}  pressure-picks {}  \
+                 peak depth {}\n",
+                self.n_ok(),
+                self.pressure_picks(),
+                self.peak_depth(),
+            ));
+        }
         if self.per_device.len() > 1 {
             s.push_str("per-device:");
-            for (dev, n) in &self.per_device {
-                s.push_str(&format!("  {dev}={n}"));
+            for (dev, d) in &self.per_device {
+                s.push_str(&format!("  {dev}={}", d.served));
+                if d.errors + d.expired + d.drained > 0 || d.shed > 0 {
+                    s.push_str(&format!(
+                        " (err {}, exp {}, drain {}, shed {})",
+                        d.errors, d.expired, d.drained, d.shed
+                    ));
+                }
             }
             s.push('\n');
         }
@@ -143,6 +282,24 @@ mod tests {
             queue: Duration::from_millis(1),
             service: Duration::from_millis(ms),
             flops: 1e9,
+            outcome: RequestOutcome::Ok,
+        }
+    }
+
+    fn rec_outcome(shard: usize, outcome: RequestOutcome) -> RequestRecord {
+        let device = if shard % 2 == 0 {
+            DeviceId::HostCpu
+        } else {
+            DeviceId::NvidiaP100
+        };
+        RequestRecord {
+            artifact: String::new(),
+            device,
+            shard,
+            queue: Duration::from_millis(5),
+            service: Duration::ZERO,
+            flops: 0.0,
+            outcome,
         }
     }
 
@@ -154,8 +311,8 @@ mod tests {
         assert_eq!(stats.per_artifact["a"], 2);
         assert_eq!(stats.per_shard[&0], 2);
         assert_eq!(stats.per_shard[&1], 1);
-        assert_eq!(stats.per_device["host-cpu"], 2);
-        assert_eq!(stats.per_device["nvidia-p100"], 1);
+        assert_eq!(stats.per_device["host-cpu"].served, 2);
+        assert_eq!(stats.per_device["nvidia-p100"].served, 1);
         assert!((stats.rps() - 3.0).abs() < 1e-9);
         assert!((stats.gflops() - 3.0).abs() < 1e-9);
         let report = stats.report();
@@ -177,5 +334,56 @@ mod tests {
         assert!(stats.per_device.is_empty());
         // The report renders without panicking.
         assert!(stats.report().contains("requests: 0"));
+    }
+
+    #[test]
+    fn failing_requests_show_up_in_the_summary() {
+        // Regression: error responses used to vanish entirely (only
+        // served_ok requests were recorded), so a failing triple was
+        // invisible in every summary.
+        let records = vec![
+            rec("a", 0, 10),
+            rec_outcome(0, RequestOutcome::Error),
+            rec_outcome(1, RequestOutcome::Expired),
+            rec_outcome(0, RequestOutcome::Drained),
+        ];
+        let stats = ServeStats::from_records(&records, Duration::from_secs(1));
+        assert_eq!(stats.n_requests, 4);
+        assert_eq!(stats.n_ok(), 1);
+        assert_eq!(stats.errors(), 1);
+        assert_eq!(stats.expired(), 1);
+        assert_eq!(stats.drained(), 1);
+        // Latency/throughput summarize successful requests only; the
+        // failures are counted, not averaged in.
+        assert_eq!(stats.latency.n, 1);
+        assert!((stats.total_gflop - 1.0).abs() < 1e-12);
+        // Per-shard counts every answered request; per-artifact only what
+        // actually executed.
+        assert_eq!(stats.per_shard[&0], 3);
+        assert!(!stats.per_artifact.contains_key(""));
+        let host = &stats.per_device["host-cpu"];
+        assert_eq!(
+            (host.served, host.errors, host.drained, host.answered()),
+            (1, 1, 1, 3)
+        );
+        assert_eq!(stats.per_device["nvidia-p100"].expired, 1);
+        let report = stats.report();
+        assert!(report.contains("errors 1"), "{report}");
+        assert!(report.contains("expired 1"), "{report}");
+    }
+
+    #[test]
+    fn admission_counters_merge_per_device() {
+        let mut stats = ServeStats::from_records(&[rec("a", 0, 1)], Duration::from_secs(1));
+        stats.record_admission(DeviceId::HostCpu, 7, 3, 12);
+        // A device that only ever shed (served nothing) still appears.
+        stats.record_admission(DeviceId::MaliT860, 2, 0, 4);
+        assert_eq!(stats.shed(), 9);
+        assert_eq!(stats.pressure_picks(), 3);
+        assert_eq!(stats.peak_depth(), 12);
+        assert_eq!(stats.per_device["host-cpu"].shed, 7);
+        assert_eq!(stats.per_device["mali-t860"].shed, 2);
+        assert_eq!(stats.per_device["mali-t860"].served, 0);
+        assert!(stats.report().contains("shed 9"));
     }
 }

@@ -15,10 +15,11 @@ pub use adapt::{
     adapt_step, await_taps, AdaptStats, AdaptationLoop, StepOutcome, TelemetryRecord,
     TelemetryRing,
 };
-pub use metrics::{RequestRecord, ServeStats};
+pub use metrics::{DeviceStats, RequestOutcome, RequestRecord, ServeStats};
 pub use policy::{
     CachedPolicy, DefaultPolicy, ModelPolicy, OraclePolicy, PolicyHandle, SelectPolicy,
 };
 pub use server::{
-    DeviceClass, GemmRequest, GemmResponse, GemmServer, ServerConfig, ServerHandle,
+    Admission, DeviceClass, GemmRequest, GemmResponse, GemmServer, ServerConfig,
+    ServerHandle,
 };

@@ -1,24 +1,49 @@
 //! The adaptive GEMM server — the on-line coordinator, now a
-//! *heterogeneous fleet*.
+//! *heterogeneous fleet* with **bounded admission**.
 //!
 //! Topology (see ARCHITECTURE.md): client threads submit [`GemmRequest`]s
 //! through a [`ServerHandle`], whose device-aware router picks a device
 //! class per request (policy-predicted service time on each class, scaled
-//! by that class's queue depth) and then round-robins across the class's
-//! dispatcher *shards*.  Each shard is one worker thread pinned to a
-//! device class: it exclusively owns an [`ExecutionEngine`] built from
-//! the class's [`EngineSpec`] (the real PJRT runtime for the host CPU,
-//! analytical engines for the simulated devices — engines are created on
-//! the shard's thread, PJRT handles never cross threads) plus a
-//! [`ScratchBuffers`] pool, shares its *class's* [`PolicyHandle`] and
-//! [`TelemetryRing`] (never another class's — per-device telemetry must
-//! not cross-contaminate), and runs the per-artifact dynamic batcher.
-//! Requests execute on the pooled, allocation-free engine path; responses
-//! flow back over per-request channels carrying the serving device, the
-//! routed device and the policy epoch.
+//! by that class's queue depth, skipping classes at their queue bound)
+//! and then round-robins across the class's dispatcher *shards*.  Each
+//! shard is one worker thread pinned to a device class: it exclusively
+//! owns an [`ExecutionEngine`] built from the class's [`EngineSpec`] (the
+//! real PJRT runtime for the host CPU, analytical engines for the
+//! simulated devices — engines are created on the shard's thread, PJRT
+//! handles never cross threads) plus a [`ScratchBuffers`] pool, shares
+//! its *class's* [`PolicyHandle`] and [`TelemetryRing`] (never another
+//! class's — per-device telemetry must not cross-contaminate), and runs
+//! the per-artifact dynamic batcher.  Requests execute on the pooled,
+//! allocation-free engine path; responses flow back over per-request
+//! channels carrying the serving device, the routed device, the policy
+//! epoch and a typed [`RequestOutcome`].
+//!
+//! Overload handling (the serving path under sustained pressure):
+//!
+//! * **Bounded admission** — every device class has a queue bound
+//!   ([`ServerConfig::queue_capacity`], overridable per class via
+//!   [`DeviceClass::with_queue_capacity`]).  [`ServerHandle::try_submit`]
+//!   returns an explicit [`Admission::Shed`] once every candidate class
+//!   is full instead of enqueueing forever; [`ServerHandle::submit`] is
+//!   the blocking variant that waits for a slot.  Admission is two
+//!   atomic ops on the submit path — no locks, no allocations.
+//! * **Deadlines** — a request may carry a deadline
+//!   ([`ServerHandle::try_submit_with_deadline`]); shards drop
+//!   already-expired envelopes at window-resolve time and answer them
+//!   with a typed [`RequestOutcome::Expired`] overload error instead of
+//!   spending service time on a reply nobody wants.
+//! * **Pressure picks** — when an envelope has queued longer than
+//!   [`ServerConfig::pressure_threshold`], the shard swaps the policy's
+//!   selection for the modeled-cheapest servable artifact whenever the
+//!   policy pick is more than [`ServerConfig::pressure_slowdown`] slower
+//!   than it ([`sim::modeled_secs`]) — system state feeds back into the
+//!   paper's model-driven selection under load.
+//! * **Graceful drain** — [`GemmServer::shutdown_now`] answers every
+//!   still-queued envelope with a typed shutdown error instead of
+//!   silently dropping reply channels.
 
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -31,7 +56,7 @@ use crate::engine::{EngineSpec, ExecutionEngine};
 use crate::runtime::{ArtifactId, GemmInput, ScratchBuffers};
 
 use super::adapt::{TelemetryRecord, TelemetryRing};
-use super::metrics::{RequestRecord, ServeStats};
+use super::metrics::{RequestOutcome, RequestRecord, ServeStats};
 use super::policy::{CachedPolicy, PolicyHandle, SelectPolicy};
 
 /// An owned GEMM request.
@@ -50,6 +75,40 @@ pub struct GemmRequest {
 impl GemmRequest {
     pub fn triple(&self) -> Triple {
         Triple::new(self.m as u32, self.n as u32, self.k as u32)
+    }
+
+    /// Validate at submission: dimensions must fit the `u32` triple (the
+    /// old `m as u32` cast silently truncated oversized dimensions, so
+    /// the server resolved — and served — a *wrong* triple) and operand
+    /// lengths must match `m·k` / `k·n` / `m·n`.  Every submit path
+    /// rejects invalid requests with a typed error instead of executing.
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        for (dim, name) in [(self.m, "m"), (self.n, "n"), (self.k, "k")] {
+            if dim > u32::MAX as usize {
+                return Err(format!(
+                    "dimension {name}={dim} exceeds the u32 triple limit"
+                ));
+            }
+        }
+        if self.a.len() != self.m * self.k
+            || self.b.len() != self.k * self.n
+            || self.c.len() != self.m * self.n
+        {
+            return Err(format!(
+                "operand lengths do not match ({}, {}, {}): a={} (want {}), \
+                 b={} (want {}), c={} (want {})",
+                self.m,
+                self.n,
+                self.k,
+                self.a.len(),
+                self.m * self.k,
+                self.b.len(),
+                self.k * self.n,
+                self.c.len(),
+                self.m * self.n,
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -73,8 +132,34 @@ pub struct GemmResponse {
     /// exist so routing bugs are detectable, and the router property
     /// test pins them equal under racing submitters.
     pub routed: DeviceId,
-    /// Serving shard (fleet-global index).
+    /// Serving shard (fleet-global index; `usize::MAX` for responses
+    /// synthesized on the submit path, which never reached a shard).
     pub shard: usize,
+    /// Typed outcome — the machine-checkable counterpart of `out`
+    /// (`Ok` iff `out` is `Ok`).
+    pub outcome: RequestOutcome,
+    /// The shard overrode the policy's selection with the pressure pick.
+    pub pressure_pick: bool,
+}
+
+/// Outcome of a non-blocking submission attempt.
+#[derive(Debug)]
+pub enum Admission {
+    /// Admitted: the response will arrive on this receiver.
+    Enqueued(mpsc::Receiver<GemmResponse>),
+    /// Refused — every candidate class was at its queue bound.  The
+    /// request is handed back so callers can retry without a clone;
+    /// `device`/`outstanding`/`capacity` describe the least-loaded class
+    /// at refusal time (the one a retry would land on).
+    Shed {
+        req: GemmRequest,
+        device: DeviceId,
+        outstanding: usize,
+        capacity: usize,
+    },
+    /// Malformed request (dimension overflow / operand length mismatch);
+    /// never admitted, never counted as shed.
+    Rejected { reason: String },
 }
 
 /// Server tuning knobs.
@@ -97,6 +182,18 @@ pub struct ServerConfig {
     pub shadow_fraction: f64,
     /// Telemetry ring capacity (oldest records drop under pressure).
     pub telemetry_capacity: usize,
+    /// Per-class queue bound: max outstanding (admitted, unanswered)
+    /// requests a device class holds before `try_submit` sheds.
+    /// Overridable per class via [`DeviceClass::with_queue_capacity`].
+    pub queue_capacity: usize,
+    /// Queue time beyond which a shard resolves an envelope through the
+    /// pressure pick instead of trusting the policy's selection alone.
+    /// `Duration::MAX` (the default) disables pressure picks.
+    pub pressure_threshold: Duration,
+    /// Modeled-slowdown bound of the pressure pick: the policy's choice
+    /// stands unless it is more than this factor slower than the
+    /// modeled-cheapest servable artifact (values below 1.0 clamp up).
+    pub pressure_slowdown: f64,
 }
 
 impl Default for ServerConfig {
@@ -108,6 +205,9 @@ impl Default for ServerConfig {
             telemetry_fraction: 0.0,
             shadow_fraction: 0.0,
             telemetry_capacity: 4096,
+            queue_capacity: 1024,
+            pressure_threshold: Duration::MAX,
+            pressure_slowdown: 1.25,
         }
     }
 }
@@ -129,16 +229,28 @@ impl ServerConfig {
         }
     }
 
-    /// Validate at server start: zero shards or a zero-sized batch window
-    /// are configuration bugs, rejected loudly instead of silently
-    /// "fixed"; the sampling fractions are *rates* and are clamped into
-    /// [0, 1] (out-of-range values have an obvious intent).
+    /// Validate at server start: zero shards, a zero-sized batch window
+    /// or a zero queue bound are configuration bugs, rejected loudly
+    /// instead of silently "fixed"; the sampling fractions are *rates*
+    /// and are clamped into [0, 1], and the pressure slowdown bound is a
+    /// *factor* clamped to >= 1.0 (out-of-range values have an obvious
+    /// intent).
     pub fn validated(self) -> Result<ServerConfig> {
         ensure!(self.shards > 0, "ServerConfig.shards must be > 0");
         ensure!(self.max_batch > 0, "ServerConfig.max_batch must be > 0");
+        ensure!(
+            self.queue_capacity > 0,
+            "ServerConfig.queue_capacity must be > 0"
+        );
+        let pressure_slowdown = if self.pressure_slowdown.is_nan() {
+            1.0
+        } else {
+            self.pressure_slowdown.max(1.0)
+        };
         Ok(ServerConfig {
             telemetry_fraction: self.telemetry_fraction.clamp(0.0, 1.0),
             shadow_fraction: self.shadow_fraction.clamp(0.0, 1.0),
+            pressure_slowdown,
             ..self
         })
     }
@@ -152,11 +264,20 @@ pub struct DeviceClass {
     pub device: DeviceId,
     pub shards: usize,
     pub policy: Box<dyn SelectPolicy>,
+    /// Per-class queue bound override (falls back to
+    /// [`ServerConfig::queue_capacity`] when `None`).
+    pub queue_capacity: Option<usize>,
 }
 
 impl DeviceClass {
     pub fn new(device: DeviceId, shards: usize, policy: Box<dyn SelectPolicy>) -> DeviceClass {
-        DeviceClass { device, shards, policy }
+        DeviceClass { device, shards, policy, queue_capacity: None }
+    }
+
+    /// Override the class's queue bound (validated at fleet start).
+    pub fn with_queue_capacity(mut self, capacity: usize) -> DeviceClass {
+        self.queue_capacity = Some(capacity);
+        self
     }
 }
 
@@ -164,6 +285,26 @@ impl DeviceClass {
 /// all, the router charges this pessimistic service time — the class is
 /// effectively avoided unless every other queue is badly backed up.
 const ROUTE_FALLBACK_SECS: f64 = 1.0;
+
+/// Blocking submits back off this long between admission attempts while
+/// every candidate queue is full.
+const ADMISSION_BACKOFF: Duration = Duration::from_micros(50);
+
+/// Blocking submits give up (with a typed error response) after waiting
+/// this long for a queue slot — the escape hatch when the fleet is
+/// wedged or shutting down underneath a blocked client.
+const ADMISSION_PATIENCE: Duration = Duration::from_secs(10);
+
+/// Admission/selection counters of one device class, maintained outside
+/// the shard records: sheds happen on the submit path (the request never
+/// reaches a worker) and pressure picks/peak depth are cheapest to track
+/// where they occur.  Merged into [`ServeStats`] at shutdown.
+#[derive(Default)]
+struct ClassCounters {
+    shed: AtomicU64,
+    pressure_picks: AtomicU64,
+    peak_depth: AtomicUsize,
+}
 
 /// Router-side state of one device class.
 struct ClassState {
@@ -183,6 +324,12 @@ struct ClassState {
     /// requests.  Incremented by the handle at submit, decremented by the
     /// shard after the reply is sent.
     depths: Vec<Arc<AtomicUsize>>,
+    /// Class-wide outstanding gauge — the admission bound's reservation
+    /// counter (reserve with `fetch_add`, roll back on refusal).
+    outstanding: Arc<AtomicUsize>,
+    /// Queue bound this class admits up to.
+    capacity: usize,
+    counters: Arc<ClassCounters>,
     /// Round-robin cursor within the class.
     next: AtomicUsize,
 }
@@ -190,6 +337,10 @@ struct ClassState {
 impl ClassState {
     fn depth(&self) -> usize {
         self.depths.iter().map(|d| d.load(Ordering::Relaxed)).sum()
+    }
+
+    fn is_full(&self) -> bool {
+        self.outstanding.load(Ordering::Acquire) >= self.capacity
     }
 
     /// Predicted completion time of serving `t` on this class now: the
@@ -213,6 +364,9 @@ impl ClassState {
 struct Envelope {
     req: GemmRequest,
     submitted: Instant,
+    /// Drop (with a typed expired reply) instead of serving once this
+    /// instant has passed — checked at window-resolve time.
+    deadline: Option<Instant>,
     reply: mpsc::Sender<GemmResponse>,
     /// Device class the router chose (echoed into the response).
     routed: DeviceId,
@@ -227,18 +381,32 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
-    /// Pick the device class for a request.  Single-class fleets skip
-    /// prediction entirely — the homogeneous hot path is unchanged.
-    fn route(&self, t: Triple) -> usize {
-        if self.classes.len() == 1 {
-            return 0;
-        }
-        let mut best = 0usize;
+    /// Best (lowest predicted-wait) class not yet in `tried`; classes at
+    /// their queue bound are skipped when `skip_full` — a saturated
+    /// class sheds to a servable sibling before anything is rejected.
+    fn best_class(&self, t: Triple, tried: u64, skip_full: bool) -> Option<usize> {
+        let mut best = None;
         let mut best_score = f64::INFINITY;
         for (i, class) in self.classes.iter().enumerate() {
+            if tried & (1u64 << i) != 0 || (skip_full && class.is_full()) {
+                continue;
+            }
             let score = class.predicted_wait(t);
             if score < best_score {
                 best_score = score;
+                best = Some(i);
+            }
+        }
+        best
+    }
+
+    fn least_loaded(&self) -> usize {
+        let mut best = 0usize;
+        let mut best_load = usize::MAX;
+        for (i, class) in self.classes.iter().enumerate() {
+            let load = class.outstanding.load(Ordering::Acquire);
+            if load < best_load {
+                best_load = load;
                 best = i;
             }
         }
@@ -248,34 +416,243 @@ impl ServerHandle {
     /// The device the router would choose for `t` right now (advisory:
     /// depth gauges move under live traffic).
     pub fn route_preview(&self, t: Triple) -> DeviceId {
-        self.classes[self.route(t)].device
+        if self.classes.len() == 1 {
+            return self.classes[0].device;
+        }
+        let i = self
+            .best_class(t, 0, true)
+            .or_else(|| self.best_class(t, 0, false))
+            .unwrap_or(0);
+        self.classes[i].device
     }
 
-    fn send_to(&self, class: &ClassState, req: GemmRequest) -> mpsc::Receiver<GemmResponse> {
+    /// Reserve a queue slot on `class` and enqueue, or hand the request
+    /// back when the class is at its bound.  The reservation is two
+    /// atomics (`fetch_add` + rollback on refusal) — admission adds no
+    /// locks and no allocations to the submit path.
+    fn try_admit(
+        &self,
+        class: &ClassState,
+        req: GemmRequest,
+        deadline: Option<Instant>,
+    ) -> std::result::Result<mpsc::Receiver<GemmResponse>, GemmRequest> {
+        let prev = class.outstanding.fetch_add(1, Ordering::AcqRel);
+        if prev >= class.capacity {
+            class.outstanding.fetch_sub(1, Ordering::AcqRel);
+            return Err(req);
+        }
+        class.counters.peak_depth.fetch_max(prev + 1, Ordering::Relaxed);
         let (reply, rx) = mpsc::channel();
         let shard = class.next.fetch_add(1, Ordering::Relaxed) % class.txs.len();
         class.depths[shard].fetch_add(1, Ordering::Relaxed);
         let sent = class.txs[shard].send(Envelope {
             req,
             submitted: Instant::now(),
+            deadline,
             reply,
             routed: class.device,
         });
         if sent.is_err() {
-            // Shard gone (shutdown): roll the gauge back so the router
-            // does not see a phantom queue.
+            // Shard gone (shutdown): roll the gauges back so the router
+            // does not see a phantom queue.  The returned receiver's
+            // sender is dropped, so the caller observes the usual
+            // server-shut-down recv error.
             class.depths[shard].fetch_sub(1, Ordering::Relaxed);
+            class.outstanding.fetch_sub(1, Ordering::AcqRel);
         }
+        Ok(rx)
+    }
+
+    fn shed(&self, class_idx: usize, req: GemmRequest, count: bool) -> Admission {
+        let class = &self.classes[class_idx];
+        if count {
+            class.counters.shed.fetch_add(1, Ordering::Relaxed);
+        }
+        Admission::Shed {
+            req,
+            device: class.device,
+            outstanding: class.outstanding.load(Ordering::Acquire),
+            capacity: class.capacity,
+        }
+    }
+
+    /// One routed admission pass: try classes in predicted-wait order,
+    /// skipping full ones; shed only when every class is at its bound.
+    fn try_submit_inner(
+        &self,
+        mut req: GemmRequest,
+        deadline: Option<Instant>,
+        count_shed: bool,
+    ) -> Admission {
+        if self.classes.len() == 1 {
+            return match self.try_admit(&self.classes[0], req, deadline) {
+                Ok(rx) => Admission::Enqueued(rx),
+                Err(req) => self.shed(0, req, count_shed),
+            };
+        }
+        let t = req.triple();
+        let mut tried = 0u64;
+        while let Some(i) = self.best_class(t, tried, true) {
+            match self.try_admit(&self.classes[i], req, deadline) {
+                Ok(rx) => return Admission::Enqueued(rx),
+                // Lost an admission race: the class filled between the
+                // scoring pass and the reservation.  Try the next-best.
+                Err(r) => {
+                    req = r;
+                    tried |= 1u64 << i;
+                }
+            }
+        }
+        self.shed(self.least_loaded(), req, count_shed)
+    }
+
+    /// Non-blocking submit: validates the request, routes it, and either
+    /// enqueues or returns a typed [`Admission::Shed`] when every
+    /// candidate class is at its queue bound.
+    pub fn try_submit(&self, req: GemmRequest) -> Admission {
+        if let Err(reason) = req.validate() {
+            return Admission::Rejected { reason };
+        }
+        self.try_submit_inner(req, None, true)
+    }
+
+    /// Non-blocking submit with a deadline: the envelope is dropped (and
+    /// answered with a typed expired error) if it is still queued when
+    /// `deadline` passes.
+    pub fn try_submit_with_deadline(
+        &self,
+        req: GemmRequest,
+        deadline: Instant,
+    ) -> Admission {
+        if let Err(reason) = req.validate() {
+            return Admission::Rejected { reason };
+        }
+        self.try_submit_inner(req, Some(deadline), true)
+    }
+
+    /// Non-blocking submit *pinned* to a device class (router bypassed,
+    /// queue bound still enforced).  `None` if the fleet has no such
+    /// class.
+    pub fn try_submit_to(&self, device: DeviceId, req: GemmRequest) -> Option<Admission> {
+        let idx = self.classes.iter().position(|c| c.device == device)?;
+        if let Err(reason) = req.validate() {
+            return Some(Admission::Rejected { reason });
+        }
+        Some(match self.try_admit(&self.classes[idx], req, None) {
+            Ok(rx) => Admission::Enqueued(rx),
+            Err(req) => self.shed(idx, req, true),
+        })
+    }
+
+    /// A response synthesized on the submit path (invalid request,
+    /// admission starvation): the receiver carries one typed error
+    /// response instead of a dropped sender.  `device` is the class the
+    /// failure concerns (the fleet's first class when none was chosen —
+    /// validation failures happen before routing).
+    fn synthetic_error(
+        &self,
+        device: DeviceId,
+        outcome: RequestOutcome,
+        message: String,
+    ) -> mpsc::Receiver<GemmResponse> {
+        let (tx, rx) = mpsc::channel();
+        let _ = tx.send(GemmResponse {
+            out: Err(anyhow!("{message}")),
+            artifact: String::new(),
+            queue: Duration::ZERO,
+            service: Duration::ZERO,
+            epoch: 0,
+            device,
+            routed: device,
+            shard: usize::MAX,
+            outcome,
+            pressure_pick: false,
+        });
         rx
     }
 
+    fn submit_blocking(
+        &self,
+        req: GemmRequest,
+        deadline: Option<Instant>,
+    ) -> mpsc::Receiver<GemmResponse> {
+        if let Err(reason) = req.validate() {
+            return self.synthetic_error(
+                self.classes[0].device,
+                RequestOutcome::Error,
+                format!("invalid request: {reason}"),
+            );
+        }
+        let give_up = Instant::now() + ADMISSION_PATIENCE;
+        let mut req = req;
+        loop {
+            match self.try_submit_inner(req, deadline, false) {
+                Admission::Enqueued(rx) => return rx,
+                Admission::Rejected { reason } => {
+                    return self.synthetic_error(
+                        self.classes[0].device,
+                        RequestOutcome::Error,
+                        format!("invalid request: {reason}"),
+                    );
+                }
+                Admission::Shed { req: r, device, outstanding, capacity } => {
+                    if deadline.is_some_and(|d| Instant::now() >= d) {
+                        // The wait for a queue slot consumed the
+                        // deadline: a capacity refusal, counted as shed.
+                        if let Some(c) =
+                            self.classes.iter().find(|c| c.device == device)
+                        {
+                            c.counters.shed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        return self.synthetic_error(
+                            device,
+                            RequestOutcome::Expired,
+                            format!(
+                                "deadline expired awaiting admission on {device} \
+                                 ({outstanding}/{capacity} outstanding)"
+                            ),
+                        );
+                    }
+                    if Instant::now() >= give_up {
+                        return self.synthetic_error(
+                            device,
+                            RequestOutcome::Error,
+                            format!(
+                                "admission starved for {}s on {device} \
+                                 ({outstanding}/{capacity} outstanding)",
+                                ADMISSION_PATIENCE.as_secs()
+                            ),
+                        );
+                    }
+                    req = r;
+                    std::thread::sleep(ADMISSION_BACKOFF);
+                }
+            }
+        }
+    }
+
     /// Submit a request; returns the channel the response arrives on.
+    /// Blocks (bounded by an internal patience timeout) while every
+    /// candidate class is at its queue bound — use [`try_submit`]
+    /// (Self::try_submit) for explicit load-shedding.
     pub fn submit(&self, req: GemmRequest) -> mpsc::Receiver<GemmResponse> {
-        self.send_to(&self.classes[self.route(req.triple())], req)
+        self.submit_blocking(req, None)
+    }
+
+    /// Blocking submit with a deadline (see
+    /// [`try_submit_with_deadline`](Self::try_submit_with_deadline)).
+    pub fn submit_with_deadline(
+        &self,
+        req: GemmRequest,
+        deadline: Instant,
+    ) -> mpsc::Receiver<GemmResponse> {
+        self.submit_blocking(req, Some(deadline))
     }
 
     /// Submit a request *pinned* to a device class, bypassing the router
-    /// (still round-robined within the class, depth gauges maintained).
+    /// (still round-robined within the class, depth gauges and the queue
+    /// bound maintained — blocks while the class is full, so pinned
+    /// coverage traffic completes under overload instead of being shed).
     /// Coverage/diagnostic traffic: the hetero experiment scores every
     /// device's policy on identical pinned sweeps, so a device the
     /// router would rarely pick still gets measured (and its adaptation
@@ -286,8 +663,39 @@ impl ServerHandle {
         device: DeviceId,
         req: GemmRequest,
     ) -> Option<mpsc::Receiver<GemmResponse>> {
-        let class = self.classes.iter().find(|c| c.device == device)?;
-        Some(self.send_to(class, req))
+        let idx = self.classes.iter().position(|c| c.device == device)?;
+        if let Err(reason) = req.validate() {
+            return Some(self.synthetic_error(
+                device,
+                RequestOutcome::Error,
+                format!("invalid request: {reason}"),
+            ));
+        }
+        let give_up = Instant::now() + ADMISSION_PATIENCE;
+        let mut req = req;
+        loop {
+            match self.try_admit(&self.classes[idx], req, None) {
+                Ok(rx) => return Some(rx),
+                Err(r) => {
+                    if Instant::now() >= give_up {
+                        let class = &self.classes[idx];
+                        return Some(self.synthetic_error(
+                            device,
+                            RequestOutcome::Error,
+                            format!(
+                                "admission starved for {}s pinned to {device} \
+                                 ({}/{} outstanding)",
+                                ADMISSION_PATIENCE.as_secs(),
+                                class.outstanding.load(Ordering::Acquire),
+                                class.capacity
+                            ),
+                        ));
+                    }
+                    req = r;
+                    std::thread::sleep(ADMISSION_BACKOFF);
+                }
+            }
+        }
     }
 
     /// Submit and wait.
@@ -306,6 +714,32 @@ impl ServerHandle {
     pub fn devices(&self) -> Vec<DeviceId> {
         self.classes.iter().map(|c| c.device).collect()
     }
+
+    /// Outstanding (admitted, unanswered) requests on a device class.
+    pub fn outstanding(&self, device: DeviceId) -> Option<usize> {
+        self.classes
+            .iter()
+            .find(|c| c.device == device)
+            .map(|c| c.outstanding.load(Ordering::Acquire))
+    }
+
+    /// The queue bound a device class admits up to.
+    pub fn queue_capacity(&self, device: DeviceId) -> Option<usize> {
+        self.classes
+            .iter()
+            .find(|c| c.device == device)
+            .map(|c| c.capacity)
+    }
+
+    /// Reset every class's peak-depth watermark.  Experiment harnesses
+    /// warm compile caches through the serving path (legitimately
+    /// filling queues), then measure the bounded-depth guarantee from a
+    /// clean watermark.
+    pub fn reset_peak_depth(&self) {
+        for class in self.classes.iter() {
+            class.counters.peak_depth.store(0, Ordering::Relaxed);
+        }
+    }
 }
 
 /// Per-class coordination state the server keeps after startup.
@@ -313,6 +747,7 @@ struct ClassInfo {
     device: DeviceId,
     policy: Arc<PolicyHandle>,
     telemetry: Arc<TelemetryRing>,
+    counters: Arc<ClassCounters>,
 }
 
 /// The running server.
@@ -321,6 +756,9 @@ pub struct GemmServer {
     workers: Vec<JoinHandle<Vec<RequestRecord>>>,
     started: Instant,
     classes: Vec<ClassInfo>,
+    /// Drain flag: once set, shards answer queued envelopes with a typed
+    /// shutdown error instead of serving them.
+    stop: Arc<AtomicBool>,
 }
 
 impl GemmServer {
@@ -352,8 +790,17 @@ impl GemmServer {
     ) -> Result<GemmServer> {
         let cfg = cfg.validated()?;
         ensure!(!classes.is_empty(), "fleet needs at least one device class");
+        ensure!(
+            classes.len() <= 64,
+            "fleet supports at most 64 device classes"
+        );
         for (i, c) in classes.iter().enumerate() {
             ensure!(c.shards > 0, "device class {} needs shards > 0", c.device);
+            ensure!(
+                c.queue_capacity.is_none_or(|cap| cap > 0),
+                "device class {} needs queue_capacity > 0",
+                c.device
+            );
             ensure!(
                 classes[..i].iter().all(|p| p.device != c.device),
                 "device class {} listed twice",
@@ -362,14 +809,18 @@ impl GemmServer {
         }
         let n_workers: usize = classes.iter().map(|c| c.shards).sum();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let stop = Arc::new(AtomicBool::new(false));
         let mut states = Vec::with_capacity(classes.len());
         let mut infos = Vec::with_capacity(classes.len());
         let mut workers = Vec::with_capacity(n_workers);
         let mut shard = 0usize; // fleet-global shard index
         for class in classes {
             let spec = EngineSpec::for_device(class.device);
+            let capacity = class.queue_capacity.unwrap_or(cfg.queue_capacity);
             let policy = Arc::new(PolicyHandle::new(Arc::from(class.policy)));
             let telemetry = Arc::new(TelemetryRing::new(cfg.telemetry_capacity));
+            let outstanding = Arc::new(AtomicUsize::new(0));
+            let counters = Arc::new(ClassCounters::default());
             let mut txs = Vec::with_capacity(class.shards);
             let mut depths = Vec::with_capacity(class.shards);
             for _ in 0..class.shards {
@@ -384,6 +835,9 @@ impl GemmServer {
                     policy: Arc::clone(&policy),
                     telemetry: Arc::clone(&telemetry),
                     depth,
+                    outstanding: Arc::clone(&outstanding),
+                    counters: Arc::clone(&counters),
+                    stop: Arc::clone(&stop),
                     cfg,
                 };
                 let ready_tx = ready_tx.clone();
@@ -397,9 +851,17 @@ impl GemmServer {
                 cached: Mutex::new(policy.snapshot()),
                 txs,
                 depths,
+                outstanding,
+                capacity,
+                counters: Arc::clone(&counters),
                 next: AtomicUsize::new(0),
             });
-            infos.push(ClassInfo { device: class.device, policy, telemetry });
+            infos.push(ClassInfo {
+                device: class.device,
+                policy,
+                telemetry,
+                counters,
+            });
         }
         drop(ready_tx);
         let handle = ServerHandle { classes: Arc::new(states) };
@@ -424,6 +886,7 @@ impl GemmServer {
             workers,
             started: Instant::now(),
             classes: infos,
+            stop,
         })
     }
 
@@ -468,8 +931,25 @@ impl GemmServer {
             .map(|c| Arc::clone(&c.telemetry))
     }
 
-    /// Shut down and collect serving statistics (None if nothing served).
-    pub fn shutdown(mut self) -> Option<ServeStats> {
+    /// Shut down and collect serving statistics (None if nothing was
+    /// served or shed).  Queued envelopes are served out before the
+    /// shards exit; use [`shutdown_now`](Self::shutdown_now) to answer
+    /// them with a shutdown error instead.
+    pub fn shutdown(self) -> Option<ServeStats> {
+        self.finish()
+    }
+
+    /// Graceful *drain* shutdown: raise the stop flag first, so shards
+    /// answer every still-queued envelope with a typed
+    /// [`RequestOutcome::Drained`] shutdown error instead of spending
+    /// service time on it — no reply channel is ever silently dropped,
+    /// and shutdown latency is bounded by the in-flight window.
+    pub fn shutdown_now(self) -> Option<ServeStats> {
+        self.stop.store(true, Ordering::Release);
+        self.finish()
+    }
+
+    fn finish(mut self) -> Option<ServeStats> {
         let wall = self.started.elapsed();
         // Drop our sender references so each shard's recv() errors out
         // once all client handles are gone.
@@ -480,11 +960,24 @@ impl GemmServer {
                 records.append(&mut r);
             }
         }
-        if records.is_empty() {
-            None
-        } else {
-            Some(ServeStats::from_records(&records, wall))
+        let total_shed: u64 = self
+            .classes
+            .iter()
+            .map(|c| c.counters.shed.load(Ordering::Relaxed))
+            .sum();
+        if records.is_empty() && total_shed == 0 {
+            return None;
         }
+        let mut stats = ServeStats::from_records(&records, wall);
+        for c in &self.classes {
+            stats.record_admission(
+                c.device,
+                c.counters.shed.load(Ordering::Relaxed),
+                c.counters.pressure_picks.load(Ordering::Relaxed),
+                c.counters.peak_depth.load(Ordering::Relaxed),
+            );
+        }
+        Some(stats)
     }
 }
 
@@ -496,6 +989,9 @@ struct ShardCtx {
     policy: Arc<PolicyHandle>,
     telemetry: Arc<TelemetryRing>,
     depth: Arc<AtomicUsize>,
+    outstanding: Arc<AtomicUsize>,
+    counters: Arc<ClassCounters>,
+    stop: Arc<AtomicBool>,
     cfg: ServerConfig,
 }
 
@@ -525,15 +1021,38 @@ impl FractionSampler {
     }
 }
 
-/// One dispatcher shard: batches, selects, executes on its device
-/// engine's pooled path, and feeds its class's telemetry tap.
+/// How a window envelope resolves before execution.
+enum EnvAction {
+    Serve { pressure_pick: bool },
+    Expire,
+}
+
+/// Per-request record kept while serving — (artifact, queue, service,
+/// flops, outcome) with the dense id; names resolve once at shard exit.
+type RawRecord = (Option<ArtifactId>, Duration, Duration, f64, RequestOutcome);
+
+/// One dispatcher shard: batches, selects (with deadline and pressure
+/// awareness), executes on its device engine's pooled path, and feeds
+/// its class's telemetry tap.
 fn worker_loop(
     ctx: ShardCtx,
     rx: mpsc::Receiver<Envelope>,
     ready_tx: mpsc::Sender<Result<(), String>>,
 ) -> Vec<RequestRecord> {
-    let ShardCtx { shard, spec, dir, policy, telemetry, depth, cfg } = ctx;
+    let ShardCtx {
+        shard,
+        spec,
+        dir,
+        policy,
+        telemetry,
+        depth,
+        outstanding,
+        counters,
+        stop,
+        cfg,
+    } = ctx;
     let device = spec.device();
+    let profile = DeviceProfile::get(device);
     let mut engine: Box<dyn ExecutionEngine> = match spec.build(&dir) {
         Ok(e) => {
             let _ = ready_tx.send(Ok(()));
@@ -559,7 +1078,7 @@ fn worker_loop(
     // Records keep the dense id while serving; names are resolved once at
     // shard exit so the hot path does not allocate per-request Strings
     // beyond the response boundary.
-    let mut raw_records: Vec<(ArtifactId, Duration, Duration, f64)> = Vec::new();
+    let mut raw_records: Vec<RawRecord> = Vec::new();
     let mut window: Vec<Envelope> = Vec::with_capacity(cfg.max_batch);
     loop {
         // Block for the first request of a window.
@@ -567,36 +1086,92 @@ fn worker_loop(
             Err(_) => break, // all senders dropped: shutdown
             Ok(env) => window.push(env),
         }
-        // Fill the window for up to `batch_window`.
-        let deadline = Instant::now() + cfg.batch_window;
-        while window.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(env) => window.push(env),
-                Err(_) => break,
+        // Fill the window for up to `batch_window` (skipped while
+        // draining: stop-flagged shards answer as fast as possible).
+        if !stop.load(Ordering::Acquire) {
+            let deadline = Instant::now() + cfg.batch_window;
+            while window.len() < cfg.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(env) => window.push(env),
+                    Err(_) => break,
+                }
             }
         }
         // Window boundary: pick up a hot-swapped policy if one was
         // published.  One atomic load when nothing changed.
         policy.refresh(&mut cached);
+        if stop.load(Ordering::Acquire) {
+            // Graceful drain: answer every queued envelope with a typed
+            // shutdown error instead of serving it.
+            for env in window.drain(..) {
+                answer_unserved(
+                    env,
+                    RequestOutcome::Drained,
+                    cached.epoch,
+                    device,
+                    shard,
+                    &depth,
+                    &outstanding,
+                    &mut raw_records,
+                );
+            }
+            continue;
+        }
         // Resolve each request to a dense artifact id, then group the
         // window by id (stable sort keeps FIFO order within a group) —
         // the dynamic batcher, with no string keys on the hot path.
-        let mut resolved: Vec<(Option<ArtifactId>, Envelope)> = window
+        // Already-expired envelopes are dropped here, before any
+        // selection work; envelopes that queued past the pressure
+        // threshold resolve through the pressure pick.
+        let now = Instant::now();
+        let mut resolved: Vec<(Option<ArtifactId>, EnvAction, Envelope)> = window
             .drain(..)
             .map(|env| {
+                if env.deadline.is_some_and(|d| now >= d) {
+                    return (None, EnvAction::Expire, env);
+                }
                 let t = env.req.triple();
                 let cfg_sel = cached.select(t);
                 let id = engine.resolve(&cfg_sel, t);
-                (id, env)
+                let pressured = now.saturating_duration_since(env.submitted)
+                    >= cfg.pressure_threshold;
+                if pressured {
+                    let (picked, swapped) = pressure_resolve(
+                        &*engine,
+                        &profile,
+                        id,
+                        t,
+                        cfg.pressure_slowdown,
+                    );
+                    if swapped {
+                        counters.pressure_picks.fetch_add(1, Ordering::Relaxed);
+                    }
+                    (picked, EnvAction::Serve { pressure_pick: swapped }, env)
+                } else {
+                    (id, EnvAction::Serve { pressure_pick: false }, env)
+                }
             })
             .collect();
-        resolved.sort_by_key(|(id, _)| *id);
+        resolved.sort_by_key(|(id, _, _)| *id);
 
-        for (id, env) in resolved {
+        for (id, action, env) in resolved {
+            let EnvAction::Serve { pressure_pick } = action else {
+                answer_unserved(
+                    env,
+                    RequestOutcome::Expired,
+                    cached.epoch,
+                    device,
+                    shard,
+                    &depth,
+                    &outstanding,
+                    &mut raw_records,
+                );
+                continue;
+            };
             let queue = env.submitted.elapsed();
             let t0 = Instant::now();
             let mut times = None;
@@ -623,9 +1198,13 @@ fn worker_loop(
                 None => String::new(),
             };
             let served_ok = result.is_ok();
-            if let (true, Some(id)) = (served_ok, id) {
-                raw_records.push((id, queue, service, env.req.triple().flops()));
-            }
+            let outcome = if served_ok {
+                RequestOutcome::Ok
+            } else {
+                RequestOutcome::Error
+            };
+            let flops = if served_ok { env.req.triple().flops() } else { 0.0 };
+            raw_records.push((id, queue, service, flops, outcome));
             let _ = env.reply.send(GemmResponse {
                 out: result,
                 artifact,
@@ -635,10 +1214,13 @@ fn worker_loop(
                 device,
                 routed: env.routed,
                 shard,
+                outcome,
+                pressure_pick,
             });
-            // The request is answered: release its depth-gauge slot so
-            // the router sees this shard's real backlog.
+            // The request is answered: release its depth-gauge slots so
+            // the router and the admission bound see the real backlog.
             depth.fetch_sub(1, Ordering::Relaxed);
+            outstanding.fetch_sub(1, Ordering::AcqRel);
             // Telemetry tap — after the reply, entirely off the response
             // path.  `times` excludes compile, so the sample is
             // comparable to the shadow measurement below.
@@ -670,15 +1252,56 @@ fn worker_loop(
     }
     raw_records
         .into_iter()
-        .map(|(id, queue, service, flops)| RequestRecord {
-            artifact: engine.manifest().name_of(id).to_string(),
+        .map(|(id, queue, service, flops, outcome)| RequestRecord {
+            artifact: id
+                .map(|id| engine.manifest().name_of(id).to_string())
+                .unwrap_or_default(),
             device,
             shard,
             queue,
             service,
             flops,
+            outcome,
         })
         .collect()
+}
+
+/// Answer an envelope without executing it (graceful drain / deadline
+/// expiry): typed error reply, depth gauges released, outcome recorded.
+#[allow(clippy::too_many_arguments)]
+fn answer_unserved(
+    env: Envelope,
+    outcome: RequestOutcome,
+    epoch: u64,
+    device: DeviceId,
+    shard: usize,
+    depth: &AtomicUsize,
+    outstanding: &AtomicUsize,
+    raw: &mut Vec<RawRecord>,
+) {
+    let queue = env.submitted.elapsed();
+    raw.push((None, queue, Duration::ZERO, 0.0, outcome));
+    let message = match outcome {
+        RequestOutcome::Expired => format!(
+            "overload: deadline expired after {:.3}ms queued on {device}",
+            queue.as_secs_f64() * 1e3
+        ),
+        _ => format!("server shutting down; request drained unserved on {device}"),
+    };
+    let _ = env.reply.send(GemmResponse {
+        out: Err(anyhow!("{message}")),
+        artifact: String::new(),
+        queue,
+        service: Duration::ZERO,
+        epoch,
+        device,
+        routed: env.routed,
+        shard,
+        outcome,
+        pressure_pick: false,
+    });
+    depth.fetch_sub(1, Ordering::Relaxed);
+    outstanding.fetch_sub(1, Ordering::AcqRel);
 }
 
 fn gemm_input(req: &GemmRequest) -> GemmInput<'_> {
@@ -691,6 +1314,41 @@ fn gemm_input(req: &GemmRequest) -> GemmInput<'_> {
         c: &req.c,
         alpha: req.alpha,
         beta: req.beta,
+    }
+}
+
+/// The pressure pick: under queue pressure, find the modeled-cheapest
+/// servable artifact for `t` and override the policy's resolution when
+/// it is more than `slowdown` times slower — the overload feedback from
+/// system state into the paper's model-driven selection.  Returns the id
+/// to serve plus whether the policy's choice was overridden.
+/// Allocation-free: one pass over the small immutable manifest, pure
+/// arithmetic per candidate ([`sim::modeled_secs`]).
+fn pressure_resolve(
+    engine: &dyn ExecutionEngine,
+    profile: &DeviceProfile,
+    policy_id: Option<ArtifactId>,
+    t: Triple,
+    slowdown: f64,
+) -> (Option<ArtifactId>, bool) {
+    let Some((best_id, best_secs)) = engine.modeled_cheapest(profile, t) else {
+        // Nothing measurable: leave the policy's resolution alone.
+        return (policy_id, false);
+    };
+    match policy_id {
+        Some(pid) if pid == best_id => (policy_id, false),
+        Some(pid) => {
+            let policy_secs =
+                sim::modeled_secs(profile, &engine.manifest().meta(pid).config, t);
+            match policy_secs {
+                // Within the slowdown bound: the policy's (likely
+                // throughput-optimal) pick stands — pressure never
+                // churns selections that are already cheap enough.
+                Some(p) if p <= best_secs * slowdown => (policy_id, false),
+                _ => (Some(best_id), true),
+            }
+        }
+        None => (Some(best_id), true),
     }
 }
 
@@ -760,14 +1418,30 @@ mod tests {
         let bad_batch = ServerConfig { max_batch: 0, ..ServerConfig::default() };
         let err = bad_batch.validated().unwrap_err();
         assert!(err.to_string().contains("max_batch"), "{err}");
+        // A zero queue bound would shed everything: hard error, like
+        // shards/max_batch.
+        let bad_cap = ServerConfig { queue_capacity: 0, ..ServerConfig::default() };
+        let err = bad_cap.validated().unwrap_err();
+        assert!(err.to_string().contains("queue_capacity"), "{err}");
         // Out-of-range fractions clamp instead of erroring.
         let cfg = ServerConfig::adaptive(2, 1.5, -0.25).validated().unwrap();
         assert_eq!(cfg.telemetry_fraction, 1.0);
         assert_eq!(cfg.shadow_fraction, 0.0);
+        // The pressure slowdown is a factor >= 1.0; NaN falls back to 1.0.
+        let cfg = ServerConfig { pressure_slowdown: 0.25, ..ServerConfig::default() }
+            .validated()
+            .unwrap();
+        assert_eq!(cfg.pressure_slowdown, 1.0);
+        let cfg = ServerConfig { pressure_slowdown: f64::NAN, ..ServerConfig::default() }
+            .validated()
+            .unwrap();
+        assert_eq!(cfg.pressure_slowdown, 1.0);
         // A sane config passes through unchanged.
         let cfg = ServerConfig::adaptive(4, 0.5, 0.25).validated().unwrap();
         assert_eq!((cfg.shards, cfg.max_batch), (4, 32));
         assert_eq!((cfg.telemetry_fraction, cfg.shadow_fraction), (0.5, 0.25));
+        assert_eq!(cfg.queue_capacity, 1024);
+        assert_eq!(cfg.pressure_threshold, Duration::MAX);
     }
 
     #[test]
@@ -784,7 +1458,7 @@ mod tests {
     }
 
     #[test]
-    fn fleet_rejects_empty_and_duplicate_classes() {
+    fn fleet_rejects_empty_duplicate_and_zero_capacity_classes() {
         let cfg = ServerConfig::default();
         let err = GemmServer::start_fleet(Path::new("/nonexistent"), Vec::new(), cfg)
             .unwrap_err();
@@ -804,10 +1478,105 @@ mod tests {
         let err = GemmServer::start_fleet(Path::new("/nonexistent"), classes, cfg)
             .unwrap_err();
         assert!(err.to_string().contains("twice"), "{err}");
+        // A per-class zero queue bound is rejected like the global one.
+        let classes = vec![DeviceClass::new(
+            DeviceId::NvidiaP100,
+            1,
+            Box::new(super::super::DefaultPolicy::clblast()),
+        )
+        .with_queue_capacity(0)];
+        let err = GemmServer::start_fleet(Path::new("/nonexistent"), classes, cfg)
+            .unwrap_err();
+        assert!(err.to_string().contains("queue_capacity"), "{err}");
+    }
+
+    #[test]
+    fn request_validation_catches_truncation_and_length_mismatch() {
+        let ok = GemmRequest {
+            m: 2,
+            n: 3,
+            k: 4,
+            a: vec![0.0; 8],
+            b: vec![0.0; 12],
+            c: vec![0.0; 6],
+            alpha: 1.0,
+            beta: 0.0,
+        };
+        assert!(ok.validate().is_ok());
+        // Oversized dimension: the old `m as u32` silently truncated
+        // this to 0 and served a wrong triple.  n=k=0 keeps the operand
+        // vectors empty so the case is constructible.
+        let oversized = GemmRequest {
+            m: u32::MAX as usize + 1,
+            n: 0,
+            k: 0,
+            a: Vec::new(),
+            b: Vec::new(),
+            c: Vec::new(),
+            alpha: 1.0,
+            beta: 0.0,
+        };
+        let err = oversized.validate().unwrap_err();
+        assert!(err.contains("exceeds the u32 triple limit"), "{err}");
+        assert!(err.contains('m'), "{err}");
+        // Mismatched operand lengths.
+        let mismatched = GemmRequest { a: vec![0.0; 7], ..ok.clone() };
+        let err = mismatched.validate().unwrap_err();
+        assert!(err.contains("operand lengths"), "{err}");
+        assert!(err.contains("a=7"), "{err}");
     }
 
     fn sim_engine() -> SimEngine {
         SimEngine::new(DeviceProfile::nvidia_p100(), crate::testing::sample_manifest())
+    }
+
+    #[test]
+    fn pressure_pick_swaps_to_modeled_cheapest_within_bound() {
+        let engine = sim_engine();
+        let profile = DeviceProfile::nvidia_p100();
+        let t = Triple::new(64, 64, 64); // all three artifacts accept it
+        let m = engine.manifest();
+        let secs = |id: ArtifactId| {
+            sim::modeled_secs(&profile, &m.meta(id).config, t).unwrap()
+        };
+        let ids: Vec<ArtifactId> = (0..m.len() as u32)
+            .map(ArtifactId)
+            .filter(|id| engine.is_servable(*id) && m.meta(*id).accepts(t))
+            .collect();
+        assert_eq!(ids.len(), 3);
+        let best = *ids
+            .iter()
+            .min_by(|a, b| secs(**a).total_cmp(&secs(**b)))
+            .unwrap();
+        let worst = *ids
+            .iter()
+            .max_by(|a, b| secs(**a).total_cmp(&secs(**b)))
+            .unwrap();
+        assert_ne!(best, worst);
+        // A modeled-slow policy pick under pressure swaps to the cheapest.
+        assert_eq!(
+            pressure_resolve(&engine, &profile, Some(worst), t, 1.0),
+            (Some(best), true)
+        );
+        // Within a generous slowdown bound the policy's pick stands.
+        assert_eq!(
+            pressure_resolve(&engine, &profile, Some(worst), t, 1e9),
+            (Some(worst), false)
+        );
+        // The cheapest pick is never "overridden".
+        assert_eq!(
+            pressure_resolve(&engine, &profile, Some(best), t, 1.0),
+            (Some(best), false)
+        );
+        // No policy resolution at all: pressure resolves to the cheapest.
+        assert_eq!(
+            pressure_resolve(&engine, &profile, None, t, 1.0),
+            (Some(best), true)
+        );
+        // Nothing accepts the triple: the policy's (non-)resolution is
+        // left alone.
+        let huge = Triple::new(4000, 4000, 4000);
+        assert_eq!(pressure_resolve(&engine, &profile, None, huge, 1.0), (None, false));
     }
 
     #[test]

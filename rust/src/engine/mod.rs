@@ -70,6 +70,34 @@ pub trait ExecutionEngine {
         scratch: &mut ScratchBuffers,
     ) -> Result<GemmTimes>;
 
+    /// The modeled-cheapest servable artifact accepting `t` on
+    /// `profile` ([`sim::modeled_secs`]), with its modeled seconds —
+    /// the candidate scan behind the coordinator's overload *pressure
+    /// pick* (swap a queue-pressured request's selection for the
+    /// cheapest artifact within a slowdown bound).  Allocation-free:
+    /// one pass over the small immutable manifest, pure arithmetic per
+    /// candidate.
+    fn modeled_cheapest(
+        &self,
+        profile: &DeviceProfile,
+        t: Triple,
+    ) -> Option<(ArtifactId, f64)> {
+        let m = self.manifest();
+        let mut best: Option<(ArtifactId, f64)> = None;
+        for id in (0..m.len() as u32).map(ArtifactId) {
+            if !self.is_servable(id) || !m.meta(id).accepts(t) {
+                continue;
+            }
+            let Some(secs) = sim::modeled_secs(profile, &m.meta(id).config, t) else {
+                continue;
+            };
+            if best.is_none_or(|(_, b)| secs < b) {
+                best = Some((id, secs));
+            }
+        }
+        best
+    }
+
     /// Resolve a policy-selected config to the least-waste *servable*
     /// artifact for `t`, falling back to any servable artifact accepting
     /// `t` (least waste) when the config has none — the dispatcher's
@@ -340,6 +368,31 @@ mod tests {
         let p100 = sim(DeviceId::NvidiaP100);
         let id = p100.resolve(&cfg, Triple::new(200, 200, 200)).unwrap();
         assert_eq!(p100.manifest().name_of(id), "i2");
+    }
+
+    #[test]
+    fn modeled_cheapest_is_the_servable_argmin() {
+        let eng = sim(DeviceId::NvidiaP100);
+        let profile = DeviceProfile::nvidia_p100();
+        let t = Triple::new(64, 64, 64); // every artifact accepts it
+        let (best, best_secs) = eng.modeled_cheapest(&profile, t).unwrap();
+        // Exhaustive check: nothing servable models faster.
+        for a in &eng.manifest().artifacts {
+            if let Some(secs) = sim::modeled_secs(&profile, &a.config, t) {
+                assert!(best_secs <= secs, "{} beats the returned pick", a.name);
+            }
+        }
+        assert!(eng.is_servable(best));
+        // On the Mali the 1024-thread i2 is not servable: even when it
+        // is the only artifact accepting 200^3, it must not be picked.
+        let mali = sim(DeviceId::MaliT860);
+        let mali_profile = DeviceProfile::mali_t860();
+        assert_eq!(mali.modeled_cheapest(&mali_profile, Triple::new(200, 200, 200)), None);
+        // In-bucket shapes pick among the legal subset only.
+        let (id, _) = mali
+            .modeled_cheapest(&mali_profile, Triple::new(100, 100, 100))
+            .unwrap();
+        assert!(mali.is_servable(id));
     }
 
     #[test]

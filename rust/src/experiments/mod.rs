@@ -8,6 +8,7 @@ pub mod e2e;
 pub mod figures;
 pub mod hetero;
 pub mod microbench;
+pub mod overload;
 pub mod tables;
 
 pub use context::{tree_stats, Context, ModelRow, SweepResult, TreeStats};

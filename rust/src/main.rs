@@ -11,6 +11,7 @@
 //! adaptd serve-demo --artifacts artifacts --requests 200 --policy <model|default>
 //! adaptd drift     --artifacts artifacts --requests 32 --waves 3
 //! adaptd hetero    --artifacts artifacts --devices host-cpu,p100,mali --waves 2
+//! adaptd overload  --artifacts artifacts --requests 120 --capacity 24 --load 1,2,4
 //! adaptd bench-compare --baseline BENCH_baseline.json --current BENCH_hotpath.json
 //! adaptd info      --artifacts artifacts
 //! ```
@@ -53,6 +54,10 @@ fn opt_specs() -> Vec<OptSpec> {
         opt("waves", "drift: adaptation waves on the shifted mix", Some("3")),
         opt("sample", "drift: telemetry sampling fraction", Some("1.0")),
         opt("shadow", "drift: shadow-execution budget fraction", Some("1.0")),
+        opt("capacity", "overload: per-class queue bound", Some("24")),
+        opt("load", "overload: offered-load factors (csv)", Some("1,2,4")),
+        opt("pressure-ms", "overload: pressure threshold ms (0 = auto)", Some("0")),
+        opt("slowdown", "overload: pressure-pick slowdown bound", Some("1.25")),
         opt("baseline", "bench-compare: committed baseline JSON", None),
         opt("current", "bench-compare: freshly produced bench JSON", None),
         opt("tolerance", "bench-compare: relative regression tolerance", Some("0.15")),
@@ -77,6 +82,7 @@ fn commands() -> Vec<(&'static str, &'static str)> {
         ("serve-demo", "serve a request stream under one policy"),
         ("drift", "workload-shift experiment: online adaptation vs frozen model"),
         ("hetero", "heterogeneous fleet: mixed workload across device classes"),
+        ("overload", "offered-load sweep: admission, shedding, pressure picks"),
         ("bench-compare", "diff bench JSONs and fail on perf regressions"),
         ("info", "describe the artifact roster"),
     ]
@@ -126,6 +132,7 @@ fn run(argv: &[String]) -> Result<()> {
         "serve-demo" => cmd_serve_demo(&args),
         "drift" => cmd_drift(&args),
         "hetero" => cmd_hetero(&args),
+        "overload" => cmd_overload(&args),
         "bench-compare" => cmd_bench_compare(&args),
         "info" => cmd_info(&args),
         other => bail!(
@@ -359,6 +366,41 @@ fn cmd_hetero(args: &cli::Args) -> Result<()> {
     let report = experiments::hetero::run(&artifacts, cfg)?;
     println!("{}", report.render());
     let out = PathBuf::from(args.get_or("out", "BENCH_hetero.json"));
+    report.save(&out)?;
+    eprintln!("wrote {}", out.display());
+    Ok(())
+}
+
+/// Overload experiment: open-loop offered-load sweep at multiples of the
+/// calibrated capacity, policy-only vs pressure-pick selection; writes
+/// the machine-readable summary the CI overload gate consumes
+/// (shed rate at 1x, bounded peak queue depth, p99 floor).
+fn cmd_overload(args: &cli::Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let mut load_factors = Vec::new();
+    for part in args
+        .get_or("load", "1,2,4")
+        .split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+    {
+        let f: f64 = part
+            .parse()
+            .with_context(|| format!("invalid load factor '{part}'"))?;
+        load_factors.push(f);
+    }
+    let cfg = experiments::overload::OverloadConfig {
+        requests: args.get_parse("requests", 120)?,
+        load_factors,
+        shards: args.get_parse("shards", 1)?,
+        queue_capacity: args.get_parse("capacity", 24)?,
+        reps: args.get_parse("reps", 1)?,
+        pressure_threshold_ms: args.get_parse("pressure-ms", 0.0)?,
+        pressure_slowdown: args.get_parse("slowdown", 1.25)?,
+    };
+    let report = experiments::overload::run(&artifacts, cfg)?;
+    println!("{}", report.render());
+    let out = PathBuf::from(args.get_or("out", "BENCH_overload.json"));
     report.save(&out)?;
     eprintln!("wrote {}", out.display());
     Ok(())

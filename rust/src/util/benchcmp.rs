@@ -18,7 +18,12 @@
 //! * per-device `accuracy` (hetero runs: top-level `devices[]` in
 //!   `BENCH_hetero.json`, nested under `"hetero"` in the baseline) —
 //!   accuracies are 0-1 fractions, so the regression test is an
-//!   *absolute* drop beyond `tolerance`.
+//!   *absolute* drop beyond `tolerance`;
+//! * overload gates (`BENCH_overload.json`): `shed_rate_1x` must be 0
+//!   (a server shedding below capacity is broken admission),
+//!   `depth_bounded` must be true (the queue never grew past its
+//!   configured bound), and `p99_1x_ms` must stay within `tolerance` of
+//!   the committed floor (`overload.p99_1x_ms` in the baseline).
 //!
 //! A baseline marked `"provisional": true` (committed before real runner
 //! numbers exist) reports regressions as warnings instead of failures;
@@ -229,6 +234,61 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> BenchDiff {
         }
     }
 
+    // Overload gates.  The structural guarantees are self-contained in
+    // the current file (like `recovered`): shedding at 1x offered load
+    // and an exceeded queue bound are wrong at *any* baseline.
+    if let Ok(rate) = current.get("shed_rate_1x").and_then(|r| r.as_f64()) {
+        diff.compared += 1;
+        diff.lines
+            .push(format!("overload shed rate @1x: {:.2}%", rate * 100.0));
+        if rate > 0.0 {
+            diff.regressions.push(format!(
+                "overload: shedding below capacity ({:.2}% shed at 1x offered load)",
+                rate * 100.0
+            ));
+        }
+    }
+    if let Ok(bounded) = current.get("depth_bounded").and_then(|b| b.as_bool()) {
+        diff.compared += 1;
+        diff.lines.push(format!("overload depth bounded: {bounded}"));
+        if !bounded {
+            diff.regressions.push(
+                "overload: peak queue depth exceeded the configured bound"
+                    .to_string(),
+            );
+        }
+    }
+    // p99 at 1x against the committed floor (baseline `overload` key):
+    // a latency, so lower is better and the tolerance is relative.
+    let base_p99 = baseline
+        .get("overload")
+        .ok()
+        .and_then(|o| num_at(o, "p99_1x_ms"));
+    if let (Some(base), Some(cur)) = (base_p99, num_at(current, "p99_1x_ms")) {
+        diff.compared += 1;
+        let delta = 100.0 * (cur / base - 1.0);
+        diff.lines.push(format!(
+            "overload p99 @1x: {base:.2}ms -> {cur:.2}ms ({delta:+.1}%)"
+        ));
+        if cur > base * (1.0 + tolerance) {
+            diff.regressions.push(format!(
+                "overload: p99 at 1x load {delta:+.1}% above the committed floor \
+                 (tolerance {:.0}%)",
+                tolerance * 100.0
+            ));
+        }
+    }
+    // Informational only (timing-sensitive on shared runners): whether
+    // pressure picks beat policy-only selection at the deepest overload.
+    if let Ok(improved) = current
+        .get("pressure_p99_improved")
+        .and_then(|b| b.as_bool())
+    {
+        diff.lines.push(format!(
+            "overload pressure-pick p99 improved at max load: {improved}"
+        ));
+    }
+
     // Drift recovery: the fresh run must not report a lost recovery.
     if let Ok(rec) = current.get("recovered").and_then(|r| r.as_bool()) {
         diff.compared += 1;
@@ -405,6 +465,45 @@ mod tests {
         let diff = compare(&base, &with_engine(1.0), 0.15);
         assert!(!diff.passes());
         assert!(diff.regressions.iter().any(|r| r.contains("engine_pooled")));
+    }
+
+    #[test]
+    fn overload_gates_shed_depth_and_p99_floor() {
+        let base = Json::parse(r#"{"bench":"hotpath","overload":{"p99_1x_ms":10.0}}"#)
+            .unwrap();
+        let cur = |shed: f64, bounded: bool, p99: f64| {
+            Json::parse(&format!(
+                r#"{{"bench":"overload","shed_rate_1x":{shed},
+                     "depth_bounded":{bounded},"p99_1x_ms":{p99},
+                     "pressure_p99_improved":true}}"#
+            ))
+            .unwrap()
+        };
+        // Clean run: all three gates compared, none regress.
+        let diff = compare(&base, &cur(0.0, true, 10.5), 0.15);
+        assert_eq!(diff.compared, 3);
+        assert!(diff.passes(), "{:?}", diff.regressions);
+        assert!(diff
+            .lines
+            .iter()
+            .any(|l| l.contains("pressure-pick p99 improved")));
+        // Any shedding at 1x fails.
+        let diff = compare(&base, &cur(0.05, true, 10.0), 0.15);
+        assert!(!diff.passes());
+        assert!(diff.regressions[0].contains("shedding below capacity"));
+        // An exceeded queue bound fails.
+        let diff = compare(&base, &cur(0.0, false, 10.0), 0.15);
+        assert!(!diff.passes());
+        assert!(diff.regressions[0].contains("queue depth"));
+        // p99 past the committed floor (relative tolerance) fails.
+        let diff = compare(&base, &cur(0.0, true, 12.0), 0.15);
+        assert!(!diff.passes());
+        assert!(diff.regressions[0].contains("p99 at 1x"));
+        // No floor in the baseline: the structural gates still compare.
+        let no_floor = Json::parse(r#"{"bench":"hotpath"}"#).unwrap();
+        let diff = compare(&no_floor, &cur(0.0, true, 99.0), 0.15);
+        assert_eq!(diff.compared, 2);
+        assert!(diff.passes(), "{:?}", diff.regressions);
     }
 
     #[test]

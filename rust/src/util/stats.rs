@@ -39,8 +39,11 @@ impl Summary {
         } else {
             0.0
         };
+        // total_cmp: a NaN-bearing sample must never panic the sort (the
+        // old partial_cmp(..).unwrap() did); NaNs order after +inf, so
+        // they surface in `max` instead of crashing stat collection.
         let mut sorted = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         Summary {
             n,
             mean,
@@ -62,9 +65,14 @@ impl Summary {
     }
 }
 
-/// Linear-interpolation percentile over a pre-sorted slice, `p` in [0,100].
+/// Linear-interpolation percentile over a pre-sorted slice, `p` in
+/// [0,100].  An empty sample has no percentile: returns NaN (documented,
+/// like [`mean`]) instead of the old `assert!` panic, so aggregation
+/// paths stay total.
 pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
-    assert!(!sorted.is_empty());
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
     if sorted.len() == 1 {
         return sorted[0];
     }
@@ -75,9 +83,12 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     sorted[lo] + (sorted[hi] - sorted[lo]) * frac
 }
 
+/// Percentile of an unsorted sample.  NaN-total: NaN inputs sort last
+/// (`f64::total_cmp`) rather than panicking the comparator, and an empty
+/// sample returns NaN.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     percentile_sorted(&sorted, p)
 }
 
@@ -171,5 +182,26 @@ mod tests {
     #[test]
     fn mean_empty_is_nan() {
         assert!(mean(&[]).is_nan());
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // Regression: the old partial_cmp(..).unwrap() comparator
+        // panicked on any NaN in the sample.  total_cmp orders NaN last,
+        // so finite percentiles stay meaningful and nothing crashes.
+        let xs = [10.0, f64::NAN, 20.0, 30.0];
+        let p0 = percentile(&xs, 0.0);
+        assert_eq!(p0, 10.0);
+        assert!(percentile(&xs, 100.0).is_nan(), "NaN sorts last");
+        // A NaN-bearing Summary is computed, not a panic.
+        let s = Summary::of(&xs);
+        assert_eq!(s.min, 10.0);
+        assert!(s.max.is_nan());
+    }
+
+    #[test]
+    fn percentile_of_empty_is_nan_not_panic() {
+        assert!(percentile_sorted(&[], 50.0).is_nan());
+        assert!(percentile(&[], 99.0).is_nan());
     }
 }

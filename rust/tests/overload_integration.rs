@@ -1,0 +1,372 @@
+//! Integration: bounded admission, load shedding, deadlines, pressure
+//! picks and graceful drain on the serving path.  Uses analytical-engine
+//! (sim) device classes so queueing behaviour is driven by real wall
+//! time while selection economics stay deterministic.  Skips when
+//! `make artifacts` has not run.
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use adaptlib::config::Triple;
+use adaptlib::coordinator::{
+    Admission, DeviceClass, GemmRequest, GemmServer, RequestOutcome, SelectPolicy,
+    ServerConfig, ServerHandle,
+};
+use adaptlib::device::{sim, DeviceId, DeviceProfile};
+use adaptlib::experiments::hetero::device_policy;
+use adaptlib::runtime::Manifest;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn req(m: usize, n: usize, k: usize) -> GemmRequest {
+    GemmRequest {
+        m,
+        n,
+        k,
+        a: vec![0.25; m * k],
+        b: vec![1.0; k * n],
+        c: vec![0.0; m * n],
+        alpha: 1.0,
+        beta: 0.0,
+    }
+}
+
+fn p100_class(dir: &Path, shards: usize, capacity: usize) -> Vec<DeviceClass> {
+    let manifest = Manifest::load(dir).unwrap();
+    vec![DeviceClass::new(
+        DeviceId::NvidiaP100,
+        shards,
+        device_policy(&manifest, DeviceId::NvidiaP100).unwrap(),
+    )
+    .with_queue_capacity(capacity)]
+}
+
+fn await_zero_outstanding(handle: &ServerHandle, device: DeviceId) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while handle.outstanding(device) != Some(0) && Instant::now() < deadline {
+        std::thread::yield_now();
+    }
+    assert_eq!(
+        handle.outstanding(device),
+        Some(0),
+        "depth gauges must return to zero once every response is answered"
+    );
+}
+
+/// Flooding a 1-shard class past its queue bound: sheds are typed and
+/// counted, admitted traffic completes, pinned blocking traffic still
+/// completes, and the depth gauges return to zero afterwards.
+#[test]
+fn flood_past_queue_bound_sheds_typed_and_recovers() {
+    let Some(dir) = artifacts_dir() else { return };
+    let capacity = 4usize;
+    let cfg = ServerConfig { max_batch: 4, ..ServerConfig::default() };
+    let server =
+        GemmServer::start_fleet(&dir, p100_class(&dir, 1, capacity), cfg).unwrap();
+    let handle = server.handle();
+    assert_eq!(handle.queue_capacity(DeviceId::NvidiaP100), Some(capacity));
+
+    // Pre-generate so the flood loop is pure submission (far faster than
+    // one 128^3 service), guaranteeing the bound is hit.
+    let flood: Vec<GemmRequest> = (0..64).map(|_| req(128, 128, 128)).collect();
+    let mut admitted = Vec::new();
+    let mut sheds = 0usize;
+    for r in flood {
+        match handle.try_submit_to(DeviceId::NvidiaP100, r).unwrap() {
+            Admission::Enqueued(rx) => admitted.push(rx),
+            Admission::Shed { req, device, outstanding, capacity: cap } => {
+                // (a) the shed outcome is typed, describes the refusing
+                // class, and hands the request back intact.
+                sheds += 1;
+                assert_eq!(device, DeviceId::NvidiaP100);
+                assert_eq!(cap, capacity);
+                // The reported depth is a fresh load taken after the
+                // refusal — the worker may have answered a request in
+                // the window, so only the upper bound is deterministic.
+                assert!(outstanding <= capacity, "{outstanding} > {capacity}");
+                assert_eq!((req.m, req.n, req.k), (128, 128, 128));
+            }
+            Admission::Rejected { reason } => panic!("valid request rejected: {reason}"),
+        }
+    }
+    assert!(sheds > 0, "64 instant submissions must overflow a bound of 4");
+    assert!(!admitted.is_empty());
+
+    // (c) pinned coverage traffic (blocking submit_to) still completes
+    // even while the class is saturated.
+    let pinned = handle
+        .submit_to(DeviceId::NvidiaP100, req(64, 64, 64))
+        .expect("p100 class exists");
+    for rx in admitted.drain(..) {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.outcome, RequestOutcome::Ok);
+        resp.out.unwrap();
+    }
+    let resp = pinned.recv().unwrap();
+    assert_eq!(resp.outcome, RequestOutcome::Ok);
+    resp.out.unwrap();
+
+    // (b) depth gauges return to zero once everything is answered.
+    await_zero_outstanding(&handle, DeviceId::NvidiaP100);
+    drop(handle);
+    let stats = server.shutdown().unwrap();
+    let dev = &stats.per_device["nvidia-p100"];
+    assert_eq!(dev.shed, sheds as u64, "sheds counted per device");
+    assert!(dev.peak_depth <= capacity, "bound violated: {}", dev.peak_depth);
+    assert_eq!(dev.served, stats.n_requests);
+}
+
+/// An envelope whose deadline has already passed when the shard resolves
+/// its window is dropped with a typed expired error — no service time is
+/// spent on it — and counted in the per-device stats.
+#[test]
+fn expired_deadlines_are_dropped_at_window_resolve() {
+    let Some(dir) = artifacts_dir() else { return };
+    let server = GemmServer::start_fleet(
+        &dir,
+        p100_class(&dir, 1, 64),
+        ServerConfig::default(),
+    )
+    .unwrap();
+    let handle = server.handle();
+
+    // Already-expired deadline: the worker's window-resolve instant is
+    // strictly later than this, so expiry is deterministic.
+    let rx = match handle.try_submit_with_deadline(req(64, 64, 64), Instant::now()) {
+        Admission::Enqueued(rx) => rx,
+        other => panic!("empty queue must admit: {other:?}"),
+    };
+    let resp = rx.recv().unwrap();
+    assert_eq!(resp.outcome, RequestOutcome::Expired);
+    let err = resp.out.unwrap_err().to_string();
+    assert!(err.contains("deadline expired"), "{err}");
+    assert!(err.contains("overload"), "typed overload error: {err}");
+    assert_eq!(resp.service, Duration::ZERO, "no service time spent");
+
+    // A generous deadline serves normally.
+    let rx = match handle
+        .try_submit_with_deadline(req(64, 64, 64), Instant::now() + Duration::from_secs(60))
+    {
+        Admission::Enqueued(rx) => rx,
+        other => panic!("empty queue must admit: {other:?}"),
+    };
+    let resp = rx.recv().unwrap();
+    assert_eq!(resp.outcome, RequestOutcome::Ok);
+    resp.out.unwrap();
+
+    await_zero_outstanding(&handle, DeviceId::NvidiaP100);
+    drop(handle);
+    let stats = server.shutdown().unwrap();
+    let dev = &stats.per_device["nvidia-p100"];
+    assert_eq!((dev.expired, dev.served), (1, 1));
+    assert_eq!(stats.n_requests, 2);
+}
+
+/// Drain-on-shutdown property: across shard counts and burst sizes,
+/// `shutdown_now` answers *every* outstanding envelope — each receiver
+/// gets exactly one response (served or typed-drained), never a dropped
+/// sender.
+#[test]
+fn drain_on_shutdown_answers_every_outstanding_envelope() {
+    let Some(dir) = artifacts_dir() else { return };
+    for (shards, burst) in [(1usize, 48usize), (2, 64)] {
+        let server = GemmServer::start_fleet(
+            &dir,
+            p100_class(&dir, shards, 256),
+            ServerConfig::default(),
+        )
+        .unwrap();
+        let handle = server.handle();
+        let reqs: Vec<GemmRequest> = (0..burst).map(|_| req(128, 128, 128)).collect();
+        let mut pending = Vec::with_capacity(burst);
+        for r in reqs {
+            match handle.try_submit(r) {
+                Admission::Enqueued(rx) => pending.push(rx),
+                other => panic!("capacity 256 must admit a burst of {burst}: {other:?}"),
+            }
+        }
+        drop(handle);
+        let stats = server.shutdown_now().expect("answered envelopes are recorded");
+        let mut served = 0usize;
+        let mut drained = 0usize;
+        for rx in pending {
+            let resp = rx.recv().expect(
+                "drain must answer every envelope instead of dropping its sender",
+            );
+            match resp.outcome {
+                RequestOutcome::Ok => {
+                    resp.out.unwrap();
+                    served += 1;
+                }
+                RequestOutcome::Drained => {
+                    let err = resp.out.unwrap_err().to_string();
+                    assert!(err.contains("shutting down"), "{err}");
+                    drained += 1;
+                }
+                other => panic!("unexpected outcome under drain: {other:?}"),
+            }
+        }
+        assert_eq!(served + drained, burst, "shards={shards}");
+        assert_eq!(stats.n_requests, burst, "shards={shards}");
+        assert_eq!(stats.n_ok(), served, "shards={shards}");
+        assert_eq!(stats.drained(), drained, "shards={shards}");
+    }
+}
+
+/// A policy pinned to a fixed configuration (test double: the
+/// modeled-slowest candidate).
+struct PinnedPolicy(adaptlib::KernelConfig);
+
+impl SelectPolicy for PinnedPolicy {
+    fn name(&self) -> &str {
+        "pinned-slowest"
+    }
+
+    fn select(&self, _t: Triple) -> adaptlib::KernelConfig {
+        self.0
+    }
+}
+
+/// Under pressure (threshold zero), a policy stuck on the
+/// modeled-slowest artifact is overridden per request by the pressure
+/// pick: responses carry the modeled-cheapest artifact, the override is
+/// flagged, and the per-device counter matches.
+#[test]
+fn pressure_picks_override_a_slow_policy_under_pressure() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let profile = DeviceProfile::get(DeviceId::NvidiaP100);
+    let t = Triple::new(100, 100, 100);
+    let candidates: Vec<(&str, adaptlib::KernelConfig, f64)> = manifest
+        .artifacts
+        .iter()
+        .filter(|a| a.accepts(t) && profile.is_legal(&a.config))
+        .filter_map(|a| {
+            sim::modeled_secs(&profile, &a.config, t)
+                .map(|s| (a.name.as_str(), a.config, s))
+        })
+        .collect();
+    if candidates.len() < 2 {
+        return; // roster too small to distinguish slow from cheap
+    }
+    let slowest = candidates
+        .iter()
+        .max_by(|a, b| a.2.total_cmp(&b.2))
+        .unwrap();
+    let cheapest = candidates
+        .iter()
+        .min_by(|a, b| a.2.total_cmp(&b.2))
+        .unwrap();
+    // Need a strict modeled spread: artifacts sharing one config share
+    // one modeled time, and an all-equal roster has nothing to override.
+    if slowest.2 <= cheapest.2 * 1.0001 {
+        return;
+    }
+
+    let classes = vec![DeviceClass::new(
+        DeviceId::NvidiaP100,
+        1,
+        Box::new(PinnedPolicy(slowest.1)),
+    )];
+    let cfg = ServerConfig {
+        // Every envelope counts as pressured; any strictly-cheaper
+        // artifact overrides the policy pick.
+        pressure_threshold: Duration::ZERO,
+        pressure_slowdown: 1.0,
+        ..ServerConfig::default()
+    };
+    let server = GemmServer::start_fleet(&dir, classes, cfg).unwrap();
+    let handle = server.handle();
+    let n = 8usize;
+    let mut pending = Vec::with_capacity(n);
+    for _ in 0..n {
+        pending.push(
+            handle
+                .submit_to(DeviceId::NvidiaP100, req(100, 100, 100))
+                .expect("p100 class exists"),
+        );
+    }
+    for rx in pending {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.outcome, RequestOutcome::Ok);
+        assert!(resp.pressure_pick, "slow policy pick must be overridden");
+        assert_eq!(
+            resp.artifact, cheapest.0,
+            "pressure pick must serve the modeled-cheapest artifact"
+        );
+        resp.out.unwrap();
+    }
+    drop(handle);
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.per_device["nvidia-p100"].pressure_picks, n as u64);
+}
+
+/// Capacity-aware routing: with one class saturated, free traffic sheds
+/// to a servable sibling instead of being rejected.
+#[test]
+fn saturated_class_sheds_to_servable_sibling() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let classes = vec![
+        DeviceClass::new(
+            DeviceId::NvidiaP100,
+            1,
+            device_policy(&manifest, DeviceId::NvidiaP100).unwrap(),
+        )
+        .with_queue_capacity(2),
+        DeviceClass::new(
+            DeviceId::MaliT860,
+            1,
+            device_policy(&manifest, DeviceId::MaliT860).unwrap(),
+        )
+        .with_queue_capacity(64),
+    ];
+    let server =
+        GemmServer::start_fleet(&dir, classes, ServerConfig::default()).unwrap();
+    let handle = server.handle();
+
+    let mut fills = Vec::new();
+    let mut free = Vec::new();
+    let mut mali_routed = 0usize;
+    for _ in 0..10 {
+        // Top the P100 class up to its bound (a typed shed confirms it).
+        loop {
+            match handle
+                .try_submit_to(DeviceId::NvidiaP100, req(128, 128, 128))
+                .unwrap()
+            {
+                Admission::Enqueued(rx) => fills.push(rx),
+                Admission::Shed { .. } => break,
+                Admission::Rejected { reason } => panic!("{reason}"),
+            }
+        }
+        // A free-routed request must be admitted — the saturated class
+        // sheds to its servable sibling instead of rejecting.
+        match handle.try_submit(req(100, 100, 100)) {
+            Admission::Enqueued(rx) => free.push(rx),
+            other => panic!("sibling had capacity, yet: {other:?}"),
+        }
+    }
+    for rx in free {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.device, resp.routed);
+        resp.out.unwrap();
+        if resp.device == DeviceId::MaliT860 {
+            mali_routed += 1;
+        }
+    }
+    assert!(
+        mali_routed > 0,
+        "with the P100 held at its bound, free traffic must spill to mali"
+    );
+    for rx in fills {
+        let resp = rx.recv().unwrap();
+        resp.out.unwrap();
+    }
+    drop(handle);
+    let stats = server.shutdown().unwrap();
+    assert!(stats.per_device["nvidia-p100"].shed > 0);
+}

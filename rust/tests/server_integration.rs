@@ -6,7 +6,8 @@ use std::path::PathBuf;
 
 use adaptlib::config::{DirectParams, KernelConfig};
 use adaptlib::coordinator::{
-    adapt_step, DefaultPolicy, GemmRequest, GemmServer, ModelPolicy, ServerConfig,
+    adapt_step, DefaultPolicy, GemmRequest, GemmServer, ModelPolicy, RequestOutcome,
+    ServerConfig,
 };
 use adaptlib::dataset::{ClassTable, DatasetKind, LabeledDataset};
 use adaptlib::dtree::{MinSamples, OnlineTrainer, TrainParams};
@@ -141,9 +142,15 @@ fn server_reports_error_for_unservable_shape() {
     // Way beyond every bucket in the roster.
     let resp = handle.call(req(4096, 4096, 4096, 1.0)).unwrap();
     assert!(resp.out.is_err(), "oversized request must fail gracefully");
+    assert_eq!(resp.outcome, RequestOutcome::Error);
     drop(handle);
-    // Failed requests are excluded from stats; server may have none.
-    let _ = server.shutdown();
+    // Regression: the failing triple used to vanish from every summary
+    // (only served_ok requests were recorded).  It must show up now.
+    let stats = server.shutdown().expect("error responses are recorded");
+    assert_eq!(stats.n_requests, 1);
+    assert_eq!((stats.n_ok(), stats.errors()), (0, 1));
+    assert_eq!(stats.per_device["host-cpu"].errors, 1);
+    assert!(stats.per_artifact.is_empty(), "nothing actually executed");
 }
 
 #[test]
