@@ -20,7 +20,8 @@ use adaptlib::engine::{ExecutionEngine, RuntimeEngine};
 use adaptlib::experiments::e2e;
 use adaptlib::harness::{black_box, BenchConfig, Suite};
 use adaptlib::runtime::{
-    pad, ArtifactKind, GemmInput, GemmRuntime, PjrtBackend, ScratchBuffers,
+    pad, ArtifactKind, BatchScratch, GemmInput, GemmRuntime, PjrtBackend,
+    ScratchBuffers,
 };
 use adaptlib::util::json::Json;
 use adaptlib::util::prng::Rng;
@@ -316,6 +317,77 @@ fn bench_pjrt(
         alloc_engine, 0,
         "engine-trait pooled path must not allocate at steady state"
     );
+    drop(engine);
+
+    // ------------------------------------------------------------------
+    // Shape-bucketed request fusion: the batched pooled surface vs B
+    // sequential pooled calls, at B ∈ {1, 4, 16} (full runs sweep to 64).
+    // Every fused slot is bit-identical to the sequential path (pinned by
+    // tests/fusion_equivalence.rs); here we gate its *cost*: per-request
+    // time no worse than sequential, and zero steady-state allocations.
+    suite.section("fused (batched) pooled path — shape-bucketed request fusion");
+    let mut batch = BatchScratch::new();
+    let fuse_sizes: &[usize] = if quick { &[1, 4, 16] } else { &[1, 4, 16, 64] };
+    for &bsz in fuse_sizes {
+        let inputs: Vec<GemmInput> = vec![input2.clone(); bsz];
+        suite.bench(&format!("gemm_batch_pooled:indirect:100^3:B{bsz}"), || {
+            rt.gemm_batch_pooled(indirect_id, &inputs, &mut batch).unwrap();
+            black_box(batch.out[0])
+        });
+        suite.bench(&format!("gemm_pooled:sequential:indirect:100^3:B{bsz}"), || {
+            for input in &inputs {
+                rt.gemm_pooled(indirect_id, input, &mut scratch).unwrap();
+            }
+            black_box(scratch.out[0])
+        });
+    }
+    let median_of = |suite: &Suite, name: &str| {
+        suite
+            .results
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| r.summary.median)
+            .expect("bench just ran")
+    };
+    let mut fusion_rows = Vec::new();
+    for &bsz in fuse_sizes {
+        let fused = median_of(suite, &format!("gemm_batch_pooled:indirect:100^3:B{bsz}"))
+            / bsz as f64;
+        let seq = median_of(suite, &format!("gemm_pooled:sequential:indirect:100^3:B{bsz}"))
+            / bsz as f64;
+        let speedup = if fused > 0.0 { seq / fused } else { 0.0 };
+        println!(
+            "fusion B={bsz}: {fused:.3e}s/req fused vs {seq:.3e}s/req sequential \
+             ({speedup:.2}x), occupancy {bsz}"
+        );
+        fusion_rows.push(Json::obj(vec![
+            ("b", Json::num(bsz as f64)),
+            ("occupancy", Json::num(bsz as f64)),
+            ("fused_per_request_s", Json::num(fused)),
+            ("seq_per_request_s", Json::num(seq)),
+            ("speedup", Json::num(speedup)),
+        ]));
+    }
+    extra.push(("fusion", Json::Arr(fusion_rows)));
+
+    // Zero-allocation gate on the fused surface: staging + execute +
+    // per-slot unpad of a steady-state B=16 batch must not allocate.
+    let inputs16: Vec<GemmInput> = vec![input2.clone(); 16];
+    let batch_iters = iters.max(16) / 8;
+    let alloc_fused = allocs_total(batch_iters, || {
+        rt.gemm_batch_pooled(indirect_id, &inputs16, &mut batch).unwrap();
+        black_box(batch.out[0]);
+    });
+    println!(
+        "allocs/request fused pooled B=16 over {batch_iters} batches: {:.1}",
+        alloc_fused as f64 / (batch_iters * 16) as f64,
+    );
+    assert_eq!(
+        alloc_fused, 0,
+        "fused pooled path must not allocate at steady state \
+         ({alloc_fused} allocations over {batch_iters} B=16 batches)"
+    );
+
     extra.push((
         "allocs_per_request",
         Json::obj(vec![
@@ -326,10 +398,13 @@ fn bench_pjrt(
                 Json::num(alloc_pooled_handle as f64 / iters as f64),
             ),
             ("engine_pooled", Json::num(alloc_engine as f64 / iters as f64)),
+            (
+                "fused_pooled",
+                Json::num(alloc_fused as f64 / (batch_iters * 16) as f64),
+            ),
             ("iters", Json::num(iters as f64)),
         ]),
     ));
-    drop(engine);
     drop(rt);
 
     suite.section("server shard scaling (mixed test-set workload)");

@@ -35,8 +35,17 @@ pub struct TelemetryRecord {
     /// Configuration of the artifact that actually served the request
     /// (after any eligibility fallback), not the raw policy pick.
     pub served: KernelConfig,
-    /// Measured service seconds (pad + execute; compile excluded).
+    /// Measured service seconds (pad + execute; compile excluded, and —
+    /// for requests served inside a fused batch — the fusion
+    /// amortization excluded too: the slot is timed as if dispatched
+    /// alone, so samples stay comparable to un-fused oracle
+    /// measurements and the trainer's labels are never skewed by batch
+    /// luck).
     pub service_secs: f64,
+    /// Size of the fused batch the request executed in (1 = alone).
+    /// Batch identity rides along so fusion-aware analyses can see it;
+    /// the trainer ignores it (service times are amortization-free).
+    pub fused: usize,
     /// Shadow-measured alternative config, if shadow budget was spent.
     pub shadow: Option<(KernelConfig, f64)>,
     /// Policy epoch the request was resolved under.
@@ -320,6 +329,7 @@ mod tests {
             triple: Triple::new(512 + i * 32, 32, 32),
             served: direct(),
             service_secs: 1.0,
+            fused: 1,
             shadow: Some((xgemm(), 0.2)),
             epoch: 0,
             device: crate::device::DeviceId::HostCpu,

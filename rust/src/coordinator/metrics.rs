@@ -41,6 +41,34 @@ pub struct RequestRecord {
     pub service: Duration,
     pub flops: f64,
     pub outcome: RequestOutcome,
+    /// Size of the fused batch this request executed in (1 = dispatched
+    /// alone, >= 2 = fused; 0 = never executed — errors before
+    /// execution, expired and drained envelopes).
+    pub fused: usize,
+}
+
+/// Number of fused-batch occupancy histogram buckets (see
+/// [`occupancy_bucket`]).
+pub const OCCUPANCY_BUCKETS: usize = 8;
+
+/// Human-readable bucket labels, indexed like [`DeviceStats::occupancy`].
+pub const OCCUPANCY_BUCKET_LABELS: [&str; OCCUPANCY_BUCKETS] =
+    ["1", "2", "3-4", "5-8", "9-16", "17-32", "33-64", "65+"];
+
+/// Histogram bucket of a fused-batch size (power-of-two-ish edges, so
+/// the per-device occupancy ledger stays a fixed-size `Copy` array no
+/// matter how large `max_fuse` is configured).
+pub fn occupancy_bucket(batch: usize) -> usize {
+    match batch {
+        0..=1 => 0,
+        2 => 1,
+        3..=4 => 2,
+        5..=8 => 3,
+        9..=16 => 4,
+        17..=32 => 5,
+        33..=64 => 6,
+        _ => 7,
+    }
 }
 
 /// Per-device-class outcome counters.
@@ -60,6 +88,23 @@ pub struct DeviceStats {
     pub pressure_picks: u64,
     /// Peak outstanding (admitted, unanswered) requests observed.
     pub peak_depth: usize,
+    /// Fused dispatches executed (size-1 "batches" included).
+    /// `served / dispatches` is the *dispatch-weighted* mean occupancy;
+    /// note [`ServeStats::occupancy`] (what `report()` prints) is the
+    /// *request-weighted* summary — each served request contributes the
+    /// size of its batch — so the two means differ whenever batch sizes
+    /// are mixed.
+    pub dispatches: u64,
+    /// Requests served inside fused batches of size >= 2.
+    pub fused_requests: u64,
+    /// Per-dispatch cost fusion avoided across every batch: modeled on
+    /// analytical engines ([`crate::device::sim::dispatch_overhead_secs`]
+    /// per amortized slot), zero on the measured host path where the
+    /// saving is structural wall time.
+    pub fused_saved: Duration,
+    /// Dispatch counts by fused-batch-size bucket
+    /// ([`OCCUPANCY_BUCKET_LABELS`]): the per-device occupancy histogram.
+    pub occupancy: [u64; OCCUPANCY_BUCKETS],
 }
 
 impl DeviceStats {
@@ -85,6 +130,12 @@ pub struct ServeStats {
     pub per_shard: BTreeMap<usize, usize>,
     /// Outcome counters per device class (heterogeneous fleets).
     pub per_device: BTreeMap<String, DeviceStats>,
+    /// Fused-batch occupancy summary over *successfully served* requests
+    /// (each served request contributes the size of the batch it
+    /// executed in; `mean` is the request-weighted mean occupancy).
+    /// Expired/drained/error envelopes never executed and are excluded —
+    /// they must not inflate occupancy.
+    pub occupancy: Summary,
 }
 
 impl ServeStats {
@@ -101,6 +152,7 @@ impl ServeStats {
             per_artifact: BTreeMap::new(),
             per_shard: BTreeMap::new(),
             per_device: BTreeMap::new(),
+            occupancy: Summary::empty(),
         }
     }
 
@@ -140,6 +192,13 @@ impl ServeStats {
                 Summary::of(xs)
             }
         };
+        // Occupancy over served requests only: an unexecuted envelope
+        // (fused == 0) was never part of a dispatch.
+        let occ: Vec<f64> = ok
+            .iter()
+            .filter(|r| r.fused >= 1)
+            .map(|r| r.fused as f64)
+            .collect();
         ServeStats {
             n_requests: records.len(),
             wall,
@@ -149,6 +208,7 @@ impl ServeStats {
             per_artifact,
             per_shard,
             per_device,
+            occupancy: summary(&occ),
         }
     }
 
@@ -165,6 +225,40 @@ impl ServeStats {
         dev.shed += shed;
         dev.pressure_picks += pressure_picks;
         dev.peak_depth = dev.peak_depth.max(peak_depth);
+    }
+
+    /// Merge one device class's fused-dispatch counters (maintained on
+    /// the worker's dispatch path, like the admission counters).
+    pub fn record_fusion(
+        &mut self,
+        device: DeviceId,
+        dispatches: u64,
+        fused_requests: u64,
+        saved: Duration,
+        occupancy: [u64; OCCUPANCY_BUCKETS],
+    ) {
+        let dev = self.per_device.entry(device.name().to_string()).or_default();
+        dev.dispatches += dispatches;
+        dev.fused_requests += fused_requests;
+        dev.fused_saved += saved;
+        for (slot, n) in dev.occupancy.iter_mut().zip(occupancy) {
+            *slot += n;
+        }
+    }
+
+    /// Fused dispatches across every device (size-1 batches included).
+    pub fn dispatches(&self) -> u64 {
+        self.per_device.values().map(|d| d.dispatches).sum()
+    }
+
+    /// Requests served in fused batches (size >= 2) across every device.
+    pub fn fused_requests(&self) -> u64 {
+        self.per_device.values().map(|d| d.fused_requests).sum()
+    }
+
+    /// Per-dispatch cost fusion avoided across every device.
+    pub fn fused_saved(&self) -> Duration {
+        self.per_device.values().map(|d| d.fused_saved).sum()
     }
 
     /// Successfully served requests across every device.
@@ -237,6 +331,16 @@ impl ServeStats {
                 self.peak_depth(),
             ));
         }
+        let dispatches = self.dispatches();
+        if dispatches > 0 {
+            s.push_str(&format!(
+                "fusion: {dispatches} dispatches  mean occupancy {:.2}  \
+                 fused requests {}  modeled dispatch savings {:.3}ms\n",
+                self.occupancy.mean,
+                self.fused_requests(),
+                self.fused_saved().as_secs_f64() * 1e3,
+            ));
+        }
         if self.per_device.len() > 1 {
             s.push_str("per-device:");
             for (dev, d) in &self.per_device {
@@ -283,6 +387,7 @@ mod tests {
             service: Duration::from_millis(ms),
             flops: 1e9,
             outcome: RequestOutcome::Ok,
+            fused: 1,
         }
     }
 
@@ -300,6 +405,7 @@ mod tests {
             service: Duration::ZERO,
             flops: 0.0,
             outcome,
+            fused: 0,
         }
     }
 
@@ -370,6 +476,54 @@ mod tests {
         let report = stats.report();
         assert!(report.contains("errors 1"), "{report}");
         assert!(report.contains("expired 1"), "{report}");
+    }
+
+    #[test]
+    fn occupancy_buckets_cover_the_size_range() {
+        for (b, want) in [
+            (0usize, 0usize), (1, 0), (2, 1), (3, 2), (4, 2), (5, 3), (8, 3),
+            (9, 4), (16, 4), (17, 5), (32, 5), (33, 6), (64, 6), (65, 7), (1000, 7),
+        ] {
+            assert_eq!(occupancy_bucket(b), want, "batch size {b}");
+        }
+        assert_eq!(OCCUPANCY_BUCKET_LABELS.len(), OCCUPANCY_BUCKETS);
+    }
+
+    #[test]
+    fn occupancy_summarizes_served_requests_only() {
+        // Two requests fused in one batch of 2, one solo, plus an
+        // expired and an errored envelope (fused == 0): occupancy must
+        // summarize exactly the three served requests — unexecuted
+        // envelopes never inflate it.
+        let mut records = vec![rec("a", 0, 10), rec("a", 0, 10), rec("b", 0, 5)];
+        records[0].fused = 2;
+        records[1].fused = 2;
+        records.push(rec_outcome(0, RequestOutcome::Expired));
+        records.push(rec_outcome(0, RequestOutcome::Error));
+        let mut stats = ServeStats::from_records(&records, Duration::from_secs(1));
+        assert_eq!(stats.occupancy.n, 3);
+        assert!((stats.occupancy.mean - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(stats.occupancy.max, 2.0);
+        // Worker-side dispatch counters merge per device.
+        let mut hist = [0u64; OCCUPANCY_BUCKETS];
+        hist[occupancy_bucket(2)] = 1;
+        hist[occupancy_bucket(1)] = 1;
+        stats.record_fusion(
+            DeviceId::HostCpu,
+            2,
+            2,
+            Duration::from_micros(30),
+            hist,
+        );
+        assert_eq!(stats.dispatches(), 2);
+        assert_eq!(stats.fused_requests(), 2);
+        assert_eq!(stats.fused_saved(), Duration::from_micros(30));
+        let host = &stats.per_device["host-cpu"];
+        assert_eq!(host.occupancy[occupancy_bucket(2)], 1);
+        assert_eq!(host.occupancy[occupancy_bucket(1)], 1);
+        let report = stats.report();
+        assert!(report.contains("fusion: 2 dispatches"), "{report}");
+        assert!(report.contains("mean occupancy 1.67"), "{report}");
     }
 
     #[test]

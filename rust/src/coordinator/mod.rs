@@ -15,7 +15,10 @@ pub use adapt::{
     adapt_step, await_taps, AdaptStats, AdaptationLoop, StepOutcome, TelemetryRecord,
     TelemetryRing,
 };
-pub use metrics::{DeviceStats, RequestOutcome, RequestRecord, ServeStats};
+pub use metrics::{
+    occupancy_bucket, DeviceStats, RequestOutcome, RequestRecord, ServeStats,
+    OCCUPANCY_BUCKETS, OCCUPANCY_BUCKET_LABELS,
+};
 pub use policy::{
     CachedPolicy, DefaultPolicy, ModelPolicy, OraclePolicy, PolicyHandle, SelectPolicy,
 };

@@ -16,7 +16,21 @@
 //! the per-artifact dynamic batcher.  Requests execute on the pooled,
 //! allocation-free engine path; responses flow back over per-request
 //! channels carrying the serving device, the routed device, the policy
-//! epoch and a typed [`RequestOutcome`].
+//! epoch, the fused-batch size and a typed [`RequestOutcome`].
+//!
+//! **Shape-bucketed request fusion**: after deadline filtering and
+//! policy selection, the window-resolve step groups envelopes by
+//! `(ArtifactId, m, n, k)` and fuses each run into a single batched
+//! execution of up to [`ServerConfig::max_fuse`] members
+//! ([`ExecutionEngine::execute_batch_pooled`]) — the per-dispatch cost
+//! the §5 cost model charges once per launch is paid once per *batch*,
+//! so under same-shape traffic the hot path's cost per request drops
+//! below one dispatch.  Expired envelopes are dropped before grouping
+//! (they never inflate a batch or its occupancy stats), a failed fused
+//! dispatch answers every member with a typed per-request error, and
+//! telemetry keeps *per-request* service times (per-slot attribution,
+//! fusion amortization excluded) so the adaptation loop and oracles are
+//! unaffected by batch luck.
 //!
 //! Overload handling (the serving path under sustained pressure):
 //!
@@ -53,10 +67,12 @@ use anyhow::{anyhow, ensure, Result};
 use crate::config::Triple;
 use crate::device::{sim, DeviceId, DeviceProfile};
 use crate::engine::{EngineSpec, ExecutionEngine};
-use crate::runtime::{ArtifactId, GemmInput, ScratchBuffers};
+use crate::runtime::{ArtifactId, BatchScratch, GemmInput, ScratchBuffers};
 
 use super::adapt::{TelemetryRecord, TelemetryRing};
-use super::metrics::{RequestOutcome, RequestRecord, ServeStats};
+use super::metrics::{
+    occupancy_bucket, RequestOutcome, RequestRecord, ServeStats, OCCUPANCY_BUCKETS,
+};
 use super::policy::{CachedPolicy, PolicyHandle, SelectPolicy};
 
 /// An owned GEMM request.
@@ -117,7 +133,13 @@ impl GemmRequest {
 pub struct GemmResponse {
     pub out: Result<Vec<f32>>,
     pub artifact: String,
+    /// Time spent not executing this request: window wait plus — for
+    /// fused members — batch peers' slots.  `queue + service` is the
+    /// exact submit-to-reply interval.
     pub queue: Duration,
+    /// This request's own share of the dispatch: its per-slot execute +
+    /// pad/unpad time plus an equal share of the batch residual
+    /// (compile, staging overhead).
     pub service: Duration,
     /// Policy epoch the request was resolved under (bumped by every
     /// adaptation hot-swap of *this device's* policy; 0 until the first
@@ -140,6 +162,13 @@ pub struct GemmResponse {
     pub outcome: RequestOutcome,
     /// The shard overrode the policy's selection with the pressure pick.
     pub pressure_pick: bool,
+    /// Size of the fused batch this request was dispatched in: 1 = the
+    /// request executed alone, >= 2 = it shared one batched dispatch
+    /// with same-`(artifact, m, n, k)` window neighbours, 0 = it never
+    /// reached a dispatch (expired, drained, shed-synthetic, or failed
+    /// before execution).  On an errored fused dispatch every member
+    /// reports the batch size it died in.
+    pub fused_batch_size: usize,
 }
 
 /// Outcome of a non-blocking submission attempt.
@@ -167,6 +196,12 @@ pub enum Admission {
 pub struct ServerConfig {
     /// Max requests coalesced into one dispatch window.
     pub max_batch: usize,
+    /// Max same-`(artifact, m, n, k)` requests *fused* into one batched
+    /// execution inside a window (`1` disables fusion — every request
+    /// dispatches alone, the pre-fusion behaviour).  Fusion amortizes
+    /// the per-dispatch cost the §5 cost model charges once per launch
+    /// across every same-shape request a window holds.
+    pub max_fuse: usize,
     /// How long a shard waits to fill a window.
     pub batch_window: Duration,
     /// Dispatcher shards for the homogeneous [`GemmServer::start`] path
@@ -200,6 +235,7 @@ impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             max_batch: 32,
+            max_fuse: 16,
             batch_window: Duration::from_micros(200),
             shards: 1,
             telemetry_fraction: 0.0,
@@ -238,6 +274,7 @@ impl ServerConfig {
     pub fn validated(self) -> Result<ServerConfig> {
         ensure!(self.shards > 0, "ServerConfig.shards must be > 0");
         ensure!(self.max_batch > 0, "ServerConfig.max_batch must be > 0");
+        ensure!(self.max_fuse > 0, "ServerConfig.max_fuse must be > 0 (1 disables fusion)");
         ensure!(
             self.queue_capacity > 0,
             "ServerConfig.queue_capacity must be > 0"
@@ -297,13 +334,36 @@ const ADMISSION_PATIENCE: Duration = Duration::from_secs(10);
 
 /// Admission/selection counters of one device class, maintained outside
 /// the shard records: sheds happen on the submit path (the request never
-/// reaches a worker) and pressure picks/peak depth are cheapest to track
-/// where they occur.  Merged into [`ServeStats`] at shutdown.
+/// reaches a worker) and pressure picks/peak depth/fused dispatches are
+/// cheapest to track where they occur.  Merged into [`ServeStats`] at
+/// shutdown.
 #[derive(Default)]
 struct ClassCounters {
     shed: AtomicU64,
     pressure_picks: AtomicU64,
     peak_depth: AtomicUsize,
+    /// Successful dispatches (fused batches, size-1 included).
+    dispatches: AtomicU64,
+    /// Requests served in batches of size >= 2.
+    fused_requests: AtomicU64,
+    /// Modeled per-dispatch nanoseconds fusion avoided (sim engines).
+    fused_saved_ns: AtomicU64,
+    /// Dispatches by fused-batch-size bucket — the per-device occupancy
+    /// histogram ([`occupancy_bucket`]).
+    occupancy: [AtomicU64; OCCUPANCY_BUCKETS],
+}
+
+impl ClassCounters {
+    /// Record one successful fused dispatch of `batch` requests.
+    fn record_dispatch(&self, batch: usize, saved: Duration) {
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
+        if batch >= 2 {
+            self.fused_requests.fetch_add(batch as u64, Ordering::Relaxed);
+        }
+        self.fused_saved_ns
+            .fetch_add(saved.as_nanos() as u64, Ordering::Relaxed);
+        self.occupancy[occupancy_bucket(batch)].fetch_add(1, Ordering::Relaxed);
+    }
 }
 
 /// Router-side state of one device class.
@@ -567,6 +627,7 @@ impl ServerHandle {
             shard: usize::MAX,
             outcome,
             pressure_pick: false,
+            fused_batch_size: 0,
         });
         rx
     }
@@ -976,6 +1037,17 @@ impl GemmServer {
                 c.counters.pressure_picks.load(Ordering::Relaxed),
                 c.counters.peak_depth.load(Ordering::Relaxed),
             );
+            let mut hist = [0u64; OCCUPANCY_BUCKETS];
+            for (h, bucket) in hist.iter_mut().zip(&c.counters.occupancy) {
+                *h = bucket.load(Ordering::Relaxed);
+            }
+            stats.record_fusion(
+                c.device,
+                c.counters.dispatches.load(Ordering::Relaxed),
+                c.counters.fused_requests.load(Ordering::Relaxed),
+                Duration::from_nanos(c.counters.fused_saved_ns.load(Ordering::Relaxed)),
+                hist,
+            );
         }
         Some(stats)
     }
@@ -1027,9 +1099,17 @@ enum EnvAction {
     Expire,
 }
 
-/// Per-request record kept while serving — (artifact, queue, service,
-/// flops, outcome) with the dense id; names resolve once at shard exit.
-type RawRecord = (Option<ArtifactId>, Duration, Duration, f64, RequestOutcome);
+/// Per-request record kept while serving, with the dense id; names
+/// resolve once at shard exit.
+struct RawRecord {
+    id: Option<ArtifactId>,
+    queue: Duration,
+    service: Duration,
+    flops: f64,
+    outcome: RequestOutcome,
+    /// Fused-batch size the request executed in (0 = never executed).
+    fused: usize,
+}
 
 /// One dispatcher shard: batches, selects (with deadline and pressure
 /// awareness), executes on its device engine's pooled path, and feeds
@@ -1065,6 +1145,15 @@ fn worker_loop(
     };
     drop(ready_tx);
     let mut scratch = ScratchBuffers::new();
+    let mut batch = BatchScratch::new();
+    // Reusable fused-run staging: (pressure_pick, envelope) members of
+    // the chunk currently being dispatched.  Hoisted so steady-state
+    // windows reuse its capacity.  Per-member latency accounting at
+    // reply time: `queue = submit-to-reply elapsed - service`, so
+    // `queue + service` is exactly the client-observed latency (waiting
+    // for fused batch peers counts as queueing, and the dispatch wall
+    // is never double-counted).
+    let mut chunk: Vec<(bool, Envelope)> = Vec::new();
     // Shard-local policy snapshot, refreshed once per window: every
     // request inside a window is resolved under exactly one policy
     // epoch, so a concurrent hot-swap can never mix configurations
@@ -1117,16 +1206,18 @@ fn worker_loop(
                     &depth,
                     &outstanding,
                     &mut raw_records,
+                    None,
                 );
             }
             continue;
         }
         // Resolve each request to a dense artifact id, then group the
-        // window by id (stable sort keeps FIFO order within a group) —
-        // the dynamic batcher, with no string keys on the hot path.
-        // Already-expired envelopes are dropped here, before any
-        // selection work; envelopes that queued past the pressure
-        // threshold resolve through the pressure pick.
+        // window by (id, triple) (stable sort keeps FIFO order within a
+        // group) — the dynamic batcher, with no string keys on the hot
+        // path.  Already-expired envelopes are dropped here, *before*
+        // fusion grouping — an expired envelope never inflates a fused
+        // batch or its occupancy stats; envelopes that queued past the
+        // pressure threshold resolve through the pressure pick.
         let now = Instant::now();
         let mut resolved: Vec<(Option<ArtifactId>, EnvAction, Envelope)> = window
             .drain(..)
@@ -1156,9 +1247,15 @@ fn worker_loop(
                 }
             })
             .collect();
-        resolved.sort_by_key(|(id, _, _)| *id);
+        resolved.sort_by_key(|(id, _, env)| (*id, env.req.triple()));
 
-        for (id, action, env) in resolved {
+        // Walk the sorted window and *fuse* maximal same-(artifact,
+        // triple) runs into batched dispatches of up to `max_fuse`
+        // members — a mixed-triple window splits into one fused batch
+        // per distinct (id, triple) run.  Expired and unservable
+        // envelopes were never part of a run and answer individually.
+        let mut queue_iter = resolved.into_iter().peekable();
+        while let Some((id, action, env)) = queue_iter.next() {
             let EnvAction::Serve { pressure_pick } = action else {
                 answer_unserved(
                     env,
@@ -1169,62 +1266,183 @@ fn worker_loop(
                     &depth,
                     &outstanding,
                     &mut raw_records,
+                    None,
                 );
                 continue;
             };
-            let queue = env.submitted.elapsed();
+            let Some(id) = id else {
+                // No artifact accepts the triple: a per-request typed
+                // error, never grouped into a batch.
+                let message =
+                    format!("no artifact accepts {} on {device}", env.req.triple());
+                answer_unserved(
+                    env,
+                    RequestOutcome::Error,
+                    cached.epoch,
+                    device,
+                    shard,
+                    &depth,
+                    &outstanding,
+                    &mut raw_records,
+                    Some(message),
+                );
+                continue;
+            };
+            let t = env.req.triple();
+            chunk.clear();
+            chunk.push((pressure_pick, env));
+            while chunk.len() < cfg.max_fuse {
+                let same_run = matches!(
+                    queue_iter.peek(),
+                    Some((Some(next_id), EnvAction::Serve { .. }, next_env))
+                        if *next_id == id && next_env.req.triple() == t
+                );
+                if !same_run {
+                    break;
+                }
+                let Some((_, EnvAction::Serve { pressure_pick }, env)) =
+                    queue_iter.next()
+                else {
+                    unreachable!("peek said the run continues");
+                };
+                chunk.push((pressure_pick, env));
+            }
+
+            // Execute the fused run: size 1 goes through the classic
+            // pooled path (identical to the pre-fusion server), size
+            // >= 2 through the engine's batched surface.
+            let fuse = chunk.len();
+            let mn = (t.m as usize) * (t.n as usize);
             let t0 = Instant::now();
-            let mut times = None;
-            let result = match id {
-                None => Err(anyhow!(
-                    "no artifact accepts {} on {device}",
-                    env.req.triple()
-                )),
-                Some(id) => {
-                    let input = gemm_input(&env.req);
-                    engine
-                        .execute_pooled(id, &input, &mut scratch)
-                        // The response must outlive the scratch pool: the
-                        // copy-out is the one boundary allocation.
-                        .map(|t| {
-                            times = Some(t);
-                            scratch.out.clone()
-                        })
+            let exec_err: Option<anyhow::Error> = if fuse == 1 {
+                let input = gemm_input(&chunk[0].1.req);
+                match engine.execute_pooled(id, &input, &mut scratch) {
+                    Ok(times) => {
+                        batch.times.clear();
+                        batch.times.push(times);
+                        batch.saved = Duration::ZERO;
+                        None
+                    }
+                    Err(e) => Some(e),
+                }
+            } else {
+                let inputs: Vec<GemmInput> =
+                    chunk.iter().map(|(_, env)| gemm_input(&env.req)).collect();
+                match engine.execute_batch_pooled(id, &inputs, &mut batch) {
+                    // Contract check: a typed per-member error beats an
+                    // index panic that would kill the shard thread if an
+                    // engine ever under-fills the batch.
+                    Ok(()) if batch.times.len() == fuse
+                        && batch.out.len() == fuse * mn => None,
+                    Ok(()) => Some(anyhow!(
+                        "engine returned {} slot timings / {} output elements \
+                         for a fused batch of {fuse} ({} expected)",
+                        batch.times.len(),
+                        batch.out.len(),
+                        fuse * mn
+                    )),
+                    Err(e) => Some(e),
                 }
             };
-            let service = t0.elapsed();
-            let artifact = match id {
-                Some(id) => engine.manifest().name_of(id).to_string(),
-                None => String::new(),
-            };
-            let served_ok = result.is_ok();
-            let outcome = if served_ok {
-                RequestOutcome::Ok
-            } else {
-                RequestOutcome::Error
-            };
-            let flops = if served_ok { env.req.triple().flops() } else { 0.0 };
-            raw_records.push((id, queue, service, flops, outcome));
-            let _ = env.reply.send(GemmResponse {
-                out: result,
-                artifact,
-                queue,
-                service,
-                epoch: cached.epoch,
-                device,
-                routed: env.routed,
-                shard,
-                outcome,
-                pressure_pick,
-            });
-            // The request is answered: release its depth-gauge slots so
-            // the router and the admission bound see the real backlog.
-            depth.fetch_sub(1, Ordering::Relaxed);
-            outstanding.fetch_sub(1, Ordering::AcqRel);
-            // Telemetry tap — after the reply, entirely off the response
-            // path.  `times` excludes compile, so the sample is
-            // comparable to the shadow measurement below.
-            if let (true, Some(id), Some(times)) = (served_ok, id, times) {
+            let wall = t0.elapsed();
+
+            if let Some(e) = exec_err {
+                // A failed dispatch answers *every* member with a typed
+                // per-request error — no reply channel is ever dropped.
+                // Nothing executed, so the batch never enters the
+                // occupancy ledger (records carry fused = 0); responses
+                // still report the batch size they died in.
+                let emsg = format!("{e:#}");
+                for (pressure_pick, env) in chunk.drain(..) {
+                    // queue + service == full submit-to-reply latency.
+                    let queue = env.submitted.elapsed().saturating_sub(wall);
+                    raw_records.push(RawRecord {
+                        id: Some(id),
+                        queue,
+                        service: wall,
+                        flops: 0.0,
+                        outcome: RequestOutcome::Error,
+                        fused: 0,
+                    });
+                    let out = if fuse == 1 {
+                        Err(anyhow!("{emsg}"))
+                    } else {
+                        Err(anyhow!("fused batch of {fuse} failed on {device}: {emsg}"))
+                    };
+                    let _ = env.reply.send(GemmResponse {
+                        out,
+                        artifact: engine.manifest().name_of(id).to_string(),
+                        queue,
+                        service: wall,
+                        epoch: cached.epoch,
+                        device,
+                        routed: env.routed,
+                        shard,
+                        outcome: RequestOutcome::Error,
+                        pressure_pick,
+                        fused_batch_size: fuse,
+                    });
+                    depth.fetch_sub(1, Ordering::Relaxed);
+                    outstanding.fetch_sub(1, Ordering::AcqRel);
+                }
+                continue;
+            }
+
+            counters.record_dispatch(fuse, batch.saved);
+            // Wall time the per-slot attribution does not cover (compile
+            // on a cold artifact, batch staging overhead): spread evenly
+            // so member services sum back to the dispatch wall, exactly
+            // like the single-request path where service == wall.
+            let attributed: Duration =
+                batch.times.iter().map(|gt| gt.total_time()).sum();
+            let residual = wall.saturating_sub(attributed) / fuse as u32;
+            for (slot, (pressure_pick, env)) in chunk.drain(..).enumerate() {
+                let times = batch.times[slot];
+                let service = times.total_time() + residual;
+                // Client-observed latency splits into service (this
+                // request's per-slot share) and queue (everything else:
+                // window wait, batch peers' slots) — their sum is the
+                // exact submit-to-reply interval, like the pre-fusion
+                // path.
+                let queue = env.submitted.elapsed().saturating_sub(service);
+                // The response must outlive the scratch pools: the
+                // copy-out is the one boundary allocation.
+                let out_vec = if fuse == 1 {
+                    scratch.out.clone()
+                } else {
+                    batch.out[slot * mn..(slot + 1) * mn].to_vec()
+                };
+                raw_records.push(RawRecord {
+                    id: Some(id),
+                    queue,
+                    service,
+                    flops: t.flops(),
+                    outcome: RequestOutcome::Ok,
+                    fused: fuse,
+                });
+                let _ = env.reply.send(GemmResponse {
+                    out: Ok(out_vec),
+                    artifact: engine.manifest().name_of(id).to_string(),
+                    queue,
+                    service,
+                    epoch: cached.epoch,
+                    device,
+                    routed: env.routed,
+                    shard,
+                    outcome: RequestOutcome::Ok,
+                    pressure_pick,
+                    fused_batch_size: fuse,
+                });
+                // The request is answered: release its depth-gauge slots
+                // so the router and the admission bound see the real
+                // backlog.
+                depth.fetch_sub(1, Ordering::Relaxed);
+                outstanding.fetch_sub(1, Ordering::AcqRel);
+                // Telemetry tap — after the reply, entirely off the
+                // response path.  `times` excludes compile *and* the
+                // fusion amortization (per-slot attribution), so the
+                // sample stays comparable to the shadow measurement and
+                // to un-fused oracle runs.
                 if tele_sampler.fire() {
                     let shadow = if shadow_sampler.fire() {
                         shadow_execute(
@@ -1238,9 +1456,10 @@ fn worker_loop(
                         None
                     };
                     telemetry.push(TelemetryRecord {
-                        triple: env.req.triple(),
+                        triple: t,
                         served: engine.manifest().meta(id).config,
                         service_secs: times.total_time().as_secs_f64(),
+                        fused: fuse,
                         shadow,
                         epoch: cached.epoch,
                         device,
@@ -1252,22 +1471,26 @@ fn worker_loop(
     }
     raw_records
         .into_iter()
-        .map(|(id, queue, service, flops, outcome)| RequestRecord {
-            artifact: id
+        .map(|raw| RequestRecord {
+            artifact: raw
+                .id
                 .map(|id| engine.manifest().name_of(id).to_string())
                 .unwrap_or_default(),
             device,
             shard,
-            queue,
-            service,
-            flops,
-            outcome,
+            queue: raw.queue,
+            service: raw.service,
+            flops: raw.flops,
+            outcome: raw.outcome,
+            fused: raw.fused,
         })
         .collect()
 }
 
 /// Answer an envelope without executing it (graceful drain / deadline
-/// expiry): typed error reply, depth gauges released, outcome recorded.
+/// expiry / no eligible artifact): typed error reply, depth gauges
+/// released, outcome recorded.  `message` overrides the outcome-derived
+/// default error text.
 #[allow(clippy::too_many_arguments)]
 fn answer_unserved(
     env: Envelope,
@@ -1278,16 +1501,24 @@ fn answer_unserved(
     depth: &AtomicUsize,
     outstanding: &AtomicUsize,
     raw: &mut Vec<RawRecord>,
+    message: Option<String>,
 ) {
     let queue = env.submitted.elapsed();
-    raw.push((None, queue, Duration::ZERO, 0.0, outcome));
-    let message = match outcome {
+    raw.push(RawRecord {
+        id: None,
+        queue,
+        service: Duration::ZERO,
+        flops: 0.0,
+        outcome,
+        fused: 0,
+    });
+    let message = message.unwrap_or_else(|| match outcome {
         RequestOutcome::Expired => format!(
             "overload: deadline expired after {:.3}ms queued on {device}",
             queue.as_secs_f64() * 1e3
         ),
         _ => format!("server shutting down; request drained unserved on {device}"),
-    };
+    });
     let _ = env.reply.send(GemmResponse {
         out: Err(anyhow!("{message}")),
         artifact: String::new(),
@@ -1299,6 +1530,7 @@ fn answer_unserved(
         shard,
         outcome,
         pressure_pick: false,
+        fused_batch_size: 0,
     });
     depth.fetch_sub(1, Ordering::Relaxed);
     outstanding.fetch_sub(1, Ordering::AcqRel);
@@ -1418,6 +1650,13 @@ mod tests {
         let bad_batch = ServerConfig { max_batch: 0, ..ServerConfig::default() };
         let err = bad_batch.validated().unwrap_err();
         assert!(err.to_string().contains("max_batch"), "{err}");
+        // A zero fuse cap would make every window dispatch nothing:
+        // hard error; 1 is the legitimate fusion-off spelling.
+        let bad_fuse = ServerConfig { max_fuse: 0, ..ServerConfig::default() };
+        let err = bad_fuse.validated().unwrap_err();
+        assert!(err.to_string().contains("max_fuse"), "{err}");
+        let fusion_off = ServerConfig { max_fuse: 1, ..ServerConfig::default() };
+        assert_eq!(fusion_off.validated().unwrap().max_fuse, 1);
         // A zero queue bound would shed everything: hard error, like
         // shards/max_batch.
         let bad_cap = ServerConfig { queue_capacity: 0, ..ServerConfig::default() };
@@ -1438,7 +1677,7 @@ mod tests {
         assert_eq!(cfg.pressure_slowdown, 1.0);
         // A sane config passes through unchanged.
         let cfg = ServerConfig::adaptive(4, 0.5, 0.25).validated().unwrap();
-        assert_eq!((cfg.shards, cfg.max_batch), (4, 32));
+        assert_eq!((cfg.shards, cfg.max_batch, cfg.max_fuse), (4, 32, 16));
         assert_eq!((cfg.telemetry_fraction, cfg.shadow_fraction), (0.5, 0.25));
         assert_eq!(cfg.queue_capacity, 1024);
         assert_eq!(cfg.pressure_threshold, Duration::MAX);

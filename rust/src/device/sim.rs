@@ -59,6 +59,20 @@ pub fn modeled_secs(
     measure_gflops(dev, cfg, triple).map(|g| triple.flops() / (g * 1e9))
 }
 
+/// Nominal per-dispatch launch seconds the model charges one kernel
+/// dispatch of `cfg` on `dev`: the kernel launch itself, plus — for the
+/// indirect kernel — the three helper-pass launches (pad A, pad B,
+/// pad/unpad C).  This is the *amortizable* component of a fused batch:
+/// a batch of `B` same-shape requests pays it once, so slots `1..B`
+/// save it ([`crate::engine::ExecutionEngine::execute_batch_pooled`]
+/// reports the modeled saving on analytical engines).
+pub fn dispatch_overhead_secs(dev: &DeviceProfile, cfg: &KernelConfig) -> f64 {
+    match cfg {
+        KernelConfig::Xgemm(_) => 4.0 * dev.launch_us * 1e-6,
+        KernelConfig::Direct(_) => dev.launch_us * 1e-6,
+    }
+}
+
 /// Config-by-shape specialization: on a real GPU a configuration's
 /// occupancy / cache / scheduling behaviour varies strongly and
 /// non-monotonically with the problem region — the reason the paper's
@@ -423,6 +437,26 @@ mod tests {
             ..Default::default()
         });
         assert!(modeled_secs(&mali(), &big, t).is_none());
+    }
+
+    #[test]
+    fn dispatch_overhead_counts_helper_launches() {
+        let dev = p100();
+        let xgemm = KernelConfig::Xgemm(XgemmParams::default());
+        let direct = KernelConfig::Direct(DirectParams::default());
+        let launch = dev.launch_us * 1e-6;
+        assert_eq!(dispatch_overhead_secs(&dev, &direct), launch);
+        // The indirect kernel's dispatch also pays its three helper-pass
+        // launches — all amortizable across a fused batch.
+        assert_eq!(dispatch_overhead_secs(&dev, &xgemm), 4.0 * launch);
+        // On any non-trivial problem the overhead is a small fraction of
+        // the modeled time: a fused slot's saving can never exceed what
+        // the dispatch costs.
+        let t = Triple::new(512, 512, 512);
+        for cfg in [xgemm, direct] {
+            let secs = modeled_secs(&dev, &cfg, t).unwrap();
+            assert!(dispatch_overhead_secs(&dev, &cfg) < secs);
+        }
     }
 
     #[test]

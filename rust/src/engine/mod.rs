@@ -29,8 +29,8 @@ use anyhow::{anyhow, bail, Result};
 use crate::config::{KernelConfig, Triple};
 use crate::device::{sim, DeviceId, DeviceProfile};
 use crate::runtime::{
-    host_gemm_into, ArtifactId, GemmInput, GemmRuntime, GemmTimes, Manifest,
-    ScratchBuffers,
+    host_gemm_into, ArtifactId, BatchScratch, GemmInput, GemmRuntime, GemmTimes,
+    Manifest, ScratchBuffers,
 };
 
 /// A device-class execution backend for the serving coordinator.
@@ -69,6 +69,30 @@ pub trait ExecutionEngine {
         input: &GemmInput,
         scratch: &mut ScratchBuffers,
     ) -> Result<GemmTimes>;
+
+    /// Execute a *fused batch* of same-`(artifact, m, n, k)` requests
+    /// into `batch`: stacked slot-major results in `batch.out`, per-slot
+    /// §5.4 timings in `batch.times` (fusion amortization excluded, so
+    /// telemetry sampled from a fused slot stays comparable to un-fused
+    /// oracle measurements), and the per-dispatch cost the fusion
+    /// avoided in `batch.saved`.
+    ///
+    /// The default is the sequential fallback — `execute_pooled` per
+    /// slot through `batch.seq` — so any engine is correct without
+    /// opting in.  [`RuntimeEngine`] overrides with the native
+    /// [`GemmRuntime::gemm_batch_pooled`] stacked-staging path
+    /// (bit-identical per slot, zero steady-state allocations);
+    /// [`SimEngine`] keeps the exact sequential results but charges the
+    /// modeled per-dispatch saving to `batch.saved`
+    /// ([`sim::dispatch_overhead_secs`] for every slot after the first).
+    fn execute_batch_pooled(
+        &mut self,
+        id: ArtifactId,
+        inputs: &[GemmInput],
+        batch: &mut BatchScratch,
+    ) -> Result<()> {
+        sequential_batch(self, id, inputs, batch)
+    }
 
     /// The modeled-cheapest servable artifact accepting `t` on
     /// `profile` ([`sim::modeled_secs`]), with its modeled seconds —
@@ -121,6 +145,35 @@ pub trait ExecutionEngine {
     }
 }
 
+/// The sequential fused-batch fallback: `execute_pooled` per slot
+/// through `batch.seq`, slot results stacked into `batch.out`.  Shared
+/// by the trait default and engines that only override the timing
+/// attribution ([`SimEngine`]).  `batch.saved` is left at zero — a
+/// sequential execution amortizes nothing.
+pub fn sequential_batch<E: ExecutionEngine + ?Sized>(
+    engine: &mut E,
+    id: ArtifactId,
+    inputs: &[GemmInput],
+    batch: &mut BatchScratch,
+) -> Result<()> {
+    batch.out.clear();
+    batch.times.clear();
+    batch.saved = Duration::ZERO;
+    let Some(first) = inputs.first() else { return Ok(()) };
+    let t = first.triple();
+    for input in inputs {
+        if input.triple() != t {
+            bail!("fused batch mixes triples: {} vs {t}", input.triple());
+        }
+    }
+    for input in inputs {
+        let times = engine.execute_pooled(id, input, &mut batch.seq)?;
+        batch.out.extend_from_slice(&batch.seq.out);
+        batch.times.push(times);
+    }
+    Ok(())
+}
+
 /// The real execution path: the CPU PJRT runtime over the AOT artifacts,
 /// behind the engine trait.  Every method delegates; the pooled path is
 /// bit-identical to `GemmRuntime::gemm_pooled` and allocation-free at
@@ -165,6 +218,15 @@ impl ExecutionEngine for RuntimeEngine {
         scratch: &mut ScratchBuffers,
     ) -> Result<GemmTimes> {
         self.runtime.gemm_pooled(id, input, scratch)
+    }
+
+    fn execute_batch_pooled(
+        &mut self,
+        id: ArtifactId,
+        inputs: &[GemmInput],
+        batch: &mut BatchScratch,
+    ) -> Result<()> {
+        self.runtime.gemm_batch_pooled(id, inputs, batch)
     }
 }
 
@@ -263,6 +325,27 @@ impl ExecutionEngine for SimEngine {
             helper_time: Duration::ZERO,
             kernel_time: Duration::from_secs_f64(secs),
         })
+    }
+
+    /// Exact sequential results; per-slot times stay the *unamortized*
+    /// modeled wall-time (so telemetry and per-device oracles keep
+    /// agreeing per request), while the fusion's modeled benefit — the
+    /// per-dispatch launch/helper-launch cost every slot after the
+    /// first shares with the first — is charged to `batch.saved`.
+    fn execute_batch_pooled(
+        &mut self,
+        id: ArtifactId,
+        inputs: &[GemmInput],
+        batch: &mut BatchScratch,
+    ) -> Result<()> {
+        sequential_batch(self, id, inputs, batch)?;
+        if inputs.len() > 1 {
+            let overhead =
+                sim::dispatch_overhead_secs(&self.profile, &self.manifest.meta(id).config);
+            batch.saved =
+                Duration::from_secs_f64(overhead * (inputs.len() - 1) as f64);
+        }
+        Ok(())
     }
 }
 
@@ -393,6 +476,69 @@ mod tests {
             .modeled_cheapest(&mali_profile, Triple::new(100, 100, 100))
             .unwrap();
         assert!(mali.is_servable(id));
+    }
+
+    #[test]
+    fn sim_batch_is_bit_identical_with_unamortized_times_and_modeled_saving() {
+        let mut eng = sim(DeviceId::NvidiaP100);
+        let id = eng.manifest().id_of("i1").unwrap();
+        let (m, n, k) = (100usize, 100usize, 100usize);
+        let mut rng = crate::util::prng::Rng::new(0xF05E);
+        let gen = |rng: &mut crate::util::prng::Rng, len: usize| -> Vec<f32> {
+            (0..len).map(|_| rng.f32() - 0.5).collect()
+        };
+        let operands: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..3)
+            .map(|_| (gen(&mut rng, m * k), gen(&mut rng, k * n), gen(&mut rng, m * n)))
+            .collect();
+        let inputs: Vec<GemmInput> = operands
+            .iter()
+            .map(|(a, b, c)| GemmInput {
+                m, n, k,
+                a, b, c,
+                alpha: 1.25, beta: -0.5,
+            })
+            .collect();
+        // Sequential reference.
+        let mut scratch = ScratchBuffers::new();
+        let mut solo_out = Vec::new();
+        let mut solo_times = Vec::new();
+        for input in &inputs {
+            solo_times.push(eng.execute_pooled(id, input, &mut scratch).unwrap());
+            solo_out.push(scratch.out.clone());
+        }
+        // Fused: exact per-slot results, unamortized per-slot times.
+        let mut batch = BatchScratch::new();
+        eng.execute_batch_pooled(id, &inputs, &mut batch).unwrap();
+        assert_eq!(batch.times.len(), 3);
+        for (slot, (out, times)) in solo_out.iter().zip(&solo_times).enumerate() {
+            assert_eq!(batch.slot(slot, m, n), out.as_slice(), "slot {slot}");
+            assert_eq!(batch.times[slot].total_time(), times.total_time());
+        }
+        // The modeled per-dispatch saving: slots 1..3 share the first
+        // slot's launch + helper-pass launches.
+        let cfg = eng.manifest().meta(id).config;
+        let overhead = sim::dispatch_overhead_secs(eng.profile(), &cfg);
+        let expect = Duration::from_secs_f64(2.0 * overhead);
+        assert_eq!(batch.saved, expect);
+        // A single-slot "batch" amortizes nothing.
+        eng.execute_batch_pooled(id, &inputs[..1], &mut batch).unwrap();
+        assert_eq!(batch.saved, Duration::ZERO);
+        assert_eq!(batch.slot(0, m, n), solo_out[0].as_slice());
+        // Mixed triples are a caller bug and fail loudly.
+        let small_a = vec![0.5f32; 64 * 64];
+        let mixed = vec![
+            inputs[0].clone(),
+            GemmInput {
+                m: 64, n: 64, k: 64,
+                a: &small_a, b: &small_a, c: &small_a,
+                alpha: 1.0, beta: 0.0,
+            },
+        ];
+        let err = eng.execute_batch_pooled(id, &mixed, &mut batch).unwrap_err();
+        assert!(err.to_string().contains("mixes triples"), "{err}");
+        // An empty batch is a no-op.
+        eng.execute_batch_pooled(id, &[], &mut batch).unwrap();
+        assert!(batch.out.is_empty() && batch.times.is_empty());
     }
 
     #[test]

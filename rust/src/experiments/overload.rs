@@ -60,6 +60,11 @@ pub struct OverloadConfig {
     pub pressure_threshold_ms: f64,
     /// Modeled-slowdown bound of the pressure pick.
     pub pressure_slowdown: f64,
+    /// Max same-shape requests fused per dispatch (1 disables fusion).
+    /// Under overload the windows fill, so same-shape runs fuse and the
+    /// per-request dispatch cost drops — occupancy is reported per load
+    /// point.
+    pub max_fuse: usize,
 }
 
 impl Default for OverloadConfig {
@@ -72,6 +77,7 @@ impl Default for OverloadConfig {
             reps: 1,
             pressure_threshold_ms: 0.0,
             pressure_slowdown: 1.25,
+            max_fuse: 16,
         }
     }
 }
@@ -94,6 +100,8 @@ pub struct LoadPoint {
     pub pressure_picks: u64,
     /// Mean served quality vs the measured host oracle (DTPR analogue).
     pub dtpr: f64,
+    /// Request-weighted mean fused-batch occupancy of served requests.
+    pub occupancy_mean: f64,
 }
 
 impl LoadPoint {
@@ -118,6 +126,7 @@ impl LoadPoint {
             ("peak_depth", Json::num(self.peak_depth as f64)),
             ("pressure_picks", Json::num(self.pressure_picks as f64)),
             ("dtpr", Json::num(self.dtpr)),
+            ("occupancy_mean", Json::num(self.occupancy_mean)),
         ])
     }
 }
@@ -220,6 +229,7 @@ impl OverloadReport {
             ("requests_per_point", Json::num(self.cfg.requests as f64)),
             ("shards", Json::num(self.cfg.shards as f64)),
             ("queue_capacity", Json::num(self.cfg.queue_capacity as f64)),
+            ("max_fuse", Json::num(self.cfg.max_fuse as f64)),
             ("service_ms", Json::num(self.service_secs * 1e3)),
             ("offered_1x_rps", Json::num(self.offered_1x_rps)),
             (
@@ -265,7 +275,8 @@ impl OverloadReport {
             for p in points.iter() {
                 s.push_str(&format!(
                     "{:>4.1}x: admitted {:4}/{:<4} shed {:5.1}%  p50 {:7.2}ms  \
-                     p99 {:7.2}ms  peak depth {:3}  picks {:3}  dtpr {:.3}\n",
+                     p99 {:7.2}ms  peak depth {:3}  picks {:3}  dtpr {:.3}  \
+                     occ {:.2}\n",
                     p.load,
                     p.admitted,
                     p.offered,
@@ -275,6 +286,7 @@ impl OverloadReport {
                     p.peak_depth,
                     p.pressure_picks,
                     p.dtpr,
+                    p.occupancy_mean,
                 ));
             }
         }
@@ -479,6 +491,7 @@ fn run_point(
         peak_depth,
         pressure_picks: picks,
         dtpr: if quality.is_empty() { 0.0 } else { mean(&quality) },
+        occupancy_mean: stats.occupancy.mean,
     })
 }
 
@@ -504,6 +517,7 @@ pub fn run(artifacts: &Path, cfg: OverloadConfig) -> Result<OverloadReport> {
         shards: cfg.shards,
         queue_capacity: cfg.queue_capacity,
         pressure_slowdown: cfg.pressure_slowdown,
+        max_fuse: cfg.max_fuse,
         ..ServerConfig::default()
     };
     let service_secs = calibrate(artifacts, &manifest, &mix, &base)?;
@@ -578,6 +592,7 @@ mod tests {
             peak_depth: peak,
             pressure_picks: 0,
             dtpr,
+            occupancy_mean: 1.0,
         }
     }
 

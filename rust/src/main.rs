@@ -51,6 +51,7 @@ fn opt_specs() -> Vec<OptSpec> {
         opt("reps", "tuner measurement repetitions", Some("3")),
         opt("policy", "serving policy (model|default)", Some("model")),
         opt("shards", "dispatcher shards for serving", Some("1")),
+        opt("max-fuse", "max same-shape requests fused per dispatch (1 = off)", Some("16")),
         opt("waves", "drift: adaptation waves on the shifted mix", Some("3")),
         opt("sample", "drift: telemetry sampling fraction", Some("1.0")),
         opt("shadow", "drift: shadow-execution budget fraction", Some("1.0")),
@@ -281,11 +282,12 @@ fn cmd_e2e(args: &cli::Args) -> Result<()> {
     let n: usize = args.get_parse("requests", 200)?;
     let reps: usize = args.get_parse("reps", 3)?;
     let shards: usize = args.get_parse("shards", 1)?;
+    let max_fuse: usize = args.get_parse("max-fuse", 16)?;
     let report = experiments::e2e::run_with(
         &artifacts,
         n,
         reps,
-        ServerConfig::with_shards(shards),
+        ServerConfig { max_fuse, ..ServerConfig::with_shards(shards) },
     )?;
     println!("{}", report.render());
     Ok(())
@@ -311,12 +313,13 @@ fn cmd_serve_demo(args: &cli::Args) -> Result<()> {
         other => bail!("unknown policy '{other}'"),
     };
     let shards: usize = args.get_parse("shards", 1)?;
+    let max_fuse: usize = args.get_parse("max-fuse", 16)?;
     let requests = experiments::e2e::request_stream(n, 42);
     let stats = experiments::e2e::serve(
         &artifacts,
         policy,
         requests,
-        ServerConfig::with_shards(shards),
+        ServerConfig { max_fuse, ..ServerConfig::with_shards(shards) },
     )?;
     println!("{}", stats.report());
     Ok(())
@@ -397,6 +400,7 @@ fn cmd_overload(args: &cli::Args) -> Result<()> {
         reps: args.get_parse("reps", 1)?,
         pressure_threshold_ms: args.get_parse("pressure-ms", 0.0)?,
         pressure_slowdown: args.get_parse("slowdown", 1.25)?,
+        max_fuse: args.get_parse("max-fuse", 16)?,
     };
     let report = experiments::overload::run(&artifacts, cfg)?;
     println!("{}", report.render());

@@ -126,6 +126,61 @@ impl ScratchBuffers {
     }
 }
 
+/// Reusable buffers for the *fused* (batched) pooled path: one per
+/// worker thread, like [`ScratchBuffers`].  A fused batch of `B`
+/// same-`(artifact, m, n, k)` requests stages its operands into one
+/// stacked, padded scratch region (slot `i` of operand X occupies
+/// `[i * slot_len, (i + 1) * slot_len)` of `X`'s buffer — the layout a
+/// real batched `[B, mb, kb]` kernel dispatch would consume), executes,
+/// and unpads each slot into `out`.  At steady state (same artifact,
+/// same shape, same batch size) every buffer reuses its capacity, so
+/// the fused path performs **no heap allocation** — the `hotpath` bench
+/// gates this (`allocs_per_request.fused_pooled`).
+#[derive(Debug, Default)]
+pub struct BatchScratch {
+    a: Vec<f32>,
+    b: Vec<f32>,
+    c: Vec<f32>,
+    padded_out: Vec<f32>,
+    /// Per-slot pool for the sequential fallback (engines without a
+    /// native fused surface run `execute_pooled` per slot through this).
+    pub seq: ScratchBuffers,
+    /// Stacked logical `m x n` results, slot-major: slot `i` of the last
+    /// batch lives at `[i * m * n, (i + 1) * m * n)` (see [`Self::slot`]).
+    pub out: Vec<f32>,
+    /// Per-slot §5.4 timing attribution.  Each slot's times describe
+    /// that request *as if dispatched alone* (fusion amortization
+    /// excluded), so telemetry samples stay comparable to the un-fused
+    /// oracle measurements.
+    pub times: Vec<GemmTimes>,
+    /// Per-dispatch cost the fusion avoided across the whole batch:
+    /// modeled on analytical engines (launch + helper-pass launches of
+    /// every slot after the first), zero on the measured runtime path —
+    /// there the savings are structural and show up as wall time.
+    pub saved: Duration,
+}
+
+impl BatchScratch {
+    pub fn new() -> BatchScratch {
+        BatchScratch::default()
+    }
+
+    /// The logical `m x n` result of slot `i` of the last fused batch.
+    pub fn slot(&self, i: usize, m: usize, n: usize) -> &[f32] {
+        &self.out[i * m * n..(i + 1) * m * n]
+    }
+}
+
+/// Resize a stacked staging buffer without the double-write a
+/// `clear()`+`resize()` would cost: content is left stale — every slot
+/// is fully overwritten by its staging pass.
+fn resize_only(v: &mut Vec<f32>, len: usize) {
+    if v.len() != len {
+        v.clear();
+        v.resize(len, 0f32);
+    }
+}
+
 /// Loads and executes the AOT artifact roster.
 pub struct GemmRuntime {
     client: xla::PjRtClient,
@@ -343,6 +398,173 @@ impl GemmRuntime {
                 })
             }
         }
+    }
+
+    /// Execute a *fused batch* of same-`(artifact, m, n, k)` GEMMs by
+    /// dense id — the serving hot path's batched surface.  Operands are
+    /// staged into one stacked, padded scratch region (one slot per
+    /// request), executed, and unpadded per slot into `batch.out`
+    /// (slot-major); per-slot timings land in `batch.times`.
+    ///
+    /// Contract (property-tested by `tests/fusion_equivalence.rs`):
+    ///
+    /// * every slot's result is **bit-identical** to a standalone
+    ///   [`gemm_pooled`](Self::gemm_pooled) call on the same operands;
+    /// * every input must share one triple (mixed triples are a caller
+    ///   bug — the coordinator groups by `(ArtifactId, m, n, k)` before
+    ///   fusing — and fail loudly);
+    /// * zero steady-state heap allocations (same batch shape: every
+    ///   buffer reuses its capacity);
+    /// * per-slot times exclude the fusion amortization: each slot is
+    ///   timed as its own execute + its own pad/unpad share, so
+    ///   telemetry stays comparable to un-fused oracle measurements.
+    ///
+    /// On error the batch fails as a whole (`batch.out`/`batch.times`
+    /// contents are unspecified); the coordinator answers every member
+    /// with a typed per-request error.
+    pub fn gemm_batch_pooled(
+        &mut self,
+        id: ArtifactId,
+        inputs: &[GemmInput],
+        batch: &mut BatchScratch,
+    ) -> Result<()> {
+        batch.times.clear();
+        batch.saved = Duration::ZERO;
+        let Some(first) = inputs.first() else {
+            batch.out.clear();
+            return Ok(());
+        };
+        let t = first.triple();
+        for input in inputs {
+            input.validate()?;
+            if input.triple() != t {
+                bail!("fused batch mixes triples: {} vs {t}", input.triple());
+            }
+        }
+        self.check_id(id)?;
+        self.check_shape(id, first)?;
+        self.ensure_compiled_id(id)?;
+        let nb_inputs = inputs.len();
+        let (m, n, k) = (first.m, first.n, first.k);
+        let scalar_dims = [1i64];
+        resize_only(&mut batch.out, nb_inputs * m * n);
+        let kind = self.manifest.meta(id).kind;
+        match kind {
+            ArtifactKind::Direct { trans_a, trans_b, .. } => {
+                // Exact-shape artifacts take the request operands as-is:
+                // no padding, so no staging pass — each slot executes
+                // from the caller's slices and copies its result into
+                // the stacked output (same bits as `gemm_pooled`'s
+                // direct path, which writes `scratch.out` directly).
+                let (mi, ni, ki) = (m as i64, n as i64, k as i64);
+                let a_dims: [i64; 2] = if trans_a { [ki, mi] } else { [mi, ki] };
+                let b_dims: [i64; 2] = if trans_b { [ni, ki] } else { [ki, ni] };
+                let c_dims: [i64; 2] = [mi, ni];
+                for (slot, input) in inputs.iter().enumerate() {
+                    let t0 = Instant::now();
+                    let ops = [
+                        xla::RawOperand { data: input.a, dims: &a_dims },
+                        xla::RawOperand { data: input.b, dims: &b_dims },
+                        xla::RawOperand { data: input.c, dims: &c_dims },
+                        xla::RawOperand {
+                            data: std::slice::from_ref(&input.alpha),
+                            dims: &scalar_dims,
+                        },
+                        xla::RawOperand {
+                            data: std::slice::from_ref(&input.beta),
+                            dims: &scalar_dims,
+                        },
+                    ];
+                    self.exe(id)
+                        .execute_into(&ops, &mut batch.padded_out)
+                        .map_err(|e| {
+                            anyhow!("executing {}: {e:?}", self.manifest.name_of(id))
+                        })?;
+                    let kernel_time = t0.elapsed();
+                    let th = Instant::now();
+                    batch.out[slot * m * n..(slot + 1) * m * n]
+                        .copy_from_slice(&batch.padded_out);
+                    batch.times.push(GemmTimes {
+                        helper_time: th.elapsed(),
+                        kernel_time,
+                    });
+                }
+            }
+            ArtifactKind::Indirect { mb, nb, kb } => {
+                let (mb, nb, kb) = (mb as usize, nb as usize, kb as usize);
+                let (sa, sb, sc) = (mb * kb, kb * nb, mb * nb);
+                resize_only(&mut batch.a, nb_inputs * sa);
+                resize_only(&mut batch.b, nb_inputs * sb);
+                resize_only(&mut batch.c, nb_inputs * sc);
+                // Staging pass: pad every slot into the stacked region
+                // (bit-identical per slot to `pad_into`, stale stacked
+                // content notwithstanding).
+                for (slot, input) in inputs.iter().enumerate() {
+                    let th = Instant::now();
+                    pad::pad_into_slice(
+                        input.a, m, k, mb, kb,
+                        &mut batch.a[slot * sa..(slot + 1) * sa],
+                    );
+                    pad::pad_into_slice(
+                        input.b, k, n, kb, nb,
+                        &mut batch.b[slot * sb..(slot + 1) * sb],
+                    );
+                    pad::pad_into_slice(
+                        input.c, m, n, mb, nb,
+                        &mut batch.c[slot * sc..(slot + 1) * sc],
+                    );
+                    batch.times.push(GemmTimes {
+                        helper_time: th.elapsed(),
+                        kernel_time: Duration::ZERO,
+                    });
+                }
+                // Execute + unpad per slot over the stacked region.
+                let a_dims = [mb as i64, kb as i64];
+                let b_dims = [kb as i64, nb as i64];
+                let c_dims = [mb as i64, nb as i64];
+                for (slot, input) in inputs.iter().enumerate() {
+                    let t0 = Instant::now();
+                    let ops = [
+                        xla::RawOperand {
+                            data: &batch.a[slot * sa..(slot + 1) * sa],
+                            dims: &a_dims,
+                        },
+                        xla::RawOperand {
+                            data: &batch.b[slot * sb..(slot + 1) * sb],
+                            dims: &b_dims,
+                        },
+                        xla::RawOperand {
+                            data: &batch.c[slot * sc..(slot + 1) * sc],
+                            dims: &c_dims,
+                        },
+                        xla::RawOperand {
+                            data: std::slice::from_ref(&input.alpha),
+                            dims: &scalar_dims,
+                        },
+                        xla::RawOperand {
+                            data: std::slice::from_ref(&input.beta),
+                            dims: &scalar_dims,
+                        },
+                    ];
+                    self.exe(id)
+                        .execute_into(&ops, &mut batch.padded_out)
+                        .map_err(|e| {
+                            anyhow!("executing {}: {e:?}", self.manifest.name_of(id))
+                        })?;
+                    batch.times[slot].kernel_time = t0.elapsed();
+                    let tu = Instant::now();
+                    pad::unpad_into(
+                        &batch.padded_out,
+                        nb,
+                        m,
+                        n,
+                        &mut batch.out[slot * m * n..(slot + 1) * m * n],
+                    );
+                    batch.times[slot].helper_time += tu.elapsed();
+                }
+            }
+        }
+        Ok(())
     }
 
     fn run_direct(
@@ -569,6 +791,23 @@ mod tests {
             beta: 0.5,
         });
         assert_eq!(out, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn batch_scratch_slot_indexing() {
+        let mut batch = BatchScratch::new();
+        batch.out = (0..12).map(|x| x as f32).collect(); // 3 slots of 2x2
+        assert_eq!(batch.slot(0, 2, 2), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(batch.slot(2, 2, 2), &[8.0, 9.0, 10.0, 11.0]);
+        // resize_only reuses the buffer when the length already matches
+        // (stale content preserved — slots are fully overwritten by the
+        // staging/unpad passes) and reallocates only on a length change.
+        let cap = batch.out.capacity();
+        resize_only(&mut batch.out, 12);
+        assert_eq!(batch.out[5], 5.0);
+        assert_eq!(batch.out.capacity(), cap);
+        resize_only(&mut batch.out, 4);
+        assert_eq!(batch.out, vec![0f32; 4]);
     }
 
     #[test]

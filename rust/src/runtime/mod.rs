@@ -8,8 +8,8 @@ pub mod manifest;
 pub mod pad;
 
 pub use executor::{
-    host_gemm, host_gemm_into, GemmInput, GemmOutput, GemmRuntime, GemmTimes,
-    ScratchBuffers,
+    host_gemm, host_gemm_into, BatchScratch, GemmInput, GemmOutput, GemmRuntime,
+    GemmTimes, ScratchBuffers,
 };
 pub use manifest::{ArtifactId, ArtifactKind, ArtifactMeta, Manifest};
 

@@ -36,6 +36,27 @@ pub fn copy_into(src: &[f32], src_cols: usize, dst: &mut [f32], dst_cols: usize,
     }
 }
 
+/// [`pad`] into a caller-provided slice of exactly `rows_to * cols_to`
+/// elements: the slice is zeroed and filled exactly like `pad` would.
+/// The fused batch path stages each request's operands into its slot of
+/// one stacked scratch region through this — per-slot content is
+/// bit-identical to a standalone `pad_into` regardless of what the
+/// (reused) stacked buffer held before.
+pub fn pad_into_slice(
+    src: &[f32],
+    rows: usize,
+    cols: usize,
+    rows_to: usize,
+    cols_to: usize,
+    dst: &mut [f32],
+) {
+    assert_eq!(src.len(), rows * cols, "src size mismatch");
+    assert!(rows_to >= rows && cols_to >= cols, "pad must grow");
+    assert_eq!(dst.len(), rows_to * cols_to, "dst slot size mismatch");
+    dst.fill(0f32);
+    copy_into(src, cols, dst, cols_to, rows);
+}
+
 /// Slice the logical `rows x cols` region out of a padded row-major
 /// `_ x padded_cols` buffer.
 pub fn unpad(src: &[f32], padded_cols: usize, rows: usize, cols: usize) -> Vec<f32> {
@@ -138,6 +159,29 @@ mod tests {
         pad_into(&src, 3, 4, 8, 8, &mut buf);
         assert_eq!(buf, pad(&src, 3, 4, 8, 8));
         assert_eq!(buf.capacity(), cap);
+    }
+
+    #[test]
+    fn pad_into_slice_matches_pad_into_on_dirty_slots() {
+        let src: Vec<f32> = (0..12).map(|x| x as f32 + 0.5).collect(); // 3x4
+        let mut expect = Vec::new();
+        pad_into(&src, 3, 4, 8, 8, &mut expect);
+        // A dirty stacked buffer holding two slots: each slot must come
+        // out bit-identical to the standalone pad regardless of the
+        // stale content.
+        let mut stacked = vec![f32::NAN; 2 * 64];
+        for slot in 0..2 {
+            pad_into_slice(&src, 3, 4, 8, 8, &mut stacked[slot * 64..(slot + 1) * 64]);
+        }
+        assert_eq!(&stacked[..64], expect.as_slice());
+        assert_eq!(&stacked[64..], expect.as_slice());
+    }
+
+    #[test]
+    #[should_panic(expected = "dst slot size mismatch")]
+    fn pad_into_slice_checks_slot_size() {
+        let mut dst = vec![0f32; 10];
+        pad_into_slice(&[1.0, 2.0], 1, 2, 2, 2, &mut dst);
     }
 
     #[test]

@@ -11,8 +11,13 @@
 //!   median is more than `tolerance` slower;
 //! * `shard_scaling[].{rps,gflops}` by shard count — regression when the
 //!   fresh throughput is more than `tolerance` lower;
-//! * `allocs_per_request.pooled` — regression on *any* increase (the
-//!   zero-allocation gate: 0 must stay 0);
+//! * `allocs_per_request.pooled` (and the `_with_policy_handle`,
+//!   `engine_pooled`, `fused_pooled` variants) — regression on *any*
+//!   increase (the zero-allocation gate: 0 must stay 0);
+//! * the fusion gate (`fusion[]` in `BENCH_hotpath.json`): at B=16 the
+//!   fused batched path's per-request time must not be slower than B
+//!   sequential pooled calls beyond `tolerance` (self-contained in the
+//!   current file; occupancy and speedup are reported per batch size);
 //! * `recovered` (drift runs) — regression when the fresh run says
 //!   `false`;
 //! * per-device `accuracy` (hetero runs: top-level `devices[]` in
@@ -212,9 +217,14 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> BenchDiff {
     }
 
     // Zero-allocation gates: any increase is a regression — the bare
-    // pooled path, the pooled-behind-a-PolicyHandle path, and the pooled
-    // path behind the ExecutionEngine trait.
-    for key in ["pooled", "pooled_with_policy_handle", "engine_pooled"] {
+    // pooled path, the pooled-behind-a-PolicyHandle path, the pooled
+    // path behind the ExecutionEngine trait, and the fused batched path.
+    for key in [
+        "pooled",
+        "pooled_with_policy_handle",
+        "engine_pooled",
+        "fused_pooled",
+    ] {
         let base = baseline
             .get("allocs_per_request")
             .ok()
@@ -231,6 +241,40 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> BenchDiff {
             diff.regressions.push(format!(
                 "{key} path allocates again: {base:.1} -> {cur:.1} allocs/request"
             ));
+        }
+    }
+
+    // Fusion gate.  Self-contained in the current file (occupancy and
+    // speedup are reported for every measured batch size): at the B=16
+    // gate point the fused path's per-request time must not be slower
+    // than B sequential pooled calls beyond tolerance — fusion that
+    // costs more than it amortizes is a regression at any baseline.
+    if let Ok(arr) = current.get("fusion").and_then(|f| f.as_arr()) {
+        for e in arr {
+            let (Some(b), Some(fused), Some(seq)) = (
+                num_at(e, "b"),
+                num_at(e, "fused_per_request_s"),
+                num_at(e, "seq_per_request_s"),
+            ) else {
+                continue;
+            };
+            let occupancy = num_at(e, "occupancy").unwrap_or(b);
+            let speedup = if fused > 0.0 { seq / fused } else { 0.0 };
+            diff.lines.push(format!(
+                "fusion B={b:.0}: {fused:.3e}s/req fused vs {seq:.3e}s/req \
+                 sequential ({speedup:.2}x, occupancy {occupancy:.0})"
+            ));
+            if (b - 16.0).abs() < 1e-9 {
+                diff.compared += 1;
+                if fused > seq * (1.0 + tolerance) {
+                    diff.regressions.push(format!(
+                        "fusion: B=16 fused path {:+.1}% slower per request than \
+                         sequential (tolerance {:.0}%)",
+                        100.0 * (fused / seq - 1.0),
+                        tolerance * 100.0
+                    ));
+                }
+            }
         }
     }
 
@@ -465,6 +509,56 @@ mod tests {
         let diff = compare(&base, &with_engine(1.0), 0.15);
         assert!(!diff.passes());
         assert!(diff.regressions.iter().any(|r| r.contains("engine_pooled")));
+    }
+
+    #[test]
+    fn fusion_gate_compares_b16_and_reports_occupancy() {
+        let base = Json::parse(r#"{"bench":"hotpath"}"#).unwrap();
+        let cur = |fused16: f64| {
+            Json::parse(&format!(
+                r#"{{"bench":"hotpath","fusion":[
+                     {{"b":1,"occupancy":1,"fused_per_request_s":1.1e-4,
+                       "seq_per_request_s":1.0e-4,"speedup":0.91}},
+                     {{"b":16,"occupancy":16,"fused_per_request_s":{fused16},
+                       "seq_per_request_s":1.0e-4,"speedup":1.3}}]}}"#
+            ))
+            .unwrap()
+        };
+        // Fused no slower than sequential at B=16: passes; every row is
+        // reported with its occupancy (B=1 may legitimately be slower —
+        // it is informational, not gated).
+        let diff = compare(&base, &cur(0.8e-4), 0.15);
+        assert_eq!(diff.compared, 1);
+        assert!(diff.passes(), "{:?}", diff.regressions);
+        assert!(diff.lines.iter().any(|l| l.contains("fusion B=1:")));
+        assert!(diff
+            .lines
+            .iter()
+            .any(|l| l.contains("fusion B=16:") && l.contains("occupancy 16")));
+        // Within tolerance: passes.
+        assert!(compare(&base, &cur(1.1e-4), 0.15).passes());
+        // B=16 slower than sequential beyond tolerance: fails.
+        let diff = compare(&base, &cur(1.3e-4), 0.15);
+        assert!(!diff.passes());
+        assert!(diff.regressions[0].contains("fusion"), "{:?}", diff.regressions);
+        // No fusion section: nothing compared, nothing gated.
+        let diff = compare(&base, &base, 0.15);
+        assert!(!diff.lines.iter().any(|l| l.contains("fusion")));
+    }
+
+    #[test]
+    fn fused_pooled_allocation_gate() {
+        let with_fused = |fused: f64| {
+            Json::parse(&format!(
+                r#"{{"allocs_per_request":{{"pooled":0.0,"fused_pooled":{fused}}}}}"#
+            ))
+            .unwrap()
+        };
+        let base = with_fused(0.0);
+        assert!(compare(&base, &with_fused(0.0), 0.15).passes());
+        let diff = compare(&base, &with_fused(0.25), 0.15);
+        assert!(!diff.passes());
+        assert!(diff.regressions.iter().any(|r| r.contains("fused_pooled")));
     }
 
     #[test]

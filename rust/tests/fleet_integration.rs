@@ -14,6 +14,7 @@ use adaptlib::device::DeviceId;
 use adaptlib::dtree::{MinSamples, OnlineTrainer, TrainParams};
 use adaptlib::experiments::hetero::device_policy;
 use adaptlib::runtime::{host_gemm, GemmInput, Manifest};
+use adaptlib::testing::fill_request;
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -26,17 +27,9 @@ fn artifacts_dir() -> Option<PathBuf> {
 const SHAPES: [(usize, usize, usize); 4] =
     [(64, 64, 64), (31, 31, 31), (100, 100, 1), (100, 100, 100)];
 
+/// The shared deterministic fixture (`testing::fill_request`).
 fn req(m: usize, n: usize, k: usize, fill: f32) -> GemmRequest {
-    GemmRequest {
-        m,
-        n,
-        k,
-        a: vec![fill; m * k],
-        b: vec![1.0; k * n],
-        c: vec![0.0; m * n],
-        alpha: 1.0,
-        beta: 0.0,
-    }
+    fill_request(m, n, k, fill)
 }
 
 fn fleet_classes(dir: &Path, shards: usize) -> Vec<DeviceClass> {

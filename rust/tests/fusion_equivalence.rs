@@ -1,0 +1,633 @@
+//! Fusion equivalence: the fused batched execution path
+//! (`GemmRuntime::gemm_batch_pooled` / `ExecutionEngine::
+//! execute_batch_pooled`) must be **bit-identical** to sequential
+//! `gemm_pooled` on every slot — property-tested over seeded random
+//! shape mixes, batch sizes 1..=max_fuse, and every model of the paper
+//! sweep — plus the fusion regression suite: expired envelopes are
+//! dropped *before* fusion grouping, and a fused dispatch that fails
+//! answers every member with a typed per-request error.  PJRT-backed
+//! tests skip when `make artifacts` has not run.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use adaptlib::config::Triple;
+use adaptlib::coordinator::{
+    Admission, DefaultPolicy, DeviceClass, GemmServer, RequestOutcome, ServerConfig,
+};
+use adaptlib::dataset::DatasetKind;
+use adaptlib::device::DeviceId;
+use adaptlib::engine::{ExecutionEngine, RuntimeEngine};
+use adaptlib::experiments::hetero::device_policy;
+use adaptlib::experiments::{e2e, Context};
+use adaptlib::runtime::{
+    ArtifactId, ArtifactKind, BatchScratch, GemmInput, GemmRuntime, Manifest,
+    ScratchBuffers,
+};
+use adaptlib::testing::{self, fill_request, MixSpec, PropConfig, Strategy};
+use adaptlib::util::prng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn rand_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.f32() * 2.0 - 1.0).collect()
+}
+
+/// Triples the roster serves, kept small enough (every edge <=
+/// `max_edge`) for exhaustive re-execution: every direct artifact's
+/// exact shape, and per indirect bucket the bucket-exact triple (the
+/// `m == mb` pad edge — padding is a row-copy no-op the fused staging
+/// must still get bit-right), an interior in-bucket shape (pays real
+/// padding) and a degenerate row.
+fn roster_triples(manifest: &Manifest, max_edge: u32) -> Vec<Triple> {
+    let mut v = Vec::new();
+    for a in &manifest.artifacts {
+        match a.kind {
+            ArtifactKind::Direct { m, n, k, trans_a: false, trans_b: false }
+                if m <= max_edge && n <= max_edge && k <= max_edge =>
+            {
+                v.push(Triple::new(m, n, k));
+            }
+            ArtifactKind::Indirect { mb, nb, kb }
+                if mb <= max_edge && nb <= max_edge && kb <= max_edge =>
+            {
+                v.push(Triple::new(mb, nb, kb)); // m == mb pad edge
+                v.push(Triple::new(mb - mb / 4, nb - nb / 3, kb - 1));
+                v.push(Triple::new(1, (nb / 7).max(1), kb));
+            }
+            _ => {}
+        }
+    }
+    v.sort();
+    v.dedup();
+    v
+}
+
+/// Execute one window of slots (indices into `triples`) exactly the way
+/// the server's window-resolve does — resolve to the least-waste
+/// artifact, stable-sort by `(ArtifactId, triple)`, split runs into
+/// fused batches of at most `max_fuse` — and check every slot of every
+/// fused batch bit-identical to a standalone `gemm_pooled` call on the
+/// same operands.
+fn check_window(
+    rt: &mut GemmRuntime,
+    triples: &[Triple],
+    window: &[usize],
+    max_fuse: usize,
+    seed: u64,
+) -> Result<(), String> {
+    let mut rng = Rng::new(seed);
+    let ops: Vec<(Triple, Vec<f32>, Vec<f32>, Vec<f32>)> = window
+        .iter()
+        .map(|&ti| {
+            let t = triples[ti % triples.len()];
+            let (m, n, k) = (t.m as usize, t.n as usize, t.k as usize);
+            (
+                t,
+                rand_vec(&mut rng, m * k),
+                rand_vec(&mut rng, k * n),
+                rand_vec(&mut rng, m * n),
+            )
+        })
+        .collect();
+    let input_of = |slot: usize| -> GemmInput<'_> {
+        let (t, a, b, c) = &ops[slot];
+        GemmInput {
+            m: t.m as usize,
+            n: t.n as usize,
+            k: t.k as usize,
+            a,
+            b,
+            c,
+            alpha: 1.25,
+            beta: -0.5,
+        }
+    };
+    let mut order: Vec<(ArtifactId, Triple, usize)> = Vec::with_capacity(ops.len());
+    for (slot, (t, ..)) in ops.iter().enumerate() {
+        let id = rt
+            .manifest
+            .eligible_id(*t)
+            .ok_or_else(|| format!("no artifact accepts {t}"))?;
+        order.push((id, *t, slot));
+    }
+    // Stable sort: FIFO within a fused group, like the server.
+    order.sort_by_key(|(id, t, _)| (*id, *t));
+
+    let mut batch = BatchScratch::new();
+    let mut scratch = ScratchBuffers::new();
+    let mut i = 0;
+    while i < order.len() {
+        let (id, t, _) = order[i];
+        let mut j = i + 1;
+        while j < order.len()
+            && j - i < max_fuse
+            && order[j].0 == id
+            && order[j].1 == t
+        {
+            j += 1;
+        }
+        let inputs: Vec<GemmInput> =
+            order[i..j].iter().map(|&(_, _, slot)| input_of(slot)).collect();
+        rt.gemm_batch_pooled(id, &inputs, &mut batch)
+            .map_err(|e| format!("fused batch failed: {e:#}"))?;
+        if batch.times.len() != inputs.len() {
+            return Err(format!(
+                "expected {} per-slot timings, got {}",
+                inputs.len(),
+                batch.times.len()
+            ));
+        }
+        let (m, n) = (t.m as usize, t.n as usize);
+        for (pos, &(_, _, slot)) in order[i..j].iter().enumerate() {
+            rt.gemm_pooled(id, &input_of(slot), &mut scratch)
+                .map_err(|e| format!("sequential reference failed: {e:#}"))?;
+            if batch.slot(pos, m, n) != scratch.out.as_slice() {
+                return Err(format!(
+                    "slot {pos} of a fused batch of {} on artifact {} @ {t} \
+                     diverges from sequential gemm_pooled (max_fuse {max_fuse})",
+                    j - i,
+                    rt.manifest.name_of(id),
+                ));
+            }
+        }
+        i = j;
+    }
+    Ok(())
+}
+
+/// Property strategy: a window of slot indices (1..=max_len slots, each
+/// picking a roster triple).  Shrinks toward shorter windows.
+struct WindowStrategy {
+    max_len: usize,
+    n_triples: usize,
+}
+
+impl Strategy for WindowStrategy {
+    type Value = Vec<usize>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<usize> {
+        let len = 1 + rng.below(self.max_len as u64) as usize;
+        (0..len)
+            .map(|_| rng.below(self.n_triples as u64) as usize)
+            .collect()
+    }
+
+    fn shrink(&self, value: &Vec<usize>) -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        if value.len() > 1 {
+            out.push(value[..value.len() / 2].to_vec());
+            out.push(value[value.len() / 2..].to_vec());
+            out.push(value[1..].to_vec());
+        }
+        out
+    }
+}
+
+/// Deterministic per-window operand seed, stable under shrinking.
+fn window_seed(window: &[usize]) -> u64 {
+    window
+        .iter()
+        .fold(0xF05EDu64, |h, &x| h.wrapping_mul(31).wrapping_add(x as u64 + 1))
+}
+
+/// The tentpole property: for seeded random shape mixes and every fuse
+/// cap 1..=4, fused execution is bit-identical to sequential
+/// `gemm_pooled` on every slot — including mixed-triple windows that
+/// must split into multiple fused batches and the `m == mb` pad edge
+/// (bucket-exact triples are in the candidate set).
+#[test]
+fn fused_execution_is_bit_identical_for_seeded_random_windows() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = GemmRuntime::open(&dir).unwrap();
+    // Cap the property mix at 128-edge triples so exhaustive
+    // re-execution stays fast; the 256-edge buckets are covered by the
+    // bucket-exact engine test below.
+    let triples = roster_triples(&rt.manifest, 128);
+    assert!(
+        triples.len() >= 3,
+        "roster must offer a usable shape mix, got {triples:?}"
+    );
+    let rt = RefCell::new(rt);
+    let cfg = PropConfig { cases: 12, seed: 0xF051_0A1B, max_shrink_steps: 16 };
+    let strategy = WindowStrategy { max_len: 8, n_triples: triples.len() };
+    testing::assert_prop(&cfg, &strategy, |window| {
+        let mut rt = rt.borrow_mut();
+        for max_fuse in [1usize, 2, 4] {
+            check_window(&mut rt, &triples, window, max_fuse, window_seed(window))?;
+        }
+        Ok(())
+    });
+}
+
+/// The `m == mb` pad edge through the engine trait: a fused batch of
+/// bucket-exact requests (padding degenerates to a straight row copy)
+/// on every indirect artifact is bit-identical to the sequential pooled
+/// path, through `RuntimeEngine::execute_batch_pooled`.
+#[test]
+fn bucket_exact_fused_batches_are_bit_identical_through_the_engine() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = RuntimeEngine::open(&dir).unwrap();
+    let edges: Vec<(ArtifactId, Triple)> = engine
+        .manifest()
+        .artifacts
+        .iter()
+        .enumerate()
+        .filter_map(|(i, a)| match a.kind {
+            ArtifactKind::Indirect { mb, nb, kb }
+                if mb <= 256 && nb <= 256 && kb <= 256 =>
+            {
+                Some((ArtifactId(i as u32), Triple::new(mb, nb, kb)))
+            }
+            _ => None,
+        })
+        .collect();
+    assert!(!edges.is_empty(), "roster has no small indirect bucket");
+    let mut rng = Rng::new(0xED6E);
+    let mut batch = BatchScratch::new();
+    let mut scratch = ScratchBuffers::new();
+    for (id, t) in edges {
+        let (m, n, k) = (t.m as usize, t.n as usize, t.k as usize);
+        let slots: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..3)
+            .map(|_| {
+                (
+                    rand_vec(&mut rng, m * k),
+                    rand_vec(&mut rng, k * n),
+                    rand_vec(&mut rng, m * n),
+                )
+            })
+            .collect();
+        let inputs: Vec<GemmInput> = slots
+            .iter()
+            .map(|(a, b, c)| GemmInput {
+                m, n, k,
+                a, b, c,
+                alpha: 0.75, beta: 1.5,
+            })
+            .collect();
+        engine.execute_batch_pooled(id, &inputs, &mut batch).unwrap();
+        for (pos, input) in inputs.iter().enumerate() {
+            engine.execute_pooled(id, input, &mut scratch).unwrap();
+            assert_eq!(
+                batch.slot(pos, m, n),
+                scratch.out.as_slice(),
+                "bucket-exact slot {pos} diverges on {t}"
+            );
+        }
+    }
+}
+
+/// Every model of the paper's (H, L) sweep drives selection exactly as
+/// the serving dispatcher would (predicted config → artifact, with the
+/// least-waste eligibility fallback), and the resulting fused batches
+/// are bit-identical to sequential execution — so no model's selection
+/// pattern can produce a grouping the fused path gets wrong.
+#[test]
+fn all_swept_models_produce_bit_identical_fused_executions() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut ctx = Context::new();
+    let sweep = ctx.sweep(DeviceId::NvidiaP100, DatasetKind::Po2);
+    assert!(
+        sweep.models.len() >= 20,
+        "expected the full paper sweep, got {} models",
+        sweep.models.len()
+    );
+    let mut rt = GemmRuntime::open(&dir).unwrap();
+    let triples: Vec<Triple> = e2e::workload_triples()
+        .into_iter()
+        .filter(|t| rt.manifest.eligible_id(*t).is_some())
+        .collect();
+    assert!(triples.len() >= 6, "workload mix barely servable: {triples:?}");
+    const MAX_FUSE: usize = 4;
+    // Deterministic operands per (triple, slot position): slot `pos` of
+    // any fused batch on `t` always carries operand set `pos`, so a
+    // fused chunk's expected outputs depend only on (artifact, triple,
+    // size) — verified chunk shapes are checked once and skipped when a
+    // later model reproduces them.  Distinct per-slot operands matter:
+    // identical operands would hide a staging bug that reads a
+    // neighbouring slot's data.
+    let operands: HashMap<(Triple, usize), (Vec<f32>, Vec<f32>, Vec<f32>)> = triples
+        .iter()
+        .flat_map(|&t| (0..MAX_FUSE).map(move |pos| (t, pos)))
+        .map(|(t, pos)| {
+            let mut rng = Rng::new(
+                0x5EED
+                    ^ ((t.m as u64) << 40)
+                    ^ ((t.n as u64) << 20)
+                    ^ ((pos as u64) << 10)
+                    ^ t.k as u64,
+            );
+            let (m, n, k) = (t.m as usize, t.n as usize, t.k as usize);
+            (
+                (t, pos),
+                (
+                    rand_vec(&mut rng, m * k),
+                    rand_vec(&mut rng, k * n),
+                    rand_vec(&mut rng, m * n),
+                ),
+            )
+        })
+        .collect();
+    let input_of = |t: Triple, pos: usize| -> GemmInput<'_> {
+        let (a, b, c) = &operands[&(t, pos)];
+        GemmInput {
+            m: t.m as usize,
+            n: t.n as usize,
+            k: t.k as usize,
+            a, b, c,
+            alpha: 1.0, beta: 0.25,
+        }
+    };
+    // Sequential references per (artifact, triple, slot position), and
+    // the set of chunk shapes already verified across earlier models.
+    let mut reference: HashMap<(ArtifactId, Triple, usize), Vec<f32>> = HashMap::new();
+    let mut verified: std::collections::HashSet<(ArtifactId, Triple, usize)> =
+        std::collections::HashSet::new();
+    let mut batch = BatchScratch::new();
+    let mut scratch = ScratchBuffers::new();
+    for row in &sweep.models {
+        // The dispatcher's selection → artifact step, per triple.
+        let mut order: Vec<(ArtifactId, Triple)> = triples
+            .iter()
+            .map(|&t| {
+                let cfg = sweep.labeled.classes.config(row.tree.predict(t));
+                let id = rt
+                    .manifest
+                    .artifact_id_for_config(cfg, t)
+                    .or_else(|| rt.manifest.eligible_id(t))
+                    .expect("triple pre-filtered servable");
+                (id, t)
+            })
+            .collect();
+        order.sort_by_key(|&(id, t)| (id, t));
+        let mut i = 0;
+        while i < order.len() {
+            let (id, t) = order[i];
+            let mut j = i + 1;
+            while j < order.len() && j - i < MAX_FUSE && order[j] == (id, t) {
+                j += 1;
+            }
+            let size = j - i;
+            i = j;
+            if !verified.insert((id, t, size)) {
+                continue; // this chunk shape already checked bit-exact
+            }
+            let inputs: Vec<GemmInput> =
+                (0..size).map(|pos| input_of(t, pos)).collect();
+            rt.gemm_batch_pooled(id, &inputs, &mut batch).unwrap();
+            let (m, n) = (t.m as usize, t.n as usize);
+            for pos in 0..size {
+                if !reference.contains_key(&(id, t, pos)) {
+                    rt.gemm_pooled(id, &input_of(t, pos), &mut scratch).unwrap();
+                    reference.insert((id, t, pos), scratch.out.clone());
+                }
+                assert_eq!(
+                    batch.slot(pos, m, n),
+                    reference[&(id, t, pos)].as_slice(),
+                    "model {} slot {pos} of a fused batch of {size} diverges \
+                     on {} @ {t}",
+                    row.scores.model,
+                    rt.manifest.name_of(id),
+                );
+            }
+        }
+    }
+}
+
+/// Server-level fusion: a one-shard burst of mixed shapes lands in one
+/// batch window, splits into per-(artifact, triple) fused batches
+/// capped at `max_fuse`, and every response is correct and carries its
+/// batch identity; occupancy accounting covers every served request.
+#[test]
+fn mixed_shape_burst_fuses_and_serves_correctly() {
+    let Some(dir) = artifacts_dir() else { return };
+    let backend = adaptlib::runtime::PjrtBackend::open(&dir).unwrap();
+    let policy = DefaultPolicy::from_roster(&backend.roster_configs()).unwrap();
+    drop(backend);
+    let max_fuse = 4usize;
+    let cfg = ServerConfig {
+        max_fuse,
+        max_batch: 64,
+        // A long fill window so the whole pre-generated burst lands in
+        // one window deterministically.
+        batch_window: Duration::from_millis(300),
+        ..ServerConfig::default()
+    };
+    let server = GemmServer::start(&dir, Box::new(policy), cfg).unwrap();
+    let handle = server.handle();
+    let n = 16usize;
+    let mix = MixSpec::new(0xF05E).fills(&[0.5]).build(n);
+    let mut pending = Vec::with_capacity(n);
+    for mr in mix {
+        let expect = mr.expected_element();
+        pending.push((expect, handle.submit(mr.req)));
+    }
+    let mut fused_seen = 0usize;
+    for (expect, rx) in pending {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.outcome, RequestOutcome::Ok);
+        assert!(
+            (1..=max_fuse).contains(&resp.fused_batch_size),
+            "fused batch size {} outside 1..={max_fuse}",
+            resp.fused_batch_size
+        );
+        if resp.fused_batch_size >= 2 {
+            fused_seen += 1;
+        }
+        let out = resp.out.unwrap();
+        assert!(
+            (out[0] - expect).abs() < 1e-2 * expect.abs().max(1.0),
+            "{} vs {expect}",
+            out[0]
+        );
+    }
+    // 16 requests over 4 shapes in one window: by pigeonhole at least
+    // one (artifact, triple) run holds >= 2 requests and fuses.
+    assert!(fused_seen >= 2, "burst produced no fused batch");
+    drop(handle);
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.occupancy.n, n, "every served request in the occupancy summary");
+    assert!(stats.dispatches() < n as u64, "fusion must reduce dispatches below one per request");
+    let host = &stats.per_device["host-cpu"];
+    assert_eq!(host.occupancy.iter().sum::<u64>(), host.dispatches);
+    assert_eq!(host.fused_requests as usize, fused_seen);
+}
+
+/// Regression: deadline-expired envelopes are dropped *before* fusion
+/// grouping.  Four expired and four live requests of the same triple
+/// share one window with `max_fuse = 8`: if expiry ran after grouping,
+/// the live batch would report 8 members — it must report at most 4,
+/// and the expired envelopes never appear in occupancy accounting.
+#[test]
+fn expired_envelopes_never_inflate_fused_batches_or_occupancy() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let classes = vec![DeviceClass::new(
+        DeviceId::NvidiaP100,
+        1,
+        device_policy(&manifest, DeviceId::NvidiaP100).unwrap(),
+    )];
+    let cfg = ServerConfig {
+        max_fuse: 8,
+        max_batch: 64,
+        batch_window: Duration::from_millis(300),
+        ..ServerConfig::default()
+    };
+    let server = GemmServer::start_fleet(&dir, classes, cfg).unwrap();
+    let handle = server.handle();
+    let (n_expired, n_live) = (4usize, 4usize);
+    let reqs: Vec<_> = (0..n_expired + n_live)
+        .map(|_| fill_request(100, 100, 100, 0.5))
+        .collect();
+    let mut expired_rx = Vec::new();
+    let mut live_rx = Vec::new();
+    for (i, r) in reqs.into_iter().enumerate() {
+        if i < n_expired {
+            // Already expired at submit: the window resolves strictly
+            // later, so expiry is deterministic.
+            match handle.try_submit_with_deadline(r, Instant::now()) {
+                Admission::Enqueued(rx) => expired_rx.push(rx),
+                other => panic!("empty queue must admit: {other:?}"),
+            }
+        } else {
+            match handle.try_submit(r) {
+                Admission::Enqueued(rx) => live_rx.push(rx),
+                other => panic!("empty queue must admit: {other:?}"),
+            }
+        }
+    }
+    for rx in expired_rx {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.outcome, RequestOutcome::Expired);
+        assert_eq!(
+            resp.fused_batch_size, 0,
+            "an expired envelope must never join a fused batch"
+        );
+        assert_eq!(resp.service, Duration::ZERO);
+    }
+    for rx in live_rx {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.outcome, RequestOutcome::Ok);
+        assert!(
+            resp.fused_batch_size <= n_live,
+            "expired envelopes inflated the fused batch to {}",
+            resp.fused_batch_size
+        );
+        assert!(resp.fused_batch_size >= 1);
+        resp.out.unwrap();
+    }
+    drop(handle);
+    let stats = server.shutdown().unwrap();
+    let dev = &stats.per_device["nvidia-p100"];
+    assert_eq!((dev.expired, dev.served), (n_expired, n_live));
+    // Occupancy covers the served requests only — expiries are not in
+    // the summary, the histogram, or the dispatch count.
+    assert_eq!(stats.occupancy.n, n_live);
+    assert_eq!(dev.occupancy.iter().sum::<u64>(), dev.dispatches);
+    assert!(dev.dispatches <= n_live as u64);
+}
+
+/// Regression: a fused dispatch whose execution errors answers *every*
+/// member with a typed per-request error — no dropped reply channels —
+/// and failed batches never enter the occupancy ledger.
+#[test]
+fn failed_fused_dispatch_answers_every_member_with_typed_errors() {
+    let Some(real) = artifacts_dir() else { return };
+    // A corrupt roster: the manifest parses (so the server starts), but
+    // every HLO artifact is truncated mid-file and fails to compile at
+    // first execution — the whole fused batch errors.
+    // Per-process path: concurrent test runs on one machine must not
+    // corrupt each other's roster mid-test.
+    let dir = std::env::temp_dir()
+        .join(format!("adaptlib-fusion-corrupt-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest_text = std::fs::read_to_string(real.join("manifest.json")).unwrap();
+    std::fs::write(dir.join("manifest.json"), &manifest_text).unwrap();
+    let m = Manifest::load(&real).unwrap();
+    for a in &m.artifacts {
+        let text = std::fs::read_to_string(m.hlo_path(a)).unwrap();
+        std::fs::write(dir.join(&a.file), &text[..text.len() / 3]).unwrap();
+    }
+    let cfg = ServerConfig {
+        max_fuse: 4,
+        max_batch: 64,
+        batch_window: Duration::from_millis(300),
+        ..ServerConfig::default()
+    };
+    let server =
+        GemmServer::start(&dir, Box::new(DefaultPolicy::clblast()), cfg).unwrap();
+    let handle = server.handle();
+    let n = 6usize;
+    let reqs: Vec<_> = (0..n).map(|_| fill_request(100, 100, 100, 1.0)).collect();
+    let pending: Vec<_> = reqs.into_iter().map(|r| handle.submit(r)).collect();
+    let mut fused_errors = 0usize;
+    for rx in pending {
+        let resp = rx.recv().expect(
+            "a failed fused dispatch must answer every member, not drop senders",
+        );
+        assert_eq!(resp.outcome, RequestOutcome::Error);
+        let err = resp.out.unwrap_err().to_string();
+        assert!(!err.is_empty());
+        if resp.fused_batch_size >= 2 {
+            fused_errors += 1;
+            assert!(
+                err.contains("fused batch of"),
+                "fused member error must carry batch identity: {err}"
+            );
+        }
+    }
+    assert!(
+        fused_errors >= 2,
+        "6 identical requests in one window must form a fused batch"
+    );
+    drop(handle);
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.errors(), n);
+    assert_eq!(stats.n_ok(), 0);
+    // Failed dispatches never enter the occupancy ledger.
+    assert_eq!(stats.occupancy.n, 0);
+    assert_eq!(stats.dispatches(), 0);
+}
+
+/// `max_fuse = 1` is the fusion-off spelling: every request dispatches
+/// alone (batch size 1 on every response), results unchanged.
+#[test]
+fn max_fuse_one_disables_fusion() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let classes = vec![DeviceClass::new(
+        DeviceId::NvidiaP100,
+        1,
+        device_policy(&manifest, DeviceId::NvidiaP100).unwrap(),
+    )];
+    let cfg = ServerConfig {
+        max_fuse: 1,
+        max_batch: 64,
+        batch_window: Duration::from_millis(200),
+        ..ServerConfig::default()
+    };
+    let server = GemmServer::start_fleet(&dir, classes, cfg).unwrap();
+    let handle = server.handle();
+    let mix = MixSpec::new(3).fills(&[0.25]).build(8);
+    let pending: Vec<_> = mix
+        .into_iter()
+        .map(|mr| (mr.expected_element(), handle.submit(mr.req)))
+        .collect();
+    for (expect, rx) in pending {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.outcome, RequestOutcome::Ok);
+        assert_eq!(resp.fused_batch_size, 1, "max_fuse=1 must not fuse");
+        let out = resp.out.unwrap();
+        assert!((out[0] - expect).abs() < 1e-2 * expect.abs().max(1.0));
+    }
+    drop(handle);
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.dispatches(), 8);
+    assert_eq!(stats.fused_requests(), 0);
+}

@@ -15,23 +15,16 @@ use adaptlib::coordinator::{
 use adaptlib::device::{sim, DeviceId, DeviceProfile};
 use adaptlib::experiments::hetero::device_policy;
 use adaptlib::runtime::Manifest;
+use adaptlib::testing::fill_request;
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     dir.join("manifest.json").exists().then_some(dir)
 }
 
+/// The shared deterministic fixture (`testing::fill_request`).
 fn req(m: usize, n: usize, k: usize) -> GemmRequest {
-    GemmRequest {
-        m,
-        n,
-        k,
-        a: vec![0.25; m * k],
-        b: vec![1.0; k * n],
-        c: vec![0.0; m * n],
-        alpha: 1.0,
-        beta: 0.0,
-    }
+    fill_request(m, n, k, 0.25)
 }
 
 fn p100_class(dir: &Path, shards: usize, capacity: usize) -> Vec<DeviceClass> {

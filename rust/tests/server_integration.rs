@@ -13,23 +13,17 @@ use adaptlib::dataset::{ClassTable, DatasetKind, LabeledDataset};
 use adaptlib::dtree::{MinSamples, OnlineTrainer, TrainParams};
 use adaptlib::experiments::e2e;
 use adaptlib::runtime::{host_gemm, GemmInput, PjrtBackend};
+use adaptlib::testing::{fill_request, MixSpec};
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     dir.join("manifest.json").exists().then_some(dir)
 }
 
+/// The shared deterministic fixture (`testing::fill_request`): a = fill,
+/// b = ones, c = zero, so every served element equals `fill * k`.
 fn req(m: usize, n: usize, k: usize, fill: f32) -> GemmRequest {
-    GemmRequest {
-        m,
-        n,
-        k,
-        a: vec![fill; m * k],
-        b: vec![1.0; k * n],
-        c: vec![0.0; m * n],
-        alpha: 1.0,
-        beta: 0.0,
-    }
+    fill_request(m, n, k, fill)
 }
 
 #[test]
@@ -64,23 +58,39 @@ fn server_batches_mixed_shapes() {
         GemmServer::start(&dir, Box::new(policy), ServerConfig::default()).unwrap();
     let handle = server.handle();
 
-    // Burst of mixed-shape requests: exercises the artifact-grouping
-    // batcher, in-bucket padding, and per-request reply routing.
-    let shapes = [(64, 64, 64), (100, 100, 100), (128, 128, 128), (31, 31, 31)];
+    // Burst of mixed-shape requests from the shared seeded mix builder:
+    // exercises the artifact-grouping batcher, fusion grouping,
+    // in-bucket padding, and per-request reply routing.
+    let mix = MixSpec::new(0x5EED).build(24);
     let mut pending = Vec::new();
-    for (i, &(m, n, k)) in shapes.iter().cycle().take(24).enumerate() {
-        pending.push((i, m, n, k, handle.submit(req(m, n, k, 1.0))));
+    for mr in mix {
+        let expect = mr.expected_element();
+        let (m, k) = (mr.req.m, mr.req.k);
+        pending.push((m, k, expect, handle.submit(mr.req)));
     }
-    for (_, m, _, k, rx) in pending {
+    for (m, k, expect, rx) in pending {
         let resp = rx.recv().unwrap();
+        // Fusion threads batch identity end to end: a served response
+        // always reports the dispatch it was part of.
+        assert!(resp.fused_batch_size >= 1, "served response without a batch");
         let out = resp.out.unwrap();
-        // all-ones GEMM: every element = k
-        assert!((out[0] - k as f32).abs() < 1e-2, "m={m} k={k}: {}", out[0]);
+        assert!((out[0] - expect).abs() < 1e-2, "m={m} k={k}: {}", out[0]);
     }
     drop(handle);
     let stats = server.shutdown().unwrap();
     assert_eq!(stats.n_requests, 24);
     assert!(stats.per_artifact.len() >= 2, "batcher saw multiple artifacts");
+    // Every served request is accounted to exactly one dispatch: the
+    // occupancy summary covers all 24, and the per-device histogram
+    // bucket counts sum to the dispatch count.
+    assert_eq!(stats.occupancy.n, 24);
+    let host = &stats.per_device["host-cpu"];
+    assert!(host.dispatches >= 1 && host.dispatches <= 24);
+    assert_eq!(
+        host.occupancy.iter().sum::<u64>(),
+        host.dispatches,
+        "histogram must cover every dispatch"
+    );
 }
 
 #[test]
