@@ -4,7 +4,7 @@
 ARTIFACTS := rust/artifacts
 ROSTER    := full
 
-.PHONY: artifacts test bench drift hetero overload baseline clean-artifacts
+.PHONY: artifacts test bench drift hetero overload chaos baseline clean-artifacts
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../$(ARTIFACTS) --roster $(ROSTER)
@@ -25,14 +25,17 @@ hetero:
 overload:
 	cd rust && cargo run --release --bin adaptd -- overload --requests 120 --capacity 24 --load 1,2,4 --reps 1
 
+chaos:
+	cd rust && cargo run --release --bin adaptd -- chaos --requests 24 --waves 2
+
 # Refresh the committed bench-gate baseline from a fresh full run on the
 # reference machine, then remove the "provisional" marker by hand (see
-# README.md) to arm the CI regression gate.  The hetero accuracy floors
-# and the overload p99 floor are refreshed from fresh
-# BENCH_hetero.json / BENCH_overload.json files when they exist,
-# otherwise carried over from the old baseline — a raw copy of the
-# hotpath JSON would drop them and hard-fail those gates (no comparable
-# metrics).
+# README.md) to arm the CI regression gate.  The hetero accuracy floors,
+# the overload p99 floor, and the chaos availability floor are refreshed
+# from fresh BENCH_hetero.json / BENCH_overload.json / BENCH_chaos.json
+# files when they exist, otherwise carried over from the old baseline —
+# a raw copy of the hotpath JSON would drop them and hard-fail those
+# gates (no comparable metrics).
 baseline:
 	cd rust && cargo bench --bench hotpath
 	python3 -c "import json, os; \
@@ -40,13 +43,16 @@ new = json.load(open('rust/BENCH_hotpath.json')); \
 old = json.load(open('rust/BENCH_baseline.json')) if os.path.exists('rust/BENCH_baseline.json') else {}; \
 het = json.load(open('rust/BENCH_hetero.json')) if os.path.exists('rust/BENCH_hetero.json') else {}; \
 ov = json.load(open('rust/BENCH_overload.json')) if os.path.exists('rust/BENCH_overload.json') else {}; \
+ch = json.load(open('rust/BENCH_chaos.json')) if os.path.exists('rust/BENCH_chaos.json') else {}; \
 floors = {d['device']: d['accuracy'] for d in (old.get('hetero') or {}).get('devices', [])}; \
 floors.update({d['device']: d['accuracy'] for d in het.get('devices', []) if d.get('accuracy') is not None}); \
 floors and new.update(hetero={'devices': [{'device': k, 'accuracy': v} for k, v in sorted(floors.items())]}); \
 p99 = ov.get('p99_1x_ms') or (old.get('overload') or {}).get('p99_1x_ms'); \
 p99 and new.update(overload={'p99_1x_ms': p99}); \
+avail = ch.get('chaos_availability_min') or (old.get('chaos') or {}).get('availability_floor'); \
+avail and new.update(chaos={'availability_floor': min(avail, 0.99)}); \
 json.dump(new, open('rust/BENCH_baseline.json', 'w'), separators=(',', ':'))"
-	@echo "BENCH_baseline.json refreshed (hetero + overload floors carried over) — delete the 'provisional' key if present"
+	@echo "BENCH_baseline.json refreshed (hetero + overload + chaos floors carried over) — delete the 'provisional' key if present"
 
 clean-artifacts:
 	rm -rf $(ARTIFACTS)

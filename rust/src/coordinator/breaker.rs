@@ -1,0 +1,507 @@
+//! Lock-free per-device-class circuit breaker.
+//!
+//! The fleet assumes every engine is healthy forever; one flaky device
+//! would otherwise fail every request routed to it.  The breaker turns
+//! execute-time failures into routing state:
+//!
+//! ```text
+//!            consecutive failures >= N, or
+//!            window error rate >= R (>= min observations)
+//!   Closed ────────────────────────────────────────────► Open
+//!     ▲                                                   │
+//!     │  probe successes >= S         cooldown elapsed    │
+//!     │                                                   ▼
+//!     └──────────────────────── HalfOpen ◄────────────────┘
+//!                                   │  any probe failure
+//!                                   └─────────────► Open (again)
+//! ```
+//!
+//! `Open` classes are skipped by the router like full classes; after
+//! `cooldown` the first admission attempt flips the breaker to
+//! `HalfOpen`, which admits at most `probe_budget` concurrent *probe*
+//! requests — their outcomes (and only theirs) decide between re-opening
+//! and closing.
+//!
+//! Lock-freedom: `(state, generation)` live packed in one `AtomicU64`
+//! (`generation << 2 | state`), so racing shards can never observe a
+//! torn pair, and every transition is a CAS that bumps the generation —
+//! the monotonic generation counter the property tests pin down.
+//! Counters (consecutive failures, rolling window, probe tokens) are
+//! plain atomics whose races can at worst lose a count, never corrupt
+//! the state machine.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Breaker thresholds.  `PartialEq` only (carries an `f64` rate).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BreakerConfig {
+    /// `false` short-circuits everything: `admit` always serves,
+    /// records are no-ops, the state never leaves `Closed`.
+    pub enabled: bool,
+    /// Trip after this many consecutive non-probe failures.
+    pub consecutive_failures: u32,
+    /// Rolling observation window size (resets when full).
+    pub window: u32,
+    /// Trip when the window error rate reaches this, once
+    /// `min_observations` have accumulated.
+    pub error_rate: f64,
+    /// Minimum window observations before the rate rule can trip.
+    pub min_observations: u32,
+    /// How long `Open` rejects before the first `HalfOpen` probe.
+    pub cooldown: Duration,
+    /// Maximum concurrent probes `HalfOpen` admits.
+    pub probe_budget: u32,
+    /// Probe successes required to close again.
+    pub probe_successes: u32,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> BreakerConfig {
+        BreakerConfig {
+            enabled: true,
+            consecutive_failures: 8,
+            window: 64,
+            error_rate: 0.6,
+            min_observations: 16,
+            cooldown: Duration::from_millis(250),
+            probe_budget: 3,
+            probe_successes: 2,
+        }
+    }
+}
+
+impl BreakerConfig {
+    /// A breaker that never trips.
+    pub fn disabled() -> BreakerConfig {
+        BreakerConfig { enabled: false, ..BreakerConfig::default() }
+    }
+
+    /// Fast-tripping preset for chaos runs and tests: quarantine within
+    /// a handful of failures, probe again after 50ms.
+    pub fn sensitive() -> BreakerConfig {
+        BreakerConfig {
+            enabled: true,
+            consecutive_failures: 4,
+            window: 16,
+            error_rate: 0.5,
+            min_observations: 8,
+            cooldown: Duration::from_millis(50),
+            probe_budget: 2,
+            probe_successes: 2,
+        }
+    }
+
+    fn validated(mut self) -> BreakerConfig {
+        self.consecutive_failures = self.consecutive_failures.max(1);
+        self.window = self.window.max(1);
+        self.min_observations = self.min_observations.max(1);
+        self.probe_budget = self.probe_budget.max(1);
+        self.probe_successes = self.probe_successes.max(1);
+        self.error_rate = self.error_rate.clamp(f64::EPSILON, 1.0);
+        self
+    }
+}
+
+/// Observable breaker state (unpacked).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+/// What `admit` decided for one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerAdmit {
+    /// Healthy: serve normally.
+    Serve,
+    /// HalfOpen trial: serve, and report the outcome via
+    /// [`CircuitBreaker::record_probe`] (or
+    /// [`CircuitBreaker::release_probe`] if the request never reaches
+    /// the engine).
+    Probe,
+    /// Open (or probe budget exhausted): do not serve.
+    Reject,
+}
+
+const ST_CLOSED: u64 = 0;
+const ST_OPEN: u64 = 1;
+const ST_HALF: u64 = 2;
+
+fn pack(state: u64, generation: u64) -> u64 {
+    (generation << 2) | state
+}
+
+fn unpack(packed: u64) -> (u64, u64) {
+    (packed & 3, packed >> 2)
+}
+
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    /// `(generation << 2) | state` — single-word, never torn.
+    packed: AtomicU64,
+    /// Reference instant for the monotonic nanosecond clock below.
+    t0: Instant,
+    /// `t0`-relative open timestamp (ns), stamped on every trip.
+    opened_at_ns: AtomicU64,
+    consecutive: AtomicU32,
+    window_total: AtomicU32,
+    window_errors: AtomicU32,
+    /// Concurrent probe tokens out (admit increments, record/release
+    /// decrements — strictly paired, never reset, so a stale token can
+    /// only under-admit, never underflow).
+    probes_in_flight: AtomicU32,
+    /// `(generation << 16) | successes` — probe successes stamped with
+    /// the HalfOpen generation they were earned in, so a fresh HalfOpen
+    /// never inherits stale credit.
+    probe_ok: AtomicU64,
+    opens: AtomicU64,
+    half_opens: AtomicU64,
+    closes: AtomicU64,
+}
+
+impl CircuitBreaker {
+    pub fn new(cfg: BreakerConfig) -> CircuitBreaker {
+        CircuitBreaker {
+            cfg: cfg.validated(),
+            packed: AtomicU64::new(pack(ST_CLOSED, 0)),
+            t0: Instant::now(),
+            opened_at_ns: AtomicU64::new(0),
+            consecutive: AtomicU32::new(0),
+            window_total: AtomicU32::new(0),
+            window_errors: AtomicU32::new(0),
+            probes_in_flight: AtomicU32::new(0),
+            probe_ok: AtomicU64::new(0),
+            opens: AtomicU64::new(0),
+            half_opens: AtomicU64::new(0),
+            closes: AtomicU64::new(0),
+        }
+    }
+
+    pub fn config(&self) -> &BreakerConfig {
+        &self.cfg
+    }
+
+    pub fn state(&self) -> BreakerState {
+        match unpack(self.packed.load(Ordering::Acquire)).0 {
+            ST_OPEN => BreakerState::Open,
+            ST_HALF => BreakerState::HalfOpen,
+            _ => BreakerState::Closed,
+        }
+    }
+
+    /// Monotonic transition counter (bumps on every state change).
+    pub fn generation(&self) -> u64 {
+        unpack(self.packed.load(Ordering::Acquire)).1
+    }
+
+    pub fn opens(&self) -> u64 {
+        self.opens.load(Ordering::Relaxed)
+    }
+
+    pub fn half_opens(&self) -> u64 {
+        self.half_opens.load(Ordering::Relaxed)
+    }
+
+    pub fn closes(&self) -> u64 {
+        self.closes.load(Ordering::Relaxed)
+    }
+
+    fn now_ns(&self) -> u64 {
+        self.t0.elapsed().as_nanos() as u64
+    }
+
+    /// CAS `from_packed -> (to_state, generation + 1)`.
+    fn transition(&self, from_packed: u64, to_state: u64) -> bool {
+        let (_, generation) = unpack(from_packed);
+        self.packed
+            .compare_exchange(
+                from_packed,
+                pack(to_state, generation + 1),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            )
+            .is_ok()
+    }
+
+    /// Gate one admission.  `Probe` results must be settled with exactly
+    /// one of `record_probe` / `release_probe`.
+    pub fn admit(&self) -> BreakerAdmit {
+        if !self.cfg.enabled {
+            return BreakerAdmit::Serve;
+        }
+        loop {
+            let p = self.packed.load(Ordering::Acquire);
+            match unpack(p).0 {
+                ST_CLOSED => return BreakerAdmit::Serve,
+                ST_OPEN => {
+                    let since = self.now_ns().saturating_sub(self.opened_at_ns.load(Ordering::Acquire));
+                    if since < self.cfg.cooldown.as_nanos() as u64 {
+                        return BreakerAdmit::Reject;
+                    }
+                    if self.transition(p, ST_HALF) {
+                        self.half_opens.fetch_add(1, Ordering::Relaxed);
+                    }
+                    // Either way, re-read: someone is in HalfOpen now.
+                }
+                _ => {
+                    // HalfOpen: take a probe token, then re-check the
+                    // state didn't move while we grabbed it.
+                    let held = self.probes_in_flight.fetch_add(1, Ordering::AcqRel);
+                    if held >= self.cfg.probe_budget {
+                        self.probes_in_flight.fetch_sub(1, Ordering::AcqRel);
+                        return BreakerAdmit::Reject;
+                    }
+                    if self.packed.load(Ordering::Acquire) != p {
+                        self.probes_in_flight.fetch_sub(1, Ordering::AcqRel);
+                        continue;
+                    }
+                    return BreakerAdmit::Probe;
+                }
+            }
+        }
+    }
+
+    /// Advisory (router-side): would `admit` reject right now?  Does not
+    /// take tokens or transition; `Open` past its cooldown counts as
+    /// admittable so the router still offers the class a probe.
+    pub fn would_reject(&self) -> bool {
+        if !self.cfg.enabled {
+            return false;
+        }
+        let p = self.packed.load(Ordering::Acquire);
+        match unpack(p).0 {
+            ST_CLOSED => false,
+            ST_OPEN => {
+                let since = self.now_ns().saturating_sub(self.opened_at_ns.load(Ordering::Acquire));
+                since < self.cfg.cooldown.as_nanos() as u64
+            }
+            _ => self.probes_in_flight.load(Ordering::Acquire) >= self.cfg.probe_budget,
+        }
+    }
+
+    /// Fully closed and healthy — the bar a failover *target* must meet.
+    pub fn is_closed(&self) -> bool {
+        !self.cfg.enabled || unpack(self.packed.load(Ordering::Acquire)).0 == ST_CLOSED
+    }
+
+    /// One non-probe request served successfully.
+    pub fn record_success(&self) {
+        if !self.cfg.enabled {
+            return;
+        }
+        if unpack(self.packed.load(Ordering::Acquire)).0 == ST_CLOSED {
+            self.consecutive.store(0, Ordering::Relaxed);
+            self.note_window(false);
+        }
+    }
+
+    /// One non-probe failure (one mark per failed *dispatch*, not per
+    /// fused member — a single poisoned batch must not trip the
+    /// consecutive-failure rule on its own).
+    pub fn record_failure(&self) {
+        if !self.cfg.enabled {
+            return;
+        }
+        if unpack(self.packed.load(Ordering::Acquire)).0 != ST_CLOSED {
+            // Open/HalfOpen: probes own the verdict.
+            return;
+        }
+        let consecutive = self.consecutive.fetch_add(1, Ordering::AcqRel) + 1;
+        let rate_tripped = self.note_window(true);
+        if consecutive >= self.cfg.consecutive_failures || rate_tripped {
+            self.trip_open();
+        }
+    }
+
+    /// Settle a probe token with its outcome.
+    pub fn record_probe(&self, success: bool) {
+        if !self.cfg.enabled {
+            return;
+        }
+        self.probes_in_flight.fetch_sub(1, Ordering::AcqRel);
+        let p = self.packed.load(Ordering::Acquire);
+        let (state, generation) = unpack(p);
+        if success {
+            if state != ST_HALF {
+                return; // stale probe from a previous HalfOpen
+            }
+            if self.bump_probe_ok(generation) >= self.cfg.probe_successes
+                && self.transition(p, ST_CLOSED)
+            {
+                self.consecutive.store(0, Ordering::Relaxed);
+                self.window_total.store(0, Ordering::Relaxed);
+                self.window_errors.store(0, Ordering::Relaxed);
+                self.closes.fetch_add(1, Ordering::Relaxed);
+            }
+        } else if state == ST_HALF && self.transition(p, ST_OPEN) {
+            self.opened_at_ns.store(self.now_ns(), Ordering::Release);
+            self.opens.fetch_add(1, Ordering::Relaxed);
+        } else if state == ST_CLOSED {
+            // Breaker closed while this probe was in flight; count the
+            // failure like any other.
+            self.record_failure();
+        }
+    }
+
+    /// Return an unused probe token (the request expired/drained before
+    /// reaching the engine — no health verdict either way).
+    pub fn release_probe(&self) {
+        if self.cfg.enabled {
+            self.probes_in_flight.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+
+    /// Generation-stamped probe-success bump; returns the count for the
+    /// current generation.
+    fn bump_probe_ok(&self, generation: u64) -> u32 {
+        loop {
+            let cur = self.probe_ok.load(Ordering::Acquire);
+            let (cur_gen, cur_n) = (cur >> 16, (cur & 0xFFFF) as u32);
+            let next_n = if cur_gen == generation { cur_n.saturating_add(1) } else { 1 };
+            let next = (generation << 16) | next_n as u64;
+            if self
+                .probe_ok
+                .compare_exchange(cur, next, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return next_n;
+            }
+        }
+    }
+
+    /// Rolling-window bookkeeping; returns whether the rate rule trips.
+    fn note_window(&self, error: bool) -> bool {
+        let total = self.window_total.fetch_add(1, Ordering::AcqRel) + 1;
+        let errors = if error {
+            self.window_errors.fetch_add(1, Ordering::AcqRel) + 1
+        } else {
+            self.window_errors.load(Ordering::Acquire)
+        };
+        let tripped = error
+            && total >= self.cfg.min_observations
+            && errors as f64 / total as f64 >= self.cfg.error_rate;
+        if total >= self.cfg.window {
+            // Racing resets can drop a few observations; the state
+            // machine itself is unaffected.
+            self.window_total.store(0, Ordering::Relaxed);
+            self.window_errors.store(0, Ordering::Relaxed);
+        }
+        tripped
+    }
+
+    fn trip_open(&self) {
+        loop {
+            let p = self.packed.load(Ordering::Acquire);
+            if unpack(p).0 != ST_CLOSED {
+                return;
+            }
+            if self.transition(p, ST_OPEN) {
+                self.opened_at_ns.store(self.now_ns(), Ordering::Release);
+                self.opens.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> BreakerConfig {
+        BreakerConfig {
+            cooldown: Duration::from_millis(1),
+            ..BreakerConfig::sensitive()
+        }
+    }
+
+    #[test]
+    fn consecutive_failures_trip_and_probes_close() {
+        let b = CircuitBreaker::new(fast());
+        assert_eq!(b.state(), BreakerState::Closed);
+        for _ in 0..4 {
+            assert_eq!(b.admit(), BreakerAdmit::Serve);
+            b.record_failure();
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.opens(), 1);
+        assert_eq!(b.admit(), BreakerAdmit::Reject);
+
+        std::thread::sleep(Duration::from_millis(2));
+        assert_eq!(b.admit(), BreakerAdmit::Probe);
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        b.record_probe(true);
+        assert_eq!(b.admit(), BreakerAdmit::Probe);
+        b.record_probe(true);
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.closes(), 1);
+        assert_eq!(b.admit(), BreakerAdmit::Serve);
+    }
+
+    #[test]
+    fn probe_failure_reopens_and_success_resets_consecutive() {
+        let b = CircuitBreaker::new(fast());
+        for _ in 0..3 {
+            b.record_failure();
+        }
+        b.record_success(); // resets the consecutive run
+        for _ in 0..3 {
+            b.record_failure();
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+
+        std::thread::sleep(Duration::from_millis(2));
+        assert_eq!(b.admit(), BreakerAdmit::Probe);
+        b.record_probe(false);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.opens(), 2);
+    }
+
+    #[test]
+    fn half_open_caps_concurrent_probes() {
+        let b = CircuitBreaker::new(fast());
+        for _ in 0..4 {
+            b.record_failure();
+        }
+        std::thread::sleep(Duration::from_millis(2));
+        assert_eq!(b.admit(), BreakerAdmit::Probe);
+        assert_eq!(b.admit(), BreakerAdmit::Probe); // budget 2
+        assert_eq!(b.admit(), BreakerAdmit::Reject);
+        b.release_probe();
+        assert_eq!(b.admit(), BreakerAdmit::Probe);
+    }
+
+    #[test]
+    fn rate_rule_trips_with_interleaved_successes() {
+        let cfg = BreakerConfig {
+            consecutive_failures: 1000, // isolate the rate rule
+            window: 16,
+            error_rate: 0.5,
+            min_observations: 8,
+            ..fast()
+        };
+        let b = CircuitBreaker::new(cfg);
+        for _ in 0..4 {
+            b.record_success();
+            b.record_failure();
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+    }
+
+    #[test]
+    fn disabled_breaker_never_leaves_closed() {
+        let b = CircuitBreaker::new(BreakerConfig::disabled());
+        for _ in 0..100 {
+            b.record_failure();
+        }
+        assert_eq!(b.admit(), BreakerAdmit::Serve);
+        assert!(!b.would_reject());
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.generation(), 0);
+    }
+}

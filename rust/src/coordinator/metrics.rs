@@ -25,6 +25,11 @@ pub enum RequestOutcome {
     Expired,
     /// Answered with a shutdown error during graceful drain.
     Drained,
+    /// Refused because every candidate class's circuit breaker was open
+    /// — the fleet was quarantined, not merely full.  Synthesized on the
+    /// submit path like sheds, so it normally appears in responses and
+    /// admission counters rather than in shard records.
+    Quarantined,
 }
 
 /// One completed (answered) request's measurements.
@@ -105,6 +110,24 @@ pub struct DeviceStats {
     /// Dispatch counts by fused-batch-size bucket
     /// ([`OCCUPANCY_BUCKET_LABELS`]): the per-device occupancy histogram.
     pub occupancy: [u64; OCCUPANCY_BUCKETS],
+    /// Requests refused at admission because every candidate class's
+    /// breaker was open (counted like sheds — they never entered a
+    /// queue).
+    pub quarantined: u64,
+    /// Execute-failure re-executions consumed (individual retries of
+    /// fused members + failover hops).
+    pub retries: u64,
+    /// Envelopes this class handed to a sibling after failing them.
+    pub failovers: u64,
+    /// Shadow executions that errored — a separate ledger; these never
+    /// feed the breaker or the telemetry ring.
+    pub shadow_errors: u64,
+    /// Circuit-breaker transitions: Closed/HalfOpen → Open trips.
+    pub breaker_opens: u64,
+    /// Circuit-breaker transitions: Open → HalfOpen (probe window).
+    pub breaker_half_opens: u64,
+    /// Circuit-breaker transitions: HalfOpen → Closed (recovery).
+    pub breaker_closes: u64,
 }
 
 impl DeviceStats {
@@ -183,6 +206,7 @@ impl ServeStats {
                 RequestOutcome::Error => dev.errors += 1,
                 RequestOutcome::Expired => dev.expired += 1,
                 RequestOutcome::Drained => dev.drained += 1,
+                RequestOutcome::Quarantined => dev.quarantined += 1,
             }
         }
         let summary = |xs: &[f64]| {
@@ -246,6 +270,29 @@ impl ServeStats {
         }
     }
 
+    /// Merge one device class's failure-domain counters (quarantine
+    /// refusals, retry/failover re-executions, the shadow-error ledger
+    /// and the breaker's lifetime transition counts
+    /// `[opens, half_opens, closes]`).
+    pub fn record_resilience(
+        &mut self,
+        device: DeviceId,
+        quarantined: u64,
+        retries: u64,
+        failovers: u64,
+        shadow_errors: u64,
+        breaker: [u64; 3],
+    ) {
+        let dev = self.per_device.entry(device.name().to_string()).or_default();
+        dev.quarantined += quarantined;
+        dev.retries += retries;
+        dev.failovers += failovers;
+        dev.shadow_errors += shadow_errors;
+        dev.breaker_opens += breaker[0];
+        dev.breaker_half_opens += breaker[1];
+        dev.breaker_closes += breaker[2];
+    }
+
     /// Fused dispatches across every device (size-1 batches included).
     pub fn dispatches(&self) -> u64 {
         self.per_device.values().map(|d| d.dispatches).sum()
@@ -291,6 +338,36 @@ impl ServeStats {
         self.per_device.values().map(|d| d.pressure_picks).sum()
     }
 
+    /// Breaker-quarantine admission refusals across every device.
+    pub fn quarantined(&self) -> u64 {
+        self.per_device.values().map(|d| d.quarantined).sum()
+    }
+
+    /// Retry re-executions across every device.
+    pub fn retries(&self) -> u64 {
+        self.per_device.values().map(|d| d.retries).sum()
+    }
+
+    /// Failover hops across every device.
+    pub fn failovers(&self) -> u64 {
+        self.per_device.values().map(|d| d.failovers).sum()
+    }
+
+    /// Shadow-execution errors across every device (separate ledger).
+    pub fn shadow_errors(&self) -> u64 {
+        self.per_device.values().map(|d| d.shadow_errors).sum()
+    }
+
+    /// Breaker trips (→ Open) across every device.
+    pub fn breaker_opens(&self) -> u64 {
+        self.per_device.values().map(|d| d.breaker_opens).sum()
+    }
+
+    /// Breaker recoveries (→ Closed) across every device.
+    pub fn breaker_closes(&self) -> u64 {
+        self.per_device.values().map(|d| d.breaker_closes).sum()
+    }
+
     /// Highest per-class peak queue depth observed.
     pub fn peak_depth(&self) -> usize {
         self.per_device.values().map(|d| d.peak_depth).max().unwrap_or(0)
@@ -329,6 +406,22 @@ impl ServeStats {
                 self.n_ok(),
                 self.pressure_picks(),
                 self.peak_depth(),
+            ));
+        }
+        let (quarantined, retries, failovers, shadow_errors) = (
+            self.quarantined(),
+            self.retries(),
+            self.failovers(),
+            self.shadow_errors(),
+        );
+        if quarantined + retries + failovers + shadow_errors + self.breaker_opens() > 0
+        {
+            s.push_str(&format!(
+                "resilience: quarantined {quarantined}  retries {retries}  \
+                 failovers {failovers}  shadow-errors {shadow_errors}  \
+                 breaker opens {} / closes {}\n",
+                self.breaker_opens(),
+                self.breaker_closes(),
             ));
         }
         let dispatches = self.dispatches();
@@ -524,6 +617,32 @@ mod tests {
         let report = stats.report();
         assert!(report.contains("fusion: 2 dispatches"), "{report}");
         assert!(report.contains("mean occupancy 1.67"), "{report}");
+    }
+
+    #[test]
+    fn resilience_counters_merge_per_device() {
+        let mut stats = ServeStats::from_records(&[rec("a", 0, 1)], Duration::from_secs(1));
+        stats.record_resilience(DeviceId::HostCpu, 3, 5, 2, 1, [1, 1, 1]);
+        // A quarantined-only device (served nothing) still appears.
+        stats.record_resilience(DeviceId::NvidiaP100, 4, 0, 0, 0, [2, 0, 0]);
+        assert_eq!(stats.quarantined(), 7);
+        assert_eq!(stats.retries(), 5);
+        assert_eq!(stats.failovers(), 2);
+        assert_eq!(stats.shadow_errors(), 1);
+        assert_eq!(stats.breaker_opens(), 3);
+        assert_eq!(stats.breaker_closes(), 1);
+        assert_eq!(stats.per_device["nvidia-p100"].quarantined, 4);
+        let report = stats.report();
+        assert!(report.contains("quarantined 7"), "{report}");
+        assert!(report.contains("failovers 2"), "{report}");
+        // A quarantined record outcome aggregates without panicking.
+        let mut records = vec![rec("a", 0, 1)];
+        records.push(RequestRecord {
+            outcome: RequestOutcome::Quarantined,
+            ..rec_outcome(0, RequestOutcome::Error)
+        });
+        let stats = ServeStats::from_records(&records, Duration::from_secs(1));
+        assert_eq!(stats.per_device["host-cpu"].quarantined, 1);
     }
 
     #[test]

@@ -7,9 +7,12 @@
 //! threading topology.
 
 pub mod adapt;
+pub mod breaker;
 pub mod metrics;
 pub mod policy;
 pub mod server;
+
+pub use breaker::{BreakerAdmit, BreakerConfig, BreakerState, CircuitBreaker};
 
 pub use adapt::{
     adapt_step, await_taps, AdaptStats, AdaptationLoop, StepOutcome, TelemetryRecord,

@@ -55,6 +55,22 @@
 //! * **Graceful drain** — [`GemmServer::shutdown_now`] answers every
 //!   still-queued envelope with a typed shutdown error instead of
 //!   silently dropping reply channels.
+//!
+//! Failure domains (see ARCHITECTURE.md): every device class carries a
+//! lock-free [`CircuitBreaker`].  Execute-time failures feed it (one
+//! mark per failed *dispatch*); once it trips, the router treats the
+//! `Open` class like a full one and admission answers with a typed
+//! [`Admission::Quarantined`] when no servable sibling exists.  After
+//! the cooldown, `HalfOpen` admits a budgeted handful of *probe*
+//! requests whose outcomes alone decide between re-opening and closing.
+//! A transient execute failure is retried: fused members re-execute
+//! individually on the same engine first (one poisoned batch member
+//! can't fail the whole batch twice), then the envelope *fails over* to
+//! the modeled-cheapest healthy sibling class — bounded by
+//! [`ServerConfig::retry_budget`] and only when the remaining deadline
+//! affords the sibling's modeled service time.  Retried/failed-over
+//! requests are stamped on [`GemmResponse`] and excluded from the
+//! telemetry tap, so injected faults never poison the trainer.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -66,10 +82,11 @@ use anyhow::{anyhow, ensure, Result};
 
 use crate::config::Triple;
 use crate::device::{sim, DeviceId, DeviceProfile};
-use crate::engine::{EngineSpec, ExecutionEngine};
-use crate::runtime::{ArtifactId, BatchScratch, GemmInput, ScratchBuffers};
+use crate::engine::{EngineSpec, ExecutionEngine, FaultInjector, FaultPlan};
+use crate::runtime::{ArtifactId, BatchScratch, GemmInput, Manifest, ScratchBuffers};
 
 use super::adapt::{TelemetryRecord, TelemetryRing};
+use super::breaker::{BreakerAdmit, BreakerConfig, CircuitBreaker};
 use super::metrics::{
     occupancy_bucket, RequestOutcome, RequestRecord, ServeStats, OCCUPANCY_BUCKETS,
 };
@@ -150,9 +167,11 @@ pub struct GemmResponse {
     /// worker from its pinned class).
     pub device: DeviceId,
     /// Device class the router chose at submit time (stamped by the
-    /// handle).  Always equals `device` — the two independent stamps
-    /// exist so routing bugs are detectable, and the router property
-    /// test pins them equal under racing submitters.
+    /// handle).  Equals `device` unless the request *failed over* to a
+    /// sibling class mid-serve (`failover` is set) — the two independent
+    /// stamps exist so routing bugs are detectable, and the router
+    /// property test pins them equal under racing submitters in a
+    /// healthy fleet.
     pub routed: DeviceId,
     /// Serving shard (fleet-global index; `usize::MAX` for responses
     /// synthesized on the submit path, which never reached a shard).
@@ -169,6 +188,14 @@ pub struct GemmResponse {
     /// before execution).  On an errored fused dispatch every member
     /// reports the batch size it died in.
     pub fused_batch_size: usize,
+    /// Execute-time retries this request consumed (same-engine
+    /// individual re-executions of fused members plus cross-class
+    /// failover hops).  0 on the fast path.
+    pub retries: u32,
+    /// The request was answered by a different device class than the
+    /// router chose (`device != routed`): a sibling served it after its
+    /// original class failed.
+    pub failover: bool,
 }
 
 /// Outcome of a non-blocking submission attempt.
@@ -189,6 +216,10 @@ pub enum Admission {
     /// Malformed request (dimension overflow / operand length mismatch);
     /// never admitted, never counted as shed.
     Rejected { reason: String },
+    /// Refused because every candidate class's circuit breaker is open
+    /// (the fleet is quarantined, not merely full).  `device` is the
+    /// class a retry-after-cooldown would probe first.
+    Quarantined { req: GemmRequest, device: DeviceId },
 }
 
 /// Server tuning knobs.
@@ -229,6 +260,15 @@ pub struct ServerConfig {
     /// stands unless it is more than this factor slower than the
     /// modeled-cheapest servable artifact (values below 1.0 clamp up).
     pub pressure_slowdown: f64,
+    /// Execute-failure retry budget per request: how many re-executions
+    /// (same-engine individual retries of fused members + cross-class
+    /// failover hops, combined) one envelope may consume.  0 disables
+    /// retry/failover — a failed dispatch answers with the error
+    /// directly.
+    pub retry_budget: u32,
+    /// Per-device-class circuit-breaker thresholds (overridable per
+    /// class via [`DeviceClass::with_breaker`]).
+    pub breaker: BreakerConfig,
 }
 
 impl Default for ServerConfig {
@@ -244,6 +284,8 @@ impl Default for ServerConfig {
             queue_capacity: 1024,
             pressure_threshold: Duration::MAX,
             pressure_slowdown: 1.25,
+            retry_budget: 2,
+            breaker: BreakerConfig::default(),
         }
     }
 }
@@ -304,16 +346,42 @@ pub struct DeviceClass {
     /// Per-class queue bound override (falls back to
     /// [`ServerConfig::queue_capacity`] when `None`).
     pub queue_capacity: Option<usize>,
+    /// Deterministic fault script injected between this class's shards
+    /// and their engines ([`FaultInjector`]) — chaos experiments and
+    /// failure tests; `None` (the default) serves faithfully.
+    pub fault_plan: Option<FaultPlan>,
+    /// Per-class breaker override (falls back to
+    /// [`ServerConfig::breaker`] when `None`).
+    pub breaker: Option<BreakerConfig>,
 }
 
 impl DeviceClass {
     pub fn new(device: DeviceId, shards: usize, policy: Box<dyn SelectPolicy>) -> DeviceClass {
-        DeviceClass { device, shards, policy, queue_capacity: None }
+        DeviceClass {
+            device,
+            shards,
+            policy,
+            queue_capacity: None,
+            fault_plan: None,
+            breaker: None,
+        }
     }
 
     /// Override the class's queue bound (validated at fleet start).
     pub fn with_queue_capacity(mut self, capacity: usize) -> DeviceClass {
         self.queue_capacity = Some(capacity);
+        self
+    }
+
+    /// Inject a fault plan into this class's engines.
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> DeviceClass {
+        self.fault_plan = Some(plan);
+        self
+    }
+
+    /// Override this class's breaker thresholds.
+    pub fn with_breaker(mut self, breaker: BreakerConfig) -> DeviceClass {
+        self.breaker = Some(breaker);
         self
     }
 }
@@ -351,6 +419,18 @@ struct ClassCounters {
     /// Dispatches by fused-batch-size bucket — the per-device occupancy
     /// histogram ([`occupancy_bucket`]).
     occupancy: [AtomicU64; OCCUPANCY_BUCKETS],
+    /// Typed quarantine refusals on the submit path (breaker open, no
+    /// servable sibling).
+    quarantined: AtomicU64,
+    /// Execute-failure re-executions consumed (individual retries of
+    /// fused members + failover hops).
+    retries: AtomicU64,
+    /// Envelopes handed to a sibling class after this class failed them.
+    failovers: AtomicU64,
+    /// Shadow executions that errored — ledgered here, never folded into
+    /// the telemetry ring (satellite of the failure-domain work: a
+    /// faulty engine must not corrupt the trainer's labeled data).
+    shadow_errors: AtomicU64,
 }
 
 impl ClassCounters {
@@ -392,6 +472,9 @@ struct ClassState {
     counters: Arc<ClassCounters>,
     /// Round-robin cursor within the class.
     next: AtomicUsize,
+    /// The class's circuit breaker (shared with its shards and the
+    /// failover table).
+    breaker: Arc<CircuitBreaker>,
 }
 
 impl ClassState {
@@ -430,6 +513,21 @@ struct Envelope {
     reply: mpsc::Sender<GemmResponse>,
     /// Device class the router chose (echoed into the response).
     routed: DeviceId,
+    /// Re-executions consumed so far (see [`ServerConfig::retry_budget`]).
+    retries: u32,
+    /// The envelope was handed to a sibling class by failover.
+    failover: bool,
+    /// Admitted as a HalfOpen breaker probe: the serving shard must
+    /// settle exactly one probe token with the outcome.
+    probe: bool,
+}
+
+/// Why `try_admit` refused (the request is handed back either way).
+enum AdmitRefusal {
+    /// The class is at its queue bound.
+    Full(GemmRequest),
+    /// The class's circuit breaker rejected the admission.
+    Quarantined(GemmRequest),
 }
 
 /// Handle for submitting work.  Clones share the per-class round-robin
@@ -442,13 +540,16 @@ pub struct ServerHandle {
 
 impl ServerHandle {
     /// Best (lowest predicted-wait) class not yet in `tried`; classes at
-    /// their queue bound are skipped when `skip_full` — a saturated
-    /// class sheds to a servable sibling before anything is rejected.
+    /// their queue bound — or quarantined by their breaker — are skipped
+    /// when `skip_full`, so a saturated or failing class spills to a
+    /// servable sibling before anything is rejected.
     fn best_class(&self, t: Triple, tried: u64, skip_full: bool) -> Option<usize> {
         let mut best = None;
         let mut best_score = f64::INFINITY;
         for (i, class) in self.classes.iter().enumerate() {
-            if tried & (1u64 << i) != 0 || (skip_full && class.is_full()) {
+            if tried & (1u64 << i) != 0
+                || (skip_full && (class.is_full() || class.breaker.would_reject()))
+            {
                 continue;
             }
             let score = class.predicted_wait(t);
@@ -487,19 +588,33 @@ impl ServerHandle {
     }
 
     /// Reserve a queue slot on `class` and enqueue, or hand the request
-    /// back when the class is at its bound.  The reservation is two
-    /// atomics (`fetch_add` + rollback on refusal) — admission adds no
-    /// locks and no allocations to the submit path.
+    /// back when the class is at its bound or its breaker refuses.  The
+    /// healthy-path reservation is the breaker's single atomic load plus
+    /// two atomics (`fetch_add` + rollback on refusal) — admission adds
+    /// no locks and no allocations to the submit path.  A `HalfOpen`
+    /// breaker admits the request as a *probe*: the serving shard
+    /// settles the probe token with the execute outcome.
     fn try_admit(
         &self,
         class: &ClassState,
         req: GemmRequest,
         deadline: Option<Instant>,
-    ) -> std::result::Result<mpsc::Receiver<GemmResponse>, GemmRequest> {
+    ) -> std::result::Result<mpsc::Receiver<GemmResponse>, AdmitRefusal> {
+        let probe = match class.breaker.admit() {
+            BreakerAdmit::Serve => false,
+            BreakerAdmit::Probe => true,
+            BreakerAdmit::Reject => return Err(AdmitRefusal::Quarantined(req)),
+        };
+        let release = |on: bool| {
+            if on {
+                class.breaker.release_probe();
+            }
+        };
         let prev = class.outstanding.fetch_add(1, Ordering::AcqRel);
         if prev >= class.capacity {
             class.outstanding.fetch_sub(1, Ordering::AcqRel);
-            return Err(req);
+            release(probe);
+            return Err(AdmitRefusal::Full(req));
         }
         class.counters.peak_depth.fetch_max(prev + 1, Ordering::Relaxed);
         let (reply, rx) = mpsc::channel();
@@ -511,6 +626,9 @@ impl ServerHandle {
             deadline,
             reply,
             routed: class.device,
+            retries: 0,
+            failover: false,
+            probe,
         });
         if sent.is_err() {
             // Shard gone (shutdown): roll the gauges back so the router
@@ -519,6 +637,7 @@ impl ServerHandle {
             // server-shut-down recv error.
             class.depths[shard].fetch_sub(1, Ordering::Relaxed);
             class.outstanding.fetch_sub(1, Ordering::AcqRel);
+            release(probe);
         }
         Ok(rx)
     }
@@ -536,8 +655,20 @@ impl ServerHandle {
         }
     }
 
+    /// Typed quarantine refusal (counted like a shed, in its own
+    /// ledger).
+    fn quarantine(&self, class_idx: usize, req: GemmRequest, count: bool) -> Admission {
+        let class = &self.classes[class_idx];
+        if count {
+            class.counters.quarantined.fetch_add(1, Ordering::Relaxed);
+        }
+        Admission::Quarantined { req, device: class.device }
+    }
+
     /// One routed admission pass: try classes in predicted-wait order,
-    /// skipping full ones; shed only when every class is at its bound.
+    /// skipping full/quarantined ones; refuse only when every class is
+    /// at its bound (`Shed`) or breaker-rejected (`Quarantined` — every
+    /// class refused and at least the least-loaded one by quarantine).
     fn try_submit_inner(
         &self,
         mut req: GemmRequest,
@@ -547,7 +678,8 @@ impl ServerHandle {
         if self.classes.len() == 1 {
             return match self.try_admit(&self.classes[0], req, deadline) {
                 Ok(rx) => Admission::Enqueued(rx),
-                Err(req) => self.shed(0, req, count_shed),
+                Err(AdmitRefusal::Full(req)) => self.shed(0, req, count_shed),
+                Err(AdmitRefusal::Quarantined(req)) => self.quarantine(0, req, count_shed),
             };
         }
         let t = req.triple();
@@ -555,13 +687,20 @@ impl ServerHandle {
         while let Some(i) = self.best_class(t, tried, true) {
             match self.try_admit(&self.classes[i], req, deadline) {
                 Ok(rx) => return Admission::Enqueued(rx),
-                // Lost an admission race: the class filled between the
-                // scoring pass and the reservation.  Try the next-best.
-                Err(r) => {
+                // Lost an admission race: the class filled (or tripped)
+                // between the scoring pass and the reservation.  Try the
+                // next-best.
+                Err(AdmitRefusal::Full(r)) | Err(AdmitRefusal::Quarantined(r)) => {
                     req = r;
                     tried |= 1u64 << i;
                 }
             }
+        }
+        // Nothing admitted.  When every class is breaker-rejected the
+        // refusal is a quarantine (the fleet is failing, not full);
+        // otherwise it is the usual capacity shed.
+        if self.classes.iter().all(|c| c.breaker.would_reject()) {
+            return self.quarantine(self.least_loaded(), req, count_shed);
         }
         self.shed(self.least_loaded(), req, count_shed)
     }
@@ -600,7 +739,8 @@ impl ServerHandle {
         }
         Some(match self.try_admit(&self.classes[idx], req, None) {
             Ok(rx) => Admission::Enqueued(rx),
-            Err(req) => self.shed(idx, req, true),
+            Err(AdmitRefusal::Full(req)) => self.shed(idx, req, true),
+            Err(AdmitRefusal::Quarantined(req)) => self.quarantine(idx, req, true),
         })
     }
 
@@ -628,6 +768,8 @@ impl ServerHandle {
             outcome,
             pressure_pick: false,
             fused_batch_size: 0,
+            retries: 0,
+            failover: false,
         });
         rx
     }
@@ -688,6 +830,34 @@ impl ServerHandle {
                     req = r;
                     std::thread::sleep(ADMISSION_BACKOFF);
                 }
+                Admission::Quarantined { req: r, device } => {
+                    // Every candidate breaker is open: wait out the
+                    // cooldown (the next pass probes) under the same
+                    // deadline/patience bounds as a capacity wait.
+                    if deadline.is_some_and(|d| Instant::now() >= d) {
+                        return self.synthetic_error(
+                            device,
+                            RequestOutcome::Expired,
+                            format!(
+                                "deadline expired awaiting admission on {device} \
+                                 (device quarantined)"
+                            ),
+                        );
+                    }
+                    if Instant::now() >= give_up {
+                        return self.synthetic_error(
+                            device,
+                            RequestOutcome::Quarantined,
+                            format!(
+                                "no servable device class: every breaker open for \
+                                 {}s (nearest: {device})",
+                                ADMISSION_PATIENCE.as_secs()
+                            ),
+                        );
+                    }
+                    req = r;
+                    std::thread::sleep(ADMISSION_BACKOFF);
+                }
             }
         }
     }
@@ -737,15 +907,24 @@ impl ServerHandle {
         loop {
             match self.try_admit(&self.classes[idx], req, None) {
                 Ok(rx) => return Some(rx),
-                Err(r) => {
+                // Full and quarantined both wait: pinned traffic is
+                // diagnostic coverage, and waiting out an open breaker's
+                // cooldown means the retry is admitted as the HalfOpen
+                // probe that can close it.
+                Err(AdmitRefusal::Full(r)) | Err(AdmitRefusal::Quarantined(r)) => {
                     if Instant::now() >= give_up {
                         let class = &self.classes[idx];
+                        let (outcome, detail) = if class.breaker.would_reject() {
+                            (RequestOutcome::Quarantined, "breaker open")
+                        } else {
+                            (RequestOutcome::Error, "queue full")
+                        };
                         return Some(self.synthetic_error(
                             device,
-                            RequestOutcome::Error,
+                            outcome,
                             format!(
                                 "admission starved for {}s pinned to {device} \
-                                 ({}/{} outstanding)",
+                                 ({detail}; {}/{} outstanding)",
                                 ADMISSION_PATIENCE.as_secs(),
                                 class.outstanding.load(Ordering::Acquire),
                                 class.capacity
@@ -803,12 +982,43 @@ impl ServerHandle {
     }
 }
 
+/// One failover destination: enough of a sibling class's state for a
+/// worker to reserve a slot and forward an envelope.
+struct FailoverTarget {
+    device: DeviceId,
+    profile: DeviceProfile,
+    txs: Vec<mpsc::Sender<Envelope>>,
+    depths: Vec<Arc<AtomicUsize>>,
+    outstanding: Arc<AtomicUsize>,
+    capacity: usize,
+    breaker: Arc<CircuitBreaker>,
+    counters: Arc<ClassCounters>,
+}
+
+/// The fleet's failover table, shared by every shard.  It holds cloned
+/// envelope senders, so [`GemmServer::finish`] MUST clear it before
+/// joining the workers — a populated table would keep every shard's
+/// `recv()` alive and deadlock shutdown.  Workers send while holding the
+/// lock (never cloning a sender out), so clearing the table is a hard
+/// barrier: after `clear` returns, no forward is in flight.
+#[derive(Default)]
+struct FailoverTable {
+    classes: Mutex<Vec<FailoverTarget>>,
+}
+
+impl FailoverTable {
+    fn clear(&self) {
+        self.classes.lock().unwrap_or_else(|e| e.into_inner()).clear();
+    }
+}
+
 /// Per-class coordination state the server keeps after startup.
 struct ClassInfo {
     device: DeviceId,
     policy: Arc<PolicyHandle>,
     telemetry: Arc<TelemetryRing>,
     counters: Arc<ClassCounters>,
+    breaker: Arc<CircuitBreaker>,
 }
 
 /// The running server.
@@ -820,6 +1030,9 @@ pub struct GemmServer {
     /// Drain flag: once set, shards answer queued envelopes with a typed
     /// shutdown error instead of serving them.
     stop: Arc<AtomicBool>,
+    /// Failover destinations shared with every shard; cleared (before
+    /// join) at shutdown so worker channels can close.
+    failover: Arc<FailoverTable>,
 }
 
 impl GemmServer {
@@ -871,6 +1084,7 @@ impl GemmServer {
         let n_workers: usize = classes.iter().map(|c| c.shards).sum();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
         let stop = Arc::new(AtomicBool::new(false));
+        let failover = Arc::new(FailoverTable::default());
         let mut states = Vec::with_capacity(classes.len());
         let mut infos = Vec::with_capacity(classes.len());
         let mut workers = Vec::with_capacity(n_workers);
@@ -882,6 +1096,8 @@ impl GemmServer {
             let telemetry = Arc::new(TelemetryRing::new(cfg.telemetry_capacity));
             let outstanding = Arc::new(AtomicUsize::new(0));
             let counters = Arc::new(ClassCounters::default());
+            let breaker =
+                Arc::new(CircuitBreaker::new(class.breaker.unwrap_or(cfg.breaker)));
             let mut txs = Vec::with_capacity(class.shards);
             let mut depths = Vec::with_capacity(class.shards);
             for _ in 0..class.shards {
@@ -899,6 +1115,9 @@ impl GemmServer {
                     outstanding: Arc::clone(&outstanding),
                     counters: Arc::clone(&counters),
                     stop: Arc::clone(&stop),
+                    breaker: Arc::clone(&breaker),
+                    failover: Arc::clone(&failover),
+                    fault_plan: class.fault_plan.clone(),
                     cfg,
                 };
                 let ready_tx = ready_tx.clone();
@@ -916,15 +1135,36 @@ impl GemmServer {
                 capacity,
                 counters: Arc::clone(&counters),
                 next: AtomicUsize::new(0),
+                breaker: Arc::clone(&breaker),
             });
             infos.push(ClassInfo {
                 device: class.device,
                 policy,
                 telemetry,
                 counters,
+                breaker,
             });
         }
         drop(ready_tx);
+        // Populate the failover table from the assembled classes (each
+        // target includes enough state to reserve + forward; workers skip
+        // their own device when scanning).
+        {
+            let mut table = failover.classes.lock().unwrap_or_else(|e| e.into_inner());
+            *table = states
+                .iter()
+                .map(|s| FailoverTarget {
+                    device: s.device,
+                    profile: s.profile.clone(),
+                    txs: s.txs.clone(),
+                    depths: s.depths.clone(),
+                    outstanding: Arc::clone(&s.outstanding),
+                    capacity: s.capacity,
+                    breaker: Arc::clone(&s.breaker),
+                    counters: Arc::clone(&s.counters),
+                })
+                .collect();
+        }
         let handle = ServerHandle { classes: Arc::new(states) };
         let mut failures = Vec::new();
         for _ in 0..n_workers {
@@ -935,7 +1175,9 @@ impl GemmServer {
             }
         }
         if !failures.is_empty() {
-            // Drop the senders so healthy shards exit, then reap.
+            // Drop every envelope sender (the handle's and the failover
+            // table's) so healthy shards exit, then reap.
+            failover.clear();
             drop(handle);
             for w in workers {
                 let _ = w.join();
@@ -948,6 +1190,7 @@ impl GemmServer {
             started: Instant::now(),
             classes: infos,
             stop,
+            failover,
         })
     }
 
@@ -992,6 +1235,15 @@ impl GemmServer {
             .map(|c| Arc::clone(&c.telemetry))
     }
 
+    /// A specific device class's circuit breaker (observability: chaos
+    /// harnesses poll quarantine/recovery transitions through this).
+    pub fn breaker_for(&self, device: DeviceId) -> Option<Arc<CircuitBreaker>> {
+        self.classes
+            .iter()
+            .find(|c| c.device == device)
+            .map(|c| Arc::clone(&c.breaker))
+    }
+
     /// Shut down and collect serving statistics (None if nothing was
     /// served or shed).  Queued envelopes are served out before the
     /// shards exit; use [`shutdown_now`](Self::shutdown_now) to answer
@@ -1012,8 +1264,13 @@ impl GemmServer {
 
     fn finish(mut self) -> Option<ServeStats> {
         let wall = self.started.elapsed();
-        // Drop our sender references so each shard's recv() errors out
-        // once all client handles are gone.
+        // Clear the failover table FIRST: it holds cloned envelope
+        // senders, and a worker's recv() only errors out once every
+        // sender is gone.  Clearing takes the table lock, so no forward
+        // is mid-send when it returns.
+        self.failover.clear();
+        // Then drop our sender references so each shard's recv() errors
+        // out once all client handles are gone.
         self.handle = None;
         let mut records = Vec::new();
         for w in self.workers.drain(..) {
@@ -1024,7 +1281,10 @@ impl GemmServer {
         let total_shed: u64 = self
             .classes
             .iter()
-            .map(|c| c.counters.shed.load(Ordering::Relaxed))
+            .map(|c| {
+                c.counters.shed.load(Ordering::Relaxed)
+                    + c.counters.quarantined.load(Ordering::Relaxed)
+            })
             .sum();
         if records.is_empty() && total_shed == 0 {
             return None;
@@ -1048,6 +1308,14 @@ impl GemmServer {
                 Duration::from_nanos(c.counters.fused_saved_ns.load(Ordering::Relaxed)),
                 hist,
             );
+            stats.record_resilience(
+                c.device,
+                c.counters.quarantined.load(Ordering::Relaxed),
+                c.counters.retries.load(Ordering::Relaxed),
+                c.counters.failovers.load(Ordering::Relaxed),
+                c.counters.shadow_errors.load(Ordering::Relaxed),
+                [c.breaker.opens(), c.breaker.half_opens(), c.breaker.closes()],
+            );
         }
         Some(stats)
     }
@@ -1064,6 +1332,9 @@ struct ShardCtx {
     outstanding: Arc<AtomicUsize>,
     counters: Arc<ClassCounters>,
     stop: Arc<AtomicBool>,
+    breaker: Arc<CircuitBreaker>,
+    failover: Arc<FailoverTable>,
+    fault_plan: Option<FaultPlan>,
     cfg: ServerConfig,
 }
 
@@ -1129,6 +1400,9 @@ fn worker_loop(
         outstanding,
         counters,
         stop,
+        breaker,
+        failover,
+        fault_plan,
         cfg,
     } = ctx;
     let device = spec.device();
@@ -1143,6 +1417,11 @@ fn worker_loop(
             return Vec::new();
         }
     };
+    if let Some(plan) = fault_plan {
+        // The chaos seam: scripted faults sit between the shard and its
+        // engine, indistinguishable from real device failures.
+        engine = Box::new(FaultInjector::new(engine, plan));
+    }
     drop(ready_tx);
     let mut scratch = ScratchBuffers::new();
     let mut batch = BatchScratch::new();
@@ -1205,6 +1484,7 @@ fn worker_loop(
                     shard,
                     &depth,
                     &outstanding,
+                    &breaker,
                     &mut raw_records,
                     None,
                 );
@@ -1265,6 +1545,7 @@ fn worker_loop(
                     shard,
                     &depth,
                     &outstanding,
+                    &breaker,
                     &mut raw_records,
                     None,
                 );
@@ -1275,6 +1556,8 @@ fn worker_loop(
                 // error, never grouped into a batch.
                 let message =
                     format!("no artifact accepts {} on {device}", env.req.triple());
+                // A selection gap is not device ill-health: the breaker
+                // never hears about it (probe tokens are just returned).
                 answer_unserved(
                     env,
                     RequestOutcome::Error,
@@ -1283,6 +1566,7 @@ fn worker_loop(
                     shard,
                     &depth,
                     &outstanding,
+                    &breaker,
                     &mut raw_records,
                     Some(message),
                 );
@@ -1347,13 +1631,107 @@ fn worker_loop(
             let wall = t0.elapsed();
 
             if let Some(e) = exec_err {
-                // A failed dispatch answers *every* member with a typed
-                // per-request error — no reply channel is ever dropped.
-                // Nothing executed, so the batch never enters the
-                // occupancy ledger (records carry fused = 0); responses
-                // still report the batch size they died in.
+                // One breaker mark per failed *dispatch* — a single
+                // poisoned batch must not trip the consecutive-failure
+                // rule on its own.
+                breaker.record_failure();
                 let emsg = format!("{e:#}");
-                for (pressure_pick, env) in chunk.drain(..) {
+                for (pressure_pick, mut env) in chunk.drain(..) {
+                    let mut message = if fuse == 1 {
+                        emsg.clone()
+                    } else {
+                        format!("fused batch of {fuse} failed on {device}: {emsg}")
+                    };
+                    // (a) Fused members retry *individually* on the same
+                    // engine first: one poisoned member can't fail its
+                    // batch peers twice.
+                    if fuse > 1
+                        && env.retries < cfg.retry_budget
+                        && !stop.load(Ordering::Acquire)
+                    {
+                        env.retries += 1;
+                        counters.retries.fetch_add(1, Ordering::Relaxed);
+                        let input = gemm_input(&env.req);
+                        match engine.execute_pooled(id, &input, &mut scratch) {
+                            Ok(times) => {
+                                if env.probe {
+                                    breaker.record_probe(true);
+                                } else {
+                                    breaker.record_success();
+                                }
+                                counters.record_dispatch(1, Duration::ZERO);
+                                let service = times.total_time();
+                                let queue =
+                                    env.submitted.elapsed().saturating_sub(service);
+                                raw_records.push(RawRecord {
+                                    id: Some(id),
+                                    queue,
+                                    service,
+                                    flops: t.flops(),
+                                    outcome: RequestOutcome::Ok,
+                                    fused: 1,
+                                });
+                                let _ = env.reply.send(GemmResponse {
+                                    out: Ok(scratch.out.clone()),
+                                    artifact: engine
+                                        .manifest()
+                                        .name_of(id)
+                                        .to_string(),
+                                    queue,
+                                    service,
+                                    epoch: cached.epoch,
+                                    device,
+                                    routed: env.routed,
+                                    shard,
+                                    outcome: RequestOutcome::Ok,
+                                    pressure_pick,
+                                    fused_batch_size: 1,
+                                    retries: env.retries,
+                                    failover: env.failover,
+                                });
+                                depth.fetch_sub(1, Ordering::Relaxed);
+                                outstanding.fetch_sub(1, Ordering::AcqRel);
+                                // Retried requests never feed telemetry:
+                                // a flaky engine must not label trainer
+                                // data through its own failures.
+                                continue;
+                            }
+                            Err(e2) => {
+                                breaker.record_failure();
+                                message = format!(
+                                    "{message}; individual retry failed: {e2:#}"
+                                );
+                            }
+                        }
+                    }
+                    // (b) Fail over to the modeled-cheapest healthy
+                    // sibling class, deadline allowing.  On success the
+                    // sibling owns the reply channel (exactly one
+                    // response either way).
+                    env = match try_failover(
+                        &failover,
+                        env,
+                        device,
+                        engine.manifest(),
+                        &breaker,
+                        &counters,
+                        &depth,
+                        &outstanding,
+                        cfg.retry_budget,
+                        &stop,
+                    ) {
+                        Ok(()) => continue,
+                        Err(env) => env,
+                    };
+                    // (c) Out of options: typed per-request error — no
+                    // reply channel is ever dropped.  Nothing executed,
+                    // so the batch never enters the occupancy ledger
+                    // (records carry fused = 0); responses still report
+                    // the batch size they died in.
+                    if env.probe {
+                        breaker.record_probe(false);
+                        env.probe = false;
+                    }
                     // queue + service == full submit-to-reply latency.
                     let queue = env.submitted.elapsed().saturating_sub(wall);
                     raw_records.push(RawRecord {
@@ -1364,13 +1742,8 @@ fn worker_loop(
                         outcome: RequestOutcome::Error,
                         fused: 0,
                     });
-                    let out = if fuse == 1 {
-                        Err(anyhow!("{emsg}"))
-                    } else {
-                        Err(anyhow!("fused batch of {fuse} failed on {device}: {emsg}"))
-                    };
                     let _ = env.reply.send(GemmResponse {
-                        out,
+                        out: Err(anyhow!("{message}")),
                         artifact: engine.manifest().name_of(id).to_string(),
                         queue,
                         service: wall,
@@ -1381,6 +1754,8 @@ fn worker_loop(
                         outcome: RequestOutcome::Error,
                         pressure_pick,
                         fused_batch_size: fuse,
+                        retries: env.retries,
+                        failover: env.failover,
                     });
                     depth.fetch_sub(1, Ordering::Relaxed);
                     outstanding.fetch_sub(1, Ordering::AcqRel);
@@ -1432,7 +1807,14 @@ fn worker_loop(
                     outcome: RequestOutcome::Ok,
                     pressure_pick,
                     fused_batch_size: fuse,
+                    retries: env.retries,
+                    failover: env.failover,
                 });
+                if env.probe {
+                    breaker.record_probe(true);
+                } else {
+                    breaker.record_success();
+                }
                 // The request is answered: release its depth-gauge slots
                 // so the router and the admission bound see the real
                 // backlog.
@@ -1442,16 +1824,28 @@ fn worker_loop(
                 // response path.  `times` excludes compile *and* the
                 // fusion amortization (per-slot attribution), so the
                 // sample stays comparable to the shadow measurement and
-                // to un-fused oracle runs.
-                if tele_sampler.fire() {
+                // to un-fused oracle runs.  Requests that arrived here
+                // through retry/failover are excluded: their service
+                // numbers carry another class's failure story and would
+                // mislabel trainer data.
+                if env.retries == 0 && tele_sampler.fire() {
                     let shadow = if shadow_sampler.fire() {
-                        shadow_execute(
+                        match shadow_execute(
                             &mut *engine,
                             &mut scratch,
                             id,
                             &env.req,
                             &mut shadow_rotation,
-                        )
+                        ) {
+                            Ok(s) => s,
+                            Err(_) => {
+                                // Shadow failures live in their own
+                                // ledger: they never feed the breaker or
+                                // the trainer.
+                                counters.shadow_errors.fetch_add(1, Ordering::Relaxed);
+                                None
+                            }
+                        }
                     } else {
                         None
                     };
@@ -1500,9 +1894,16 @@ fn answer_unserved(
     shard: usize,
     depth: &AtomicUsize,
     outstanding: &AtomicUsize,
+    breaker: &CircuitBreaker,
     raw: &mut Vec<RawRecord>,
     message: Option<String>,
 ) {
+    // The request never reached the engine, so a probe token proves
+    // nothing about device health either way: release it unjudged so
+    // the half-open budget is not leaked.
+    if env.probe {
+        breaker.release_probe();
+    }
     let queue = env.submitted.elapsed();
     raw.push(RawRecord {
         id: None,
@@ -1531,6 +1932,8 @@ fn answer_unserved(
         outcome,
         pressure_pick: false,
         fused_batch_size: 0,
+        retries: env.retries,
+        failover: env.failover,
     });
     depth.fetch_sub(1, Ordering::Relaxed);
     outstanding.fetch_sub(1, Ordering::AcqRel);
@@ -1546,6 +1949,139 @@ fn gemm_input(req: &GemmRequest) -> GemmInput<'_> {
         c: &req.c,
         alpha: req.alpha,
         beta: req.beta,
+    }
+}
+
+/// Modeled-cheapest servable artifact for `t` on an *arbitrary* device
+/// profile — the failover analogue of [`ExecutionEngine::modeled_cheapest`],
+/// which can only price its own device.  One pass over the small
+/// immutable manifest; legality is re-checked against the target profile
+/// because sibling classes differ in register/LDS budgets.
+fn cheapest_modeled_for(
+    manifest: &Manifest,
+    profile: &DeviceProfile,
+    t: Triple,
+) -> Option<(ArtifactId, f64)> {
+    let mut best: Option<(ArtifactId, f64)> = None;
+    for i in 0..manifest.len() as u32 {
+        let id = ArtifactId(i);
+        let meta = manifest.meta(id);
+        if !meta.accepts(t) || !profile.is_legal(&meta.config) {
+            continue;
+        }
+        let Some(secs) = sim::modeled_secs(profile, &meta.config, t) else {
+            continue;
+        };
+        if best.map_or(true, |(_, b)| secs < b) {
+            best = Some((id, secs));
+        }
+    }
+    best
+}
+
+/// Deadline-aware failover: re-home a failed envelope onto the
+/// modeled-cheapest *healthy* sibling class, if the retry budget and the
+/// remaining deadline afford its modeled service time.  On `Ok` the
+/// sibling shard owns the reply channel (the exactly-one-response
+/// invariant transfers with the envelope); on `Err` the caller still
+/// holds the envelope and must answer it.
+///
+/// The shard sends while holding the table lock — the lock is only ever
+/// contended by other failing shards and by [`FailoverTable::clear`],
+/// which `finish()` runs *before* joining workers precisely so no send
+/// can race a disconnected receiver into a panic-free-but-lost reply.
+#[allow(clippy::too_many_arguments)]
+fn try_failover(
+    table: &FailoverTable,
+    mut env: Envelope,
+    own_device: DeviceId,
+    manifest: &Manifest,
+    breaker: &CircuitBreaker,
+    counters: &ClassCounters,
+    depth: &AtomicUsize,
+    outstanding: &AtomicUsize,
+    retry_budget: u32,
+    stop: &AtomicBool,
+) -> std::result::Result<(), Envelope> {
+    if env.retries >= retry_budget || stop.load(Ordering::Acquire) {
+        return Err(env);
+    }
+    // Whatever remains of the client's deadline must cover the sibling's
+    // modeled service time — failover that arrives late is just a slower
+    // error.
+    let remaining = match env.deadline {
+        Some(d) => {
+            let r = d.saturating_duration_since(Instant::now());
+            if r.is_zero() {
+                return Err(env);
+            }
+            Some(r.as_secs_f64())
+        }
+        None => None,
+    };
+    let t = env.req.triple();
+    let classes = table.classes.lock().unwrap();
+    let mut pick: Option<(usize, ArtifactId, f64)> = None;
+    for (i, target) in classes.iter().enumerate() {
+        if target.device == own_device || !target.breaker.is_closed() {
+            continue;
+        }
+        if target.outstanding.load(Ordering::Acquire) >= target.capacity {
+            continue;
+        }
+        let Some((id, secs)) = cheapest_modeled_for(manifest, &target.profile, t)
+        else {
+            continue;
+        };
+        if remaining.is_some_and(|r| secs > r) {
+            continue;
+        }
+        if pick.map_or(true, |(_, _, b)| secs < b) {
+            pick = Some((i, id, secs));
+        }
+    }
+    let Some((idx, _, _)) = pick else {
+        return Err(env);
+    };
+    let target = &classes[idx];
+    // Same reserve-then-rollback admission the front door uses: the
+    // sibling's bound holds even against racing clients.
+    if target.outstanding.fetch_add(1, Ordering::AcqRel) >= target.capacity {
+        target.outstanding.fetch_sub(1, Ordering::AcqRel);
+        return Err(env);
+    }
+    let shard_idx = target
+        .depths
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, d)| d.load(Ordering::Relaxed))
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    target.depths[shard_idx].fetch_add(1, Ordering::Relaxed);
+    // The probe verdict belongs to *this* device: the engine failed, so
+    // the probe failed — the sibling's success must not vouch for us.
+    if env.probe {
+        breaker.record_probe(false);
+        env.probe = false;
+    }
+    env.retries += 1;
+    env.failover = true;
+    counters.retries.fetch_add(1, Ordering::Relaxed);
+    counters.failovers.fetch_add(1, Ordering::Relaxed);
+    match target.txs[shard_idx].send(env) {
+        Ok(()) => {
+            // The envelope now occupies the sibling's gauges; release
+            // ours.
+            depth.fetch_sub(1, Ordering::Relaxed);
+            outstanding.fetch_sub(1, Ordering::AcqRel);
+            Ok(())
+        }
+        Err(mpsc::SendError(env)) => {
+            target.depths[shard_idx].fetch_sub(1, Ordering::Relaxed);
+            target.outstanding.fetch_sub(1, Ordering::AcqRel);
+            counters.failovers.fetch_sub(1, Ordering::Relaxed);
+            Err(env)
+        }
     }
 }
 
@@ -1618,22 +2154,30 @@ fn select_shadow_alternative(
 /// `shadow_fraction` caps.  The candidate scan is allocation-free (two
 /// passes over the small immutable manifest) and the scratch pool is
 /// reused — the response already copied its result out.
+///
+/// `Ok(None)` means no alternative artifact was eligible; `Err` means an
+/// alternative *failed* — the caller books it in the `shadow_errors`
+/// ledger so a faulty shadow run never masquerades as "no candidate" and
+/// never reaches the breaker or the trainer.
 fn shadow_execute(
     engine: &mut dyn ExecutionEngine,
     scratch: &mut ScratchBuffers,
     served: ArtifactId,
     req: &GemmRequest,
     rotation: &mut usize,
-) -> Option<(crate::config::KernelConfig, f64)> {
-    let alt = select_shadow_alternative(engine, served, req.triple(), *rotation)?;
+) -> Result<Option<(crate::config::KernelConfig, f64)>> {
+    let Some(alt) = select_shadow_alternative(engine, served, req.triple(), *rotation)
+    else {
+        return Ok(None);
+    };
     *rotation = rotation.wrapping_add(1);
     // Compile outside the measurement, like the served path.
-    engine.ensure_ready(alt).ok()?;
-    let times = engine.execute_pooled(alt, &gemm_input(req), scratch).ok()?;
-    Some((
+    engine.ensure_ready(alt)?;
+    let times = engine.execute_pooled(alt, &gemm_input(req), scratch)?;
+    Ok(Some((
         engine.manifest().meta(alt).config,
         times.total_time().as_secs_f64(),
-    ))
+    )))
 }
 
 #[cfg(test)]

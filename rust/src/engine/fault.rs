@@ -1,0 +1,342 @@
+//! Deterministic fault injection at the engine seam.
+//!
+//! [`FaultInjector`] wraps any [`ExecutionEngine`] and applies a seeded
+//! [`FaultPlan`] to every dispatch: per-triple transient error rates,
+//! sticky fail-after-N scripts, latency spikes, and an external
+//! kill/revive switch.  Decisions are a pure function of the plan seed
+//! and a *shared* execution counter (one [`PlanState`] per plan, shared
+//! across every clone handed to the class's shards), so a scenario
+//! replays identically regardless of how requests interleave across
+//! shard threads — the chaos experiment and the breaker/failover tests
+//! exercise every failure mode below without real broken hardware.
+//!
+//! Injected failures surface as ordinary `Err` values from
+//! `execute_pooled` / `execute_batch_pooled` (message prefixed with
+//! `"injected fault"`), indistinguishable from a real device fault to
+//! the coordinator — which is the point.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::config::Triple;
+use crate::device::DeviceId;
+use crate::runtime::{ArtifactId, BatchScratch, GemmInput, GemmTimes, Manifest, ScratchBuffers};
+use crate::util::prng::splitmix64;
+
+use super::ExecutionEngine;
+
+/// One failure mode a [`FaultSpec`] can inject.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Each matching dispatch fails independently with probability
+    /// `rate` (deterministic given the plan seed and the shared
+    /// dispatch index).
+    Transient { rate: f64 },
+    /// The device dies for good after `after` matching dispatches: the
+    /// plan's sticky switch flips and *every* subsequent dispatch fails
+    /// until [`FaultPlan::revive`].
+    StickyAfter { after: u64 },
+    /// Each matching dispatch is slowed by `extra` with probability
+    /// `rate` — the result is still correct, only the reported kernel
+    /// time degrades (first slot of a fused dispatch carries the
+    /// stall).
+    LatencySpike { rate: f64, extra: Duration },
+}
+
+/// A failure mode scoped to a triple (`None` = every shape on the
+/// device).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    pub triple: Option<Triple>,
+    pub kind: FaultKind,
+}
+
+/// State shared by every clone of one plan: the dispatch counter that
+/// makes transient decisions deterministic fleet-wide, and the sticky
+/// down switch.
+#[derive(Debug, Default)]
+struct PlanState {
+    dispatches: AtomicU64,
+    down: AtomicBool,
+}
+
+/// A seeded, cloneable fault script for one device class.  Clones share
+/// state: killing the plan kills every shard wrapping it.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    seed: u64,
+    specs: Arc<Vec<FaultSpec>>,
+    state: Arc<PlanState>,
+}
+
+/// What the plan decided for one dispatch.
+enum Verdict {
+    Pass,
+    Delay(Duration),
+    Fail(&'static str),
+}
+
+impl FaultPlan {
+    /// A plan with no scripted faults — useful as a pure kill switch.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, specs: Arc::new(Vec::new()), state: Arc::default() }
+    }
+
+    /// Add a scripted fault (builder-style).
+    pub fn with_fault(mut self, triple: Option<Triple>, kind: FaultKind) -> FaultPlan {
+        Arc::make_mut(&mut self.specs).push(FaultSpec { triple, kind });
+        self
+    }
+
+    /// Flip the sticky switch: every dispatch fails from now on.
+    pub fn kill_now(&self) {
+        self.state.down.store(true, Ordering::Release);
+    }
+
+    /// Clear the sticky switch (the device "comes back").
+    pub fn revive(&self) {
+        self.state.down.store(false, Ordering::Release);
+    }
+
+    pub fn is_down(&self) -> bool {
+        self.state.down.load(Ordering::Acquire)
+    }
+
+    /// Matching dispatches observed across every clone.
+    pub fn dispatches(&self) -> u64 {
+        self.state.dispatches.load(Ordering::Relaxed)
+    }
+
+    /// Deterministic uniform draw in `[0, 1)` for dispatch `n` of spec
+    /// `salt`.
+    fn roll(&self, n: u64, salt: u64) -> f64 {
+        let mut s = self
+            .seed
+            .wrapping_add(n.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add(salt.wrapping_mul(0xBF58_476D_1CE4_E5B9));
+        (splitmix64(&mut s) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    fn decide(&self, t: Triple) -> Verdict {
+        let n = self.state.dispatches.fetch_add(1, Ordering::Relaxed);
+        if self.state.down.load(Ordering::Acquire) {
+            return Verdict::Fail("sticky fault: device is down");
+        }
+        for (i, spec) in self.specs.iter().enumerate() {
+            if spec.triple.is_some_and(|st| st != t) {
+                continue;
+            }
+            match spec.kind {
+                FaultKind::Transient { rate } => {
+                    if self.roll(n, i as u64) < rate {
+                        return Verdict::Fail("transient fault");
+                    }
+                }
+                FaultKind::StickyAfter { after } => {
+                    if n >= after {
+                        self.state.down.store(true, Ordering::Release);
+                        return Verdict::Fail("sticky fault: device is down");
+                    }
+                }
+                FaultKind::LatencySpike { rate, extra } => {
+                    if self.roll(n, i as u64) < rate {
+                        return Verdict::Delay(extra);
+                    }
+                }
+            }
+        }
+        Verdict::Pass
+    }
+}
+
+/// An [`ExecutionEngine`] decorator that injects the plan's faults into
+/// the execute path; everything else delegates untouched.
+pub struct FaultInjector {
+    inner: Box<dyn ExecutionEngine>,
+    plan: FaultPlan,
+    injected: u64,
+}
+
+impl FaultInjector {
+    pub fn new(inner: Box<dyn ExecutionEngine>, plan: FaultPlan) -> FaultInjector {
+        FaultInjector { inner, plan, injected: 0 }
+    }
+
+    /// Failures this injector has delivered (this clone only).
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+}
+
+impl ExecutionEngine for FaultInjector {
+    fn device(&self) -> DeviceId {
+        self.inner.device()
+    }
+
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+
+    fn is_servable(&self, id: ArtifactId) -> bool {
+        self.inner.is_servable(id)
+    }
+
+    fn ensure_ready(&mut self, id: ArtifactId) -> Result<()> {
+        self.inner.ensure_ready(id)
+    }
+
+    fn execute_pooled(
+        &mut self,
+        id: ArtifactId,
+        input: &GemmInput,
+        scratch: &mut ScratchBuffers,
+    ) -> Result<GemmTimes> {
+        match self.plan.decide(input.triple()) {
+            Verdict::Pass => self.inner.execute_pooled(id, input, scratch),
+            Verdict::Delay(extra) => {
+                let mut times = self.inner.execute_pooled(id, input, scratch)?;
+                times.kernel_time += extra;
+                Ok(times)
+            }
+            Verdict::Fail(msg) => {
+                self.injected += 1;
+                bail!("injected fault on {}: {msg}", self.inner.device())
+            }
+        }
+    }
+
+    fn execute_batch_pooled(
+        &mut self,
+        id: ArtifactId,
+        inputs: &[GemmInput],
+        batch: &mut BatchScratch,
+    ) -> Result<()> {
+        // One verdict per *dispatch* (the fused batch fails or stalls as
+        // a unit, like a real device would).
+        let triple = inputs.first().map_or(Triple::new(0, 0, 0), GemmInput::triple);
+        match self.plan.decide(triple) {
+            Verdict::Pass => self.inner.execute_batch_pooled(id, inputs, batch),
+            Verdict::Delay(extra) => {
+                self.inner.execute_batch_pooled(id, inputs, batch)?;
+                if let Some(t) = batch.times.first_mut() {
+                    t.kernel_time += extra;
+                }
+                Ok(())
+            }
+            Verdict::Fail(msg) => {
+                self.injected += 1;
+                bail!("injected fault on {}: {msg}", self.inner.device())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceProfile;
+    use crate::engine::SimEngine;
+    use crate::testing::sample_manifest;
+
+    fn sim() -> Box<dyn ExecutionEngine> {
+        Box::new(SimEngine::new(DeviceProfile::get(DeviceId::NvidiaP100), sample_manifest()))
+    }
+
+    fn input_64(a: &[f32], b: &[f32], c: &[f32]) -> GemmInput<'_> {
+        GemmInput { m: 64, n: 64, k: 64, a, b, c, alpha: 1.0, beta: 0.0 }
+    }
+
+    fn resolve_64(engine: &dyn ExecutionEngine) -> ArtifactId {
+        let t = Triple::new(64, 64, 64);
+        let m = engine.manifest();
+        (0..m.len() as u32)
+            .map(ArtifactId)
+            .find(|&id| engine.is_servable(id) && m.meta(id).accepts(t))
+            .expect("sample manifest serves 64^3")
+    }
+
+    #[test]
+    fn transient_rate_is_deterministic_and_roughly_calibrated() {
+        let plan = FaultPlan::new(7).with_fault(None, FaultKind::Transient { rate: 0.3 });
+        let mut eng = FaultInjector::new(sim(), plan.clone());
+        let id = resolve_64(&eng);
+        let (a, b, c) = (vec![1.0f32; 64 * 64], vec![1.0f32; 64 * 64], vec![0.0f32; 64 * 64]);
+        let mut scratch = ScratchBuffers::new();
+        let mut failures = Vec::new();
+        for i in 0..200 {
+            let r = eng.execute_pooled(id, &input_64(&a, &b, &c), &mut scratch);
+            if r.is_err() {
+                failures.push(i);
+            }
+        }
+        let rate = failures.len() as f64 / 200.0;
+        assert!((0.15..=0.45).contains(&rate), "rate {rate} far from 0.3");
+        assert_eq!(eng.injected() as usize, failures.len());
+
+        // Same seed, fresh state: identical failure schedule.
+        let plan2 = FaultPlan::new(7).with_fault(None, FaultKind::Transient { rate: 0.3 });
+        let mut eng2 = FaultInjector::new(sim(), plan2);
+        let mut failures2 = Vec::new();
+        for i in 0..200 {
+            if eng2.execute_pooled(id, &input_64(&a, &b, &c), &mut scratch).is_err() {
+                failures2.push(i);
+            }
+        }
+        assert_eq!(failures, failures2);
+    }
+
+    #[test]
+    fn sticky_after_n_kills_every_clone_and_revive_restores() {
+        let plan = FaultPlan::new(1).with_fault(None, FaultKind::StickyAfter { after: 3 });
+        let mut eng = FaultInjector::new(sim(), plan.clone());
+        let mut twin = FaultInjector::new(sim(), plan.clone());
+        let id = resolve_64(&eng);
+        let (a, b, c) = (vec![1.0f32; 64 * 64], vec![1.0f32; 64 * 64], vec![0.0f32; 64 * 64]);
+        let mut scratch = ScratchBuffers::new();
+        for _ in 0..3 {
+            eng.execute_pooled(id, &input_64(&a, &b, &c), &mut scratch).unwrap();
+        }
+        assert!(eng.execute_pooled(id, &input_64(&a, &b, &c), &mut scratch).is_err());
+        assert!(plan.is_down());
+        // The twin shares the sticky switch even though it never failed
+        // itself.
+        let err = twin.execute_pooled(id, &input_64(&a, &b, &c), &mut scratch).unwrap_err();
+        assert!(format!("{err:#}").contains("injected fault"), "err: {err:#}");
+        plan.revive();
+        eng.execute_pooled(id, &input_64(&a, &b, &c), &mut scratch).unwrap();
+    }
+
+    #[test]
+    fn kill_now_fails_batches_and_latency_spike_keeps_results() {
+        let plan = FaultPlan::new(9);
+        let mut eng = FaultInjector::new(sim(), plan.clone());
+        let id = resolve_64(&eng);
+        let (a, b, c) = (vec![2.0f32; 64 * 64], vec![1.0f32; 64 * 64], vec![0.0f32; 64 * 64]);
+        let inputs = [input_64(&a, &b, &c), input_64(&a, &b, &c)];
+        let mut batch = BatchScratch::new();
+        eng.execute_batch_pooled(id, &inputs, &mut batch).unwrap();
+        plan.kill_now();
+        assert!(eng.execute_batch_pooled(id, &inputs, &mut batch).is_err());
+        plan.revive();
+
+        // A guaranteed latency spike slows the report, not the math.
+        let spike = FaultPlan::new(2).with_fault(
+            Some(Triple::new(64, 64, 64)),
+            FaultKind::LatencySpike { rate: 1.1, extra: Duration::from_millis(5) },
+        );
+        let mut slow = FaultInjector::new(sim(), spike);
+        let mut scratch = ScratchBuffers::new();
+        let times = slow.execute_pooled(id, &input_64(&a, &b, &c), &mut scratch).unwrap();
+        assert!(times.kernel_time >= Duration::from_millis(5));
+        for &v in &scratch.out {
+            assert_eq!(v, 2.0 * 64.0);
+        }
+    }
+}

@@ -21,6 +21,10 @@
 //! never cross threads), so the coordinator passes a cloneable
 //! [`EngineSpec`] to each shard instead of a live engine.
 
+pub mod fault;
+
+pub use fault::{FaultInjector, FaultKind, FaultPlan, FaultSpec};
+
 use std::path::Path;
 use std::time::Duration;
 

@@ -1,0 +1,755 @@
+//! Chaos experiment: the fleet under *injected faults* — circuit
+//! breakers, deadline-aware retry/failover, and recovery, measured
+//! end-to-end through the public serving API.
+//!
+//! Three scenarios run against a two-class simulated fleet (the victim
+//! device carries a seeded [`FaultPlan`]; its sibling serves faithfully),
+//! all with the sensitive breaker preset and the default retry budget:
+//!
+//! * **transient** — every victim dispatch fails independently at a
+//!   seeded rate.  Failed dispatches retry individually (fused members)
+//!   and fail over to the healthy sibling, so offered traffic still
+//!   answers `Ok` — availability stays 1.0 and every result is
+//!   bit-identical to the `fill * k` oracle.
+//! * **sticky** — the victim dies mid-run (`FaultPlan::kill_now`).  The
+//!   scenario measures *time-to-quarantine* (kill → breaker `Open`),
+//!   serves free waves through the dead phase (routed around the open
+//!   class), revives the device and measures *time-to-recovery*
+//!   (revive → `HalfOpen` probes → `Closed`), then asserts a zero
+//!   post-recovery error rate with the victim serving again.
+//! * **latency** — dispatches slow down but never fail: the breaker must
+//!   stay `Closed` (latency is not an error) and availability 1.0.
+//!
+//! Every response is collected with a bounded `recv_timeout` — a hung
+//! request (dropped reply channel, lost envelope) is counted and fails
+//! the gate, never deadlocks the run.  `BENCH_chaos.json` carries the
+//! machine-readable summary; CI gates `chaos_availability_min`,
+//! `chaos_post_recovery_error_rate == 0`, `chaos_quarantined`,
+//! `chaos_recovered`, `chaos_bit_identical` and `chaos_hung == 0` via
+//! `adaptd bench-compare`.
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context as _, Result};
+
+use crate::config::Triple;
+use crate::coordinator::{
+    Admission, BreakerConfig, BreakerState, CircuitBreaker, DeviceClass, GemmServer,
+    GemmResponse, RequestOutcome, ServerConfig, ServerHandle,
+};
+use crate::device::DeviceId;
+use crate::engine::{FaultKind, FaultPlan};
+use crate::runtime::Manifest;
+use crate::testing::fill_request;
+use crate::util::json::Json;
+
+use super::hetero::{device_policy, hetero_mix};
+
+/// Knobs of the chaos run.
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// Free-routed requests per wave.
+    pub requests_per_wave: usize,
+    /// Waves per scenario phase.
+    pub waves: usize,
+    /// Dispatcher shards per device class.
+    pub shards_per_class: usize,
+    /// Fleet device classes; the first is the failover sibling pool.
+    pub devices: Vec<DeviceId>,
+    /// The device class carrying the fault plan.
+    pub victim: DeviceId,
+    /// Fault-plan seed (same seed → same fault schedule).
+    pub seed: u64,
+    /// Transient scenario: per-dispatch failure probability.
+    pub transient_rate: f64,
+    /// Latency scenario: extra per-dispatch latency.
+    pub latency_spike: Duration,
+    /// Per-request deadline stamped at submit time.
+    pub deadline: Duration,
+    /// Response-collection bound: a reply slower than this counts as
+    /// *hung* (and fails the gate) instead of deadlocking the run.
+    pub recv_timeout: Duration,
+    /// How long the sticky scenario waits for the breaker to trip/close
+    /// before giving up (a miss fails the quarantine/recovery gate).
+    pub breaker_patience: Duration,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            requests_per_wave: 24,
+            waves: 2,
+            shards_per_class: 1,
+            // Simulated devices only: deterministic service, no PJRT
+            // measurement noise — the chaos gates test *plumbing*, not
+            // kernel speed.  The host class joins via --devices.
+            devices: vec![DeviceId::NvidiaP100, DeviceId::MaliT860],
+            victim: DeviceId::NvidiaP100,
+            seed: 0xC4A0_5EED,
+            transient_rate: 0.25,
+            latency_spike: Duration::from_millis(2),
+            deadline: Duration::from_secs(2),
+            recv_timeout: Duration::from_secs(10),
+            breaker_patience: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Outcome tally of one scenario.
+#[derive(Debug, Clone, Default)]
+pub struct ScenarioResult {
+    pub name: &'static str,
+    /// Requests submitted (free + pinned diagnostic traffic).
+    pub offered: usize,
+    pub ok: usize,
+    pub errors: usize,
+    pub expired: usize,
+    /// Typed capacity refusals at admission.
+    pub shed: usize,
+    /// Typed breaker refusals at admission.
+    pub quarantined: usize,
+    /// Replies that missed the `recv_timeout` bound — envelopes the
+    /// server lost.  Must be zero.
+    pub hung: usize,
+    /// Ok responses that consumed at least one retry.
+    pub retried: usize,
+    /// Ok responses served by a failover sibling.
+    pub failovers: usize,
+    /// Ok responses whose payload deviated from the `fill * k` oracle.
+    pub mismatches: usize,
+    pub breaker_opens: u64,
+    pub breaker_closes: u64,
+    /// Sticky only: kill → breaker `Open` (None = never tripped).
+    pub time_to_quarantine: Option<Duration>,
+    /// Sticky only: revive → breaker `Closed` (None = never recovered).
+    pub time_to_recovery: Option<Duration>,
+    /// Sticky only: offered/error tally of the post-recovery phase.
+    pub post_recovery_offered: usize,
+    pub post_recovery_errors: usize,
+    /// Sticky only: requests the revived victim served post-recovery.
+    pub victim_served_after_recovery: usize,
+}
+
+impl ScenarioResult {
+    /// Fraction of offered requests that got a *timely, typed* answer a
+    /// client can act on: `Ok`, a capacity shed, or a quarantine
+    /// refusal.  Errors, expiries and hung replies count against it.
+    pub fn availability(&self) -> f64 {
+        if self.offered == 0 {
+            return 1.0;
+        }
+        (self.ok + self.shed + self.quarantined) as f64 / self.offered as f64
+    }
+
+    fn to_json(&self) -> Json {
+        let ms = |d: Option<Duration>| match d {
+            Some(d) => Json::num(d.as_secs_f64() * 1e3),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("name", Json::str(self.name)),
+            ("offered", Json::num(self.offered as f64)),
+            ("ok", Json::num(self.ok as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("expired", Json::num(self.expired as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("quarantined", Json::num(self.quarantined as f64)),
+            ("hung", Json::num(self.hung as f64)),
+            ("retried", Json::num(self.retried as f64)),
+            ("failovers", Json::num(self.failovers as f64)),
+            ("mismatches", Json::num(self.mismatches as f64)),
+            ("availability", Json::num(self.availability())),
+            ("breaker_opens", Json::num(self.breaker_opens as f64)),
+            ("breaker_closes", Json::num(self.breaker_closes as f64)),
+            ("time_to_quarantine_ms", ms(self.time_to_quarantine)),
+            ("time_to_recovery_ms", ms(self.time_to_recovery)),
+            (
+                "post_recovery_offered",
+                Json::num(self.post_recovery_offered as f64),
+            ),
+            (
+                "post_recovery_errors",
+                Json::num(self.post_recovery_errors as f64),
+            ),
+            (
+                "victim_served_after_recovery",
+                Json::num(self.victim_served_after_recovery as f64),
+            ),
+        ])
+    }
+}
+
+/// The full chaos run.
+pub struct ChaosReport {
+    pub cfg: ChaosConfig,
+    pub mix: Vec<Triple>,
+    pub scenarios: Vec<ScenarioResult>,
+    pub wall: Duration,
+}
+
+impl ChaosReport {
+    fn sticky(&self) -> Option<&ScenarioResult> {
+        self.scenarios.iter().find(|s| s.name == "sticky")
+    }
+
+    /// Worst per-scenario availability — the headline gate.
+    pub fn availability_min(&self) -> f64 {
+        self.scenarios
+            .iter()
+            .map(|s| s.availability())
+            .fold(1.0, f64::min)
+    }
+
+    /// Did the sticky scenario's breaker trip within patience?
+    pub fn quarantined(&self) -> bool {
+        self.sticky().is_some_and(|s| s.time_to_quarantine.is_some())
+    }
+
+    /// Did the revived victim close its breaker *and* serve again?
+    pub fn recovered(&self) -> bool {
+        self.sticky().is_some_and(|s| {
+            s.time_to_recovery.is_some() && s.victim_served_after_recovery > 0
+        })
+    }
+
+    /// Error rate of the post-recovery phase (0.0 when it never ran —
+    /// the `recovered` gate catches that case).
+    pub fn post_recovery_error_rate(&self) -> f64 {
+        match self.sticky() {
+            Some(s) if s.post_recovery_offered > 0 => {
+                s.post_recovery_errors as f64 / s.post_recovery_offered as f64
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Every Ok payload across every scenario matched the `fill * k`
+    /// oracle (vacuously false when nothing was served).
+    pub fn bit_identical(&self) -> bool {
+        self.scenarios.iter().all(|s| s.mismatches == 0)
+            && self.scenarios.iter().map(|s| s.ok).sum::<usize>() > 0
+    }
+
+    /// Replies that missed the collection bound, across every scenario.
+    pub fn hung(&self) -> usize {
+        self.scenarios.iter().map(|s| s.hung).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let ms = |d: Option<Duration>| match d {
+            Some(d) => Json::num(d.as_secs_f64() * 1e3),
+            None => Json::Null,
+        };
+        let sticky = self.sticky();
+        Json::obj(vec![
+            ("bench", Json::str("chaos")),
+            ("requests_per_wave", Json::num(self.cfg.requests_per_wave as f64)),
+            ("waves", Json::num(self.cfg.waves as f64)),
+            ("shards_per_class", Json::num(self.cfg.shards_per_class as f64)),
+            ("victim", Json::str(self.cfg.victim.name())),
+            ("transient_rate", Json::num(self.cfg.transient_rate)),
+            (
+                "mix",
+                Json::Arr(self.mix.iter().map(|t| t.to_json()).collect()),
+            ),
+            (
+                "scenarios",
+                Json::Arr(self.scenarios.iter().map(|s| s.to_json()).collect()),
+            ),
+            ("chaos_availability_min", Json::num(self.availability_min())),
+            (
+                "chaos_post_recovery_error_rate",
+                Json::num(self.post_recovery_error_rate()),
+            ),
+            ("chaos_quarantined", Json::Bool(self.quarantined())),
+            ("chaos_recovered", Json::Bool(self.recovered())),
+            ("chaos_bit_identical", Json::Bool(self.bit_identical())),
+            ("chaos_hung", Json::num(self.hung() as f64)),
+            (
+                "time_to_quarantine_ms",
+                ms(sticky.and_then(|s| s.time_to_quarantine)),
+            ),
+            (
+                "time_to_recovery_ms",
+                ms(sticky.and_then(|s| s.time_to_recovery)),
+            ),
+        ])
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "=== Chaos: victim {} of {:?}, {} waves x {} requests, \
+             transient rate {:.2} ===\n",
+            self.cfg.victim.name(),
+            self.cfg
+                .devices
+                .iter()
+                .map(|d| d.name())
+                .collect::<Vec<_>>(),
+            self.cfg.waves,
+            self.cfg.requests_per_wave,
+            self.cfg.transient_rate,
+        );
+        for r in &self.scenarios {
+            s.push_str(&format!(
+                "{:<10} offered {:4}  ok {:4}  err {:3}  shed {:3}  \
+                 quarantined {:3}  hung {}  retried {:3}  failovers {:3}  \
+                 availability {:.4}\n",
+                r.name,
+                r.offered,
+                r.ok,
+                r.errors,
+                r.shed,
+                r.quarantined,
+                r.hung,
+                r.retried,
+                r.failovers,
+                r.availability(),
+            ));
+            if r.name == "sticky" {
+                let ms = |d: Option<Duration>| match d {
+                    Some(d) => format!("{:.0}ms", d.as_secs_f64() * 1e3),
+                    None => "NEVER".into(),
+                };
+                s.push_str(&format!(
+                    "           quarantine in {}  recovery in {}  \
+                     post-recovery errors {}/{} (victim served {})\n",
+                    ms(r.time_to_quarantine),
+                    ms(r.time_to_recovery),
+                    r.post_recovery_errors,
+                    r.post_recovery_offered,
+                    r.victim_served_after_recovery,
+                ));
+            }
+        }
+        s.push_str(&format!(
+            "availability min {:.4}  bit-identical {}  quarantined {}  \
+             recovered {}  hung {}\n",
+            self.availability_min(),
+            self.bit_identical(),
+            self.quarantined(),
+            self.recovered(),
+            self.hung(),
+        ));
+        s
+    }
+
+    /// Write the machine-readable summary (the CI gate input).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+/// One in-flight request: its oracle fill value plus the reply channel.
+type Pending = (f32, mpsc::Receiver<GemmResponse>);
+
+/// Deterministic fill for the `i`-th request of a scenario — exact in
+/// f32 for every mix `k`, so served payloads can be checked bit-for-bit.
+fn fill_of(i: usize) -> f32 {
+    [1.0f32, 0.5, 2.0, 1.5][i % 4]
+}
+
+/// Collect one reply under the timeout bound and tally it.  `expect` is
+/// the oracle element value: callers submit `fill_request(m, n, k, fill)`
+/// so every output element must equal `fill * k` exactly (bit-identity
+/// across retries and sibling failovers).
+fn collect(
+    res: &mut ScenarioResult,
+    expect: f32,
+    rx: &mpsc::Receiver<GemmResponse>,
+    timeout: Duration,
+) -> Option<GemmResponse> {
+    let Ok(resp) = rx.recv_timeout(timeout) else {
+        res.hung += 1;
+        return None;
+    };
+    match resp.outcome {
+        RequestOutcome::Ok => {
+            res.ok += 1;
+            if resp.retries > 0 {
+                res.retried += 1;
+            }
+            if resp.failover {
+                res.failovers += 1;
+            }
+            if let Ok(out) = &resp.out {
+                if out.iter().any(|&x| x != expect) {
+                    res.mismatches += 1;
+                }
+            }
+        }
+        RequestOutcome::Error => res.errors += 1,
+        RequestOutcome::Expired => res.expired += 1,
+        RequestOutcome::Quarantined => res.quarantined += 1,
+        RequestOutcome::Drained => res.errors += 1,
+    }
+    Some(resp)
+}
+
+/// Submit one free-routed wave and collect every reply.  `expect` is the
+/// per-request expected element value (`fill * k`).
+fn free_wave(
+    handle: &ServerHandle,
+    mix: &[Triple],
+    n: usize,
+    cfg: &ChaosConfig,
+    res: &mut ScenarioResult,
+) -> Result<Vec<GemmResponse>> {
+    let mut pending: Vec<Pending> = Vec::with_capacity(n);
+    for i in 0..n {
+        let t = mix[i % mix.len()];
+        let fill = fill_of(i);
+        let req = fill_request(t.m as usize, t.n as usize, t.k as usize, fill);
+        let expect = fill * t.k as f32;
+        res.offered += 1;
+        match handle.try_submit_with_deadline(req, Instant::now() + cfg.deadline) {
+            Admission::Enqueued(rx) => pending.push((expect, rx)),
+            Admission::Shed { .. } => res.shed += 1,
+            Admission::Quarantined { .. } => res.quarantined += 1,
+            Admission::Rejected { reason } => {
+                anyhow::bail!("invalid chaos request: {reason}")
+            }
+        }
+    }
+    let mut replies = Vec::with_capacity(pending.len());
+    for (expect, rx) in &pending {
+        if let Some(resp) = collect(res, *expect, rx, cfg.recv_timeout) {
+            replies.push(resp);
+        }
+    }
+    Ok(replies)
+}
+
+/// Submit one burst pinned to `device` (diagnostic traffic: forces
+/// coverage through the faulty engine) and collect every reply.
+fn pinned_burst(
+    handle: &ServerHandle,
+    device: DeviceId,
+    mix: &[Triple],
+    n: usize,
+    cfg: &ChaosConfig,
+    res: &mut ScenarioResult,
+) -> Result<Vec<GemmResponse>> {
+    let mut pending: Vec<Pending> = Vec::with_capacity(n);
+    for i in 0..n {
+        let t = mix[i % mix.len()];
+        let fill = fill_of(i);
+        let req = fill_request(t.m as usize, t.n as usize, t.k as usize, fill);
+        let expect = fill * t.k as f32;
+        res.offered += 1;
+        match handle
+            .try_submit_to(device, req)
+            .context("chaos victim not in the fleet")?
+        {
+            Admission::Enqueued(rx) => pending.push((expect, rx)),
+            Admission::Shed { .. } => res.shed += 1,
+            Admission::Quarantined { .. } => res.quarantined += 1,
+            Admission::Rejected { reason } => {
+                anyhow::bail!("invalid chaos request: {reason}")
+            }
+        }
+    }
+    let mut replies = Vec::with_capacity(pending.len());
+    for (expect, rx) in &pending {
+        if let Some(resp) = collect(res, *expect, rx, cfg.recv_timeout) {
+            replies.push(resp);
+        }
+    }
+    Ok(replies)
+}
+
+/// Poll the victim's breaker until `want` (or patience runs out).
+fn await_state(
+    breaker: &CircuitBreaker,
+    want: BreakerState,
+    patience: Duration,
+) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < patience {
+        if breaker.state() == want {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    breaker.state() == want
+}
+
+/// Start a fresh fleet whose victim class carries `plan`.
+fn start_fleet(
+    artifacts: &Path,
+    manifest: &Manifest,
+    cfg: &ChaosConfig,
+    plan: &FaultPlan,
+) -> Result<GemmServer> {
+    let mut classes = Vec::new();
+    for &d in &cfg.devices {
+        let mut class =
+            DeviceClass::new(d, cfg.shards_per_class, device_policy(manifest, d)?);
+        if d == cfg.victim {
+            class = class.with_fault_plan(plan.clone());
+        }
+        classes.push(class);
+    }
+    let scfg = ServerConfig {
+        shards: cfg.shards_per_class,
+        breaker: BreakerConfig::sensitive(),
+        // Small fuse keeps the individual-retry path exercised without
+        // making batch wall time dominate the scenario clock.
+        max_fuse: 8,
+        ..ServerConfig::default()
+    };
+    GemmServer::start_fleet(artifacts, classes, scfg)
+}
+
+/// Transient scenario: seeded per-dispatch failures on the victim; free
+/// waves plus pinned-victim bursts.  Everything must still answer Ok
+/// (retry/failover), bit-identically.
+fn run_transient(
+    artifacts: &Path,
+    manifest: &Manifest,
+    mix: &[Triple],
+    cfg: &ChaosConfig,
+) -> Result<ScenarioResult> {
+    let plan = FaultPlan::new(cfg.seed)
+        .with_fault(None, FaultKind::Transient { rate: cfg.transient_rate });
+    let server = start_fleet(artifacts, manifest, cfg, &plan)?;
+    let handle = server.handle();
+    let mut res = ScenarioResult { name: "transient", ..Default::default() };
+    for _ in 0..cfg.waves.max(1) {
+        free_wave(&handle, mix, cfg.requests_per_wave, cfg, &mut res)?;
+        // Pinned coverage: the router would otherwise learn to avoid the
+        // flaky class and the fault path would go untested.
+        pinned_burst(&handle, cfg.victim, mix, mix.len(), cfg, &mut res)?;
+    }
+    if let Some(b) = server.breaker_for(cfg.victim) {
+        res.breaker_opens = b.opens();
+        res.breaker_closes = b.closes();
+    }
+    drop(handle);
+    let _ = server.shutdown_now();
+    Ok(res)
+}
+
+/// Latency scenario: dispatches slow down but never fail — the breaker
+/// must stay Closed and availability 1.0.
+fn run_latency(
+    artifacts: &Path,
+    manifest: &Manifest,
+    mix: &[Triple],
+    cfg: &ChaosConfig,
+) -> Result<ScenarioResult> {
+    let plan = FaultPlan::new(cfg.seed).with_fault(
+        None,
+        FaultKind::LatencySpike { rate: 0.5, extra: cfg.latency_spike },
+    );
+    let server = start_fleet(artifacts, manifest, cfg, &plan)?;
+    let handle = server.handle();
+    let mut res = ScenarioResult { name: "latency", ..Default::default() };
+    for _ in 0..cfg.waves.max(1) {
+        free_wave(&handle, mix, cfg.requests_per_wave, cfg, &mut res)?;
+        pinned_burst(&handle, cfg.victim, mix, mix.len(), cfg, &mut res)?;
+    }
+    if let Some(b) = server.breaker_for(cfg.victim) {
+        res.breaker_opens = b.opens();
+        res.breaker_closes = b.closes();
+        anyhow::ensure!(
+            b.state() == BreakerState::Closed,
+            "latency alone must not trip the breaker"
+        );
+    }
+    drop(handle);
+    let _ = server.shutdown_now();
+    Ok(res)
+}
+
+/// Sticky scenario: healthy phase → mid-run device death → quarantine →
+/// dead-phase serving around the open class → revive → probe recovery →
+/// post-recovery verification.
+fn run_sticky(
+    artifacts: &Path,
+    manifest: &Manifest,
+    mix: &[Triple],
+    cfg: &ChaosConfig,
+) -> Result<ScenarioResult> {
+    let plan = FaultPlan::new(cfg.seed);
+    let server = start_fleet(artifacts, manifest, cfg, &plan)?;
+    let handle = server.handle();
+    let breaker = server
+        .breaker_for(cfg.victim)
+        .context("victim class has no breaker")?;
+    let mut res = ScenarioResult { name: "sticky", ..Default::default() };
+
+    // Phase A: healthy baseline.
+    free_wave(&handle, mix, cfg.requests_per_wave, cfg, &mut res)?;
+
+    // Phase B: kill the device, then drive pinned bursts through it
+    // until the breaker trips.  Each burst request fails its dispatch
+    // (feeding the breaker) and fails over to the sibling — the client
+    // still sees Ok.
+    let killed_at = Instant::now();
+    plan.kill_now();
+    while killed_at.elapsed() < cfg.breaker_patience
+        && breaker.state() != BreakerState::Open
+    {
+        pinned_burst(&handle, cfg.victim, mix, 4, cfg, &mut res)?;
+    }
+    if breaker.state() == BreakerState::Open {
+        res.time_to_quarantine = Some(killed_at.elapsed());
+    }
+
+    // Phase C: dead phase — free traffic routes around the open class.
+    for _ in 0..cfg.waves.max(1) {
+        free_wave(&handle, mix, cfg.requests_per_wave, cfg, &mut res)?;
+    }
+
+    // Phase D: revive and probe until the breaker closes.  After the
+    // cooldown the first pinned submits are admitted as HalfOpen probes;
+    // their successes close the breaker.
+    plan.revive();
+    let revived_at = Instant::now();
+    while revived_at.elapsed() < cfg.breaker_patience
+        && breaker.state() != BreakerState::Closed
+    {
+        pinned_burst(&handle, cfg.victim, mix, 2, cfg, &mut res)?;
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    if await_state(&breaker, BreakerState::Closed, cfg.breaker_patience) {
+        res.time_to_recovery = Some(revived_at.elapsed());
+    }
+
+    // Phase E: post-recovery — free waves plus pinned-victim coverage;
+    // the error rate here must be exactly zero and the victim must serve.
+    let before = (res.offered, res.errors, res.expired, res.hung);
+    for _ in 0..cfg.waves.max(1) {
+        free_wave(&handle, mix, cfg.requests_per_wave, cfg, &mut res)?;
+        let replies =
+            pinned_burst(&handle, cfg.victim, mix, mix.len(), cfg, &mut res)?;
+        res.victim_served_after_recovery += replies
+            .iter()
+            .filter(|r| {
+                r.outcome == RequestOutcome::Ok && r.device == cfg.victim
+            })
+            .count();
+    }
+    res.post_recovery_offered = res.offered - before.0;
+    res.post_recovery_errors =
+        (res.errors - before.1) + (res.expired - before.2) + (res.hung - before.3);
+
+    res.breaker_opens = breaker.opens();
+    res.breaker_closes = breaker.closes();
+    drop(handle);
+    let _ = server.shutdown_now();
+    Ok(res)
+}
+
+/// Run the full chaos experiment: three scenarios, fresh fleet each.
+pub fn run(artifacts: &Path, cfg: ChaosConfig) -> Result<ChaosReport> {
+    anyhow::ensure!(
+        cfg.devices.len() >= 2,
+        "chaos needs at least two device classes (victim + failover sibling)"
+    );
+    anyhow::ensure!(
+        cfg.devices.contains(&cfg.victim),
+        "victim {} is not in the fleet",
+        cfg.victim
+    );
+    let manifest = Manifest::load(artifacts)?;
+    let mix = hetero_mix(&manifest, &cfg.devices);
+    anyhow::ensure!(!mix.is_empty(), "no mix triple is servable on every device");
+    let t0 = Instant::now();
+    let scenarios = vec![
+        run_transient(artifacts, &manifest, &mix, &cfg)?,
+        run_sticky(artifacts, &manifest, &mix, &cfg)?,
+        run_latency(artifacts, &manifest, &mix, &cfg)?,
+    ];
+    Ok(ChaosReport { cfg, mix, scenarios, wall: t0.elapsed() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(name: &'static str) -> ScenarioResult {
+        ScenarioResult { name, ..Default::default() }
+    }
+
+    fn report(scenarios: Vec<ScenarioResult>) -> ChaosReport {
+        ChaosReport {
+            cfg: ChaosConfig::default(),
+            mix: vec![Triple::new(64, 64, 64)],
+            scenarios,
+            wall: Duration::from_secs(1),
+        }
+    }
+
+    #[test]
+    fn availability_counts_typed_refusals_not_errors() {
+        let mut s = result("transient");
+        s.offered = 100;
+        s.ok = 96;
+        s.shed = 2;
+        s.quarantined = 1;
+        s.errors = 1;
+        assert!((s.availability() - 0.99).abs() < 1e-12);
+        // Empty scenario is vacuously available (gated elsewhere by ok>0
+        // through bit_identical).
+        assert_eq!(result("x").availability(), 1.0);
+    }
+
+    #[test]
+    fn gates_require_quarantine_recovery_and_served_payloads() {
+        let mut sticky = result("sticky");
+        sticky.offered = 10;
+        sticky.ok = 10;
+        sticky.time_to_quarantine = Some(Duration::from_millis(80));
+        sticky.time_to_recovery = Some(Duration::from_millis(120));
+        sticky.victim_served_after_recovery = 3;
+        sticky.post_recovery_offered = 8;
+        let r = report(vec![sticky]);
+        assert!(r.quarantined());
+        assert!(r.recovered());
+        assert!(r.bit_identical());
+        assert_eq!(r.post_recovery_error_rate(), 0.0);
+        assert_eq!(r.hung(), 0);
+        // A breaker that never closed (or a victim that never served
+        // again) is not a recovery.
+        let mut unrecovered = result("sticky");
+        unrecovered.ok = 1;
+        unrecovered.time_to_quarantine = Some(Duration::from_millis(80));
+        let r = report(vec![unrecovered]);
+        assert!(r.quarantined());
+        assert!(!r.recovered());
+        // Nothing served at all → bit-identity is not vacuously true.
+        let r = report(vec![result("transient")]);
+        assert!(!r.bit_identical());
+    }
+
+    #[test]
+    fn json_carries_the_gate_keys() {
+        let mut sticky = result("sticky");
+        sticky.offered = 4;
+        sticky.ok = 4;
+        sticky.time_to_quarantine = Some(Duration::from_millis(50));
+        sticky.time_to_recovery = Some(Duration::from_millis(70));
+        sticky.victim_served_after_recovery = 1;
+        let r = report(vec![sticky]);
+        let json = r.to_json();
+        assert_eq!(json.get("bench").unwrap().as_str().unwrap(), "chaos");
+        assert!(json.get("chaos_availability_min").unwrap().as_f64().unwrap() > 0.99);
+        assert!(json.get("chaos_quarantined").unwrap().as_bool().unwrap());
+        assert!(json.get("chaos_recovered").unwrap().as_bool().unwrap());
+        assert!(json.get("chaos_bit_identical").unwrap().as_bool().unwrap());
+        assert_eq!(json.get("chaos_hung").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(
+            json.get("chaos_post_recovery_error_rate").unwrap().as_f64().unwrap(),
+            0.0
+        );
+        // The render includes the sticky timing line.
+        let text = r.render();
+        assert!(text.contains("quarantine in 50ms"), "{text}");
+        assert!(text.contains("recovery in 70ms"), "{text}");
+    }
+}

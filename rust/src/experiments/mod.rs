@@ -2,6 +2,7 @@
 //! by the `adaptd exp ...` CLI and the `cargo bench` targets.
 
 pub mod ablation;
+pub mod chaos;
 pub mod context;
 pub mod drift;
 pub mod e2e;

@@ -431,7 +431,10 @@ fn run_point(
         let t = req.triple();
         match handle.try_submit(req) {
             Admission::Enqueued(rx) => pending.push((t, rx)),
-            Admission::Shed { .. } => shed += 1,
+            // No faults are injected in this experiment, so quarantine
+            // refusals should never fire; counting them as sheds keeps
+            // the sweep total honest if they ever do.
+            Admission::Shed { .. } | Admission::Quarantined { .. } => shed += 1,
             Admission::Rejected { reason } => {
                 anyhow::bail!("invalid request in the overload stream: {reason}")
             }

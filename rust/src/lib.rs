@@ -40,6 +40,8 @@ pub mod util;
 pub use config::{DirectParams, KernelConfig, KernelKind, Triple, XgemmParams};
 pub use dataset::{Dataset, DatasetKind};
 pub use device::{DeviceId, DeviceProfile};
-pub use engine::{EngineSpec, ExecutionEngine, RuntimeEngine, SimEngine};
+pub use engine::{
+    EngineSpec, ExecutionEngine, FaultInjector, FaultKind, FaultPlan, RuntimeEngine, SimEngine,
+};
 pub use dtree::DecisionTree;
 pub use metrics::ModelScores;

@@ -12,6 +12,7 @@
 //! adaptd drift     --artifacts artifacts --requests 32 --waves 3
 //! adaptd hetero    --artifacts artifacts --devices host-cpu,p100,mali --waves 2
 //! adaptd overload  --artifacts artifacts --requests 120 --capacity 24 --load 1,2,4
+//! adaptd chaos     --artifacts artifacts --chaos-devices p100,mali --device p100
 //! adaptd bench-compare --baseline BENCH_baseline.json --current BENCH_hotpath.json
 //! adaptd info      --artifacts artifacts
 //! ```
@@ -59,6 +60,9 @@ fn opt_specs() -> Vec<OptSpec> {
         opt("load", "overload: offered-load factors (csv)", Some("1,2,4")),
         opt("pressure-ms", "overload: pressure threshold ms (0 = auto)", Some("0")),
         opt("slowdown", "overload: pressure-pick slowdown bound", Some("1.25")),
+        opt("chaos-devices", "chaos: fleet device classes (csv, sim-only)", Some("p100,mali")),
+        opt("rate", "chaos: transient per-dispatch failure probability", Some("0.25")),
+        opt("seed", "chaos: fault-plan seed", Some("3298844397")),
         opt("baseline", "bench-compare: committed baseline JSON", None),
         opt("current", "bench-compare: freshly produced bench JSON", None),
         opt("tolerance", "bench-compare: relative regression tolerance", Some("0.15")),
@@ -84,6 +88,7 @@ fn commands() -> Vec<(&'static str, &'static str)> {
         ("drift", "workload-shift experiment: online adaptation vs frozen model"),
         ("hetero", "heterogeneous fleet: mixed workload across device classes"),
         ("overload", "offered-load sweep: admission, shedding, pressure picks"),
+        ("chaos", "fault-injection sweep: breakers, retry/failover, recovery"),
         ("bench-compare", "diff bench JSONs and fail on perf regressions"),
         ("info", "describe the artifact roster"),
     ]
@@ -134,6 +139,7 @@ fn run(argv: &[String]) -> Result<()> {
         "drift" => cmd_drift(&args),
         "hetero" => cmd_hetero(&args),
         "overload" => cmd_overload(&args),
+        "chaos" => cmd_chaos(&args),
         "bench-compare" => cmd_bench_compare(&args),
         "info" => cmd_info(&args),
         other => bail!(
@@ -405,6 +411,33 @@ fn cmd_overload(args: &cli::Args) -> Result<()> {
     let report = experiments::overload::run(&artifacts, cfg)?;
     println!("{}", report.render());
     let out = PathBuf::from(args.get_or("out", "BENCH_overload.json"));
+    report.save(&out)?;
+    eprintln!("wrote {}", out.display());
+    Ok(())
+}
+
+/// Chaos experiment: fault injection against a simulated fleet — breaker
+/// quarantine, deadline-aware retry/failover, and HalfOpen recovery;
+/// writes the machine-readable summary the CI chaos gate consumes
+/// (availability floor, zero post-recovery errors, bit-identity, no
+/// hung replies).
+fn cmd_chaos(args: &cli::Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    // The in-code fallbacks mirror the OptSpec defaults (cli::parse
+    // pre-populates those, so these only document the effective values).
+    let cfg = experiments::chaos::ChaosConfig {
+        requests_per_wave: args.get_parse("requests", 24)?,
+        waves: args.get_parse("waves", 2)?,
+        shards_per_class: args.get_parse("shards", 1)?,
+        devices: DeviceId::parse_list(args.get_or("chaos-devices", "p100,mali"))?,
+        victim: device_of(args)?,
+        seed: args.get_parse("seed", 0xC4A0_5EEDu64)?,
+        transient_rate: args.get_parse("rate", 0.25)?,
+        ..experiments::chaos::ChaosConfig::default()
+    };
+    let report = experiments::chaos::run(&artifacts, cfg)?;
+    println!("{}", report.render());
+    let out = PathBuf::from(args.get_or("out", "BENCH_chaos.json"));
     report.save(&out)?;
     eprintln!("wrote {}", out.display());
     Ok(())

@@ -28,7 +28,13 @@
 //!   (a server shedding below capacity is broken admission),
 //!   `depth_bounded` must be true (the queue never grew past its
 //!   configured bound), and `p99_1x_ms` must stay within `tolerance` of
-//!   the committed floor (`overload.p99_1x_ms` in the baseline).
+//!   the committed floor (`overload.p99_1x_ms` in the baseline);
+//! * chaos gates (`BENCH_chaos.json`, keys `chaos_`-prefixed to stay
+//!   clear of the drift `recovered` gate): `chaos_availability_min`
+//!   must meet the committed floor (`chaos.availability_floor` in the
+//!   baseline, default 0.99), `chaos_post_recovery_error_rate` must be
+//!   0, `chaos_quarantined` / `chaos_recovered` / `chaos_bit_identical`
+//!   must be true, and `chaos_hung` must be 0.
 //!
 //! A baseline marked `"provisional": true` (committed before real runner
 //! numbers exist) reports regressions as warnings instead of failures;
@@ -333,6 +339,73 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> BenchDiff {
         ));
     }
 
+    // Chaos gates (`BENCH_chaos.json`, `chaos_`-prefixed keys so the
+    // drift `recovered` gate below never collides).  The structural
+    // guarantees are self-contained in the current file: a hung reply,
+    // a post-recovery error, a breaker that never quarantined a dead
+    // device (or never recovered a revived one), and a payload that
+    // deviated from the oracle are wrong at *any* baseline.  Only the
+    // availability floor consults the baseline (`chaos.availability_floor`,
+    // defaulting to 0.99).
+    if let Ok(avail) = current
+        .get("chaos_availability_min")
+        .and_then(|a| a.as_f64())
+    {
+        diff.compared += 1;
+        let floor = baseline
+            .get("chaos")
+            .ok()
+            .and_then(|c| num_at(c, "availability_floor"))
+            .unwrap_or(0.99);
+        diff.lines.push(format!(
+            "chaos availability min: {:.4} (floor {floor:.4})",
+            avail
+        ));
+        if avail < floor {
+            diff.regressions.push(format!(
+                "chaos: availability {avail:.4} under injected faults fell \
+                 below the floor {floor:.4}"
+            ));
+        }
+        // The remaining chaos gates only run when the headline key is
+        // present, so a chaos-less bench file never trips them.
+        if let Ok(rate) = current
+            .get("chaos_post_recovery_error_rate")
+            .and_then(|r| r.as_f64())
+        {
+            diff.lines
+                .push(format!("chaos post-recovery error rate: {rate:.4}"));
+            if rate > 0.0 {
+                diff.regressions.push(format!(
+                    "chaos: {:.2}% of post-recovery requests errored — the \
+                     revived device must serve cleanly",
+                    rate * 100.0
+                ));
+            }
+        }
+        for (key, what) in [
+            ("chaos_quarantined", "breaker never quarantined the dead device"),
+            ("chaos_recovered", "revived device never closed its breaker and served"),
+            ("chaos_bit_identical", "served payloads deviated from the oracle"),
+        ] {
+            if let Ok(ok) = current.get(key).and_then(|b| b.as_bool()) {
+                diff.lines.push(format!("{key}: {ok}"));
+                if !ok {
+                    diff.regressions.push(format!("chaos: {what}"));
+                }
+            }
+        }
+        if let Ok(hung) = current.get("chaos_hung").and_then(|h| h.as_f64()) {
+            diff.lines.push(format!("chaos hung replies: {hung:.0}"));
+            if hung > 0.0 {
+                diff.regressions.push(format!(
+                    "chaos: {hung:.0} replies never arrived — every admitted \
+                     request must get a typed answer"
+                ));
+            }
+        }
+    }
+
     // Drift recovery: the fresh run must not report a lost recovery.
     if let Ok(rec) = current.get("recovered").and_then(|r| r.as_bool()) {
         diff.compared += 1;
@@ -598,6 +671,52 @@ mod tests {
         let diff = compare(&no_floor, &cur(0.0, true, 99.0), 0.15);
         assert_eq!(diff.compared, 2);
         assert!(diff.passes(), "{:?}", diff.regressions);
+    }
+
+    #[test]
+    fn chaos_gates_availability_recovery_and_hangs() {
+        let base =
+            Json::parse(r#"{"bench":"hotpath","chaos":{"availability_floor":0.995}}"#)
+                .unwrap();
+        let cur = |avail: f64, err: f64, rec: bool, hung: u32| {
+            Json::parse(&format!(
+                r#"{{"bench":"chaos","chaos_availability_min":{avail},
+                     "chaos_post_recovery_error_rate":{err},
+                     "chaos_quarantined":true,"chaos_recovered":{rec},
+                     "chaos_bit_identical":true,"chaos_hung":{hung}}}"#
+            ))
+            .unwrap()
+        };
+        // Clean run passes; the availability gate is the one compared.
+        let diff = compare(&base, &cur(1.0, 0.0, true, 0), 0.15);
+        assert_eq!(diff.compared, 1);
+        assert!(diff.passes(), "{:?}", diff.regressions);
+        // Availability under the committed floor fails.
+        let diff = compare(&base, &cur(0.99, 0.0, true, 0), 0.15);
+        assert!(!diff.passes());
+        assert!(diff.regressions[0].contains("availability"));
+        // Baseline without a chaos section defaults the floor to 0.99.
+        let no_floor = Json::parse(r#"{"bench":"hotpath"}"#).unwrap();
+        assert!(compare(&no_floor, &cur(0.992, 0.0, true, 0), 0.15).passes());
+        assert!(!compare(&no_floor, &cur(0.97, 0.0, true, 0), 0.15).passes());
+        // Any post-recovery error fails.
+        let diff = compare(&base, &cur(1.0, 0.01, true, 0), 0.15);
+        assert!(!diff.passes());
+        assert!(diff.regressions[0].contains("post-recovery"));
+        // A lost recovery fails (drift's `recovered` key is absent, so
+        // only the chaos gate can have fired).
+        let diff = compare(&base, &cur(1.0, 0.0, false, 0), 0.15);
+        assert!(!diff.passes());
+        assert!(diff.regressions[0].contains("never closed its breaker"));
+        // A hung reply fails.
+        let diff = compare(&base, &cur(1.0, 0.0, true, 1), 0.15);
+        assert!(!diff.passes());
+        assert!(diff.regressions[0].contains("never arrived"));
+        // A chaos-less current file trips none of the chaos gates.
+        let hot = Json::parse(r#"{"bench":"hotpath","shed_rate_1x":0.0}"#).unwrap();
+        let diff = compare(&base, &hot, 0.15);
+        assert!(diff.passes(), "{:?}", diff.regressions);
+        assert!(!diff.lines.iter().any(|l| l.contains("chaos")));
     }
 
     #[test]

@@ -1,0 +1,309 @@
+//! Property tests (proptest-lite) for the circuit-breaker state machine:
+//! the lock-free packed-word design must never tear under racing shards,
+//! `HalfOpen` must never admit more concurrent probes than its budget,
+//! `Open` must never serve non-probe traffic, and the generation counter
+//! must be monotonic (one bump per state transition).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Barrier};
+use std::thread;
+use std::time::Duration;
+
+use adaptlib::coordinator::{BreakerAdmit, BreakerConfig, BreakerState, CircuitBreaker};
+use adaptlib::testing::{assert_prop, PropConfig, RangeU32, Strategy};
+use adaptlib::util::prng::Rng;
+
+/// A breaker whose rate rule can never fire (`errors/total <= 1 < 2`),
+/// so only the consecutive-failure rule trips — the reference model
+/// below stays exact.
+fn consecutive_only(consecutive: u32, cooldown: Duration, budget: u32) -> BreakerConfig {
+    BreakerConfig {
+        consecutive_failures: consecutive,
+        error_rate: 2.0,
+        cooldown,
+        probe_budget: budget,
+        probe_successes: 2,
+        ..BreakerConfig::default()
+    }
+}
+
+/// A random success/failure dispatch sequence.
+struct OutcomeSeq {
+    max_len: usize,
+}
+
+impl Strategy for OutcomeSeq {
+    type Value = Vec<bool>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<bool> {
+        let len = rng.below(self.max_len as u64 + 1) as usize;
+        (0..len).map(|_| rng.below(2) == 1).collect()
+    }
+
+    fn shrink(&self, v: &Vec<bool>) -> Vec<Vec<bool>> {
+        let mut out = Vec::new();
+        if !v.is_empty() {
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[1..].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        out
+    }
+}
+
+/// Against any dispatch sequence, the breaker matches a straightforward
+/// reference model of the consecutive-failure rule, and while `Open`
+/// (cooldown far away) it rejects every non-probe admit.
+#[test]
+fn consecutive_failure_rule_matches_reference_model() {
+    let seqs = OutcomeSeq { max_len: 80 };
+    let threshold = RangeU32 { lo: 1, hi: 6 };
+    let cfg = PropConfig { cases: 60, ..PropConfig::default() };
+    assert_prop(&cfg, &threshold, |&f| {
+        let mut rng = Rng::new(0xBEEF ^ u64::from(f));
+        for _ in 0..20 {
+            let seq = seqs.generate(&mut rng);
+            let breaker =
+                CircuitBreaker::new(consecutive_only(f, Duration::from_secs(3600), 3));
+            let mut consecutive = 0u32;
+            let mut open = false;
+            for (i, &fail) in seq.iter().enumerate() {
+                if open {
+                    // Open far from cooldown: never serves, records no-op.
+                    if !matches!(breaker.admit(), BreakerAdmit::Reject) {
+                        return Err(format!(
+                            "open breaker served non-probe traffic at step {i} \
+                             (threshold {f}, seq {seq:?})"
+                        ));
+                    }
+                    breaker.record_failure();
+                    continue;
+                }
+                match breaker.admit() {
+                    BreakerAdmit::Serve => {}
+                    other => {
+                        return Err(format!(
+                            "closed breaker refused ({other:?}) at step {i} \
+                             (threshold {f}, seq {seq:?})"
+                        ))
+                    }
+                }
+                if fail {
+                    breaker.record_failure();
+                    consecutive += 1;
+                    if consecutive >= f {
+                        open = true;
+                    }
+                } else {
+                    breaker.record_success();
+                    consecutive = 0;
+                }
+                let want = if open { BreakerState::Open } else { BreakerState::Closed };
+                if breaker.state() != want {
+                    return Err(format!(
+                        "state {:?} != model {want:?} after step {i} \
+                         (threshold {f}, seq {seq:?})",
+                        breaker.state()
+                    ));
+                }
+            }
+            let transitions =
+                breaker.opens() + breaker.half_opens() + breaker.closes();
+            if breaker.generation() != transitions {
+                return Err(format!(
+                    "generation {} != transition count {transitions}",
+                    breaker.generation()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// `HalfOpen` admits at most `probe_budget` concurrent probes, no matter
+/// how many shards race `admit()`; settled successes close it again.
+#[test]
+fn half_open_never_exceeds_probe_budget() {
+    let budgets = RangeU32 { lo: 1, hi: 4 };
+    let cfg = PropConfig { cases: 12, ..PropConfig::default() };
+    assert_prop(&cfg, &budgets, |&budget| {
+        let breaker = Arc::new(CircuitBreaker::new(consecutive_only(
+            2,
+            Duration::ZERO,
+            budget,
+        )));
+        breaker.record_failure();
+        breaker.record_failure();
+        if breaker.state() != BreakerState::Open {
+            return Err("two failures must trip a threshold-2 breaker".into());
+        }
+
+        // Race 8 shards through admit() with no one settling: the zero
+        // cooldown lets the first arrival flip Open -> HalfOpen, and the
+        // probe gauge must cap concurrent Probe admissions at the budget.
+        let threads = 8;
+        let barrier = Arc::new(Barrier::new(threads));
+        let (tx, rx) = mpsc::channel();
+        let mut handles = Vec::new();
+        for _ in 0..threads {
+            let b = Arc::clone(&breaker);
+            let gate = Arc::clone(&barrier);
+            let out = tx.clone();
+            handles.push(thread::spawn(move || {
+                gate.wait();
+                out.send(b.admit()).unwrap();
+            }));
+        }
+        drop(tx);
+        for h in handles {
+            h.join().unwrap();
+        }
+        let admits: Vec<BreakerAdmit> = rx.iter().collect();
+        let probes =
+            admits.iter().filter(|a| matches!(a, BreakerAdmit::Probe)).count();
+        let serves =
+            admits.iter().filter(|a| matches!(a, BreakerAdmit::Serve)).count();
+        if serves != 0 {
+            return Err(format!(
+                "HalfOpen served {serves} non-probe requests (budget {budget})"
+            ));
+        }
+        if probes == 0 || probes > budget as usize {
+            return Err(format!(
+                "HalfOpen admitted {probes} concurrent probes (budget {budget})"
+            ));
+        }
+        if breaker.state() != BreakerState::HalfOpen {
+            return Err(format!("expected HalfOpen, got {:?}", breaker.state()));
+        }
+
+        // Fail one probe: straight back to Open; the rest are stale and
+        // settle as no-ops.
+        breaker.record_probe(false);
+        if breaker.state() != BreakerState::Open {
+            return Err("a failed probe must reopen the breaker".into());
+        }
+        for _ in 1..probes {
+            breaker.record_probe(true);
+        }
+
+        // Fresh probe round: `probe_successes` clean probes close it.
+        let mut settled = 0;
+        while settled < breaker.config().probe_successes {
+            match breaker.admit() {
+                BreakerAdmit::Probe => {
+                    breaker.record_probe(true);
+                    settled += 1;
+                }
+                BreakerAdmit::Reject => {}
+                BreakerAdmit::Serve => {
+                    return Err("served while not Closed".into())
+                }
+            }
+            if breaker.state() == BreakerState::Closed {
+                break;
+            }
+        }
+        if breaker.state() != BreakerState::Closed {
+            return Err(format!(
+                "probe successes did not close the breaker (state {:?})",
+                breaker.state()
+            ));
+        }
+        if breaker.admit() != BreakerAdmit::Serve {
+            return Err("closed breaker must serve".into());
+        }
+        Ok(())
+    });
+}
+
+/// Racing shards never tear the packed word: a watcher observes the
+/// generation counter strictly non-decreasing while workers hammer the
+/// full admit/settle lifecycle, and the final generation equals the
+/// total number of observed transitions.
+#[test]
+fn racing_shards_keep_generation_monotonic_and_untorn() {
+    let breaker = Arc::new(CircuitBreaker::new(BreakerConfig {
+        consecutive_failures: 3,
+        error_rate: 2.0,
+        cooldown: Duration::from_micros(200),
+        probe_budget: 2,
+        probe_successes: 1,
+        ..BreakerConfig::default()
+    }));
+    let stop = Arc::new(AtomicU64::new(0));
+
+    // Watcher: generation must never move backwards (a torn or
+    // double-applied transition would show up as a regression here).
+    let watcher = {
+        let b = Arc::clone(&breaker);
+        let stop = Arc::clone(&stop);
+        thread::spawn(move || {
+            let mut last = 0u64;
+            let mut observed_states = [false; 3];
+            while stop.load(Ordering::Acquire) == 0 {
+                let g = b.generation();
+                assert!(
+                    g >= last,
+                    "generation moved backwards: {last} -> {g} (torn transition)"
+                );
+                last = g;
+                match b.state() {
+                    BreakerState::Closed => observed_states[0] = true,
+                    BreakerState::Open => observed_states[1] = true,
+                    BreakerState::HalfOpen => observed_states[2] = true,
+                }
+                std::hint::spin_loop();
+            }
+            (last, observed_states)
+        })
+    };
+
+    let workers: Vec<_> = (0..6)
+        .map(|w| {
+            let b = Arc::clone(&breaker);
+            thread::spawn(move || {
+                let mut rng = Rng::new(0x5EED ^ w as u64);
+                for _ in 0..400 {
+                    match b.admit() {
+                        BreakerAdmit::Serve => {
+                            // Fail often enough to keep tripping.
+                            if rng.below(3) == 0 {
+                                b.record_failure();
+                            } else {
+                                b.record_success();
+                            }
+                        }
+                        BreakerAdmit::Probe => {
+                            b.record_probe(rng.below(2) == 0);
+                        }
+                        BreakerAdmit::Reject => {
+                            thread::sleep(Duration::from_micros(50));
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+    stop.store(1, Ordering::Release);
+    let (last_seen, observed) = watcher.join().unwrap();
+
+    let transitions = breaker.opens() + breaker.half_opens() + breaker.closes();
+    assert_eq!(
+        breaker.generation(),
+        transitions,
+        "every generation bump must correspond to exactly one counted transition"
+    );
+    assert!(breaker.generation() >= last_seen);
+    // Structural transition order: every HalfOpen follows an Open, every
+    // Close follows a HalfOpen.
+    assert!(breaker.half_opens() <= breaker.opens());
+    assert!(breaker.closes() <= breaker.half_opens());
+    // The stress actually exercised the machine (failure mix + short
+    // cooldown guarantee at least one full trip).
+    assert!(breaker.opens() >= 1, "stress never tripped the breaker");
+    assert!(observed[1], "watcher never observed Open");
+}

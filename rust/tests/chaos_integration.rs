@@ -1,0 +1,215 @@
+//! Integration: fault injection against the fleet — sibling failover
+//! bit-identity, the fused-batch individual-retry path, and the
+//! shutdown/fault race (every admitted envelope gets exactly one typed
+//! response, no matter how retry, failover and drain interleave).
+//! Skips when `make artifacts` has not run (the simulated engines still
+//! load kernel metadata from the real manifest).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use adaptlib::coordinator::{
+    Admission, DeviceClass, GemmResponse, GemmServer, RequestOutcome, ServerConfig,
+};
+use adaptlib::device::DeviceId;
+use adaptlib::engine::{FaultKind, FaultPlan};
+use adaptlib::experiments::hetero::device_policy;
+use adaptlib::runtime::Manifest;
+use adaptlib::testing::fill_request;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+const VICTIM: DeviceId = DeviceId::NvidiaP100;
+const SIBLING: DeviceId = DeviceId::MaliT860;
+
+/// Shapes servable on both simulated classes (Mali's legal roster tops
+/// out at the 128^3 bucket).
+const SHAPES: [(usize, usize, usize); 2] = [(64, 64, 64), (100, 100, 100)];
+
+/// Two simulated classes; the victim carries `plan`.
+fn fleet(
+    dir: &std::path::Path,
+    plan: &FaultPlan,
+    cfg: ServerConfig,
+) -> GemmServer {
+    let manifest = Manifest::load(dir).unwrap();
+    let classes = vec![
+        DeviceClass::new(VICTIM, 1, device_policy(&manifest, VICTIM).unwrap())
+            .with_fault_plan(plan.clone()),
+        DeviceClass::new(SIBLING, 1, device_policy(&manifest, SIBLING).unwrap()),
+    ];
+    GemmServer::start_fleet(dir, classes, cfg).unwrap()
+}
+
+/// The exact oracle: `fill_request(m, n, k, fill)` makes every output
+/// element `fill * k`, and the simulated engines compute real GEMMs, so
+/// equality is exact (`==`, not approx) across retries and failovers.
+fn assert_exact(resp: &GemmResponse, k: usize, fill: f32, what: &str) {
+    let out = resp.out.as_ref().unwrap_or_else(|e| panic!("{what}: {e:#}"));
+    let expect = fill * k as f32;
+    assert!(
+        out.iter().all(|&x| x == expect),
+        "{what}: payload deviated from {expect} (device {}, retries {})",
+        resp.device,
+        resp.retries
+    );
+}
+
+/// A dead-from-the-start victim: every pinned request fails its victim
+/// dispatch and must fail over to the sibling with a bit-identical
+/// payload, stamped `routed == victim`, `device == sibling`.
+#[test]
+fn sticky_fault_fails_over_bit_identically() {
+    let Some(dir) = artifacts_dir() else { return };
+    let plan = FaultPlan::new(7);
+    plan.kill_now();
+    // Stay under the default consecutive-failure threshold (8) so the
+    // victim's breaker keeps admitting and every request exercises the
+    // dispatch-failure -> failover path rather than the quarantine path.
+    let server = fleet(&dir, &plan, ServerConfig::default());
+    let handle = server.handle();
+    let mut pending = Vec::new();
+    for i in 0..6 {
+        let (m, n, k) = SHAPES[i % SHAPES.len()];
+        let fill = 0.5 + i as f32 * 0.25;
+        let Some(Admission::Enqueued(rx)) =
+            handle.try_submit_to(VICTIM, fill_request(m, n, k, fill))
+        else {
+            panic!("pinned submit refused with an empty queue");
+        };
+        pending.push((k, fill, rx));
+    }
+    for (k, fill, rx) in pending {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).expect("hung reply");
+        assert_eq!(resp.outcome, RequestOutcome::Ok, "{:?}", resp.out);
+        assert_exact(&resp, k, fill, "failover payload");
+        assert_eq!(resp.routed, VICTIM, "routed class must stay the original");
+        assert_eq!(resp.device, SIBLING, "must be served by the sibling");
+        assert!(resp.failover, "failover must be stamped");
+        assert!(resp.retries >= 1, "a failover consumes a retry");
+    }
+    drop(handle);
+    server.shutdown();
+}
+
+/// A flaky victim under fused traffic: failed batch dispatches re-run
+/// members individually (same engine) and fail over the stragglers; with
+/// a healthy sibling and retry budget 2 every request must still answer
+/// Ok, bit-identically.
+#[test]
+fn fused_batch_retry_is_bit_identical() {
+    let Some(dir) = artifacts_dir() else { return };
+    let plan = FaultPlan::new(0xFA11)
+        .with_fault(None, FaultKind::Transient { rate: 0.35 });
+    let server = fleet(&dir, &plan, ServerConfig::default());
+    let handle = server.handle();
+    // Same-shape burst pinned to the victim: the window fuses them, so a
+    // single injected fault poisons a whole batch and the per-member
+    // retry path runs.
+    let (m, n, k) = SHAPES[0];
+    let fill = 1.5f32;
+    let mut pending = Vec::new();
+    for _ in 0..48 {
+        match handle.try_submit_to(VICTIM, fill_request(m, n, k, fill)) {
+            Some(Admission::Enqueued(rx)) => pending.push(rx),
+            // The victim's breaker may trip mid-burst (enough injected
+            // failures accumulate) — a typed refusal, not a lost request.
+            Some(_) => {}
+            None => panic!("victim class missing"),
+        }
+    }
+    assert!(!pending.is_empty(), "nothing admitted");
+    let mut retried = 0;
+    let mut failed_over = 0;
+    for rx in pending {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).expect("hung reply");
+        assert_eq!(
+            resp.outcome,
+            RequestOutcome::Ok,
+            "with a healthy sibling every request must answer Ok: {:?}",
+            resp.out
+        );
+        assert_exact(&resp, k, fill, "fused-retry payload");
+        if resp.retries > 0 {
+            retried += 1;
+        }
+        if resp.failover {
+            failed_over += 1;
+        }
+    }
+    assert!(
+        retried > 0,
+        "a 35% transient rate over 48 fused requests must trip at least \
+         one retry (seeded plan: deterministic fault schedule)"
+    );
+    // Not asserted: the retried/failed_over split — it depends on which
+    // dispatch index each member's individual retry lands on.
+    let _ = failed_over;
+    drop(handle);
+    server.shutdown();
+}
+
+/// The drain race: kill the victim mid-stream and `shutdown_now` with
+/// requests still in flight.  Every admitted envelope must produce
+/// exactly one typed response — Ok, Error, Drained or Quarantined —
+/// never zero (hang) and never two.
+#[test]
+fn shutdown_now_race_yields_exactly_one_typed_reply_each() {
+    let Some(dir) = artifacts_dir() else { return };
+    let plan = FaultPlan::new(99);
+    let server = fleet(&dir, &plan, ServerConfig::default());
+    let handle = server.handle();
+    let mut pending = Vec::new();
+    // Free wave while healthy.
+    for (i, &(m, n, k)) in SHAPES.iter().cycle().take(8).enumerate() {
+        let fill = 1.0 + i as f32;
+        pending.push((k, fill, handle.submit(fill_request(m, n, k, fill))));
+    }
+    // Kill the victim and immediately pile on pinned traffic, then pull
+    // the plug while those envelopes are anywhere between the queue, a
+    // failed dispatch, an individual retry and a failover hop.
+    plan.kill_now();
+    for (i, &(m, n, k)) in SHAPES.iter().cycle().take(16).enumerate() {
+        let fill = 2.0 + i as f32;
+        if let Some(Admission::Enqueued(rx)) =
+            handle.try_submit_to(VICTIM, fill_request(m, n, k, fill))
+        {
+            pending.push((k, fill, rx));
+        }
+        // Shed/Quarantined refusals hand the request back typed at the
+        // submit site — nothing pending to account for.
+    }
+    drop(handle);
+    let stats = server.shutdown_now().expect("first shutdown wins");
+    let mut outcomes = std::collections::BTreeMap::<&str, usize>::new();
+    for (k, fill, rx) in &pending {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("an admitted envelope never answered");
+        let label = match resp.outcome {
+            RequestOutcome::Ok => {
+                assert_exact(&resp, *k, *fill, "race-window payload");
+                "ok"
+            }
+            RequestOutcome::Error => "error",
+            RequestOutcome::Drained => "drained",
+            RequestOutcome::Expired => "expired",
+            RequestOutcome::Quarantined => "quarantined",
+        };
+        *outcomes.entry(label).or_insert(0) += 1;
+        // Exactly one: the worker hung up after answering, so a second
+        // message can only be a double-send bug.
+        assert!(
+            rx.try_recv().is_err(),
+            "envelope answered twice ({label})"
+        );
+    }
+    let answered: usize = outcomes.values().sum();
+    assert_eq!(answered, pending.len(), "typed-answer accounting: {outcomes:?}");
+    // The healthy free wave ran before the kill; at least part of it
+    // must have served (shutdown_now drains whatever already dispatched).
+    let _ = stats;
+}

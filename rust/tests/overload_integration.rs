@@ -83,6 +83,9 @@ fn flood_past_queue_bound_sheds_typed_and_recovers() {
                 assert_eq!((req.m, req.n, req.k), (128, 128, 128));
             }
             Admission::Rejected { reason } => panic!("valid request rejected: {reason}"),
+            Admission::Quarantined { .. } => {
+                panic!("no faults injected: the breaker must stay closed")
+            }
         }
     }
     assert!(sheds > 0, "64 instant submissions must overflow a bound of 4");
@@ -334,6 +337,9 @@ fn saturated_class_sheds_to_servable_sibling() {
                 Admission::Enqueued(rx) => fills.push(rx),
                 Admission::Shed { .. } => break,
                 Admission::Rejected { reason } => panic!("{reason}"),
+                Admission::Quarantined { .. } => {
+                    panic!("no faults injected: the breaker must stay closed")
+                }
             }
         }
         // A free-routed request must be admitted — the saturated class
