@@ -12,7 +12,8 @@ use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
-use adaptlib::config::KernelConfig;
+use adaptlib::config::{KernelConfig, SimdTier};
+use adaptlib::device::microkernel;
 use adaptlib::coordinator::{
     DefaultPolicy, GemmRequest, GemmServer, PolicyHandle, ServerConfig,
 };
@@ -20,8 +21,8 @@ use adaptlib::engine::{ExecutionEngine, RuntimeEngine};
 use adaptlib::experiments::e2e;
 use adaptlib::harness::{black_box, BenchConfig, Suite};
 use adaptlib::runtime::{
-    pad, ArtifactKind, BatchScratch, GemmInput, GemmRuntime, PjrtBackend,
-    ScratchBuffers,
+    pad, ArtifactId, ArtifactKind, BatchScratch, GemmInput, GemmRuntime,
+    PjrtBackend, ScratchBuffers,
 };
 use adaptlib::util::json::Json;
 use adaptlib::util::prng::Rng;
@@ -388,6 +389,115 @@ fn bench_pjrt(
          ({alloc_fused} allocations over {batch_iters} B=16 batches)"
     );
 
+    // ------------------------------------------------------------------
+    // Host SIMD microkernel variants: per-shape speedup of the best
+    // servable tier over the scalar reference variant through
+    // `gemm_pooled` (same padded buffers, same unpad — only the inner
+    // kernel differs, and every tier is bit-identical by construction),
+    // plus the fused-path speedup over sequential scalar dispatches.
+    // `bench-compare` gates these ratios against the baseline floors.
+    suite.section("host SIMD microkernel variants (128-bucket)");
+    let host_ids: Vec<(adaptlib::config::HostParams, ArtifactId)> = rt
+        .manifest
+        .artifacts
+        .iter()
+        .enumerate()
+        .filter_map(|(i, a)| match (a.kind, a.config) {
+            (
+                ArtifactKind::Indirect { mb: 128, nb: 128, kb: 128 },
+                KernelConfig::HostSimd(p),
+            ) => Some((p, ArtifactId(i as u32))),
+            _ => None,
+        })
+        .collect();
+    let scalar_id = host_ids
+        .iter()
+        .find(|(p, _)| p.tier == SimdTier::Scalar)
+        .expect("manifest expansion provides a scalar variant")
+        .1;
+    let (best_p, best_id) = host_ids
+        .iter()
+        .filter(|(p, _)| microkernel::tier_supported(p.tier))
+        .max_by_key(|(p, _)| (p.tier, p.mr * p.nr, p.ku))
+        .copied()
+        .expect("the scalar tier is always servable");
+    println!(
+        "detected simd tier: {} — benchmarking {} against the scalar variant",
+        microkernel::detected_tier(),
+        best_p.name(),
+    );
+    let mut simd_rows = Vec::new();
+    for (label, shape_input) in
+        [("128^3(m==mb)", &input), ("100^3(padded)", &input2)]
+    {
+        let scalar_name = format!("gemm_pooled:simd:scalar:{label}");
+        suite.bench(&scalar_name, || {
+            rt.gemm_pooled(scalar_id, shape_input, &mut scratch).unwrap();
+            black_box(scratch.out[0])
+        });
+        // Stable name across hosts (the detected tier varies by machine;
+        // it is recorded in the `simd` object, not the result name).
+        let best_name = format!("gemm_pooled:simd:best:{label}");
+        suite.bench(&best_name, || {
+            rt.gemm_pooled(best_id, shape_input, &mut scratch).unwrap();
+            black_box(scratch.out[0])
+        });
+        let scalar_s = median_of(suite, &scalar_name);
+        let best_s = median_of(suite, &best_name);
+        let speedup = if best_s > 0.0 { scalar_s / best_s } else { 0.0 };
+        println!(
+            "simd {label}: scalar {scalar_s:.3e}s vs {} {best_s:.3e}s \
+             ({speedup:.2}x)",
+            best_p.tier,
+        );
+        simd_rows.push(Json::obj(vec![
+            ("shape", Json::str(label)),
+            ("scalar_s", Json::num(scalar_s)),
+            ("best_s", Json::num(best_s)),
+            ("speedup", Json::num(speedup)),
+        ]));
+    }
+    // Fused floor: a B=8 fused dispatch of the best variant, per
+    // request, against sequential scalar-variant dispatches.
+    let inputs8: Vec<GemmInput> = vec![input2.clone(); 8];
+    suite.bench("gemm_batch_pooled:simd:best:100^3:B8", || {
+        rt.gemm_batch_pooled(best_id, &inputs8, &mut batch).unwrap();
+        black_box(batch.out[0])
+    });
+    let fused_per_req =
+        median_of(suite, "gemm_batch_pooled:simd:best:100^3:B8") / 8.0;
+    let scalar_per_req = median_of(suite, "gemm_pooled:simd:scalar:100^3(padded)");
+    let fused_speedup =
+        if fused_per_req > 0.0 { scalar_per_req / fused_per_req } else { 0.0 };
+    println!(
+        "simd fused B=8: {fused_per_req:.3e}s/req vs scalar \
+         {scalar_per_req:.3e}s/req ({fused_speedup:.2}x)"
+    );
+    extra.push((
+        "simd",
+        Json::obj(vec![
+            ("tier", Json::str(microkernel::detected_tier().name())),
+            ("variant", Json::str(best_p.name())),
+            ("shapes", Json::Arr(simd_rows)),
+            ("fused_speedup_vs_scalar", Json::num(fused_speedup)),
+        ]),
+    ));
+    // The variant dispatch rides the same pooled scratch: it must keep
+    // the zero-allocation contract (stack accumulators only).
+    let alloc_simd = allocs_total(iters, || {
+        rt.gemm_pooled(best_id, &input2, &mut scratch).unwrap();
+        black_box(scratch.out[0]);
+    });
+    println!(
+        "allocs/request simd pooled over {iters} requests: {:.1}",
+        alloc_simd as f64 / iters as f64,
+    );
+    assert_eq!(
+        alloc_simd, 0,
+        "microkernel pooled path must not allocate at steady state \
+         ({alloc_simd} allocations over {iters} requests)"
+    );
+
     extra.push((
         "allocs_per_request",
         Json::obj(vec![
@@ -398,6 +508,7 @@ fn bench_pjrt(
                 Json::num(alloc_pooled_handle as f64 / iters as f64),
             ),
             ("engine_pooled", Json::num(alloc_engine as f64 / iters as f64)),
+            ("simd_pooled", Json::num(alloc_simd as f64 / iters as f64)),
             (
                 "fused_pooled",
                 Json::num(alloc_fused as f64 / (batch_iters * 16) as f64),

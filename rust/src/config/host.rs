@@ -1,0 +1,198 @@
+//! The `host_simd` kernel's tuning space: cache-blocked SIMD microkernel
+//! variants of the host GEMM inner loop, multi-versioned in the "A Few
+//! Fit Most" sense — a small roster of (instruction tier, register tile,
+//! unroll) points the adaptive loop selects between per shape, instead of
+//! one hard-coded kernel.  Every variant is bit-identical to the scalar
+//! reference (same f64 accumulation order per output element), so tier
+//! selection is purely a performance decision.
+
+use crate::util::json::{Json, JsonError};
+
+/// Instruction-set tier a microkernel variant is compiled against.
+/// Ordered by capability: a variant is *servable* on a host whose
+/// detected tier is at least the variant's tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SimdTier {
+    /// Portable scalar loop — always available, the reference kernel.
+    Scalar,
+    /// 128-bit SSE2 lanes (2 × f64 per accumulator register).
+    Sse128,
+    /// 256-bit AVX2 + FMA lanes (4 × f64 per accumulator register).
+    Avx2Fma,
+}
+
+impl SimdTier {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdTier::Scalar => "scalar",
+            SimdTier::Sse128 => "sse",
+            SimdTier::Avx2Fma => "avx2",
+        }
+    }
+
+    /// f64 lanes per vector register of this tier.
+    pub fn lanes(&self) -> u32 {
+        match self {
+            SimdTier::Scalar => 1,
+            SimdTier::Sse128 => 2,
+            SimdTier::Avx2Fma => 4,
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<SimdTier> {
+        match s {
+            "scalar" => Some(SimdTier::Scalar),
+            "sse" => Some(SimdTier::Sse128),
+            "avx2" => Some(SimdTier::Avx2Fma),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for SimdTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One point of the host microkernel variant space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct HostParams {
+    pub tier: SimdTier,
+    /// Microkernel register-tile rows of C.
+    pub mr: u32,
+    /// Microkernel register-tile cols of C.
+    pub nr: u32,
+    /// K-loop unroll factor.
+    pub ku: u32,
+}
+
+/// Hard tile bound the executor's stack accumulators are sized for.
+pub const MAX_TILE: u32 = 8;
+
+impl HostParams {
+    /// Structural legality: tiles fit the fixed-size stack accumulator
+    /// and the unroll factor is a small power of two.
+    pub fn is_structurally_legal(&self) -> bool {
+        (1..=MAX_TILE).contains(&self.mr)
+            && (1..=MAX_TILE).contains(&self.nr)
+            && matches!(self.ku, 1 | 2 | 4 | 8)
+    }
+
+    /// Accumulator footprint of one microkernel step (f64 per element).
+    pub fn scratch_bytes(&self) -> u64 {
+        (self.mr * self.nr) as u64 * 8
+    }
+
+    pub fn name(&self) -> String {
+        format!("h_{}_t{}x{}_u{}", self.tier.name(), self.mr, self.nr, self.ku)
+    }
+
+    /// A compact stable u64 fingerprint (used for deterministic sim noise).
+    pub fn fingerprint(&self) -> u64 {
+        let fields = [self.tier.lanes(), self.mr, self.nr, self.ku];
+        fields
+            .iter()
+            .fold(0x9ce4_8422_cbf2_2325u64, |h, &f| {
+                (h ^ f as u64).wrapping_mul(0x100_0000_01b3)
+            })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tier", Json::str(self.tier.name())),
+            ("mr", Json::num(self.mr)),
+            ("nr", Json::num(self.nr)),
+            ("ku", Json::num(self.ku)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        let tier_name = v.get("tier")?.as_str()?;
+        let tier = SimdTier::from_name(tier_name).ok_or(JsonError::Type(
+            "simd tier",
+            Box::leak(tier_name.to_string().into_boxed_str()),
+        ))?;
+        Ok(HostParams {
+            tier,
+            mr: v.get("mr")?.as_u32()?,
+            nr: v.get("nr")?.as_u32()?,
+            ku: v.get_or("ku", &Json::Num(1.0)).as_u32()?,
+        })
+    }
+}
+
+/// The shipped variant roster: the multi-versioned points the manifest
+/// expands every indirect padding bucket by.  Small on purpose — the "A
+/// Few Fit Most" result is that a handful of variants plus a learned
+/// selector covers the input space; each tier contributes tile/unroll
+/// points the CART can prefer per shape.
+pub fn host_variants() -> Vec<HostParams> {
+    vec![
+        HostParams { tier: SimdTier::Scalar, mr: 8, nr: 8, ku: 1 },
+        HostParams { tier: SimdTier::Sse128, mr: 4, nr: 4, ku: 2 },
+        HostParams { tier: SimdTier::Avx2Fma, mr: 8, nr: 8, ku: 4 },
+        HostParams { tier: SimdTier::Avx2Fma, mr: 4, nr: 8, ku: 2 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_ordering_is_capability_ordering() {
+        assert!(SimdTier::Scalar < SimdTier::Sse128);
+        assert!(SimdTier::Sse128 < SimdTier::Avx2Fma);
+    }
+
+    #[test]
+    fn tier_names_roundtrip() {
+        for t in [SimdTier::Scalar, SimdTier::Sse128, SimdTier::Avx2Fma] {
+            assert_eq!(SimdTier::from_name(t.name()), Some(t));
+        }
+        assert_eq!(SimdTier::from_name("neon"), None);
+    }
+
+    #[test]
+    fn variants_are_legal_and_uniquely_named() {
+        let vs = host_variants();
+        assert!(vs.len() >= 3, "need at least one variant per tier");
+        let mut names: Vec<String> = vs
+            .iter()
+            .inspect(|p| assert!(p.is_structurally_legal(), "{}", p.name()))
+            .map(|p| p.name())
+            .collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), vs.len());
+        // Every tier is represented (the fallback chain is complete).
+        for t in [SimdTier::Scalar, SimdTier::Sse128, SimdTier::Avx2Fma] {
+            assert!(vs.iter().any(|p| p.tier == t), "no {t} variant");
+        }
+    }
+
+    #[test]
+    fn illegal_tiles_rejected() {
+        let p = HostParams { tier: SimdTier::Scalar, mr: 16, nr: 4, ku: 1 };
+        assert!(!p.is_structurally_legal());
+        let p = HostParams { tier: SimdTier::Scalar, mr: 4, nr: 4, ku: 3 };
+        assert!(!p.is_structurally_legal());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for p in host_variants() {
+            assert_eq!(HostParams::from_json(&p.to_json()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_fields() {
+        let a = HostParams { tier: SimdTier::Avx2Fma, mr: 8, nr: 8, ku: 4 };
+        let b = HostParams { ku: 2, ..a };
+        let c = HostParams { tier: SimdTier::Sse128, ..a };
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+}

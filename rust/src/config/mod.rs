@@ -4,10 +4,12 @@
 //! device legality, and the `(M, N, K)` input triples.
 
 mod direct;
+mod host;
 mod space;
 mod xgemm;
 
 pub use direct::DirectParams;
+pub use host::{host_variants, HostParams, SimdTier, MAX_TILE};
 pub use space::{direct_space, xgemm_space, ConfigSpace, ParamDef};
 pub use xgemm::XgemmParams;
 
@@ -65,6 +67,9 @@ pub enum KernelKind {
     Xgemm,
     /// The generic one-pass "direct" kernel.
     XgemmDirect,
+    /// The host SIMD microkernel family (multi-versioned: instruction
+    /// tier × register tile × unroll, dispatched at runtime).
+    HostSimd,
 }
 
 impl KernelKind {
@@ -72,6 +77,7 @@ impl KernelKind {
         match self {
             KernelKind::Xgemm => "xgemm",
             KernelKind::XgemmDirect => "xgemm_direct",
+            KernelKind::HostSimd => "host_simd",
         }
     }
 }
@@ -88,6 +94,7 @@ impl std::fmt::Display for KernelKind {
 pub enum KernelConfig {
     Xgemm(XgemmParams),
     Direct(DirectParams),
+    HostSimd(HostParams),
 }
 
 impl KernelConfig {
@@ -95,6 +102,7 @@ impl KernelConfig {
         match self {
             KernelConfig::Xgemm(_) => KernelKind::Xgemm,
             KernelConfig::Direct(_) => KernelKind::XgemmDirect,
+            KernelConfig::HostSimd(_) => KernelKind::HostSimd,
         }
     }
 
@@ -103,6 +111,7 @@ impl KernelConfig {
         match self {
             KernelConfig::Xgemm(p) => p.name(),
             KernelConfig::Direct(p) => p.name(),
+            KernelConfig::HostSimd(p) => p.name(),
         }
     }
 
@@ -111,6 +120,7 @@ impl KernelConfig {
         match self {
             KernelConfig::Xgemm(p) => p.is_structurally_legal(),
             KernelConfig::Direct(p) => p.is_structurally_legal(),
+            KernelConfig::HostSimd(p) => p.is_structurally_legal(),
         }
     }
 
@@ -119,14 +129,17 @@ impl KernelConfig {
         match self {
             KernelConfig::Xgemm(p) => p.scratch_bytes(),
             KernelConfig::Direct(p) => p.scratch_bytes(),
+            KernelConfig::HostSimd(p) => p.scratch_bytes(),
         }
     }
 
-    /// "Work-group size" analogue (threads per group in CLBlast terms).
+    /// "Work-group size" analogue (threads per group in CLBlast terms —
+    /// the microkernel tile for the host family, which has no work-groups).
     pub fn workgroup_size(&self) -> u32 {
         match self {
             KernelConfig::Xgemm(p) => p.mdimc * p.ndimc,
             KernelConfig::Direct(p) => p.mdimcd * p.ndimcd,
+            KernelConfig::HostSimd(p) => p.mr * p.nr,
         }
     }
 
@@ -140,6 +153,10 @@ impl KernelConfig {
                 ("kernel", Json::str("xgemm_direct")),
                 ("params", p.to_json()),
             ]),
+            KernelConfig::HostSimd(p) => Json::obj(vec![
+                ("kernel", Json::str("host_simd")),
+                ("params", p.to_json()),
+            ]),
         }
     }
 
@@ -150,6 +167,9 @@ impl KernelConfig {
             "xgemm" => Ok(KernelConfig::Xgemm(XgemmParams::from_json(params)?)),
             "xgemm_direct" => {
                 Ok(KernelConfig::Direct(DirectParams::from_json(params)?))
+            }
+            "host_simd" => {
+                Ok(KernelConfig::HostSimd(HostParams::from_json(params)?))
             }
             other => Err(JsonError::Type(
                 "kernel name",
@@ -187,6 +207,10 @@ mod tests {
         assert_eq!(back, c);
         let d = KernelConfig::Direct(DirectParams::default());
         assert_eq!(KernelConfig::from_json(&d.to_json()).unwrap(), d);
+        for p in host_variants() {
+            let h = KernelConfig::HostSimd(p);
+            assert_eq!(KernelConfig::from_json(&h.to_json()).unwrap(), h);
+        }
     }
 
     #[test]

@@ -150,6 +150,12 @@ impl GemmRequest {
 pub struct GemmResponse {
     pub out: Result<Vec<f32>>,
     pub artifact: String,
+    /// Name of the kernel configuration the serving artifact implements
+    /// (e.g. a host microkernel variant like `h_avx2_t8x8_u4`, or an
+    /// xgemm/direct config name) — the variant identity of the dispatch,
+    /// without a manifest lookup.  Empty when no artifact served the
+    /// request (shed, expired, drained).
+    pub kernel: String,
     /// Time spent not executing this request: window wait plus — for
     /// fused members — batch peers' slots.  `queue + service` is the
     /// exact submit-to-reply interval.
@@ -759,6 +765,7 @@ impl ServerHandle {
         let _ = tx.send(GemmResponse {
             out: Err(anyhow!("{message}")),
             artifact: String::new(),
+            kernel: String::new(),
             queue: Duration::ZERO,
             service: Duration::ZERO,
             epoch: 0,
@@ -1677,6 +1684,11 @@ fn worker_loop(
                                         .manifest()
                                         .name_of(id)
                                         .to_string(),
+                                    kernel: engine
+                                        .manifest()
+                                        .meta(id)
+                                        .config
+                                        .name(),
                                     queue,
                                     service,
                                     epoch: cached.epoch,
@@ -1745,6 +1757,7 @@ fn worker_loop(
                     let _ = env.reply.send(GemmResponse {
                         out: Err(anyhow!("{message}")),
                         artifact: engine.manifest().name_of(id).to_string(),
+                        kernel: engine.manifest().meta(id).config.name(),
                         queue,
                         service: wall,
                         epoch: cached.epoch,
@@ -1798,6 +1811,7 @@ fn worker_loop(
                 let _ = env.reply.send(GemmResponse {
                     out: Ok(out_vec),
                     artifact: engine.manifest().name_of(id).to_string(),
+                    kernel: engine.manifest().meta(id).config.name(),
                     queue,
                     service,
                     epoch: cached.epoch,
@@ -1923,6 +1937,7 @@ fn answer_unserved(
     let _ = env.reply.send(GemmResponse {
         out: Err(anyhow!("{message}")),
         artifact: String::new(),
+        kernel: String::new(),
         queue,
         service: Duration::ZERO,
         epoch,

@@ -1,0 +1,435 @@
+//! Cache-blocked SIMD host microkernels — the `host_simd` kernel family.
+//!
+//! Multi-versioned GEMM inner loops over the *padded* indirect buffers:
+//! an AVX2+FMA tier, an SSE (portable-128) tier and the scalar reference,
+//! each parameterized by microkernel tile (`mr` × `nr`) and K-loop unroll
+//! (`ku`).  The serving tier is picked once per process by runtime
+//! feature detection (`is_x86_feature_detected!`), overridable with
+//! `ADAPTLIB_SIMD=scalar|sse|avx2` (always clamped to what the hardware
+//! supports — the CI forced-fallback leg's lever).
+//!
+//! ## Bit-identity contract
+//!
+//! Every tier produces *bit-identical* output to the scalar reference
+//! (the vendored PJRT `run_gemm`): each output element accumulates
+//! `f64::from(a) * f64::from(b)` over `l` in increasing order into one
+//! f64 chain, and the epilogue `alpha * acc as f32 + beta * c` runs in
+//! f32.  The f32→f64 widening is exact and the product of two widened
+//! f32s fits f64's mantissa exactly, so
+//!
+//! * SSE `mul_pd` + `add_pd` rounds exactly once per step (the product
+//!   is exact), matching the scalar `acc + av * bv`;
+//! * AVX2 `fmadd_pd`'s single rounding of `av * bv + acc` equals the
+//!   two-step rounding when the product is exact;
+//! * vectorizing across `j` keeps each element's own `l`-ordered chain;
+//! * unrolling by `ku` only peels the same single chain — no split
+//!   accumulators.
+//!
+//! Tier selection is therefore purely a performance decision, which is
+//! what lets the CART treat variants as interchangeable classes.
+
+use std::sync::OnceLock;
+
+use crate::config::{HostParams, SimdTier, MAX_TILE};
+
+const MAX: usize = MAX_TILE as usize;
+
+/// The hardware's own capability tier (ignores the env override).
+fn hardware_tier() -> SimdTier {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return SimdTier::Avx2Fma;
+        }
+        if is_x86_feature_detected!("sse2") {
+            return SimdTier::Sse128;
+        }
+    }
+    SimdTier::Scalar
+}
+
+/// The serving tier: hardware capability clamped by the
+/// `ADAPTLIB_SIMD=scalar|sse|avx2` override.  Cached in a `OnceLock` so
+/// the zero-alloc hot path (servability checks run per request) never
+/// touches the environment again.
+pub fn detected_tier() -> SimdTier {
+    static TIER: OnceLock<SimdTier> = OnceLock::new();
+    *TIER.get_or_init(|| {
+        let hw = hardware_tier();
+        match std::env::var("ADAPTLIB_SIMD") {
+            Ok(v) => match SimdTier::from_name(v.trim()) {
+                // The override can only *lower* the tier: forcing avx2 on
+                // hardware without it would be undefined behaviour.
+                Some(forced) => forced.min(hw),
+                None => hw,
+            },
+            Err(_) => hw,
+        }
+    })
+}
+
+/// Whether a variant of tier `t` is executable on this host.
+pub fn tier_supported(t: SimdTier) -> bool {
+    t <= detected_tier()
+}
+
+/// GEMM over padded row-major buffers: `out[i*n+j] = alpha * Σ_l
+/// a[i*k+l]·b[l*n+j] (f64 chain) + beta * c[i*n+j]`, dispatched to the
+/// variant's tier clamped to the detected one.  Allocation-free: all
+/// accumulators live on the stack.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_padded(
+    p: &HostParams,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &[f32],
+    alpha: f32,
+    beta: f32,
+    out: &mut [f32],
+) {
+    assert!(p.is_structurally_legal(), "illegal host variant {}", p.name());
+    assert_eq!(a.len(), m * k, "a size mismatch");
+    assert_eq!(b.len(), k * n, "b size mismatch");
+    assert_eq!(c.len(), m * n, "c size mismatch");
+    assert_eq!(out.len(), m * n, "out size mismatch");
+    match p.tier.min(detected_tier()) {
+        SimdTier::Scalar => block_scalar(p, m, n, k, a, b, c, alpha, beta, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the detected tier gates on is_x86_feature_detected!.
+        SimdTier::Sse128 => unsafe {
+            block_sse(p, m, n, k, a, b, c, alpha, beta, out)
+        },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above — avx2+fma verified present at detection.
+        SimdTier::Avx2Fma => unsafe {
+            block_avx2(p, m, n, k, a, b, c, alpha, beta, out)
+        },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => block_scalar(p, m, n, k, a, b, c, alpha, beta, out),
+    }
+}
+
+/// The shared f32 epilogue — scalar in every tier (O(n²), and keeping it
+/// scalar makes the bit-identity argument trivial there).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn epilogue(
+    acc: &[[f64; MAX]; MAX],
+    i0: usize,
+    j0: usize,
+    tm: usize,
+    tn: usize,
+    n: usize,
+    c: &[f32],
+    alpha: f32,
+    beta: f32,
+    out: &mut [f32],
+) {
+    for ti in 0..tm {
+        let row = (i0 + ti) * n + j0;
+        for tj in 0..tn {
+            out[row + tj] = alpha * acc[ti][tj] as f32 + beta * c[row + tj];
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn block_scalar(
+    p: &HostParams,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &[f32],
+    alpha: f32,
+    beta: f32,
+    out: &mut [f32],
+) {
+    let (mr, nr, ku) = (p.mr as usize, p.nr as usize, p.ku as usize);
+    let mut i0 = 0;
+    while i0 < m {
+        let tm = (m - i0).min(mr);
+        let mut j0 = 0;
+        while j0 < n {
+            let tn = (n - j0).min(nr);
+            let mut acc = [[0f64; MAX]; MAX];
+            for ti in 0..tm {
+                let arow = &a[(i0 + ti) * k..(i0 + ti) * k + k];
+                let mut l = 0;
+                while l + ku <= k {
+                    for u in 0..ku {
+                        let av = arow[l + u] as f64;
+                        let brow = &b[(l + u) * n + j0..(l + u) * n + j0 + tn];
+                        for tj in 0..tn {
+                            acc[ti][tj] += av * brow[tj] as f64;
+                        }
+                    }
+                    l += ku;
+                }
+                while l < k {
+                    let av = arow[l] as f64;
+                    let brow = &b[l * n + j0..l * n + j0 + tn];
+                    for tj in 0..tn {
+                        acc[ti][tj] += av * brow[tj] as f64;
+                    }
+                    l += 1;
+                }
+            }
+            epilogue(&acc, i0, j0, tm, tn, n, c, alpha, beta, out);
+            j0 += nr;
+        }
+        i0 += mr;
+    }
+}
+
+/// SSE2 tier: 2 × f64 lanes.  `mul_pd` + `add_pd` — one rounding per
+/// step since the widened product is exact, matching scalar bit-for-bit.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn block_sse(
+    p: &HostParams,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &[f32],
+    alpha: f32,
+    beta: f32,
+    out: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let (mr, nr, ku) = (p.mr as usize, p.nr as usize, p.ku as usize);
+    let mut i0 = 0;
+    while i0 < m {
+        let tm = (m - i0).min(mr);
+        let mut j0 = 0;
+        while j0 < n {
+            let tn = (n - j0).min(nr);
+            let pairs = tn / 2;
+            let mut acc = [[0f64; MAX]; MAX];
+            for ti in 0..tm {
+                let arow = a.as_ptr().add((i0 + ti) * k);
+                let mut vacc = [_mm_setzero_pd(); MAX / 2];
+                let mut tail = [0f64; MAX];
+                // The ku-unrolled body peels the same single chain per
+                // element — the remainder loop repeats it verbatim.
+                let mut l = 0;
+                while l + ku <= k {
+                    for u in 0..ku {
+                        let av64 = *arow.add(l + u) as f64;
+                        let av = _mm_set1_pd(av64);
+                        let brow = b.as_ptr().add((l + u) * n + j0);
+                        for (g, v) in vacc.iter_mut().take(pairs).enumerate() {
+                            // 8-byte load of two adjacent f32s, widened.
+                            let bv = _mm_cvtps_pd(_mm_castpd_ps(_mm_load_sd(
+                                brow.add(2 * g) as *const f64,
+                            )));
+                            *v = _mm_add_pd(*v, _mm_mul_pd(av, bv));
+                        }
+                        for (tj, t) in
+                            tail.iter_mut().enumerate().take(tn).skip(pairs * 2)
+                        {
+                            *t += av64 * *brow.add(tj) as f64;
+                        }
+                    }
+                    l += ku;
+                }
+                while l < k {
+                    let av64 = *arow.add(l) as f64;
+                    let av = _mm_set1_pd(av64);
+                    let brow = b.as_ptr().add(l * n + j0);
+                    for (g, v) in vacc.iter_mut().take(pairs).enumerate() {
+                        let bv = _mm_cvtps_pd(_mm_castpd_ps(_mm_load_sd(
+                            brow.add(2 * g) as *const f64,
+                        )));
+                        *v = _mm_add_pd(*v, _mm_mul_pd(av, bv));
+                    }
+                    for (tj, t) in
+                        tail.iter_mut().enumerate().take(tn).skip(pairs * 2)
+                    {
+                        *t += av64 * *brow.add(tj) as f64;
+                    }
+                    l += 1;
+                }
+                for g in 0..pairs {
+                    let mut lanes = [0f64; 2];
+                    _mm_storeu_pd(lanes.as_mut_ptr(), vacc[g]);
+                    acc[ti][2 * g] = lanes[0];
+                    acc[ti][2 * g + 1] = lanes[1];
+                }
+                for tj in pairs * 2..tn {
+                    acc[ti][tj] = tail[tj];
+                }
+            }
+            epilogue(&acc, i0, j0, tm, tn, n, c, alpha, beta, out);
+            j0 += nr;
+        }
+        i0 += mr;
+    }
+}
+
+/// AVX2+FMA tier: 4 × f64 lanes, fused multiply-add.  The single FMA
+/// rounding equals scalar's two-step rounding because the widened
+/// product is exact.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn block_avx2(
+    p: &HostParams,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &[f32],
+    alpha: f32,
+    beta: f32,
+    out: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let (mr, nr, ku) = (p.mr as usize, p.nr as usize, p.ku as usize);
+    let mut i0 = 0;
+    while i0 < m {
+        let tm = (m - i0).min(mr);
+        let mut j0 = 0;
+        while j0 < n {
+            let tn = (n - j0).min(nr);
+            let quads = tn / 4;
+            let mut acc = [[0f64; MAX]; MAX];
+            for ti in 0..tm {
+                let arow = a.as_ptr().add((i0 + ti) * k);
+                let mut vacc = [_mm256_setzero_pd(); MAX / 4];
+                let mut tail = [0f64; MAX];
+                let mut l = 0;
+                while l + ku <= k {
+                    for u in 0..ku {
+                        let av64 = *arow.add(l + u) as f64;
+                        let av = _mm256_set1_pd(av64);
+                        let brow = b.as_ptr().add((l + u) * n + j0);
+                        for (g, v) in vacc.iter_mut().take(quads).enumerate() {
+                            // 16-byte load of four adjacent f32s, widened.
+                            let bv =
+                                _mm256_cvtps_pd(_mm_loadu_ps(brow.add(4 * g)));
+                            *v = _mm256_fmadd_pd(av, bv, *v);
+                        }
+                        for (tj, t) in
+                            tail.iter_mut().enumerate().take(tn).skip(quads * 4)
+                        {
+                            *t += av64 * *brow.add(tj) as f64;
+                        }
+                    }
+                    l += ku;
+                }
+                while l < k {
+                    let av64 = *arow.add(l) as f64;
+                    let av = _mm256_set1_pd(av64);
+                    let brow = b.as_ptr().add(l * n + j0);
+                    for (g, v) in vacc.iter_mut().take(quads).enumerate() {
+                        let bv = _mm256_cvtps_pd(_mm_loadu_ps(brow.add(4 * g)));
+                        *v = _mm256_fmadd_pd(av, bv, *v);
+                    }
+                    for (tj, t) in
+                        tail.iter_mut().enumerate().take(tn).skip(quads * 4)
+                    {
+                        *t += av64 * *brow.add(tj) as f64;
+                    }
+                    l += 1;
+                }
+                for g in 0..quads {
+                    let mut lanes = [0f64; 4];
+                    _mm256_storeu_pd(lanes.as_mut_ptr(), vacc[g]);
+                    for (o, &v) in lanes.iter().enumerate() {
+                        acc[ti][4 * g + o] = v;
+                    }
+                }
+                for tj in quads * 4..tn {
+                    acc[ti][tj] = tail[tj];
+                }
+            }
+            epilogue(&acc, i0, j0, tm, tn, n, c, alpha, beta, out);
+            j0 += nr;
+        }
+        i0 += mr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::host_variants;
+    use crate::util::prng::Rng;
+
+    /// Scalar reference with the vendored `run_gemm` accumulation order.
+    #[allow(clippy::too_many_arguments)]
+    fn reference(
+        m: usize,
+        n: usize,
+        k: usize,
+        a: &[f32],
+        b: &[f32],
+        c: &[f32],
+        alpha: f32,
+        beta: f32,
+    ) -> Vec<f32> {
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            let mut acc = vec![0f64; n];
+            for l in 0..k {
+                let av = a[i * k + l] as f64;
+                for (j, s) in acc.iter_mut().enumerate() {
+                    *s += av * b[l * n + j] as f64;
+                }
+            }
+            for j in 0..n {
+                out[i * n + j] = alpha * acc[j] as f32 + beta * c[i * n + j];
+            }
+        }
+        out
+    }
+
+    fn rand_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.f32() * 2.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn detection_is_stable_and_env_clamped() {
+        let t = detected_tier();
+        assert_eq!(t, detected_tier());
+        assert!(tier_supported(SimdTier::Scalar));
+        assert!(tier_supported(t));
+    }
+
+    /// Every variant, at every executable tier, bit-identical to the
+    /// reference chain on shapes exercising full tiles, tile remainders
+    /// and k-unroll remainders.
+    #[test]
+    fn all_variants_bit_identical_to_reference() {
+        let mut rng = Rng::new(0x51D0);
+        for (m, n, k) in
+            [(16, 16, 16), (8, 8, 8), (13, 11, 9), (1, 7, 5), (32, 16, 24)]
+        {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let c = rand_vec(&mut rng, m * n);
+            let (alpha, beta) = (1.25f32, -0.5f32);
+            let want = reference(m, n, k, &a, &b, &c, alpha, beta);
+            let mut out = vec![0f32; m * n];
+            for p in host_variants() {
+                out.fill(f32::NAN);
+                gemm_padded(&p, m, n, k, &a, &b, &c, alpha, beta, &mut out);
+                assert_eq!(
+                    out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{} diverges on {m}x{n}x{k}",
+                    p.name(),
+                );
+            }
+        }
+    }
+}

@@ -3,6 +3,7 @@
 //! analytical performance simulator that substitutes for the OpenCL
 //! hardware we do not have (DESIGN.md §Substitutions).
 
+pub mod microkernel;
 pub mod sim;
 
 use crate::config::KernelConfig;
@@ -226,6 +227,10 @@ impl DeviceProfile {
         match cfg {
             KernelConfig::Xgemm(p) => p.local_mem_bytes() <= self.local_mem_bytes,
             KernelConfig::Direct(p) => p.local_mem_bytes() <= self.local_mem_bytes,
+            // The host microkernel family targets the CPU's own vector
+            // units: only the host-CPU class can serve it (the simulated
+            // GPUs model OpenCL kernels, not x86 SIMD).
+            KernelConfig::HostSimd(_) => self.id == DeviceId::HostCpu,
         }
     }
 }
@@ -284,6 +289,16 @@ mod tests {
         let n_mali = space.iter().filter(|c| mali.is_legal(c)).count();
         assert!(n_mali < n_p100, "{n_mali} !< {n_p100}");
         assert!(n_mali > 0);
+    }
+
+    #[test]
+    fn host_simd_legal_on_host_only() {
+        for p in crate::config::host_variants() {
+            let cfg = KernelConfig::HostSimd(p);
+            assert!(DeviceProfile::host_cpu().is_legal(&cfg), "{}", cfg.name());
+            assert!(!DeviceProfile::nvidia_p100().is_legal(&cfg));
+            assert!(!DeviceProfile::mali_t860().is_legal(&cfg));
+        }
     }
 
     #[test]

@@ -23,7 +23,7 @@
 //! irregular ones fan out.
 
 use super::DeviceProfile;
-use crate::config::{DirectParams, KernelConfig, Triple, XgemmParams};
+use crate::config::{DirectParams, HostParams, KernelConfig, Triple, XgemmParams};
 use crate::util::prng::hash_noise;
 
 /// Simulated tuner measurement: GFLOP/s of `cfg` on `triple`, or `None`
@@ -39,6 +39,7 @@ pub fn measure_gflops(
     let seconds = match cfg {
         KernelConfig::Xgemm(p) => xgemm_time_s(dev, p, triple),
         KernelConfig::Direct(p) => direct_time_s(dev, p, triple),
+        KernelConfig::HostSimd(p) => host_simd_time_s(dev, p, triple),
     };
     let useful_flops = triple.flops();
     let specialized = seconds / interaction(dev, cfg, triple);
@@ -70,6 +71,9 @@ pub fn dispatch_overhead_secs(dev: &DeviceProfile, cfg: &KernelConfig) -> f64 {
     match cfg {
         KernelConfig::Xgemm(_) => 4.0 * dev.launch_us * 1e-6,
         KernelConfig::Direct(_) => dev.launch_us * 1e-6,
+        // The host microkernel has one dispatch; its pad/unpad staging is
+        // per-slot work a fused batch cannot amortize.
+        KernelConfig::HostSimd(_) => dev.launch_us * 1e-6,
     }
 }
 
@@ -85,6 +89,7 @@ fn interaction(dev: &DeviceProfile, cfg: &KernelConfig, t: Triple) -> f64 {
     let fp = match cfg {
         KernelConfig::Xgemm(p) => p.fingerprint(),
         KernelConfig::Direct(p) => p.fingerprint(),
+        KernelConfig::HostSimd(p) => p.fingerprint(),
     };
     let dev_tag = dev.id.name().as_bytes().iter().map(|&b| b as u64).sum();
     // Value noise over log2 shape space (1.5-octave lattice, trilinearly
@@ -136,6 +141,7 @@ fn noise(dev: &DeviceProfile, cfg: &KernelConfig, t: Triple) -> f64 {
     let fp = match cfg {
         KernelConfig::Xgemm(p) => p.fingerprint(),
         KernelConfig::Direct(p) => p.fingerprint(),
+        KernelConfig::HostSimd(p) => p.fingerprint(),
     };
     let dev_tag = dev.id.name().as_bytes().iter().map(|&b| b as u64).sum();
     let u_cfg = hash_noise(&[dev_tag, fp]);
@@ -201,6 +207,22 @@ pub fn static_eff(dev: &DeviceProfile, cfg: &KernelConfig) -> f64 {
             };
             eff
         }
+        KernelConfig::HostSimd(p) => {
+            // Host microkernel: lane parallelism dominates (sub-linear —
+            // memory and issue width eat into perfect scaling); bigger
+            // register tiles amortize loads up to the 8x8 accumulator
+            // bound, and deeper unroll helps up to a point.
+            let lanes = p.tier.lanes() as f64;
+            let mut eff = 0.05 * lanes.powf(0.9);
+            eff *= 0.85 + 0.15 * ((p.mr * p.nr) as f64 / 64.0);
+            eff *= match p.ku {
+                1 => 0.92,
+                2 => 0.97,
+                4 => 1.0,
+                _ => 0.98,
+            };
+            eff
+        }
     }
 }
 
@@ -218,6 +240,7 @@ pub fn upper_bound_gflops(
     let (tm, tn, tk) = match cfg {
         KernelConfig::Xgemm(p) => (p.mwg, p.nwg, p.kwg),
         KernelConfig::Direct(p) => (p.wgd, p.wgd, p.wgd),
+        KernelConfig::HostSimd(p) => (p.mr, p.nr, 1),
     };
     let (mp, np, kp) = (
         ceil_to(t.m, tm) as f64,
@@ -232,6 +255,13 @@ pub fn upper_bound_gflops(
     if matches!(cfg, KernelConfig::Xgemm(_)) {
         let helper_bytes = 4.0 * 2.0 * (mp * kp + kp * np + 2.0 * mp * np);
         t_min += helper_bytes / (dev.mem_bw_gbps * 1e9) + 3.0 * dev.launch_us * 1e-6;
+    }
+    // The host microkernel also pays mandatory pad/unpad staging, but as
+    // host copies — no helper launches (matching host_simd_time_s, so
+    // the bound stays admissible).
+    if matches!(cfg, KernelConfig::HostSimd(_)) {
+        let helper_bytes = 4.0 * 2.0 * (mp * kp + kp * np + 2.0 * mp * np);
+        t_min += helper_bytes / (dev.mem_bw_gbps * 1e9);
     }
     // noise >= -(1 + 0.35) * sigma.
     let noise_min = 1.0 - 1.35 * dev.noise_sigma;
@@ -307,6 +337,35 @@ fn direct_time_s(dev: &DeviceProfile, p: &DirectParams, t: Triple) -> f64 {
     let t_mem = bytes / (dev.mem_bw_gbps * 1e9);
 
     t_compute.max(t_mem) + dev.launch_us * 1e-6
+}
+
+/// Seconds for a host SIMD microkernel variant: roofline over the
+/// tile-padded problem, plus the mandatory pad/unpad staging the pooled
+/// indirect path performs as host copies (no helper launches).
+fn host_simd_time_s(dev: &DeviceProfile, p: &HostParams, t: Triple) -> f64 {
+    let mp = ceil_to(t.m, p.mr);
+    let np = ceil_to(t.n, p.nr);
+    let kp = t.k.max(1) as u64;
+    let padded_flops = 2.0 * mp as f64 * np as f64 * kp as f64;
+
+    let mut eff = static_eff(dev, &KernelConfig::HostSimd(*p));
+    let groups = (mp / p.mr as u64) * (np / p.nr as u64);
+    eff *= wave_utilization(groups, dev.compute_units);
+    let t_compute = padded_flops / (dev.peak_gflops * 1e9 * eff);
+
+    // Streaming reads of A per column block, B per row block, C once.
+    let a_traffic = (mp * kp) as f64 * (np / p.nr as u64) as f64;
+    let b_traffic = (kp * np) as f64 * (mp / p.mr as u64) as f64;
+    let c_traffic = (mp * np) as f64;
+    // The L2/L3 absorbs most tile re-reads on a CPU.
+    let bytes = 4.0 * (0.25 * (a_traffic + b_traffic) + c_traffic);
+    let t_mem = bytes / (dev.mem_bw_gbps * 1e9);
+
+    let helper_bytes =
+        4.0 * 2.0 * ((mp * kp) as f64 + (kp * np) as f64 + 2.0 * (mp * np) as f64);
+    let t_helpers = helper_bytes / (dev.mem_bw_gbps * 1e9);
+
+    t_compute.max(t_mem) + t_helpers + dev.launch_us * 1e-6
 }
 
 #[cfg(test)]
@@ -456,6 +515,38 @@ mod tests {
         for cfg in [xgemm, direct] {
             let secs = modeled_secs(&dev, &cfg, t).unwrap();
             assert!(dispatch_overhead_secs(&dev, &cfg) < secs);
+        }
+    }
+
+    #[test]
+    fn host_simd_modeled_on_host_only_and_tier_ordered() {
+        use crate::config::{host_variants, SimdTier};
+        let host = DeviceProfile::host_cpu();
+        let t = Triple::new(256, 256, 256);
+        let vs = host_variants();
+        let cfg_of = |tier: SimdTier| {
+            KernelConfig::HostSimd(
+                *vs.iter().find(|p| p.tier == tier).expect("tier in roster"),
+            )
+        };
+        let g_scalar = measure_gflops(&host, &cfg_of(SimdTier::Scalar), t).unwrap();
+        let g_sse = measure_gflops(&host, &cfg_of(SimdTier::Sse128), t).unwrap();
+        let g_avx2 = measure_gflops(&host, &cfg_of(SimdTier::Avx2Fma), t).unwrap();
+        assert!(
+            g_avx2 > g_sse && g_sse > g_scalar,
+            "tier ordering broken: {g_scalar} / {g_sse} / {g_avx2}"
+        );
+        // Host-only: the sim GPUs cannot model x86 SIMD.
+        for dev in [p100(), mali()] {
+            assert!(measure_gflops(&dev, &cfg_of(SimdTier::Avx2Fma), t).is_none());
+        }
+        // The admissible bound stays sound for the host family.
+        for p in &vs {
+            let cfg = KernelConfig::HostSimd(*p);
+            let se = static_eff(&host, &cfg);
+            let bound = upper_bound_gflops(&host, &cfg, t, se);
+            let measured = measure_gflops(&host, &cfg, t).unwrap();
+            assert!(bound >= measured, "{}: {bound} < {measured}", p.name());
         }
     }
 

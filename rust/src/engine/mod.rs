@@ -31,7 +31,7 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::{KernelConfig, Triple};
-use crate::device::{sim, DeviceId, DeviceProfile};
+use crate::device::{microkernel, sim, DeviceId, DeviceProfile};
 use crate::runtime::{
     host_gemm_into, ArtifactId, BatchScratch, GemmInput, GemmRuntime, GemmTimes,
     Manifest, ScratchBuffers,
@@ -207,8 +207,18 @@ impl ExecutionEngine for RuntimeEngine {
     }
 
     fn is_servable(&self, id: ArtifactId) -> bool {
-        // Every roster artifact was AOT-compiled for this host.
-        (id.0 as usize) < self.runtime.manifest.len()
+        // Every PJRT roster artifact was AOT-compiled for this host; a
+        // host microkernel variant additionally requires its instruction
+        // tier to be at or below what runtime feature detection found
+        // (`detected_tier` is OnceLock-cached: this runs per request on
+        // the zero-alloc hot path).
+        if (id.0 as usize) >= self.runtime.manifest.len() {
+            return false;
+        }
+        match self.runtime.manifest.meta(id).config {
+            KernelConfig::HostSimd(p) => microkernel::tier_supported(p.tier),
+            _ => true,
+        }
     }
 
     fn ensure_ready(&mut self, id: ArtifactId) -> Result<()> {
@@ -480,6 +490,36 @@ mod tests {
             .modeled_cheapest(&mali_profile, Triple::new(100, 100, 100))
             .unwrap();
         assert!(mali.is_servable(id));
+    }
+
+    #[test]
+    fn host_variants_never_servable_on_sim_devices() {
+        let mut m = sample_manifest();
+        m.expand_host_variants();
+        for dev in [DeviceId::NvidiaP100, DeviceId::MaliT860] {
+            let eng = SimEngine::new(DeviceProfile::get(dev), m.clone());
+            let mut saw_variant = false;
+            for (i, a) in eng.manifest().artifacts.iter().enumerate() {
+                if matches!(a.config, KernelConfig::HostSimd(_)) {
+                    saw_variant = true;
+                    assert!(
+                        !eng.is_servable(ArtifactId(i as u32)),
+                        "{} servable on {dev}",
+                        a.name
+                    );
+                }
+            }
+            assert!(saw_variant, "expansion added no variants");
+            // A policy asking for a variant config on a sim device falls
+            // back to a device-legal artifact instead of failing.
+            let p = crate::config::host_variants()[0];
+            let t = Triple::new(100, 100, 100);
+            let id = eng.resolve(&KernelConfig::HostSimd(p), t).unwrap();
+            assert!(!matches!(
+                eng.manifest().meta(id).config,
+                KernelConfig::HostSimd(_)
+            ));
+        }
     }
 
     #[test]

@@ -26,14 +26,19 @@ pub struct TreeStats {
     pub unique_configs_direct: usize,
     pub leaves_xgemm: usize,
     pub leaves_direct: usize,
+    /// Host SIMD microkernel variants the tree learned to pick.
+    pub unique_configs_host: usize,
+    pub leaves_host: usize,
 }
 
 pub fn tree_stats(tree: &DecisionTree, classes: &ClassTable) -> TreeStats {
     let leaf_classes = tree.leaf_classes();
     let mut uniq_x = std::collections::HashSet::new();
     let mut uniq_d = std::collections::HashSet::new();
+    let mut uniq_h = std::collections::HashSet::new();
     let mut leaves_x = 0;
     let mut leaves_d = 0;
+    let mut leaves_h = 0;
     for c in &leaf_classes {
         match classes.config(*c).kind() {
             KernelKind::Xgemm => {
@@ -44,6 +49,10 @@ pub fn tree_stats(tree: &DecisionTree, classes: &ClassTable) -> TreeStats {
                 uniq_d.insert(*c);
                 leaves_d += 1;
             }
+            KernelKind::HostSimd => {
+                uniq_h.insert(*c);
+                leaves_h += 1;
+            }
         }
     }
     TreeStats {
@@ -53,6 +62,8 @@ pub fn tree_stats(tree: &DecisionTree, classes: &ClassTable) -> TreeStats {
         unique_configs_direct: uniq_d.len(),
         leaves_xgemm: leaves_x,
         leaves_direct: leaves_d,
+        unique_configs_host: uniq_h.len(),
+        leaves_host: leaves_h,
     }
 }
 

@@ -37,7 +37,9 @@ pub mod testing;
 pub mod tuner;
 pub mod util;
 
-pub use config::{DirectParams, KernelConfig, KernelKind, Triple, XgemmParams};
+pub use config::{
+    DirectParams, HostParams, KernelConfig, KernelKind, SimdTier, Triple, XgemmParams,
+};
 pub use dataset::{Dataset, DatasetKind};
 pub use device::{DeviceId, DeviceProfile};
 pub use engine::{

@@ -18,7 +18,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::config::Triple;
+use crate::config::{KernelConfig, Triple};
+use crate::device::microkernel;
 
 use super::manifest::{ArtifactId, ArtifactKind, Manifest};
 use super::pad;
@@ -235,6 +236,12 @@ impl GemmRuntime {
     /// Compile (or fetch from cache) by dense id.
     pub fn ensure_compiled_id(&mut self, id: ArtifactId) -> Result<()> {
         self.check_id(id)?;
+        // Host microkernel variants have no HLO: they dispatch straight to
+        // `device::microkernel`, so there is nothing to compile (and the
+        // bucket file they carry belongs to the PJRT base artifact).
+        if matches!(self.manifest.meta(id).config, KernelConfig::HostSimd(_)) {
+            return Ok(());
+        }
         let idx = id.0 as usize;
         if self.cache[idx].is_some() {
             return Ok(());
@@ -296,6 +303,19 @@ impl GemmRuntime {
         let id = self.resolve(name)?;
         self.check_shape(id, input)?;
         self.ensure_compiled_id(id)?;
+        // Microkernel variants share one execution path: delegate to the
+        // pooled dispatch through a transient scratch (this entry point is
+        // the allocating convenience surface — tools, tests, the tuner's
+        // `measure` — so a fresh scratch per call is fine here).
+        if matches!(self.manifest.meta(id).config, KernelConfig::HostSimd(_)) {
+            let mut scratch = ScratchBuffers::new();
+            let times = self.gemm_pooled(id, input, &mut scratch)?;
+            return Ok(GemmOutput {
+                out: scratch.take_out(),
+                helper_time: times.helper_time,
+                kernel_time: times.kernel_time,
+            });
+        }
         let kind = self.manifest.meta(id).kind;
         match kind {
             ArtifactKind::Direct { trans_a, trans_b, .. } => {
@@ -361,27 +381,50 @@ impl GemmRuntime {
                 let helper_pad = th.elapsed();
 
                 let t0 = Instant::now();
-                let a_dims = [mb as i64, kb as i64];
-                let b_dims = [kb as i64, nb as i64];
-                let c_dims = [mb as i64, nb as i64];
-                let ops = [
-                    xla::RawOperand { data: &scratch.a, dims: &a_dims },
-                    xla::RawOperand { data: &scratch.b, dims: &b_dims },
-                    xla::RawOperand { data: &scratch.c, dims: &c_dims },
-                    xla::RawOperand {
-                        data: std::slice::from_ref(&input.alpha),
-                        dims: &scalar_dims,
-                    },
-                    xla::RawOperand {
-                        data: std::slice::from_ref(&input.beta),
-                        dims: &scalar_dims,
-                    },
-                ];
-                self.exe(id)
-                    .execute_into(&ops, &mut scratch.padded_out)
-                    .map_err(|e| {
-                        anyhow!("executing {}: {e:?}", self.manifest.name_of(id))
-                    })?;
+                if let KernelConfig::HostSimd(p) = self.manifest.meta(id).config {
+                    // Host microkernel variant: same padded buffers, same
+                    // unpad — only the inner GEMM swaps from PJRT execute
+                    // to the in-process SIMD microkernel (allocation-free;
+                    // `resize_only` reuses capacity at steady state).
+                    resize_only(&mut scratch.padded_out, mb * nb);
+                    microkernel::gemm_padded(
+                        &p,
+                        mb,
+                        nb,
+                        kb,
+                        &scratch.a,
+                        &scratch.b,
+                        &scratch.c,
+                        input.alpha,
+                        input.beta,
+                        &mut scratch.padded_out,
+                    );
+                } else {
+                    let a_dims = [mb as i64, kb as i64];
+                    let b_dims = [kb as i64, nb as i64];
+                    let c_dims = [mb as i64, nb as i64];
+                    let ops = [
+                        xla::RawOperand { data: &scratch.a, dims: &a_dims },
+                        xla::RawOperand { data: &scratch.b, dims: &b_dims },
+                        xla::RawOperand { data: &scratch.c, dims: &c_dims },
+                        xla::RawOperand {
+                            data: std::slice::from_ref(&input.alpha),
+                            dims: &scalar_dims,
+                        },
+                        xla::RawOperand {
+                            data: std::slice::from_ref(&input.beta),
+                            dims: &scalar_dims,
+                        },
+                    ];
+                    self.exe(id)
+                        .execute_into(&ops, &mut scratch.padded_out)
+                        .map_err(|e| {
+                            anyhow!(
+                                "executing {}: {e:?}",
+                                self.manifest.name_of(id)
+                            )
+                        })?;
+                }
                 let kernel_time = t0.elapsed();
 
                 let tu = Instant::now();
@@ -519,38 +562,64 @@ impl GemmRuntime {
                     });
                 }
                 // Execute + unpad per slot over the stacked region.
+                let host = match self.manifest.meta(id).config {
+                    KernelConfig::HostSimd(p) => Some(p),
+                    _ => None,
+                };
                 let a_dims = [mb as i64, kb as i64];
                 let b_dims = [kb as i64, nb as i64];
                 let c_dims = [mb as i64, nb as i64];
                 for (slot, input) in inputs.iter().enumerate() {
                     let t0 = Instant::now();
-                    let ops = [
-                        xla::RawOperand {
-                            data: &batch.a[slot * sa..(slot + 1) * sa],
-                            dims: &a_dims,
-                        },
-                        xla::RawOperand {
-                            data: &batch.b[slot * sb..(slot + 1) * sb],
-                            dims: &b_dims,
-                        },
-                        xla::RawOperand {
-                            data: &batch.c[slot * sc..(slot + 1) * sc],
-                            dims: &c_dims,
-                        },
-                        xla::RawOperand {
-                            data: std::slice::from_ref(&input.alpha),
-                            dims: &scalar_dims,
-                        },
-                        xla::RawOperand {
-                            data: std::slice::from_ref(&input.beta),
-                            dims: &scalar_dims,
-                        },
-                    ];
-                    self.exe(id)
-                        .execute_into(&ops, &mut batch.padded_out)
-                        .map_err(|e| {
-                            anyhow!("executing {}: {e:?}", self.manifest.name_of(id))
-                        })?;
+                    if let Some(p) = host {
+                        // Microkernel variant: per-slot SIMD GEMM over the
+                        // slot's padded operands — bit-identical to the
+                        // standalone pooled call (same buffers, same chain).
+                        resize_only(&mut batch.padded_out, sc);
+                        microkernel::gemm_padded(
+                            &p,
+                            mb,
+                            nb,
+                            kb,
+                            &batch.a[slot * sa..(slot + 1) * sa],
+                            &batch.b[slot * sb..(slot + 1) * sb],
+                            &batch.c[slot * sc..(slot + 1) * sc],
+                            input.alpha,
+                            input.beta,
+                            &mut batch.padded_out,
+                        );
+                    } else {
+                        let ops = [
+                            xla::RawOperand {
+                                data: &batch.a[slot * sa..(slot + 1) * sa],
+                                dims: &a_dims,
+                            },
+                            xla::RawOperand {
+                                data: &batch.b[slot * sb..(slot + 1) * sb],
+                                dims: &b_dims,
+                            },
+                            xla::RawOperand {
+                                data: &batch.c[slot * sc..(slot + 1) * sc],
+                                dims: &c_dims,
+                            },
+                            xla::RawOperand {
+                                data: std::slice::from_ref(&input.alpha),
+                                dims: &scalar_dims,
+                            },
+                            xla::RawOperand {
+                                data: std::slice::from_ref(&input.beta),
+                                dims: &scalar_dims,
+                            },
+                        ];
+                        self.exe(id)
+                            .execute_into(&ops, &mut batch.padded_out)
+                            .map_err(|e| {
+                                anyhow!(
+                                    "executing {}: {e:?}",
+                                    self.manifest.name_of(id)
+                                )
+                            })?;
+                    }
                     batch.times[slot].kernel_time = t0.elapsed();
                     let tu = Instant::now();
                     pad::unpad_into(

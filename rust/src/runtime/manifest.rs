@@ -6,7 +6,10 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{DirectParams, KernelConfig, Triple, XgemmParams};
+use crate::config::{
+    host_variants, DirectParams, HostParams, KernelConfig, SimdTier, Triple,
+    XgemmParams,
+};
 use crate::util::json::Json;
 
 /// Shape role of an artifact.
@@ -46,8 +49,18 @@ impl ArtifactMeta {
         match self.kind {
             ArtifactKind::Direct { .. } => 1.0,
             ArtifactKind::Indirect { mb, nb, kb } => {
-                (mb as f64 * nb as f64 * kb as f64)
-                    / (t.m as f64 * t.n as f64 * t.k as f64)
+                let w = (mb as f64 * nb as f64 * kb as f64)
+                    / (t.m as f64 * t.n as f64 * t.k as f64);
+                // Host microkernel variants lose least-waste ties to the
+                // bucket's compiled PJRT artifact: generic eligibility
+                // (eligible_id, resolve fallback) keeps its pre-variant
+                // behaviour, and variants are selected *deliberately* —
+                // by exact config match when the policy picks one.
+                if matches!(self.config, KernelConfig::HostSimd(_)) {
+                    w * (1.0 + 1e-6)
+                } else {
+                    w
+                }
             }
         }
     }
@@ -79,7 +92,48 @@ impl Manifest {
                 path.display()
             )
         })?;
-        Self::parse(&text, dir)
+        let mut m = Self::parse(&text, dir)?;
+        m.expand_host_variants();
+        Ok(m)
+    }
+
+    /// Widen the artifact space with the host SIMD microkernel roster:
+    /// per distinct indirect padding bucket, one virtual artifact per
+    /// [`host_variants`] point, named `h{mb}x{nb}x{kb}@{variant}`.  A
+    /// config thus names (padding bucket, kernel variant, tile/unroll).
+    /// Variants carry the bucket's file for bookkeeping but never compile
+    /// HLO — they dispatch to `device::microkernel`.  Applied by
+    /// [`Manifest::load`]; `parse` stays expansion-free so fixture-level
+    /// tests see exactly what the JSON lists.
+    pub fn expand_host_variants(&mut self) {
+        let mut seen = std::collections::BTreeSet::new();
+        let mut buckets = Vec::new();
+        for a in &self.artifacts {
+            if let ArtifactKind::Indirect { mb, nb, kb } = a.kind {
+                if matches!(a.config, KernelConfig::HostSimd(_)) {
+                    continue;
+                }
+                if seen.insert((mb, nb, kb)) {
+                    buckets.push((mb, nb, kb, a.file.clone()));
+                }
+            }
+        }
+        for (mb, nb, kb, file) in buckets {
+            for p in host_variants() {
+                let name = format!("h{mb}x{nb}x{kb}@{}", p.name());
+                if self.index.contains_key(&name) {
+                    continue;
+                }
+                self.index.insert(name.clone(), self.artifacts.len() as u32);
+                self.artifacts.push(ArtifactMeta {
+                    name,
+                    file: file.clone(),
+                    kind: ArtifactKind::Indirect { mb, nb, kb },
+                    config: KernelConfig::HostSimd(p),
+                    hlo_bytes: 0,
+                });
+            }
+        }
     }
 
     pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
@@ -239,6 +293,24 @@ fn parse_artifact(a: &Json) -> Result<ArtifactMeta> {
             });
             (kind, config)
         }
+        "host_simd" => {
+            let kind = ArtifactKind::Indirect {
+                mb: a.get("mb")?.as_u32()?,
+                nb: a.get("nb")?.as_u32()?,
+                kb: a.get("kb")?.as_u32()?,
+            };
+            let tier_name = cfg_json.get("tier")?.as_str()?;
+            let tier = SimdTier::from_name(tier_name)
+                .with_context(|| format!("unknown simd tier '{tier_name}'"))?;
+            let g = |k: &str| -> Result<u32> { Ok(cfg_json.get(k)?.as_u32()?) };
+            let config = KernelConfig::HostSimd(HostParams {
+                tier,
+                mr: g("mr")?,
+                nr: g("nr")?,
+                ku: g("ku")?,
+            });
+            (kind, config)
+        }
         other => bail!("unknown kernel kind '{other}' in manifest"),
     };
     Ok(ArtifactMeta { name, file, kind, config, hlo_bytes })
@@ -314,6 +386,73 @@ mod tests {
             Some(i)
         );
         assert_eq!(m.artifact_id_for_config(&cfg, Triple::new(200, 1, 1)), None);
+    }
+
+    #[test]
+    fn expand_host_variants_widens_indirect_buckets() {
+        let mut m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let before = m.len();
+        m.expand_host_variants();
+        let variants = host_variants();
+        // One virtual artifact per variant per distinct indirect bucket;
+        // the direct artifact contributes none.
+        assert_eq!(m.len(), before + variants.len());
+        // Base ids are untouched — variants append after.
+        assert_eq!(m.id_of("d1").unwrap().0, 0);
+        assert_eq!(m.id_of("i1").unwrap().0, 1);
+        for p in &variants {
+            let name = format!("h128x128x128@{}", p.name());
+            let meta = m.find(&name).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(meta.config, KernelConfig::HostSimd(*p));
+            assert!(matches!(
+                meta.kind,
+                ArtifactKind::Indirect { mb: 128, nb: 128, kb: 128 }
+            ));
+            assert_eq!(meta.file, "i1.hlo.txt"); // bucket's file, for bookkeeping
+            assert_eq!(meta.hlo_bytes, 0);
+        }
+        // Idempotent: re-expansion adds nothing.
+        m.expand_host_variants();
+        assert_eq!(m.len(), before + variants.len());
+    }
+
+    #[test]
+    fn generic_eligibility_still_prefers_compiled_base() {
+        let mut m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        m.expand_host_variants();
+        let t = Triple::new(100, 100, 100);
+        // The tie-break penalty keeps eligible_id on the PJRT artifact …
+        assert_eq!(m.eligible_id(t), m.id_of("i1"));
+        // … while exact config match resolves each variant deliberately.
+        for p in host_variants() {
+            let cfg = KernelConfig::HostSimd(p);
+            let id = m.artifact_id_for_config(&cfg, t).unwrap();
+            assert_eq!(m.meta(id).config, cfg);
+        }
+    }
+
+    #[test]
+    fn parses_explicit_host_simd_entry() {
+        let text = r#"{
+ "version": 1, "roster": "small",
+ "artifacts": [
+  {"name": "h1", "kernel": "host_simd", "file": "i1.hlo.txt",
+   "mb": 64, "nb": 64, "kb": 64,
+   "config": {"tier": "avx2", "mr": 8, "nr": 8, "ku": 4}}
+ ]
+}"#;
+        let m = Manifest::parse(text, Path::new("/tmp")).unwrap();
+        let a = m.find("h1").unwrap();
+        assert!(matches!(a.kind, ArtifactKind::Indirect { mb: 64, .. }));
+        match a.config {
+            KernelConfig::HostSimd(p) => {
+                assert_eq!(p.tier, SimdTier::Avx2Fma);
+                assert_eq!((p.mr, p.nr, p.ku), (8, 8, 4));
+            }
+            ref other => panic!("wrong config {other:?}"),
+        }
+        let bad = text.replace("avx2", "neon");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
     }
 
     #[test]

@@ -18,6 +18,7 @@ fn fingerprint(cfg: &KernelConfig) -> u64 {
     match cfg {
         KernelConfig::Xgemm(p) => p.fingerprint(),
         KernelConfig::Direct(p) => p.fingerprint(),
+        KernelConfig::HostSimd(p) => p.fingerprint(),
     }
 }
 

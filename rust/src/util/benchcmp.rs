@@ -3,9 +3,14 @@
 //! (`BENCH_hotpath.json`, `BENCH_drift.json`) and flag regressions beyond
 //! a tolerance — the core of the `adaptd bench-compare` CI gate.
 //!
-//! Comparable metrics (anything absent from either side is skipped, and
-//! the comparison fails if *nothing* was comparable — a silent no-op gate
-//! is worse than none):
+//! Comparable metrics (anything absent from either side is skipped —
+//! **except** when both files declare the same `"bench"` family, where a
+//! gated key the baseline carries but the fresh run dropped is reported
+//! as a named regression: a renamed or deleted bench silently ungating
+//! itself is exactly the failure this gate exists to catch.  Cross-family
+//! comparisons — the merged baseline against a drift/hetero/overload/
+//! chaos file — still skip.  And the comparison fails if *nothing* was
+//! comparable — a silent no-op gate is worse than none):
 //!
 //! * `results[].median_s` by result name — regression when the fresh
 //!   median is more than `tolerance` slower;
@@ -18,6 +23,15 @@
 //!   fused batched path's per-request time must not be slower than B
 //!   sequential pooled calls beyond `tolerance` (self-contained in the
 //!   current file; occupancy and speedup are reported per batch size);
+//! * the SIMD microkernel gate (`simd` in `BENCH_hotpath.json`): the
+//!   best servable host variant's per-shape speedup over the scalar
+//!   variant (`simd.shapes[].speedup`) and the fused batched variant
+//!   path's speedup over sequential scalar
+//!   (`simd.fused_speedup_vs_scalar`) must meet the committed floors
+//!   (`simd.speedup_floor` / `simd.fused_speedup_floor` in the
+//!   baseline, defaulting to 0.9 — even when the detected tier *is*
+//!   scalar, as on the forced-fallback CI leg, the variant path must
+//!   not be slower than scalar beyond noise);
 //! * `recovered` (drift runs) — regression when the fresh run says
 //!   `false`;
 //! * per-device `accuracy` (hetero runs: top-level `devices[]` in
@@ -136,11 +150,35 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> BenchDiff {
         provisional,
     };
 
+    // When both files declare the same `"bench"` family, a gated key
+    // present in the baseline but missing from the fresh run is a named
+    // regression (a renamed or deleted bench must not ungate itself);
+    // cross-family comparisons (the merged baseline against a drift or
+    // hetero file) keep skipping.  Files without a family string are
+    // never treated as same-family.
+    let same_family = match (
+        baseline.get("bench").and_then(|b| b.as_str()),
+        current.get("bench").and_then(|b| b.as_str()),
+    ) {
+        (Ok(a), Ok(b)) => a == b,
+        _ => false,
+    };
+
     // Timed results: lower is better.
     let base_results = results_map(baseline);
     let cur_results = results_map(current);
     for (name, base) in &base_results {
-        let Some(cur) = cur_results.get(name) else { continue };
+        let Some(cur) = cur_results.get(name) else {
+            if same_family {
+                diff.compared += 1;
+                diff.lines.push(format!("{name}: {base:.3e}s -> (missing)"));
+                diff.regressions.push(format!(
+                    "{name}: gated result missing from the fresh run \
+                     (renamed or dropped bench, not a skip)"
+                ));
+            }
+            continue;
+        };
         diff.compared += 1;
         let ratio = cur / base;
         let delta = 100.0 * (ratio - 1.0);
@@ -159,7 +197,17 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> BenchDiff {
     let base_scaling = scaling_map(baseline);
     let cur_scaling = scaling_map(current);
     for (shards, (base_rps, base_gflops)) in &base_scaling {
-        let Some((cur_rps, cur_gflops)) = cur_scaling.get(shards) else { continue };
+        let Some((cur_rps, cur_gflops)) = cur_scaling.get(shards) else {
+            if same_family {
+                diff.compared += 1;
+                diff.lines
+                    .push(format!("shards={shards}: -> (missing)"));
+                diff.regressions.push(format!(
+                    "shards={shards}: scaling row missing from the fresh run"
+                ));
+            }
+            continue;
+        };
         for (metric, base, cur) in [
             ("rps", base_rps, cur_rps),
             ("gflops", base_gflops, cur_gflops),
@@ -230,6 +278,7 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> BenchDiff {
         "pooled_with_policy_handle",
         "engine_pooled",
         "fused_pooled",
+        "simd_pooled",
     ] {
         let base = baseline
             .get("allocs_per_request")
@@ -239,7 +288,18 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> BenchDiff {
             .get("allocs_per_request")
             .ok()
             .and_then(|a| num_at(a, key));
-        let (Some(base), Some(cur)) = (base, cur) else { continue };
+        let Some(base) = base else { continue };
+        let Some(cur) = cur else {
+            if same_family {
+                diff.compared += 1;
+                diff.lines
+                    .push(format!("allocs/request {key}: {base:.1} -> (missing)"));
+                diff.regressions.push(format!(
+                    "{key} allocation gate missing from the fresh run"
+                ));
+            }
+            continue;
+        };
         diff.compared += 1;
         diff.lines
             .push(format!("allocs/request {key}: {base:.1} -> {cur:.1}"));
@@ -280,6 +340,63 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> BenchDiff {
                         tolerance * 100.0
                     ));
                 }
+            }
+        }
+    }
+
+    // SIMD microkernel gate.  The hotpath bench reports, per probe
+    // shape, the best *servable* host variant's speedup over the scalar
+    // variant through `gemm_pooled` (`simd.shapes[].speedup`), plus the
+    // fused batched variant path's per-request speedup over sequential
+    // scalar dispatches (`simd.fused_speedup_vs_scalar`).  Floors come
+    // from the baseline (`simd.speedup_floor` / `simd.fused_speedup_floor`)
+    // and default to 0.9: even on a host whose best servable tier *is*
+    // scalar — the forced-fallback CI leg — the variant path must not be
+    // slower than the scalar variant beyond noise.
+    if let Ok(simd) = current.get("simd") {
+        let floor = baseline
+            .get("simd")
+            .ok()
+            .and_then(|s| num_at(s, "speedup_floor"))
+            .unwrap_or(0.9);
+        let fused_floor = baseline
+            .get("simd")
+            .ok()
+            .and_then(|s| num_at(s, "fused_speedup_floor"))
+            .unwrap_or(0.9);
+        let tier = simd.get("tier").and_then(|t| t.as_str()).unwrap_or("?");
+        if let Ok(arr) = simd.get("shapes").and_then(|s| s.as_arr()) {
+            for row in arr {
+                let (Ok(shape), Some(speedup)) = (
+                    row.get("shape").and_then(|s| s.as_str()),
+                    num_at(row, "speedup"),
+                ) else {
+                    continue;
+                };
+                diff.compared += 1;
+                diff.lines.push(format!(
+                    "simd {shape} (tier {tier}): best variant {speedup:.2}x \
+                     scalar (floor {floor:.2}x)"
+                ));
+                if speedup < floor {
+                    diff.regressions.push(format!(
+                        "simd: best variant only {speedup:.2}x the scalar \
+                         variant on {shape} (floor {floor:.2}x)"
+                    ));
+                }
+            }
+        }
+        if let Some(fused) = num_at(simd, "fused_speedup_vs_scalar") {
+            diff.compared += 1;
+            diff.lines.push(format!(
+                "simd fused: {fused:.2}x sequential scalar per request \
+                 (floor {fused_floor:.2}x)"
+            ));
+            if fused < fused_floor {
+                diff.regressions.push(format!(
+                    "simd: fused batched variant path only {fused:.2}x \
+                     sequential scalar (floor {fused_floor:.2}x)"
+                ));
             }
         }
     }
@@ -717,6 +834,103 @@ mod tests {
         let diff = compare(&base, &hot, 0.15);
         assert!(diff.passes(), "{:?}", diff.regressions);
         assert!(!diff.lines.iter().any(|l| l.contains("chaos")));
+    }
+
+    #[test]
+    fn missing_gated_keys_regress_within_a_family_and_skip_across() {
+        let base = Json::parse(
+            r#"{"bench":"hotpath",
+                "results":[{"name":"gemm:direct:128^3","median_s":1e-4}],
+                "shard_scaling":[{"shards":1,"rps":100.0,"gflops":5.0}],
+                "allocs_per_request":{"pooled":0.0}}"#,
+        )
+        .unwrap();
+        // Same family, every gated key dropped: three named regressions
+        // (the dropped result, the dropped scaling row, the dropped
+        // alloc gate), each counted as compared.
+        let cur = Json::parse(
+            r#"{"bench":"hotpath",
+                "results":[{"name":"renamed","median_s":1e-4}]}"#,
+        )
+        .unwrap();
+        let diff = compare(&base, &cur, 0.15);
+        assert!(!diff.passes());
+        assert_eq!(diff.compared, 3, "{:?}", diff.lines);
+        assert!(diff
+            .regressions
+            .iter()
+            .any(|r| r.contains("gemm:direct:128^3") && r.contains("missing")));
+        assert!(diff.regressions.iter().any(|r| r.contains("shards=1")));
+        assert!(diff
+            .regressions
+            .iter()
+            .any(|r| r.contains("pooled allocation gate missing")));
+        // Different family (merged baseline vs a drift file): the
+        // missing keys keep skipping and the drift gate alone compares.
+        let drift = Json::parse(r#"{"bench":"drift","recovered":true}"#).unwrap();
+        let diff = compare(&base, &drift, 0.15);
+        assert_eq!(diff.compared, 1);
+        assert!(diff.passes(), "{:?}", diff.regressions);
+        // A key the *baseline* lacks never regresses: extra fresh
+        // results are new coverage, not a diff.
+        let wider = Json::parse(
+            r#"{"bench":"hotpath",
+                "results":[{"name":"gemm:direct:128^3","median_s":1e-4},
+                           {"name":"extra","median_s":1.0}],
+                "shard_scaling":[{"shards":1,"rps":100.0,"gflops":5.0}],
+                "allocs_per_request":{"pooled":0.0,"simd_pooled":0.0}}"#,
+        )
+        .unwrap();
+        assert!(compare(&base, &wider, 0.15).passes());
+    }
+
+    #[test]
+    fn simd_gate_floors_per_shape_and_fused_speedup() {
+        let base = Json::parse(
+            r#"{"bench":"hotpath",
+                "simd":{"speedup_floor":1.5,"fused_speedup_floor":1.2}}"#,
+        )
+        .unwrap();
+        let cur = |s128: f64, s100: f64, fused: f64| {
+            Json::parse(&format!(
+                r#"{{"bench":"hotpath","simd":{{
+                     "tier":"avx2","variant":"h_avx2_t8x8_u4",
+                     "shapes":[
+                       {{"shape":"128^3(m==mb)","scalar_s":1e-3,
+                         "best_s":1e-4,"speedup":{s128}}},
+                       {{"shape":"100^3(padded)","scalar_s":1e-3,
+                         "best_s":1e-4,"speedup":{s100}}}],
+                     "fused_speedup_vs_scalar":{fused}}}}}"#
+            ))
+            .unwrap()
+        };
+        // Both shapes and the fused path above their floors: passes,
+        // and all three gates count as compared.
+        let diff = compare(&base, &cur(2.0, 1.8, 1.5), 0.15);
+        assert_eq!(diff.compared, 3);
+        assert!(diff.passes(), "{:?}", diff.regressions);
+        assert!(diff.lines.iter().any(|l| l.contains("tier avx2")));
+        // One shape under its floor: fails and names the shape.
+        let diff = compare(&base, &cur(2.0, 1.2, 1.5), 0.15);
+        assert!(!diff.passes());
+        assert!(
+            diff.regressions[0].contains("100^3(padded)"),
+            "{:?}",
+            diff.regressions
+        );
+        // Fused path under its floor: fails.
+        let diff = compare(&base, &cur(2.0, 1.8, 1.0), 0.15);
+        assert!(!diff.passes());
+        assert!(diff.regressions[0].contains("fused"));
+        // Baseline without a simd section: floors default to 0.9, so a
+        // scalar-tier run (speedups ~1.0) passes — the forced-fallback
+        // CI leg must not trip the gate.
+        let no_floor = Json::parse(r#"{"bench":"hotpath"}"#).unwrap();
+        assert!(compare(&no_floor, &cur(0.97, 1.0, 0.95), 0.15).passes());
+        assert!(!compare(&no_floor, &cur(0.5, 1.0, 0.95), 0.15).passes());
+        // A simd-less current file trips nothing.
+        let diff = compare(&base, &no_floor, 0.15);
+        assert!(!diff.lines.iter().any(|l| l.contains("simd")));
     }
 
     #[test]

@@ -27,6 +27,7 @@ impl GenerationPolicy {
         match cfg {
             KernelConfig::Direct(p) => p.wgd,
             KernelConfig::Xgemm(p) => p.mwg - 1000,
+            other => unreachable!("generation policies only emit xgemm/direct, got {other:?}"),
         }
     }
 }

@@ -1,0 +1,266 @@
+//! SIMD microkernel equivalence: every host microkernel variant the
+//! manifest expansion adds (SSE, AVX2+FMA, tile/unroll points) must be
+//! **bit-identical** to the scalar reference variant through both pooled
+//! serving paths — `GemmRuntime::gemm_pooled` and
+//! `GemmRuntime::gemm_batch_pooled` — property-tested over seeded random
+//! shapes that include the `m == mb` pad edge, tile remainders
+//! (`mr`/`nr` not dividing the logical dims) and degenerate rows.
+//! `gemm_padded` clamps each variant's tier to the detected one, so on a
+//! host without AVX2 the same assertions exercise the degraded dispatch.
+//! PJRT-backed tests skip when `make artifacts` has not run.
+
+use std::cell::RefCell;
+use std::path::PathBuf;
+
+use adaptlib::config::{KernelConfig, SimdTier, Triple};
+use adaptlib::device::microkernel;
+use adaptlib::engine::{ExecutionEngine, RuntimeEngine};
+use adaptlib::runtime::{
+    ArtifactId, ArtifactKind, BatchScratch, GemmInput, GemmRuntime,
+    ScratchBuffers,
+};
+use adaptlib::testing::{self, PropConfig, Strategy};
+use adaptlib::util::prng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn rand_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.f32() * 2.0 - 1.0).collect()
+}
+
+/// One padding bucket's microkernel variant group: the scalar reference
+/// artifact plus every SIMD variant.
+struct Bucket {
+    mb: u32,
+    nb: u32,
+    kb: u32,
+    scalar: ArtifactId,
+    others: Vec<ArtifactId>,
+}
+
+/// Group the expanded manifest's host variants by bucket, smallest
+/// buckets first (bit-identity is shape-independent; small buckets keep
+/// the exhaustive re-execution fast).
+fn variant_buckets(rt: &GemmRuntime, max_buckets: usize) -> Vec<Bucket> {
+    let mut map: std::collections::BTreeMap<
+        (u64, u32, u32, u32),
+        (Option<ArtifactId>, Vec<ArtifactId>),
+    > = std::collections::BTreeMap::new();
+    for (i, a) in rt.manifest.artifacts.iter().enumerate() {
+        if let (ArtifactKind::Indirect { mb, nb, kb }, KernelConfig::HostSimd(p)) =
+            (a.kind, a.config)
+        {
+            let vol = mb as u64 * nb as u64 * kb as u64;
+            let e = map.entry((vol, mb, nb, kb)).or_default();
+            if p.tier == SimdTier::Scalar {
+                e.0 = Some(ArtifactId(i as u32));
+            } else {
+                e.1.push(ArtifactId(i as u32));
+            }
+        }
+    }
+    map.into_iter()
+        .take(max_buckets)
+        .map(|((_, mb, nb, kb), (scalar, others))| Bucket {
+            mb,
+            nb,
+            kb,
+            scalar: scalar.expect("every bucket gets a scalar variant"),
+            others,
+        })
+        .collect()
+}
+
+/// A property case: a bucket pick plus, per dimension, an edge selector
+/// (pad edge / tile remainder / interior / degenerate / random) and raw
+/// randomness for the interior pick.  Dims resolve against the bucket at
+/// check time; shrinking drives dimensions toward 1.
+#[derive(Clone, Debug)]
+struct Case {
+    bucket: usize,
+    sel: [u64; 3],
+    raw: [u64; 3],
+}
+
+impl Case {
+    fn seed(&self) -> u64 {
+        let mut h = 0x51D0_EA11u64 ^ self.bucket as u64;
+        for v in self.sel.iter().chain(self.raw.iter()) {
+            h = h.wrapping_mul(0x100_0000_01b3).wrapping_add(*v);
+        }
+        h
+    }
+}
+
+struct ShapeStrategy {
+    n_buckets: usize,
+}
+
+impl Strategy for ShapeStrategy {
+    type Value = Case;
+
+    fn generate(&self, rng: &mut Rng) -> Case {
+        Case {
+            bucket: rng.below(self.n_buckets as u64) as usize,
+            sel: [rng.below(5), rng.below(5), rng.below(5)],
+            raw: [rng.below(1 << 20), rng.below(1 << 20), rng.below(1 << 20)],
+        }
+    }
+
+    fn shrink(&self, value: &Case) -> Vec<Case> {
+        let mut out = Vec::new();
+        for i in 0..3 {
+            if value.sel[i] % 5 != 3 {
+                let mut c = value.clone();
+                c.sel[i] = 3; // collapse this dimension to 1
+                out.push(c);
+            }
+        }
+        out
+    }
+}
+
+fn dim(sel: u64, raw: u64, edge: u32) -> u32 {
+    match sel % 5 {
+        0 => edge,                      // m == mb pad edge: no-op padding
+        1 => (edge - 1).max(1),         // tile + k-unroll remainders
+        2 => (edge - edge / 3).max(1),  // interior: real padding
+        3 => 1,                         // degenerate row/col
+        _ => 1 + (raw % edge as u64) as u32,
+    }
+}
+
+const SLOTS: usize = 3;
+
+fn check_case(
+    rt: &mut GemmRuntime,
+    buckets: &[Bucket],
+    case: &Case,
+) -> Result<(), String> {
+    let b = &buckets[case.bucket % buckets.len()];
+    let t = Triple::new(
+        dim(case.sel[0], case.raw[0], b.mb),
+        dim(case.sel[1], case.raw[1], b.nb),
+        dim(case.sel[2], case.raw[2], b.kb),
+    );
+    let (m, n, k) = (t.m as usize, t.n as usize, t.k as usize);
+    let mut rng = Rng::new(case.seed());
+    // Distinct per-slot operands: identical slots would hide a fused
+    // staging bug that reads a neighbour's data.
+    let slots: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..SLOTS)
+        .map(|_| {
+            (
+                rand_vec(&mut rng, m * k),
+                rand_vec(&mut rng, k * n),
+                rand_vec(&mut rng, m * n),
+            )
+        })
+        .collect();
+    let input_of = |s: usize| -> GemmInput<'_> {
+        let (a, b, c) = &slots[s];
+        GemmInput { m, n, k, a, b, c, alpha: 1.25, beta: -0.5 }
+    };
+    let bits = |out: &[f32]| -> Vec<u32> {
+        out.iter().map(|v| v.to_bits()).collect()
+    };
+
+    let mut scratch = ScratchBuffers::new();
+    let mut batch = BatchScratch::new();
+    // Scalar-variant reference per slot, through the pooled path itself.
+    let mut refs: Vec<Vec<u32>> = Vec::with_capacity(SLOTS);
+    for s in 0..SLOTS {
+        rt.gemm_pooled(b.scalar, &input_of(s), &mut scratch)
+            .map_err(|e| format!("scalar reference failed on {t}: {e:#}"))?;
+        refs.push(bits(&scratch.out));
+    }
+    for &id in std::iter::once(&b.scalar).chain(b.others.iter()) {
+        let name = rt.manifest.name_of(id).to_string();
+        for s in 0..SLOTS {
+            rt.gemm_pooled(id, &input_of(s), &mut scratch)
+                .map_err(|e| format!("{name} pooled failed on {t}: {e:#}"))?;
+            if bits(&scratch.out) != refs[s] {
+                return Err(format!(
+                    "{name} diverges from scalar via gemm_pooled on {t} (slot {s})"
+                ));
+            }
+        }
+        let inputs: Vec<GemmInput> = (0..SLOTS).map(input_of).collect();
+        rt.gemm_batch_pooled(id, &inputs, &mut batch)
+            .map_err(|e| format!("{name} fused batch failed on {t}: {e:#}"))?;
+        for s in 0..SLOTS {
+            if bits(batch.slot(s, m, n)) != refs[s] {
+                return Err(format!(
+                    "{name} diverges from scalar via gemm_batch_pooled on {t} \
+                     (slot {s} of {SLOTS})"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The tentpole property: every expanded microkernel variant is
+/// bit-identical to the scalar reference through `gemm_pooled` *and*
+/// `gemm_batch_pooled`, over seeded random shapes covering the
+/// `m == mb` pad edge, tile remainders and degenerate dims.
+#[test]
+fn all_variants_bit_identical_to_scalar_through_pooled_paths() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = GemmRuntime::open(&dir).unwrap();
+    let buckets = variant_buckets(&rt, 2);
+    assert!(
+        !buckets.is_empty(),
+        "manifest expansion must add host variants to every indirect bucket"
+    );
+    for b in &buckets {
+        assert!(
+            b.others.len() >= 2,
+            "bucket {}x{}x{} is missing SIMD variants",
+            b.mb,
+            b.nb,
+            b.kb
+        );
+    }
+    let rt = RefCell::new(rt);
+    let cfg = PropConfig { cases: 10, seed: 0x51D0_0A1B, max_shrink_steps: 12 };
+    let strategy = ShapeStrategy { n_buckets: buckets.len() };
+    testing::assert_prop(&cfg, &strategy, |case| {
+        check_case(&mut rt.borrow_mut(), &buckets, case)
+    });
+}
+
+/// Servability of a variant follows the detected instruction tier: the
+/// scalar variant is always servable, and every variant above the
+/// detected tier is refused by the engine (the forced-fallback CI leg
+/// runs this whole suite under `ADAPTLIB_SIMD=scalar`, where only the
+/// scalar variants survive this gate).
+#[test]
+fn variant_servability_follows_detected_tier() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = RuntimeEngine::open(&dir).unwrap();
+    let tier = microkernel::detected_tier();
+    let mut variants = 0usize;
+    for (i, a) in engine.manifest().artifacts.iter().enumerate() {
+        let id = ArtifactId(i as u32);
+        match a.config {
+            KernelConfig::HostSimd(p) => {
+                variants += 1;
+                assert_eq!(
+                    engine.is_servable(id),
+                    p.tier <= tier,
+                    "{} (tier {}, detected {tier})",
+                    a.name,
+                    p.tier
+                );
+                if p.tier == SimdTier::Scalar {
+                    assert!(engine.is_servable(id));
+                }
+            }
+            _ => assert!(engine.is_servable(id), "{}", a.name),
+        }
+    }
+    assert!(variants >= 4, "expansion produced too few variants: {variants}");
+}
