@@ -13,10 +13,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use adaptlib::config::{KernelConfig, SimdTier};
-use adaptlib::device::microkernel;
 use adaptlib::coordinator::{
     DefaultPolicy, GemmRequest, GemmServer, PolicyHandle, ServerConfig,
 };
+use adaptlib::device::microkernel;
 use adaptlib::engine::{ExecutionEngine, RuntimeEngine};
 use adaptlib::experiments::e2e;
 use adaptlib::harness::{black_box, BenchConfig, Suite};
@@ -161,6 +161,12 @@ fn main() {
     } else {
         eprintln!("skipping PJRT sections: run `make artifacts` first");
     }
+
+    // Runtime capability context, top-level so bench-compare can explain
+    // a simd/packed floor miss on a limited runner (scalar-only hardware,
+    // `ADAPTLIB_SIMD` clamp, `ADAPTLIB_PACK=off` leg) without guessing.
+    extra.push(("simd_tier", Json::str(microkernel::detected_tier().name())));
+    extra.push(("pack_enabled", Json::Bool(microkernel::pack_enabled())));
 
     write_json(&suite, &extra, quick);
 }
@@ -412,19 +418,36 @@ fn bench_pjrt(
         .collect();
     let scalar_id = host_ids
         .iter()
-        .find(|(p, _)| p.tier == SimdTier::Scalar)
-        .expect("manifest expansion provides a scalar variant")
+        .find(|(p, _)| p.tier == SimdTier::Scalar && !p.packed)
+        .expect("manifest expansion provides an unpacked scalar variant")
         .1;
     let (best_p, best_id) = host_ids
         .iter()
-        .filter(|(p, _)| microkernel::tier_supported(p.tier))
+        .filter(|(p, _)| microkernel::tier_supported(p.tier) && !p.packed)
         .max_by_key(|(p, _)| (p.tier, p.mr * p.nr, p.ku))
         .copied()
         .expect("the scalar tier is always servable");
+    // The packed twin of the best unpacked variant — same tier/tile/
+    // unroll, panel-packed operands.  When `ADAPTLIB_PACK=off`, its
+    // dispatch degrades to the unpacked path, so the packed legs still
+    // run (and their speedup sits near 1.0 — the `pack_enabled` field
+    // below is what makes that explainable in the gate output).
+    let (packed_p, packed_id) = host_ids
+        .iter()
+        .find(|(p, _)| {
+            p.packed
+                && (p.tier, p.mr, p.nr, p.ku)
+                    == (best_p.tier, best_p.mr, best_p.nr, best_p.ku)
+        })
+        .copied()
+        .expect("manifest expansion provides the packed twin");
     println!(
-        "detected simd tier: {} — benchmarking {} against the scalar variant",
+        "detected simd tier: {} (packing {}) — benchmarking {} and {} \
+         against the scalar variant",
         microkernel::detected_tier(),
+        if microkernel::pack_enabled() { "on" } else { "off" },
         best_p.name(),
+        packed_p.name(),
     );
     let mut simd_rows = Vec::new();
     for (label, shape_input) in
@@ -435,26 +458,39 @@ fn bench_pjrt(
             rt.gemm_pooled(scalar_id, shape_input, &mut scratch).unwrap();
             black_box(scratch.out[0])
         });
-        // Stable name across hosts (the detected tier varies by machine;
-        // it is recorded in the `simd` object, not the result name).
+        // Stable names across hosts (the detected tier varies by machine;
+        // it is recorded in the `simd` object, not the result name).  The
+        // packing axis *is* in the name — best vs best_packed — so the
+        // missing-gated-key detection covers the packed path.
         let best_name = format!("gemm_pooled:simd:best:{label}");
         suite.bench(&best_name, || {
             rt.gemm_pooled(best_id, shape_input, &mut scratch).unwrap();
             black_box(scratch.out[0])
         });
+        let packed_name = format!("gemm_pooled:simd:best_packed:{label}");
+        suite.bench(&packed_name, || {
+            rt.gemm_pooled(packed_id, shape_input, &mut scratch).unwrap();
+            black_box(scratch.out[0])
+        });
         let scalar_s = median_of(suite, &scalar_name);
         let best_s = median_of(suite, &best_name);
+        let best_packed_s = median_of(suite, &packed_name);
         let speedup = if best_s > 0.0 { scalar_s / best_s } else { 0.0 };
+        let packed_speedup =
+            if best_packed_s > 0.0 { best_s / best_packed_s } else { 0.0 };
         println!(
             "simd {label}: scalar {scalar_s:.3e}s vs {} {best_s:.3e}s \
-             ({speedup:.2}x)",
+             ({speedup:.2}x); packed {best_packed_s:.3e}s \
+             ({packed_speedup:.2}x vs unpacked)",
             best_p.tier,
         );
         simd_rows.push(Json::obj(vec![
             ("shape", Json::str(label)),
             ("scalar_s", Json::num(scalar_s)),
             ("best_s", Json::num(best_s)),
+            ("best_packed_s", Json::num(best_packed_s)),
             ("speedup", Json::num(speedup)),
+            ("packed_speedup", Json::num(packed_speedup)),
         ]));
     }
     // Fused floor: a B=8 fused dispatch of the best variant, per
@@ -473,13 +509,33 @@ fn bench_pjrt(
         "simd fused B=8: {fused_per_req:.3e}s/req vs scalar \
          {scalar_per_req:.3e}s/req ({fused_speedup:.2}x)"
     );
+    // Packed fused leg: all 8 slots share one raw B operand (the batched-
+    // inference shape), so the packed B panels are built once and reused
+    // across the batch — the B-repack amortization path.
+    suite.bench("gemm_batch_pooled:simd:best_packed:100^3:B8", || {
+        rt.gemm_batch_pooled(packed_id, &inputs8, &mut batch).unwrap();
+        black_box(batch.out[0])
+    });
+    let fused_packed_per_req =
+        median_of(suite, "gemm_batch_pooled:simd:best_packed:100^3:B8") / 8.0;
+    let fused_packed_speedup = if fused_packed_per_req > 0.0 {
+        scalar_per_req / fused_packed_per_req
+    } else {
+        0.0
+    };
+    println!(
+        "simd fused packed B=8: {fused_packed_per_req:.3e}s/req \
+         ({fused_packed_speedup:.2}x vs scalar)"
+    );
     extra.push((
         "simd",
         Json::obj(vec![
             ("tier", Json::str(microkernel::detected_tier().name())),
             ("variant", Json::str(best_p.name())),
+            ("packed_variant", Json::str(packed_p.name())),
             ("shapes", Json::Arr(simd_rows)),
             ("fused_speedup_vs_scalar", Json::num(fused_speedup)),
+            ("fused_packed_speedup_vs_scalar", Json::num(fused_packed_speedup)),
         ]),
     ));
     // The variant dispatch rides the same pooled scratch: it must keep
@@ -497,6 +553,22 @@ fn bench_pjrt(
         "microkernel pooled path must not allocate at steady state \
          ({alloc_simd} allocations over {iters} requests)"
     );
+    // Same contract for the packed path: pack buffers are pools too —
+    // once at steady-state capacity, a packed dispatch (pack A + pack B
+    // + packed kernel + unpad) performs zero heap allocations.
+    let alloc_simd_packed = allocs_total(iters, || {
+        rt.gemm_pooled(packed_id, &input2, &mut scratch).unwrap();
+        black_box(scratch.out[0]);
+    });
+    println!(
+        "allocs/request simd packed pooled over {iters} requests: {:.1}",
+        alloc_simd_packed as f64 / iters as f64,
+    );
+    assert_eq!(
+        alloc_simd_packed, 0,
+        "packed microkernel pooled path must not allocate at steady state \
+         ({alloc_simd_packed} allocations over {iters} requests)"
+    );
 
     extra.push((
         "allocs_per_request",
@@ -509,6 +581,10 @@ fn bench_pjrt(
             ),
             ("engine_pooled", Json::num(alloc_engine as f64 / iters as f64)),
             ("simd_pooled", Json::num(alloc_simd as f64 / iters as f64)),
+            (
+                "simd_packed_pooled",
+                Json::num(alloc_simd_packed as f64 / iters as f64),
+            ),
             (
                 "fused_pooled",
                 Json::num(alloc_fused as f64 / (batch_iters * 16) as f64),

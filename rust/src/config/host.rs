@@ -65,6 +65,12 @@ pub struct HostParams {
     pub nr: u32,
     /// K-loop unroll factor.
     pub ku: u32,
+    /// Packed-operand layout: A repacked into `mr x k` row panels and B
+    /// into `k x nr` column panels once per dispatch, so the inner loops
+    /// run unit-stride.  Costs an O(n^2) pack pass — a *layout* choice
+    /// the adaptive loop learns per shape (loses for skinny k, wins for
+    /// large k), not a capability tier.
+    pub packed: bool,
 }
 
 /// Hard tile bound the executor's stack accumulators are sized for.
@@ -85,17 +91,31 @@ impl HostParams {
     }
 
     pub fn name(&self) -> String {
-        format!("h_{}_t{}x{}_u{}", self.tier.name(), self.mr, self.nr, self.ku)
+        format!(
+            "h_{}_t{}x{}_u{}{}",
+            self.tier.name(),
+            self.mr,
+            self.nr,
+            self.ku,
+            if self.packed { "_p" } else { "" }
+        )
     }
 
     /// A compact stable u64 fingerprint (used for deterministic sim noise).
+    /// The `packed` axis folds in only when set, so every pre-existing
+    /// unpacked variant keeps its fingerprint (and its sim landscape).
     pub fn fingerprint(&self) -> u64 {
         let fields = [self.tier.lanes(), self.mr, self.nr, self.ku];
-        fields
+        let h = fields
             .iter()
             .fold(0x9ce4_8422_cbf2_2325u64, |h, &f| {
                 (h ^ f as u64).wrapping_mul(0x100_0000_01b3)
-            })
+            });
+        if self.packed {
+            (h ^ 1).wrapping_mul(0x100_0000_01b3)
+        } else {
+            h
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -104,6 +124,7 @@ impl HostParams {
             ("mr", Json::num(self.mr)),
             ("nr", Json::num(self.nr)),
             ("ku", Json::num(self.ku)),
+            ("packed", Json::Bool(self.packed)),
         ])
     }
 
@@ -118,6 +139,7 @@ impl HostParams {
             mr: v.get("mr")?.as_u32()?,
             nr: v.get("nr")?.as_u32()?,
             ku: v.get_or("ku", &Json::Num(1.0)).as_u32()?,
+            packed: v.get_or("packed", &Json::Bool(false)).as_bool()?,
         })
     }
 }
@@ -126,14 +148,19 @@ impl HostParams {
 /// expands every indirect padding bucket by.  Small on purpose — the "A
 /// Few Fit Most" result is that a handful of variants plus a learned
 /// selector covers the input space; each tier contributes tile/unroll
-/// points the CART can prefer per shape.
+/// points the CART can prefer per shape.  Each unpacked point ships a
+/// packed twin (appended *after* the unpacked four, so positional and
+/// first-match lookups keep finding the unpacked originals) — packing
+/// is a per-shape layout decision the selector learns, not a default.
 pub fn host_variants() -> Vec<HostParams> {
-    vec![
-        HostParams { tier: SimdTier::Scalar, mr: 8, nr: 8, ku: 1 },
-        HostParams { tier: SimdTier::Sse128, mr: 4, nr: 4, ku: 2 },
-        HostParams { tier: SimdTier::Avx2Fma, mr: 8, nr: 8, ku: 4 },
-        HostParams { tier: SimdTier::Avx2Fma, mr: 4, nr: 8, ku: 2 },
-    ]
+    let unpacked = vec![
+        HostParams { tier: SimdTier::Scalar, mr: 8, nr: 8, ku: 1, packed: false },
+        HostParams { tier: SimdTier::Sse128, mr: 4, nr: 4, ku: 2, packed: false },
+        HostParams { tier: SimdTier::Avx2Fma, mr: 8, nr: 8, ku: 4, packed: false },
+        HostParams { tier: SimdTier::Avx2Fma, mr: 4, nr: 8, ku: 2, packed: false },
+    ];
+    let packed = unpacked.iter().map(|p| HostParams { packed: true, ..*p });
+    unpacked.iter().copied().chain(packed).collect()
 }
 
 #[cfg(test)]
@@ -174,9 +201,9 @@ mod tests {
 
     #[test]
     fn illegal_tiles_rejected() {
-        let p = HostParams { tier: SimdTier::Scalar, mr: 16, nr: 4, ku: 1 };
+        let p = HostParams { tier: SimdTier::Scalar, mr: 16, nr: 4, ku: 1, packed: false };
         assert!(!p.is_structurally_legal());
-        let p = HostParams { tier: SimdTier::Scalar, mr: 4, nr: 4, ku: 3 };
+        let p = HostParams { tier: SimdTier::Scalar, mr: 4, nr: 4, ku: 3, packed: false };
         assert!(!p.is_structurally_legal());
     }
 
@@ -188,11 +215,45 @@ mod tests {
     }
 
     #[test]
+    fn json_packed_defaults_false_for_legacy_entries() {
+        // Manifests written before the packed axis existed omit the key.
+        let p = HostParams { tier: SimdTier::Avx2Fma, mr: 8, nr: 8, ku: 4, packed: true };
+        let mut legacy = p.to_json();
+        if let Json::Obj(fields) = &mut legacy {
+            fields.remove("packed");
+        }
+        let parsed = HostParams::from_json(&legacy).unwrap();
+        assert!(!parsed.packed);
+        assert_eq!(parsed, HostParams { packed: false, ..p });
+    }
+
+    #[test]
     fn fingerprint_sensitive_to_fields() {
-        let a = HostParams { tier: SimdTier::Avx2Fma, mr: 8, nr: 8, ku: 4 };
+        let a = HostParams { tier: SimdTier::Avx2Fma, mr: 8, nr: 8, ku: 4, packed: false };
         let b = HostParams { ku: 2, ..a };
         let c = HostParams { tier: SimdTier::Sse128, ..a };
+        let d = HostParams { packed: true, ..a };
         assert_ne!(a.fingerprint(), b.fingerprint());
         assert_ne!(a.fingerprint(), c.fingerprint());
+        assert_ne!(a.fingerprint(), d.fingerprint());
+    }
+
+    #[test]
+    fn packed_twins_suffix_names_and_follow_unpacked() {
+        let vs = host_variants();
+        let unpacked: Vec<_> = vs.iter().filter(|p| !p.packed).collect();
+        let packed: Vec<_> = vs.iter().filter(|p| p.packed).collect();
+        assert_eq!(unpacked.len(), packed.len(), "every point has a packed twin");
+        // The unpacked originals come first so first-match/positional
+        // lookups (`find`, `[0]`) keep their pre-packing meaning.
+        assert!(!vs[0].packed);
+        let first_packed = vs.iter().position(|p| p.packed).unwrap();
+        assert!(vs[..first_packed].iter().all(|p| !p.packed));
+        assert!(vs[first_packed..].iter().all(|p| p.packed));
+        for p in packed {
+            assert!(p.name().ends_with("_p"), "{}", p.name());
+            let twin = HostParams { packed: false, ..*p };
+            assert!(unpacked.contains(&&twin), "twin missing for {}", p.name());
+        }
     }
 }

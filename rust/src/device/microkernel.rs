@@ -73,6 +73,92 @@ pub fn tier_supported(t: SimdTier) -> bool {
     t <= detected_tier()
 }
 
+/// Whether the packed-operand path is enabled for this process.
+/// `ADAPTLIB_PACK=off|0|false` marks packed variants unservable and
+/// degrades any packed config that still arrives down the unpacked
+/// padded path (degrade-don't-fault) — the CI forced-unpacked leg's
+/// lever, mirroring `ADAPTLIB_SIMD`.  Cached so per-request servability
+/// checks never touch the environment.
+pub fn pack_enabled() -> bool {
+    static PACK: OnceLock<bool> = OnceLock::new();
+    *PACK.get_or_init(|| match std::env::var("ADAPTLIB_PACK") {
+        Ok(v) => !matches!(
+            v.trim().to_ascii_lowercase().as_str(),
+            "off" | "0" | "false"
+        ),
+        Err(_) => true,
+    })
+}
+
+/// Length of A packed into `mr`-row panels: `ceil(m/mr)` panels of
+/// `mr × k` each, zero-filled in the ragged rows of the last panel.
+pub fn packed_a_len(m: usize, k: usize, mr: usize) -> usize {
+    m.div_ceil(mr) * mr * k
+}
+
+/// Length of B packed into `nr`-column panels: `ceil(n/nr)` panels of
+/// `k × nr` each, zero-filled in the ragged columns of the last panel.
+pub fn packed_b_len(n: usize, k: usize, nr: usize) -> usize {
+    n.div_ceil(nr) * nr * k
+}
+
+/// Pack row-major `a` (`m × k`) into row panels: panel `pi` holds rows
+/// `pi*mr..pi*mr+mr`, stored l-major so the microkernel reads `mr`
+/// adjacent A values per k-step — `pa[pi*mr*k + l*mr + ti] =
+/// a[(pi*mr+ti)*k + l]`, zero for padded rows `ti >= tm`.  Fully
+/// overwrites `pa` (resizing only on length change, so pooled callers
+/// stay allocation-free in steady state).
+pub fn pack_a_into(a: &[f32], m: usize, k: usize, mr: usize, pa: &mut Vec<f32>) {
+    assert!((1..=MAX).contains(&mr), "mr out of range");
+    assert_eq!(a.len(), m * k, "a size mismatch");
+    let len = packed_a_len(m, k, mr);
+    if pa.len() != len {
+        pa.clear();
+        pa.resize(len, 0.0);
+    }
+    for pi in 0..m.div_ceil(mr) {
+        let i0 = pi * mr;
+        let tm = (m - i0).min(mr);
+        let base = pi * mr * k;
+        for l in 0..k {
+            let row = base + l * mr;
+            for ti in 0..tm {
+                pa[row + ti] = a[(i0 + ti) * k + l];
+            }
+            for ti in tm..mr {
+                pa[row + ti] = 0.0;
+            }
+        }
+    }
+}
+
+/// Pack row-major `b` (`k × n`) into column panels: panel `pj` holds
+/// columns `pj*nr..pj*nr+nr`, stored l-major so the microkernel reads
+/// `nr` adjacent B values per k-step — `pb[pj*k*nr + l*nr + tj] =
+/// b[l*n + pj*nr+tj]`, zero for padded columns `tj >= tn`.  Fully
+/// overwrites `pb` like `pack_a_into`.
+pub fn pack_b_into(b: &[f32], k: usize, n: usize, nr: usize, pb: &mut Vec<f32>) {
+    assert!((1..=MAX).contains(&nr), "nr out of range");
+    assert_eq!(b.len(), k * n, "b size mismatch");
+    let len = packed_b_len(n, k, nr);
+    if pb.len() != len {
+        pb.clear();
+        pb.resize(len, 0.0);
+    }
+    for pj in 0..n.div_ceil(nr) {
+        let j0 = pj * nr;
+        let tn = (n - j0).min(nr);
+        let base = pj * k * nr;
+        for l in 0..k {
+            let row = base + l * nr;
+            pb[row..row + tn].copy_from_slice(&b[l * n + j0..l * n + j0 + tn]);
+            for tj in tn..nr {
+                pb[row + tj] = 0.0;
+            }
+        }
+    }
+}
+
 /// GEMM over padded row-major buffers: `out[i*n+j] = alpha * Σ_l
 /// a[i*k+l]·b[l*n+j] (f64 chain) + beta * c[i*n+j]`, dispatched to the
 /// variant's tier clamped to the detected one.  Allocation-free: all
@@ -359,6 +445,285 @@ unsafe fn block_avx2(
     }
 }
 
+/// GEMM over pre-packed panels (`pack_a_into` / `pack_b_into` layouts):
+/// same contract as `gemm_padded`, but every inner-loop operand load is
+/// unit-stride.  Bit-identical to the scalar reference: the packed
+/// kernels run l-outer rank-1 updates, which reorders work *across*
+/// output elements but leaves each element's own l-ordered f64 chain —
+/// the thing rounding sees — untouched.  Padded panel lanes contribute
+/// only to accumulator slots the epilogue never reads (`ti >= tm` rows
+/// are skipped, `tj >= tn` lanes are discarded by the `tn` bound).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_packed(
+    p: &HostParams,
+    m: usize,
+    n: usize,
+    k: usize,
+    pa: &[f32],
+    pb: &[f32],
+    c: &[f32],
+    alpha: f32,
+    beta: f32,
+    out: &mut [f32],
+) {
+    assert!(p.is_structurally_legal(), "illegal host variant {}", p.name());
+    let (mr, nr) = (p.mr as usize, p.nr as usize);
+    assert_eq!(pa.len(), packed_a_len(m, k, mr), "packed a size mismatch");
+    assert_eq!(pb.len(), packed_b_len(n, k, nr), "packed b size mismatch");
+    assert_eq!(c.len(), m * n, "c size mismatch");
+    assert_eq!(out.len(), m * n, "out size mismatch");
+    match p.tier.min(detected_tier()) {
+        SimdTier::Scalar => packed_scalar(p, m, n, k, pa, pb, c, alpha, beta, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the detected tier gates on is_x86_feature_detected!.
+        SimdTier::Sse128 => unsafe {
+            packed_sse(p, m, n, k, pa, pb, c, alpha, beta, out)
+        },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above — avx2+fma verified present at detection.
+        SimdTier::Avx2Fma => unsafe {
+            packed_avx2(p, m, n, k, pa, pb, c, alpha, beta, out)
+        },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => packed_scalar(p, m, n, k, pa, pb, c, alpha, beta, out),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn packed_scalar(
+    p: &HostParams,
+    m: usize,
+    n: usize,
+    k: usize,
+    pa: &[f32],
+    pb: &[f32],
+    c: &[f32],
+    alpha: f32,
+    beta: f32,
+    out: &mut [f32],
+) {
+    let (mr, nr, ku) = (p.mr as usize, p.nr as usize, p.ku as usize);
+    let mut i0 = 0;
+    while i0 < m {
+        let tm = (m - i0).min(mr);
+        let apan = &pa[(i0 / mr) * mr * k..][..mr * k];
+        let mut j0 = 0;
+        while j0 < n {
+            let tn = (n - j0).min(nr);
+            let bpan = &pb[(j0 / nr) * k * nr..][..k * nr];
+            let mut acc = [[0f64; MAX]; MAX];
+            // l-outer rank-1 updates: each k-step reads mr adjacent A
+            // values and nr adjacent B values.  The ku-unrolled body
+            // peels the same per-element chain; the remainder loop
+            // repeats it verbatim.
+            let mut l = 0;
+            while l + ku <= k {
+                for u in 0..ku {
+                    let arow = &apan[(l + u) * mr..(l + u) * mr + mr];
+                    let brow = &bpan[(l + u) * nr..(l + u) * nr + nr];
+                    for (ti, accrow) in acc.iter_mut().enumerate().take(tm) {
+                        let av = arow[ti] as f64;
+                        for tj in 0..tn {
+                            accrow[tj] += av * brow[tj] as f64;
+                        }
+                    }
+                }
+                l += ku;
+            }
+            while l < k {
+                let arow = &apan[l * mr..l * mr + mr];
+                let brow = &bpan[l * nr..l * nr + nr];
+                for (ti, accrow) in acc.iter_mut().enumerate().take(tm) {
+                    let av = arow[ti] as f64;
+                    for tj in 0..tn {
+                        accrow[tj] += av * brow[tj] as f64;
+                    }
+                }
+                l += 1;
+            }
+            epilogue(&acc, i0, j0, tm, tn, n, c, alpha, beta, out);
+            j0 += nr;
+        }
+        i0 += mr;
+    }
+}
+
+/// SSE2 packed tier.  Vector lanes span the full `nr` panel width (the
+/// pack zero-fill makes ragged-tile loads safe); lanes past `tn` land in
+/// accumulator slots the epilogue discards.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn packed_sse(
+    p: &HostParams,
+    m: usize,
+    n: usize,
+    k: usize,
+    pa: &[f32],
+    pb: &[f32],
+    c: &[f32],
+    alpha: f32,
+    beta: f32,
+    out: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let (mr, nr, ku) = (p.mr as usize, p.nr as usize, p.ku as usize);
+    let pairs = nr / 2;
+    let mut i0 = 0;
+    while i0 < m {
+        let tm = (m - i0).min(mr);
+        let apan = pa.as_ptr().add((i0 / mr) * mr * k);
+        let mut j0 = 0;
+        while j0 < n {
+            let tn = (n - j0).min(nr);
+            let bpan = pb.as_ptr().add((j0 / nr) * k * nr);
+            let mut acc = [[0f64; MAX]; MAX];
+            let mut vacc = [[_mm_setzero_pd(); MAX / 2]; MAX];
+            let mut l = 0;
+            while l + ku <= k {
+                for u in 0..ku {
+                    let arow = apan.add((l + u) * mr);
+                    let brow = bpan.add((l + u) * nr);
+                    for ti in 0..tm {
+                        let av64 = *arow.add(ti) as f64;
+                        let av = _mm_set1_pd(av64);
+                        for (g, v) in
+                            vacc[ti].iter_mut().take(pairs).enumerate()
+                        {
+                            // 8-byte unit-stride load of two adjacent
+                            // panel f32s, widened.
+                            let bv = _mm_cvtps_pd(_mm_castpd_ps(_mm_load_sd(
+                                brow.add(2 * g) as *const f64,
+                            )));
+                            *v = _mm_add_pd(*v, _mm_mul_pd(av, bv));
+                        }
+                        for tj in pairs * 2..tn {
+                            acc[ti][tj] += av64 * *brow.add(tj) as f64;
+                        }
+                    }
+                }
+                l += ku;
+            }
+            while l < k {
+                let arow = apan.add(l * mr);
+                let brow = bpan.add(l * nr);
+                for ti in 0..tm {
+                    let av64 = *arow.add(ti) as f64;
+                    let av = _mm_set1_pd(av64);
+                    for (g, v) in vacc[ti].iter_mut().take(pairs).enumerate() {
+                        let bv = _mm_cvtps_pd(_mm_castpd_ps(_mm_load_sd(
+                            brow.add(2 * g) as *const f64,
+                        )));
+                        *v = _mm_add_pd(*v, _mm_mul_pd(av, bv));
+                    }
+                    for tj in pairs * 2..tn {
+                        acc[ti][tj] += av64 * *brow.add(tj) as f64;
+                    }
+                }
+                l += 1;
+            }
+            for (ti, accrow) in acc.iter_mut().enumerate().take(tm) {
+                for g in 0..pairs {
+                    let mut lanes = [0f64; 2];
+                    _mm_storeu_pd(lanes.as_mut_ptr(), vacc[ti][g]);
+                    accrow[2 * g] = lanes[0];
+                    accrow[2 * g + 1] = lanes[1];
+                }
+            }
+            epilogue(&acc, i0, j0, tm, tn, n, c, alpha, beta, out);
+            j0 += nr;
+        }
+        i0 += mr;
+    }
+}
+
+/// AVX2+FMA packed tier — same full-panel-width lane policy as the SSE
+/// packed kernel, with the single-rounding FMA equal to scalar's
+/// two-step rounding because the widened product is exact.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn packed_avx2(
+    p: &HostParams,
+    m: usize,
+    n: usize,
+    k: usize,
+    pa: &[f32],
+    pb: &[f32],
+    c: &[f32],
+    alpha: f32,
+    beta: f32,
+    out: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let (mr, nr, ku) = (p.mr as usize, p.nr as usize, p.ku as usize);
+    let quads = nr / 4;
+    let mut i0 = 0;
+    while i0 < m {
+        let tm = (m - i0).min(mr);
+        let apan = pa.as_ptr().add((i0 / mr) * mr * k);
+        let mut j0 = 0;
+        while j0 < n {
+            let tn = (n - j0).min(nr);
+            let bpan = pb.as_ptr().add((j0 / nr) * k * nr);
+            let mut acc = [[0f64; MAX]; MAX];
+            let mut vacc = [[_mm256_setzero_pd(); MAX / 4]; MAX];
+            let mut l = 0;
+            while l + ku <= k {
+                for u in 0..ku {
+                    let arow = apan.add((l + u) * mr);
+                    let brow = bpan.add((l + u) * nr);
+                    for ti in 0..tm {
+                        let av64 = *arow.add(ti) as f64;
+                        let av = _mm256_set1_pd(av64);
+                        for (g, v) in
+                            vacc[ti].iter_mut().take(quads).enumerate()
+                        {
+                            // 16-byte unit-stride load of four adjacent
+                            // panel f32s, widened.
+                            let bv =
+                                _mm256_cvtps_pd(_mm_loadu_ps(brow.add(4 * g)));
+                            *v = _mm256_fmadd_pd(av, bv, *v);
+                        }
+                        for tj in quads * 4..tn {
+                            acc[ti][tj] += av64 * *brow.add(tj) as f64;
+                        }
+                    }
+                }
+                l += ku;
+            }
+            while l < k {
+                let arow = apan.add(l * mr);
+                let brow = bpan.add(l * nr);
+                for ti in 0..tm {
+                    let av64 = *arow.add(ti) as f64;
+                    let av = _mm256_set1_pd(av64);
+                    for (g, v) in vacc[ti].iter_mut().take(quads).enumerate() {
+                        let bv = _mm256_cvtps_pd(_mm_loadu_ps(brow.add(4 * g)));
+                        *v = _mm256_fmadd_pd(av, bv, *v);
+                    }
+                    for tj in quads * 4..tn {
+                        acc[ti][tj] += av64 * *brow.add(tj) as f64;
+                    }
+                }
+                l += 1;
+            }
+            for (ti, accrow) in acc.iter_mut().enumerate().take(tm) {
+                for g in 0..quads {
+                    let mut lanes = [0f64; 4];
+                    _mm256_storeu_pd(lanes.as_mut_ptr(), vacc[ti][g]);
+                    for (o, &v) in lanes.iter().enumerate() {
+                        accrow[4 * g + o] = v;
+                    }
+                }
+            }
+            epilogue(&acc, i0, j0, tm, tn, n, c, alpha, beta, out);
+            j0 += nr;
+        }
+        i0 += mr;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -403,6 +768,127 @@ mod tests {
         assert_eq!(t, detected_tier());
         assert!(tier_supported(SimdTier::Scalar));
         assert!(tier_supported(t));
+    }
+
+    #[test]
+    fn pack_gate_is_stable() {
+        assert_eq!(pack_enabled(), pack_enabled());
+    }
+
+    /// Pack roundtrip: every source element lands at its panel address,
+    /// every ragged-tile slot is zero.  Shapes cover full tiles, mr/nr
+    /// remainder tiles, the m==mb "already padded" edge (m a multiple of
+    /// mr so no ragged panel), single-row/column extremes and the
+    /// degenerate k=0.
+    #[test]
+    fn pack_roundtrip_addresses_and_zero_fill() {
+        let mut rng = Rng::new(0x9AC4);
+        for (m, n, k) in [
+            (16, 16, 16), // full tiles for every roster mr/nr
+            (13, 11, 9),  // remainder tiles on both axes
+            (8, 8, 5),    // m==mb edge: multiples of mr/nr, ragged k only
+            (1, 7, 5),    // single row, sub-tile n
+            (5, 3, 0),    // degenerate k
+        ] {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            for (mr, nr) in [(8, 8), (4, 4), (4, 8), (3, 5), (1, 1)] {
+                let mut pa = Vec::new();
+                let mut pb = Vec::new();
+                pack_a_into(&a, m, k, mr, &mut pa);
+                pack_b_into(&b, k, n, nr, &mut pb);
+                assert_eq!(pa.len(), packed_a_len(m, k, mr));
+                assert_eq!(pb.len(), packed_b_len(n, k, nr));
+                let mp = m.div_ceil(mr) * mr;
+                let np = n.div_ceil(nr) * nr;
+                for l in 0..k {
+                    for i in 0..mp {
+                        let got = pa[(i / mr) * mr * k + l * mr + (i % mr)];
+                        let want = if i < m { a[i * k + l] } else { 0.0 };
+                        assert_eq!(got.to_bits(), want.to_bits());
+                    }
+                    for j in 0..np {
+                        let got = pb[(j / nr) * k * nr + l * nr + (j % nr)];
+                        let want = if j < n { b[l * n + j] } else { 0.0 };
+                        assert_eq!(got.to_bits(), want.to_bits());
+                    }
+                }
+            }
+        }
+    }
+
+    /// Pooled reuse: repacking a smaller problem into a dirty buffer
+    /// must not leak stale panel content.
+    #[test]
+    fn pack_overwrites_stale_buffer_content() {
+        let mut rng = Rng::new(0xFACE);
+        let big_a = rand_vec(&mut rng, 16 * 12);
+        let mut pa = Vec::new();
+        pack_a_into(&big_a, 16, 12, 8, &mut pa);
+        pa.iter_mut().for_each(|v| *v = f32::NAN);
+        let small_a = rand_vec(&mut rng, 5 * 3);
+        pack_a_into(&small_a, 5, 3, 4, &mut pa);
+        assert_eq!(pa.len(), packed_a_len(5, 3, 4));
+        assert!(pa.iter().all(|v| !v.is_nan()), "stale content leaked");
+
+        let big_b = rand_vec(&mut rng, 12 * 16);
+        let mut pb = Vec::new();
+        pack_b_into(&big_b, 12, 16, 8, &mut pb);
+        pb.iter_mut().for_each(|v| *v = f32::NAN);
+        let small_b = rand_vec(&mut rng, 3 * 5);
+        pack_b_into(&small_b, 3, 5, 4, &mut pb);
+        assert_eq!(pb.len(), packed_b_len(5, 3, 4));
+        assert!(pb.iter().all(|v| !v.is_nan()), "stale content leaked");
+    }
+
+    #[test]
+    #[should_panic(expected = "a size mismatch")]
+    fn pack_a_rejects_wrong_source_size() {
+        pack_a_into(&[0.0; 7], 4, 2, 4, &mut Vec::new());
+    }
+
+    #[test]
+    #[should_panic(expected = "b size mismatch")]
+    fn pack_b_rejects_wrong_source_size() {
+        pack_b_into(&[0.0; 7], 2, 4, 4, &mut Vec::new());
+    }
+
+    /// The packed kernels, fed freshly packed panels, are bit-identical
+    /// to the reference chain for every roster variant at every
+    /// executable tier — including the degenerate k=0 epilogue-only
+    /// case.
+    #[test]
+    fn packed_kernels_bit_identical_to_reference() {
+        let mut rng = Rng::new(0x51D1);
+        for (m, n, k) in [
+            (16, 16, 16),
+            (8, 8, 8),
+            (13, 11, 9),
+            (1, 7, 5),
+            (32, 16, 24),
+            (6, 9, 0),
+        ] {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let c = rand_vec(&mut rng, m * n);
+            let (alpha, beta) = (1.25f32, -0.5f32);
+            let want = reference(m, n, k, &a, &b, &c, alpha, beta);
+            let mut pa = Vec::new();
+            let mut pb = Vec::new();
+            let mut out = vec![0f32; m * n];
+            for p in host_variants() {
+                pack_a_into(&a, m, k, p.mr as usize, &mut pa);
+                pack_b_into(&b, k, n, p.nr as usize, &mut pb);
+                out.fill(f32::NAN);
+                gemm_packed(&p, m, n, k, &pa, &pb, &c, alpha, beta, &mut out);
+                assert_eq!(
+                    out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{} packed diverges on {m}x{n}x{k}",
+                    p.name(),
+                );
+            }
+        }
     }
 
     /// Every variant, at every executable tier, bit-identical to the

@@ -209,14 +209,18 @@ impl ExecutionEngine for RuntimeEngine {
     fn is_servable(&self, id: ArtifactId) -> bool {
         // Every PJRT roster artifact was AOT-compiled for this host; a
         // host microkernel variant additionally requires its instruction
-        // tier to be at or below what runtime feature detection found
-        // (`detected_tier` is OnceLock-cached: this runs per request on
-        // the zero-alloc hot path).
+        // tier to be at or below what runtime feature detection found,
+        // and — for packed variants — the packed path not to be forced
+        // off (`ADAPTLIB_PACK=off`).  Both gates are OnceLock-cached:
+        // this runs per request on the zero-alloc hot path.
         if (id.0 as usize) >= self.runtime.manifest.len() {
             return false;
         }
         match self.runtime.manifest.meta(id).config {
-            KernelConfig::HostSimd(p) => microkernel::tier_supported(p.tier),
+            KernelConfig::HostSimd(p) => {
+                microkernel::tier_supported(p.tier)
+                    && (!p.packed || microkernel::pack_enabled())
+            }
             _ => true,
         }
     }

@@ -110,6 +110,12 @@ pub struct ScratchBuffers {
     a: Vec<f32>,
     b: Vec<f32>,
     c: Vec<f32>,
+    /// Panel-packed A/B for `packed` host variants: filled once per
+    /// dispatch by `microkernel::pack_a_into`/`pack_b_into` from the
+    /// padded `a`/`b`, capacity-reused at steady state like every other
+    /// pool (the `simd_packed_pooled` counting-allocator gate).
+    pack_a: Vec<f32>,
+    pack_b: Vec<f32>,
     padded_out: Vec<f32>,
     /// Logical `m x n` result of the last pooled call.
     pub out: Vec<f32>,
@@ -142,6 +148,11 @@ pub struct BatchScratch {
     a: Vec<f32>,
     b: Vec<f32>,
     c: Vec<f32>,
+    /// Panel-packed A/B for `packed` host variants (one slot wide — A is
+    /// repacked per slot; B is repacked only when a slot's raw operand
+    /// differs from the previous slot's, amortizing the shared-B case).
+    pack_a: Vec<f32>,
+    pack_b: Vec<f32>,
     padded_out: Vec<f32>,
     /// Per-slot pool for the sequential fallback (engines without a
     /// native fused surface run `execute_pooled` per slot through this).
@@ -378,7 +389,7 @@ impl GemmRuntime {
                 pad::pad_into(input.a, input.m, input.k, mb, kb, &mut scratch.a);
                 pad::pad_into(input.b, input.k, input.n, kb, nb, &mut scratch.b);
                 pad::pad_into(input.c, input.m, input.n, mb, nb, &mut scratch.c);
-                let helper_pad = th.elapsed();
+                let mut helper_pad = th.elapsed();
 
                 let t0 = Instant::now();
                 if let KernelConfig::HostSimd(p) = self.manifest.meta(id).config {
@@ -387,6 +398,52 @@ impl GemmRuntime {
                     // to the in-process SIMD microkernel (allocation-free;
                     // `resize_only` reuses capacity at steady state).
                     resize_only(&mut scratch.padded_out, mb * nb);
+                    if p.packed && microkernel::pack_enabled() {
+                        // Packed layout: panel-pack the padded operands
+                        // once per dispatch (a helper pass, like pad —
+                        // the §5.4 split the sim model mirrors), then run
+                        // the unit-stride packed kernel.  Bit-identical
+                        // to the unpacked path.
+                        let tp = Instant::now();
+                        microkernel::pack_a_into(
+                            &scratch.a, mb, kb, p.mr as usize,
+                            &mut scratch.pack_a,
+                        );
+                        microkernel::pack_b_into(
+                            &scratch.b, kb, nb, p.nr as usize,
+                            &mut scratch.pack_b,
+                        );
+                        helper_pad += tp.elapsed();
+                        let tk = Instant::now();
+                        microkernel::gemm_packed(
+                            &p,
+                            mb,
+                            nb,
+                            kb,
+                            &scratch.pack_a,
+                            &scratch.pack_b,
+                            &scratch.c,
+                            input.alpha,
+                            input.beta,
+                            &mut scratch.padded_out,
+                        );
+                        let kernel_time = tk.elapsed();
+                        let tu = Instant::now();
+                        pad::unpad_into_vec(
+                            &scratch.padded_out,
+                            nb,
+                            input.m,
+                            input.n,
+                            &mut scratch.out,
+                        );
+                        return Ok(GemmTimes {
+                            helper_time: helper_pad + tu.elapsed(),
+                            kernel_time,
+                        });
+                    }
+                    // Unpacked variant — or packed with packing disabled
+                    // (`ADAPTLIB_PACK=off`): degrade-don't-fault to the
+                    // padded kernel, which computes the same bits.
                     microkernel::gemm_padded(
                         &p,
                         mb,
@@ -461,6 +518,11 @@ impl GemmRuntime {
     /// * per-slot times exclude the fusion amortization: each slot is
     ///   timed as its own execute + its own pad/unpad share, so
     ///   telemetry stays comparable to un-fused oracle measurements.
+    ///   One deliberate exception: packed host variants reuse the packed
+    ///   B panels across adjacent slots that share the same raw B
+    ///   operand, so those slots' helper times record the (near-zero)
+    ///   work actually done — the amortization *is* the packed fused
+    ///   win, and it shows up in wall time.
     ///
     /// On error the batch fails as a whole (`batch.out`/`batch.times`
     /// contents are unspecified); the coordinator answers every member
@@ -566,6 +628,17 @@ impl GemmRuntime {
                     KernelConfig::HostSimd(p) => Some(p),
                     _ => None,
                 };
+                let use_packed =
+                    host.is_some_and(|p| p.packed && microkernel::pack_enabled());
+                // B-repack amortization: fused slots share one triple, so
+                // when adjacent slots also share the *same* raw B operand
+                // (batched inference against one weight matrix — the
+                // hotpath's fused shape) the packed B panels are reused
+                // verbatim.  Identity is by raw slice (ptr, len): sound
+                // because `pad_into_slice` + `pack_b_into` are pure in
+                // the source bytes, and the borrow of `inputs` outlives
+                // the loop so the pointer cannot be recycled mid-batch.
+                let mut packed_b_for: Option<(*const f32, usize)> = None;
                 let a_dims = [mb as i64, kb as i64];
                 let b_dims = [kb as i64, nb as i64];
                 let c_dims = [mb as i64, nb as i64];
@@ -576,6 +649,48 @@ impl GemmRuntime {
                         // slot's padded operands — bit-identical to the
                         // standalone pooled call (same buffers, same chain).
                         resize_only(&mut batch.padded_out, sc);
+                        if use_packed {
+                            let tp = Instant::now();
+                            microkernel::pack_a_into(
+                                &batch.a[slot * sa..(slot + 1) * sa],
+                                mb, kb, p.mr as usize,
+                                &mut batch.pack_a,
+                            );
+                            let key = (input.b.as_ptr(), input.b.len());
+                            if packed_b_for != Some(key) {
+                                microkernel::pack_b_into(
+                                    &batch.b[slot * sb..(slot + 1) * sb],
+                                    kb, nb, p.nr as usize,
+                                    &mut batch.pack_b,
+                                );
+                                packed_b_for = Some(key);
+                            }
+                            batch.times[slot].helper_time += tp.elapsed();
+                            let tk = Instant::now();
+                            microkernel::gemm_packed(
+                                &p,
+                                mb,
+                                nb,
+                                kb,
+                                &batch.pack_a,
+                                &batch.pack_b,
+                                &batch.c[slot * sc..(slot + 1) * sc],
+                                input.alpha,
+                                input.beta,
+                                &mut batch.padded_out,
+                            );
+                            batch.times[slot].kernel_time = tk.elapsed();
+                            let tu = Instant::now();
+                            pad::unpad_into(
+                                &batch.padded_out,
+                                nb,
+                                m,
+                                n,
+                                &mut batch.out[slot * m * n..(slot + 1) * m * n],
+                            );
+                            batch.times[slot].helper_time += tu.elapsed();
+                            continue;
+                        }
                         microkernel::gemm_padded(
                             &p,
                             mb,

@@ -308,6 +308,7 @@ fn parse_artifact(a: &Json) -> Result<ArtifactMeta> {
                 mr: g("mr")?,
                 nr: g("nr")?,
                 ku: g("ku")?,
+                packed: cfg_json.get_or("packed", &Json::Bool(false)).as_bool()?,
             });
             (kind, config)
         }

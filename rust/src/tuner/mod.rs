@@ -4,10 +4,12 @@
 pub mod anneal;
 mod backend;
 mod db;
+pub mod roster;
 
 pub use anneal::{anneal, AnnealParams};
 pub use backend::{Backend, SimBackend};
 pub use db::TuningDb;
+pub use roster::{measured_roster, roster_to_json, BucketRoster, SweepSample};
 
 use crate::config::{DirectParams, KernelConfig, Triple, XgemmParams};
 use crate::dataset::{ClassTable, Dataset, LabeledDataset};

@@ -1,0 +1,201 @@
+//! Data-driven roster selection — "A Few Fit Most" (arxiv 2507.15277):
+//! instead of shipping a hand-picked host-variant roster, take the
+//! tuner's *measured* sweep results and keep the top-K variants per
+//! padding bucket.  The emitted JSON carries full `HostParams` configs
+//! in the manifest's `host_simd` field format, so a curated roster file
+//! can replace the hard-coded `host_variants()` four (plus packed
+//! twins) without touching the expansion machinery.
+
+use std::collections::BTreeMap;
+
+use crate::config::{HostParams, Triple};
+use crate::util::json::Json;
+
+/// One measured sweep point: a host variant run against one triple that
+/// pads into `bucket`.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepSample {
+    /// The padding bucket `(mb, nb, kb)` the triple falls into.
+    pub bucket: (u32, u32, u32),
+    pub params: HostParams,
+    pub triple: Triple,
+    pub gflops: f64,
+}
+
+/// The measured top-K host variants of one padding bucket, best first.
+#[derive(Debug, Clone)]
+pub struct BucketRoster {
+    pub bucket: (u32, u32, u32),
+    /// `(variant, mean measured GFLOP/s across the bucket's triples)`,
+    /// sorted by mean descending (name ascending on exact ties, so the
+    /// output is deterministic).
+    pub variants: Vec<(HostParams, f64)>,
+}
+
+impl BucketRoster {
+    /// Manifest-shaped JSON: each entry carries the variant name plus
+    /// the exact `config` object `Manifest::load`'s `host_simd` parser
+    /// consumes (tier/mr/nr/ku/packed), and the measurement that ranked
+    /// it — everything a curation step needs to emit roster artifacts.
+    pub fn to_json(&self) -> Json {
+        let (mb, nb, kb) = self.bucket;
+        Json::obj(vec![
+            (
+                "bucket",
+                Json::Arr(vec![Json::num(mb), Json::num(nb), Json::num(kb)]),
+            ),
+            (
+                "variants",
+                Json::Arr(
+                    self.variants
+                        .iter()
+                        .map(|(p, g)| {
+                            Json::obj(vec![
+                                ("name", Json::str(p.name())),
+                                ("config", p.to_json()),
+                                ("mean_gflops", Json::Num(*g)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Reduce raw sweep samples to the measured top-K variants per bucket.
+///
+/// Samples are grouped by bucket; within a bucket each variant's score
+/// is the mean GFLOP/s over every triple it was swept on (so a variant
+/// that only shines on one corner of the bucket does not displace one
+/// that fits most of it — the paper's selection criterion).  Buckets
+/// come back in ascending `(mb, nb, kb)` order.
+pub fn measured_roster(samples: &[SweepSample], k: usize) -> Vec<BucketRoster> {
+    // bucket -> variant name -> (params, sum, count).  BTreeMaps keep
+    // the whole reduction deterministic.
+    let mut acc: BTreeMap<(u32, u32, u32), BTreeMap<String, (HostParams, f64, u32)>> =
+        BTreeMap::new();
+    for s in samples {
+        let e = acc
+            .entry(s.bucket)
+            .or_default()
+            .entry(s.params.name())
+            .or_insert((s.params, 0.0, 0));
+        e.1 += s.gflops;
+        e.2 += 1;
+    }
+    acc.into_iter()
+        .map(|(bucket, by_variant)| {
+            let mut variants: Vec<(HostParams, f64)> = by_variant
+                .into_values()
+                .map(|(p, sum, n)| (p, sum / n as f64))
+                .collect();
+            variants.sort_by(|(pa, ga), (pb, gb)| {
+                gb.partial_cmp(ga)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then_with(|| pa.name().cmp(&pb.name()))
+            });
+            variants.truncate(k);
+            BucketRoster { bucket, variants }
+        })
+        .collect()
+}
+
+/// The full curated-roster document: one entry per bucket.
+pub fn roster_to_json(rosters: &[BucketRoster]) -> Json {
+    Json::obj(vec![
+        ("version", Json::num(1u32)),
+        ("kind", Json::str("host_variant_roster")),
+        (
+            "buckets",
+            Json::Arr(rosters.iter().map(BucketRoster::to_json).collect()),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{host_variants, SimdTier};
+
+    /// A synthetic sweep with a known ranking: per bucket, score each
+    /// variant by a deterministic formula and check `measured_roster`
+    /// recovers the top-K in order, averaging across triples.
+    #[test]
+    fn top_k_per_bucket_from_synthetic_sweep() {
+        let buckets = [(128u32, 128u32, 128u32), (256, 256, 256)];
+        let vs = host_variants();
+        let mut samples = Vec::new();
+        for (bi, &bucket) in buckets.iter().enumerate() {
+            for (vi, p) in vs.iter().enumerate() {
+                // Two triples per (bucket, variant) whose mean is
+                // vi-ranked in bucket 0 and reverse-ranked in bucket 1.
+                let base = if bi == 0 {
+                    10.0 + vi as f64
+                } else {
+                    10.0 + (vs.len() - vi) as f64
+                };
+                for (t, wobble) in [
+                    (Triple::new(100, 100, 100), -1.0),
+                    (Triple::new(120, 120, 120), 1.0),
+                ] {
+                    samples.push(SweepSample {
+                        bucket,
+                        params: *p,
+                        triple: t,
+                        gflops: base + wobble,
+                    });
+                }
+            }
+        }
+        let rosters = measured_roster(&samples, 3);
+        assert_eq!(rosters.len(), 2);
+        assert_eq!(rosters[0].bucket, buckets[0]);
+        assert_eq!(rosters[1].bucket, buckets[1]);
+        for r in &rosters {
+            assert_eq!(r.variants.len(), 3);
+            // Means descend.
+            assert!(r.variants.windows(2).all(|w| w[0].1 >= w[1].1));
+        }
+        // Bucket 0 ranks the last roster variant first, bucket 1 the
+        // first — the helper followed the measurements, not the roster
+        // order.
+        assert_eq!(rosters[0].variants[0].0, vs[vs.len() - 1]);
+        assert_eq!(rosters[1].variants[0].0, vs[0]);
+        // The mean is the average of the two wobbled triples.
+        assert!((rosters[1].variants[0].1 - (10.0 + vs.len() as f64)).abs() < 1e-9);
+    }
+
+    /// The emitted config objects round-trip through the same parser the
+    /// manifest uses, packed axis included — the wiring that lets a
+    /// curated roster replace the hand-picked four later.
+    #[test]
+    fn roster_json_configs_roundtrip_as_host_params() {
+        let p = HostParams {
+            tier: SimdTier::Avx2Fma,
+            mr: 8,
+            nr: 8,
+            ku: 4,
+            packed: true,
+        };
+        let samples = [SweepSample {
+            bucket: (128, 128, 128),
+            params: p,
+            triple: Triple::new(100, 100, 100),
+            gflops: 42.0,
+        }];
+        let rosters = measured_roster(&samples, 4);
+        let doc = roster_to_json(&rosters);
+        let buckets = doc.get("buckets").unwrap();
+        let Json::Arr(bs) = buckets else { panic!("buckets not an array") };
+        let entry = bs[0].get("variants").unwrap();
+        let Json::Arr(vars) = entry else { panic!("variants not an array") };
+        assert_eq!(vars.len(), 1);
+        assert_eq!(
+            vars[0].get("name").unwrap().as_str().unwrap(),
+            "h_avx2_t8x8_u4_p"
+        );
+        let cfg = vars[0].get("config").unwrap();
+        assert_eq!(HostParams::from_json(cfg).unwrap(), p);
+    }
+}

@@ -17,8 +17,9 @@
 //! * `shard_scaling[].{rps,gflops}` by shard count — regression when the
 //!   fresh throughput is more than `tolerance` lower;
 //! * `allocs_per_request.pooled` (and the `_with_policy_handle`,
-//!   `engine_pooled`, `fused_pooled` variants) — regression on *any*
-//!   increase (the zero-allocation gate: 0 must stay 0);
+//!   `engine_pooled`, `fused_pooled`, `simd_pooled`, `simd_packed_pooled`
+//!   variants) — regression on *any* increase (the zero-allocation gate:
+//!   0 must stay 0);
 //! * the fusion gate (`fusion[]` in `BENCH_hotpath.json`): at B=16 the
 //!   fused batched path's per-request time must not be slower than B
 //!   sequential pooled calls beyond `tolerance` (self-contained in the
@@ -31,7 +32,14 @@
 //!   (`simd.speedup_floor` / `simd.fused_speedup_floor` in the
 //!   baseline, defaulting to 0.9 — even when the detected tier *is*
 //!   scalar, as on the forced-fallback CI leg, the variant path must
-//!   not be slower than scalar beyond noise);
+//!   not be slower than scalar beyond noise).  When a shape row carries
+//!   `packed_speedup` (packed vs unpacked best variant), it is gated
+//!   against `simd.packed_speedup_floor` (default 0.9); rows without
+//!   the key — pre-packing bench files, or a `ADAPTLIB_PACK=off` run —
+//!   skip that gate.  The gate output also echoes the runner's
+//!   top-level `simd_tier` / `pack_enabled` capability fields so a
+//!   floor miss on a scalar-only or pack-off runner is explainable
+//!   from the log alone;
 //! * `recovered` (drift runs) — regression when the fresh run says
 //!   `false`;
 //! * per-device `accuracy` (hetero runs: top-level `devices[]` in
@@ -279,6 +287,7 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> BenchDiff {
         "engine_pooled",
         "fused_pooled",
         "simd_pooled",
+        "simd_packed_pooled",
     ] {
         let base = baseline
             .get("allocs_per_request")
@@ -364,7 +373,29 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> BenchDiff {
             .ok()
             .and_then(|s| num_at(s, "fused_speedup_floor"))
             .unwrap_or(0.9);
+        let packed_floor = baseline
+            .get("simd")
+            .ok()
+            .and_then(|s| num_at(s, "packed_speedup_floor"))
+            .unwrap_or(0.9);
         let tier = simd.get("tier").and_then(|t| t.as_str()).unwrap_or("?");
+        // Runtime capability context (top-level fields the hotpath bench
+        // records): what the runner actually detected, so a floor miss
+        // on a scalar-only or pack-off runner is explainable from the
+        // gate output alone.
+        let rt_tier = current
+            .get("simd_tier")
+            .ok()
+            .and_then(|t| t.as_str().ok())
+            .unwrap_or("?");
+        let rt_pack = match current.get("pack_enabled").ok().map(|b| b.as_bool()) {
+            Some(Ok(true)) => "on",
+            Some(Ok(false)) => "off",
+            _ => "?",
+        };
+        diff.lines.push(format!(
+            "simd runtime: detected tier {rt_tier}, packing {rt_pack}"
+        ));
         if let Ok(arr) = simd.get("shapes").and_then(|s| s.as_arr()) {
             for row in arr {
                 let (Ok(shape), Some(speedup)) = (
@@ -381,8 +412,25 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> BenchDiff {
                 if speedup < floor {
                     diff.regressions.push(format!(
                         "simd: best variant only {speedup:.2}x the scalar \
-                         variant on {shape} (floor {floor:.2}x)"
+                         variant on {shape} (floor {floor:.2}x; runner tier \
+                         {rt_tier}, packing {rt_pack})"
                     ));
+                }
+                // Packed-vs-unpacked floor (key-presence-conditional so
+                // pre-packing bench files still compare cleanly).
+                if let Some(ps) = num_at(row, "packed_speedup") {
+                    diff.compared += 1;
+                    diff.lines.push(format!(
+                        "simd {shape}: packed variant {ps:.2}x unpacked \
+                         (floor {packed_floor:.2}x)"
+                    ));
+                    if ps < packed_floor {
+                        diff.regressions.push(format!(
+                            "simd: packed variant only {ps:.2}x the unpacked \
+                             variant on {shape} (floor {packed_floor:.2}x; \
+                             runner tier {rt_tier}, packing {rt_pack})"
+                        ));
+                    }
                 }
             }
         }
@@ -398,6 +446,12 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> BenchDiff {
                      sequential scalar (floor {fused_floor:.2}x)"
                 ));
             }
+        }
+        if let Some(fp) = num_at(simd, "fused_packed_speedup_vs_scalar") {
+            diff.lines.push(format!(
+                "simd fused packed: {fp:.2}x sequential scalar per request \
+                 (B-repack amortized; informational)"
+            ));
         }
     }
 
@@ -931,6 +985,63 @@ mod tests {
         // A simd-less current file trips nothing.
         let diff = compare(&base, &no_floor, 0.15);
         assert!(!diff.lines.iter().any(|l| l.contains("simd")));
+    }
+
+    #[test]
+    fn simd_packed_gate_is_key_conditional_and_reports_runtime() {
+        let base = Json::parse(
+            r#"{"bench":"hotpath",
+                "simd":{"speedup_floor":1.5,"fused_speedup_floor":1.2,
+                        "packed_speedup_floor":1.0}}"#,
+        )
+        .unwrap();
+        let cur = |packed: f64| {
+            Json::parse(&format!(
+                r#"{{"bench":"hotpath","simd_tier":"avx2","pack_enabled":true,
+                     "simd":{{
+                     "tier":"avx2","variant":"h_avx2_t8x8_u4",
+                     "packed_variant":"h_avx2_t8x8_u4_p",
+                     "shapes":[
+                       {{"shape":"128^3(m==mb)","scalar_s":1e-3,
+                         "best_s":1e-4,"speedup":2.0,
+                         "best_packed_s":5e-5,"packed_speedup":{packed}}}],
+                     "fused_speedup_vs_scalar":1.5,
+                     "fused_packed_speedup_vs_scalar":1.6}}}}"#
+            ))
+            .unwrap()
+        };
+        // Packed above its floor: the packed row counts as compared and
+        // the runner's capability fields are echoed in the gate output.
+        let diff = compare(&base, &cur(1.3), 0.15);
+        assert_eq!(diff.compared, 3); // speedup + packed_speedup + fused
+        assert!(diff.passes(), "{:?}", diff.regressions);
+        assert!(diff
+            .lines
+            .iter()
+            .any(|l| l.contains("detected tier avx2, packing on")));
+        assert!(diff.lines.iter().any(|l| l.contains("packed variant 1.30x")));
+        // Packed under the floor: fails, naming the shape and echoing
+        // the runner capabilities so a miss on an unusual runner is
+        // explainable from the log alone.
+        let diff = compare(&base, &cur(0.8), 0.15);
+        assert!(!diff.passes());
+        assert!(diff.regressions.iter().any(|r| r.contains("packed")
+            && r.contains("128^3(m==mb)")
+            && r.contains("packing on")));
+        // A current file without packed keys (a pre-packing bench file,
+        // or a pack-off leg) never trips the packed floor — only the
+        // unconditional gates count.
+        let unpacked = Json::parse(
+            r#"{"bench":"hotpath","simd_tier":"avx2","pack_enabled":false,
+                "simd":{"tier":"avx2","variant":"h_avx2_t8x8_u4",
+                "shapes":[{"shape":"128^3(m==mb)","speedup":2.0}],
+                "fused_speedup_vs_scalar":1.5}}"#,
+        )
+        .unwrap();
+        let diff = compare(&base, &unpacked, 0.15);
+        assert_eq!(diff.compared, 2);
+        assert!(diff.passes(), "{:?}", diff.regressions);
+        assert!(diff.lines.iter().any(|l| l.contains("packing off")));
     }
 
     #[test]

@@ -1,10 +1,13 @@
 //! SIMD microkernel equivalence: every host microkernel variant the
-//! manifest expansion adds (SSE, AVX2+FMA, tile/unroll points) must be
-//! **bit-identical** to the scalar reference variant through both pooled
-//! serving paths — `GemmRuntime::gemm_pooled` and
-//! `GemmRuntime::gemm_batch_pooled` — property-tested over seeded random
-//! shapes that include the `m == mb` pad edge, tile remainders
-//! (`mr`/`nr` not dividing the logical dims) and degenerate rows.
+//! manifest expansion adds (SSE, AVX2+FMA, tile/unroll points, and the
+//! packed-panel `_p` twins) must be **bit-identical** to the scalar
+//! reference variant through both pooled serving paths —
+//! `GemmRuntime::gemm_pooled` and `GemmRuntime::gemm_batch_pooled` —
+//! property-tested over seeded random shapes that include the `m == mb`
+//! pad edge, tile remainders (`mr`/`nr` not dividing the logical dims)
+//! and degenerate rows.  Fused batches run twice per variant: once with
+//! distinct per-slot operands and once with every slot sharing one B
+//! operand, the layout whose repacking the packed path amortizes.
 //! `gemm_padded` clamps each variant's tier to the detected one, so on a
 //! host without AVX2 the same assertions exercise the degraded dispatch.
 //! PJRT-backed tests skip when `make artifacts` has not run.
@@ -55,7 +58,9 @@ fn variant_buckets(rt: &GemmRuntime, max_buckets: usize) -> Vec<Bucket> {
         {
             let vol = mb as u64 * nb as u64 * kb as u64;
             let e = map.entry((vol, mb, nb, kb)).or_default();
-            if p.tier == SimdTier::Scalar {
+            // The reference is the *unpacked* scalar variant; its packed
+            // twin is a variant under test like any other.
+            if p.tier == SimdTier::Scalar && !p.packed {
                 e.0 = Some(ArtifactId(i as u32));
             } else {
                 e.1.push(ArtifactId(i as u32));
@@ -167,14 +172,28 @@ fn check_case(
         out.iter().map(|v| v.to_bits()).collect()
     };
 
+    // Slots sharing slot 0's B operand: the exact layout whose
+    // B-repacking `gemm_batch_pooled`'s packed path amortizes (distinct
+    // per-slot operands above are the negative case — no reuse fires).
+    let shared_input_of = |s: usize| -> GemmInput<'_> {
+        let (a, _, c) = &slots[s];
+        GemmInput { m, n, k, a, b: &slots[0].1, c, alpha: 1.25, beta: -0.5 }
+    };
+
     let mut scratch = ScratchBuffers::new();
     let mut batch = BatchScratch::new();
     // Scalar-variant reference per slot, through the pooled path itself.
     let mut refs: Vec<Vec<u32>> = Vec::with_capacity(SLOTS);
+    let mut shared_refs: Vec<Vec<u32>> = Vec::with_capacity(SLOTS);
     for s in 0..SLOTS {
         rt.gemm_pooled(b.scalar, &input_of(s), &mut scratch)
             .map_err(|e| format!("scalar reference failed on {t}: {e:#}"))?;
         refs.push(bits(&scratch.out));
+        rt.gemm_pooled(b.scalar, &shared_input_of(s), &mut scratch)
+            .map_err(|e| {
+                format!("scalar shared-B reference failed on {t}: {e:#}")
+            })?;
+        shared_refs.push(bits(&scratch.out));
     }
     for &id in std::iter::once(&b.scalar).chain(b.others.iter()) {
         let name = rt.manifest.name_of(id).to_string();
@@ -195,6 +214,17 @@ fn check_case(
                 return Err(format!(
                     "{name} diverges from scalar via gemm_batch_pooled on {t} \
                      (slot {s} of {SLOTS})"
+                ));
+            }
+        }
+        let shared: Vec<GemmInput> = (0..SLOTS).map(shared_input_of).collect();
+        rt.gemm_batch_pooled(id, &shared, &mut batch)
+            .map_err(|e| format!("{name} shared-B batch failed on {t}: {e:#}"))?;
+        for s in 0..SLOTS {
+            if bits(batch.slot(s, m, n)) != shared_refs[s] {
+                return Err(format!(
+                    "{name} diverges from scalar via shared-B \
+                     gemm_batch_pooled on {t} (slot {s} of {SLOTS})"
                 ));
             }
         }
@@ -232,16 +262,18 @@ fn all_variants_bit_identical_to_scalar_through_pooled_paths() {
     });
 }
 
-/// Servability of a variant follows the detected instruction tier: the
-/// scalar variant is always servable, and every variant above the
-/// detected tier is refused by the engine (the forced-fallback CI leg
-/// runs this whole suite under `ADAPTLIB_SIMD=scalar`, where only the
-/// scalar variants survive this gate).
+/// Servability of a variant follows the detected instruction tier *and*
+/// the pack gate: the unpacked scalar variant is always servable, every
+/// variant above the detected tier is refused, and packed variants are
+/// additionally refused when `ADAPTLIB_PACK=off` (the forced-fallback
+/// CI leg runs this whole suite under `ADAPTLIB_SIMD=scalar`, the
+/// pack-off leg under `ADAPTLIB_PACK=off`).
 #[test]
 fn variant_servability_follows_detected_tier() {
     let Some(dir) = artifacts_dir() else { return };
     let engine = RuntimeEngine::open(&dir).unwrap();
     let tier = microkernel::detected_tier();
+    let pack = microkernel::pack_enabled();
     let mut variants = 0usize;
     for (i, a) in engine.manifest().artifacts.iter().enumerate() {
         let id = ArtifactId(i as u32);
@@ -250,17 +282,17 @@ fn variant_servability_follows_detected_tier() {
                 variants += 1;
                 assert_eq!(
                     engine.is_servable(id),
-                    p.tier <= tier,
-                    "{} (tier {}, detected {tier})",
+                    p.tier <= tier && (!p.packed || pack),
+                    "{} (tier {}, detected {tier}, pack_enabled {pack})",
                     a.name,
                     p.tier
                 );
-                if p.tier == SimdTier::Scalar {
+                if p.tier == SimdTier::Scalar && !p.packed {
                     assert!(engine.is_servable(id));
                 }
             }
             _ => assert!(engine.is_servable(id), "{}", a.name),
         }
     }
-    assert!(variants >= 4, "expansion produced too few variants: {variants}");
+    assert!(variants >= 8, "expansion produced too few variants: {variants}");
 }
