@@ -4,13 +4,25 @@
 ARTIFACTS := rust/artifacts
 ROSTER    := full
 
-.PHONY: artifacts test bench drift hetero overload chaos baseline clean-artifacts
+.PHONY: artifacts test lint model-check bench drift hetero overload chaos baseline clean-artifacts
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../$(ARTIFACTS) --roster $(ROSTER)
 
 test:
 	cd rust && cargo test -q
+
+# Source-level convention lint (SAFETY/RELAXED comments, hot-path
+# allocation fences, exhaustive protocol-enum matches).  Blocking in CI.
+lint:
+	cd rust && cargo run --release --bin adaptd -- lint
+
+# Model-checked concurrency invariants: explores thread interleavings of
+# the policy swap, breaker transitions, and admission gauge under the
+# modeled atomics (bounded preemptions; raise MODEL_CHECK_PREEMPTIONS
+# for the weekly full-depth sweep).
+model-check:
+	cd rust && cargo test --features model-check --test model_check -- --nocapture
 
 bench:
 	cd rust && cargo bench --bench hotpath

@@ -35,22 +35,33 @@ struct CountingAlloc;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
+// SAFETY: pure pass-through to `System` — every allocator contract
+// (layout validity, pointer provenance) is forwarded verbatim; the
+// counter bump has no effect on the returned memory.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: delegates to `System.alloc` under the caller's layout.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        // RELAXED: statistics counter; read only between timed phases.
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.alloc(layout)
     }
 
+    // SAFETY: delegates to `System.alloc_zeroed`.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        // RELAXED: statistics counter; read only between timed phases.
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.alloc_zeroed(layout)
     }
 
+    // SAFETY: delegates to `System.realloc` with the caller's
+    // (ptr, layout, new_size) triple unchanged.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // RELAXED: statistics counter; read only between timed phases.
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.realloc(ptr, layout, new_size)
     }
 
+    // SAFETY: delegates to `System.dealloc` with the caller's pair.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }
@@ -66,10 +77,13 @@ fn allocs_total(iters: u64, mut f: impl FnMut()) -> u64 {
     for _ in 0..5 {
         f(); // warm: let every pool reach its steady-state capacity
     }
+    // RELAXED: single-threaded bench; the delta only needs program
+    // order, not cross-thread visibility.
     let before = ALLOCS.load(Ordering::Relaxed);
     for _ in 0..iters {
         f();
     }
+    // RELAXED: same single-threaded delta read as above.
     ALLOCS.load(Ordering::Relaxed) - before
 }
 

@@ -1,0 +1,735 @@
+//! A dependency-free lint pass over the repo's own Rust sources.
+//!
+//! Four rules, all source-level (no type information, no `syn`):
+//!
+//! 1. **unsafe-needs-safety** — every `unsafe` token must carry a
+//!    `SAFETY:` comment on the same line or within the six lines above
+//!    it, stating the proof obligation being discharged.
+//! 2. **relaxed-needs-justification** — every `Relaxed` atomic ordering
+//!    must carry a `RELAXED:` comment in the same window, explaining why
+//!    no happens-before edge is needed.
+//! 3. **hot-path-alloc** — a function fenced by the [`FENCE_TAG`] marker
+//!    comment must not allocate: the body is scanned for the usual
+//!    allocation spellings (`vec!`, `format!`, `.to_string(`, …).
+//!    Individual sites are waived with [`ALLOW_ALLOC_TAG`].
+//! 4. **wildcard-match** — a `match` that names one of the protocol
+//!    enums (`KernelConfig`, `Admission`, `RequestOutcome`) in an arm
+//!    must not also have a bare `_` arm; adding a variant must be a
+//!    compile error, not a silent fallthrough.  Waived per-arm with
+//!    [`ALLOW_WILDCARD_TAG`].
+//!
+//! The scanner first scrubs comments and string/char literals out of the
+//! source (preserving line structure), so rule tokens inside literals —
+//! including the fixtures in this file's tests — are invisible.  Comment
+//! text is kept in a per-line side table for the marker lookups.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Comment tag that discharges rule 1.
+pub const SAFETY_TAG: &str = "SAFETY:";
+/// Comment tag that discharges rule 2.
+pub const RELAXED_TAG: &str = "RELAXED:";
+/// Comment marker that fences the next `fn` as allocation-free.
+pub const FENCE_TAG: &str = "LINT: hot-path";
+/// Comment marker waiving rule 3 for the line it sits on (or the next).
+pub const ALLOW_ALLOC_TAG: &str = "LINT: allow(alloc)";
+/// Comment marker waiving rule 4 for the arm it sits on (or the next).
+pub const ALLOW_WILDCARD_TAG: &str = "LINT: allow(wildcard)";
+
+/// How many lines above a token a justification comment may sit.
+const COMMENT_WINDOW: usize = 6;
+/// How many lines below a fence comment the fenced `fn` may start.
+const FENCE_REACH: usize = 20;
+
+/// Allocation spellings rule 3 looks for inside a fenced body.
+const ALLOC_TOKENS: &[&str] = &[
+    "Vec::new",
+    "String::new",
+    "Box::new",
+    "vec!",
+    "format!",
+    ".push(",
+    ".to_string(",
+    ".to_owned(",
+    ".to_vec(",
+    ".clone()",
+    ".collect(",
+];
+
+/// Enums whose matches must stay exhaustive (rule 4).
+const TARGET_ENUMS: &[&str] = &["KernelConfig::", "Admission::", "RequestOutcome::"];
+
+/// Which rule a finding came from.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Rule {
+    UnsafeNeedsSafety,
+    RelaxedNeedsJustification,
+    HotPathAlloc,
+    WildcardMatch,
+}
+
+impl Rule {
+    pub fn tag(self) -> &'static str {
+        match self {
+            Rule::UnsafeNeedsSafety => "unsafe-needs-safety",
+            Rule::RelaxedNeedsJustification => "relaxed-needs-justification",
+            Rule::HotPathAlloc => "hot-path-alloc",
+            Rule::WildcardMatch => "wildcard-match",
+        }
+    }
+}
+
+/// One lint violation, addressable as `file:line`.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct Finding {
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file,
+            self.line,
+            self.rule.tag(),
+            self.message
+        )
+    }
+}
+
+/// Source text split into per-line code (literals and comments blanked
+/// out) and per-line comment text.
+struct Scrubbed {
+    code: Vec<String>,
+    comments: Vec<String>,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum ScrubState {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+    CharLit,
+}
+
+fn scrub(src: &str) -> Scrubbed {
+    let chars: Vec<char> = src.chars().collect();
+    let mut code: Vec<String> = vec![String::new()];
+    let mut comments: Vec<String> = vec![String::new()];
+    let mut state = ScrubState::Code;
+    let mut prev_word = false;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if state == ScrubState::LineComment {
+                state = ScrubState::Code;
+            }
+            code.push(String::new());
+            comments.push(String::new());
+            prev_word = false;
+            i += 1;
+            continue;
+        }
+        match state {
+            ScrubState::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    state = ScrubState::LineComment;
+                    code.last_mut().unwrap().push_str("  ");
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && next == Some('*') {
+                    state = ScrubState::BlockComment(1);
+                    code.last_mut().unwrap().push_str("  ");
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    state = ScrubState::Str;
+                    code.last_mut().unwrap().push(' ');
+                    i += 1;
+                    continue;
+                }
+                // Raw / byte string prefixes: r"", r#""#, b"", br"".
+                if (c == 'r' || c == 'b') && !prev_word {
+                    let mut j = i + 1;
+                    if c == 'b' && chars.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    let raw = j > i + 1 || c == 'r';
+                    let mut hashes = 0u32;
+                    while raw && chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        for _ in i..=j {
+                            code.last_mut().unwrap().push(' ');
+                        }
+                        state = if raw { ScrubState::RawStr(hashes) } else { ScrubState::Str };
+                        i = j + 1;
+                        continue;
+                    }
+                }
+                if c == '\'' {
+                    // Char literal vs lifetime: a literal is '\…' or 'x'
+                    // followed by a closing quote; anything else is a
+                    // lifetime and stays in the code channel.
+                    let is_lit = next == Some('\\')
+                        || (next.is_some() && chars.get(i + 2) == Some(&'\''));
+                    if is_lit {
+                        state = ScrubState::CharLit;
+                        code.last_mut().unwrap().push(' ');
+                        i += 1;
+                        continue;
+                    }
+                }
+                code.last_mut().unwrap().push(c);
+                prev_word = c.is_alphanumeric() || c == '_';
+                i += 1;
+            }
+            ScrubState::LineComment => {
+                comments.last_mut().unwrap().push(c);
+                code.last_mut().unwrap().push(' ');
+                i += 1;
+            }
+            ScrubState::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    state = ScrubState::BlockComment(depth + 1);
+                    comments.last_mut().unwrap().push_str("/*");
+                    code.last_mut().unwrap().push_str("  ");
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    state = if depth == 1 {
+                        ScrubState::Code
+                    } else {
+                        ScrubState::BlockComment(depth - 1)
+                    };
+                    code.last_mut().unwrap().push_str("  ");
+                    i += 2;
+                } else {
+                    comments.last_mut().unwrap().push(c);
+                    code.last_mut().unwrap().push(' ');
+                    i += 1;
+                }
+            }
+            ScrubState::Str => {
+                code.last_mut().unwrap().push(' ');
+                if c == '\\' {
+                    if chars.get(i + 1) == Some(&'\n') {
+                        // Line continuation: let the top of the loop see
+                        // the newline so line structure is preserved.
+                        i += 1;
+                    } else {
+                        code.last_mut().unwrap().push(' ');
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    state = ScrubState::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            ScrubState::RawStr(hashes) => {
+                code.last_mut().unwrap().push(' ');
+                if c == '"' {
+                    let mut n = 0u32;
+                    while n < hashes && chars.get(i + 1 + n as usize) == Some(&'#') {
+                        n += 1;
+                    }
+                    if n == hashes {
+                        for _ in 0..n {
+                            code.last_mut().unwrap().push(' ');
+                        }
+                        state = ScrubState::Code;
+                        i += 1 + n as usize;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+            ScrubState::CharLit => {
+                code.last_mut().unwrap().push(' ');
+                if c == '\\' {
+                    code.last_mut().unwrap().push(' ');
+                    i += 2;
+                } else if c == '\'' {
+                    state = ScrubState::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    Scrubbed { code, comments }
+}
+
+fn is_word(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Word-boundary token search over one scrubbed line.
+fn has_token(line: &str, tok: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut from = 0;
+    while let Some(off) = line[from..].find(tok) {
+        let start = from + off;
+        let end = start + tok.len();
+        let before_ok = start == 0 || !is_word(bytes[start - 1] as char);
+        let after_ok = end >= bytes.len() || !is_word(bytes[end] as char);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+/// Does any comment on `line` or the `window` lines above contain `tag`?
+fn window_has(comments: &[String], line: usize, tag: &str, window: usize) -> bool {
+    let lo = line.saturating_sub(window);
+    comments[lo..=line].iter().any(|c| c.contains(tag))
+}
+
+fn near_has(comments: &[String], line: usize, tag: &str) -> bool {
+    window_has(comments, line, tag, 1)
+}
+
+/// Rules 1 and 2: tokens that demand a justification comment nearby.
+fn check_comment_tags(file: &str, s: &Scrubbed, out: &mut Vec<Finding>) {
+    for (i, code) in s.code.iter().enumerate() {
+        if has_token(code, "unsafe") && !window_has(&s.comments, i, SAFETY_TAG, COMMENT_WINDOW) {
+            out.push(Finding {
+                file: file.to_string(),
+                line: i + 1,
+                rule: Rule::UnsafeNeedsSafety,
+                message: format!(
+                    "`unsafe` without a `{SAFETY_TAG}` comment within {COMMENT_WINDOW} lines"
+                ),
+            });
+        }
+        if has_token(code, "Relaxed") && !window_has(&s.comments, i, RELAXED_TAG, COMMENT_WINDOW) {
+            out.push(Finding {
+                file: file.to_string(),
+                line: i + 1,
+                rule: Rule::RelaxedNeedsJustification,
+                message: format!(
+                    "`Relaxed` ordering without a `{RELAXED_TAG}` comment within \
+                     {COMMENT_WINDOW} lines"
+                ),
+            });
+        }
+    }
+}
+
+/// Index of the line holding the matching close brace, given the line on
+/// which to start looking for the first open brace.
+fn brace_span(code: &[String], start: usize) -> Option<(usize, usize)> {
+    let mut depth = 0i32;
+    let mut open_line = None;
+    for (i, line) in code.iter().enumerate().skip(start) {
+        for c in line.chars() {
+            if c == '{' {
+                depth += 1;
+                if open_line.is_none() {
+                    open_line = Some(i);
+                }
+            } else if c == '}' && open_line.is_some() {
+                depth -= 1;
+                if depth == 0 {
+                    return Some((open_line.unwrap(), i));
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Rule 3: fenced functions must not allocate.
+fn check_hot_paths(file: &str, s: &Scrubbed, out: &mut Vec<Finding>) {
+    for fence in 0..s.comments.len() {
+        if !s.comments[fence].contains(FENCE_TAG) {
+            continue;
+        }
+        // The marker may span a multi-line comment; only act on its
+        // first line so one fence maps to one function.
+        if fence > 0 && s.comments[fence - 1].contains(FENCE_TAG) {
+            continue;
+        }
+        let hi = (fence + FENCE_REACH).min(s.code.len() - 1);
+        let Some(fn_line) = (fence..=hi).find(|&j| has_token(&s.code[j], "fn")) else {
+            continue;
+        };
+        let Some((open, close)) = brace_span(&s.code, fn_line) else {
+            continue;
+        };
+        for k in open..=close {
+            for tok in ALLOC_TOKENS {
+                if !s.code[k].contains(tok) {
+                    continue;
+                }
+                if s.comments[k].contains(ALLOW_ALLOC_TAG)
+                    || (k > 0 && s.comments[k - 1].contains(ALLOW_ALLOC_TAG))
+                {
+                    continue;
+                }
+                out.push(Finding {
+                    file: file.to_string(),
+                    line: k + 1,
+                    rule: Rule::HotPathAlloc,
+                    message: format!(
+                        "`{tok}` inside hot-path fn fenced at line {}",
+                        fence + 1
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Rule 4: matches over the protocol enums must be exhaustive.
+fn check_wildcard_matches(file: &str, s: &Scrubbed, out: &mut Vec<Finding>) {
+    for start in 0..s.code.len() {
+        let mut from = 0;
+        while let Some(off) = s.code[start][from..].find("match") {
+            let pos = from + off;
+            from = pos + 5;
+            let line = &s.code[start];
+            let before_ok = pos == 0 || !is_word(line.as_bytes()[pos - 1] as char);
+            let after_ok =
+                pos + 5 >= line.len() || !is_word(line.as_bytes()[pos + 5] as char);
+            if before_ok && after_ok {
+                check_one_match(file, s, start, pos + 5, out);
+            }
+        }
+    }
+}
+
+/// Scan one `match` body starting after the keyword at
+/// (`start_line`, `start_col`); collect top-level arm patterns.
+fn check_one_match(
+    file: &str,
+    s: &Scrubbed,
+    start_line: usize,
+    start_col: usize,
+    out: &mut Vec<Finding>,
+) {
+    let mut brace = 0i32;
+    let mut paren = 0i32;
+    let mut bracket = 0i32;
+    let mut in_body = false;
+    let mut entered = false;
+    let mut cur = String::new();
+    let mut arms: Vec<(usize, String)> = Vec::new();
+    for i in start_line..s.code.len() {
+        let line = &s.code[i];
+        let lo = if i == start_line { start_col } else { 0 };
+        let chars: Vec<char> = line.chars().collect();
+        let mut j = lo;
+        while j < chars.len() {
+            let c = chars[j];
+            match c {
+                '{' => {
+                    brace += 1;
+                    entered = true;
+                }
+                '}' => {
+                    brace -= 1;
+                    if entered && brace == 0 {
+                        finish_match(file, s, &arms, out);
+                        return;
+                    }
+                    if in_body && brace == 1 && paren == 0 && bracket == 0 {
+                        // A braced arm body just closed.
+                        in_body = false;
+                        cur.clear();
+                        j += 1;
+                        continue;
+                    }
+                }
+                '(' => paren += 1,
+                ')' => paren -= 1,
+                '[' => bracket += 1,
+                ']' => bracket -= 1,
+                _ => {}
+            }
+            let top = entered && brace == 1 && paren == 0 && bracket == 0;
+            if top && !in_body && c == '=' && chars.get(j + 1) == Some(&'>') {
+                let pat: String = cur
+                    .trim()
+                    .trim_start_matches([',', '|'])
+                    .trim()
+                    .to_string();
+                arms.push((i, pat));
+                in_body = true;
+                cur.clear();
+                j += 2;
+                continue;
+            }
+            if top && in_body && c == ',' {
+                in_body = false;
+                cur.clear();
+            } else if !in_body && entered && brace >= 1 && c != '{' && c != '}' {
+                cur.push(c);
+            }
+            j += 1;
+        }
+        if !in_body {
+            cur.push(' ');
+        }
+    }
+}
+
+fn finish_match(file: &str, s: &Scrubbed, arms: &[(usize, String)], out: &mut Vec<Finding>) {
+    let names_target = arms
+        .iter()
+        .any(|(_, p)| TARGET_ENUMS.iter().any(|e| p.starts_with(e)));
+    if !names_target {
+        return;
+    }
+    for (line, pat) in arms {
+        if pat == "_" && !near_has(&s.comments, *line, ALLOW_WILDCARD_TAG) {
+            out.push(Finding {
+                file: file.to_string(),
+                line: line + 1,
+                rule: Rule::WildcardMatch,
+                message: "bare `_` arm in a match over a protocol enum; spell the \
+                          remaining variants out"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// Lint one file's source text.
+pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
+    let s = scrub(src);
+    let mut out = Vec::new();
+    check_comment_tags(file, &s, &mut out);
+    check_hot_paths(file, &s, &mut out);
+    check_wildcard_matches(file, &s, &mut out);
+    out.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    out
+}
+
+/// The directories `adaptd lint` scans by default, relative to the crate
+/// root.
+pub fn default_paths() -> &'static [&'static str] {
+    &["src", "benches", "tests"]
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root`/`rels[i]`; missing directories are
+/// skipped silently so the default set works from any checkout shape.
+pub fn lint_paths(root: &Path, rels: &[&str]) -> io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    for rel in rels {
+        let dir = root.join(rel);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut files)?;
+        } else if dir.is_file() {
+            files.push(dir);
+        }
+    }
+    files.sort();
+    let mut out = Vec::new();
+    for path in &files {
+        let src = fs::read_to_string(path)?;
+        let name = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .display()
+            .to_string();
+        out.extend(lint_source(&name, &src));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(findings: &[Finding]) -> Vec<Rule> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn unsafe_without_safety_fires_with_line() {
+        let src = "fn f() {\n    let p = 0 as *const u8;\n    unsafe { p.read() };\n}\n";
+        let f = lint_source("fixture.rs", src);
+        assert_eq!(rules(&f), vec![Rule::UnsafeNeedsSafety]);
+        assert_eq!(f[0].line, 3);
+        assert_eq!(f[0].file, "fixture.rs");
+        assert_eq!(
+            f[0].to_string(),
+            "fixture.rs:3: [unsafe-needs-safety] `unsafe` without a `SAFETY:` \
+             comment within 6 lines"
+        );
+    }
+
+    #[test]
+    fn unsafe_with_safety_comment_is_clean() {
+        let src = "fn f() {\n    let p = 0 as *const u8;\n    \
+                   // SAFETY: p is valid for reads.\n    unsafe { p.read() };\n}\n";
+        assert!(lint_source("fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_outside_window_does_not_count() {
+        let mut src = String::from("// SAFETY: too far away.\n");
+        for _ in 0..COMMENT_WINDOW {
+            src.push_str("fn pad() {}\n");
+        }
+        src.push_str("fn f() { unsafe {} }\n");
+        let f = lint_source("fixture.rs", &src);
+        assert_eq!(rules(&f), vec![Rule::UnsafeNeedsSafety]);
+        assert_eq!(f[0].line, COMMENT_WINDOW + 2);
+    }
+
+    #[test]
+    fn unsafe_inside_string_or_identifier_is_ignored() {
+        let src = "fn f() { let unsafe_ish = \"unsafe { }\"; let _ = unsafe_ish; }\n";
+        assert!(lint_source("fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn relaxed_without_justification_fires() {
+        let src = "fn f(a: &std::sync::atomic::AtomicU64) {\n    \
+                   a.load(std::sync::atomic::Ordering::Relaxed);\n}\n";
+        let f = lint_source("fixture.rs", src);
+        assert_eq!(rules(&f), vec![Rule::RelaxedNeedsJustification]);
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn relaxed_with_justification_is_clean() {
+        let src = "fn f(a: &std::sync::atomic::AtomicU64) {\n    \
+                   // RELAXED: stats counter, read only by reporting.\n    \
+                   a.load(std::sync::atomic::Ordering::Relaxed);\n}\n";
+        assert!(lint_source("fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn fenced_fn_with_alloc_fires() {
+        let src = format!(
+            "// {FENCE_TAG} — per-request, must not allocate.\n\
+             fn hot(xs: &mut Vec<u32>) {{\n    xs.push(1);\n}}\n"
+        );
+        let f = lint_source("fixture.rs", &src);
+        assert_eq!(rules(&f), vec![Rule::HotPathAlloc]);
+        assert_eq!(f[0].line, 3);
+        assert!(f[0].message.contains("fenced at line 1"));
+    }
+
+    #[test]
+    fn fenced_alloc_waived_by_allow_comment() {
+        let src = format!(
+            "// {FENCE_TAG}\nfn hot(xs: &mut Vec<u32>) {{\n    \
+             // {ALLOW_ALLOC_TAG} — capacity retained across calls.\n    xs.push(1);\n}}\n"
+        );
+        assert!(lint_source("fixture.rs", &src).is_empty());
+    }
+
+    #[test]
+    fn unfenced_fn_may_allocate() {
+        let src = "fn cold() -> String {\n    format!(\"x\")\n}\n";
+        assert!(lint_source("fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn fence_does_not_reach_past_the_window() {
+        let mut src = format!("// {FENCE_TAG}\n");
+        for _ in 0..=FENCE_REACH {
+            src.push_str("const PAD: u32 = 0;\n");
+        }
+        src.push_str("fn far() -> String { String::new() }\n");
+        assert!(lint_source("fixture.rs", &src).is_empty());
+    }
+
+    #[test]
+    fn wildcard_over_protocol_enum_fires() {
+        let src = "fn f(c: KernelConfig) -> bool {\n    match c {\n        \
+                   KernelConfig::Xgemm(_) => true,\n        _ => false,\n    }\n}\n";
+        let f = lint_source("fixture.rs", src);
+        assert_eq!(rules(&f), vec![Rule::WildcardMatch]);
+        assert_eq!(f[0].line, 4);
+    }
+
+    #[test]
+    fn wildcard_waived_or_off_target_is_clean() {
+        let waived = format!(
+            "fn f(c: Admission) -> bool {{\n    match c {{\n        \
+             Admission::Accepted {{ .. }} => true,\n        \
+             // {ALLOW_WILDCARD_TAG} — refusal shapes are all terminal here.\n        \
+             _ => false,\n    }}\n}}\n"
+        );
+        assert!(lint_source("fixture.rs", &waived).is_empty());
+        // A match over a non-protocol enum may use `_` freely.
+        let other = "fn f(x: Option<u32>) -> bool {\n    match x {\n        \
+                     Some(1) => true,\n        _ => false,\n    }\n}\n";
+        assert!(lint_source("fixture.rs", other).is_empty());
+    }
+
+    #[test]
+    fn named_binding_arm_is_not_a_wildcard() {
+        let src = "fn f(o: RequestOutcome) -> u32 {\n    match o {\n        \
+                   RequestOutcome::Ok => 0,\n        other => id(other),\n    }\n}\n";
+        assert!(lint_source("fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn nested_match_wildcard_is_still_found() {
+        let src = "fn f(a: Option<Admission>) -> bool {\n    match a {\n        \
+                   Some(inner) => match inner {\n            \
+                   Admission::Accepted { .. } => true,\n            \
+                   _ => false,\n        },\n        None => false,\n    }\n}\n";
+        let f = lint_source("fixture.rs", src);
+        assert_eq!(rules(&f), vec![Rule::WildcardMatch]);
+        assert_eq!(f[0].line, 5);
+    }
+
+    #[test]
+    fn findings_are_sorted_by_line() {
+        let src = "fn f() { unsafe {} }\n\
+                   fn g(a: &std::sync::atomic::AtomicU64) {\n    \
+                   a.load(std::sync::atomic::Ordering::Relaxed);\n}\n\
+                   fn h() { unsafe {} }\n";
+        let f = lint_source("fixture.rs", src);
+        let lines: Vec<usize> = f.iter().map(|x| x.line).collect();
+        assert_eq!(lines, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn scrubber_handles_raw_strings_and_chars() {
+        let src = "fn f() -> (char, &'static str) {\n    \
+                   let s = r#\"unsafe Relaxed vec!\"#;\n    let _ = s;\n    \
+                   ('{', \"} match KernelConfig::\")\n}\n";
+        assert!(lint_source("fixture.rs", src).is_empty());
+    }
+}

@@ -1,0 +1,9 @@
+//! Source-level static analysis over the crate's own tree.
+//!
+//! The only pass today is [`lint`], a dependency-free scanner behind the
+//! `adaptd lint` subcommand.  It enforces the concurrency and hot-path
+//! conventions that `rustc` cannot see: safety comments on `unsafe`,
+//! justification comments on relaxed atomics, allocation-free fenced
+//! functions, and exhaustive matches on the protocol enums.
+
+pub mod lint;

@@ -17,7 +17,6 @@
 //! also driven directly by the drift experiment for determinism.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -25,6 +24,7 @@ use std::time::{Duration, Instant};
 use crate::config::{KernelConfig, Triple};
 use crate::device::DeviceId;
 use crate::dtree::{OnlineObservation, OnlineTrainer};
+use crate::util::sync::{AtomicU64, Ordering};
 
 use super::policy::{ModelPolicy, PolicyHandle};
 
@@ -82,6 +82,12 @@ pub struct TelemetryRing {
     pushed: AtomicU64,
 }
 
+impl std::fmt::Debug for TelemetryRing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TelemetryRing").finish_non_exhaustive()
+    }
+}
+
 impl TelemetryRing {
     pub fn new(capacity: usize) -> TelemetryRing {
         TelemetryRing {
@@ -100,9 +106,12 @@ impl TelemetryRing {
         let mut q = self.lock();
         if q.len() == self.capacity {
             q.pop_front();
+            // RELAXED: stats counter bumped under the ring lock; the lock
+            // provides the ordering, the counter is read for reporting.
             self.dropped.fetch_add(1, Ordering::Relaxed);
         }
         q.push_back(record);
+        // RELAXED: stats counter bumped under the ring lock (see above).
         self.pushed.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -121,11 +130,13 @@ impl TelemetryRing {
 
     /// Records evicted unread because the ring was full.
     pub fn dropped(&self) -> u64 {
+        // RELAXED: stats read; reporting tolerates lag.
         self.dropped.load(Ordering::Relaxed)
     }
 
     /// Records ever pushed (sampled), including later-dropped ones.
     pub fn pushed(&self) -> u64 {
+        // RELAXED: stats read; reporting tolerates lag.
         self.pushed.load(Ordering::Relaxed)
     }
 }
@@ -236,6 +247,12 @@ pub struct AdaptationLoop {
     stop_tx: mpsc::Sender<()>,
     thread: JoinHandle<OnlineTrainer>,
     stats: Arc<Mutex<AdaptStats>>,
+}
+
+impl std::fmt::Debug for AdaptationLoop {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AdaptationLoop").finish_non_exhaustive()
+    }
 }
 
 impl AdaptationLoop {

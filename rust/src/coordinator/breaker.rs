@@ -30,7 +30,7 @@
 //! plain atomics whose races can at worst lose a count, never corrupt
 //! the state machine.
 
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use crate::util::sync::{AtomicU32, AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 /// Breaker thresholds.  `PartialEq` only (carries an `f64` rate).
@@ -198,14 +198,17 @@ impl CircuitBreaker {
     }
 
     pub fn opens(&self) -> u64 {
+        // RELAXED: monotonic stats counter; readers tolerate lag.
         self.opens.load(Ordering::Relaxed)
     }
 
     pub fn half_opens(&self) -> u64 {
+        // RELAXED: monotonic stats counter; readers tolerate lag.
         self.half_opens.load(Ordering::Relaxed)
     }
 
     pub fn closes(&self) -> u64 {
+        // RELAXED: monotonic stats counter; readers tolerate lag.
         self.closes.load(Ordering::Relaxed)
     }
 
@@ -228,6 +231,7 @@ impl CircuitBreaker {
 
     /// Gate one admission.  `Probe` results must be settled with exactly
     /// one of `record_probe` / `release_probe`.
+    // LINT: hot-path — one packed load on the healthy path.
     pub fn admit(&self) -> BreakerAdmit {
         if !self.cfg.enabled {
             return BreakerAdmit::Serve;
@@ -242,6 +246,8 @@ impl CircuitBreaker {
                         return BreakerAdmit::Reject;
                     }
                     if self.transition(p, ST_HALF) {
+                        // RELAXED: stats counter; the CAS above already
+                        // ordered the state change itself.
                         self.half_opens.fetch_add(1, Ordering::Relaxed);
                     }
                     // Either way, re-read: someone is in HalfOpen now.
@@ -293,6 +299,8 @@ impl CircuitBreaker {
             return;
         }
         if unpack(self.packed.load(Ordering::Acquire)).0 == ST_CLOSED {
+            // RELAXED: heuristic streak counter; a racing stale reset only
+            // delays a trip, never corrupts the state machine.
             self.consecutive.store(0, Ordering::Relaxed);
             self.note_window(false);
         }
@@ -331,6 +339,9 @@ impl CircuitBreaker {
             if self.bump_probe_ok(generation) >= self.cfg.probe_successes
                 && self.transition(p, ST_CLOSED)
             {
+                // RELAXED: heuristic counters reset after the close; the
+                // closing CAS is the ordering point, stale window samples
+                // are tolerated by design.
                 self.consecutive.store(0, Ordering::Relaxed);
                 self.window_total.store(0, Ordering::Relaxed);
                 self.window_errors.store(0, Ordering::Relaxed);
@@ -338,6 +349,7 @@ impl CircuitBreaker {
             }
         } else if state == ST_HALF && self.transition(p, ST_OPEN) {
             self.opened_at_ns.store(self.now_ns(), Ordering::Release);
+            // RELAXED: stats counter; the re-open CAS carries the ordering.
             self.opens.fetch_add(1, Ordering::Relaxed);
         } else if state == ST_CLOSED {
             // Breaker closed while this probe was in flight; count the
@@ -384,8 +396,8 @@ impl CircuitBreaker {
             && total >= self.cfg.min_observations
             && errors as f64 / total as f64 >= self.cfg.error_rate;
         if total >= self.cfg.window {
-            // Racing resets can drop a few observations; the state
-            // machine itself is unaffected.
+            // RELAXED: racing resets can drop a few observations; the
+            // state machine itself is unaffected.
             self.window_total.store(0, Ordering::Relaxed);
             self.window_errors.store(0, Ordering::Relaxed);
         }
@@ -400,6 +412,7 @@ impl CircuitBreaker {
             }
             if self.transition(p, ST_OPEN) {
                 self.opened_at_ns.store(self.now_ns(), Ordering::Release);
+                // RELAXED: stats counter; the trip CAS carries the ordering.
                 self.opens.fetch_add(1, Ordering::Relaxed);
                 return;
             }

@@ -9,8 +9,9 @@
 //! * [`PolicyHandle`] — the epoch-counted atomic slot the online
 //!   adaptation loop hot-swaps retrained policies through.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+
+use crate::util::sync::{AtomicU64, Mutex, MutexGuard, Ordering};
 
 use crate::codegen::FlatTree;
 use crate::config::{KernelConfig, KernelKind, Triple};
@@ -33,6 +34,12 @@ pub struct ModelPolicy {
     name: String,
     flat: FlatTree,
     classes: Vec<KernelConfig>,
+}
+
+impl std::fmt::Debug for ModelPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelPolicy").finish_non_exhaustive()
+    }
 }
 
 impl ModelPolicy {
@@ -77,6 +84,12 @@ pub struct DefaultPolicy {
     pub threshold_geo: f64,
 }
 
+impl std::fmt::Debug for DefaultPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DefaultPolicy").finish_non_exhaustive()
+    }
+}
+
 impl DefaultPolicy {
     /// The paper's library defaults.
     pub fn clblast() -> DefaultPolicy {
@@ -117,6 +130,12 @@ pub struct OraclePolicy {
     pub fallback: DefaultPolicy,
 }
 
+impl std::fmt::Debug for OraclePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OraclePolicy").finish_non_exhaustive()
+    }
+}
+
 impl SelectPolicy for OraclePolicy {
     fn name(&self) -> &str {
         "peak-oracle"
@@ -144,7 +163,14 @@ pub struct CachedPolicy {
     pub policy: Arc<dyn SelectPolicy>,
 }
 
+impl std::fmt::Debug for CachedPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CachedPolicy").finish_non_exhaustive()
+    }
+}
+
 impl CachedPolicy {
+    // LINT: hot-path — per-request selection; must stay allocation-free.
     pub fn select(&self, t: Triple) -> KernelConfig {
         self.policy.select(t)
     }
@@ -167,6 +193,12 @@ pub struct PolicyHandle {
     slot: Mutex<(u64, Arc<dyn SelectPolicy>)>,
 }
 
+impl std::fmt::Debug for PolicyHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PolicyHandle").finish_non_exhaustive()
+    }
+}
+
 impl PolicyHandle {
     pub fn new(policy: Arc<dyn SelectPolicy>) -> PolicyHandle {
         PolicyHandle {
@@ -175,7 +207,7 @@ impl PolicyHandle {
         }
     }
 
-    fn lock(&self) -> std::sync::MutexGuard<'_, (u64, Arc<dyn SelectPolicy>)> {
+    fn lock(&self) -> MutexGuard<'_, (u64, Arc<dyn SelectPolicy>)> {
         // A panic while holding the lock cannot leave the pair torn (both
         // fields are written before release), so poisoning is recoverable.
         self.slot.lock().unwrap_or_else(|e| e.into_inner())
@@ -195,6 +227,8 @@ impl PolicyHandle {
     /// Bring a shard's cached policy up to date.  Returns `true` if the
     /// cache was replaced.  Cost when nothing changed (the overwhelmingly
     /// common case): one atomic load, no lock, no allocation.
+    // LINT: hot-path — window-boundary refresh; the fast path is one load
+    // and the slow path clones an Arc, never a buffer.
     pub fn refresh(&self, cached: &mut CachedPolicy) -> bool {
         if self.epoch.load(Ordering::Acquire) == cached.epoch {
             return false;

@@ -73,7 +73,6 @@
 //! telemetry tap, so injected faults never poison the trainer.
 
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -84,6 +83,7 @@ use crate::config::Triple;
 use crate::device::{sim, DeviceId, DeviceProfile};
 use crate::engine::{EngineSpec, ExecutionEngine, FaultInjector, FaultPlan};
 use crate::runtime::{ArtifactId, BatchScratch, GemmInput, Manifest, ScratchBuffers};
+use crate::util::sync::{AdmissionGauge, AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
 use super::adapt::{TelemetryRecord, TelemetryRing};
 use super::breaker::{BreakerAdmit, BreakerConfig, CircuitBreaker};
@@ -361,6 +361,12 @@ pub struct DeviceClass {
     pub breaker: Option<BreakerConfig>,
 }
 
+impl std::fmt::Debug for DeviceClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DeviceClass").finish_non_exhaustive()
+    }
+}
+
 impl DeviceClass {
     pub fn new(device: DeviceId, shards: usize, policy: Box<dyn SelectPolicy>) -> DeviceClass {
         DeviceClass {
@@ -442,10 +448,13 @@ struct ClassCounters {
 impl ClassCounters {
     /// Record one successful fused dispatch of `batch` requests.
     fn record_dispatch(&self, batch: usize, saved: Duration) {
+        // RELAXED: shard-local stats counters, merged only after the
+        // worker quiesces; no ordering with the serving path needed.
         self.dispatches.fetch_add(1, Ordering::Relaxed);
         if batch >= 2 {
             self.fused_requests.fetch_add(batch as u64, Ordering::Relaxed);
         }
+        // RELAXED: same stats ledger as above.
         self.fused_saved_ns
             .fetch_add(saved.as_nanos() as u64, Ordering::Relaxed);
         self.occupancy[occupancy_bucket(batch)].fetch_add(1, Ordering::Relaxed);
@@ -470,11 +479,10 @@ struct ClassState {
     /// requests.  Incremented by the handle at submit, decremented by the
     /// shard after the reply is sent.
     depths: Vec<Arc<AtomicUsize>>,
-    /// Class-wide outstanding gauge — the admission bound's reservation
-    /// counter (reserve with `fetch_add`, roll back on refusal).
-    outstanding: Arc<AtomicUsize>,
-    /// Queue bound this class admits up to.
-    capacity: usize,
+    /// Class-wide admission gauge: the capacity-bounded reservation
+    /// counter (reserve, roll back on refusal), shared with the shards
+    /// and the failover table.
+    admission: Arc<AdmissionGauge>,
     counters: Arc<ClassCounters>,
     /// Round-robin cursor within the class.
     next: AtomicUsize,
@@ -485,11 +493,13 @@ struct ClassState {
 
 impl ClassState {
     fn depth(&self) -> usize {
+        // RELAXED: advisory load-balancing read; gauges move under live
+        // traffic, staleness only skews routing, never correctness.
         self.depths.iter().map(|d| d.load(Ordering::Relaxed)).sum()
     }
 
     fn is_full(&self) -> bool {
-        self.outstanding.load(Ordering::Acquire) >= self.capacity
+        self.admission.is_full()
     }
 
     /// Predicted completion time of serving `t` on this class now: the
@@ -544,6 +554,12 @@ pub struct ServerHandle {
     classes: Arc<Vec<ClassState>>,
 }
 
+impl std::fmt::Debug for ServerHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServerHandle").finish_non_exhaustive()
+    }
+}
+
 impl ServerHandle {
     /// Best (lowest predicted-wait) class not yet in `tried`; classes at
     /// their queue bound — or quarantined by their breaker — are skipped
@@ -571,7 +587,7 @@ impl ServerHandle {
         let mut best = 0usize;
         let mut best_load = usize::MAX;
         for (i, class) in self.classes.iter().enumerate() {
-            let load = class.outstanding.load(Ordering::Acquire);
+            let load = class.admission.outstanding();
             if load < best_load {
                 best_load = load;
                 best = i;
@@ -600,6 +616,8 @@ impl ServerHandle {
     /// no locks and no allocations to the submit path.  A `HalfOpen`
     /// breaker admits the request as a *probe*: the serving shard
     /// settles the probe token with the execute outcome.
+    // LINT: hot-path — admission fast path; two atomics, no locks, and
+    // the only allocation is the caller's reply channel.
     fn try_admit(
         &self,
         class: &ClassState,
@@ -616,12 +634,13 @@ impl ServerHandle {
                 class.breaker.release_probe();
             }
         };
-        let prev = class.outstanding.fetch_add(1, Ordering::AcqRel);
-        if prev >= class.capacity {
-            class.outstanding.fetch_sub(1, Ordering::AcqRel);
+        let Some(prev) = class.admission.try_reserve() else {
             release(probe);
             return Err(AdmitRefusal::Full(req));
-        }
+        };
+        // RELAXED: watermark, round-robin cursor, and advisory shard
+        // gauge; the admission bound itself is held by the gauge's
+        // AcqRel reservation above.
         class.counters.peak_depth.fetch_max(prev + 1, Ordering::Relaxed);
         let (reply, rx) = mpsc::channel();
         let shard = class.next.fetch_add(1, Ordering::Relaxed) % class.txs.len();
@@ -641,8 +660,9 @@ impl ServerHandle {
             // does not see a phantom queue.  The returned receiver's
             // sender is dropped, so the caller observes the usual
             // server-shut-down recv error.
+            // RELAXED: advisory shard gauge rollback (see above).
             class.depths[shard].fetch_sub(1, Ordering::Relaxed);
-            class.outstanding.fetch_sub(1, Ordering::AcqRel);
+            class.admission.release();
             release(probe);
         }
         Ok(rx)
@@ -651,13 +671,14 @@ impl ServerHandle {
     fn shed(&self, class_idx: usize, req: GemmRequest, count: bool) -> Admission {
         let class = &self.classes[class_idx];
         if count {
+            // RELAXED: stats counter; merged after shutdown.
             class.counters.shed.fetch_add(1, Ordering::Relaxed);
         }
         Admission::Shed {
             req,
             device: class.device,
-            outstanding: class.outstanding.load(Ordering::Acquire),
-            capacity: class.capacity,
+            outstanding: class.admission.outstanding(),
+            capacity: class.admission.capacity(),
         }
     }
 
@@ -666,6 +687,7 @@ impl ServerHandle {
     fn quarantine(&self, class_idx: usize, req: GemmRequest, count: bool) -> Admission {
         let class = &self.classes[class_idx];
         if count {
+            // RELAXED: stats counter; merged after shutdown.
             class.counters.quarantined.fetch_add(1, Ordering::Relaxed);
         }
         Admission::Quarantined { req, device: class.device }
@@ -812,6 +834,7 @@ impl ServerHandle {
                         if let Some(c) =
                             self.classes.iter().find(|c| c.device == device)
                         {
+                            // RELAXED: stats counter; merged after shutdown.
                             c.counters.shed.fetch_add(1, Ordering::Relaxed);
                         }
                         return self.synthetic_error(
@@ -933,8 +956,8 @@ impl ServerHandle {
                                 "admission starved for {}s pinned to {device} \
                                  ({detail}; {}/{} outstanding)",
                                 ADMISSION_PATIENCE.as_secs(),
-                                class.outstanding.load(Ordering::Acquire),
-                                class.capacity
+                                class.admission.outstanding(),
+                                class.admission.capacity()
                             ),
                         ));
                     }
@@ -967,7 +990,7 @@ impl ServerHandle {
         self.classes
             .iter()
             .find(|c| c.device == device)
-            .map(|c| c.outstanding.load(Ordering::Acquire))
+            .map(|c| c.admission.outstanding())
     }
 
     /// The queue bound a device class admits up to.
@@ -975,7 +998,7 @@ impl ServerHandle {
         self.classes
             .iter()
             .find(|c| c.device == device)
-            .map(|c| c.capacity)
+            .map(|c| c.admission.capacity())
     }
 
     /// Reset every class's peak-depth watermark.  Experiment harnesses
@@ -984,6 +1007,8 @@ impl ServerHandle {
     /// clean watermark.
     pub fn reset_peak_depth(&self) {
         for class in self.classes.iter() {
+            // RELAXED: watermark reset between experiment phases; racing
+            // admissions re-establish it immediately.
             class.counters.peak_depth.store(0, Ordering::Relaxed);
         }
     }
@@ -996,8 +1021,7 @@ struct FailoverTarget {
     profile: DeviceProfile,
     txs: Vec<mpsc::Sender<Envelope>>,
     depths: Vec<Arc<AtomicUsize>>,
-    outstanding: Arc<AtomicUsize>,
-    capacity: usize,
+    admission: Arc<AdmissionGauge>,
     breaker: Arc<CircuitBreaker>,
     counters: Arc<ClassCounters>,
 }
@@ -1040,6 +1064,12 @@ pub struct GemmServer {
     /// Failover destinations shared with every shard; cleared (before
     /// join) at shutdown so worker channels can close.
     failover: Arc<FailoverTable>,
+}
+
+impl std::fmt::Debug for GemmServer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("GemmServer").finish_non_exhaustive()
+    }
 }
 
 impl GemmServer {
@@ -1101,7 +1131,7 @@ impl GemmServer {
             let capacity = class.queue_capacity.unwrap_or(cfg.queue_capacity);
             let policy = Arc::new(PolicyHandle::new(Arc::from(class.policy)));
             let telemetry = Arc::new(TelemetryRing::new(cfg.telemetry_capacity));
-            let outstanding = Arc::new(AtomicUsize::new(0));
+            let admission = Arc::new(AdmissionGauge::new(capacity));
             let counters = Arc::new(ClassCounters::default());
             let breaker =
                 Arc::new(CircuitBreaker::new(class.breaker.unwrap_or(cfg.breaker)));
@@ -1119,7 +1149,7 @@ impl GemmServer {
                     policy: Arc::clone(&policy),
                     telemetry: Arc::clone(&telemetry),
                     depth,
-                    outstanding: Arc::clone(&outstanding),
+                    admission: Arc::clone(&admission),
                     counters: Arc::clone(&counters),
                     stop: Arc::clone(&stop),
                     breaker: Arc::clone(&breaker),
@@ -1138,8 +1168,7 @@ impl GemmServer {
                 cached: Mutex::new(policy.snapshot()),
                 txs,
                 depths,
-                outstanding,
-                capacity,
+                admission,
                 counters: Arc::clone(&counters),
                 next: AtomicUsize::new(0),
                 breaker: Arc::clone(&breaker),
@@ -1165,8 +1194,7 @@ impl GemmServer {
                     profile: s.profile.clone(),
                     txs: s.txs.clone(),
                     depths: s.depths.clone(),
-                    outstanding: Arc::clone(&s.outstanding),
-                    capacity: s.capacity,
+                    admission: Arc::clone(&s.admission),
                     breaker: Arc::clone(&s.breaker),
                     counters: Arc::clone(&s.counters),
                 })
@@ -1289,6 +1317,7 @@ impl GemmServer {
             .classes
             .iter()
             .map(|c| {
+                // RELAXED: read after the workers are joined.
                 c.counters.shed.load(Ordering::Relaxed)
                     + c.counters.quarantined.load(Ordering::Relaxed)
             })
@@ -1298,6 +1327,8 @@ impl GemmServer {
         }
         let mut stats = ServeStats::from_records(&records, wall);
         for c in &self.classes {
+            // RELAXED: all counter reads below happen after the worker
+            // threads are joined; there is nothing left to race with.
             stats.record_admission(
                 c.device,
                 c.counters.shed.load(Ordering::Relaxed),
@@ -1306,10 +1337,12 @@ impl GemmServer {
             );
             let mut hist = [0u64; OCCUPANCY_BUCKETS];
             for (h, bucket) in hist.iter_mut().zip(&c.counters.occupancy) {
+                // RELAXED: post-join read (see above).
                 *h = bucket.load(Ordering::Relaxed);
             }
             stats.record_fusion(
                 c.device,
+                // RELAXED: post-join reads (see above).
                 c.counters.dispatches.load(Ordering::Relaxed),
                 c.counters.fused_requests.load(Ordering::Relaxed),
                 Duration::from_nanos(c.counters.fused_saved_ns.load(Ordering::Relaxed)),
@@ -1317,6 +1350,7 @@ impl GemmServer {
             );
             stats.record_resilience(
                 c.device,
+                // RELAXED: post-join reads (see above).
                 c.counters.quarantined.load(Ordering::Relaxed),
                 c.counters.retries.load(Ordering::Relaxed),
                 c.counters.failovers.load(Ordering::Relaxed),
@@ -1336,7 +1370,7 @@ struct ShardCtx {
     policy: Arc<PolicyHandle>,
     telemetry: Arc<TelemetryRing>,
     depth: Arc<AtomicUsize>,
-    outstanding: Arc<AtomicUsize>,
+    admission: Arc<AdmissionGauge>,
     counters: Arc<ClassCounters>,
     stop: Arc<AtomicBool>,
     breaker: Arc<CircuitBreaker>,
@@ -1404,7 +1438,7 @@ fn worker_loop(
         policy,
         telemetry,
         depth,
-        outstanding,
+        admission,
         counters,
         stop,
         breaker,
@@ -1490,7 +1524,7 @@ fn worker_loop(
                     device,
                     shard,
                     &depth,
-                    &outstanding,
+                    &admission,
                     &breaker,
                     &mut raw_records,
                     None,
@@ -1526,6 +1560,7 @@ fn worker_loop(
                         cfg.pressure_slowdown,
                     );
                     if swapped {
+                        // RELAXED: stats counter; merged after shutdown.
                         counters.pressure_picks.fetch_add(1, Ordering::Relaxed);
                     }
                     (picked, EnvAction::Serve { pressure_pick: swapped }, env)
@@ -1551,7 +1586,7 @@ fn worker_loop(
                     device,
                     shard,
                     &depth,
-                    &outstanding,
+                    &admission,
                     &breaker,
                     &mut raw_records,
                     None,
@@ -1572,7 +1607,7 @@ fn worker_loop(
                     device,
                     shard,
                     &depth,
-                    &outstanding,
+                    &admission,
                     &breaker,
                     &mut raw_records,
                     Some(message),
@@ -1657,6 +1692,7 @@ fn worker_loop(
                         && !stop.load(Ordering::Acquire)
                     {
                         env.retries += 1;
+                        // RELAXED: stats counter; merged after shutdown.
                         counters.retries.fetch_add(1, Ordering::Relaxed);
                         let input = gemm_input(&env.req);
                         match engine.execute_pooled(id, &input, &mut scratch) {
@@ -1701,8 +1737,10 @@ fn worker_loop(
                                     retries: env.retries,
                                     failover: env.failover,
                                 });
+                                // RELAXED: advisory shard gauge; the
+                                // admission gauge release is the bound.
                                 depth.fetch_sub(1, Ordering::Relaxed);
-                                outstanding.fetch_sub(1, Ordering::AcqRel);
+                                admission.release();
                                 // Retried requests never feed telemetry:
                                 // a flaky engine must not label trainer
                                 // data through its own failures.
@@ -1728,7 +1766,7 @@ fn worker_loop(
                         &breaker,
                         &counters,
                         &depth,
-                        &outstanding,
+                        &admission,
                         cfg.retry_budget,
                         &stop,
                     ) {
@@ -1770,8 +1808,10 @@ fn worker_loop(
                         retries: env.retries,
                         failover: env.failover,
                     });
+                    // RELAXED: advisory shard gauge; the admission
+                    // gauge release is the bound.
                     depth.fetch_sub(1, Ordering::Relaxed);
-                    outstanding.fetch_sub(1, Ordering::AcqRel);
+                    admission.release();
                 }
                 continue;
             }
@@ -1832,8 +1872,10 @@ fn worker_loop(
                 // The request is answered: release its depth-gauge slots
                 // so the router and the admission bound see the real
                 // backlog.
+                // RELAXED: advisory shard gauge; the admission gauge
+                // release is the bound.
                 depth.fetch_sub(1, Ordering::Relaxed);
-                outstanding.fetch_sub(1, Ordering::AcqRel);
+                admission.release();
                 // Telemetry tap — after the reply, entirely off the
                 // response path.  `times` excludes compile *and* the
                 // fusion amortization (per-slot attribution), so the
@@ -1856,6 +1898,7 @@ fn worker_loop(
                                 // Shadow failures live in their own
                                 // ledger: they never feed the breaker or
                                 // the trainer.
+                                // RELAXED: stats counter.
                                 counters.shadow_errors.fetch_add(1, Ordering::Relaxed);
                                 None
                             }
@@ -1907,7 +1950,7 @@ fn answer_unserved(
     device: DeviceId,
     shard: usize,
     depth: &AtomicUsize,
-    outstanding: &AtomicUsize,
+    admission: &AdmissionGauge,
     breaker: &CircuitBreaker,
     raw: &mut Vec<RawRecord>,
     message: Option<String>,
@@ -1932,7 +1975,12 @@ fn answer_unserved(
             "overload: deadline expired after {:.3}ms queued on {device}",
             queue.as_secs_f64() * 1e3
         ),
-        _ => format!("server shutting down; request drained unserved on {device}"),
+        RequestOutcome::Ok
+        | RequestOutcome::Error
+        | RequestOutcome::Drained
+        | RequestOutcome::Quarantined => {
+            format!("server shutting down; request drained unserved on {device}")
+        }
     });
     let _ = env.reply.send(GemmResponse {
         out: Err(anyhow!("{message}")),
@@ -1950,8 +1998,10 @@ fn answer_unserved(
         retries: env.retries,
         failover: env.failover,
     });
+    // RELAXED: advisory shard gauge; the admission gauge release is the
+    // bound.
     depth.fetch_sub(1, Ordering::Relaxed);
-    outstanding.fetch_sub(1, Ordering::AcqRel);
+    admission.release();
 }
 
 fn gemm_input(req: &GemmRequest) -> GemmInput<'_> {
@@ -2014,7 +2064,7 @@ fn try_failover(
     breaker: &CircuitBreaker,
     counters: &ClassCounters,
     depth: &AtomicUsize,
-    outstanding: &AtomicUsize,
+    admission: &AdmissionGauge,
     retry_budget: u32,
     stop: &AtomicBool,
 ) -> std::result::Result<(), Envelope> {
@@ -2041,7 +2091,7 @@ fn try_failover(
         if target.device == own_device || !target.breaker.is_closed() {
             continue;
         }
-        if target.outstanding.load(Ordering::Acquire) >= target.capacity {
+        if target.admission.is_full() {
             continue;
         }
         let Some((id, secs)) = cheapest_modeled_for(manifest, &target.profile, t)
@@ -2061,10 +2111,11 @@ fn try_failover(
     let target = &classes[idx];
     // Same reserve-then-rollback admission the front door uses: the
     // sibling's bound holds even against racing clients.
-    if target.outstanding.fetch_add(1, Ordering::AcqRel) >= target.capacity {
-        target.outstanding.fetch_sub(1, Ordering::AcqRel);
+    if target.admission.try_reserve().is_none() {
         return Err(env);
     }
+    // RELAXED: advisory shard-pick read and gauge bump; the bound is
+    // held by the sibling gauge's AcqRel reservation above.
     let shard_idx = target
         .depths
         .iter()
@@ -2072,6 +2123,7 @@ fn try_failover(
         .min_by_key(|(_, d)| d.load(Ordering::Relaxed))
         .map(|(i, _)| i)
         .unwrap_or(0);
+    // RELAXED: advisory depth gauge (bound held by the gauge above).
     target.depths[shard_idx].fetch_add(1, Ordering::Relaxed);
     // The probe verdict belongs to *this* device: the engine failed, so
     // the probe failed — the sibling's success must not vouch for us.
@@ -2081,19 +2133,24 @@ fn try_failover(
     }
     env.retries += 1;
     env.failover = true;
+    // RELAXED: stats counters; merged after shutdown.
     counters.retries.fetch_add(1, Ordering::Relaxed);
     counters.failovers.fetch_add(1, Ordering::Relaxed);
     match target.txs[shard_idx].send(env) {
         Ok(()) => {
             // The envelope now occupies the sibling's gauges; release
             // ours.
+            // RELAXED: advisory shard gauge; the admission gauge
+            // release is the bound.
             depth.fetch_sub(1, Ordering::Relaxed);
-            outstanding.fetch_sub(1, Ordering::AcqRel);
+            admission.release();
             Ok(())
         }
         Err(mpsc::SendError(env)) => {
+            // RELAXED: advisory gauge and stats rollback on send
+            // failure; the admission release is the bound.
             target.depths[shard_idx].fetch_sub(1, Ordering::Relaxed);
-            target.outstanding.fetch_sub(1, Ordering::AcqRel);
+            target.admission.release();
             counters.failovers.fetch_sub(1, Ordering::Relaxed);
             Err(env)
         }

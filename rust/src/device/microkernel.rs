@@ -277,6 +277,8 @@ fn block_scalar(
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "sse2")]
 #[allow(clippy::too_many_arguments)]
+// SAFETY: `#[target_feature]` fn — callable only from the dispatchers
+// below, which gate on the detected SIMD tier before entering.
 unsafe fn block_sse(
     p: &HostParams,
     m: usize,
@@ -289,30 +291,53 @@ unsafe fn block_sse(
     beta: f32,
     out: &mut [f32],
 ) {
-    use std::arch::x86_64::*;
-    let (mr, nr, ku) = (p.mr as usize, p.nr as usize, p.ku as usize);
-    let mut i0 = 0;
-    while i0 < m {
-        let tm = (m - i0).min(mr);
-        let mut j0 = 0;
-        while j0 < n {
-            let tn = (n - j0).min(nr);
-            let pairs = tn / 2;
-            let mut acc = [[0f64; MAX]; MAX];
-            for ti in 0..tm {
-                let arow = a.as_ptr().add((i0 + ti) * k);
-                let mut vacc = [_mm_setzero_pd(); MAX / 2];
-                let mut tail = [0f64; MAX];
-                // The ku-unrolled body peels the same single chain per
-                // element — the remainder loop repeats it verbatim.
-                let mut l = 0;
-                while l + ku <= k {
-                    for u in 0..ku {
-                        let av64 = *arow.add(l + u) as f64;
+    // SAFETY: the dispatcher asserted the padded-tile layout (`m`/`n`/`k`
+    // multiples of `mr`/`nr`/`ku`, operand slices exactly m*k / k*n / m*n),
+    // so every `add`-offset pointer below stays inside its slice; SSE2 is
+    // present per the target-feature gate.
+    unsafe {
+        use std::arch::x86_64::*;
+        let (mr, nr, ku) = (p.mr as usize, p.nr as usize, p.ku as usize);
+        let mut i0 = 0;
+        while i0 < m {
+            let tm = (m - i0).min(mr);
+            let mut j0 = 0;
+            while j0 < n {
+                let tn = (n - j0).min(nr);
+                let pairs = tn / 2;
+                let mut acc = [[0f64; MAX]; MAX];
+                for ti in 0..tm {
+                    let arow = a.as_ptr().add((i0 + ti) * k);
+                    let mut vacc = [_mm_setzero_pd(); MAX / 2];
+                    let mut tail = [0f64; MAX];
+                    // The ku-unrolled body peels the same single chain per
+                    // element — the remainder loop repeats it verbatim.
+                    let mut l = 0;
+                    while l + ku <= k {
+                        for u in 0..ku {
+                            let av64 = *arow.add(l + u) as f64;
+                            let av = _mm_set1_pd(av64);
+                            let brow = b.as_ptr().add((l + u) * n + j0);
+                            for (g, v) in vacc.iter_mut().take(pairs).enumerate() {
+                                // 8-byte load of two adjacent f32s, widened.
+                                let bv = _mm_cvtps_pd(_mm_castpd_ps(_mm_load_sd(
+                                    brow.add(2 * g) as *const f64,
+                                )));
+                                *v = _mm_add_pd(*v, _mm_mul_pd(av, bv));
+                            }
+                            for (tj, t) in
+                                tail.iter_mut().enumerate().take(tn).skip(pairs * 2)
+                            {
+                                *t += av64 * *brow.add(tj) as f64;
+                            }
+                        }
+                        l += ku;
+                    }
+                    while l < k {
+                        let av64 = *arow.add(l) as f64;
                         let av = _mm_set1_pd(av64);
-                        let brow = b.as_ptr().add((l + u) * n + j0);
+                        let brow = b.as_ptr().add(l * n + j0);
                         for (g, v) in vacc.iter_mut().take(pairs).enumerate() {
-                            // 8-byte load of two adjacent f32s, widened.
                             let bv = _mm_cvtps_pd(_mm_castpd_ps(_mm_load_sd(
                                 brow.add(2 * g) as *const f64,
                             )));
@@ -323,40 +348,23 @@ unsafe fn block_sse(
                         {
                             *t += av64 * *brow.add(tj) as f64;
                         }
+                        l += 1;
                     }
-                    l += ku;
-                }
-                while l < k {
-                    let av64 = *arow.add(l) as f64;
-                    let av = _mm_set1_pd(av64);
-                    let brow = b.as_ptr().add(l * n + j0);
-                    for (g, v) in vacc.iter_mut().take(pairs).enumerate() {
-                        let bv = _mm_cvtps_pd(_mm_castpd_ps(_mm_load_sd(
-                            brow.add(2 * g) as *const f64,
-                        )));
-                        *v = _mm_add_pd(*v, _mm_mul_pd(av, bv));
+                    for g in 0..pairs {
+                        let mut lanes = [0f64; 2];
+                        _mm_storeu_pd(lanes.as_mut_ptr(), vacc[g]);
+                        acc[ti][2 * g] = lanes[0];
+                        acc[ti][2 * g + 1] = lanes[1];
                     }
-                    for (tj, t) in
-                        tail.iter_mut().enumerate().take(tn).skip(pairs * 2)
-                    {
-                        *t += av64 * *brow.add(tj) as f64;
+                    for tj in pairs * 2..tn {
+                        acc[ti][tj] = tail[tj];
                     }
-                    l += 1;
                 }
-                for g in 0..pairs {
-                    let mut lanes = [0f64; 2];
-                    _mm_storeu_pd(lanes.as_mut_ptr(), vacc[g]);
-                    acc[ti][2 * g] = lanes[0];
-                    acc[ti][2 * g + 1] = lanes[1];
-                }
-                for tj in pairs * 2..tn {
-                    acc[ti][tj] = tail[tj];
-                }
+                epilogue(&acc, i0, j0, tm, tn, n, c, alpha, beta, out);
+                j0 += nr;
             }
-            epilogue(&acc, i0, j0, tm, tn, n, c, alpha, beta, out);
-            j0 += nr;
+            i0 += mr;
         }
-        i0 += mr;
     }
 }
 
@@ -366,6 +374,8 @@ unsafe fn block_sse(
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 #[allow(clippy::too_many_arguments)]
+// SAFETY: `#[target_feature]` fn — callable only from the dispatchers
+// below, which gate on the detected SIMD tier before entering.
 unsafe fn block_avx2(
     p: &HostParams,
     m: usize,
@@ -378,30 +388,50 @@ unsafe fn block_avx2(
     beta: f32,
     out: &mut [f32],
 ) {
-    use std::arch::x86_64::*;
-    let (mr, nr, ku) = (p.mr as usize, p.nr as usize, p.ku as usize);
-    let mut i0 = 0;
-    while i0 < m {
-        let tm = (m - i0).min(mr);
-        let mut j0 = 0;
-        while j0 < n {
-            let tn = (n - j0).min(nr);
-            let quads = tn / 4;
-            let mut acc = [[0f64; MAX]; MAX];
-            for ti in 0..tm {
-                let arow = a.as_ptr().add((i0 + ti) * k);
-                let mut vacc = [_mm256_setzero_pd(); MAX / 4];
-                let mut tail = [0f64; MAX];
-                let mut l = 0;
-                while l + ku <= k {
-                    for u in 0..ku {
-                        let av64 = *arow.add(l + u) as f64;
+    // SAFETY: same padded-tile layout contract as `block_sse` (asserted by
+    // the dispatcher); AVX2+FMA are present per the target-feature gate, and
+    // the unaligned load/store intrinsics carry no alignment requirement.
+    unsafe {
+        use std::arch::x86_64::*;
+        let (mr, nr, ku) = (p.mr as usize, p.nr as usize, p.ku as usize);
+        let mut i0 = 0;
+        while i0 < m {
+            let tm = (m - i0).min(mr);
+            let mut j0 = 0;
+            while j0 < n {
+                let tn = (n - j0).min(nr);
+                let quads = tn / 4;
+                let mut acc = [[0f64; MAX]; MAX];
+                for ti in 0..tm {
+                    let arow = a.as_ptr().add((i0 + ti) * k);
+                    let mut vacc = [_mm256_setzero_pd(); MAX / 4];
+                    let mut tail = [0f64; MAX];
+                    let mut l = 0;
+                    while l + ku <= k {
+                        for u in 0..ku {
+                            let av64 = *arow.add(l + u) as f64;
+                            let av = _mm256_set1_pd(av64);
+                            let brow = b.as_ptr().add((l + u) * n + j0);
+                            for (g, v) in vacc.iter_mut().take(quads).enumerate() {
+                                // 16-byte load of four adjacent f32s, widened.
+                                let bv =
+                                    _mm256_cvtps_pd(_mm_loadu_ps(brow.add(4 * g)));
+                                *v = _mm256_fmadd_pd(av, bv, *v);
+                            }
+                            for (tj, t) in
+                                tail.iter_mut().enumerate().take(tn).skip(quads * 4)
+                            {
+                                *t += av64 * *brow.add(tj) as f64;
+                            }
+                        }
+                        l += ku;
+                    }
+                    while l < k {
+                        let av64 = *arow.add(l) as f64;
                         let av = _mm256_set1_pd(av64);
-                        let brow = b.as_ptr().add((l + u) * n + j0);
+                        let brow = b.as_ptr().add(l * n + j0);
                         for (g, v) in vacc.iter_mut().take(quads).enumerate() {
-                            // 16-byte load of four adjacent f32s, widened.
-                            let bv =
-                                _mm256_cvtps_pd(_mm_loadu_ps(brow.add(4 * g)));
+                            let bv = _mm256_cvtps_pd(_mm_loadu_ps(brow.add(4 * g)));
                             *v = _mm256_fmadd_pd(av, bv, *v);
                         }
                         for (tj, t) in
@@ -409,39 +439,24 @@ unsafe fn block_avx2(
                         {
                             *t += av64 * *brow.add(tj) as f64;
                         }
+                        l += 1;
                     }
-                    l += ku;
-                }
-                while l < k {
-                    let av64 = *arow.add(l) as f64;
-                    let av = _mm256_set1_pd(av64);
-                    let brow = b.as_ptr().add(l * n + j0);
-                    for (g, v) in vacc.iter_mut().take(quads).enumerate() {
-                        let bv = _mm256_cvtps_pd(_mm_loadu_ps(brow.add(4 * g)));
-                        *v = _mm256_fmadd_pd(av, bv, *v);
+                    for g in 0..quads {
+                        let mut lanes = [0f64; 4];
+                        _mm256_storeu_pd(lanes.as_mut_ptr(), vacc[g]);
+                        for (o, &v) in lanes.iter().enumerate() {
+                            acc[ti][4 * g + o] = v;
+                        }
                     }
-                    for (tj, t) in
-                        tail.iter_mut().enumerate().take(tn).skip(quads * 4)
-                    {
-                        *t += av64 * *brow.add(tj) as f64;
-                    }
-                    l += 1;
-                }
-                for g in 0..quads {
-                    let mut lanes = [0f64; 4];
-                    _mm256_storeu_pd(lanes.as_mut_ptr(), vacc[g]);
-                    for (o, &v) in lanes.iter().enumerate() {
-                        acc[ti][4 * g + o] = v;
+                    for tj in quads * 4..tn {
+                        acc[ti][tj] = tail[tj];
                     }
                 }
-                for tj in quads * 4..tn {
-                    acc[ti][tj] = tail[tj];
-                }
+                epilogue(&acc, i0, j0, tm, tn, n, c, alpha, beta, out);
+                j0 += nr;
             }
-            epilogue(&acc, i0, j0, tm, tn, n, c, alpha, beta, out);
-            j0 += nr;
+            i0 += mr;
         }
-        i0 += mr;
     }
 }
 
@@ -554,6 +569,8 @@ fn packed_scalar(
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "sse2")]
 #[allow(clippy::too_many_arguments)]
+// SAFETY: `#[target_feature]` fn — callable only from the dispatchers
+// below, which gate on the detected SIMD tier before entering.
 unsafe fn packed_sse(
     p: &HostParams,
     m: usize,
@@ -566,32 +583,55 @@ unsafe fn packed_sse(
     beta: f32,
     out: &mut [f32],
 ) {
-    use std::arch::x86_64::*;
-    let (mr, nr, ku) = (p.mr as usize, p.nr as usize, p.ku as usize);
-    let pairs = nr / 2;
-    let mut i0 = 0;
-    while i0 < m {
-        let tm = (m - i0).min(mr);
-        let apan = pa.as_ptr().add((i0 / mr) * mr * k);
-        let mut j0 = 0;
-        while j0 < n {
-            let tn = (n - j0).min(nr);
-            let bpan = pb.as_ptr().add((j0 / nr) * k * nr);
-            let mut acc = [[0f64; MAX]; MAX];
-            let mut vacc = [[_mm_setzero_pd(); MAX / 2]; MAX];
-            let mut l = 0;
-            while l + ku <= k {
-                for u in 0..ku {
-                    let arow = apan.add((l + u) * mr);
-                    let brow = bpan.add((l + u) * nr);
+    // SAFETY: the packed dispatcher asserted `pa`/`pb` hold whole mr×kc /
+    // kc×nr panels and `out` is exactly m*n, so the panel-pointer arithmetic
+    // below stays inside those buffers; SSE2 is present per the gate.
+    unsafe {
+        use std::arch::x86_64::*;
+        let (mr, nr, ku) = (p.mr as usize, p.nr as usize, p.ku as usize);
+        let pairs = nr / 2;
+        let mut i0 = 0;
+        while i0 < m {
+            let tm = (m - i0).min(mr);
+            let apan = pa.as_ptr().add((i0 / mr) * mr * k);
+            let mut j0 = 0;
+            while j0 < n {
+                let tn = (n - j0).min(nr);
+                let bpan = pb.as_ptr().add((j0 / nr) * k * nr);
+                let mut acc = [[0f64; MAX]; MAX];
+                let mut vacc = [[_mm_setzero_pd(); MAX / 2]; MAX];
+                let mut l = 0;
+                while l + ku <= k {
+                    for u in 0..ku {
+                        let arow = apan.add((l + u) * mr);
+                        let brow = bpan.add((l + u) * nr);
+                        for ti in 0..tm {
+                            let av64 = *arow.add(ti) as f64;
+                            let av = _mm_set1_pd(av64);
+                            for (g, v) in
+                                vacc[ti].iter_mut().take(pairs).enumerate()
+                            {
+                                // 8-byte unit-stride load of two adjacent
+                                // panel f32s, widened.
+                                let bv = _mm_cvtps_pd(_mm_castpd_ps(_mm_load_sd(
+                                    brow.add(2 * g) as *const f64,
+                                )));
+                                *v = _mm_add_pd(*v, _mm_mul_pd(av, bv));
+                            }
+                            for tj in pairs * 2..tn {
+                                acc[ti][tj] += av64 * *brow.add(tj) as f64;
+                            }
+                        }
+                    }
+                    l += ku;
+                }
+                while l < k {
+                    let arow = apan.add(l * mr);
+                    let brow = bpan.add(l * nr);
                     for ti in 0..tm {
                         let av64 = *arow.add(ti) as f64;
                         let av = _mm_set1_pd(av64);
-                        for (g, v) in
-                            vacc[ti].iter_mut().take(pairs).enumerate()
-                        {
-                            // 8-byte unit-stride load of two adjacent
-                            // panel f32s, widened.
+                        for (g, v) in vacc[ti].iter_mut().take(pairs).enumerate() {
                             let bv = _mm_cvtps_pd(_mm_castpd_ps(_mm_load_sd(
                                 brow.add(2 * g) as *const f64,
                             )));
@@ -601,39 +641,21 @@ unsafe fn packed_sse(
                             acc[ti][tj] += av64 * *brow.add(tj) as f64;
                         }
                     }
+                    l += 1;
                 }
-                l += ku;
-            }
-            while l < k {
-                let arow = apan.add(l * mr);
-                let brow = bpan.add(l * nr);
-                for ti in 0..tm {
-                    let av64 = *arow.add(ti) as f64;
-                    let av = _mm_set1_pd(av64);
-                    for (g, v) in vacc[ti].iter_mut().take(pairs).enumerate() {
-                        let bv = _mm_cvtps_pd(_mm_castpd_ps(_mm_load_sd(
-                            brow.add(2 * g) as *const f64,
-                        )));
-                        *v = _mm_add_pd(*v, _mm_mul_pd(av, bv));
-                    }
-                    for tj in pairs * 2..tn {
-                        acc[ti][tj] += av64 * *brow.add(tj) as f64;
+                for (ti, accrow) in acc.iter_mut().enumerate().take(tm) {
+                    for g in 0..pairs {
+                        let mut lanes = [0f64; 2];
+                        _mm_storeu_pd(lanes.as_mut_ptr(), vacc[ti][g]);
+                        accrow[2 * g] = lanes[0];
+                        accrow[2 * g + 1] = lanes[1];
                     }
                 }
-                l += 1;
+                epilogue(&acc, i0, j0, tm, tn, n, c, alpha, beta, out);
+                j0 += nr;
             }
-            for (ti, accrow) in acc.iter_mut().enumerate().take(tm) {
-                for g in 0..pairs {
-                    let mut lanes = [0f64; 2];
-                    _mm_storeu_pd(lanes.as_mut_ptr(), vacc[ti][g]);
-                    accrow[2 * g] = lanes[0];
-                    accrow[2 * g + 1] = lanes[1];
-                }
-            }
-            epilogue(&acc, i0, j0, tm, tn, n, c, alpha, beta, out);
-            j0 += nr;
+            i0 += mr;
         }
-        i0 += mr;
     }
 }
 
@@ -643,6 +665,8 @@ unsafe fn packed_sse(
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 #[allow(clippy::too_many_arguments)]
+// SAFETY: `#[target_feature]` fn — callable only from the dispatchers
+// below, which gate on the detected SIMD tier before entering.
 unsafe fn packed_avx2(
     p: &HostParams,
     m: usize,
@@ -655,72 +679,77 @@ unsafe fn packed_avx2(
     beta: f32,
     out: &mut [f32],
 ) {
-    use std::arch::x86_64::*;
-    let (mr, nr, ku) = (p.mr as usize, p.nr as usize, p.ku as usize);
-    let quads = nr / 4;
-    let mut i0 = 0;
-    while i0 < m {
-        let tm = (m - i0).min(mr);
-        let apan = pa.as_ptr().add((i0 / mr) * mr * k);
-        let mut j0 = 0;
-        while j0 < n {
-            let tn = (n - j0).min(nr);
-            let bpan = pb.as_ptr().add((j0 / nr) * k * nr);
-            let mut acc = [[0f64; MAX]; MAX];
-            let mut vacc = [[_mm256_setzero_pd(); MAX / 4]; MAX];
-            let mut l = 0;
-            while l + ku <= k {
-                for u in 0..ku {
-                    let arow = apan.add((l + u) * mr);
-                    let brow = bpan.add((l + u) * nr);
+    // SAFETY: same packed-panel contract as `packed_sse` (asserted by the
+    // dispatcher); AVX2+FMA are present per the target-feature gate, and the
+    // unaligned intrinsics carry no alignment requirement.
+    unsafe {
+        use std::arch::x86_64::*;
+        let (mr, nr, ku) = (p.mr as usize, p.nr as usize, p.ku as usize);
+        let quads = nr / 4;
+        let mut i0 = 0;
+        while i0 < m {
+            let tm = (m - i0).min(mr);
+            let apan = pa.as_ptr().add((i0 / mr) * mr * k);
+            let mut j0 = 0;
+            while j0 < n {
+                let tn = (n - j0).min(nr);
+                let bpan = pb.as_ptr().add((j0 / nr) * k * nr);
+                let mut acc = [[0f64; MAX]; MAX];
+                let mut vacc = [[_mm256_setzero_pd(); MAX / 4]; MAX];
+                let mut l = 0;
+                while l + ku <= k {
+                    for u in 0..ku {
+                        let arow = apan.add((l + u) * mr);
+                        let brow = bpan.add((l + u) * nr);
+                        for ti in 0..tm {
+                            let av64 = *arow.add(ti) as f64;
+                            let av = _mm256_set1_pd(av64);
+                            for (g, v) in
+                                vacc[ti].iter_mut().take(quads).enumerate()
+                            {
+                                // 16-byte unit-stride load of four adjacent
+                                // panel f32s, widened.
+                                let bv =
+                                    _mm256_cvtps_pd(_mm_loadu_ps(brow.add(4 * g)));
+                                *v = _mm256_fmadd_pd(av, bv, *v);
+                            }
+                            for tj in quads * 4..tn {
+                                acc[ti][tj] += av64 * *brow.add(tj) as f64;
+                            }
+                        }
+                    }
+                    l += ku;
+                }
+                while l < k {
+                    let arow = apan.add(l * mr);
+                    let brow = bpan.add(l * nr);
                     for ti in 0..tm {
                         let av64 = *arow.add(ti) as f64;
                         let av = _mm256_set1_pd(av64);
-                        for (g, v) in
-                            vacc[ti].iter_mut().take(quads).enumerate()
-                        {
-                            // 16-byte unit-stride load of four adjacent
-                            // panel f32s, widened.
-                            let bv =
-                                _mm256_cvtps_pd(_mm_loadu_ps(brow.add(4 * g)));
+                        for (g, v) in vacc[ti].iter_mut().take(quads).enumerate() {
+                            let bv = _mm256_cvtps_pd(_mm_loadu_ps(brow.add(4 * g)));
                             *v = _mm256_fmadd_pd(av, bv, *v);
                         }
                         for tj in quads * 4..tn {
                             acc[ti][tj] += av64 * *brow.add(tj) as f64;
                         }
                     }
+                    l += 1;
                 }
-                l += ku;
-            }
-            while l < k {
-                let arow = apan.add(l * mr);
-                let brow = bpan.add(l * nr);
-                for ti in 0..tm {
-                    let av64 = *arow.add(ti) as f64;
-                    let av = _mm256_set1_pd(av64);
-                    for (g, v) in vacc[ti].iter_mut().take(quads).enumerate() {
-                        let bv = _mm256_cvtps_pd(_mm_loadu_ps(brow.add(4 * g)));
-                        *v = _mm256_fmadd_pd(av, bv, *v);
-                    }
-                    for tj in quads * 4..tn {
-                        acc[ti][tj] += av64 * *brow.add(tj) as f64;
+                for (ti, accrow) in acc.iter_mut().enumerate().take(tm) {
+                    for g in 0..quads {
+                        let mut lanes = [0f64; 4];
+                        _mm256_storeu_pd(lanes.as_mut_ptr(), vacc[ti][g]);
+                        for (o, &v) in lanes.iter().enumerate() {
+                            accrow[4 * g + o] = v;
+                        }
                     }
                 }
-                l += 1;
+                epilogue(&acc, i0, j0, tm, tn, n, c, alpha, beta, out);
+                j0 += nr;
             }
-            for (ti, accrow) in acc.iter_mut().enumerate().take(tm) {
-                for g in 0..quads {
-                    let mut lanes = [0f64; 4];
-                    _mm256_storeu_pd(lanes.as_mut_ptr(), vacc[ti][g]);
-                    for (o, &v) in lanes.iter().enumerate() {
-                        accrow[4 * g + o] = v;
-                    }
-                }
-            }
-            epilogue(&acc, i0, j0, tm, tn, n, c, alpha, beta, out);
-            j0 += nr;
+            i0 += mr;
         }
-        i0 += mr;
     }
 }
 

@@ -32,6 +32,12 @@ pub struct MajorityClass {
     class: ClassId,
 }
 
+impl std::fmt::Debug for MajorityClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MajorityClass").finish_non_exhaustive()
+    }
+}
+
 impl MajorityClass {
     pub fn fit(data: &[(Triple, ClassId)], n_classes: usize) -> MajorityClass {
         let mut counts = vec![0u32; n_classes];
@@ -66,6 +72,12 @@ pub struct KNearest {
     k: usize,
     points: Vec<([f64; 3], ClassId)>,
     n_classes: usize,
+}
+
+impl std::fmt::Debug for KNearest {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KNearest").finish_non_exhaustive()
+    }
 }
 
 impl KNearest {

@@ -79,6 +79,12 @@ pub struct OnlineTrainer {
     retrains: usize,
 }
 
+impl std::fmt::Debug for OnlineTrainer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OnlineTrainer").finish_non_exhaustive()
+    }
+}
+
 impl OnlineTrainer {
     /// Build from an initial dataset; trains the initial tree eagerly.
     /// Panics if the dataset is empty (nothing to train on).

@@ -15,7 +15,6 @@
 //! `"injected fault"`), indistinguishable from a real device fault to
 //! the coordinator — which is the point.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -25,6 +24,7 @@ use crate::config::Triple;
 use crate::device::DeviceId;
 use crate::runtime::{ArtifactId, BatchScratch, GemmInput, GemmTimes, Manifest, ScratchBuffers};
 use crate::util::prng::splitmix64;
+use crate::util::sync::{AtomicBool, AtomicU64, Ordering};
 
 use super::ExecutionEngine;
 
@@ -107,6 +107,8 @@ impl FaultPlan {
 
     /// Matching dispatches observed across every clone.
     pub fn dispatches(&self) -> u64 {
+        // RELAXED: monotonic dispatch counter; assertions only compare
+        // totals after the fleet has quiesced.
         self.state.dispatches.load(Ordering::Relaxed)
     }
 
@@ -121,6 +123,8 @@ impl FaultPlan {
     }
 
     fn decide(&self, t: Triple) -> Verdict {
+        // RELAXED: the ticket only needs to be unique per dispatch, not
+        // ordered against the `down` flag read below (which is Acquire).
         let n = self.state.dispatches.fetch_add(1, Ordering::Relaxed);
         if self.state.down.load(Ordering::Acquire) {
             return Verdict::Fail("sticky fault: device is down");
@@ -158,6 +162,12 @@ pub struct FaultInjector {
     inner: Box<dyn ExecutionEngine>,
     plan: FaultPlan,
     injected: u64,
+}
+
+impl std::fmt::Debug for FaultInjector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultInjector").finish_non_exhaustive()
+    }
 }
 
 impl FaultInjector {

@@ -186,6 +186,12 @@ pub struct RuntimeEngine {
     runtime: GemmRuntime,
 }
 
+impl std::fmt::Debug for RuntimeEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RuntimeEngine").finish_non_exhaustive()
+    }
+}
+
 impl RuntimeEngine {
     pub fn open(dir: &Path) -> Result<RuntimeEngine> {
         Ok(RuntimeEngine { runtime: GemmRuntime::open(dir)? })
@@ -221,7 +227,7 @@ impl ExecutionEngine for RuntimeEngine {
                 microkernel::tier_supported(p.tier)
                     && (!p.packed || microkernel::pack_enabled())
             }
-            _ => true,
+            KernelConfig::Xgemm(_) | KernelConfig::Direct(_) => true,
         }
     }
 
@@ -260,6 +266,12 @@ pub struct SimEngine {
     manifest: Manifest,
     /// Device legality per artifact, precomputed at open.
     servable: Vec<bool>,
+}
+
+impl std::fmt::Debug for SimEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SimEngine").finish_non_exhaustive()
+    }
 }
 
 impl SimEngine {

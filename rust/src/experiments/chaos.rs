@@ -189,6 +189,12 @@ pub struct ChaosReport {
     pub wall: Duration,
 }
 
+impl std::fmt::Debug for ChaosReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ChaosReport").finish_non_exhaustive()
+    }
+}
+
 impl ChaosReport {
     fn sticky(&self) -> Option<&ScenarioResult> {
         self.scenarios.iter().find(|s| s.name == "sticky")

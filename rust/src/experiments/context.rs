@@ -76,6 +76,12 @@ pub struct ModelRow {
     pub records: Vec<TripleRecord>,
 }
 
+impl std::fmt::Debug for ModelRow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelRow").finish_non_exhaustive()
+    }
+}
+
 /// The full off-line result for one (device, dataset) pair.
 pub struct SweepResult {
     pub device: DeviceId,
@@ -87,6 +93,12 @@ pub struct SweepResult {
     pub train_idx: Vec<usize>,
     pub test_idx: Vec<usize>,
     pub models: Vec<ModelRow>,
+}
+
+impl std::fmt::Debug for SweepResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SweepResult").finish_non_exhaustive()
+    }
 }
 
 impl SweepResult {
@@ -109,6 +121,12 @@ pub struct Context {
     /// When set, only this many models are trained (test speed-up).
     pub model_limit: Option<usize>,
     pub verbose: bool,
+}
+
+impl std::fmt::Debug for Context {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Context").finish_non_exhaustive()
+    }
 }
 
 impl Default for Context {

@@ -167,6 +167,12 @@ pub struct DriftReport {
     pub swaps: u64,
 }
 
+impl std::fmt::Debug for DriftReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DriftReport").finish_non_exhaustive()
+    }
+}
+
 impl DriftReport {
     /// The post-swap phase: the last wave (served by the adapted model
     /// once any swap happened).

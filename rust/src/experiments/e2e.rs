@@ -52,6 +52,12 @@ pub struct E2eModel {
     pub tuned_triples: usize,
 }
 
+impl std::fmt::Debug for E2eModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("E2eModel").finish_non_exhaustive()
+    }
+}
+
 /// Off-line: tune every workload triple on the PJRT backend and train.
 pub fn offline_train(artifacts: &Path, reps: usize) -> Result<E2eModel> {
     let mut backend = PjrtBackend::open(artifacts)?;
@@ -146,6 +152,12 @@ pub struct E2eReport {
     pub model: E2eModel,
     pub stats_model: ServeStats,
     pub stats_default: ServeStats,
+}
+
+impl std::fmt::Debug for E2eReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("E2eReport").finish_non_exhaustive()
+    }
 }
 
 impl E2eReport {

@@ -298,6 +298,12 @@ pub struct HeteroReport {
     overall_quality: f64,
 }
 
+impl std::fmt::Debug for HeteroReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HeteroReport").finish_non_exhaustive()
+    }
+}
+
 impl HeteroReport {
     pub fn overall_accuracy(&self) -> f64 {
         if self.requests == 0 {

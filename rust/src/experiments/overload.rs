@@ -148,6 +148,12 @@ pub struct OverloadReport {
     pub wall: Duration,
 }
 
+impl std::fmt::Debug for OverloadReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OverloadReport").finish_non_exhaustive()
+    }
+}
+
 impl OverloadReport {
     fn point_at(points: &[LoadPoint], load: f64) -> Option<&LoadPoint> {
         points.iter().find(|p| (p.load - load).abs() < 1e-9)

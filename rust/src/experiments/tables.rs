@@ -22,6 +22,12 @@ pub struct Rendered {
     pub csv: CsvWriter,
 }
 
+impl std::fmt::Debug for Rendered {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Rendered").finish_non_exhaustive()
+    }
+}
+
 impl Rendered {
     pub fn save(&self, dir: &std::path::Path) -> anyhow::Result<()> {
         std::fs::create_dir_all(dir)?;

@@ -126,6 +126,12 @@ pub struct Suite {
     pub results: Vec<BenchResult>,
 }
 
+impl std::fmt::Debug for Suite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Suite").finish_non_exhaustive()
+    }
+}
+
 impl Suite {
     pub fn from_args() -> Suite {
         let filter = std::env::args()

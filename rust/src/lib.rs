@@ -21,6 +21,13 @@
 //! Python never runs on the request path: artifacts are produced once by
 //! `make artifacts`, after which the `adaptd` binary is self-contained.
 
+// Every `unsafe` operation must be explicit even inside `unsafe fn`
+// (the SIMD microkernels carry per-block `// SAFETY:` contracts that
+// `adaptd lint` enforces), and every public type must be debuggable.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(missing_debug_implementations)]
+
+pub mod analysis;
 pub mod cli;
 pub mod codegen;
 pub mod config;

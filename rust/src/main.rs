@@ -14,6 +14,7 @@
 //! adaptd overload  --artifacts artifacts --requests 120 --capacity 24 --load 1,2,4
 //! adaptd chaos     --artifacts artifacts --chaos-devices p100,mali --device p100
 //! adaptd bench-compare --baseline BENCH_baseline.json --current BENCH_hotpath.json
+//! adaptd lint      [--root rust]
 //! adaptd info      --artifacts artifacts
 //! ```
 
@@ -66,6 +67,7 @@ fn opt_specs() -> Vec<OptSpec> {
         opt("baseline", "bench-compare: committed baseline JSON", None),
         opt("current", "bench-compare: freshly produced bench JSON", None),
         opt("tolerance", "bench-compare: relative regression tolerance", Some("0.15")),
+        opt("root", "lint: crate directory containing src/ (auto-detected)", None),
     ]
 }
 
@@ -90,6 +92,7 @@ fn commands() -> Vec<(&'static str, &'static str)> {
         ("overload", "offered-load sweep: admission, shedding, pressure picks"),
         ("chaos", "fault-injection sweep: breakers, retry/failover, recovery"),
         ("bench-compare", "diff bench JSONs and fail on perf regressions"),
+        ("lint", "source-level convention lint over the crate tree"),
         ("info", "describe the artifact roster"),
     ]
 }
@@ -141,6 +144,7 @@ fn run(argv: &[String]) -> Result<()> {
         "overload" => cmd_overload(&args),
         "chaos" => cmd_chaos(&args),
         "bench-compare" => cmd_bench_compare(&args),
+        "lint" => cmd_lint(&args),
         "info" => cmd_info(&args),
         other => bail!(
             "unknown command '{other}'\n{}",
@@ -502,6 +506,35 @@ fn cmd_bench_compare(args: &cli::Args) -> Result<()> {
     if !diff.passes() {
         bail!("{} bench regression(s) beyond tolerance", diff.regressions.len());
     }
+    Ok(())
+}
+
+/// The CI lint gate: scan the crate's own sources for the concurrency
+/// and hot-path conventions `rustc` cannot check (SAFETY comments on
+/// `unsafe`, RELAXED justifications, allocation-free fenced functions,
+/// exhaustive matches over the protocol enums).  Exits non-zero on any
+/// finding, printing each as `file:line: [rule] message`.
+fn cmd_lint(args: &cli::Args) -> Result<()> {
+    use adaptlib::analysis::lint;
+    let root = match args.get("root") {
+        Some(r) => PathBuf::from(r),
+        // Work from either the repo root or the crate directory.
+        None if Path::new("src").is_dir() => PathBuf::from("."),
+        None => PathBuf::from("rust"),
+    };
+    anyhow::ensure!(
+        root.join("src").is_dir(),
+        "no src/ under '{}' — pass --root <crate dir>",
+        root.display()
+    );
+    let findings = lint::lint_paths(&root, lint::default_paths())?;
+    for f in &findings {
+        println!("{f}");
+    }
+    if !findings.is_empty() {
+        bail!("lint: {} finding(s)", findings.len());
+    }
+    println!("lint: clean under '{}' (scanned src, benches, tests)", root.display());
     Ok(())
 }
 

@@ -203,6 +203,12 @@ pub struct GemmRuntime {
     pub compile_time: Duration,
 }
 
+impl std::fmt::Debug for GemmRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("GemmRuntime").finish_non_exhaustive()
+    }
+}
+
 impl GemmRuntime {
     /// Open the artifact directory (does not compile anything yet).
     pub fn open(dir: &Path) -> Result<GemmRuntime> {
@@ -341,6 +347,7 @@ impl GemmRuntime {
     /// Execute a GEMM by dense id into caller-held scratch — the serving
     /// hot path: no string hashing, no metadata clone, zero steady-state
     /// heap allocations.  The result is left in `scratch.out`.
+    // LINT: hot-path — per-request execute; zero steady-state allocations.
     pub fn gemm_pooled(
         &mut self,
         id: ArtifactId,
@@ -527,6 +534,7 @@ impl GemmRuntime {
     /// On error the batch fails as a whole (`batch.out`/`batch.times`
     /// contents are unspecified); the coordinator answers every member
     /// with a typed per-request error.
+    // LINT: hot-path — fused dispatch; per-slot work reuses pooled buffers.
     pub fn gemm_batch_pooled(
         &mut self,
         id: ArtifactId,
@@ -589,6 +597,9 @@ impl GemmRuntime {
                     let th = Instant::now();
                     batch.out[slot * m * n..(slot + 1) * m * n]
                         .copy_from_slice(&batch.padded_out);
+                    // Push into the pool's capacity-retained times Vec
+                    // (cleared, not shrunk, between dispatches).
+                    // LINT: allow(alloc) — no steady-state allocation.
                     batch.times.push(GemmTimes {
                         helper_time: th.elapsed(),
                         kernel_time,
@@ -618,6 +629,9 @@ impl GemmRuntime {
                         input.c, m, n, mb, nb,
                         &mut batch.c[slot * sc..(slot + 1) * sc],
                     );
+                    // Same capacity-retained pool Vec as the direct-slot
+                    // push above.
+                    // LINT: allow(alloc) — no steady-state allocation.
                     batch.times.push(GemmTimes {
                         helper_time: th.elapsed(),
                         kernel_time: Duration::ZERO,
@@ -626,7 +640,7 @@ impl GemmRuntime {
                 // Execute + unpad per slot over the stacked region.
                 let host = match self.manifest.meta(id).config {
                     KernelConfig::HostSimd(p) => Some(p),
-                    _ => None,
+                    KernelConfig::Xgemm(_) | KernelConfig::Direct(_) => None,
                 };
                 let use_packed =
                     host.is_some_and(|p| p.packed && microkernel::pack_enabled());

@@ -35,6 +35,12 @@ pub struct PjrtBackend {
     pub reps: usize,
 }
 
+impl std::fmt::Debug for PjrtBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtBackend").finish_non_exhaustive()
+    }
+}
+
 impl PjrtBackend {
     pub fn open(dir: &Path) -> Result<PjrtBackend> {
         let runtime = GemmRuntime::open(dir)?;

@@ -1,0 +1,883 @@
+//! Deterministic exhaustive-interleaving scheduler for model checking.
+//!
+//! This is a loom-style model checker, scaled to the needs of this
+//! repo's lock-free serving path and the offline build constraint (no
+//! external deps).  A test body runs many times; each run is driven by
+//! a *schedule* — a sequence of decisions about which thread runs at
+//! each scheduling point.  Scheduling points are injected by the
+//! modeled primitives below ([`AtomicU64`], [`Mutex`], ...), which the
+//! production code picks up through the `crate::util::sync` facade when
+//! built with `--features model-check`.
+//!
+//! Exploration is a depth-first search over schedules: the first run
+//! always picks the lowest-numbered runnable thread, and each
+//! subsequent run flips the last decision that still has an untried
+//! alternative.  Preemptions (switching away from a thread that could
+//! have kept running) are bounded by [`Config::max_preemptions`], which
+//! keeps the search space polynomial while still catching almost all
+//! real interleaving bugs (most require only 1–2 preemptions).
+//!
+//! Failing schedules are reported as a dotted decision string (e.g.
+//! `"0.1.0.2"`) that can be fed back through [`Config::replay`] to
+//! deterministically reproduce the failure under a debugger.
+//!
+//! Mechanics: model threads are real OS threads, but a baton protocol
+//! (mutex + condvar) guarantees exactly one runs at a time, so every
+//! modeled operation is sequentially consistent and the decision trace
+//! fully determines the execution.  Threads blocked on a modeled mutex
+//! are parked in the scheduler (not spinning) and re-enabled on unlock;
+//! a state with live threads and nothing runnable is reported as a
+//! deadlock.  After a failure the scheduler aborts the run: every
+//! thread panics with a private sentinel at its next scheduling point,
+//! and those unwinds are swallowed so the report carries only the
+//! original failure.
+
+use std::any::Any;
+use std::cell::RefCell;
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, LockResult, Once, PoisonError, TryLockError};
+use std::sync::{Mutex as StdMutex, MutexGuard as StdMutexGuard};
+
+const SC: Ordering = Ordering::SeqCst;
+
+// ---------------------------------------------------------------------------
+// Scheduler core
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum ThreadState {
+    Runnable,
+    /// Parked until the resource (mutex address or join token) signals.
+    Blocked(u64),
+    Finished,
+}
+
+/// One decision point: how many options were enabled and which index
+/// was taken.  The option list itself is recomputed deterministically
+/// on replay, so only the counts need to be stored.
+#[derive(Clone, Copy, Debug)]
+struct Choice {
+    options: usize,
+    chosen: usize,
+}
+
+#[derive(Default)]
+struct State {
+    threads: Vec<ThreadState>,
+    current: usize,
+    /// Decision prefix to replay; past its end the DFS default (index
+    /// 0) is taken.
+    replay: Vec<usize>,
+    /// Decisions actually taken this run.
+    trace: Vec<Choice>,
+    preemptions: usize,
+    abort: bool,
+    failure: Option<String>,
+    done: bool,
+    /// Model threads not yet finished.
+    live: usize,
+}
+
+struct Scheduler {
+    mu: StdMutex<State>,
+    cv: Condvar,
+    max_preemptions: usize,
+}
+
+/// Sentinel panic payload used to tear threads down after a failure.
+struct ModelAbort;
+
+fn model_abort() -> ! {
+    std::panic::panic_any(ModelAbort)
+}
+
+#[derive(Clone)]
+struct Ctx {
+    sched: Arc<Scheduler>,
+    id: usize,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<Ctx>> = const { RefCell::new(None) };
+}
+
+fn current_ctx() -> Option<Ctx> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+/// Scheduling hook for modeled primitives: a no-op outside a model run
+/// (so the modeled types degrade to plain sequentially-consistent std
+/// types), a yield point inside one.
+fn hook() {
+    if let Some(ctx) = current_ctx() {
+        ctx.sched.yield_point(ctx.id);
+    }
+}
+
+/// Join tokens live at the top of the resource space; mutex resources
+/// are heap addresses and cannot reach them.
+fn join_resource(id: usize) -> u64 {
+    u64::MAX - id as u64
+}
+
+impl Scheduler {
+    fn lock_state(&self) -> StdMutexGuard<'_, State> {
+        self.mu.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Pick the next thread to run.  `voluntary` marks switches forced
+    /// by the current thread blocking or finishing; only a switch away
+    /// from a still-runnable thread counts against the preemption
+    /// budget.  Must be called with the state lock held by the thread
+    /// that currently owns the baton.
+    fn pick_next(&self, s: &mut State, voluntary: bool) {
+        let enabled: Vec<usize> = s
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| matches!(t, ThreadState::Runnable))
+            .map(|(i, _)| i)
+            .collect();
+        if enabled.is_empty() {
+            if s.live == 0 {
+                s.done = true;
+            } else if s.failure.is_none() {
+                let blocked = s
+                    .threads
+                    .iter()
+                    .filter(|t| matches!(t, ThreadState::Blocked(_)))
+                    .count();
+                s.failure = Some(format!(
+                    "deadlock: {blocked} thread(s) blocked with none runnable"
+                ));
+                s.abort = true;
+            } else {
+                s.abort = true;
+            }
+            return;
+        }
+        let me = s.current;
+        let me_runnable = enabled.contains(&me);
+        let options = if !voluntary && me_runnable && s.preemptions >= self.max_preemptions {
+            vec![me]
+        } else {
+            enabled
+        };
+        let pos = s.trace.len();
+        let chosen = if pos < s.replay.len() {
+            s.replay[pos].min(options.len() - 1)
+        } else {
+            0
+        };
+        s.trace.push(Choice { options: options.len(), chosen });
+        let next = options[chosen];
+        if !voluntary && me_runnable && next != me {
+            s.preemptions += 1;
+        }
+        s.current = next;
+    }
+
+    /// Offer a context switch, then wait until scheduled again.
+    fn yield_point(&self, me: usize) {
+        let mut s = self.lock_state();
+        if s.abort {
+            drop(s);
+            model_abort();
+        }
+        debug_assert_eq!(s.current, me, "yield from a thread without the baton");
+        self.pick_next(&mut s, false);
+        self.cv.notify_all();
+        while !s.abort && s.current != me {
+            s = self.cv.wait(s).unwrap_or_else(|e| e.into_inner());
+        }
+        if s.abort {
+            drop(s);
+            model_abort();
+        }
+    }
+
+    /// Park the current thread on `resource` until another thread
+    /// signals it (mutex unlock / thread exit) and the scheduler picks
+    /// it again.
+    fn block_on(&self, me: usize, resource: u64) {
+        let mut s = self.lock_state();
+        if s.abort {
+            drop(s);
+            model_abort();
+        }
+        s.threads[me] = ThreadState::Blocked(resource);
+        self.pick_next(&mut s, true);
+        self.cv.notify_all();
+        while !s.abort && s.current != me {
+            s = self.cv.wait(s).unwrap_or_else(|e| e.into_inner());
+        }
+        if s.abort {
+            drop(s);
+            model_abort();
+        }
+    }
+
+    /// Re-enable every thread parked on `resource`.
+    fn unblock(&self, resource: u64) {
+        let mut s = self.lock_state();
+        for t in s.threads.iter_mut() {
+            if *t == ThreadState::Blocked(resource) {
+                *t = ThreadState::Runnable;
+            }
+        }
+    }
+
+    fn record_failure(&self, msg: String) {
+        let mut s = self.lock_state();
+        if s.failure.is_none() {
+            s.failure = Some(msg);
+        }
+        s.abort = true;
+        self.cv.notify_all();
+    }
+
+    fn finish_thread(&self, id: usize) {
+        let mut s = self.lock_state();
+        s.threads[id] = ThreadState::Finished;
+        s.live -= 1;
+        let join = join_resource(id);
+        for t in s.threads.iter_mut() {
+            if *t == ThreadState::Blocked(join) {
+                *t = ThreadState::Runnable;
+            }
+        }
+        if s.live == 0 {
+            s.done = true;
+        } else if s.current == id && !s.abort {
+            self.pick_next(&mut s, true);
+        }
+        self.cv.notify_all();
+    }
+}
+
+fn payload_to_string(p: &(dyn Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "model thread panicked".to_string()
+    }
+}
+
+/// Silence the default panic hook for threads inside a model run: the
+/// DFS *expects* to drive assertions into failures and the teardown
+/// sentinel unwinds through every live thread, neither of which should
+/// spam stderr.  Panics outside a model run keep the default hook.
+fn install_quiet_hook() {
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let in_model = CTX.with(|c| c.borrow().is_some());
+            if !in_model {
+                prev(info);
+            }
+        }));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Thread spawn/join inside a model run
+// ---------------------------------------------------------------------------
+
+/// Handle to a model thread created by [`spawn`].
+pub struct JoinHandle<T> {
+    id: usize,
+    os: Option<std::thread::JoinHandle<Option<T>>>,
+    sched: Arc<Scheduler>,
+}
+
+impl<T> fmt::Debug for JoinHandle<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("JoinHandle").field("id", &self.id).finish_non_exhaustive()
+    }
+}
+
+impl<T> JoinHandle<T> {
+    /// Wait (through the scheduler) for the thread to finish.  Returns
+    /// `None` if the thread was torn down by an abort before producing
+    /// a value.
+    pub fn join(mut self) -> Option<T> {
+        let ctx = current_ctx().expect("interleave::JoinHandle::join outside a model run");
+        loop {
+            let finished = {
+                let s = self.sched.lock_state();
+                if s.abort {
+                    drop(s);
+                    model_abort();
+                }
+                matches!(s.threads[self.id], ThreadState::Finished)
+            };
+            if finished {
+                break;
+            }
+            self.sched.block_on(ctx.id, join_resource(self.id));
+        }
+        let os = self.os.take().expect("join called twice");
+        os.join().ok().flatten()
+    }
+}
+
+/// Spawn a model thread.  Panics if called outside [`explore`].
+pub fn spawn<T, F>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    let ctx = current_ctx().expect("interleave::spawn outside a model run");
+    let sched = Arc::clone(&ctx.sched);
+    let id = {
+        let mut s = sched.lock_state();
+        s.threads.push(ThreadState::Runnable);
+        s.live += 1;
+        s.threads.len() - 1
+    };
+    let child_sched = Arc::clone(&sched);
+    let os = std::thread::spawn(move || {
+        CTX.with(|c| {
+            *c.borrow_mut() = Some(Ctx { sched: Arc::clone(&child_sched), id });
+        });
+        // Do not run a single instruction of the closure until the
+        // scheduler hands this thread the baton.
+        {
+            let mut s = child_sched.lock_state();
+            while !s.abort && s.current != id {
+                s = child_sched.cv.wait(s).unwrap_or_else(|e| e.into_inner());
+            }
+            let aborted = s.abort;
+            drop(s);
+            if aborted {
+                child_sched.finish_thread(id);
+                return None;
+            }
+        }
+        let out = match catch_unwind(AssertUnwindSafe(f)) {
+            Ok(v) => Some(v),
+            Err(payload) => {
+                if !payload.is::<ModelAbort>() {
+                    child_sched.record_failure(payload_to_string(&*payload));
+                }
+                None
+            }
+        };
+        child_sched.finish_thread(id);
+        out
+    });
+    // Scheduling point right after the spawn so the child can be
+    // interleaved against the rest of the parent immediately.
+    sched.yield_point(ctx.id);
+    JoinHandle { id, os: Some(os), sched }
+}
+
+// ---------------------------------------------------------------------------
+// Exploration driver
+// ---------------------------------------------------------------------------
+
+/// Exploration parameters.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Budget of involuntary context switches per schedule.  2 catches
+    /// the overwhelming majority of real interleaving bugs; raise it in
+    /// the weekly full-depth sweep.
+    pub max_preemptions: usize,
+    /// Stop after this many schedules (0 = exhaustive).  A truncated
+    /// run is reported via [`Report::truncated`].
+    pub max_schedules: usize,
+    /// Replay a single failing schedule (the dotted string from
+    /// [`Failure::schedule`]) instead of exploring.
+    pub replay: Option<String>,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { max_preemptions: 2, max_schedules: 0, replay: None }
+    }
+}
+
+/// A schedule that violated an invariant, with its replay seed.
+#[derive(Clone, Debug)]
+pub struct Failure {
+    /// Dotted decision string; feed through [`Config::replay`].
+    pub schedule: String,
+    /// Panic message of the failed assertion (or deadlock report).
+    pub message: String,
+}
+
+/// Outcome of an [`explore`] call.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Number of distinct schedules executed.
+    pub schedules: usize,
+    /// True when `max_schedules` stopped the search before exhaustion.
+    pub truncated: bool,
+    /// First failing schedule, if any.
+    pub failure: Option<Failure>,
+}
+
+impl Report {
+    pub fn ok(&self) -> bool {
+        self.failure.is_none()
+    }
+}
+
+fn format_schedule(trace: &[Choice]) -> String {
+    let parts: Vec<String> = trace.iter().map(|c| c.chosen.to_string()).collect();
+    parts.join(".")
+}
+
+fn parse_schedule(s: &str) -> Vec<usize> {
+    s.split('.').filter_map(|p| p.trim().parse::<usize>().ok()).collect()
+}
+
+/// Flip the deepest decision that still has an untried alternative;
+/// `None` when the space is exhausted.
+fn next_prefix(trace: &[Choice]) -> Option<Vec<usize>> {
+    let mut i = trace.len();
+    while i > 0 {
+        i -= 1;
+        if trace[i].chosen + 1 < trace[i].options {
+            let mut prefix: Vec<usize> = trace[..i].iter().map(|c| c.chosen).collect();
+            prefix.push(trace[i].chosen + 1);
+            return Some(prefix);
+        }
+    }
+    None
+}
+
+struct RunOutcome {
+    trace: Vec<Choice>,
+    failure: Option<String>,
+}
+
+fn run_once(sched: &Arc<Scheduler>, body: &Arc<dyn Fn() + Send + Sync>) -> RunOutcome {
+    {
+        let mut s = sched.lock_state();
+        s.threads.clear();
+        s.threads.push(ThreadState::Runnable);
+        s.current = 0;
+        s.trace.clear();
+        s.preemptions = 0;
+        s.abort = false;
+        s.failure = None;
+        s.done = false;
+        s.live = 1;
+    }
+    let root_sched = Arc::clone(sched);
+    let body = Arc::clone(body);
+    let root = std::thread::spawn(move || {
+        CTX.with(|c| {
+            *c.borrow_mut() = Some(Ctx { sched: Arc::clone(&root_sched), id: 0 });
+        });
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| body())) {
+            if !payload.is::<ModelAbort>() {
+                root_sched.record_failure(payload_to_string(&*payload));
+            }
+        }
+        root_sched.finish_thread(0);
+    });
+    {
+        let mut s = sched.lock_state();
+        while !s.done {
+            s = sched.cv.wait(s).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+    let _ = root.join();
+    let s = sched.lock_state();
+    RunOutcome { trace: s.trace.clone(), failure: s.failure.clone() }
+}
+
+/// Run `body` under every schedule within the configured bounds.  The
+/// body is re-executed from scratch per schedule, so it must build its
+/// own state and spawn its threads via [`spawn`].
+pub fn explore<F>(cfg: Config, body: F) -> Report
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    install_quiet_hook();
+    let sched = Arc::new(Scheduler {
+        mu: StdMutex::new(State::default()),
+        cv: Condvar::new(),
+        max_preemptions: cfg.max_preemptions,
+    });
+    let body: Arc<dyn Fn() + Send + Sync> = Arc::new(body);
+    let mut prefix: Vec<usize> = match &cfg.replay {
+        Some(s) => parse_schedule(s),
+        None => Vec::new(),
+    };
+    let mut schedules = 0usize;
+    loop {
+        {
+            let mut s = sched.lock_state();
+            s.replay = std::mem::take(&mut prefix);
+        }
+        let out = run_once(&sched, &body);
+        schedules += 1;
+        if let Some(message) = out.failure {
+            return Report {
+                schedules,
+                truncated: false,
+                failure: Some(Failure { schedule: format_schedule(&out.trace), message }),
+            };
+        }
+        if cfg.replay.is_some() {
+            // Replay mode: a single deterministic run.
+            return Report { schedules, truncated: false, failure: None };
+        }
+        match next_prefix(&out.trace) {
+            Some(p) => prefix = p,
+            None => return Report { schedules, truncated: false, failure: None },
+        }
+        if cfg.max_schedules != 0 && schedules >= cfg.max_schedules {
+            return Report { schedules, truncated: true, failure: None };
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Modeled primitives
+// ---------------------------------------------------------------------------
+
+macro_rules! modeled_int_atomic {
+    ($name:ident, $std:ty, $ty:ty) => {
+        /// Modeled atomic: every operation is a scheduling point inside
+        /// a model run, a plain SeqCst std operation outside one.
+        #[derive(Debug, Default)]
+        pub struct $name {
+            v: $std,
+        }
+
+        impl $name {
+            pub const fn new(v: $ty) -> Self {
+                Self { v: <$std>::new(v) }
+            }
+
+            pub fn load(&self, _o: Ordering) -> $ty {
+                hook();
+                self.v.load(SC)
+            }
+
+            pub fn store(&self, val: $ty, _o: Ordering) {
+                hook();
+                self.v.store(val, SC)
+            }
+
+            pub fn swap(&self, val: $ty, _o: Ordering) -> $ty {
+                hook();
+                self.v.swap(val, SC)
+            }
+
+            pub fn fetch_add(&self, val: $ty, _o: Ordering) -> $ty {
+                hook();
+                self.v.fetch_add(val, SC)
+            }
+
+            pub fn fetch_sub(&self, val: $ty, _o: Ordering) -> $ty {
+                hook();
+                self.v.fetch_sub(val, SC)
+            }
+
+            pub fn fetch_max(&self, val: $ty, _o: Ordering) -> $ty {
+                hook();
+                self.v.fetch_max(val, SC)
+            }
+
+            pub fn fetch_min(&self, val: $ty, _o: Ordering) -> $ty {
+                hook();
+                self.v.fetch_min(val, SC)
+            }
+
+            pub fn compare_exchange(
+                &self,
+                current: $ty,
+                new: $ty,
+                _s: Ordering,
+                _f: Ordering,
+            ) -> Result<$ty, $ty> {
+                hook();
+                self.v.compare_exchange(current, new, SC, SC)
+            }
+
+            pub fn compare_exchange_weak(
+                &self,
+                current: $ty,
+                new: $ty,
+                _s: Ordering,
+                _f: Ordering,
+            ) -> Result<$ty, $ty> {
+                hook();
+                // Strong inner CAS: spurious failure would make replay
+                // nondeterministic.
+                self.v.compare_exchange(current, new, SC, SC)
+            }
+
+            pub fn into_inner(self) -> $ty {
+                self.v.into_inner()
+            }
+        }
+    };
+}
+
+modeled_int_atomic!(AtomicU32, std::sync::atomic::AtomicU32, u32);
+modeled_int_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+modeled_int_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+
+/// Modeled atomic bool; see the integer atomics above.
+#[derive(Debug, Default)]
+pub struct AtomicBool {
+    v: std::sync::atomic::AtomicBool,
+}
+
+impl AtomicBool {
+    pub const fn new(v: bool) -> Self {
+        Self { v: std::sync::atomic::AtomicBool::new(v) }
+    }
+
+    pub fn load(&self, _o: Ordering) -> bool {
+        hook();
+        self.v.load(SC)
+    }
+
+    pub fn store(&self, val: bool, _o: Ordering) {
+        hook();
+        self.v.store(val, SC)
+    }
+
+    pub fn swap(&self, val: bool, _o: Ordering) -> bool {
+        hook();
+        self.v.swap(val, SC)
+    }
+
+    pub fn compare_exchange(
+        &self,
+        current: bool,
+        new: bool,
+        _s: Ordering,
+        _f: Ordering,
+    ) -> Result<bool, bool> {
+        hook();
+        self.v.compare_exchange(current, new, SC, SC)
+    }
+}
+
+/// Modeled mutex.  Lock contention parks the thread in the scheduler
+/// (no spinning); unlock re-enables the waiters and yields so the
+/// explorer can hand the lock to any of them.
+#[derive(Debug, Default)]
+pub struct Mutex<T: ?Sized> {
+    inner: StdMutex<T>,
+}
+
+impl<T> Mutex<T> {
+    pub const fn new(t: T) -> Self {
+        Mutex { inner: StdMutex::new(t) }
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+}
+
+impl<T: ?Sized> Mutex<T> {
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        let resource = self as *const Mutex<T> as *const () as u64;
+        match current_ctx() {
+            None => match self.inner.lock() {
+                Ok(g) => Ok(MutexGuard { inner: Some(g), resource }),
+                Err(p) => Err(PoisonError::new(MutexGuard {
+                    inner: Some(p.into_inner()),
+                    resource,
+                })),
+            },
+            Some(ctx) => loop {
+                ctx.sched.yield_point(ctx.id);
+                match self.inner.try_lock() {
+                    Ok(g) => return Ok(MutexGuard { inner: Some(g), resource }),
+                    Err(TryLockError::WouldBlock) => ctx.sched.block_on(ctx.id, resource),
+                    Err(TryLockError::Poisoned(p)) => {
+                        return Err(PoisonError::new(MutexGuard {
+                            inner: Some(p.into_inner()),
+                            resource,
+                        }))
+                    }
+                }
+            },
+        }
+    }
+}
+
+/// Guard for [`Mutex`]; releasing it wakes scheduler-parked waiters.
+pub struct MutexGuard<'a, T: ?Sized + 'a> {
+    inner: Option<StdMutexGuard<'a, T>>,
+    resource: u64,
+}
+
+impl<T: ?Sized + fmt::Debug> fmt::Debug for MutexGuard<'_, T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&**self, f)
+    }
+}
+
+impl<T: ?Sized> Deref for MutexGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard already released")
+    }
+}
+
+impl<T: ?Sized> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard already released")
+    }
+}
+
+impl<T: ?Sized> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        drop(self.inner.take());
+        if let Some(ctx) = current_ctx() {
+            ctx.sched.unblock(self.resource);
+            // Yielding would panic on an aborted run; during an unwind
+            // that would escalate to a process abort, so skip it — the
+            // teardown no longer needs scheduling fairness.
+            if !std::thread::panicking() {
+                ctx.sched.yield_point(ctx.id);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Self-tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passthrough_outside_model_run() {
+        let a = AtomicU64::new(1);
+        assert_eq!(a.fetch_add(2, Ordering::SeqCst), 1);
+        assert_eq!(a.load(Ordering::SeqCst), 3);
+        let m = Mutex::new(5u32);
+        *m.lock().unwrap() += 1;
+        assert_eq!(*m.lock().unwrap(), 6);
+    }
+
+    #[test]
+    fn zero_preemptions_is_a_single_schedule() {
+        let report = explore(
+            Config { max_preemptions: 0, ..Config::default() },
+            || {
+                let a = Arc::new(AtomicU64::new(0));
+                let t = {
+                    let a = Arc::clone(&a);
+                    spawn(move || a.fetch_add(1, SC))
+                };
+                a.fetch_add(1, SC);
+                let _ = t.join();
+                assert_eq!(a.load(SC), 2);
+            },
+        );
+        assert!(report.ok(), "unexpected failure: {:?}", report.failure);
+        assert_eq!(report.schedules, 1);
+    }
+
+    #[test]
+    fn atomic_increment_is_clean_across_schedules() {
+        let report = explore(Config::default(), || {
+            let a = Arc::new(AtomicU64::new(0));
+            let t = {
+                let a = Arc::clone(&a);
+                spawn(move || a.fetch_add(1, SC))
+            };
+            a.fetch_add(1, SC);
+            let _ = t.join();
+            assert_eq!(a.load(SC), 2);
+        });
+        assert!(report.ok(), "unexpected failure: {:?}", report.failure);
+        assert!(report.schedules > 1, "explorer did not branch");
+    }
+
+    #[test]
+    fn torn_read_modify_write_is_caught_and_replays() {
+        // Classic lost update: load-then-store instead of fetch_add.
+        let body = |a: Arc<AtomicU64>| {
+            let v = a.load(SC);
+            a.store(v + 1, SC);
+        };
+        let run = move || {
+            let a = Arc::new(AtomicU64::new(0));
+            let t = {
+                let a = Arc::clone(&a);
+                spawn(move || body(a))
+            };
+            body(Arc::clone(&a));
+            let _ = t.join();
+            assert_eq!(a.load(SC), 2, "lost update");
+        };
+        let report = explore(Config::default(), run);
+        let failure = report.failure.expect("model checker missed the lost update");
+        assert!(failure.message.contains("lost update"), "wrong failure: {failure:?}");
+        assert!(!failure.schedule.is_empty());
+
+        // The reported seed must reproduce the same failure in one run.
+        let replayed = explore(
+            Config { replay: Some(failure.schedule.clone()), ..Config::default() },
+            run,
+        );
+        assert_eq!(replayed.schedules, 1);
+        let rf = replayed.failure.expect("replay seed did not reproduce");
+        assert!(rf.message.contains("lost update"));
+    }
+
+    #[test]
+    fn mutex_protects_read_modify_write() {
+        let report = explore(Config::default(), || {
+            let m = Arc::new(Mutex::new(0u64));
+            let t = {
+                let m = Arc::clone(&m);
+                spawn(move || {
+                    let mut g = m.lock().unwrap();
+                    *g += 1;
+                })
+            };
+            {
+                let mut g = m.lock().unwrap();
+                *g += 1;
+            }
+            let _ = t.join();
+            assert_eq!(*m.lock().unwrap(), 2);
+        });
+        assert!(report.ok(), "mutex run failed: {:?}", report.failure);
+        assert!(report.schedules > 1);
+    }
+
+    #[test]
+    fn max_schedules_truncates() {
+        let report = explore(
+            Config { max_schedules: 2, ..Config::default() },
+            || {
+                let a = Arc::new(AtomicU64::new(0));
+                let t = {
+                    let a = Arc::clone(&a);
+                    spawn(move || a.fetch_add(1, SC))
+                };
+                a.fetch_add(1, SC);
+                let _ = t.join();
+            },
+        );
+        assert!(report.ok());
+        assert!(report.truncated);
+        assert_eq!(report.schedules, 2);
+    }
+}

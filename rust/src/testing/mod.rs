@@ -3,6 +3,11 @@
 //! a seeded PRNG plus greedy shrinking) and shared test fixtures — the
 //! sample manifest and the seeded workload-mix builder ([`MixSpec`])
 //! the fusion, overload and fleet integration tests all draw from.
+//!
+//! [`interleave`] is the model-checking half: the deterministic
+//! exhaustive-interleaving scheduler behind `--features model-check`.
+
+pub mod interleave;
 
 use std::time::Duration;
 
@@ -168,6 +173,12 @@ pub struct RangeU32 {
     pub hi: u32,
 }
 
+impl std::fmt::Debug for RangeU32 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RangeU32").finish_non_exhaustive()
+    }
+}
+
 impl Strategy for RangeU32 {
     type Value = u32;
 
@@ -189,6 +200,12 @@ impl Strategy for RangeU32 {
 
 /// Uniform choice from a fixed slice.
 pub struct OneOf<T: Clone>(pub Vec<T>);
+
+impl<T: Clone> std::fmt::Debug for OneOf<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_tuple("OneOf").field(&self.0.len()).finish()
+    }
+}
 
 impl<T: Clone> Strategy for OneOf<T> {
     type Value = T;

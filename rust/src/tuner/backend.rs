@@ -62,6 +62,12 @@ pub struct SimBackend {
     static_eff: std::collections::HashMap<u64, f64>,
 }
 
+impl std::fmt::Debug for SimBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SimBackend").finish_non_exhaustive()
+    }
+}
+
 impl SimBackend {
     pub fn new(profile: DeviceProfile) -> Self {
         // Pre-filter device legality once: CLTune does the same with its

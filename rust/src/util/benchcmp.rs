@@ -396,6 +396,34 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> BenchDiff {
         diff.lines.push(format!(
             "simd runtime: detected tier {rt_tier}, packing {rt_pack}"
         ));
+        // Capability drift between the baseline's runner and this one is
+        // the usual benign explanation for a floor miss, so echo any
+        // mismatch loudly — warning lines only, never a gated
+        // regression: CI legs intentionally run scalar-only and
+        // pack-off runners against the committed baseline.
+        let base_tier = baseline
+            .get("simd_tier")
+            .ok()
+            .and_then(|t| t.as_str().ok())
+            .unwrap_or("?");
+        let base_pack = match baseline.get("pack_enabled").ok().map(|b| b.as_bool()) {
+            Some(Ok(true)) => "on",
+            Some(Ok(false)) => "off",
+            _ => "?",
+        };
+        if base_tier != "?" && rt_tier != "?" && base_tier != rt_tier {
+            diff.lines.push(format!(
+                "WARNING: simd tier mismatch — baseline was recorded on tier \
+                 {base_tier}, this runner detected {rt_tier}; speedup floors \
+                 may not be comparable"
+            ));
+        }
+        if base_pack != "?" && rt_pack != "?" && base_pack != rt_pack {
+            diff.lines.push(format!(
+                "WARNING: packing mismatch — baseline was recorded with \
+                 packing {base_pack}, this runner has packing {rt_pack}"
+            ));
+        }
         if let Ok(arr) = simd.get("shapes").and_then(|s| s.as_arr()) {
             for row in arr {
                 let (Ok(shape), Some(speedup)) = (
@@ -1042,6 +1070,48 @@ mod tests {
         assert_eq!(diff.compared, 2);
         assert!(diff.passes(), "{:?}", diff.regressions);
         assert!(diff.lines.iter().any(|l| l.contains("packing off")));
+    }
+
+    #[test]
+    fn capability_mismatch_warns_without_gating() {
+        // Baseline recorded on an avx2 runner with packing on; current
+        // run detected sse2 with packing off — both mismatches are
+        // echoed as warning lines but never become regressions.
+        let base = Json::parse(
+            r#"{"bench":"hotpath","simd_tier":"avx2","pack_enabled":true,
+                "simd":{"speedup_floor":0.5,"fused_speedup_floor":0.5}}"#,
+        )
+        .unwrap();
+        let cur = Json::parse(
+            r#"{"bench":"hotpath","simd_tier":"sse2","pack_enabled":false,
+                "simd":{"tier":"sse2","variant":"h_sse2_t4x4_u2",
+                "shapes":[{"shape":"128^3(m==mb)","speedup":1.1}],
+                "fused_speedup_vs_scalar":1.0}}"#,
+        )
+        .unwrap();
+        let diff = compare(&base, &cur, 0.15);
+        assert!(diff.passes(), "{:?}", diff.regressions);
+        assert!(diff
+            .lines
+            .iter()
+            .any(|l| l.contains("WARNING: simd tier mismatch")
+                && l.contains("avx2")
+                && l.contains("sse2")));
+        assert!(diff
+            .lines
+            .iter()
+            .any(|l| l.contains("WARNING: packing mismatch")));
+        // Matching capabilities (or a baseline without the fields — the
+        // provisional/pre-simd case): no warnings.
+        let same = compare(&cur, &cur, 0.15);
+        assert!(!same.lines.iter().any(|l| l.contains("WARNING")));
+        let old_base = Json::parse(
+            r#"{"bench":"hotpath","simd":{"speedup_floor":0.5,
+                "fused_speedup_floor":0.5}}"#,
+        )
+        .unwrap();
+        let diff = compare(&old_base, &cur, 0.15);
+        assert!(!diff.lines.iter().any(|l| l.contains("mismatch")));
     }
 
     #[test]

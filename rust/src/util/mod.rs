@@ -7,4 +7,5 @@ pub mod csv;
 pub mod json;
 pub mod prng;
 pub mod stats;
+pub mod sync;
 pub mod table;

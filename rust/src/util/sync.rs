@@ -1,0 +1,148 @@
+//! Synchronization facade for the lock-free serving path.
+//!
+//! Every concurrency primitive used by the coordinator's lock-free
+//! structures (`PolicyHandle` epoch swap, `CircuitBreaker` CAS machine,
+//! admission reserve/rollback, depth gauges, fault-plan flags) is
+//! imported from this module instead of `std::sync` directly.  In a
+//! normal build the re-exports below are zero-cost aliases for the std
+//! types — no wrapper, no indirection, nothing to optimize away.
+//!
+//! Under `--features model-check` the same names resolve to the modeled
+//! primitives in [`crate::testing::interleave`]: each atomic operation
+//! and mutex acquisition becomes a scheduling point for a deterministic
+//! exhaustive-interleaving scheduler (DFS over thread schedules with
+//! bounded preemptions and seeded replay).  `rust/tests/model_check.rs`
+//! uses that mode to verify the serving-path invariants across *every*
+//! interleaving within the preemption bound, instead of the handful a
+//! stress test happens to hit.
+//!
+//! Memory-ordering note: the modeled atomics execute all operations
+//! sequentially consistent, so the model checker explores thread
+//! interleavings but not weak-memory reorderings.  `Ordering` arguments
+//! are accepted and ignored in that mode; ThreadSanitizer in CI covers
+//! the ordering-annotation side.
+
+#[cfg(not(feature = "model-check"))]
+pub use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize};
+#[cfg(not(feature = "model-check"))]
+pub use std::sync::{Mutex, MutexGuard};
+
+#[cfg(feature = "model-check")]
+pub use crate::testing::interleave::{
+    AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Mutex, MutexGuard,
+};
+
+// Ordering is always the std enum: the passthrough build forwards it
+// verbatim and the modeled build accepts-and-ignores it (see above).
+pub use std::sync::atomic::Ordering;
+
+/// Capacity-bounded reservation gauge backing per-class admission.
+///
+/// The admission fast path must refuse work without taking a lock: a
+/// reservation is a single `fetch_add`, and an over-capacity result is
+/// rolled back with a `fetch_sub` before the caller observes it.  The
+/// invariant the model checker holds this type to (`model_check.rs`,
+/// invariant 3) is that `outstanding` never exceeds `capacity` *after*
+/// a completed `try_reserve`, and that every refused reservation rolls
+/// its increment back — transient overshoot mid-call is inherent to the
+/// reserve/rollback protocol and is bounded by the number of racing
+/// callers.
+#[derive(Debug)]
+pub struct AdmissionGauge {
+    outstanding: AtomicUsize,
+    capacity: usize,
+}
+
+impl AdmissionGauge {
+    pub fn new(capacity: usize) -> Self {
+        AdmissionGauge { outstanding: AtomicUsize::new(0), capacity }
+    }
+
+    /// Queue bound this gauge admits up to.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Current reservation count (may transiently overshoot `capacity`
+    /// while a racing `try_reserve` rolls back).
+    pub fn outstanding(&self) -> usize {
+        self.outstanding.load(Ordering::Acquire)
+    }
+
+    /// Whether the gauge is at (or beyond) its bound right now.
+    pub fn is_full(&self) -> bool {
+        self.outstanding() >= self.capacity
+    }
+
+    /// Reserve one slot.  Returns the pre-reservation depth on success;
+    /// `None` (after rolling the increment back) when the gauge is at
+    /// capacity.
+    pub fn try_reserve(&self) -> Option<usize> {
+        let prev = self.outstanding.fetch_add(1, Ordering::AcqRel);
+        if prev >= self.capacity {
+            self.outstanding.fetch_sub(1, Ordering::AcqRel);
+            return None;
+        }
+        Some(prev)
+    }
+
+    /// Release one previously reserved slot.
+    pub fn release(&self) {
+        self.outstanding.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn gauge_reserves_up_to_capacity() {
+        let g = AdmissionGauge::new(2);
+        assert_eq!(g.try_reserve(), Some(0));
+        assert_eq!(g.try_reserve(), Some(1));
+        assert!(g.is_full());
+        assert_eq!(g.try_reserve(), None);
+        assert_eq!(g.outstanding(), 2, "refusal must roll back");
+        g.release();
+        assert_eq!(g.try_reserve(), Some(1));
+    }
+
+    #[test]
+    fn gauge_zero_capacity_refuses_everything() {
+        let g = AdmissionGauge::new(0);
+        assert!(g.is_full());
+        assert_eq!(g.try_reserve(), None);
+        assert_eq!(g.outstanding(), 0);
+    }
+
+    #[test]
+    fn gauge_concurrent_reservations_respect_bound() {
+        let g = Arc::new(AdmissionGauge::new(8));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let g = Arc::clone(&g);
+            handles.push(std::thread::spawn(move || {
+                let mut held = 0usize;
+                for _ in 0..1000 {
+                    if g.try_reserve().is_some() {
+                        assert!(g.outstanding() <= 8 + 4, "beyond transient bound");
+                        held += 1;
+                        if held > 1 {
+                            g.release();
+                            held -= 1;
+                        }
+                    }
+                }
+                for _ in 0..held {
+                    g.release();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(g.outstanding(), 0);
+    }
+}

@@ -1,0 +1,48 @@
+//! The repo's own tree must be lint-clean: the source-level convention
+//! lint (`adaptd lint`) runs here as a plain test so `cargo test` is a
+//! superset of the CI lint gate.  The rule-by-rule positive fixtures
+//! (each rule fires, with file:line) live in `analysis::lint`'s unit
+//! tests; this integration test is the clean-tree half.
+
+use std::path::Path;
+
+use adaptlib::analysis::lint;
+
+#[test]
+fn repo_tree_has_zero_lint_findings() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let findings = lint::lint_paths(root, lint::default_paths()).unwrap();
+    let rendered: Vec<String> = findings.iter().map(ToString::to_string).collect();
+    assert!(
+        findings.is_empty(),
+        "`adaptd lint` must be clean on the repo tree; findings:\n{}",
+        rendered.join("\n")
+    );
+}
+
+#[test]
+fn lint_scans_a_nontrivial_tree() {
+    // Guard against the scanner silently skipping everything (wrong
+    // root, renamed directories): the crate has well over 50 sources.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let mut count = 0usize;
+    for rel in lint::default_paths() {
+        let dir = root.join(rel);
+        assert!(dir.is_dir(), "expected {} to exist", dir.display());
+        count += walk(&dir);
+    }
+    assert!(count >= 50, "only {count} .rs files found — scan misconfigured?");
+}
+
+fn walk(dir: &Path) -> usize {
+    let mut n = 0;
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.is_dir() {
+            n += walk(&path);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            n += 1;
+        }
+    }
+    n
+}

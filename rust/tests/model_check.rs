@@ -1,0 +1,270 @@
+//! Model-checked concurrency invariants (`--features model-check`).
+//!
+//! Under the `model-check` feature every atomic and mutex in
+//! `util::sync` resolves to the modeled types in `testing::interleave`,
+//! so the production code under test here — [`PolicyHandle`],
+//! [`CircuitBreaker`], [`AdmissionGauge`] — runs under a deterministic
+//! scheduler that enumerates thread interleavings (DFS over schedules,
+//! bounded involuntary preemptions, seeded replay).
+//!
+//! Four invariants from the serving path:
+//!
+//! 1. policy swaps never publish a torn (epoch, policy) pair;
+//! 2. breaker generation == opens + half_opens + closes at quiescence;
+//! 3. an admission reservation never exceeds capacity, and failed
+//!    reservations roll back completely;
+//! 4. depth gauges return to zero once all in-flight work retires.
+//!
+//! Plus the detector's own acceptance check: a seeded mutant of the
+//! breaker's transition CAS (load-then-store) is caught, and its replay
+//! seed reproduces the failure deterministically.
+//!
+//! CI: the quick leg runs this suite at the default preemption bound;
+//! the weekly leg raises `MODEL_CHECK_PREEMPTIONS`.  On failure the
+//! panic message carries the dotted replay schedule.
+
+#![cfg(feature = "model-check")]
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use adaptlib::config::{KernelConfig, Triple};
+use adaptlib::coordinator::{
+    BreakerAdmit, BreakerConfig, CircuitBreaker, PolicyHandle, SelectPolicy,
+};
+use adaptlib::testing::interleave::{self, Config, Report};
+use adaptlib::util::sync::{AdmissionGauge, AtomicU64, AtomicUsize, Ordering};
+
+/// Exploration bounds; the weekly full-depth CI leg raises these via
+/// the environment.
+fn cfg() -> Config {
+    let mut c = Config::default();
+    if let Ok(v) = std::env::var("MODEL_CHECK_PREEMPTIONS") {
+        if let Ok(n) = v.parse() {
+            c.max_preemptions = n;
+        }
+    }
+    if let Ok(v) = std::env::var("MODEL_CHECK_MAX_SCHEDULES") {
+        if let Ok(n) = v.parse() {
+            c.max_schedules = n;
+        }
+    }
+    c
+}
+
+/// Fail with the replay seed in the message so CI logs (and the weekly
+/// artifact) carry everything needed for a deterministic reproduction.
+fn assert_ok(what: &str, report: &Report) {
+    if let Some(f) = &report.failure {
+        panic!(
+            "{what}: invariant violated after {} schedule(s)\n  replay seed: {}\n  {}",
+            report.schedules, f.schedule, f.message
+        );
+    }
+    assert!(report.schedules > 0, "{what}: explored zero schedules");
+}
+
+/// A policy whose name encodes the epoch it was published under, so a
+/// torn (epoch, policy) pair is directly observable.
+struct TaggedPolicy {
+    name: String,
+}
+
+impl TaggedPolicy {
+    fn arc(epoch: u64) -> Arc<dyn SelectPolicy> {
+        Arc::new(TaggedPolicy { name: format!("p{epoch}") })
+    }
+}
+
+impl SelectPolicy for TaggedPolicy {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn select(&self, _t: Triple) -> KernelConfig {
+        KernelConfig::Direct(Default::default())
+    }
+}
+
+#[test]
+fn policy_swap_never_publishes_torn_pairs() {
+    let report = interleave::explore(cfg(), || {
+        let handle = Arc::new(PolicyHandle::new(TaggedPolicy::arc(0)));
+        let writer = {
+            let handle = Arc::clone(&handle);
+            interleave::spawn(move || {
+                assert_eq!(handle.swap(TaggedPolicy::arc(1)), 1);
+                assert_eq!(handle.swap(TaggedPolicy::arc(2)), 2);
+            })
+        };
+        // Reader races the two swaps: every snapshot/refresh must see a
+        // matched (epoch, policy) pair and a non-decreasing epoch.
+        let mut cached = handle.snapshot();
+        let mut last = cached.epoch;
+        assert_eq!(cached.policy.name(), format!("p{}", cached.epoch));
+        for _ in 0..2 {
+            handle.refresh(&mut cached);
+            assert_eq!(cached.policy.name(), format!("p{}", cached.epoch));
+            assert!(cached.epoch >= last, "epoch went backwards");
+            last = cached.epoch;
+        }
+        let _ = writer.join();
+        handle.refresh(&mut cached);
+        assert_eq!(cached.epoch, 2);
+        assert_eq!(cached.policy.name(), "p2");
+    });
+    assert_ok("policy swap", &report);
+}
+
+/// A breaker that trips on the first failure, probes immediately
+/// (zero cooldown keeps schedules time-independent), and closes after
+/// one probe success — so two threads race full trip/recover cycles.
+fn fast_breaker() -> BreakerConfig {
+    BreakerConfig {
+        enabled: true,
+        consecutive_failures: 1,
+        window: 8,
+        error_rate: 1.0,
+        min_observations: 8,
+        cooldown: Duration::ZERO,
+        probe_budget: 1,
+        probe_successes: 1,
+    }
+}
+
+#[test]
+fn breaker_generation_equals_transition_counters() {
+    let report = interleave::explore(cfg(), || {
+        let breaker = Arc::new(CircuitBreaker::new(fast_breaker()));
+        let other = {
+            let breaker = Arc::clone(&breaker);
+            interleave::spawn(move || {
+                breaker.record_failure();
+                if breaker.admit() == BreakerAdmit::Probe {
+                    breaker.record_probe(true);
+                }
+            })
+        };
+        breaker.record_failure();
+        if breaker.admit() == BreakerAdmit::Probe {
+            breaker.record_probe(true);
+        }
+        let _ = other.join();
+        // Every state transition goes through exactly one CAS that
+        // bumps the generation, paired with exactly one of the three
+        // transition counters — racing threads must not double-count.
+        assert_eq!(
+            breaker.generation(),
+            breaker.opens() + breaker.half_opens() + breaker.closes(),
+            "generation out of step with open/half-open/close counters"
+        );
+    });
+    assert_ok("breaker transitions", &report);
+}
+
+#[test]
+fn admission_reservation_never_exceeds_capacity_and_rolls_back() {
+    let report = interleave::explore(cfg(), || {
+        let gauge = Arc::new(AdmissionGauge::new(1));
+        let holders = Arc::new(AtomicUsize::new(0));
+        let contender = {
+            let gauge = Arc::clone(&gauge);
+            let holders = Arc::clone(&holders);
+            interleave::spawn(move || try_once(&gauge, &holders))
+        };
+        try_once(&gauge, &holders);
+        let _ = contender.join();
+        // Failed reservations rolled back, successful ones released:
+        // nothing may remain outstanding.
+        assert_eq!(gauge.outstanding(), 0, "reservation leaked");
+        assert!(!gauge.is_full(), "empty gauge reports full");
+    });
+    assert_ok("admission gauge", &report);
+}
+
+/// One reserve → critical-section → release round trip, counting how
+/// many holders are inside the capacity-1 region at once.
+fn try_once(gauge: &AdmissionGauge, holders: &AtomicUsize) {
+    let Some(prev) = gauge.try_reserve() else { return };
+    assert!(prev < gauge.capacity(), "reservation admitted over capacity");
+    let inside = holders.fetch_add(1, Ordering::SeqCst);
+    assert_eq!(inside, 0, "two holders inside a capacity-1 gauge");
+    holders.fetch_sub(1, Ordering::SeqCst);
+    gauge.release();
+}
+
+#[test]
+fn depth_gauges_return_to_zero_after_drain() {
+    let report = interleave::explore(cfg(), || {
+        // The submit/worker pairing from the server: admission reserve +
+        // shard depth bump on submit, depth drop + release on retire.
+        let gauge = Arc::new(AdmissionGauge::new(2));
+        let depth = Arc::new(AtomicUsize::new(0));
+        let worker = {
+            let gauge = Arc::clone(&gauge);
+            let depth = Arc::clone(&depth);
+            interleave::spawn(move || round_trip(&gauge, &depth))
+        };
+        round_trip(&gauge, &depth);
+        let _ = worker.join();
+        assert_eq!(depth.load(Ordering::SeqCst), 0, "depth gauge did not drain");
+        assert_eq!(gauge.outstanding(), 0, "admission gauge did not drain");
+    });
+    assert_ok("depth gauges", &report);
+}
+
+fn round_trip(gauge: &AdmissionGauge, depth: &AtomicUsize) {
+    if gauge.try_reserve().is_some() {
+        depth.fetch_add(1, Ordering::SeqCst);
+        depth.fetch_sub(1, Ordering::SeqCst);
+        gauge.release();
+    }
+}
+
+// ---------------------------------------------------------------- mutants
+
+/// Mutant of the breaker's transition CAS: bump the packed generation
+/// with a load-then-store instead of `compare_exchange`.  Two racing
+/// transitions can then observe the same generation and collapse into
+/// one — exactly the lost-update the CAS exists to prevent.
+fn breaker_cas_mutant() {
+    let packed = Arc::new(AtomicU64::new(0));
+    let racer = {
+        let packed = Arc::clone(&packed);
+        interleave::spawn(move || {
+            let seen = packed.load(Ordering::SeqCst);
+            packed.store(seen + 1, Ordering::SeqCst);
+        })
+    };
+    let seen = packed.load(Ordering::SeqCst);
+    packed.store(seen + 1, Ordering::SeqCst);
+    let _ = racer.join();
+    assert_eq!(
+        packed.load(Ordering::SeqCst),
+        2,
+        "generation lost an update"
+    );
+}
+
+#[test]
+fn breaker_cas_mutant_is_caught_and_replays() {
+    // The detector's acceptance check: exploration must find the lost
+    // update...
+    let report = interleave::explore(cfg(), breaker_cas_mutant);
+    let failure = report
+        .failure
+        .as_ref()
+        .expect("model checker missed the load-then-store mutant");
+    assert!(!failure.schedule.is_empty(), "failure carries no replay seed");
+    assert!(failure.message.contains("lost an update"), "{}", failure.message);
+
+    // ...and the recorded seed must reproduce it deterministically, in
+    // exactly one schedule.
+    let replay = interleave::explore(
+        Config { replay: Some(failure.schedule.clone()), ..Config::default() },
+        breaker_cas_mutant,
+    );
+    let replayed = replay.failure.expect("replay seed did not reproduce the failure");
+    assert_eq!(replay.schedules, 1);
+    assert!(replayed.message.contains("lost an update"));
+}
