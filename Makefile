@@ -4,7 +4,7 @@
 ARTIFACTS := rust/artifacts
 ROSTER    := full
 
-.PHONY: artifacts test lint model-check bench drift hetero overload chaos baseline clean-artifacts
+.PHONY: artifacts test lint model-check bench drift hetero overload chaos serve soak baseline clean-artifacts
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../$(ARTIFACTS) --roster $(ROSTER)
@@ -40,10 +40,19 @@ overload:
 chaos:
 	cd rust && cargo run --release --bin adaptd -- chaos --requests 24 --waves 2
 
+# Network front door on the default loopback port (runs until killed).
+serve:
+	cd rust && cargo run --release --bin adaptd -- serve --listen 127.0.0.1:7070
+
+# The long loopback soak the weekly CI leg runs (needs artifacts).
+soak:
+	cd rust && cargo test --release --test net_integration -- --ignored --nocapture
+
 # Refresh the committed bench-gate baseline from a fresh full run on the
 # reference machine, then remove the "provisional" marker by hand (see
 # README.md) to arm the CI regression gate.  The hetero accuracy floors,
-# the overload p99 floor, and the chaos availability floor are refreshed
+# the overload p99 floors (in-process + network arm), and the chaos
+# availability floor are refreshed
 # from fresh BENCH_hetero.json / BENCH_overload.json / BENCH_chaos.json
 # files when they exist, otherwise carried over from the old baseline —
 # a raw copy of the hotpath JSON would drop them and hard-fail those
@@ -60,7 +69,8 @@ floors = {d['device']: d['accuracy'] for d in (old.get('hetero') or {}).get('dev
 floors.update({d['device']: d['accuracy'] for d in het.get('devices', []) if d.get('accuracy') is not None}); \
 floors and new.update(hetero={'devices': [{'device': k, 'accuracy': v} for k, v in sorted(floors.items())]}); \
 p99 = ov.get('p99_1x_ms') or (old.get('overload') or {}).get('p99_1x_ms'); \
-p99 and new.update(overload={'p99_1x_ms': p99}); \
+netp99 = ov.get('net_p99_1x_ms') or (old.get('overload') or {}).get('net_p99_1x_ms'); \
+p99 and new.update(overload={k: v for k, v in [('p99_1x_ms', p99), ('net_p99_1x_ms', netp99)] if v}); \
 avail = ch.get('chaos_availability_min') or (old.get('chaos') or {}).get('availability_floor'); \
 avail and new.update(chaos={'availability_floor': min(avail, 0.99)}); \
 json.dump(new, open('rust/BENCH_baseline.json', 'w'), separators=(',', ':'))"

@@ -20,6 +20,7 @@ use adaptlib::device::microkernel;
 use adaptlib::engine::{ExecutionEngine, RuntimeEngine};
 use adaptlib::experiments::e2e;
 use adaptlib::harness::{black_box, BenchConfig, Suite};
+use adaptlib::net::wire;
 use adaptlib::runtime::{
     pad, ArtifactId, ArtifactKind, BatchScratch, GemmInput, GemmRuntime,
     PjrtBackend, ScratchBuffers,
@@ -584,6 +585,53 @@ fn bench_pjrt(
          ({alloc_simd_packed} allocations over {iters} requests)"
     );
 
+    // Wire decode: the network front door's request hot path.  A frame
+    // decodes by offset-scanning into borrowed views (no parse tree),
+    // and the borrowed operand bytes land in caller-pooled buffers —
+    // once those pools reach steady-state capacity, decoding a request
+    // off the wire performs exactly zero heap allocations, the same
+    // contract the pooled/fused execution legs are held to.
+    suite.section("wire decode (network front door request path)");
+    let net_req = GemmRequest {
+        m: m2,
+        n: n2,
+        k: k2,
+        a: a2.clone(),
+        b: b2.clone(),
+        c: c2.clone(),
+        alpha: 1.0,
+        beta: 0.0,
+    };
+    let mut net_frame = Vec::new();
+    wire::encode_request_into(&mut net_frame, 7, 0, "xgemm_128", &net_req)
+        .expect("encode 100^3 request");
+    let net_body = &net_frame[4..];
+    let (mut pa, mut pb, mut pc) = (Vec::new(), Vec::new(), Vec::new());
+    let decode_step = |pa: &mut Vec<f32>, pb: &mut Vec<f32>, pc: &mut Vec<f32>| {
+        match wire::decode(net_body).expect("valid frame") {
+            wire::Frame::Request(rf) => {
+                rf.a.copy_into(pa);
+                rf.b.copy_into(pb);
+                rf.c.copy_into(pc);
+                black_box((rf.request_id, rf.hint.len(), pa[0], pb[0], pc[0]));
+            }
+            wire::Frame::Response(_) | wire::Frame::Status(_) => {
+                unreachable!("request frame was encoded above")
+            }
+        }
+    };
+    suite.bench("net_decode:100^3", || decode_step(&mut pa, &mut pb, &mut pc));
+    let alloc_net = allocs_total(iters, || decode_step(&mut pa, &mut pb, &mut pc));
+    println!(
+        "allocs/request net decode over {iters} requests: {:.1}",
+        alloc_net as f64 / iters as f64,
+    );
+    assert_eq!(
+        alloc_net, 0,
+        "wire request decode must not allocate at steady state \
+         ({alloc_net} allocations over {iters} requests)"
+    );
+
     extra.push((
         "allocs_per_request",
         Json::obj(vec![
@@ -603,6 +651,7 @@ fn bench_pjrt(
                 "fused_pooled",
                 Json::num(alloc_fused as f64 / (batch_iters * 16) as f64),
             ),
+            ("net_decode", Json::num(alloc_net as f64 / iters as f64)),
             ("iters", Json::num(iters as f64)),
         ]),
     ));

@@ -13,10 +13,10 @@
 //!    allocation spellings (`vec!`, `format!`, `.to_string(`, …).
 //!    Individual sites are waived with [`ALLOW_ALLOC_TAG`].
 //! 4. **wildcard-match** — a `match` that names one of the protocol
-//!    enums (`KernelConfig`, `Admission`, `RequestOutcome`) in an arm
-//!    must not also have a bare `_` arm; adding a variant must be a
-//!    compile error, not a silent fallthrough.  Waived per-arm with
-//!    [`ALLOW_WILDCARD_TAG`].
+//!    enums (`KernelConfig`, `Admission`, `RequestOutcome`,
+//!    `WireStatus`) in an arm must not also have a bare `_` arm; adding
+//!    a variant must be a compile error, not a silent fallthrough.
+//!    Waived per-arm with [`ALLOW_WILDCARD_TAG`].
 //!
 //! The scanner first scrubs comments and string/char literals out of the
 //! source (preserving line structure), so rule tokens inside literals —
@@ -60,7 +60,8 @@ const ALLOC_TOKENS: &[&str] = &[
 ];
 
 /// Enums whose matches must stay exhaustive (rule 4).
-const TARGET_ENUMS: &[&str] = &["KernelConfig::", "Admission::", "RequestOutcome::"];
+const TARGET_ENUMS: &[&str] =
+    &["KernelConfig::", "Admission::", "RequestOutcome::", "WireStatus::"];
 
 /// Which rule a finding came from.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]

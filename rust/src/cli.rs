@@ -160,6 +160,18 @@ pub fn usage(
     out
 }
 
+/// Parse a socket address option (`host:port`) through the typed error
+/// path: an invalid value yields a [`CliError::InvalidValue`] whose
+/// message spells out the expected form instead of panicking.
+pub fn parse_addr(name: &str, value: &str) -> Result<std::net::SocketAddr, CliError> {
+    value.parse().map_err(|_| {
+        CliError::InvalidValue(
+            name.to_string(),
+            format!("{value} — expected <ip>:<port>, e.g. 127.0.0.1:7070"),
+        )
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -226,6 +238,23 @@ mod tests {
             .unwrap()
             .get_parse("device", 0);
         assert!(bad.is_err());
+    }
+
+    #[test]
+    fn parse_addr_typed_errors() {
+        let ok = parse_addr("listen", "127.0.0.1:7070").unwrap();
+        assert_eq!(ok.port(), 7070);
+        let any_port = parse_addr("listen", "0.0.0.0:0").unwrap();
+        assert_eq!(any_port.port(), 0);
+        match parse_addr("listen", "localhost") {
+            Err(CliError::InvalidValue(name, v)) => {
+                assert_eq!(name, "listen");
+                assert!(v.contains("expected <ip>:<port>"), "message lists the form: {v}");
+            }
+            other => panic!("expected InvalidValue, got {other:?}"),
+        }
+        assert!(parse_addr("listen", "1.2.3.4:notaport").is_err());
+        assert!(parse_addr("listen", "").is_err());
     }
 
     #[test]

@@ -65,6 +65,15 @@ pub struct OverloadConfig {
     /// per-request dispatch cost drops — occupancy is reported per load
     /// point.
     pub max_fuse: usize,
+    /// Run the loopback network arm: the same paced sweep through the
+    /// framed front door (`net::NetServer`), with latencies measured at
+    /// the client (framing + decode included) and shed accounting
+    /// reconciled between wire status frames and `ServeStats`.
+    pub net: bool,
+    /// Per-connection in-flight cap for the network arm; 0 auto-sizes
+    /// to the sweep length so socket-level `Busy` refusals never mask
+    /// the fleet-admission behaviour under test.
+    pub net_inflight: usize,
 }
 
 impl Default for OverloadConfig {
@@ -78,6 +87,8 @@ impl Default for OverloadConfig {
             pressure_threshold_ms: 0.0,
             pressure_slowdown: 1.25,
             max_fuse: 16,
+            net: true,
+            net_inflight: 0,
         }
     }
 }
@@ -131,6 +142,51 @@ impl LoadPoint {
     }
 }
 
+/// One (load factor) measurement of the loopback network arm.  Latency
+/// is measured at the client — encode, socket, decode and the fleet all
+/// included — and there is no DTPR column: the wire response carries
+/// the payload, not the serving artifact's name.
+#[derive(Debug, Clone)]
+pub struct NetPoint {
+    /// Offered load relative to calibrated capacity.
+    pub load: f64,
+    pub offered: usize,
+    /// Requests answered with a response payload.
+    pub served: usize,
+    /// Typed `Shed`/`Quarantined` status frames observed at the client.
+    pub shed: usize,
+    /// Any other non-payload answer (expired, drained, error, …).
+    pub errors: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Peak outstanding requests in the fleet during the paced phase.
+    pub peak_depth: usize,
+}
+
+impl NetPoint {
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.offered as f64
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("load", Json::num(self.load)),
+            ("offered", Json::num(self.offered as f64)),
+            ("served", Json::num(self.served as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("shed_rate", Json::num(self.shed_rate())),
+            ("errors", Json::num(self.errors as f64)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p99_ms", Json::num(self.p99_ms)),
+            ("peak_depth", Json::num(self.peak_depth as f64)),
+        ])
+    }
+}
+
 /// The full overload run: both arms over the load sweep.
 pub struct OverloadReport {
     pub cfg: OverloadConfig,
@@ -145,6 +201,9 @@ pub struct OverloadReport {
     pub policy: Vec<LoadPoint>,
     /// Pressure-pick arm, one point per load factor.
     pub pressure: Vec<LoadPoint>,
+    /// Loopback network arm, one point per load factor (empty when
+    /// `cfg.net` is false).
+    pub net: Vec<NetPoint>,
     pub wall: Duration,
 }
 
@@ -223,6 +282,28 @@ impl OverloadReport {
             .unwrap_or(0)
     }
 
+    fn net_point_at(&self, load: f64) -> Option<&NetPoint> {
+        self.net.iter().find(|p| (p.load - load).abs() < 1e-9)
+    }
+
+    /// Shed rate at 1x over the wire — the network analogue of
+    /// [`OverloadReport::shed_rate_1x`]; gated to zero by CI.
+    pub fn net_shed_rate_1x(&self) -> f64 {
+        self.net_point_at(1.0).map_or(0.0, |p| p.shed_rate())
+    }
+
+    /// Client-observed p99 at 1x load (framing + decode + serve) — the
+    /// committed network floor gate metric.
+    pub fn net_p99_1x_ms(&self) -> f64 {
+        self.net_point_at(1.0).map_or(0.0, |p| p.p99_ms)
+    }
+
+    /// The fleet stayed within its queue bound at every network-arm
+    /// load point (the wire cannot bypass bounded admission).
+    pub fn net_depth_bounded(&self) -> bool {
+        self.net.iter().all(|p| p.peak_depth <= self.cfg.queue_capacity)
+    }
+
     pub fn to_json(&self) -> Json {
         let arm = |pressure: bool, points: &[LoadPoint]| {
             Json::obj(vec![
@@ -230,7 +311,7 @@ impl OverloadReport {
                 ("points", Json::Arr(points.iter().map(|p| p.to_json()).collect())),
             ])
         };
-        Json::obj(vec![
+        let mut json = Json::obj(vec![
             ("bench", Json::str("overload")),
             ("requests_per_point", Json::num(self.cfg.requests as f64)),
             ("shards", Json::num(self.cfg.shards as f64)),
@@ -263,7 +344,25 @@ impl OverloadReport {
             ("dtpr_1x_policy", Json::num(self.dtpr_1x_policy())),
             ("dtpr_1x_pressure", Json::num(self.dtpr_1x_pressure())),
             ("peak_depth_max", Json::num(self.peak_depth_max() as f64)),
-        ])
+        ]);
+        if self.net.is_empty() {
+            return json;
+        }
+        // The network-arm keys are present exactly when the arm ran, so
+        // a `--no-net` run cannot green-light the network gate with
+        // vacuous zeros (bench-compare skips absent keys).
+        let Json::Obj(ref mut fields) = json else { unreachable!("obj built above") };
+        fields.insert(
+            "net_arm".to_string(),
+            Json::obj(vec![(
+                "points",
+                Json::Arr(self.net.iter().map(|p| p.to_json()).collect()),
+            )]),
+        );
+        fields.insert("net_shed_rate_1x".to_string(), Json::num(self.net_shed_rate_1x()));
+        fields.insert("net_p99_1x_ms".to_string(), Json::num(self.net_p99_1x_ms()));
+        fields.insert("net_depth_bounded".to_string(), Json::Bool(self.net_depth_bounded()));
+        json
     }
 
     pub fn render(&self) -> String {
@@ -295,6 +394,29 @@ impl OverloadReport {
                     p.occupancy_mean,
                 ));
             }
+        }
+        if !self.net.is_empty() {
+            s.push_str("--- network arm (loopback, client-observed) ---\n");
+            for p in self.net.iter() {
+                s.push_str(&format!(
+                    "{:>4.1}x: served {:4}/{:<4} shed {:5.1}%  p50 {:7.2}ms  \
+                     p99 {:7.2}ms  peak depth {:3}  errors {:3}\n",
+                    p.load,
+                    p.served,
+                    p.offered,
+                    100.0 * p.shed_rate(),
+                    p.p50_ms,
+                    p.p99_ms,
+                    p.peak_depth,
+                    p.errors,
+                ));
+            }
+            s.push_str(&format!(
+                "net: shed rate at 1x {:.1}%  p99 at 1x {:.2}ms  depth {}\n",
+                100.0 * self.net_shed_rate_1x(),
+                self.net_p99_1x_ms(),
+                if self.net_depth_bounded() { "bounded" } else { "EXCEEDED" },
+            ));
         }
         s.push_str(&format!(
             "p99 at {:.0}x: policy {:.2}ms vs pressure {:.2}ms ({})  |  \
@@ -504,6 +626,164 @@ fn run_point(
     })
 }
 
+/// One loopback network load point: fresh fleet + front door, a warm
+/// pass over the wire, then the same paced open-loop arrival process
+/// driven by a split client — the sender paces frames while the
+/// receiver collects replies concurrently.  Latency is client-observed
+/// (encode + socket + decode + serve).  Shed accounting is reconciled
+/// three ways: wire status frames seen by the client, the front door's
+/// own counters, and the fleet's `ServeStats`.
+#[allow(clippy::too_many_arguments)]
+fn run_net_point(
+    artifacts: &Path,
+    manifest: &Manifest,
+    mix: &[Triple],
+    scfg: ServerConfig,
+    max_inflight: usize,
+    load: f64,
+    offered_rps: f64,
+    n_requests: usize,
+    seed: u64,
+) -> Result<NetPoint> {
+    use crate::net::{ClientReply, NetClient, NetConfig, NetServer, WireStatus};
+
+    let server = GemmServer::start(artifacts, host_policy(manifest)?, scfg)?;
+    let net = NetServer::bind(
+        "127.0.0.1:0".parse().expect("loopback addr"),
+        server.handle(),
+        NetConfig { max_inflight, ..NetConfig::default() },
+    )?;
+    let handle = server.handle();
+    let mut client = NetClient::connect(net.local_addr())?;
+
+    // Warm pass over the wire, strictly sequential (send one, await its
+    // answer): depth never exceeds 1, so warming cannot shed and the
+    // cumulative counters stay clean for the reconciliation below.
+    let warm = request_stream_from(mix, 2 * mix.len() * scfg.shards, seed ^ 0xAAAA);
+    for (i, req) in warm.into_iter().enumerate() {
+        let reply = client
+            .call(i as u64, 0, "", &req)?
+            .context("connection closed during warm pass")?;
+        anyhow::ensure!(
+            matches!(reply, ClientReply::Served { .. }),
+            "warm request answered with {reply:?}"
+        );
+    }
+    handle.reset_peak_depth();
+
+    // Paced open-loop phase.  Replies on one connection come back in
+    // request order, so the receiver pairs the k-th reply with the k-th
+    // send timestamp handed over the channel.
+    let requests = request_stream_from(mix, n_requests, seed);
+    let (sender_half, mut receiver_half) = client.split()?;
+    let (stamp_tx, stamp_rx) = std::sync::mpsc::channel::<(u64, Instant)>();
+
+    let collector = std::thread::spawn(move || -> Result<(Vec<f64>, usize, usize, usize)> {
+        let mut lat = Vec::new();
+        let (mut served, mut shed, mut errors) = (0usize, 0usize, 0usize);
+        for _ in 0..n_requests {
+            let reply = receiver_half
+                .recv()
+                .map_err(|e| anyhow!("receive failed mid-sweep: {e}"))?
+                .context("connection closed mid-sweep")?;
+            let (sent_id, sent_at) =
+                stamp_rx.recv().map_err(|_| anyhow!("sender died mid-sweep"))?;
+            anyhow::ensure!(
+                reply.id() == sent_id,
+                "reply order diverged: got id {}, expected {sent_id}",
+                reply.id()
+            );
+            match reply {
+                ClientReply::Served { .. } => {
+                    served += 1;
+                    lat.push(sent_at.elapsed().as_secs_f64());
+                }
+                ClientReply::Status { status, .. } => match status {
+                    // Quarantine refusals count as sheds, mirroring the
+                    // in-process arm's submitter accounting.
+                    WireStatus::Shed | WireStatus::Quarantined => shed += 1,
+                    WireStatus::Rejected
+                    | WireStatus::Expired
+                    | WireStatus::Drained
+                    | WireStatus::Busy
+                    | WireStatus::Error
+                    | WireStatus::Malformed => errors += 1,
+                },
+            }
+        }
+        Ok((lat, served, shed, errors))
+    });
+
+    let mut sender_half = sender_half;
+    let t0 = Instant::now();
+    for (i, req) in requests.into_iter().enumerate() {
+        let target = t0 + Duration::from_secs_f64(i as f64 / offered_rps);
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let sent_at = Instant::now();
+        // Stamp before the write so the reply can never race its stamp.
+        stamp_tx
+            .send((i as u64, sent_at))
+            .map_err(|_| anyhow!("collector died mid-sweep"))?;
+        sender_half.send(i as u64, 0, "", &req)?;
+    }
+    drop(stamp_tx);
+
+    let (lat, served, shed, errors) = collector
+        .join()
+        .map_err(|_| anyhow!("collector thread panicked"))??;
+    sender_half.finish()?;
+
+    let net_stats = net.shutdown();
+    drop(handle);
+    let stats = server.shutdown().context("network point served nothing")?;
+    let peak_depth = stats.peak_depth();
+    anyhow::ensure!(
+        peak_depth <= scfg.queue_capacity,
+        "peak queue depth {peak_depth} exceeded the bound {} over the wire",
+        scfg.queue_capacity
+    );
+    // Wire-vs-fleet reconciliation: every shed status frame the client
+    // saw must have a fleet-side refusal behind it, and the front
+    // door's own ledger must agree with both.
+    anyhow::ensure!(
+        stats.shed() + stats.quarantined() == shed as u64,
+        "shed accounting diverged: fleet {}+{} vs wire {shed}",
+        stats.shed(),
+        stats.quarantined()
+    );
+    anyhow::ensure!(
+        net_stats.shed + net_stats.quarantined == shed as u64,
+        "front-door ledger diverged: {}+{} vs wire {shed}",
+        net_stats.shed,
+        net_stats.quarantined
+    );
+    anyhow::ensure!(
+        net_stats.served as usize >= served,
+        "front door reports fewer served ({}) than the client saw ({served})",
+        net_stats.served
+    );
+    let pct = |xs: &[f64], p: f64| {
+        if xs.is_empty() {
+            0.0
+        } else {
+            percentile(xs, p) * 1e3
+        }
+    };
+    Ok(NetPoint {
+        load,
+        offered: n_requests,
+        served,
+        shed,
+        errors,
+        p50_ms: pct(&lat, 50.0),
+        p99_ms: pct(&lat, 99.0),
+        peak_depth,
+    })
+}
+
 /// Run the full overload experiment.
 pub fn run(artifacts: &Path, cfg: OverloadConfig) -> Result<OverloadReport> {
     anyhow::ensure!(cfg.requests > 0, "overload needs requests > 0");
@@ -573,6 +853,34 @@ pub fn run(artifacts: &Path, cfg: OverloadConfig) -> Result<OverloadReport> {
         }
     }
 
+    // -------------------------------------------- the network arm
+    // Same mix, same pacing, through the framed loopback front door
+    // (policy selection only — the wire adds framing/decode on top of
+    // the path the policy arm measured).
+    let mut net_points = Vec::new();
+    if cfg.net {
+        let max_inflight = if cfg.net_inflight == 0 {
+            // Auto: never let the socket cap interfere — the arm
+            // measures fleet admission, not connection backpressure.
+            cfg.requests.max(2 * mix.len() * cfg.shards)
+        } else {
+            cfg.net_inflight
+        };
+        for (fi, &load) in cfg.load_factors.iter().enumerate() {
+            net_points.push(run_net_point(
+                artifacts,
+                &manifest,
+                &mix,
+                base,
+                max_inflight,
+                load,
+                offered_1x * load,
+                cfg.requests,
+                0x2E70 + fi as u64,
+            )?);
+        }
+    }
+
     Ok(OverloadReport {
         cfg,
         mix,
@@ -581,6 +889,7 @@ pub fn run(artifacts: &Path, cfg: OverloadConfig) -> Result<OverloadReport> {
         pressure_threshold: threshold,
         policy: policy_points,
         pressure: pressure_points,
+        net: net_points,
         wall: t_run.elapsed(),
     })
 }
@@ -605,6 +914,19 @@ mod tests {
         }
     }
 
+    fn net_point(load: f64, shed: usize, peak: usize, p99: f64) -> NetPoint {
+        NetPoint {
+            load,
+            offered: 100,
+            served: 100 - shed,
+            shed,
+            errors: 0,
+            p50_ms: p99 / 2.0,
+            p99_ms: p99,
+            peak_depth: peak,
+        }
+    }
+
     fn report() -> OverloadReport {
         OverloadReport {
             cfg: OverloadConfig::default(),
@@ -621,6 +943,11 @@ mod tests {
                 point(1.0, 0, 3, 8.5, 0.8),
                 point(2.0, 8, 24, 70.0, 0.75),
                 point(4.0, 50, 24, 95.0, 0.7),
+            ],
+            net: vec![
+                net_point(1.0, 0, 4, 9.5),
+                net_point(2.0, 12, 24, 95.0),
+                net_point(4.0, 60, 24, 130.0),
             ],
             wall: Duration::from_secs(2),
         }
@@ -663,5 +990,46 @@ mod tests {
         let pts = arms[1].get("points").unwrap().as_arr().unwrap();
         assert_eq!(pts.len(), 3);
         assert!(pts[1].get("shed_rate").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn net_arm_metrics_read_the_1x_point() {
+        let r = report();
+        assert_eq!(r.net_shed_rate_1x(), 0.0);
+        assert_eq!(r.net_p99_1x_ms(), 9.5);
+        assert!(r.net_depth_bounded());
+        let mut bad = report();
+        bad.net[0].shed = 5;
+        assert!((bad.net_shed_rate_1x() - 0.05).abs() < 1e-12);
+        bad.net[2].peak_depth = 999;
+        assert!(!bad.net_depth_bounded());
+        let rendered = bad.render();
+        assert!(rendered.contains("network arm"), "{rendered}");
+        assert!(rendered.contains("EXCEEDED"), "{rendered}");
+    }
+
+    #[test]
+    fn net_arm_json_keys_present_iff_the_arm_ran() {
+        let json = report().to_json();
+        assert_eq!(json.get("net_shed_rate_1x").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(json.get("net_p99_1x_ms").unwrap().as_f64().unwrap(), 9.5);
+        assert!(json.get("net_depth_bounded").unwrap().as_bool().unwrap());
+        let pts = json
+            .get("net_arm")
+            .unwrap()
+            .get("points")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        assert_eq!(pts.len(), 3);
+        assert!(pts[2].get("shed_rate").unwrap().as_f64().unwrap() > 0.0);
+
+        let mut skipped = report();
+        skipped.net.clear();
+        let json = skipped.to_json();
+        assert!(json.get("net_shed_rate_1x").is_none());
+        assert!(json.get("net_arm").is_none());
+        // The in-process gate keys are unaffected by skipping the arm.
+        assert_eq!(json.get("p99_1x_ms").unwrap().as_f64().unwrap(), 8.0);
     }
 }

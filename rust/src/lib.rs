@@ -39,6 +39,7 @@ pub mod engine;
 pub mod experiments;
 pub mod harness;
 pub mod metrics;
+pub mod net;
 pub mod runtime;
 pub mod testing;
 pub mod tuner;

@@ -9,6 +9,7 @@
 //! adaptd codegen   --device ... --dataset ... --model hMax-L1 --lang <rust|cpp>
 //! adaptd e2e       --artifacts artifacts --requests 400
 //! adaptd serve-demo --artifacts artifacts --requests 200 --policy <model|default>
+//! adaptd serve     --artifacts artifacts --listen 127.0.0.1:7070 --policy default
 //! adaptd drift     --artifacts artifacts --requests 32 --waves 3
 //! adaptd hetero    --artifacts artifacts --devices host-cpu,p100,mali --waves 2
 //! adaptd overload  --artifacts artifacts --requests 120 --capacity 24 --load 1,2,4
@@ -64,6 +65,9 @@ fn opt_specs() -> Vec<OptSpec> {
         opt("chaos-devices", "chaos: fleet device classes (csv, sim-only)", Some("p100,mali")),
         opt("rate", "chaos: transient per-dispatch failure probability", Some("0.25")),
         opt("seed", "chaos: fault-plan seed", Some("3298844397")),
+        opt("listen", "serve: listen address (<ip>:<port>)", Some("127.0.0.1:7070")),
+        opt("inflight", "serve: per-connection in-flight request cap", Some("32")),
+        opt("duration", "serve: seconds before graceful drain (0 = run until killed)", Some("0")),
         opt("baseline", "bench-compare: committed baseline JSON", None),
         opt("current", "bench-compare: freshly produced bench JSON", None),
         opt("tolerance", "bench-compare: relative regression tolerance", Some("0.15")),
@@ -76,6 +80,7 @@ fn switch_specs() -> Vec<(&'static str, &'static str)> {
         ("quiet", "suppress progress output"),
         ("verbose", "print per-step progress"),
         ("require-recovered", "bench-compare: fail unless current reports recovered=true"),
+        ("no-net", "overload: skip the loopback network arm"),
     ]
 }
 
@@ -87,6 +92,7 @@ fn commands() -> Vec<(&'static str, &'static str)> {
         ("codegen", "emit the if-then-else selector source for a model"),
         ("e2e", "end-to-end adaptive serving on the CPU PJRT runtime"),
         ("serve-demo", "serve a request stream under one policy"),
+        ("serve", "listen on a socket: the framed network front door"),
         ("drift", "workload-shift experiment: online adaptation vs frozen model"),
         ("hetero", "heterogeneous fleet: mixed workload across device classes"),
         ("overload", "offered-load sweep: admission, shedding, pressure picks"),
@@ -139,6 +145,7 @@ fn run(argv: &[String]) -> Result<()> {
         "codegen" => cmd_codegen(&args),
         "e2e" => cmd_e2e(&args),
         "serve-demo" => cmd_serve_demo(&args),
+        "serve" => cmd_serve(&args),
         "drift" => cmd_drift(&args),
         "hetero" => cmd_hetero(&args),
         "overload" => cmd_overload(&args),
@@ -335,6 +342,62 @@ fn cmd_serve_demo(args: &cli::Args) -> Result<()> {
     Ok(())
 }
 
+/// The network front door: bind the framed TCP listener in front of a
+/// `GemmServer` and serve until `--duration` elapses (then drain
+/// gracefully) or forever when it is 0.
+fn cmd_serve(args: &cli::Args) -> Result<()> {
+    use adaptlib::coordinator::{
+        DefaultPolicy, GemmServer, ModelPolicy, SelectPolicy, ServerConfig,
+    };
+    use adaptlib::net::{NetConfig, NetServer};
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let listen = cli::parse_addr("listen", args.get_or("listen", "127.0.0.1:7070"))?;
+    let max_inflight: usize = args.get_parse("inflight", 32)?;
+    let duration_secs: u64 = args.get_parse("duration", 0)?;
+    let reps: usize = args.get_parse("reps", 1)?;
+    let policy: Box<dyn SelectPolicy> = match args.get_or("policy", "model") {
+        "model" => {
+            let m = experiments::e2e::offline_train(&artifacts, reps)?;
+            Box::new(ModelPolicy::new(&m.tree, &m.classes))
+        }
+        "default" => {
+            let backend = adaptlib::runtime::PjrtBackend::open(&artifacts)?;
+            Box::new(
+                DefaultPolicy::from_roster(&backend.roster_configs())
+                    .context("roster lacks a kernel kind")?,
+            )
+        }
+        other => bail!("unknown policy '{other}'"),
+    };
+    let cfg = ServerConfig {
+        max_fuse: args.get_parse("max-fuse", 16)?,
+        queue_capacity: args.get_parse("capacity", 24)?,
+        ..ServerConfig::with_shards(args.get_parse("shards", 1)?)
+    };
+    let server = GemmServer::start(&artifacts, policy, cfg)?;
+    let net = NetServer::bind(
+        listen,
+        server.handle(),
+        NetConfig { max_inflight, ..NetConfig::default() },
+    )
+    .with_context(|| format!("binding {listen}"))?;
+    println!("listening on {}", net.local_addr());
+    if duration_secs == 0 {
+        // Run until killed; park cheaply and surface counters hourly.
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+            eprintln!("{:?}", net.stats());
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_secs(duration_secs));
+    let net_stats = net.shutdown();
+    println!("front door: {net_stats:?}");
+    if let Some(stats) = server.shutdown() {
+        println!("{}", stats.report());
+    }
+    Ok(())
+}
+
 /// Workload-shift experiment: frozen model vs the online adaptation loop
 /// on the same shifted traffic; writes the machine-readable summary the
 /// CI bench gate consumes.
@@ -411,6 +474,11 @@ fn cmd_overload(args: &cli::Args) -> Result<()> {
         pressure_threshold_ms: args.get_parse("pressure-ms", 0.0)?,
         pressure_slowdown: args.get_parse("slowdown", 1.25)?,
         max_fuse: args.get_parse("max-fuse", 16)?,
+        net: !args.has("no-net"),
+        // 0 = auto-size the per-connection cap to the sweep (the arm
+        // measures fleet admission, not the socket cap; `serve` is
+        // where --inflight applies).
+        net_inflight: 0,
     };
     let report = experiments::overload::run(&artifacts, cfg)?;
     println!("{}", report.render());

@@ -1,0 +1,172 @@
+//! A minimal blocking client for the wire protocol — the loopback
+//! counterpart the integration tests and the overload experiment's
+//! network arm drive the front door with.
+//!
+//! [`NetClient`] is a simple call-style client (send, then recv).  For
+//! open-loop sweeps where the sender must keep pacing while replies
+//! stream back, [`NetClient::split`] clones the socket into an
+//! independently-owned [`NetSender`] / [`NetReceiver`] pair.
+
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpStream};
+
+use crate::coordinator::GemmRequest;
+
+use super::wire::{self, encode_request_into, Frame, NetError, WireStatus};
+
+/// One decoded answer from the server, owned.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientReply {
+    /// The request was served: the result payload, row-major `m*n`.
+    Served { id: u64, out: Vec<f32> },
+    /// A typed non-payload answer (shed, expired, busy, malformed, …).
+    Status { id: u64, status: WireStatus, message: String },
+}
+
+impl ClientReply {
+    /// The echoed request id, whichever variant arrived.
+    pub fn id(&self) -> u64 {
+        match self {
+            ClientReply::Served { id, .. } => *id,
+            ClientReply::Status { id, .. } => *id,
+        }
+    }
+}
+
+fn decode_reply(body: &[u8]) -> Result<ClientReply, NetError> {
+    match wire::decode(body)? {
+        Frame::Response(rf) => {
+            Ok(ClientReply::Served { id: rf.request_id, out: rf.out.to_vec() })
+        }
+        Frame::Status(sf) => Ok(ClientReply::Status {
+            id: sf.request_id,
+            status: sf.status,
+            message: sf.message.to_string(),
+        }),
+        // A server must never send a request frame; surface it as a
+        // kind violation (1 is the request kind on the wire).
+        Frame::Request(_) => {
+            Err(NetError::Protocol(wire::ProtocolError::BadKind { got: 1 }))
+        }
+    }
+}
+
+/// Write-half of a split connection.
+#[derive(Debug)]
+pub struct NetSender {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl NetSender {
+    /// Frame and send one request.  The encode buffer is reused across
+    /// calls, so a steady-shape workload sends with zero allocations.
+    pub fn send(
+        &mut self,
+        id: u64,
+        deadline_micros: u64,
+        hint: &str,
+        req: &GemmRequest,
+    ) -> Result<(), NetError> {
+        encode_request_into(&mut self.buf, id, deadline_micros, hint, req)?;
+        self.stream.write_all(&self.buf)?;
+        self.stream.flush()?;
+        Ok(())
+    }
+
+    /// Close the write half so the server sees a clean EOF and drains.
+    pub fn finish(self) -> Result<(), NetError> {
+        self.stream.shutdown(Shutdown::Write)?;
+        Ok(())
+    }
+}
+
+/// Read-half of a split connection.
+#[derive(Debug)]
+pub struct NetReceiver {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl NetReceiver {
+    /// Block for the next reply; `Ok(None)` once the server closes the
+    /// connection cleanly.
+    pub fn recv(&mut self) -> Result<Option<ClientReply>, NetError> {
+        match wire::read_frame(&mut self.stream, &mut self.buf)? {
+            Some(body) => Ok(Some(decode_reply(body)?)),
+            None => Ok(None),
+        }
+    }
+}
+
+/// A blocking loopback client: one socket, framed requests out,
+/// decoded replies back.
+#[derive(Debug)]
+pub struct NetClient {
+    stream: TcpStream,
+    write_buf: Vec<u8>,
+    read_buf: Vec<u8>,
+}
+
+impl NetClient {
+    /// Connect to a front door.
+    pub fn connect(addr: SocketAddr) -> std::io::Result<NetClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(NetClient { stream, write_buf: Vec::new(), read_buf: Vec::new() })
+    }
+
+    /// Frame and send one request (replies arrive via [`NetClient::recv`]
+    /// in request order).
+    pub fn send(
+        &mut self,
+        id: u64,
+        deadline_micros: u64,
+        hint: &str,
+        req: &GemmRequest,
+    ) -> Result<(), NetError> {
+        encode_request_into(&mut self.write_buf, id, deadline_micros, hint, req)?;
+        self.stream.write_all(&self.write_buf)?;
+        self.stream.flush()?;
+        Ok(())
+    }
+
+    /// Block for the next reply; `Ok(None)` once the server closes the
+    /// connection cleanly (graceful drain completed).
+    pub fn recv(&mut self) -> Result<Option<ClientReply>, NetError> {
+        match wire::read_frame(&mut self.stream, &mut self.read_buf)? {
+            Some(body) => Ok(Some(decode_reply(body)?)),
+            None => Ok(None),
+        }
+    }
+
+    /// Send one request and block for its answer — the wire analogue of
+    /// `ServerHandle::call`.
+    pub fn call(
+        &mut self,
+        id: u64,
+        deadline_micros: u64,
+        hint: &str,
+        req: &GemmRequest,
+    ) -> Result<Option<ClientReply>, NetError> {
+        self.send(id, deadline_micros, hint, req)?;
+        self.recv()
+    }
+
+    /// Split into independently-owned sender/receiver halves (shared
+    /// underlying socket) for open-loop send-while-receiving sweeps.
+    pub fn split(self) -> std::io::Result<(NetSender, NetReceiver)> {
+        let read = self.stream.try_clone()?;
+        Ok((
+            NetSender { stream: self.stream, buf: self.write_buf },
+            NetReceiver { stream: read, buf: self.read_buf },
+        ))
+    }
+
+    /// Close the write half; the server answers what is in flight and
+    /// then closes, so `recv` drains to `Ok(None)`.
+    pub fn finish_sending(&mut self) -> Result<(), NetError> {
+        self.stream.shutdown(Shutdown::Write)?;
+        Ok(())
+    }
+}

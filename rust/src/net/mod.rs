@@ -1,0 +1,18 @@
+//! Network front door: framed serving over TCP in front of the
+//! in-process fleet.
+//!
+//! - [`wire`] — the length-prefixed binary protocol (v1): frame layout,
+//!   zero-copy decoding into borrowed views, typed protocol errors.
+//! - [`server`] — the thread-per-connection acceptor: per-connection
+//!   in-flight caps, typed status frames for every refusal, deadline
+//!   stamping from the budget header, graceful drain.
+//! - [`client`] — a minimal blocking loopback client used by the
+//!   integration tests and the overload experiment's network arm.
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::{ClientReply, NetClient, NetReceiver, NetSender};
+pub use server::{NetConfig, NetServer, NetStats};
+pub use wire::{Frame, NetError, ProtocolError, WireStatus};

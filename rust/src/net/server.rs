@@ -1,0 +1,506 @@
+//! The network front door: a dependency-free thread-per-connection
+//! acceptor that speaks the wire protocol in `net::wire` and feeds the
+//! in-process fleet through [`ServerHandle`].
+//!
+//! ## Threading model
+//!
+//! One acceptor thread polls a non-blocking listener.  Each accepted
+//! connection gets a **reader** thread (owns the socket's read half,
+//! decodes frames, submits to the fleet) and a **responder** thread
+//! (owns the write half, answers in request order).  The two halves are
+//! joined by an in-order channel of [`Reply`] values, so responses are
+//! written back in the order requests arrived on that connection —
+//! request ids are echoed verbatim for clients that pipeline.
+//!
+//! ## Backpressure — never buffer, always answer
+//!
+//! Two bounds stand between a socket flood and memory growth:
+//!
+//! 1. **Per-connection in-flight cap** ([`NetConfig::max_inflight`],
+//!    enforced by an [`AdmissionGauge`]): a connection with that many
+//!    unanswered requests gets an immediate typed `Busy` status frame —
+//!    the frame is dropped, nothing queues.
+//! 2. **Fleet admission**: admitted frames go through
+//!    `ServerHandle::try_submit{_with_deadline}` and a refusal maps
+//!    1:1 onto a typed status frame — `Admission::Shed` → `Shed`,
+//!    `Admission::Quarantined` → `Quarantined`, `Admission::Rejected`
+//!    → `Rejected`.  The server never buffers on behalf of a full
+//!    class.
+//!
+//! Deadline budgets stamped in the request header become absolute
+//! `Instant` deadlines at frame-read time, so queue-expiry,
+//! pressure-pick and retry semantics all work end to end over the wire
+//! exactly as they do in-process.
+//!
+//! ## Graceful drain
+//!
+//! [`NetServer::shutdown`] stops the acceptor, then shuts down the
+//! *read* half of every live connection: readers stop admitting new
+//! frames while responders keep draining — every in-flight request is
+//! answered (with its result, or a typed `Drained` status if the fleet
+//! shut down underneath it) before the connection closes.
+
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Admission, GemmResponse, RequestOutcome, ServerHandle};
+use crate::util::sync::{AdmissionGauge, AtomicBool, AtomicU64, Ordering};
+
+use super::wire::{
+    self, encode_response_into, encode_status_into, request_id_hint, Frame, NetError, WireStatus,
+};
+
+/// Front-door tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct NetConfig {
+    /// Max unanswered requests a single connection may have in flight
+    /// before new frames are refused with a typed `Busy` status.
+    pub max_inflight: usize,
+    /// Acceptor poll interval while the listener has no pending
+    /// connection (the listener runs non-blocking so shutdown is
+    /// bounded by one poll).
+    pub accept_poll: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig { max_inflight: 32, accept_poll: Duration::from_millis(10) }
+    }
+}
+
+/// Monotonic front-door counters, shared across connection threads.
+#[derive(Debug, Default)]
+struct NetCounters {
+    accepted: AtomicU64,
+    served: AtomicU64,
+    shed: AtomicU64,
+    quarantined: AtomicU64,
+    rejected: AtomicU64,
+    busy: AtomicU64,
+    expired: AtomicU64,
+    drained: AtomicU64,
+    errors: AtomicU64,
+    malformed: AtomicU64,
+}
+
+impl NetCounters {
+    // RELAXED: monotonic stats counters bumped from connection threads
+    // and read only for reporting/reconciliation after joins — no
+    // ordering-dependent reader.
+    fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> NetStats {
+        // RELAXED: see `bump` — reconciliation reads happen after the
+        // connection threads are joined.
+        NetStats {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            served: self.served.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            busy: self.busy.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            drained: self.drained.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            malformed: self.malformed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A snapshot of the front door's counters — the wire-side ledger the
+/// overload experiment reconciles against the fleet's `ServeStats`
+/// (every shed status frame on the wire must have a fleet-side shed
+/// behind it, and vice versa).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NetStats {
+    /// Connections accepted.
+    pub accepted: u64,
+    /// Requests answered with a response payload.
+    pub served: u64,
+    /// Requests answered with a `Shed` status frame.
+    pub shed: u64,
+    /// Requests answered with a `Quarantined` status frame.
+    pub quarantined: u64,
+    /// Requests answered with a `Rejected` status frame.
+    pub rejected: u64,
+    /// Frames refused by the per-connection in-flight cap.
+    pub busy: u64,
+    /// Requests answered with an `Expired` status frame.
+    pub expired: u64,
+    /// Requests answered with a `Drained` status frame.
+    pub drained: u64,
+    /// Requests answered with an `Error` status frame.
+    pub errors: u64,
+    /// Frames answered with a `Malformed` status frame.
+    pub malformed: u64,
+}
+
+impl NetStats {
+    /// Every request-level answer the front door sent (excludes
+    /// `accepted`, which counts connections).
+    pub fn answered(&self) -> u64 {
+        self.served
+            + self.shed
+            + self.quarantined
+            + self.rejected
+            + self.busy
+            + self.expired
+            + self.drained
+            + self.errors
+            + self.malformed
+    }
+}
+
+/// One in-order unit of work for a connection's responder thread.
+enum Reply {
+    /// An admitted request: the fleet will answer on `rx`.
+    Pending { id: u64, rx: mpsc::Receiver<GemmResponse> },
+    /// An immediate typed refusal (busy/shed/quarantined/rejected/
+    /// malformed) — encoded and written as-is.
+    Status { id: u64, status: WireStatus, message: String },
+}
+
+/// The listening front door.  Dropping the handle without calling
+/// [`NetServer::shutdown`] aborts the acceptor but does not join
+/// connections; call `shutdown` for a graceful drain.
+#[derive(Debug)]
+pub struct NetServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    counters: Arc<NetCounters>,
+    accept_thread: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    streams: Arc<Mutex<Vec<TcpStream>>>,
+}
+
+impl NetServer {
+    /// Bind the front door and start accepting.  `addr` may carry port
+    /// 0 for an OS-assigned port; the resolved address is available via
+    /// [`NetServer::local_addr`].
+    pub fn bind(
+        addr: SocketAddr,
+        handle: ServerHandle,
+        cfg: NetConfig,
+    ) -> std::io::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let counters = Arc::new(NetCounters::default());
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let streams: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let accept_thread = {
+            let stop = Arc::clone(&stop);
+            let counters = Arc::clone(&counters);
+            let conns = Arc::clone(&conns);
+            let streams = Arc::clone(&streams);
+            thread::spawn(move || {
+                // RELAXED: shutdown flag polled once per accept loop;
+                // a one-poll-late observation only delays shutdown by
+                // `accept_poll`.
+                while !stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            NetCounters::bump(&counters.accepted);
+                            if stream.set_nonblocking(false).is_err()
+                                || stream.set_nodelay(true).is_err()
+                            {
+                                continue;
+                            }
+                            let Ok(read_half) = stream.try_clone() else { continue };
+                            // Registry clone shares the socket: drain-time
+                            // Shutdown::Read lands on every half at once.
+                            streams.lock().unwrap().push(stream);
+                            let handle = handle.clone();
+                            let counters = Arc::clone(&counters);
+                            let worker = thread::spawn(move || {
+                                serve_connection(read_half, handle, cfg, counters);
+                            });
+                            conns.lock().unwrap().push(worker);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            thread::sleep(cfg.accept_poll);
+                        }
+                        Err(_) => thread::sleep(cfg.accept_poll),
+                    }
+                }
+            })
+        };
+
+        Ok(NetServer {
+            local_addr,
+            stop,
+            counters,
+            accept_thread: Some(accept_thread),
+            conns,
+            streams,
+        })
+    }
+
+    /// The address the front door is actually listening on.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Snapshot the wire-side counters.
+    pub fn stats(&self) -> NetStats {
+        self.counters.snapshot()
+    }
+
+    /// Graceful drain: stop accepting, stop reading new frames on every
+    /// live connection, and join the connection threads — responders
+    /// answer every in-flight request before their connection closes.
+    /// The fleet (`GemmServer`) is the caller's to shut down afterwards.
+    pub fn shutdown(mut self) -> NetStats {
+        // RELAXED: paired with the acceptor's poll; see bind().
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        // Unblock every reader: no new frames are admitted, but the
+        // write halves stay open for the responders to drain.
+        for stream in self.streams.lock().unwrap().drain(..) {
+            let _ = stream.shutdown(Shutdown::Read);
+        }
+        let workers: Vec<JoinHandle<()>> = self.conns.lock().unwrap().drain(..).collect();
+        for w in workers {
+            let _ = w.join();
+        }
+        self.counters.snapshot()
+    }
+}
+
+/// Map an unhappy fleet outcome onto its wire status.
+fn status_for_outcome(outcome: RequestOutcome) -> WireStatus {
+    match outcome {
+        RequestOutcome::Ok => WireStatus::Error, // unreachable by construction; callers gate on Ok
+        RequestOutcome::Error => WireStatus::Error,
+        RequestOutcome::Expired => WireStatus::Expired,
+        RequestOutcome::Drained => WireStatus::Drained,
+        RequestOutcome::Quarantined => WireStatus::Quarantined,
+    }
+}
+
+/// Reader half of one connection: decode frames, submit to the fleet,
+/// hand replies (in arrival order) to the responder thread.
+fn serve_connection(
+    stream: TcpStream,
+    handle: ServerHandle,
+    cfg: NetConfig,
+    counters: Arc<NetCounters>,
+) {
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+    let inflight = Arc::new(AdmissionGauge::new(cfg.max_inflight));
+
+    let responder = {
+        let inflight = Arc::clone(&inflight);
+        let counters = Arc::clone(&counters);
+        thread::Builder::new()
+            .name("net-responder".into())
+            .spawn(move || respond_loop(write_half, &reply_rx, &inflight, &counters))
+    };
+    let Ok(responder) = responder else { return };
+
+    let mut read = stream;
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let body = match wire::read_frame(&mut read, &mut buf) {
+            Ok(Some(body)) => body,
+            // Clean EOF (or drain-time Shutdown::Read): stop reading.
+            Ok(None) => break,
+            Err(NetError::Io(_)) => break,
+            Err(NetError::Protocol(e)) => {
+                // A lying length prefix poisons the stream framing:
+                // answer once, then close.
+                NetCounters::bump(&counters.malformed);
+                let _ = reply_tx.send(Reply::Status {
+                    id: 0,
+                    status: WireStatus::Malformed,
+                    message: e.to_string(),
+                });
+                break;
+            }
+        };
+        let frame = match wire::decode(body) {
+            Ok(f) => f,
+            Err(e) => {
+                // The body was length-complete, so framing is intact:
+                // answer the offending frame and keep the connection.
+                NetCounters::bump(&counters.malformed);
+                let _ = reply_tx.send(Reply::Status {
+                    id: request_id_hint(body),
+                    status: WireStatus::Malformed,
+                    message: e.to_string(),
+                });
+                continue;
+            }
+        };
+        match frame {
+            Frame::Request(rf) => {
+                let id = rf.request_id;
+                if inflight.try_reserve().is_none() {
+                    // Socket-level backpressure: refuse instead of
+                    // buffering; the client sees a typed Busy.
+                    NetCounters::bump(&counters.busy);
+                    let _ = reply_tx.send(Reply::Status {
+                        id,
+                        status: WireStatus::Busy,
+                        message: format!(
+                            "connection at its in-flight cap ({})",
+                            inflight.capacity()
+                        ),
+                    });
+                    continue;
+                }
+                let now = Instant::now();
+                let req = rf.to_request();
+                let admission = match rf.deadline_from(now) {
+                    Some(deadline) => handle.try_submit_with_deadline(req, deadline),
+                    None => handle.try_submit(req),
+                };
+                // Only an admitted request holds its in-flight slot;
+                // refusals release immediately — the responder releases
+                // the Pending slot once the answer is written.
+                let reply = match admission {
+                    Admission::Enqueued(rx) => Reply::Pending { id, rx },
+                    Admission::Shed { device, outstanding, capacity, .. } => {
+                        inflight.release();
+                        NetCounters::bump(&counters.shed);
+                        Reply::Status {
+                            id,
+                            status: WireStatus::Shed,
+                            message: format!(
+                                "all classes at queue bound (least-loaded {device:?}: \
+                                 {outstanding}/{capacity})"
+                            ),
+                        }
+                    }
+                    Admission::Quarantined { device, .. } => {
+                        inflight.release();
+                        NetCounters::bump(&counters.quarantined);
+                        Reply::Status {
+                            id,
+                            status: WireStatus::Quarantined,
+                            message: format!("fleet quarantined (retry probes {device:?})"),
+                        }
+                    }
+                    Admission::Rejected { reason } => {
+                        inflight.release();
+                        NetCounters::bump(&counters.rejected);
+                        Reply::Status { id, status: WireStatus::Rejected, message: reason }
+                    }
+                };
+                if reply_tx.send(reply).is_err() {
+                    break;
+                }
+            }
+            Frame::Response(rf) => {
+                NetCounters::bump(&counters.malformed);
+                let send = reply_tx.send(Reply::Status {
+                    id: rf.request_id,
+                    status: WireStatus::Malformed,
+                    message: "unexpected response frame from client".into(),
+                });
+                if send.is_err() {
+                    break;
+                }
+            }
+            Frame::Status(sf) => {
+                NetCounters::bump(&counters.malformed);
+                let send = reply_tx.send(Reply::Status {
+                    id: sf.request_id,
+                    status: WireStatus::Malformed,
+                    message: "unexpected status frame from client".into(),
+                });
+                if send.is_err() {
+                    break;
+                }
+            }
+        }
+    }
+    // Dropping the sender lets the responder drain every queued reply
+    // and exit — the graceful-drain guarantee.
+    drop(reply_tx);
+    let _ = responder.join();
+}
+
+/// Responder half: answer every reply in order, counting terminal
+/// outcomes and releasing the in-flight gauge as each admitted request
+/// is answered.
+fn respond_loop(
+    mut stream: TcpStream,
+    replies: &mpsc::Receiver<Reply>,
+    inflight: &AdmissionGauge,
+    counters: &NetCounters,
+) {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut write_ok = true;
+    for reply in replies.iter() {
+        let encoded = match reply {
+            Reply::Status { id, status, message } => {
+                encode_status_into(&mut buf, id, status, &message)
+            }
+            Reply::Pending { id, rx } => {
+                let encoded = match rx.recv() {
+                    Ok(resp) => match (&resp.out, resp.outcome) {
+                        (Ok(out), RequestOutcome::Ok) => {
+                            NetCounters::bump(&counters.served);
+                            encode_response_into(&mut buf, id, out)
+                        }
+                        (_, outcome) => {
+                            let status = status_for_outcome(outcome);
+                            NetCounters::bump(match status {
+                                WireStatus::Expired => &counters.expired,
+                                WireStatus::Drained => &counters.drained,
+                                WireStatus::Quarantined => &counters.quarantined,
+                                WireStatus::Shed => &counters.shed,
+                                WireStatus::Rejected => &counters.rejected,
+                                WireStatus::Busy => &counters.busy,
+                                WireStatus::Malformed => &counters.malformed,
+                                WireStatus::Error => &counters.errors,
+                            });
+                            let message = match &resp.out {
+                                Ok(_) => status.name().to_string(),
+                                Err(e) => e.to_string(),
+                            };
+                            encode_status_into(&mut buf, id, status, &message)
+                        }
+                    },
+                    // The fleet dropped the sender (hard shutdown): the
+                    // request can never be answered with a result, but
+                    // the connection still gets a typed status.
+                    Err(_) => {
+                        NetCounters::bump(&counters.drained);
+                        encode_status_into(
+                            &mut buf,
+                            id,
+                            WireStatus::Drained,
+                            "server shut down before answering",
+                        )
+                    }
+                };
+                inflight.release();
+                encoded
+            }
+        };
+        if write_ok {
+            write_ok = encoded.is_ok()
+                && stream.write_all(&buf).is_ok()
+                && stream.flush().is_ok();
+        }
+        // After a write failure keep draining replies (still releasing
+        // the gauge) so the reader never wedges, but stop touching the
+        // dead socket.
+    }
+    let _ = stream.shutdown(Shutdown::Write);
+}

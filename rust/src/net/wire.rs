@@ -1,0 +1,897 @@
+//! Wire protocol v1: compact length-prefixed binary framing for the
+//! network front door, with zero-copy request decoding.
+//!
+//! Every frame on the wire is a little-endian `u32` byte length followed
+//! by that many body bytes.  The length prefix is capped at
+//! [`MAX_FRAME_BYTES`] *before* any buffering, so a lying prefix can
+//! never make a connection allocate unbounded memory.  Bodies share a
+//! 16-byte common header and then branch on the frame kind:
+//!
+//! ```text
+//! common header (16 bytes)
+//!   0  [u8; 4]  magic  b"ADPT"
+//!   4  u16      version (1)
+//!   6  u16      kind: 1 = request, 2 = response, 3 = status
+//!   8  u64      request id (echoed verbatim in the reply)
+//!
+//! request body (kind 1), after the common header
+//!  16  u64      deadline budget in microseconds (0 = no deadline)
+//!  24  u32      m          28  u32 n          32  u32 k
+//!  36  f32      alpha      40  f32 beta
+//!  44  u16      artifact-hint byte length (UTF-8; 0 = none)
+//!  46  u16      reserved (0 on encode, ignored on decode)
+//!  48  ..       hint bytes, then operands a (m*k), b (k*n), c (m*n),
+//!               each element a little-endian f32 — the body length must
+//!               equal the computed size *exactly*
+//!
+//! response body (kind 2) — a successfully served result
+//!  16  u32      element count (= m*n of the request)
+//!  20  ..       out payload, little-endian f32s
+//!
+//! status body (kind 3) — every non-payload answer, typed
+//!  16  u16      status code (see `WireStatus`)
+//!  18  u16      message byte length
+//!  20  ..       message bytes (UTF-8)
+//! ```
+//!
+//! Decoding is *zero-copy*: [`decode`] offset-scans the body slice and
+//! returns borrowed views — the artifact hint as a `&str` into the
+//! frame, each operand as a [`PayloadView`] wrapping its byte range.
+//! Nothing is parsed into an owned tree (the mik-sdk ADR lesson: lazy
+//! byte-scanning extraction beats eager full-tree parsing by an order
+//! of magnitude on hot paths); the only copy on the request path is the
+//! single borrowed-bytes → owned-operand conversion the fleet's
+//! `GemmRequest` API requires, via [`PayloadView::copy_into`] on a
+//! pooled destination buffer.  Every decode failure is a typed
+//! [`ProtocolError`] — a malformed, truncated or lying frame can never
+//! panic, hang, or read out of bounds (all offset arithmetic is
+//! checked, element counts go through u64 `checked_{add,mul}`).
+
+use std::fmt;
+use std::io;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::GemmRequest;
+
+/// Frame magic: the first four body bytes of every well-formed frame.
+pub const MAGIC: [u8; 4] = *b"ADPT";
+/// The only protocol version this build speaks.
+pub const VERSION: u16 = 1;
+/// Hard cap on the body length a peer may announce (64 MiB).  Enforced
+/// on the prefix *before* buffering: the bounded-memory guarantee of
+/// the front door starts here.
+pub const MAX_FRAME_BYTES: u32 = 64 * 1024 * 1024;
+
+/// Byte length of the common header shared by every frame kind.
+pub const COMMON_HEADER_BYTES: usize = 16;
+/// Byte length of the fixed request header (common header included).
+pub const REQUEST_HEADER_BYTES: usize = 48;
+/// Byte length of the fixed response header (common header included).
+pub const RESPONSE_HEADER_BYTES: usize = 20;
+/// Byte length of the fixed status header (common header included).
+pub const STATUS_HEADER_BYTES: usize = 20;
+
+const KIND_REQUEST: u16 = 1;
+const KIND_RESPONSE: u16 = 2;
+const KIND_STATUS: u16 = 3;
+
+/// Typed status codes a server answers with when there is no result
+/// payload — the wire-level mirror of the coordinator's `Admission`
+/// refusals and unhappy `RequestOutcome`s.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireStatus {
+    /// Every candidate class was at its queue bound (`Admission::Shed`).
+    Shed,
+    /// Every candidate class's breaker was open
+    /// (`Admission::Quarantined` or a quarantined outcome).
+    Quarantined,
+    /// The request was semantically invalid — dimension overflow or
+    /// operand length mismatch (`Admission::Rejected`).
+    Rejected,
+    /// The deadline budget elapsed before the request was served
+    /// (`RequestOutcome::Expired`).
+    Expired,
+    /// The server drained during graceful shutdown before serving
+    /// (`RequestOutcome::Drained`).
+    Drained,
+    /// The per-connection in-flight cap refused the frame before it
+    /// reached the fleet — socket-level backpressure, not fleet load.
+    Busy,
+    /// The request executed but failed (`RequestOutcome::Error`).
+    Error,
+    /// The frame itself failed to decode; the message carries the
+    /// rendered [`ProtocolError`].
+    Malformed,
+}
+
+impl WireStatus {
+    /// The u16 code this status travels as.
+    pub fn code(self) -> u16 {
+        match self {
+            WireStatus::Shed => 1,
+            WireStatus::Quarantined => 2,
+            WireStatus::Rejected => 3,
+            WireStatus::Expired => 4,
+            WireStatus::Drained => 5,
+            WireStatus::Busy => 6,
+            WireStatus::Error => 7,
+            WireStatus::Malformed => 8,
+        }
+    }
+
+    /// The status a code denotes; `None` for unassigned codes.
+    pub fn from_code(code: u16) -> Option<WireStatus> {
+        match code {
+            1 => Some(WireStatus::Shed),
+            2 => Some(WireStatus::Quarantined),
+            3 => Some(WireStatus::Rejected),
+            4 => Some(WireStatus::Expired),
+            5 => Some(WireStatus::Drained),
+            6 => Some(WireStatus::Busy),
+            7 => Some(WireStatus::Error),
+            8 => Some(WireStatus::Malformed),
+            // The code domain is u16; unassigned values are the
+            // caller's BadStatusCode, not a variant.
+            _ => None, // LINT: allow(wildcard)
+        }
+    }
+
+    /// Human-readable tag used in renders and experiment accounting.
+    pub fn name(self) -> &'static str {
+        match self {
+            WireStatus::Shed => "shed",
+            WireStatus::Quarantined => "quarantined",
+            WireStatus::Rejected => "rejected",
+            WireStatus::Expired => "expired",
+            WireStatus::Drained => "drained",
+            WireStatus::Busy => "busy",
+            WireStatus::Error => "error",
+            WireStatus::Malformed => "malformed",
+        }
+    }
+}
+
+impl fmt::Display for WireStatus {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A typed decode/encode failure.  Every malformed input maps to one of
+/// these — the fuzz suite (`tests/wire_protocol.rs`) pins that no
+/// mutation of a valid frame can produce anything else (no panic, no
+/// hang, no over-read).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProtocolError {
+    /// The body ended before a required field: `need` bytes were
+    /// required, `have` were present.
+    Truncated { need: usize, have: usize },
+    /// The first four body bytes were not [`MAGIC`].
+    BadMagic { got: [u8; 4] },
+    /// The peer speaks a different protocol version.
+    VersionSkew { got: u16, want: u16 },
+    /// The frame kind is not request/response/status.
+    BadKind { got: u16 },
+    /// The length prefix announced a body beyond [`MAX_FRAME_BYTES`].
+    Oversized { len: u32, max: u32 },
+    /// The triple's operand element counts overflow a u64 byte size —
+    /// a pathological header that could never describe a real payload.
+    OperandOverflow { m: u32, n: u32, k: u32 },
+    /// The body length does not match the size the header fields imply
+    /// exactly (a lying length field, a truncated or padded payload).
+    LengthMismatch { want: u64, got: u64 },
+    /// A status frame carried an unassigned status code.
+    BadStatusCode { got: u16 },
+    /// A text field (artifact hint, status message) was not UTF-8.
+    BadUtf8 { field: &'static str },
+    /// An encoder input could not be framed (hint longer than a u16
+    /// length field can carry).
+    HintTooLong { len: usize },
+}
+
+impl fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProtocolError::Truncated { need, have } => {
+                write!(f, "truncated frame: need {need} bytes, have {have}")
+            }
+            ProtocolError::BadMagic { got } => {
+                write!(f, "bad magic {got:02x?} (want {:02x?})", MAGIC)
+            }
+            ProtocolError::VersionSkew { got, want } => {
+                write!(f, "protocol version skew: got v{got}, this build speaks v{want}")
+            }
+            ProtocolError::BadKind { got } => write!(f, "unknown frame kind {got}"),
+            ProtocolError::Oversized { len, max } => {
+                write!(f, "frame length {len} exceeds the {max}-byte cap")
+            }
+            ProtocolError::OperandOverflow { m, n, k } => {
+                write!(f, "operand sizes for ({m}, {n}, {k}) overflow the frame format")
+            }
+            ProtocolError::LengthMismatch { want, got } => {
+                write!(f, "body length mismatch: header implies {want} bytes, frame has {got}")
+            }
+            ProtocolError::BadStatusCode { got } => {
+                write!(f, "unassigned status code {got}")
+            }
+            ProtocolError::BadUtf8 { field } => write!(f, "{field} is not valid UTF-8"),
+            ProtocolError::HintTooLong { len } => {
+                write!(f, "artifact hint of {len} bytes exceeds the u16 length field")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ProtocolError {}
+
+/// A framing-layer failure: either a typed protocol violation or the
+/// underlying socket error.  Truncated streams surface as
+/// `Io(UnexpectedEof)` — typed, never a hang.
+#[derive(Debug)]
+pub enum NetError {
+    Protocol(ProtocolError),
+    Io(io::Error),
+}
+
+impl fmt::Display for NetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NetError::Protocol(e) => write!(f, "protocol error: {e}"),
+            NetError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+impl From<ProtocolError> for NetError {
+    fn from(e: ProtocolError) -> NetError {
+        NetError::Protocol(e)
+    }
+}
+
+impl From<io::Error> for NetError {
+    fn from(e: io::Error) -> NetError {
+        NetError::Io(e)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checked little-endian field readers.  Every decode goes through these:
+// a short body yields a typed `Truncated`, never a slice panic.
+// ---------------------------------------------------------------------------
+
+fn bytes_at<const N: usize>(b: &[u8], off: usize) -> Result<[u8; N], ProtocolError> {
+    let end = off.checked_add(N).ok_or(ProtocolError::Truncated { need: usize::MAX, have: b.len() })?;
+    match b.get(off..end) {
+        Some(s) => {
+            let mut out = [0u8; N];
+            out.copy_from_slice(s);
+            Ok(out)
+        }
+        None => Err(ProtocolError::Truncated { need: end, have: b.len() }),
+    }
+}
+
+fn u16_at(b: &[u8], off: usize) -> Result<u16, ProtocolError> {
+    Ok(u16::from_le_bytes(bytes_at::<2>(b, off)?))
+}
+
+fn u32_at(b: &[u8], off: usize) -> Result<u32, ProtocolError> {
+    Ok(u32::from_le_bytes(bytes_at::<4>(b, off)?))
+}
+
+fn u64_at(b: &[u8], off: usize) -> Result<u64, ProtocolError> {
+    Ok(u64::from_le_bytes(bytes_at::<8>(b, off)?))
+}
+
+fn f32_at(b: &[u8], off: usize) -> Result<f32, ProtocolError> {
+    Ok(f32::from_le_bytes(bytes_at::<4>(b, off)?))
+}
+
+/// Best-effort request-id extraction from a body that may be malformed.
+/// Used to address a `Malformed` status frame at the offending request
+/// when the header got far enough to carry an id; 0 otherwise.
+pub fn request_id_hint(body: &[u8]) -> u64 {
+    u64_at(body, 8).unwrap_or(0)
+}
+
+/// A borrowed view over one operand's raw little-endian f32 bytes.
+/// Length is always a multiple of 4 (the decoder checked the exact
+/// body size against the triple before constructing the view).
+#[derive(Debug, Clone, Copy)]
+pub struct PayloadView<'a> {
+    bytes: &'a [u8],
+}
+
+impl<'a> PayloadView<'a> {
+    /// Number of f32 elements in the view.
+    pub fn len(&self) -> usize {
+        self.bytes.len() / 4
+    }
+
+    /// True when the operand carries no elements.
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    /// The raw borrowed bytes (little-endian f32s).
+    pub fn bytes(&self) -> &'a [u8] {
+        self.bytes
+    }
+
+    // LINT: hot-path
+    /// Decode the borrowed bytes into a caller-pooled buffer.  `out` is
+    /// cleared and refilled in place: once its capacity has plateaued
+    /// this performs zero allocations — the property the hotpath bench
+    /// gates as `allocs_per_request.net_decode`.
+    pub fn copy_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(
+            self.bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+        );
+    }
+
+    /// Decode into a fresh `Vec` (cold paths and tests).
+    pub fn to_vec(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.len());
+        self.copy_into(&mut out);
+        out
+    }
+}
+
+/// A decoded request frame: borrowed hint and operand views into the
+/// body slice, plus the fixed header fields by value.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestFrame<'a> {
+    pub request_id: u64,
+    /// Deadline budget in microseconds from frame receipt; 0 = none.
+    pub deadline_micros: u64,
+    pub m: u32,
+    pub n: u32,
+    pub k: u32,
+    pub alpha: f32,
+    pub beta: f32,
+    /// Artifact hint (may be empty), borrowed from the frame.
+    pub hint: &'a str,
+    pub a: PayloadView<'a>,
+    pub b: PayloadView<'a>,
+    pub c: PayloadView<'a>,
+}
+
+impl RequestFrame<'_> {
+    /// Materialise the one owned copy the fleet API requires: a
+    /// `GemmRequest` with owned operand vectors decoded from the
+    /// borrowed payload views.
+    pub fn to_request(&self) -> GemmRequest {
+        GemmRequest {
+            m: self.m as usize,
+            n: self.n as usize,
+            k: self.k as usize,
+            a: self.a.to_vec(),
+            b: self.b.to_vec(),
+            c: self.c.to_vec(),
+            alpha: self.alpha,
+            beta: self.beta,
+        }
+    }
+
+    /// Absolute deadline implied by the budget header, anchored at
+    /// `now` (the moment the frame was read off the socket).  `None`
+    /// when the request carries no budget.
+    pub fn deadline_from(&self, now: Instant) -> Option<Instant> {
+        if self.deadline_micros == 0 {
+            None
+        } else {
+            Some(now + Duration::from_micros(self.deadline_micros))
+        }
+    }
+}
+
+/// A decoded response frame: the served payload as a borrowed view.
+#[derive(Debug, Clone, Copy)]
+pub struct ResponseFrame<'a> {
+    pub request_id: u64,
+    pub out: PayloadView<'a>,
+}
+
+/// A decoded status frame: a typed code plus borrowed message text.
+#[derive(Debug, Clone, Copy)]
+pub struct StatusFrame<'a> {
+    pub request_id: u64,
+    pub status: WireStatus,
+    pub message: &'a str,
+}
+
+/// One decoded frame, borrowing from the body it was scanned over.
+#[derive(Debug, Clone, Copy)]
+pub enum Frame<'a> {
+    Request(RequestFrame<'a>),
+    Response(ResponseFrame<'a>),
+    Status(StatusFrame<'a>),
+}
+
+/// Exact body size (bytes) a request with this header must have, or
+/// `None` on u64 overflow.
+fn request_body_len(m: u32, n: u32, k: u32, hint_len: u16) -> Option<u64> {
+    let (m, n, k) = (m as u64, n as u64, k as u64);
+    let elems = m
+        .checked_mul(k)?
+        .checked_add(k.checked_mul(n)?)?
+        .checked_add(m.checked_mul(n)?)?;
+    elems
+        .checked_mul(4)?
+        .checked_add(REQUEST_HEADER_BYTES as u64)?
+        .checked_add(hint_len as u64)
+}
+
+// LINT: hot-path
+/// Decode one frame body by offset-scanning into borrowed slices.
+/// Performs no allocation and no copying; all failures are typed.
+pub fn decode(body: &[u8]) -> Result<Frame<'_>, ProtocolError> {
+    let magic = bytes_at::<4>(body, 0)?;
+    if magic != MAGIC {
+        return Err(ProtocolError::BadMagic { got: magic });
+    }
+    let version = u16_at(body, 4)?;
+    if version != VERSION {
+        return Err(ProtocolError::VersionSkew { got: version, want: VERSION });
+    }
+    let kind = u16_at(body, 6)?;
+    let request_id = u64_at(body, 8)?;
+    match kind {
+        KIND_REQUEST => {
+            let deadline_micros = u64_at(body, 16)?;
+            let m = u32_at(body, 24)?;
+            let n = u32_at(body, 28)?;
+            let k = u32_at(body, 32)?;
+            let alpha = f32_at(body, 36)?;
+            let beta = f32_at(body, 40)?;
+            let hint_len = u16_at(body, 44)?;
+            // offset 46: reserved u16, ignored on decode.
+            let want = request_body_len(m, n, k, hint_len)
+                .ok_or(ProtocolError::OperandOverflow { m, n, k })?;
+            if want != body.len() as u64 {
+                return Err(ProtocolError::LengthMismatch { want, got: body.len() as u64 });
+            }
+            // `want` fits the actual body, so every offset below is in
+            // bounds; index arithmetic stays in usize range.
+            let hint_start = REQUEST_HEADER_BYTES;
+            let hint_end = hint_start + hint_len as usize;
+            let hint = std::str::from_utf8(&body[hint_start..hint_end])
+                .map_err(|_| ProtocolError::BadUtf8 { field: "artifact hint" })?;
+            let a_end = hint_end + (m as usize) * (k as usize) * 4;
+            let b_end = a_end + (k as usize) * (n as usize) * 4;
+            let c_end = b_end + (m as usize) * (n as usize) * 4;
+            Ok(Frame::Request(RequestFrame {
+                request_id,
+                deadline_micros,
+                m,
+                n,
+                k,
+                alpha,
+                beta,
+                hint,
+                a: PayloadView { bytes: &body[hint_end..a_end] },
+                b: PayloadView { bytes: &body[a_end..b_end] },
+                c: PayloadView { bytes: &body[b_end..c_end] },
+            }))
+        }
+        KIND_RESPONSE => {
+            let elems = u32_at(body, 16)?;
+            let want = (elems as u64)
+                .checked_mul(4)
+                .and_then(|b| b.checked_add(RESPONSE_HEADER_BYTES as u64))
+                .ok_or(ProtocolError::OperandOverflow { m: elems, n: 1, k: 0 })?;
+            if want != body.len() as u64 {
+                return Err(ProtocolError::LengthMismatch { want, got: body.len() as u64 });
+            }
+            Ok(Frame::Response(ResponseFrame {
+                request_id,
+                out: PayloadView { bytes: &body[RESPONSE_HEADER_BYTES..] },
+            }))
+        }
+        KIND_STATUS => {
+            let code = u16_at(body, 16)?;
+            let status =
+                WireStatus::from_code(code).ok_or(ProtocolError::BadStatusCode { got: code })?;
+            let msg_len = u16_at(body, 18)?;
+            let want = STATUS_HEADER_BYTES as u64 + msg_len as u64;
+            if want != body.len() as u64 {
+                return Err(ProtocolError::LengthMismatch { want, got: body.len() as u64 });
+            }
+            let message = std::str::from_utf8(&body[STATUS_HEADER_BYTES..])
+                .map_err(|_| ProtocolError::BadUtf8 { field: "status message" })?;
+            Ok(Frame::Status(StatusFrame { request_id, status, message }))
+        }
+        other => Err(ProtocolError::BadKind { got: other }),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encoders.  Each writes a full wire frame (length prefix + body) into a
+// caller-owned buffer that is cleared and refilled in place, so a
+// connection's encode buffer reaches steady state with zero allocations.
+// ---------------------------------------------------------------------------
+
+fn put_common_header(buf: &mut Vec<u8>, kind: u16, request_id: u64) {
+    buf.extend_from_slice(&MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&kind.to_le_bytes());
+    buf.extend_from_slice(&request_id.to_le_bytes());
+}
+
+/// Patch the 4-byte length prefix once the body is fully written, and
+/// enforce the frame cap on our own output.
+fn seal(buf: &mut [u8]) -> Result<(), ProtocolError> {
+    let body_len = buf.len() - 4;
+    if body_len as u64 > MAX_FRAME_BYTES as u64 {
+        return Err(ProtocolError::Oversized { len: body_len as u32, max: MAX_FRAME_BYTES });
+    }
+    buf[..4].copy_from_slice(&(body_len as u32).to_le_bytes());
+    Ok(())
+}
+
+// LINT: hot-path
+/// Encode a request frame into `buf` (cleared first).  Validates that
+/// the operand vector lengths match the triple and that the hint fits
+/// the u16 length field; dimension/size lies are impossible by
+/// construction on the encode side.
+pub fn encode_request_into(
+    buf: &mut Vec<u8>,
+    request_id: u64,
+    deadline_micros: u64,
+    hint: &str,
+    req: &GemmRequest,
+) -> Result<(), ProtocolError> {
+    if hint.len() > u16::MAX as usize {
+        return Err(ProtocolError::HintTooLong { len: hint.len() });
+    }
+    let (m, n, k) = (req.m as u64, req.n as u64, req.k as u64);
+    if m > u32::MAX as u64 || n > u32::MAX as u64 || k > u32::MAX as u64 {
+        return Err(ProtocolError::OperandOverflow {
+            m: req.m.min(u32::MAX as usize) as u32,
+            n: req.n.min(u32::MAX as usize) as u32,
+            k: req.k.min(u32::MAX as usize) as u32,
+        });
+    }
+    let (m32, n32, k32) = (req.m as u32, req.n as u32, req.k as u32);
+    if req.a.len() as u64 != m * k || req.b.len() as u64 != k * n || req.c.len() as u64 != m * n {
+        let want = request_body_len(m32, n32, k32, hint.len() as u16)
+            .ok_or(ProtocolError::OperandOverflow { m: m32, n: n32, k: k32 })?;
+        let got = REQUEST_HEADER_BYTES as u64
+            + hint.len() as u64
+            + 4 * (req.a.len() as u64 + req.b.len() as u64 + req.c.len() as u64);
+        return Err(ProtocolError::LengthMismatch { want, got });
+    }
+    let body = request_body_len(m32, n32, k32, hint.len() as u16)
+        .ok_or(ProtocolError::OperandOverflow { m: m32, n: n32, k: k32 })?;
+    if body > MAX_FRAME_BYTES as u64 {
+        return Err(ProtocolError::Oversized { len: u32::MAX, max: MAX_FRAME_BYTES });
+    }
+    buf.clear();
+    buf.extend_from_slice(&[0u8; 4]); // length prefix, patched by seal()
+    put_common_header(buf, KIND_REQUEST, request_id);
+    buf.extend_from_slice(&deadline_micros.to_le_bytes());
+    buf.extend_from_slice(&m32.to_le_bytes());
+    buf.extend_from_slice(&n32.to_le_bytes());
+    buf.extend_from_slice(&k32.to_le_bytes());
+    buf.extend_from_slice(&req.alpha.to_le_bytes());
+    buf.extend_from_slice(&req.beta.to_le_bytes());
+    buf.extend_from_slice(&(hint.len() as u16).to_le_bytes());
+    buf.extend_from_slice(&0u16.to_le_bytes()); // reserved
+    buf.extend_from_slice(hint.as_bytes());
+    for operand in [&req.a, &req.b, &req.c] {
+        for v in operand {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    seal(buf)
+}
+
+// LINT: hot-path
+/// Encode a response frame carrying a served payload into `buf`.
+pub fn encode_response_into(
+    buf: &mut Vec<u8>,
+    request_id: u64,
+    out: &[f32],
+) -> Result<(), ProtocolError> {
+    if out.len() as u64 * 4 + RESPONSE_HEADER_BYTES as u64 > MAX_FRAME_BYTES as u64 {
+        return Err(ProtocolError::Oversized { len: u32::MAX, max: MAX_FRAME_BYTES });
+    }
+    buf.clear();
+    buf.extend_from_slice(&[0u8; 4]);
+    put_common_header(buf, KIND_RESPONSE, request_id);
+    buf.extend_from_slice(&(out.len() as u32).to_le_bytes());
+    for v in out {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    seal(buf)
+}
+
+/// Encode a typed status frame into `buf`.  Messages longer than the
+/// u16 length field are truncated at a char boundary, never rejected —
+/// a status must always be deliverable.
+pub fn encode_status_into(
+    buf: &mut Vec<u8>,
+    request_id: u64,
+    status: WireStatus,
+    message: &str,
+) -> Result<(), ProtocolError> {
+    let mut end = message.len().min(u16::MAX as usize);
+    while end > 0 && !message.is_char_boundary(end) {
+        end -= 1;
+    }
+    let msg = &message[..end];
+    buf.clear();
+    buf.extend_from_slice(&[0u8; 4]);
+    put_common_header(buf, KIND_STATUS, request_id);
+    buf.extend_from_slice(&status.code().to_le_bytes());
+    buf.extend_from_slice(&(msg.len() as u16).to_le_bytes());
+    buf.extend_from_slice(msg.as_bytes());
+    seal(buf)
+}
+
+/// Read one length-prefixed frame body from `r` into `buf` (resized in
+/// place; zero allocations once its capacity plateaus) and return the
+/// body slice.  Returns `Ok(None)` on a clean EOF at a frame boundary.
+/// A stream that dies mid-prefix or mid-body yields a typed
+/// `Io(UnexpectedEof)`; a prefix beyond [`MAX_FRAME_BYTES`] yields
+/// `Protocol(Oversized)` before a single body byte is buffered — both
+/// are connection-fatal, neither can hang or over-allocate.
+pub fn read_frame<'a>(
+    r: &mut impl io::Read,
+    buf: &'a mut Vec<u8>,
+) -> Result<Option<&'a [u8]>, NetError> {
+    let mut prefix = [0u8; 4];
+    // First byte by hand so a clean close between frames is Ok(None)
+    // while a mid-prefix close is a typed UnexpectedEof.
+    let mut got = 0usize;
+    while got == 0 {
+        match r.read(&mut prefix[..1]) {
+            Ok(0) => return Ok(None),
+            Ok(n) => got = n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(NetError::Io(e)),
+        }
+    }
+    r.read_exact(&mut prefix[1..])?;
+    let len = u32::from_le_bytes(prefix);
+    if len > MAX_FRAME_BYTES {
+        return Err(NetError::Protocol(ProtocolError::Oversized { len, max: MAX_FRAME_BYTES }));
+    }
+    buf.resize(len as usize, 0);
+    r.read_exact(buf)?;
+    Ok(Some(&buf[..]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_request() -> GemmRequest {
+        let (m, n, k) = (2usize, 3usize, 4usize);
+        GemmRequest {
+            m,
+            n,
+            k,
+            a: (0..m * k).map(|i| i as f32 * 0.5).collect(),
+            b: (0..k * n).map(|i| 1.0 - i as f32).collect(),
+            c: (0..m * n).map(|i| i as f32).collect(),
+            alpha: 1.5,
+            beta: -0.25,
+        }
+    }
+
+    fn body(frame: &[u8]) -> &[u8] {
+        &frame[4..]
+    }
+
+    #[test]
+    fn request_round_trips() {
+        let req = sample_request();
+        let mut buf = Vec::new();
+        encode_request_into(&mut buf, 42, 7_000, "xgemm_128", &req).unwrap();
+        let prefix = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+        assert_eq!(prefix as usize, buf.len() - 4);
+        match decode(body(&buf)).unwrap() {
+            Frame::Request(rf) => {
+                assert_eq!(rf.request_id, 42);
+                assert_eq!(rf.deadline_micros, 7_000);
+                assert_eq!((rf.m, rf.n, rf.k), (2, 3, 4));
+                assert_eq!(rf.alpha, 1.5);
+                assert_eq!(rf.beta, -0.25);
+                assert_eq!(rf.hint, "xgemm_128");
+                assert_eq!(rf.a.to_vec(), req.a);
+                assert_eq!(rf.b.to_vec(), req.b);
+                assert_eq!(rf.c.to_vec(), req.c);
+                let owned = rf.to_request();
+                assert_eq!(owned.m, req.m);
+                assert_eq!(owned.c, req.c);
+            }
+            other => panic!("expected request frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn response_and_status_round_trip() {
+        let mut buf = Vec::new();
+        let out = [1.0f32, -2.5, 3.25];
+        encode_response_into(&mut buf, 9, &out).unwrap();
+        match decode(body(&buf)).unwrap() {
+            Frame::Response(rf) => {
+                assert_eq!(rf.request_id, 9);
+                assert_eq!(rf.out.to_vec(), out);
+            }
+            other => panic!("expected response frame, got {other:?}"),
+        }
+        encode_status_into(&mut buf, 11, WireStatus::Shed, "queue full").unwrap();
+        match decode(body(&buf)).unwrap() {
+            Frame::Status(sf) => {
+                assert_eq!(sf.request_id, 11);
+                assert_eq!(sf.status, WireStatus::Shed);
+                assert_eq!(sf.message, "queue full");
+            }
+            other => panic!("expected status frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn copy_into_reuses_capacity() {
+        let mut buf = Vec::new();
+        encode_request_into(&mut buf, 1, 0, "", &sample_request()).unwrap();
+        let Frame::Request(rf) = decode(body(&buf)).unwrap() else {
+            panic!("expected request frame");
+        };
+        let mut pool = Vec::with_capacity(rf.a.len());
+        let cap = pool.capacity();
+        rf.a.copy_into(&mut pool);
+        assert_eq!(pool.len(), rf.a.len());
+        assert_eq!(pool.capacity(), cap);
+    }
+
+    #[test]
+    fn status_codes_round_trip() {
+        for status in [
+            WireStatus::Shed,
+            WireStatus::Quarantined,
+            WireStatus::Rejected,
+            WireStatus::Expired,
+            WireStatus::Drained,
+            WireStatus::Busy,
+            WireStatus::Error,
+            WireStatus::Malformed,
+        ] {
+            assert_eq!(WireStatus::from_code(status.code()), Some(status));
+        }
+        assert_eq!(WireStatus::from_code(0), None);
+        assert_eq!(WireStatus::from_code(999), None);
+    }
+
+    #[test]
+    fn typed_errors_for_malformed_bodies() {
+        let mut buf = Vec::new();
+        encode_request_into(&mut buf, 5, 0, "hint", &sample_request()).unwrap();
+        let good = body(&buf).to_vec();
+
+        // Empty and short bodies: Truncated.
+        assert!(matches!(decode(&[]), Err(ProtocolError::Truncated { .. })));
+        assert!(matches!(decode(&good[..3]), Err(ProtocolError::Truncated { .. })));
+
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(decode(&bad), Err(ProtocolError::BadMagic { .. })));
+
+        // Version skew.
+        let mut bad = good.clone();
+        bad[4] = 2;
+        assert_eq!(
+            decode(&bad),
+            Err(ProtocolError::VersionSkew { got: 2, want: VERSION })
+        );
+
+        // Unknown kind.
+        let mut bad = good.clone();
+        bad[6] = 9;
+        assert_eq!(decode(&bad), Err(ProtocolError::BadKind { got: 9 }));
+
+        // Truncated payload: LengthMismatch, not a slice panic.
+        let short = &good[..good.len() - 1];
+        assert!(matches!(decode(short), Err(ProtocolError::LengthMismatch { .. })));
+
+        // Lying dimension field: LengthMismatch.
+        let mut bad = good.clone();
+        bad[24] = bad[24].wrapping_add(1);
+        assert!(matches!(decode(&bad), Err(ProtocolError::LengthMismatch { .. })));
+
+        // Pathological triple: OperandOverflow, no attempt to size it.
+        let mut bad = good.clone();
+        for off in [24, 28, 32] {
+            bad[off..off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        }
+        assert!(matches!(decode(&bad), Err(ProtocolError::OperandOverflow { .. })));
+
+        // Non-UTF-8 hint bytes.
+        let mut bad = good.clone();
+        bad[REQUEST_HEADER_BYTES] = 0xFF;
+        bad[REQUEST_HEADER_BYTES + 1] = 0xFE;
+        assert!(matches!(decode(&bad), Err(ProtocolError::BadUtf8 { .. })));
+
+        // Unassigned status code.
+        encode_status_into(&mut buf, 1, WireStatus::Busy, "x").unwrap();
+        let mut bad = body(&buf).to_vec();
+        bad[16..18].copy_from_slice(&77u16.to_le_bytes());
+        assert_eq!(decode(&bad), Err(ProtocolError::BadStatusCode { got: 77 }));
+    }
+
+    #[test]
+    fn encode_rejects_inconsistent_requests() {
+        let mut req = sample_request();
+        req.a.pop();
+        let mut buf = Vec::new();
+        assert!(matches!(
+            encode_request_into(&mut buf, 1, 0, "", &req),
+            Err(ProtocolError::LengthMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn status_message_truncates_at_char_boundary() {
+        let long = "é".repeat(40_000); // 80k bytes, > u16::MAX
+        let mut buf = Vec::new();
+        encode_status_into(&mut buf, 3, WireStatus::Error, &long).unwrap();
+        let Frame::Status(sf) = decode(body(&buf)).unwrap() else {
+            panic!("expected status frame");
+        };
+        assert!(sf.message.len() <= u16::MAX as usize);
+        assert!(sf.message.chars().all(|ch| ch == 'é'));
+    }
+
+    #[test]
+    fn read_frame_eof_and_truncation() {
+        let req = sample_request();
+        let mut wire = Vec::new();
+        encode_request_into(&mut wire, 8, 0, "", &req).unwrap();
+
+        // Whole frame then clean EOF.
+        let mut cursor = io::Cursor::new(wire.clone());
+        let mut buf = Vec::new();
+        let got = read_frame(&mut cursor, &mut buf).unwrap().unwrap();
+        assert!(matches!(decode(got), Ok(Frame::Request(_))));
+        assert!(read_frame(&mut cursor, &mut buf).unwrap().is_none());
+
+        // Stream dies mid-prefix: typed io error, not a hang or Ok(None).
+        let mut cursor = io::Cursor::new(wire[..2].to_vec());
+        match read_frame(&mut cursor, &mut buf) {
+            Err(NetError::Io(e)) => assert_eq!(e.kind(), io::ErrorKind::UnexpectedEof),
+            other => panic!("expected io error, got {other:?}"),
+        }
+
+        // Stream dies mid-body: same.
+        let mut cursor = io::Cursor::new(wire[..wire.len() - 3].to_vec());
+        match read_frame(&mut cursor, &mut buf) {
+            Err(NetError::Io(e)) => assert_eq!(e.kind(), io::ErrorKind::UnexpectedEof),
+            other => panic!("expected io error, got {other:?}"),
+        }
+
+        // Oversized prefix: typed protocol error before buffering.
+        let mut huge = ((MAX_FRAME_BYTES as u64 + 1) as u32).to_le_bytes().to_vec();
+        huge.extend_from_slice(&[0u8; 8]);
+        let mut cursor = io::Cursor::new(huge);
+        match read_frame(&mut cursor, &mut buf) {
+            Err(NetError::Protocol(ProtocolError::Oversized { .. })) => {}
+            other => panic!("expected oversized error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn request_id_hint_is_best_effort() {
+        let mut buf = Vec::new();
+        encode_request_into(&mut buf, 0xDEAD_BEEF, 0, "", &sample_request()).unwrap();
+        assert_eq!(request_id_hint(body(&buf)), 0xDEAD_BEEF);
+        assert_eq!(request_id_hint(&[1, 2, 3]), 0);
+    }
+}

@@ -280,7 +280,8 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> BenchDiff {
 
     // Zero-allocation gates: any increase is a regression — the bare
     // pooled path, the pooled-behind-a-PolicyHandle path, the pooled
-    // path behind the ExecutionEngine trait, and the fused batched path.
+    // path behind the ExecutionEngine trait, the fused batched path,
+    // and the wire-decode path of the network front door.
     for key in [
         "pooled",
         "pooled_with_policy_handle",
@@ -288,6 +289,7 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> BenchDiff {
         "fused_pooled",
         "simd_pooled",
         "simd_packed_pooled",
+        "net_decode",
     ] {
         let base = baseline
             .get("allocs_per_request")
@@ -536,6 +538,51 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> BenchDiff {
         diff.lines.push(format!(
             "overload pressure-pick p99 improved at max load: {improved}"
         ));
+    }
+    // Network-arm gates (same shape as the in-process ones; the keys
+    // exist only when the loopback arm ran, so a skipped arm skips the
+    // gate instead of passing it vacuously).
+    if let Ok(rate) = current.get("net_shed_rate_1x").and_then(|r| r.as_f64()) {
+        diff.compared += 1;
+        diff.lines
+            .push(format!("overload net shed rate @1x: {:.2}%", rate * 100.0));
+        if rate > 0.0 {
+            diff.regressions.push(format!(
+                "overload: network arm shed below capacity ({:.2}% at 1x offered load)",
+                rate * 100.0
+            ));
+        }
+    }
+    if let Ok(bounded) = current.get("net_depth_bounded").and_then(|b| b.as_bool()) {
+        diff.compared += 1;
+        diff.lines.push(format!("overload net depth bounded: {bounded}"));
+        if !bounded {
+            diff.regressions.push(
+                "overload: network arm exceeded the queue bound (wire bypassed \
+                 bounded admission)"
+                    .to_string(),
+            );
+        }
+    }
+    // Client-observed p99 at 1x over the wire (framing + decode + serve)
+    // against the committed floor.
+    let base_net_p99 = baseline
+        .get("overload")
+        .ok()
+        .and_then(|o| num_at(o, "net_p99_1x_ms"));
+    if let (Some(base), Some(cur)) = (base_net_p99, num_at(current, "net_p99_1x_ms")) {
+        diff.compared += 1;
+        let delta = 100.0 * (cur / base - 1.0);
+        diff.lines.push(format!(
+            "overload net p99 @1x: {base:.2}ms -> {cur:.2}ms ({delta:+.1}%)"
+        ));
+        if cur > base * (1.0 + tolerance) {
+            diff.regressions.push(format!(
+                "overload: network p99 at 1x load {delta:+.1}% above the committed \
+                 floor (tolerance {:.0}%)",
+                tolerance * 100.0
+            ));
+        }
     }
 
     // Chaos gates (`BENCH_chaos.json`, `chaos_`-prefixed keys so the
@@ -870,6 +917,74 @@ mod tests {
         let diff = compare(&no_floor, &cur(0.0, true, 99.0), 0.15);
         assert_eq!(diff.compared, 2);
         assert!(diff.passes(), "{:?}", diff.regressions);
+    }
+
+    #[test]
+    fn net_overload_gates_shed_depth_and_p99_floor() {
+        let base = Json::parse(
+            r#"{"bench":"hotpath","overload":{"p99_1x_ms":10.0,"net_p99_1x_ms":12.0}}"#,
+        )
+        .unwrap();
+        let cur = |shed: f64, bounded: bool, p99: f64| {
+            Json::parse(&format!(
+                r#"{{"bench":"overload","net_shed_rate_1x":{shed},
+                     "net_depth_bounded":{bounded},"net_p99_1x_ms":{p99}}}"#
+            ))
+            .unwrap()
+        };
+        // Clean run: all three network gates compared, none regress.
+        let diff = compare(&base, &cur(0.0, true, 12.5), 0.15);
+        assert_eq!(diff.compared, 3);
+        assert!(diff.passes(), "{:?}", diff.regressions);
+        // Shedding over the wire at 1x fails.
+        let diff = compare(&base, &cur(0.04, true, 12.0), 0.15);
+        assert!(!diff.passes());
+        assert!(diff.regressions[0].contains("network arm shed"));
+        // A queue bound exceeded via the wire fails.
+        let diff = compare(&base, &cur(0.0, false, 12.0), 0.15);
+        assert!(!diff.passes());
+        assert!(diff.regressions[0].contains("wire bypassed"));
+        // Client-observed p99 past the committed floor fails.
+        let diff = compare(&base, &cur(0.0, true, 15.0), 0.15);
+        assert!(!diff.passes());
+        assert!(diff.regressions[0].contains("network p99 at 1x"));
+        // A --no-net run (keys absent) skips the network gates instead
+        // of green-lighting them.
+        let skipped = Json::parse(r#"{"bench":"overload","shed_rate_1x":0.0}"#).unwrap();
+        let diff = compare(&base, &skipped, 0.15);
+        assert!(diff.passes(), "{:?}", diff.regressions);
+        assert!(!diff.lines.iter().any(|l| l.contains("net")));
+        // No committed net floor: the structural net gates still fire.
+        let no_floor =
+            Json::parse(r#"{"bench":"hotpath","overload":{"p99_1x_ms":10.0}}"#).unwrap();
+        let diff = compare(&no_floor, &cur(0.0, true, 999.0), 0.15);
+        assert_eq!(diff.compared, 2);
+        assert!(diff.passes(), "{:?}", diff.regressions);
+    }
+
+    #[test]
+    fn net_decode_allocation_gate() {
+        let with_net = |net: f64| {
+            Json::parse(&format!(
+                r#"{{"bench":"hotpath",
+                     "allocs_per_request":{{"pooled":0.0,"net_decode":{net}}}}}"#
+            ))
+            .unwrap()
+        };
+        let base = with_net(0.0);
+        assert!(compare(&base, &with_net(0.0), 0.15).passes());
+        let diff = compare(&base, &with_net(1.0), 0.15);
+        assert!(!diff.passes());
+        assert!(diff.regressions.iter().any(|r| r.contains("net_decode")));
+        // A current file that dropped the key while the same-family
+        // baseline still carries it is a silent-gate regression.
+        let dropped = Json::parse(
+            r#"{"bench":"hotpath","allocs_per_request":{"pooled":0.0}}"#,
+        )
+        .unwrap();
+        let diff = compare(&base, &dropped, 0.15);
+        assert!(!diff.passes());
+        assert!(diff.regressions.iter().any(|r| r.contains("net_decode")));
     }
 
     #[test]

@@ -1,0 +1,509 @@
+//! Wire-protocol property and fuzz suite: seeded random valid frames
+//! round-trip bit-identically through `net::wire`'s encoders and the
+//! zero-copy decoder (proptest-lite, shrinking toward minimal dims),
+//! and well over a thousand seeded mutations — truncations,
+//! length-prefix lies, corrupted bytes, version skew, pathological
+//! size fields, hint-length lies, raw garbage — always yield *typed*
+//! protocol errors: no panic, no hang, no over-read past the declared
+//! frame.  The golden fixtures under `tests/fixtures/wire/` pin the v1
+//! byte layout: they were generated outside this crate (python
+//! `struct.pack`), so an accidental layout change breaks against the
+//! committed bytes, not against a same-bug re-encoding.
+
+use std::io::{self, Cursor};
+
+use adaptlib::coordinator::GemmRequest;
+use adaptlib::net::wire::{self, Frame, NetError, ProtocolError, WireStatus};
+use adaptlib::testing::{self, PropConfig, Strategy};
+use adaptlib::util::prng::Rng;
+
+/// Hint pool for generated requests: empty, typical, long, non-ASCII.
+const HINTS: [&str; 4] = ["", "xgemm_128", "bucket_256_256_256", "héllo_wïre"];
+
+fn rand_payload(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.f32() * 2.0 - 1.0).collect()
+}
+
+fn rand_request(case: &Case) -> GemmRequest {
+    let mut rng = Rng::new(case.seed);
+    let [m, n, k] = case.dims;
+    let (m, n, k) = (m as usize, n as usize, k as usize);
+    GemmRequest {
+        m,
+        n,
+        k,
+        a: rand_payload(&mut rng, m * k),
+        b: rand_payload(&mut rng, k * n),
+        c: rand_payload(&mut rng, m * n),
+        alpha: rng.f32() * 4.0 - 2.0,
+        beta: rng.f32() * 4.0 - 2.0,
+    }
+}
+
+/// One round-trip property case: dims, a hint pick, a deadline budget
+/// and the payload seed.  Shrinking drives dims toward 1 and the hint
+/// toward empty.
+#[derive(Clone, Debug)]
+struct Case {
+    dims: [u32; 3],
+    hint: usize,
+    deadline: u64,
+    seed: u64,
+}
+
+struct CaseStrategy;
+
+impl Strategy for CaseStrategy {
+    type Value = Case;
+
+    fn generate(&self, rng: &mut Rng) -> Case {
+        Case {
+            dims: [
+                1 + rng.below(24) as u32,
+                1 + rng.below(24) as u32,
+                1 + rng.below(24) as u32,
+            ],
+            hint: rng.below(HINTS.len() as u64) as usize,
+            // 0 = no deadline; otherwise a real microsecond budget.
+            deadline: rng.below(3) * 250_000,
+            seed: rng.next_u64(),
+        }
+    }
+
+    fn shrink(&self, v: &Case) -> Vec<Case> {
+        let mut out = Vec::new();
+        for d in 0..3 {
+            if v.dims[d] > 1 {
+                let mut c = v.clone();
+                c.dims[d] = 1;
+                out.push(c);
+                let mut c = v.clone();
+                c.dims[d] = 1 + (v.dims[d] - 1) / 2;
+                out.push(c);
+            }
+        }
+        if v.hint != 0 {
+            let mut c = v.clone();
+            c.hint = 0;
+            out.push(c);
+        }
+        out
+    }
+}
+
+fn le_bytes(xs: &[f32]) -> Vec<u8> {
+    xs.iter().flat_map(|v| v.to_le_bytes()).collect()
+}
+
+#[test]
+fn random_request_frames_round_trip_bit_identically() {
+    let cfg = PropConfig { cases: 80, seed: 0xF4A3_0001, ..PropConfig::default() };
+    testing::assert_prop(&cfg, &CaseStrategy, |case| {
+        let req = rand_request(case);
+        let id = case.seed ^ 0x00C0_FFEE;
+        let hint = HINTS[case.hint];
+        let mut buf = Vec::new();
+        wire::encode_request_into(&mut buf, id, case.deadline, hint, &req)
+            .map_err(|e| format!("encode failed: {e}"))?;
+        let prefix = u32::from_le_bytes(buf[..4].try_into().unwrap());
+        if prefix as usize != buf.len() - 4 {
+            return Err(format!("prefix {prefix} vs body {}", buf.len() - 4));
+        }
+        let frame = wire::decode(&buf[4..]).map_err(|e| format!("decode: {e}"))?;
+        let Frame::Request(rf) = frame else {
+            return Err("decoded to a non-request frame".to_string());
+        };
+        if rf.request_id != id || rf.deadline_micros != case.deadline {
+            return Err("id/deadline mangled".to_string());
+        }
+        if [rf.m, rf.n, rf.k] != case.dims || rf.hint != hint {
+            return Err("triple/hint mangled".to_string());
+        }
+        // f32 fields and payloads must survive *bit-identically*; the
+        // borrowed views must alias the exact LE bytes we fed in.
+        if rf.alpha.to_bits() != req.alpha.to_bits()
+            || rf.beta.to_bits() != req.beta.to_bits()
+        {
+            return Err("alpha/beta bits changed".to_string());
+        }
+        for (view, want) in [(rf.a, &req.a), (rf.b, &req.b), (rf.c, &req.c)] {
+            if view.bytes() != le_bytes(want) {
+                return Err("payload bytes changed".to_string());
+            }
+        }
+        // Decode → re-encode must reproduce the original frame exactly.
+        let owned = rf.to_request();
+        let mut again = Vec::new();
+        wire::encode_request_into(&mut again, id, case.deadline, hint, &owned)
+            .map_err(|e| format!("re-encode failed: {e}"))?;
+        if again != buf {
+            return Err("re-encoded frame is not bit-identical".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn random_response_and_status_frames_round_trip() {
+    let mut rng = Rng::new(0xF4A3_0002);
+    let statuses = [
+        WireStatus::Shed,
+        WireStatus::Quarantined,
+        WireStatus::Rejected,
+        WireStatus::Expired,
+        WireStatus::Drained,
+        WireStatus::Busy,
+        WireStatus::Error,
+        WireStatus::Malformed,
+    ];
+    for _ in 0..120 {
+        let id = rng.next_u64();
+        let out = rand_payload(&mut rng, rng.below(64) as usize);
+        let mut buf = Vec::new();
+        wire::encode_response_into(&mut buf, id, &out).unwrap();
+        match wire::decode(&buf[4..]).unwrap() {
+            Frame::Response(rf) => {
+                assert_eq!(rf.request_id, id);
+                assert_eq!(rf.out.bytes(), le_bytes(&out));
+            }
+            _ => panic!("expected a response frame"),
+        }
+
+        let status = *rng.choose(&statuses);
+        let msg = HINTS[rng.below(HINTS.len() as u64) as usize];
+        let mut buf = Vec::new();
+        wire::encode_status_into(&mut buf, id, status, msg).unwrap();
+        match wire::decode(&buf[4..]).unwrap() {
+            Frame::Status(sf) => {
+                assert_eq!(sf.request_id, id);
+                assert_eq!(sf.status, status);
+                assert_eq!(sf.message, msg);
+            }
+            _ => panic!("expected a status frame"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mutation fuzzing.
+// ---------------------------------------------------------------------------
+
+/// What a corpus frame is, so payload-region mutations can assert the
+/// stronger property (still decodes, dims untouched).
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Kind {
+    Request { hint_len: usize },
+    Response,
+    Status,
+}
+
+fn corpus() -> Vec<(Kind, Vec<u8>)> {
+    let mut rng = Rng::new(0xC0_4B05);
+    let mut frames = Vec::new();
+
+    let small = GemmRequest {
+        m: 2,
+        n: 3,
+        k: 4,
+        a: rand_payload(&mut rng, 8),
+        b: rand_payload(&mut rng, 12),
+        c: rand_payload(&mut rng, 6),
+        alpha: 1.0,
+        beta: 0.5,
+    };
+    let mut buf = Vec::new();
+    wire::encode_request_into(&mut buf, 7, 9_000, "xgemm_128", &small).unwrap();
+    frames.push((Kind::Request { hint_len: 9 }, buf));
+
+    let mut buf = Vec::new();
+    wire::encode_request_into(&mut buf, 8, 0, "", &small).unwrap();
+    frames.push((Kind::Request { hint_len: 0 }, buf));
+
+    let mut buf = Vec::new();
+    wire::encode_response_into(&mut buf, 9, &rand_payload(&mut rng, 6)).unwrap();
+    frames.push((Kind::Response, buf));
+
+    let mut buf = Vec::new();
+    wire::encode_status_into(&mut buf, 10, WireStatus::Shed, "queue full").unwrap();
+    frames.push((Kind::Status, buf));
+
+    frames
+}
+
+/// Overwrite a little-endian field inside the *body* region of a full
+/// wire frame (`off` is a body offset; the 4-byte prefix shifts it).
+fn poke(frame: &mut [u8], off: usize, bytes: &[u8]) {
+    frame[4 + off..4 + off + bytes.len()].copy_from_slice(bytes);
+}
+
+#[test]
+fn a_thousand_seeded_mutations_always_yield_typed_errors() {
+    let frames = corpus();
+    let mut rng = Rng::new(0x5EED_F422);
+    const CASES: usize = 1_500;
+    let (mut survived, mut rejected) = (0usize, 0usize);
+    for _ in 0..CASES {
+        let (kind, frame) = rng.choose(&frames);
+        let frame = frame.clone();
+        let body_len = frame.len() - 4;
+        match rng.below(7) {
+            // Truncation at every possible boundary: always a typed
+            // error — the exact-length check catches any cut the
+            // header readers miss.
+            0 => {
+                let cut = rng.below(body_len as u64) as usize;
+                let err = wire::decode(&frame[4..4 + cut])
+                    .expect_err("truncated body must not decode");
+                assert!(
+                    matches!(
+                        err,
+                        ProtocolError::Truncated { .. }
+                            | ProtocolError::LengthMismatch { .. }
+                    ),
+                    "cut {cut}: unexpected error class {err:?}"
+                );
+                rejected += 1;
+            }
+            // Length-prefix lies, fed through the real stream reader:
+            // an inflated prefix dies as a typed UnexpectedEof (never a
+            // hang, never an over-read of later frames), a deflated one
+            // as a decode error, an over-cap one as Oversized *before*
+            // any body byte is buffered.
+            1 => {
+                let mut lying = frame.clone();
+                let lie = match rng.below(3) {
+                    0 => body_len as u32 + 1 + rng.below(1_000) as u32,
+                    1 => rng.below(body_len as u64) as u32,
+                    _ => wire::MAX_FRAME_BYTES + 1 + rng.below(1_000) as u32,
+                };
+                lying[..4].copy_from_slice(&lie.to_le_bytes());
+                let mut cursor = Cursor::new(&lying[..]);
+                let mut buf = Vec::new();
+                match wire::read_frame(&mut cursor, &mut buf) {
+                    Ok(Some(body)) => {
+                        assert!(body.len() < body_len, "lie must shrink the body");
+                        assert!(wire::decode(body).is_err());
+                    }
+                    Ok(None) => panic!("a lying prefix is not a clean EOF"),
+                    Err(NetError::Io(e)) => {
+                        assert_eq!(e.kind(), io::ErrorKind::UnexpectedEof)
+                    }
+                    Err(NetError::Protocol(p)) => {
+                        assert!(matches!(p, ProtocolError::Oversized { .. }))
+                    }
+                }
+                rejected += 1;
+            }
+            // Single-byte corruption anywhere in the body: decoding
+            // must never panic; a flip inside a request's operand
+            // payload must still decode to the same triple (the
+            // structure is in the header, not the payload).
+            2 => {
+                let mut corrupt = frame.clone();
+                let off = rng.below(body_len as u64) as usize;
+                corrupt[4 + off] ^= 1 + rng.below(255) as u8;
+                match (kind, wire::decode(&corrupt[4..])) {
+                    (Kind::Request { hint_len }, res)
+                        if off >= wire::REQUEST_HEADER_BYTES + hint_len =>
+                    {
+                        let frame = res.expect("payload flips keep the frame valid");
+                        let Frame::Request(rf) = frame else {
+                            panic!("payload flip changed the frame kind")
+                        };
+                        assert_eq!((rf.m, rf.n, rf.k), (2, 3, 4));
+                        survived += 1;
+                    }
+                    (_, Ok(_)) => survived += 1,
+                    (_, Err(_)) => rejected += 1,
+                }
+            }
+            // Deliberate skew of each common-header field: the error
+            // must name what was wrong, not just "bad frame".
+            3 => {
+                let mut skew = frame.clone();
+                match rng.below(3) {
+                    0 => {
+                        let pos = rng.below(4) as usize;
+                        skew[4 + pos] ^= 0x80;
+                        assert!(matches!(
+                            wire::decode(&skew[4..]),
+                            Err(ProtocolError::BadMagic { .. })
+                        ));
+                    }
+                    1 => {
+                        let v = 2 + rng.below(60_000) as u16;
+                        poke(&mut skew, 4, &v.to_le_bytes());
+                        assert!(matches!(
+                            wire::decode(&skew[4..]),
+                            Err(ProtocolError::VersionSkew { got, .. }) if got == v
+                        ));
+                    }
+                    _ => {
+                        let kk = 4 + rng.below(60_000) as u16;
+                        poke(&mut skew, 6, &kk.to_le_bytes());
+                        assert!(matches!(
+                            wire::decode(&skew[4..]),
+                            Err(ProtocolError::BadKind { got }) if got == kk
+                        ));
+                    }
+                }
+                rejected += 1;
+            }
+            // Pathological size fields on a request header: dims whose
+            // operand byte count overflows u64 are OperandOverflow;
+            // dims that merely dwarf the body are LengthMismatch.
+            // Neither may attempt to slice (that would over-read).
+            4 => {
+                let mut body = Vec::new();
+                body.extend_from_slice(b"ADPT");
+                body.extend_from_slice(&1u16.to_le_bytes());
+                body.extend_from_slice(&1u16.to_le_bytes()); // kind: request
+                body.extend_from_slice(&rng.next_u64().to_le_bytes());
+                body.extend_from_slice(&0u64.to_le_bytes()); // deadline
+                let huge = rng.below(2) == 0;
+                let dim: u32 =
+                    if huge { u32::MAX - rng.below(16) as u32 } else { 65_536 };
+                for _ in 0..3 {
+                    body.extend_from_slice(&dim.to_le_bytes());
+                }
+                body.extend_from_slice(&1.0f32.to_le_bytes());
+                body.extend_from_slice(&0.0f32.to_le_bytes());
+                body.extend_from_slice(&0u16.to_le_bytes()); // hint_len
+                body.extend_from_slice(&0u16.to_le_bytes()); // reserved
+                let err = wire::decode(&body).expect_err("pathological dims");
+                assert!(
+                    matches!(
+                        err,
+                        ProtocolError::OperandOverflow { .. }
+                            | ProtocolError::LengthMismatch { .. }
+                    ),
+                    "dim {dim}: unexpected error class {err:?}"
+                );
+                rejected += 1;
+            }
+            // Hint-length lies and non-UTF-8 hints on request frames.
+            5 => {
+                if let Kind::Request { hint_len } = kind {
+                    let mut lying = frame.clone();
+                    let lie = {
+                        let mut l = rng.below(u16::MAX as u64) as u16;
+                        if l as usize == *hint_len {
+                            l = l.wrapping_add(1);
+                        }
+                        l
+                    };
+                    poke(&mut lying, 44, &lie.to_le_bytes());
+                    assert!(matches!(
+                        wire::decode(&lying[4..]),
+                        Err(ProtocolError::LengthMismatch { .. })
+                    ));
+                    if *hint_len > 0 {
+                        let mut bad = frame.clone();
+                        bad[4 + wire::REQUEST_HEADER_BYTES] = 0xFF;
+                        assert!(matches!(
+                            wire::decode(&bad[4..]),
+                            Err(ProtocolError::BadUtf8 { .. })
+                        ));
+                    }
+                }
+                rejected += 1;
+            }
+            // Raw garbage of arbitrary length: never a panic, and the
+            // best-effort id extraction stays total.
+            _ => {
+                let len = rng.below(200) as usize;
+                let garbage: Vec<u8> =
+                    (0..len).map(|_| rng.below(256) as u8).collect();
+                let _ = wire::request_id_hint(&garbage);
+                match wire::decode(&garbage) {
+                    Ok(_) => survived += 1,
+                    Err(_) => rejected += 1,
+                }
+            }
+        }
+    }
+    assert_eq!(survived + rejected, CASES);
+    assert!(CASES >= 1_000, "the gate requires at least 1k mutations");
+    // Sanity on the split: most mutations must actually be rejected
+    // (a corpus that stopped triggering the decoder would be vacuous).
+    assert!(rejected > CASES / 2, "only {rejected}/{CASES} rejected");
+}
+
+// ---------------------------------------------------------------------------
+// Golden fixtures: the committed v1 bytes are the layout contract.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn golden_request_fixture_is_pinned() {
+    const RAW: &[u8] = include_bytes!("fixtures/wire/request_v1.bin");
+    let prefix = u32::from_le_bytes(RAW[..4].try_into().unwrap());
+    assert_eq!(prefix as usize, RAW.len() - 4);
+    let Frame::Request(rf) = wire::decode(&RAW[4..]).unwrap() else {
+        panic!("fixture is not a request frame")
+    };
+    assert_eq!(rf.request_id, 0x0102_0304_0506_0708);
+    assert_eq!(rf.deadline_micros, 250_000);
+    assert_eq!((rf.m, rf.n, rf.k), (2, 3, 4));
+    assert_eq!((rf.alpha, rf.beta), (1.0, 0.5));
+    assert_eq!(rf.hint, "xgemm_128");
+    let req = rf.to_request();
+    let a: Vec<f32> = (0..8).map(|i| i as f32 * 0.25 - 1.0).collect();
+    let b: Vec<f32> = (0..12).map(|i| 0.5 - i as f32 * 0.25).collect();
+    let c: Vec<f32> = (0..6).map(|i| -0.5 * i as f32).collect();
+    assert_eq!((req.a, req.b, req.c), (a, b, c));
+    // The encoder must reproduce the committed bytes exactly — the
+    // fixture was written by an independent implementation.
+    let mut buf = Vec::new();
+    wire::encode_request_into(&mut buf, rf.request_id, 250_000, rf.hint, &req)
+        .unwrap();
+    assert_eq!(buf, RAW, "request encoding drifted from the v1 fixture");
+}
+
+#[test]
+fn golden_response_fixture_is_pinned() {
+    const RAW: &[u8] = include_bytes!("fixtures/wire/response_v1.bin");
+    let Frame::Response(rf) = wire::decode(&RAW[4..]).unwrap() else {
+        panic!("fixture is not a response frame")
+    };
+    assert_eq!(rf.request_id, 0xDEAD_BEEF);
+    let out: Vec<f32> = (0..6).map(|i| 0.25 * i as f32).collect();
+    assert_eq!(rf.out.to_vec(), out);
+    let mut buf = Vec::new();
+    wire::encode_response_into(&mut buf, rf.request_id, &out).unwrap();
+    assert_eq!(buf, RAW, "response encoding drifted from the v1 fixture");
+}
+
+#[test]
+fn golden_status_fixture_is_pinned() {
+    const RAW: &[u8] = include_bytes!("fixtures/wire/status_shed_v1.bin");
+    let Frame::Status(sf) = wire::decode(&RAW[4..]).unwrap() else {
+        panic!("fixture is not a status frame")
+    };
+    assert_eq!(sf.request_id, 77);
+    assert_eq!(sf.status, WireStatus::Shed);
+    assert_eq!(sf.message, "queue full: 24/24 outstanding on host-cpu");
+    let mut buf = Vec::new();
+    wire::encode_status_into(&mut buf, 77, sf.status, sf.message).unwrap();
+    assert_eq!(buf, RAW, "status encoding drifted from the v1 fixture");
+}
+
+#[test]
+fn fixture_stream_reads_frame_by_frame_to_clean_eof() {
+    let mut stream = Vec::new();
+    stream.extend_from_slice(include_bytes!("fixtures/wire/request_v1.bin"));
+    stream.extend_from_slice(include_bytes!("fixtures/wire/response_v1.bin"));
+    stream.extend_from_slice(include_bytes!("fixtures/wire/status_shed_v1.bin"));
+    let mut cursor = Cursor::new(&stream[..]);
+    let mut buf = Vec::new();
+    let mut kinds = Vec::new();
+    while let Some(body) = wire::read_frame(&mut cursor, &mut buf).unwrap() {
+        kinds.push(match wire::decode(body).unwrap() {
+            Frame::Request(_) => "request",
+            Frame::Response(_) => "response",
+            Frame::Status(_) => "status",
+        });
+    }
+    assert_eq!(kinds, ["request", "response", "status"]);
+    // A second read at EOF is still a clean None, not an error.
+    assert!(wire::read_frame(&mut cursor, &mut buf).unwrap().is_none());
+}
